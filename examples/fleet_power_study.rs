@@ -1,0 +1,83 @@
+//! Fleet power case study (§3.3 at system scale): eight edge devices, one
+//! teacher, lossy BLE, a mid-run distribution shift — reports per-edge
+//! communication volume and mean power with/without auto pruning, plus an
+//! organic-detection variant (CUSUM centroid detector instead of the
+//! scripted oracle).
+//!
+//! Run: `cargo run --release --example fleet_power_study`
+
+use odl_har::coordinator::fleet::{DetectorKind, Fleet, FleetConfig, Scenario};
+use odl_har::coordinator::ChannelConfig;
+use odl_har::data::SynthConfig;
+
+fn scenario(fixed_theta: Option<f32>, detector: DetectorKind) -> Scenario {
+    Scenario {
+        n_edges: 8,
+        n_hidden: 128,
+        event_period_s: 1.0,
+        horizon_s: 900.0,
+        drift_at_s: 200.0,
+        detector,
+        fixed_theta,
+        teacher_error: 0.0,
+        channel: ChannelConfig {
+            loss_prob: 0.05,
+            max_retries: 2,
+            ..Default::default()
+        },
+        synth: SynthConfig::default(),
+        train_target: 450,
+    }
+}
+
+fn report(tag: &str, sc: Scenario) -> anyhow::Result<(f64, f64)> {
+    let fleet = Fleet::new(FleetConfig {
+        scenario: sc,
+        seed: 42,
+    })?;
+    let r = fleet.run();
+    let comm: f64 = r
+        .per_edge
+        .iter()
+        .map(|m| m.comm_fraction() * 100.0)
+        .sum::<f64>()
+        / r.per_edge.len() as f64;
+    let power = r.mean_edge_power_mw();
+    let acc: f64 = r
+        .per_edge
+        .iter()
+        .filter_map(|m| m.accuracy_trace.last().map(|&(_, a)| a))
+        .sum::<f64>()
+        / r.per_edge.len() as f64;
+    println!(
+        "{tag:<34} comm {comm:>5.1} %   mean power {power:>6.3} mW   final acc {:>5.1} %   (teacher served {}, channel failures {})",
+        acc * 100.0,
+        r.teacher_queries,
+        r.channel_failures
+    );
+    Ok((comm, power))
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("fleet: 8 edges, 1 teacher, BLE loss 5 %, drift at t=200 s, horizon 900 s\n");
+    let (comm_off, p_off) = report(
+        "no pruning (theta = 1)",
+        scenario(Some(1.0), DetectorKind::Oracle),
+    )?;
+    let (comm_auto, p_auto) = report(
+        "auto-theta pruning",
+        scenario(None, DetectorKind::Oracle),
+    )?;
+    report(
+        "auto-theta + organic detection",
+        scenario(None, DetectorKind::Centroid),
+    )?;
+    println!(
+        "\nauto pruning: communication volume {:.1} % -> {:.1} %, mean training-mode power -{:.1} %",
+        comm_off,
+        comm_auto,
+        100.0 * (1.0 - p_auto / p_off)
+    );
+    anyhow::ensure!(comm_auto < comm_off, "pruning must reduce communication");
+    Ok(())
+}

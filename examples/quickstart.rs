@@ -1,0 +1,79 @@
+//! Quickstart: the core library in ~40 lines.
+//!
+//! Builds the paper's ODLHash core (561 → 128 → 6), trains it on the
+//! synthetic HAR workload, drifts the distribution, and shows on-device
+//! recovery with auto-pruned teacher queries — all on the native rust
+//! golden model (see `e2e_drift_pjrt` for the same flow through the
+//! PJRT artifacts).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use odl_har::data::{DriftSplit, Standardizer, SynthConfig, SynthHar};
+use odl_har::odl::{AlphaKind, OsElm, OsElmConfig};
+use odl_har::pruning::{warmup_for, Decision, Metric, Pruner, ThetaPolicy};
+use odl_har::util::rng::Rng64;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A drifting HAR workload: 25 in-distribution subjects for training,
+    //    5 held-out subjects as the post-deployment distribution.
+    let mut data_rng = Rng64::new(0xDA7A_5EED);
+    let pool = SynthHar::new(SynthConfig::default(), &mut data_rng).generate(&mut data_rng);
+    let mut rng = Rng64::new(42);
+    let mut split = DriftSplit::build(&pool, 0.7, &mut rng);
+    let std = Standardizer::fit(&split.train.xs);
+    for part in [
+        &mut split.train,
+        &mut split.test0,
+        &mut split.odl_stream,
+        &mut split.test1,
+    ] {
+        std.apply(&mut part.xs);
+    }
+
+    // 2. The tiny supervised ODL core: ODLHash, N = 128 (136.39 kB on the ASIC).
+    let cfg = OsElmConfig {
+        alpha: AlphaKind::Hash,
+        ..Default::default()
+    };
+    let mut core = OsElm::new(cfg, &mut rng, 0x2A6D);
+
+    // 3. Initial training: batch init + sequential ODL over the train stream.
+    let (init, rest) = split.train.split_at(300);
+    core.init_batch(&init.xs, &init.labels)?;
+    for r in 0..rest.len() {
+        core.train_step(rest.xs.row(r), rest.labels[r]);
+    }
+    let before = core.accuracy(&split.test0.xs, &split.test0.labels) * 100.0;
+    let drifted = core.accuracy(&split.test1.xs, &split.test1.labels) * 100.0;
+
+    // 4. Drift hits: retrain on-device, querying the teacher only when the
+    //    P1P2 confidence gate (auto-tuned θ) says the sample is worth it.
+    let mut pruner = Pruner::new(ThetaPolicy::auto(), Metric::P1P2, warmup_for(128));
+    let (mut queries, mut trained) = (0usize, 0usize);
+    for r in 0..split.odl_stream.len() {
+        let x = split.odl_stream.xs.row(r);
+        let pred = core.predict(x);
+        match pruner.decide(&pred, trained, false) {
+            Decision::Skip => pruner.observe(Decision::Skip, None),
+            Decision::Query => {
+                queries += 1;
+                let teacher_label = split.odl_stream.labels[r];
+                pruner.observe(Decision::Query, Some(pred.class == teacher_label));
+                core.train_step(x, teacher_label);
+                trained += 1;
+            }
+        }
+    }
+    let after = core.accuracy(&split.test1.xs, &split.test1.labels) * 100.0;
+
+    println!("accuracy before drift      : {before:.1} %");
+    println!("accuracy at drift (frozen) : {drifted:.1} %");
+    println!("accuracy after ODL recovery: {after:.1} %");
+    println!(
+        "teacher queries: {queries}/{} ({:.1} % of stream; θ ended at {:.2})",
+        split.odl_stream.len(),
+        100.0 * queries as f64 / split.odl_stream.len() as f64,
+        pruner.policy.theta(),
+    );
+    Ok(())
+}

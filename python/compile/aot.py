@@ -1,0 +1,289 @@
+"""AOT lowering: every L2 graph → HLO *text* + a manifest the rust runtime
+reads, plus golden vectors for the cross-language numerics tests.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids that the
+xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+N_IN = model.N_IN
+N_OUT = model.N_OUT
+# Hidden sizes the experiments use (Table 3 / Figure 3 focus on 128/256).
+HIDDEN_SIZES = (128, 256)
+# Batched-eval batch (rust pads the tail batch).
+EVAL_BATCH = 256
+# Batch-init sample count (≥ max N; protocol uses 2N capped by this).
+INIT_K0 = 512
+# Scan-fused streaming-train chunk (one XLA launch per K samples).
+STREAM_K = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_entry(fn, args):
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def build_entries():
+    """(name, fn, example-arg specs, metadata) for every artifact."""
+    entries = []
+    u32v = functools.partial(spec, dtype=jnp.uint32)
+
+    for n_hidden in HIDDEN_SIZES:
+        nh = n_hidden
+
+        entries.append(
+            (
+                f"predict_one_hash_n{nh}",
+                model.predict_one,
+                [spec((1, N_IN)), spec((nh, N_OUT)), u32v((1,))],
+                {
+                    "variant": "hash",
+                    "n_hidden": nh,
+                    "inputs": ["x[1,n]", "beta[N,m]", "seed[1]u32"],
+                    "outputs": ["logits[1,m]", "h[1,N]"],
+                },
+            )
+        )
+        entries.append(
+            (
+                f"predict_batch_hash_n{nh}",
+                model.predict_batch,
+                [spec((EVAL_BATCH, N_IN)), spec((nh, N_OUT)), u32v((1,))],
+                {
+                    "variant": "hash",
+                    "n_hidden": nh,
+                    "batch": EVAL_BATCH,
+                    "inputs": ["x[B,n]", "beta[N,m]", "seed[1]u32"],
+                    "outputs": ["logits[B,m]"],
+                },
+            )
+        )
+        entries.append(
+            (
+                f"train_step_hash_n{nh}",
+                model.train_step,
+                [
+                    spec((1, N_IN)),
+                    spec((N_OUT,)),
+                    spec((nh, nh)),
+                    spec((nh, N_OUT)),
+                    u32v((1,)),
+                ],
+                {
+                    "variant": "hash",
+                    "n_hidden": nh,
+                    "inputs": ["x[1,n]", "y[m]", "P[N,N]", "beta[N,m]", "seed[1]u32"],
+                    "outputs": ["P'[N,N]", "beta'[N,m]"],
+                },
+            )
+        )
+        entries.append(
+            (
+                f"train_stream_hash_n{nh}",
+                model.train_stream,
+                [
+                    spec((STREAM_K, N_IN)),
+                    spec((STREAM_K, N_OUT)),
+                    spec((nh, nh)),
+                    spec((nh, N_OUT)),
+                    u32v((1,)),
+                ],
+                {
+                    "variant": "hash",
+                    "n_hidden": nh,
+                    "k": STREAM_K,
+                    "inputs": ["xs[K,n]", "ys[K,m]", "P[N,N]", "beta[N,m]", "seed[1]u32"],
+                    "outputs": ["P'[N,N]", "beta'[N,m]"],
+                },
+            )
+        )
+        entries.append(
+            (
+                f"init_batch_hash_n{nh}",
+                functools.partial(model.init_batch, n_hidden=nh),
+                [spec((INIT_K0, N_IN)), spec((INIT_K0, N_OUT)), u32v((1,))],
+                {
+                    "variant": "hash",
+                    "n_hidden": nh,
+                    "k0": INIT_K0,
+                    "inputs": ["x0[k0,n]", "y0[k0,m]", "seed[1]u32"],
+                    "outputs": ["P0[N,N]", "beta0[N,m]"],
+                },
+            )
+        )
+        entries.append(
+            (
+                f"predict_batch_stored_n{nh}",
+                model.predict_batch_stored,
+                [spec((EVAL_BATCH, N_IN)), spec((N_IN, nh)), spec((nh, N_OUT))],
+                {
+                    "variant": "stored",
+                    "n_hidden": nh,
+                    "batch": EVAL_BATCH,
+                    "inputs": ["x[B,n]", "alpha[n,N]", "beta[N,m]"],
+                    "outputs": ["logits[B,m]"],
+                },
+            )
+        )
+        entries.append(
+            (
+                f"train_step_stored_n{nh}",
+                model.train_step_stored,
+                [
+                    spec((1, N_IN)),
+                    spec((N_OUT,)),
+                    spec((nh, nh)),
+                    spec((nh, N_OUT)),
+                    spec((N_IN, nh)),
+                ],
+                {
+                    "variant": "stored",
+                    "n_hidden": nh,
+                    "inputs": ["x[1,n]", "y[m]", "P[N,N]", "beta[N,m]", "alpha[n,N]"],
+                    "outputs": ["P'[N,N]", "beta'[N,m]"],
+                },
+            )
+        )
+
+    # DNN baseline: forward + one SGD step.
+    l1, l2, l3, l4 = model.DNN_LAYERS
+    dnn_params = [
+        spec((l1, l2)),
+        spec((l2,)),
+        spec((l2, l3)),
+        spec((l3,)),
+        spec((l3, l4)),
+        spec((l4,)),
+    ]
+    entries.append(
+        (
+            "dnn_forward",
+            model.dnn_forward,
+            [spec((EVAL_BATCH, N_IN))] + dnn_params,
+            {
+                "variant": "dnn",
+                "batch": EVAL_BATCH,
+                "layers": list(model.DNN_LAYERS),
+                "inputs": ["x[B,n]", "w1", "b1", "w2", "b2", "w3", "b3"],
+                "outputs": ["logits[B,m]"],
+            },
+        )
+    )
+    entries.append(
+        (
+            "dnn_train_step",
+            model.dnn_train_step,
+            [spec((32, N_IN)), spec((32, N_OUT)), spec((1,))] + dnn_params,
+            {
+                "variant": "dnn",
+                "batch": 32,
+                "layers": list(model.DNN_LAYERS),
+                "inputs": ["x[B,n]", "y[B,m]", "lr[1]", "w1", "b1", "w2", "b2", "w3", "b3"],
+                "outputs": ["loss[1]", "w1'", "b1'", "w2'", "b2'", "w3'", "b3'"],
+            },
+        )
+    )
+    return entries
+
+
+def emit_goldens(out_dir: str) -> None:
+    """Golden vectors for the rust ↔ python numerics cross-checks."""
+    golden_dir = os.path.join(out_dir, "golden")
+    os.makedirs(golden_dir, exist_ok=True)
+
+    # 1. Sequential xorshift16 stream.
+    stream = ref.xorshift16_stream(1, 16).tolist()
+    # 2. Counter-based α block (seed 9, 16×8 — mirrors the rust unit test).
+    alpha = ref.counter_alpha_np(9, 16, 8, 1.0).reshape(-1).tolist()
+    # 3. Hidden layer on a deterministic input (561 → 128, seed 7).
+    x = (np.arange(N_IN, dtype=np.float32) % 17 - 8.0) / 8.0
+    h = np.asarray(ref.hidden_ref(x[None, :], 7, 128))[0]
+    # 4. One train step from a deterministic state.
+    nh = 8
+    hsmall = np.asarray(ref.hidden_ref(x[None, :nh * 4], 3, nh))[0]
+    p = np.eye(nh, dtype=np.float32) * 5.0
+    beta = np.linspace(-0.5, 0.5, nh * N_OUT, dtype=np.float32).reshape(nh, N_OUT)
+    y = np.eye(N_OUT, dtype=np.float32)[1]
+    p2, b2 = ref.train_step_ref(
+        jnp.asarray(hsmall), jnp.asarray(y), jnp.asarray(p), jnp.asarray(beta)
+    )
+
+    goldens = {
+        "xorshift16_stream_seed1": stream,
+        "counter_alpha_seed9_16x8": alpha,
+        "hidden_n561_N128_seed7": h.tolist(),
+        "train_step": {
+            "n_hidden": nh,
+            "h": hsmall.tolist(),
+            "p_diag": 5.0,
+            "beta": beta.reshape(-1).tolist(),
+            "y_class": 1,
+            "p_new": np.asarray(p2).reshape(-1).tolist(),
+            "beta_new": np.asarray(b2).reshape(-1).tolist(),
+        },
+    }
+    with open(os.path.join(golden_dir, "numerics.json"), "w") as f:
+        json.dump(goldens, f)
+    print(f"wrote golden vectors to {golden_dir}/numerics.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", help="lower only artifacts whose name contains this")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "n_in": N_IN, "n_out": N_OUT, "artifacts": {}}
+    for name, fn, arg_specs, meta in build_entries():
+        if args.only and args.only not in name:
+            continue
+        text = lower_entry(fn, arg_specs)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, path), "w") as f:
+            f.write(text)
+        meta = dict(meta)
+        meta["path"] = path
+        meta["arg_shapes"] = [list(s.shape) for s in arg_specs]
+        meta["arg_dtypes"] = [str(s.dtype) for s in arg_specs]
+        manifest["artifacts"][name] = meta
+        print(f"lowered {name}: {len(text)} chars")
+
+    emit_goldens(args.out)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""L1 Pallas kernel: ODLHash hidden layer.
+
+`H = sigmoid(x · α(seed))` with α **generated inside the kernel** from the
+counter-based 16-bit Xorshift — the kernel-level realization of the paper's
+ODLHash idea: the α matrix never exists in HBM (on the ASIC: never in SRAM).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the hidden
+dimension; each instance holds one `(n, TILE_N)` α block *in registers/VMEM
+only*, generated from `broadcasted_iota` + integer xor/shift ops (all VPU-
+friendly), then feeds the MXU with an `(B, n) × (n, TILE_N)` matmul.
+VMEM per instance @ n=561, TILE_N=128: α block 561·128·4 ≈ 287 kB + x block
+≈ B·2.2 kB — comfortably inside a TPU core's ~16 MB VMEM.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact runs
+on the rust CPU client (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MIX_MUL, MIX_MUL2, ROUNDS, SEED_REMAP
+
+# Hidden-dimension tile. 128 = MXU lane width; N ∈ {32…512} are multiples
+# or fit a single padded tile.
+TILE_N = 128
+
+
+def _alpha_block(seed, n: int, col0, tile_n: int, total_cols: int, scale):
+    """Generate the α block for columns [col0, col0+tile_n) — in-kernel.
+
+    Flat weight index k = i·total_cols + (col0 + j) for row i, local col j.
+    Mirrors `ref.counter_alpha` / rust `counter_alpha_value` bit-for-bit.
+    """
+    rows = jax.lax.broadcasted_iota(jnp.uint32, (n, tile_n), 0)
+    cols = jax.lax.broadcasted_iota(jnp.uint32, (n, tile_n), 1)
+    k = rows * jnp.uint32(total_cols) + cols + jnp.uint32(col0)
+    m = k * jnp.uint32(MIX_MUL)
+    m = m ^ (m >> 15)
+    m = m * jnp.uint32(MIX_MUL2)
+    m = m ^ (m >> 13)
+    s = (jnp.asarray(seed, jnp.uint32) ^ (m >> 16) ^ (m & 0xFFFF)) & 0xFFFF
+    s = jnp.where(s == 0, jnp.uint32(SEED_REMAP), s)
+    for _ in range(ROUNDS):
+        s = s ^ ((s << 7) & 0xFFFF)
+        s = s ^ (s >> 9)
+        s = s ^ ((s << 8) & 0xFFFF)
+        s = s & 0xFFFF
+    signed = jnp.where(s >= 32768, s.astype(jnp.int32) - 65536, s.astype(jnp.int32))
+    return signed.astype(jnp.float32) / 32768.0 * scale
+
+
+def _hash_hidden_kernel(seed_ref, x_ref, h_ref, *, n: int, n_hidden: int, scale: float):
+    """One grid instance: H tile = sigmoid(x · α_tile(seed))."""
+    j = pl.program_id(0)
+    tile = h_ref.shape[-1]
+    col0 = j * tile
+    alpha = _alpha_block(seed_ref[0], n, col0, tile, n_hidden, jnp.float32(scale))
+    z = x_ref[...] @ alpha  # (B, n) x (n, tile) -> MXU
+    h_ref[...] = 1.0 / (1.0 + jnp.exp(-z))
+
+
+@functools.partial(jax.jit, static_argnames=("n_hidden",))
+def hash_hidden(x, seed, n_hidden: int):
+    """H = sigmoid(x · α(seed)) for x of shape (B, n). seed: scalar int32/uint32.
+
+    Pads the hidden dim up to a TILE_N multiple and slices the result back.
+    """
+    b, n = x.shape
+    scale = float(1.0 / (n ** 0.5))
+    tile = min(TILE_N, n_hidden)
+    padded = ((n_hidden + tile - 1) // tile) * tile
+    grid = padded // tile
+    seed_arr = jnp.asarray(seed, dtype=jnp.uint32).reshape((1,))
+    h = pl.pallas_call(
+        functools.partial(
+            _hash_hidden_kernel, n=n, n_hidden=n_hidden, scale=scale
+        ),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda j: (0,)),  # seed: broadcast to every tile
+            pl.BlockSpec((b, n), lambda j: (0, 0)),  # x: whole batch per tile
+        ],
+        out_specs=pl.BlockSpec((b, tile), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, padded), jnp.float32),
+        interpret=True,
+    )(seed_arr, x)
+    return h[:, :n_hidden]
+
+
+def _stored_hidden_kernel(x_ref, alpha_ref, h_ref):
+    z = x_ref[...] @ alpha_ref[...]
+    h_ref[...] = 1.0 / (1.0 + jnp.exp(-z))
+
+
+@jax.jit
+def stored_hidden(x, alpha):
+    """ODLBase variant: H = sigmoid(x · α) with stored (pre-scaled) α."""
+    b, n = x.shape
+    n_hidden = alpha.shape[1]
+    tile = min(TILE_N, n_hidden)
+    padded = ((n_hidden + tile - 1) // tile) * tile
+    grid = padded // tile
+    if padded != n_hidden:
+        alpha = jnp.pad(alpha, ((0, 0), (0, padded - n_hidden)))
+    h = pl.pallas_call(
+        _stored_hidden_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((b, n), lambda j: (0, 0)),
+            pl.BlockSpec((n, tile), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((b, tile), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, padded), jnp.float32),
+        interpret=True,
+    )(x, alpha)
+    return h[:, :n_hidden]

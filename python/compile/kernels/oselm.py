@@ -1,0 +1,108 @@
+"""L1 Pallas kernels: the OS-ELM sequential update (Figure 2(d)).
+
+Split into the two phases the ASIC's state machine also uses:
+
+1. `pl_matvec`  — `Ph = P·h`, tiled over P's rows (each instance reads a
+   row block of P plus the whole h vector: one VMEM-resident streaming
+   pass over P, the large operand).
+2. `pl_rank1_update` — given Ph and the scalar 1/denom, update both P
+   (`P ← P − Ph·Phᵀ·inv_denom`) and β (`β ← β + Ph·errᵀ·inv_denom`) in one
+   tiled sweep. The scalar division happens ONCE outside the sweep
+   (multiply-by-reciprocal inside), exactly like the hardware divider
+   schedule — and unlike a naive per-element division, which would be
+   ~40× more divider cycles (see rust/src/hw/cycles.rs).
+
+All `interpret=True` (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_ROWS = 128
+
+
+def _matvec_kernel(p_ref, h_ref, ph_ref):
+    # (tile, N) x (N,) -> (tile,)
+    ph_ref[...] = p_ref[...] @ h_ref[...]
+
+
+@jax.jit
+def pl_matvec(p, h):
+    """Ph = P·h, P: (N, N), h: (N,) → (N,)."""
+    n = p.shape[0]
+    tile = min(TILE_ROWS, n)
+    assert n % tile == 0, "N must be a multiple of the row tile"
+    grid = n // tile
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(p, h)
+
+
+def _rank1_kernel(ph_ref, err_ref, inv_denom_ref, p_ref, beta_ref, p_out_ref, b_out_ref):
+    i = pl.program_id(0)
+    tile = p_out_ref.shape[0]
+    row0 = i * tile
+    inv = inv_denom_ref[0]
+    ph_all = ph_ref[...]  # (N,)
+    ph_rows = jax.lax.dynamic_slice(ph_all, (row0,), (tile,))  # this tile's Ph rows
+    scale = ph_rows * inv  # (tile,)
+    # P rows: P[i,:] -= scale_i * Ph
+    p_out_ref[...] = p_ref[...] - scale[:, None] * ph_all[None, :]
+    # β rows: β[i,:] += scale_i * err
+    b_out_ref[...] = beta_ref[...] + scale[:, None] * err_ref[...][None, :]
+
+
+@jax.jit
+def pl_rank1_update(p, beta, ph, err, inv_denom):
+    """(P', β') = (P − Ph·Phᵀ·inv, β + Ph·errᵀ·inv), tiled over rows."""
+    n = p.shape[0]
+    m = beta.shape[1]
+    tile = min(TILE_ROWS, n)
+    assert n % tile == 0
+    grid = n // tile
+    inv_arr = jnp.asarray(inv_denom, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _rank1_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),      # ph (whole vector)
+            pl.BlockSpec((m,), lambda i: (0,)),      # err
+            pl.BlockSpec((1,), lambda i: (0,)),      # inv_denom scalar
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),  # P row tile
+            pl.BlockSpec((tile, m), lambda i: (i, 0)),  # beta row tile
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((tile, m), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, n), jnp.float32),
+            jax.ShapeDtypeStruct((n, m), jnp.float32),
+        ],
+        interpret=True,
+    )(ph, err, inv_arr, p, beta)
+
+
+def oselm_update(h, y, p, beta):
+    """Full sequential update from hidden activations h (N,) and one-hot y.
+
+    Composes the two kernels + the single scalar division.
+    """
+    ph = pl_matvec(p, h)
+    denom = 1.0 + jnp.dot(h, ph)
+    inv_denom = 1.0 / denom
+    err = y - h @ beta
+    return pl_rank1_update(p, beta, ph, err, inv_denom)

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: output layer + top-2 statistics.
+
+`O = H·β` (G2 = identity — see the Prediction docs in
+rust/src/odl/activation.rs), plus the per-sample (argmax, p1, p2) triple
+that feeds the P1P2 pruning gate. m = 6 is tiny, so one instance handles
+the whole output; the batch dimension is the grid.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_B = 64
+
+
+def _logits_kernel(h_ref, beta_ref, o_ref):
+    o_ref[...] = h_ref[...] @ beta_ref[...]
+
+
+@jax.jit
+def pl_logits(h, beta):
+    """O = H·β, H: (B, N), β: (N, m) → (B, m)."""
+    b, n = h.shape
+    m = beta.shape[1]
+    tile_b = min(TILE_B, b)
+    assert b % tile_b == 0, "batch must be a multiple of the tile"
+    grid = b // tile_b
+    return pl.pallas_call(
+        _logits_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        interpret=True,
+    )(h, beta)
+
+
+@jax.jit
+def top2_stats(logits):
+    """Per-row (class, p1, p2): top-2 of the raw outputs, clamped to [0,1].
+
+    Mirrors rust `Prediction::from_logits`.
+    """
+    top, idx = jax.lax.top_k(logits, 2)
+    p1 = jnp.clip(top[..., 0], 0.0, 1.0)
+    p2 = jnp.clip(top[..., 1], 0.0, 1.0)
+    return idx[..., 0].astype(jnp.int32), p1, p2

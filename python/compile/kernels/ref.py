@@ -1,0 +1,126 @@
+"""Pure-jnp/numpy oracle for every Pallas kernel — the correctness reference.
+
+This module is the *normative python half* of the shared numerics spec
+(DESIGN.md §6). The rust golden model (`rust/src/odl/xorshift.rs`,
+`rust/src/odl/oselm.rs`) implements the same functions; `aot.py` emits
+golden vectors from here that the cargo test suite re-checks, so a drift
+between the two languages fails tests on both sides.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# --- xorshift16 (paper coefficients 7, 9, 8) -------------------------------
+
+SEED_REMAP = 0x2A6D
+ROUNDS = 4
+MIX_MUL = 0x9E3779B9
+MIX_MUL2 = 0x85EBCA6B
+
+
+def xs16_round_np(s: np.ndarray) -> np.ndarray:
+    """One xorshift(7,9,8) round on uint16 state(s) — numpy version."""
+    s = s.astype(np.uint32)  # avoid uint16 overflow warnings; mask manually
+    s = s ^ ((s << 7) & 0xFFFF)
+    s = s ^ (s >> 9)
+    s = s ^ ((s << 8) & 0xFFFF)
+    return (s & 0xFFFF).astype(np.uint16)
+
+
+def xorshift16_stream(seed: int, count: int) -> np.ndarray:
+    """The ASIC's *sequential* stream (state after each step), uint16."""
+    s = np.uint16(seed if seed != 0 else SEED_REMAP)
+    out = np.empty(count, dtype=np.uint16)
+    for i in range(count):
+        s = xs16_round_np(np.asarray(s))[()]
+        out[i] = s
+    return out
+
+
+def counter_alpha_np(seed: int, n: int, cols: int, scale: float) -> np.ndarray:
+    """Counter-based α (kernel-identical), numpy. Returns (n, cols) f32."""
+    k = np.arange(n * cols, dtype=np.uint64)
+    m = (k * MIX_MUL) & 0xFFFFFFFF
+    m ^= m >> 15
+    m = (m * MIX_MUL2) & 0xFFFFFFFF
+    m ^= m >> 13
+    s = (np.uint64(seed) ^ (m >> 16) ^ (m & 0xFFFF)) & 0xFFFF
+    s = np.where(s == 0, SEED_REMAP, s).astype(np.uint16)
+    for _ in range(ROUNDS):
+        s = xs16_round_np(s)
+    vals = s.view(np.int16).astype(np.float32) / 32768.0
+    return (vals * np.float32(scale)).reshape(n, cols)
+
+
+def counter_alpha(seed, n: int, cols: int, scale: float) -> jnp.ndarray:
+    """Counter-based α in jnp (traceable; `seed` may be a traced scalar)."""
+    k = jnp.arange(n * cols, dtype=jnp.uint32)
+    m = k * jnp.uint32(MIX_MUL)
+    m = m ^ (m >> 15)
+    m = m * jnp.uint32(MIX_MUL2)
+    m = m ^ (m >> 13)
+    s = (jnp.asarray(seed, dtype=jnp.uint32) ^ (m >> 16) ^ (m & 0xFFFF)) & 0xFFFF
+    s = jnp.where(s == 0, jnp.uint32(SEED_REMAP), s)
+    for _ in range(ROUNDS):
+        s = s ^ ((s << 7) & 0xFFFF)
+        s = s ^ (s >> 9)
+        s = s ^ ((s << 8) & 0xFFFF)
+        s = s & 0xFFFF
+    signed = jnp.where(s >= 32768, s.astype(jnp.int32) - 65536, s.astype(jnp.int32))
+    vals = signed.astype(jnp.float32) / 32768.0
+    return (vals * jnp.float32(scale)).reshape(n, cols)
+
+
+# --- OS-ELM reference graph pieces -----------------------------------------
+
+
+def sigmoid(z):
+    return 1.0 / (1.0 + jnp.exp(-z))
+
+
+def hidden_ref(x, seed, n_hidden: int):
+    """H = sigmoid(x · α(seed)) with α counter-generated; x is (B, n)."""
+    n = x.shape[-1]
+    scale = np.float32(1.0 / np.sqrt(n))
+    alpha = counter_alpha(seed, n, n_hidden, scale)
+    return sigmoid(x @ alpha)
+
+
+def hidden_stored_ref(x, alpha):
+    """H for the ODLBase (stored-α) variant; alpha is (n, N), pre-scaled."""
+    return sigmoid(x @ alpha)
+
+
+def predict_ref(x, beta, seed):
+    """(logits, H) for one batch: logits = H·β (G2 = identity)."""
+    h = hidden_ref(x, seed, beta.shape[0])
+    return h @ beta, h
+
+
+def matvec_ref(p, h):
+    """Ph = P · h (P is (N,N), h is (N,))."""
+    return p @ h
+
+
+def train_step_ref(h, y, p, beta):
+    """One Figure-2(d) sequential update given precomputed H (shape (N,)).
+
+    Returns (P', β'). y is one-hot (m,).
+    """
+    ph = p @ h
+    denom = 1.0 + h @ ph
+    p_new = p - jnp.outer(ph, ph) / denom
+    err = y - h @ beta
+    beta_new = beta + jnp.outer(ph, err) / denom
+    return p_new, beta_new
+
+
+def init_batch_ref(h0, y0, lam: float = 0.01):
+    """Batch init: P₀ = (H₀ᵀH₀ + λI)⁻¹, β₀ = P₀·H₀ᵀ·Y₀."""
+    n_hidden = h0.shape[1]
+    gram = h0.T @ h0 + lam * jnp.eye(n_hidden, dtype=h0.dtype)
+    p0 = jnp.linalg.inv(gram)
+    beta0 = p0 @ (h0.T @ y0)
+    return p0, beta0

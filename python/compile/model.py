@@ -1,0 +1,177 @@
+"""L2: the OS-ELM compute graphs (and the DNN baseline), composed from the
+L1 Pallas kernels, exactly as AOT-lowered into `artifacts/*.hlo.txt`.
+
+Every public function here is a *jit-able graph* whose HLO the rust runtime
+executes via PJRT. Python never runs at request time: `aot.py` lowers each
+graph once per (variant, N) and the rust side binds inputs by position
+(see `artifacts/manifest.json` for names/shapes).
+
+Seeds are uint32 scalars passed as shape-(1,) arrays (scalar-literal
+plumbing through PJRT is dialect-dependent; a 1-element vector is not).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import hash_elm, oselm, predict as predict_k
+from .kernels.ref import counter_alpha  # noqa: F401  (re-exported for tests)
+
+# Paper prototype dimensions.
+N_IN = 561
+N_OUT = 6
+LAMBDA = 0.01
+
+
+# --- ODLHash graphs ---------------------------------------------------------
+
+
+def predict_one(x, beta, seed):
+    """x: (1, n), β: (N, m), seed: (1,) u32 → (logits (1, m), H (1, N))."""
+    h = hash_elm.hash_hidden(x, seed[0], beta.shape[0])
+    logits = predict_k.pl_logits(h, beta)
+    return logits, h
+
+
+def predict_batch(x, beta, seed):
+    """Batched evaluation: x (B, n) → logits (B, m). B must be tile-aligned."""
+    h = hash_elm.hash_hidden(x, seed[0], beta.shape[0])
+    return predict_k.pl_logits(h, beta)
+
+
+def train_step(x, y, p, beta, seed):
+    """One sequential update: x (1, n), y one-hot (m,) → (P', β')."""
+    h = hash_elm.hash_hidden(x, seed[0], beta.shape[0])[0]
+    return oselm.oselm_update(h, y, p, beta)
+
+
+def train_stream(xs, ys, p, beta, seed):
+    """K sequential updates fused into one executable via `lax.scan` —
+    the L2 throughput optimization for streaming training: one XLA launch
+    (and one P/β host round-trip) amortizes over K samples instead of 1.
+
+    xs: (K, n), ys: (K, m) one-hot → (P', β').
+    The hidden activations for all K samples are computed in one batched
+    Pallas call (MXU-shaped); the inherently sequential rank-1 updates run
+    inside the scan with plain jnp ops (same math as the oselm kernel —
+    equivalence is pytest-checked).
+    """
+    h_all = hash_elm.hash_hidden(xs, seed[0], beta.shape[0])  # (K, N)
+
+    def step(carry, inputs):
+        p, beta = carry
+        h, y = inputs
+        ph = p @ h
+        denom = 1.0 + h @ ph
+        inv = 1.0 / denom
+        p = p - jnp.outer(ph, ph) * inv
+        beta = beta + jnp.outer(ph, y - h @ beta) * inv
+        return (p, beta), ()
+
+    (p, beta), _ = jax.lax.scan(step, (p, beta), (h_all, ys))
+    return p, beta
+
+
+def newton_schulz_inverse(a, iters: int = 40):
+    """SPD matrix inverse by Newton–Schulz iteration — pure matmuls.
+
+    Why not `jnp.linalg.inv`: on CPU it lowers to LAPACK *FFI* custom-calls
+    (`lapack_sgetrf_ffi`) that the pinned xla_extension 0.5.1 runtime does
+    not register, so the artifact would not execute from rust. On the MXU
+    an iterative inverse is the natural choice anyway (no LAPACK on TPUs
+    either — same hardware-adaptation as the kernels).
+
+    X₀ = I/‖A‖_F guarantees eig(I − X₀A) ⊂ [0, 1) for SPD A, so
+    X_{k+1} = X_k(2I − A·X_k) converges monotonically; `iters` = 40 covers
+    condition numbers up to ~10⁶ in f32.
+    """
+    n = a.shape[0]
+    eye2 = 2.0 * jnp.eye(n, dtype=a.dtype)
+    x = jnp.eye(n, dtype=a.dtype) / jnp.linalg.norm(a)
+
+    def body(_, x):
+        return x @ (eye2 - a @ x)
+
+    return jax.lax.fori_loop(0, iters, body, x)
+
+
+def init_batch(x0, y0, seed, n_hidden: int):
+    """Batch init on k₀ samples: → (P₀, β₀)."""
+    h0 = hash_elm.hash_hidden(x0, seed[0], n_hidden)
+    gram = h0.T @ h0 + LAMBDA * jnp.eye(n_hidden, dtype=jnp.float32)
+    p0 = newton_schulz_inverse(gram)
+    beta0 = p0 @ (h0.T @ y0)
+    return p0, beta0
+
+
+# --- ODLBase (stored-α) graphs ----------------------------------------------
+
+
+def predict_batch_stored(x, alpha, beta):
+    h = hash_elm.stored_hidden(x, alpha)
+    return predict_k.pl_logits(h, beta)
+
+
+def train_step_stored(x, y, p, beta, alpha):
+    h = hash_elm.stored_hidden(x, alpha)[0]
+    return oselm.oselm_update(h, y, p, beta)
+
+
+# --- DNN baseline (561, 512, 256, 6) ----------------------------------------
+#
+# Params travel as a flat tuple (w1, b1, w2, b2, w3, b3) so the PJRT call
+# signature stays positional.
+
+DNN_LAYERS = (561, 512, 256, 6)
+
+
+def dnn_init(key):
+    """He-init parameters for the (561,512,256,6) MLP."""
+    params = []
+    keys = jax.random.split(key, len(DNN_LAYERS) - 1)
+    for k, (fan_in, fan_out) in zip(keys, zip(DNN_LAYERS[:-1], DNN_LAYERS[1:])):
+        w = jax.random.normal(k, (fan_in, fan_out), jnp.float32) * np.sqrt(
+            2.0 / fan_in
+        ).astype(np.float32)
+        params += [w, jnp.zeros((fan_out,), jnp.float32)]
+    return tuple(params)
+
+
+def dnn_forward(x, w1, b1, w2, b2, w3, b3):
+    """Logits for x (B, 561)."""
+    a1 = jnp.maximum(x @ w1 + b1, 0.0)
+    a2 = jnp.maximum(a1 @ w2 + b2, 0.0)
+    return a2 @ w3 + b3
+
+
+def _dnn_loss(params, x, y):
+    logits = dnn_forward(x, *params)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(y * logp, axis=-1))
+
+
+def dnn_train_step(x, y, lr, w1, b1, w2, b2, w3, b3):
+    """One SGD step on a minibatch; returns (loss, new params...)."""
+    params = (w1, b1, w2, b2, w3, b3)
+    loss, grads = jax.value_and_grad(_dnn_loss)(params, x, y)
+    new = tuple(p - lr[0] * g for p, g in zip(params, grads))
+    return (loss.reshape((1,)),) + new
+
+
+# --- reference twins (pure jnp, no pallas) — used by pytest ------------------
+
+
+def predict_batch_ref(x, beta, seed):
+    from .kernels import ref
+
+    logits, _ = ref.predict_ref(x, beta, seed[0])
+    return logits
+
+
+def train_step_ref_graph(x, y, p, beta, seed):
+    from .kernels import ref
+
+    h = ref.hidden_ref(x, seed[0], beta.shape[0])[0]
+    return ref.train_step_ref(h, y, p, beta)

@@ -1,0 +1,113 @@
+"""AOT pipeline tests: manifest round-trip, HLO text sanity, goldens."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestLowering:
+    def test_to_hlo_text_roundtrips_simple_fn(self):
+        import jax
+        import jax.numpy as jnp
+
+        lowered = jax.jit(lambda a, b: (a @ b + 1.0,)).lower(
+            aot.spec((2, 2)), aot.spec((2, 2))
+        )
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text and "f32[2,2]" in text
+
+    def test_entries_cover_all_variants_and_sizes(self):
+        names = [e[0] for e in aot.build_entries()]
+        for nh in aot.HIDDEN_SIZES:
+            for stem in (
+                "predict_one_hash",
+                "predict_batch_hash",
+                "train_step_hash",
+                "init_batch_hash",
+                "predict_batch_stored",
+                "train_step_stored",
+            ):
+                assert f"{stem}_n{nh}" in names
+        assert "dnn_forward" in names and "dnn_train_step" in names
+
+    def test_lowered_artifacts_have_no_custom_calls(self):
+        """CPU-PJRT executability: no LAPACK/Mosaic custom-calls allowed."""
+        if not os.path.isdir(ARTIFACT_DIR):
+            pytest.skip("artifacts not built")
+        for fname in os.listdir(ARTIFACT_DIR):
+            if fname.endswith(".hlo.txt"):
+                with open(os.path.join(ARTIFACT_DIR, fname)) as f:
+                    assert "custom-call" not in f.read(), fname
+
+
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        path = os.path.join(ARTIFACT_DIR, "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_format_and_dims(self, manifest):
+        assert manifest["format"] == "hlo-text"
+        assert manifest["n_in"] == 561
+        assert manifest["n_out"] == 6
+
+    def test_every_artifact_file_exists(self, manifest):
+        for name, meta in manifest["artifacts"].items():
+            path = os.path.join(ARTIFACT_DIR, meta["path"])
+            assert os.path.exists(path), name
+            assert os.path.getsize(path) > 500, name
+
+    def test_arg_shapes_recorded(self, manifest):
+        m = manifest["artifacts"]["train_step_hash_n128"]
+        assert m["arg_shapes"] == [[1, 561], [6], [128, 128], [128, 6], [1]]
+        assert m["arg_dtypes"][-1] == "uint32"
+
+
+class TestGoldens:
+    @pytest.fixture(scope="class")
+    def goldens(self):
+        path = os.path.join(ARTIFACT_DIR, "golden", "numerics.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_stream_matches_ref(self, goldens):
+        got = ref.xorshift16_stream(1, 16).tolist()
+        assert got == goldens["xorshift16_stream_seed1"]
+
+    def test_alpha_matches_ref(self, goldens):
+        got = ref.counter_alpha_np(9, 16, 8, 1.0).reshape(-1)
+        np.testing.assert_allclose(got, goldens["counter_alpha_seed9_16x8"], atol=0)
+
+    def test_train_step_golden_selfcheck(self, goldens):
+        import jax.numpy as jnp
+
+        g = goldens["train_step"]
+        nh = g["n_hidden"]
+        h = np.asarray(g["h"], dtype=np.float32)
+        p = np.eye(nh, dtype=np.float32) * g["p_diag"]
+        beta = np.asarray(g["beta"], dtype=np.float32).reshape(nh, 6)
+        y = np.eye(6, dtype=np.float32)[g["y_class"]]
+        p2, b2 = ref.train_step_ref(
+            jnp.asarray(h), jnp.asarray(y), jnp.asarray(p), jnp.asarray(beta)
+        )
+        np.testing.assert_allclose(
+            np.asarray(p2).reshape(-1), g["p_new"], rtol=1e-6, atol=1e-7
+        )
+        np.testing.assert_allclose(
+            np.asarray(b2).reshape(-1), g["beta_new"], rtol=1e-6, atol=1e-7
+        )

@@ -1,0 +1,181 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and seeds; assert_allclose against ref.py is the
+core correctness signal of the compile path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import hash_elm, oselm, predict as predict_k, ref
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def rand(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+# --- xorshift / alpha --------------------------------------------------------
+
+
+class TestXorshift:
+    def test_stream_full_period_prefix(self):
+        s = ref.xorshift16_stream(1, 1000)
+        assert len(set(s.tolist())) == 1000  # no repeats inside the period
+
+    def test_stream_first_value(self):
+        # spec pin: state 1 -> 0x8181 (matches rust xorshift.rs test)
+        assert ref.xorshift16_stream(1, 1)[0] == 0x8181
+
+    def test_zero_seed_remapped(self):
+        a = ref.xorshift16_stream(0, 4)
+        b = ref.xorshift16_stream(ref.SEED_REMAP, 4)
+        assert (a == b).all()
+
+    @given(seed=st.integers(0, 0xFFFF))
+    def test_counter_alpha_jnp_matches_numpy(self, seed):
+        a_np = ref.counter_alpha_np(seed, 12, 6, 1.0)
+        a_j = np.asarray(ref.counter_alpha(seed, 12, 6, 1.0))
+        assert_allclose(a_np, a_j, rtol=0, atol=0)
+
+    @given(seed=st.integers(0, 0xFFFF))
+    def test_counter_alpha_in_range(self, seed):
+        a = ref.counter_alpha_np(seed, 20, 10, 1.0)
+        assert (a >= -1.0).all() and (a < 1.0).all()
+
+    def test_counter_alpha_stride_decorrelated(self):
+        a = ref.counter_alpha_np(3, 561, 128, 1.0).reshape(-1)
+        mean, var = a.mean(), a.var()
+        for lag in (1, 64, 128, 561):
+            r = ((a[:-lag] - mean) * (a[lag:] - mean)).mean() / var
+            assert abs(r) < 0.02, f"lag {lag}: {r}"
+
+
+# --- hash_hidden kernel ------------------------------------------------------
+
+
+class TestHashHidden:
+    @given(
+        n=st.sampled_from([8, 57, 128, 561]),
+        n_hidden=st.sampled_from([8, 32, 128, 200, 256]),
+        b=st.sampled_from([1, 3, 8]),
+        seed=st.integers(0, 0xFFFF),
+    )
+    def test_matches_ref(self, n, n_hidden, b, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, b, n)
+        got = np.asarray(hash_elm.hash_hidden(x, seed, n_hidden))
+        want = np.asarray(ref.hidden_ref(x, seed, n_hidden))
+        assert got.shape == (b, n_hidden)
+        assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_output_in_unit_interval(self):
+        # sigmoid saturates to exactly 1.0 in f32 for large inputs — the
+        # closed interval is the correct invariant.
+        rng = np.random.default_rng(0)
+        h = np.asarray(hash_elm.hash_hidden(rand(rng, 4, 561) * 10, 1, 128))
+        assert (h >= 0).all() and (h <= 1).all()
+        assert h.std() > 0.1  # and it is not collapsed
+
+    def test_seed_changes_output(self):
+        rng = np.random.default_rng(0)
+        x = rand(rng, 2, 64)
+        a = np.asarray(hash_elm.hash_hidden(x, 1, 32))
+        b = np.asarray(hash_elm.hash_hidden(x, 2, 32))
+        assert np.abs(a - b).max() > 1e-3
+
+    @given(seed=st.integers(0, 0xFFFF))
+    def test_stored_hidden_matches_ref(self, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, 4, 40)
+        alpha = rand(rng, 40, 16) * 0.2
+        got = np.asarray(hash_elm.stored_hidden(x, alpha))
+        want = np.asarray(ref.hidden_stored_ref(x, alpha))
+        assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_stored_hidden_nontile_hidden(self):
+        # n_hidden = 200 is not a multiple of TILE_N=128 → padded path
+        rng = np.random.default_rng(3)
+        x = rand(rng, 2, 30)
+        alpha = rand(rng, 30, 200) * 0.1
+        got = np.asarray(hash_elm.stored_hidden(x, alpha))
+        want = np.asarray(ref.hidden_stored_ref(x, alpha))
+        assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# --- oselm update kernels ----------------------------------------------------
+
+
+class TestOselmUpdate:
+    @given(
+        n_hidden=st.sampled_from([8, 32, 128, 256]),
+        m=st.sampled_from([2, 6]),
+        seed=st.integers(0, 10_000),
+    )
+    def test_matches_ref(self, n_hidden, m, seed):
+        rng = np.random.default_rng(seed)
+        h = rng.uniform(0, 1, n_hidden).astype(np.float32)
+        y = np.eye(m, dtype=np.float32)[rng.integers(m)]
+        # realistic P: SPD-ish diag-dominant
+        p = (np.eye(n_hidden) * 5.0 + rand(rng, n_hidden, n_hidden) * 0.05).astype(
+            np.float32
+        )
+        p = ((p + p.T) / 2).astype(np.float32)
+        beta = rand(rng, n_hidden, m) * 0.3
+        p2, b2 = oselm.oselm_update(h, y, p, beta)
+        p2r, b2r = ref.train_step_ref(
+            jnp.asarray(h), jnp.asarray(y), jnp.asarray(p), jnp.asarray(beta)
+        )
+        assert_allclose(np.asarray(p2), np.asarray(p2r), rtol=1e-5, atol=1e-5)
+        assert_allclose(np.asarray(b2), np.asarray(b2r), rtol=1e-5, atol=1e-5)
+
+    @given(seed=st.integers(0, 10_000))
+    def test_matvec_matches(self, seed):
+        rng = np.random.default_rng(seed)
+        p = rand(rng, 128, 128)
+        h = rand(rng, 128)
+        assert_allclose(
+            np.asarray(oselm.pl_matvec(p, h)), p @ h, rtol=1e-5, atol=1e-4
+        )
+
+    def test_update_shrinks_p(self):
+        # P is a covariance-inverse estimate: hᵀP'h < hᵀPh after an update.
+        rng = np.random.default_rng(5)
+        n_hidden = 32
+        h = rng.uniform(0, 1, n_hidden).astype(np.float32)
+        p = np.eye(n_hidden, dtype=np.float32) * 10
+        beta = np.zeros((n_hidden, 6), dtype=np.float32)
+        y = np.eye(6, dtype=np.float32)[0]
+        p2, _ = oselm.oselm_update(h, y, p, beta)
+        assert h @ np.asarray(p2) @ h < h @ p @ h
+
+
+# --- predict kernels ---------------------------------------------------------
+
+
+class TestPredict:
+    @given(seed=st.integers(0, 10_000), b=st.sampled_from([1, 8, 64]))
+    def test_logits_match(self, seed, b):
+        rng = np.random.default_rng(seed)
+        h = rng.uniform(0, 1, (b, 128)).astype(np.float32)
+        beta = rand(rng, 128, 6) * 0.2
+        assert_allclose(
+            np.asarray(predict_k.pl_logits(h, beta)), h @ beta, rtol=1e-5, atol=1e-5
+        )
+
+    def test_top2(self):
+        logits = np.array([[0.1, 0.8, 0.3, -0.2, 0.0, 0.05]], dtype=np.float32)
+        cls, p1, p2 = predict_k.top2_stats(logits)
+        assert int(cls[0]) == 1
+        assert float(p1[0]) == pytest.approx(0.8)
+        assert float(p2[0]) == pytest.approx(0.3)
+
+    def test_top2_clamps(self):
+        logits = np.array([[1.5, -0.5]], dtype=np.float32)
+        _, p1, p2 = predict_k.top2_stats(logits)
+        assert float(p1[0]) == 1.0 and float(p2[0]) == 0.0

@@ -1,0 +1,167 @@
+"""L2 model graph tests: shapes, semantics, OS-ELM equivalences, DNN step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+SEED = np.array([11], dtype=np.uint32)
+
+
+class TestPredictGraphs:
+    def test_predict_one_shapes(self):
+        rng = np.random.default_rng(0)
+        x = rand(rng, 1, model.N_IN)
+        beta = rand(rng, 128, model.N_OUT) * 0.1
+        logits, h = model.predict_one(x, beta, SEED)
+        assert logits.shape == (1, model.N_OUT)
+        assert h.shape == (1, 128)
+
+    def test_predict_batch_matches_ref(self):
+        rng = np.random.default_rng(1)
+        x = rand(rng, 64, model.N_IN)
+        beta = rand(rng, 128, model.N_OUT) * 0.1
+        got = np.asarray(model.predict_batch(x, beta, SEED))
+        want = np.asarray(model.predict_batch_ref(x, beta, SEED))
+        assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_predict_one_consistent_with_batch(self):
+        rng = np.random.default_rng(2)
+        x = rand(rng, 64, model.N_IN)
+        beta = rand(rng, 128, model.N_OUT) * 0.1
+        batch = np.asarray(model.predict_batch(x, beta, SEED))
+        one, _ = model.predict_one(x[:1], beta, SEED)
+        assert_allclose(np.asarray(one)[0], batch[0], rtol=1e-5, atol=1e-6)
+
+
+class TestTrainGraphs:
+    def test_train_step_matches_ref(self):
+        rng = np.random.default_rng(3)
+        x = rand(rng, 1, model.N_IN)
+        y = np.eye(model.N_OUT, dtype=np.float32)[4]
+        p = np.eye(128, dtype=np.float32) * 3
+        beta = rand(rng, 128, model.N_OUT) * 0.1
+        p2, b2 = model.train_step(x, y, p, beta, SEED)
+        p2r, b2r = model.train_step_ref_graph(x, y, p, beta, SEED)
+        assert_allclose(np.asarray(p2), np.asarray(p2r), rtol=1e-5, atol=1e-5)
+        assert_allclose(np.asarray(b2), np.asarray(b2r), rtol=1e-5, atol=1e-5)
+
+    def test_sequential_equals_batch_ridge(self):
+        """RLS exactness: init on k0 + sequential on rest ≈ batch ridge on all."""
+        rng = np.random.default_rng(4)
+        n, nh, m, k0, extra = 40, 16, 3, 64, 100
+        x_all = rand(rng, k0 + extra, n)
+        labels = rng.integers(0, m, k0 + extra)
+        y_all = np.eye(m, dtype=np.float32)[labels]
+
+        h_all = np.asarray(ref.hidden_ref(x_all, 5, nh))
+        p, beta = ref.init_batch_ref(jnp.asarray(h_all[:k0]), jnp.asarray(y_all[:k0]))
+        p, beta = np.asarray(p), np.asarray(beta)
+        for i in range(k0, k0 + extra):
+            p_j, b_j = ref.train_step_ref(
+                jnp.asarray(h_all[i]), jnp.asarray(y_all[i]), jnp.asarray(p), jnp.asarray(beta)
+            )
+            p, beta = np.asarray(p_j), np.asarray(b_j)
+
+        _, beta_batch = ref.init_batch_ref(jnp.asarray(h_all), jnp.asarray(y_all))
+        assert_allclose(beta, np.asarray(beta_batch), atol=5e-3)
+
+    def test_init_batch_newton_schulz_accuracy(self):
+        rng = np.random.default_rng(5)
+        x0 = rand(rng, 512, model.N_IN)
+        y0 = np.eye(model.N_OUT, dtype=np.float32)[rng.integers(0, 6, 512)]
+        p0, beta0 = model.init_batch(x0, y0, SEED, n_hidden=128)
+        # P0 must invert the Gram matrix
+        h0 = np.asarray(ref.hidden_ref(x0, SEED[0], 128))
+        gram = h0.T @ h0 + model.LAMBDA * np.eye(128, dtype=np.float32)
+        resid = np.abs(gram @ np.asarray(p0) - np.eye(128)).max()
+        assert resid < 1e-3, resid
+        assert beta0.shape == (128, model.N_OUT)
+
+
+class TestStoredVariant:
+    def test_stored_predict_matches_hash_when_alpha_equal(self):
+        rng = np.random.default_rng(6)
+        x = rand(rng, 64, model.N_IN)
+        beta = rand(rng, 128, model.N_OUT) * 0.1
+        scale = np.float32(1.0 / np.sqrt(model.N_IN))
+        alpha = ref.counter_alpha_np(int(SEED[0]), model.N_IN, 128, scale)
+        got = np.asarray(model.predict_batch_stored(x, alpha, beta))
+        want = np.asarray(model.predict_batch(x, beta, SEED))
+        assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_stored_train_step(self):
+        rng = np.random.default_rng(7)
+        x = rand(rng, 1, model.N_IN)
+        y = np.eye(model.N_OUT, dtype=np.float32)[0]
+        p = np.eye(128, dtype=np.float32) * 2
+        beta = rand(rng, 128, model.N_OUT) * 0.1
+        alpha = rand(rng, model.N_IN, 128) * 0.04
+        p2, b2 = model.train_step_stored(x, y, p, beta, alpha)
+        h = np.asarray(ref.hidden_stored_ref(x, alpha))[0]
+        p2r, b2r = ref.train_step_ref(
+            jnp.asarray(h), jnp.asarray(y), jnp.asarray(p), jnp.asarray(beta)
+        )
+        assert_allclose(np.asarray(p2), np.asarray(p2r), rtol=1e-5, atol=1e-5)
+        assert_allclose(np.asarray(b2), np.asarray(b2r), rtol=1e-5, atol=1e-5)
+
+
+class TestDnn:
+    def test_forward_shapes(self):
+        rng = np.random.default_rng(8)
+        params = model.dnn_init(jax.random.PRNGKey(0))
+        x = rand(rng, 16, model.N_IN)
+        logits = model.dnn_forward(x, *params)
+        assert logits.shape == (16, model.N_OUT)
+
+    def test_train_step_reduces_loss(self):
+        rng = np.random.default_rng(9)
+        params = model.dnn_init(jax.random.PRNGKey(1))
+        x = rand(rng, 32, model.N_IN)
+        y = np.eye(model.N_OUT, dtype=np.float32)[rng.integers(0, 6, 32)]
+        lr = np.array([0.1], dtype=np.float32)
+        out = model.dnn_train_step(x, y, lr, *params)
+        loss0 = float(out[0][0])
+        params = out[1:]
+        for _ in range(20):
+            out = model.dnn_train_step(x, y, lr, *params)
+            params = out[1:]
+        loss1 = float(out[0][0])
+        assert loss1 < loss0 * 0.7, (loss0, loss1)
+
+    def test_newton_schulz_vs_linalg(self):
+        rng = np.random.default_rng(10)
+        b = rand(rng, 64, 64)
+        a = b.T @ b + np.eye(64, dtype=np.float32)
+        inv = np.asarray(model.newton_schulz_inverse(jnp.asarray(a)))
+        assert_allclose(a @ inv, np.eye(64), atol=1e-3)
+
+
+class TestTrainStream:
+    def test_scan_fused_equals_sequential(self):
+        """train_stream (lax.scan) must equal K individual train_steps."""
+        rng = np.random.default_rng(11)
+        k, nh = 8, 128
+        xs = rand(rng, k, model.N_IN)
+        labels = rng.integers(0, model.N_OUT, k)
+        ys = np.eye(model.N_OUT, dtype=np.float32)[labels]
+        p = np.eye(nh, dtype=np.float32) * 4
+        beta = rand(rng, nh, model.N_OUT) * 0.1
+
+        p_s, b_s = model.train_stream(xs, ys, p, beta, SEED)
+
+        p_i, b_i = jnp.asarray(p), jnp.asarray(beta)
+        for i in range(k):
+            p_i, b_i = model.train_step(xs[i : i + 1], ys[i], p_i, b_i, SEED)
+
+        assert_allclose(np.asarray(p_s), np.asarray(p_i), rtol=1e-4, atol=1e-4)
+        assert_allclose(np.asarray(b_s), np.asarray(b_i), rtol=1e-4, atol=1e-4)

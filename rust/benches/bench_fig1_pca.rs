@@ -1,0 +1,24 @@
+//! Bench + regeneration for Figure 1 (per-class PCA projections).
+
+use odl_har::data::{SynthConfig, SynthHar};
+use odl_har::exp::fig1;
+use odl_har::util::bench::bench;
+use odl_har::util::rng::Rng64;
+
+fn main() {
+    let mut data_rng = Rng64::new(0xDA7A_5EED);
+    let pool = SynthHar::new(SynthConfig::default(), &mut data_rng).generate(&mut data_rng);
+    let out = std::path::PathBuf::from("results");
+    std::fs::create_dir_all(&out).unwrap();
+    let t0 = std::time::Instant::now();
+    let table = fig1::run(&pool, &out, 7).expect("fig1");
+    println!("{}", table.render());
+    println!("fig1 regeneration: {:.1} s", t0.elapsed().as_secs_f64());
+
+    // micro: PCA fit on one class
+    let class0 = pool.filter(|l, _| l == 0);
+    let mut rng = Rng64::new(3);
+    bench("pca_fit_2_components (one class)", 1, 5, || {
+        std::hint::black_box(odl_har::data::pca::Pca::fit(&class0.xs, 2, &mut rng));
+    });
+}

@@ -1,0 +1,30 @@
+//! Bench + regeneration for Figure 3 (pruning sweep + auto-θ headline),
+//! including the Error-L2-Norm ablation the paper mentions but omits.
+
+use odl_har::exp::fig3;
+use odl_har::pruning::Metric;
+use odl_har::util::bench::bench_trials;
+
+fn main() {
+    let trials = bench_trials();
+    let t0 = std::time::Instant::now();
+    let points = fig3::sweep(trials, Metric::P1P2).expect("fig3 sweep");
+    let (table, _) = fig3::render(&points, trials, Metric::P1P2).expect("render");
+    println!("{}", table.render());
+    if let Some((red, drop)) = fig3::auto_headline(&points) {
+        println!(
+            "Auto: comm reduction {red:.1} % (paper 55.7 %), accuracy drop {drop:.1} pt (paper 0.9 pt)"
+        );
+        assert!(red > 30.0, "auto must cut communication substantially");
+        assert!(drop < 2.5, "auto accuracy loss must stay small");
+    }
+    println!("fig3 (P1P2) regeneration: {:.1} s", t0.elapsed().as_secs_f64());
+
+    // Ablation: the Error-L2-Norm confidence metric (paper §3.2 footnote)
+    let points_el2n = fig3::sweep(trials, Metric::ErrorL2).expect("el2n sweep");
+    let (table, _) = fig3::render(&points_el2n, trials, Metric::ErrorL2).expect("render");
+    println!("{}", table.render());
+    if let Some((red, drop)) = fig3::auto_headline(&points_el2n) {
+        println!("Auto (EL2N): comm reduction {red:.1} %, accuracy drop {drop:.1} pt");
+    }
+}

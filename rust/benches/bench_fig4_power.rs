@@ -1,0 +1,23 @@
+//! Bench + regeneration for Figure 4 (training-mode power vs θ at three
+//! event rates, compute/comm split, auto-θ reductions).
+
+use odl_har::exp::{fig3, fig4};
+use odl_har::pruning::Metric;
+use odl_har::util::bench::bench_trials;
+
+fn main() {
+    let trials = bench_trials();
+    let points = fig3::sweep(trials, Metric::P1P2).expect("sweep");
+    let (table, _) = fig4::run_fig(&points).expect("fig4");
+    println!("{}", table.render());
+    for (period, red) in fig4::auto_reductions(&points) {
+        let paper = match period as u64 {
+            1 => 49.4,
+            5 => 34.7,
+            _ => 25.2,
+        };
+        println!("Auto reduction @ 1/{period:.0}s: {red:.1} % (paper {paper} %)");
+    }
+    let reductions = fig4::auto_reductions(&points);
+    assert!(reductions[0].1 > reductions[2].1, "reductions must shrink with period");
+}

@@ -1,0 +1,119 @@
+//! Hot-path microbenchmarks across all three layers: the native OS-ELM
+//! core (L3 state), the PJRT-executed artifacts (L2/L1), and the fleet
+//! event loop. §Perf of EXPERIMENTS.md tracks these numbers.
+
+use odl_har::coordinator::fleet::{Fleet, FleetConfig, Scenario};
+use odl_har::data::SynthConfig;
+use odl_har::linalg::Mat;
+use odl_har::odl::{AlphaKind, OsElm, OsElmConfig};
+use odl_har::util::bench::{bench, fast_mode};
+use odl_har::util::rng::Rng64;
+
+fn main() {
+    let mut rng = Rng64::new(1);
+    let cfg = OsElmConfig {
+        n_in: 561,
+        n_hidden: 128,
+        n_out: 6,
+        alpha: AlphaKind::Hash,
+        ..Default::default()
+    };
+    let mut model = OsElm::new(cfg, &mut rng, 7);
+    let mut xs = Mat::zeros(512, 561);
+    let mut labels = Vec::new();
+    for r in 0..512 {
+        let c = r % 6;
+        labels.push(c);
+        for j in 0..561 {
+            *xs.at_mut(r, j) = rng.normal_ms(if j % 6 == c { 0.5 } else { 0.0 }, 1.0) as f32;
+        }
+    }
+    model.init_batch(&xs, &labels).unwrap();
+
+    // L3 native hot path
+    let x = xs.row(0).to_vec();
+    bench("native predict (561/128/6)", 10, 200, || {
+        std::hint::black_box(model.predict(&x));
+    });
+    bench("native train_step (561/128/6)", 10, 200, || {
+        model.train_step(&x, 3);
+    });
+    let mut model256 = OsElm::new(
+        OsElmConfig {
+            n_hidden: 256,
+            ..cfg
+        },
+        &mut rng,
+        7,
+    );
+    model256.init_batch(&xs, &labels).unwrap();
+    bench("native train_step (561/256/6)", 5, 100, || {
+        model256.train_step(&x, 3);
+    });
+    let r = bench("native init_batch (512 samples, N=128)", 1, 5, || {
+        model.init_batch(&xs, &labels).unwrap();
+    });
+    println!("  -> {:.0} samples/s batch init", r.per_sec(512.0));
+
+    // L2/L1 via PJRT (skipped when artifacts are absent)
+    if odl_har::runtime::default_artifact_dir().join("manifest.json").exists() {
+        let rt = odl_har::runtime::Runtime::open_default().expect("runtime");
+        let mut pjrt = odl_har::runtime::PjrtOsElm::new(&rt, 128, 7).expect("pjrt model");
+        pjrt.load_state(&model.beta.data, &model.p.data).unwrap();
+        bench("pjrt predict_one (561/128/6)", 5, 100, || {
+            std::hint::black_box(pjrt.predict(&x).unwrap());
+        });
+        bench("pjrt train_step (561/128/6)", 5, 100, || {
+            pjrt.train_step(&x, 3).unwrap();
+        });
+        let r = bench("pjrt train_stream 512 (scan-fused, K=32)", 1, 10, || {
+            pjrt.train_stream(&xs, &labels).unwrap();
+        });
+        println!(
+            "  -> {:.3} ms/sample scan-fused ({:.0} samples/s)",
+            r.mean_s * 1e3 / 512.0,
+            r.per_sec(512.0)
+        );
+        let r = bench("pjrt predict_batch 256 (561/128/6)", 3, 30, || {
+            std::hint::black_box(pjrt.accuracy(&xs, &labels).unwrap());
+        });
+        println!("  -> {:.0} samples/s batched eval", r.per_sec(512.0));
+    } else {
+        println!("(skipping PJRT benches: run `make artifacts` first)");
+    }
+
+    // fleet event loop (coordination overhead per event)
+    let scenario = Scenario {
+        n_edges: 4,
+        horizon_s: if fast_mode() { 60.0 } else { 300.0 },
+        synth: SynthConfig {
+            n_features: 561,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let events = (scenario.horizon_s / scenario.event_period_s) as f64 * 4.0;
+    let build = bench("fleet construction (provision 4 edges)", 0, 3, || {
+        std::hint::black_box(
+            Fleet::new(FleetConfig {
+                scenario: scenario.clone(),
+                seed: 1,
+            })
+            .unwrap(),
+        );
+    });
+    let r = bench("fleet construct + event loop (4 edges)", 0, 3, || {
+        let fleet = Fleet::new(FleetConfig {
+            scenario: scenario.clone(),
+            seed: 1,
+        })
+        .unwrap();
+        std::hint::black_box(fleet.run());
+    });
+    let loop_s = (r.mean_s - build.mean_s).max(1e-9);
+    println!(
+        "  -> {:.0} fleet events/s simulated (loop only, {:.1} us/event)",
+        events / loop_s,
+        loop_s / events * 1e6
+    );
+}

@@ -1,0 +1,22 @@
+//! Bench + regeneration for Table 1 (SRAM size model).
+//!
+//! Prints the exact table and times the memory-model sweep (sub-µs — the
+//! model is closed-form; the bench guards against accidental regressions
+//! into something expensive).
+
+use odl_har::exp::table1;
+use odl_har::hw::memory::{memory_bytes, CoreVariant};
+use odl_har::util::bench::bench;
+
+fn main() {
+    println!("{}", table1::run().render());
+    bench("table1_memory_model_sweep", 10, 100, || {
+        let mut acc = 0usize;
+        for &n in &table1::N_SWEEP {
+            for v in [CoreVariant::NoOdl, CoreVariant::OdlBase, CoreVariant::OdlHash] {
+                acc = acc.wrapping_add(memory_bytes(v, 561, n, 6));
+            }
+        }
+        std::hint::black_box(acc);
+    });
+}

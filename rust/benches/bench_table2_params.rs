@@ -1,0 +1,22 @@
+//! Bench + regeneration for Table 2 (parameter count + accuracy vs SOTA).
+
+use odl_har::exp::table2;
+use odl_har::util::bench::{bench, bench_trials};
+
+fn main() {
+    let trials = bench_trials();
+    let t0 = std::time::Instant::now();
+    let table = table2::run_table(trials).expect("table2");
+    println!("{}", table.render());
+    println!(
+        "table2 regeneration ({} trials x 2 configs): {:.1} s",
+        trials,
+        t0.elapsed().as_secs_f64()
+    );
+    // micro: the parameter-count model itself
+    bench("odl_param_count", 10, 100, || {
+        for n in [32, 64, 128, 256, 512] {
+            std::hint::black_box(odl_har::hw::memory::odl_param_count(n, 6));
+        }
+    });
+}

@@ -1,0 +1,32 @@
+//! Bench + regeneration for Table 3 (the central accuracy experiment).
+//!
+//! `ODL_BENCH_TRIALS` (default 20, paper's count) controls the trial
+//! budget; `ODL_BENCH_FAST=1` drops to 3 for smoke runs.
+
+use odl_har::exp::table3;
+use odl_har::util::bench::bench_trials;
+
+fn main() {
+    let trials = bench_trials();
+    let t0 = std::time::Instant::now();
+    let (table, aggs) = table3::run_table(trials).expect("table3");
+    println!("{}", table.render());
+    println!(
+        "table3 regeneration ({} trials x {} configs): {:.1} s total",
+        trials,
+        aggs.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    // shape assertions so `cargo bench` fails loudly on regression
+    let no_odl_128 = &aggs[0];
+    let hash_128 = &aggs[2];
+    assert!(
+        no_odl_128.after.mean() < no_odl_128.before.mean() - 5.0,
+        "drift must hurt NoODL"
+    );
+    assert!(
+        hash_128.after.mean() > no_odl_128.after.mean() + 4.0,
+        "ODL must recover"
+    );
+    println!("table3 shape checks OK");
+}

@@ -1,0 +1,30 @@
+//! Bench + regeneration for Table 4 (core latency/power) + the divider
+//! ablation + the fixed-point golden model's software throughput.
+
+use odl_har::exp::table4;
+use odl_har::fixed::fx_vec_from_f32;
+use odl_har::odl::fixed_oselm::FixedOsElm;
+use odl_har::util::bench::bench;
+use odl_har::util::rng::Rng64;
+
+fn main() {
+    println!("{}", table4::run(true).render());
+    println!("{}", table4::divider_ablation().render());
+
+    // How fast does the bit-accurate Q16.16 golden model run in software?
+    // (The ASIC does 171.28 ms/train at 10 MHz; the software model's rate
+    // bounds how fast we can co-simulate.)
+    let mut rng = Rng64::new(1);
+    let mut m = FixedOsElm::new(561, 128, 6, 7);
+    for i in 0..128 {
+        m.p[i * 128 + i] = odl_har::fixed::Fx::from_f32(5.0);
+    }
+    let x: Vec<f32> = (0..561).map(|_| rng.normal() as f32).collect();
+    let fx = fx_vec_from_f32(&x);
+    bench("fixed_oselm_train_step (561/128/6)", 2, 20, || {
+        m.train_step(&fx, 3);
+    });
+    bench("fixed_oselm_predict (561/128/6)", 2, 20, || {
+        std::hint::black_box(m.predict(&fx));
+    });
+}

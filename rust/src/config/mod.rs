@@ -1,0 +1,229 @@
+//! Configuration system: a TOML-subset parser (serde/toml are not in the
+//! offline vendor set) + typed experiment and fleet configs with presets.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string
+//! ("…"), integer, float, and boolean values, `#` comments. That covers
+//! every config this repo ships (`configs/*.toml`).
+
+pub mod toml;
+
+use crate::coordinator::fleet::{DetectorKind, Scenario};
+use crate::coordinator::ChannelConfig;
+use crate::data::SynthConfig;
+use crate::exp::protocol::{ProtocolConfig, PruningSpec, Variant};
+use crate::odl::AlphaKind;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use toml::TomlDoc;
+
+/// Typed experiment configuration (drives `odl-har run`).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub protocol: ProtocolConfig,
+}
+
+impl ExperimentConfig {
+    pub fn from_file(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_str(&text)
+    }
+
+    pub fn from_str(text: &str) -> Result<ExperimentConfig> {
+        let doc = TomlDoc::parse(text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+
+        let variant_name = doc.get_str("model", "variant").unwrap_or("odlhash");
+        let n_hidden = doc.get_int("model", "n_hidden").unwrap_or(128) as usize;
+        let variant = match variant_name.to_ascii_lowercase().as_str() {
+            "odlhash" => Variant::Odl(AlphaKind::Hash),
+            "odlbase" => Variant::Odl(AlphaKind::Stored),
+            "noodl" => Variant::NoOdl(AlphaKind::Hash),
+            "dnn" => Variant::Dnn(vec![561, 512, 256, 6]),
+            other => bail!("unknown model.variant '{other}'"),
+        };
+
+        let mut cfg = ProtocolConfig::new(variant, n_hidden);
+        if let Some(t) = doc.get_int("experiment", "trials") {
+            cfg.trials = t as usize;
+        }
+        if let Some(s) = doc.get_int("experiment", "seed") {
+            cfg.master_seed = s as u64;
+        }
+        if let Some(f) = doc.get_float("experiment", "train_frac") {
+            cfg.train_frac = f;
+        }
+        if let Some(e) = doc.get_float("teacher", "error_rate") {
+            cfg.teacher_error = e;
+        }
+        cfg.pruning = match doc.get_str("pruning", "mode").unwrap_or("off") {
+            "off" => PruningSpec::Off,
+            "fixed" => {
+                let theta = doc
+                    .get_float("pruning", "theta")
+                    .context("pruning.mode=fixed requires pruning.theta")?;
+                PruningSpec::Fixed(theta as f32)
+            }
+            "auto" => PruningSpec::Auto {
+                x: doc.get_int("pruning", "x").unwrap_or(10) as u32,
+            },
+            other => bail!("unknown pruning.mode '{other}'"),
+        };
+        if let Some(w) = doc.get_int("pruning", "warmup") {
+            cfg.warmup = Some(w as usize);
+        }
+        apply_synth(&mut cfg.synth, &doc)?;
+        Ok(ExperimentConfig { protocol: cfg })
+    }
+}
+
+fn apply_synth(synth: &mut SynthConfig, doc: &TomlDoc) -> Result<()> {
+    if let Some(v) = doc.get_int("data", "n_features") {
+        synth.n_features = v as usize;
+    }
+    if let Some(v) = doc.get_int("data", "n_classes") {
+        synth.n_classes = v as usize;
+    }
+    if let Some(v) = doc.get_int("data", "n_subjects") {
+        synth.n_subjects = v as usize;
+    }
+    if let Some(v) = doc.get_int("data", "samples_per_cell") {
+        synth.samples_per_cell = v as usize;
+    }
+    if let Some(v) = doc.get_float("data", "noise_sigma") {
+        synth.noise_sigma = v;
+    }
+    if let Some(v) = doc.get_float("data", "drift_scale") {
+        synth.drift_scale = v;
+    }
+    Ok(())
+}
+
+/// Fleet scenario config (drives `odl-har fleet`).
+pub fn fleet_from_file(path: &Path) -> Result<(Scenario, u64)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading config {}", path.display()))?;
+    fleet_from_str(&text)
+}
+
+pub fn fleet_from_str(text: &str) -> Result<(Scenario, u64)> {
+    let doc = TomlDoc::parse(text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+    let mut sc = Scenario::default();
+    if let Some(v) = doc.get_int("fleet", "n_edges") {
+        sc.n_edges = v as usize;
+    }
+    if let Some(v) = doc.get_int("fleet", "n_hidden") {
+        sc.n_hidden = v as usize;
+    }
+    if let Some(v) = doc.get_float("fleet", "event_period_s") {
+        sc.event_period_s = v;
+    }
+    if let Some(v) = doc.get_float("fleet", "horizon_s") {
+        sc.horizon_s = v;
+    }
+    if let Some(v) = doc.get_float("fleet", "drift_at_s") {
+        sc.drift_at_s = v;
+    }
+    if let Some(v) = doc.get_int("fleet", "train_target") {
+        sc.train_target = v as usize;
+    }
+    if let Some(v) = doc.get_str("fleet", "detector") {
+        sc.detector = match v {
+            "oracle" => DetectorKind::Oracle,
+            "centroid" => DetectorKind::Centroid,
+            other => bail!("unknown fleet.detector '{other}'"),
+        };
+    }
+    if let Some(v) = doc.get_float("pruning", "theta") {
+        sc.fixed_theta = Some(v as f32);
+    }
+    if let Some(v) = doc.get_float("teacher", "error_rate") {
+        sc.teacher_error = v;
+    }
+    let mut ch = ChannelConfig::default();
+    if let Some(v) = doc.get_float("channel", "loss_prob") {
+        ch.loss_prob = v;
+    }
+    if let Some(v) = doc.get_int("channel", "max_retries") {
+        ch.max_retries = v as u32;
+    }
+    sc.channel = ch;
+    apply_synth(&mut sc.synth, &doc)?;
+    let seed = doc.get_int("fleet", "seed").unwrap_or(1) as u64;
+    Ok((sc, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+[model]
+variant = "odlhash"
+n_hidden = 256
+
+[experiment]
+trials = 5
+seed = 99
+train_frac = 0.8
+
+[pruning]
+mode = "auto"
+x = 7
+
+[teacher]
+error_rate = 0.05
+"#;
+
+    #[test]
+    fn experiment_config_parses() {
+        let cfg = ExperimentConfig::from_str(SAMPLE).unwrap().protocol;
+        assert_eq!(cfg.n_hidden, 256);
+        assert_eq!(cfg.trials, 5);
+        assert_eq!(cfg.master_seed, 99);
+        assert!((cfg.train_frac - 0.8).abs() < 1e-12);
+        assert!((cfg.teacher_error - 0.05).abs() < 1e-12);
+        assert!(matches!(cfg.pruning, PruningSpec::Auto { x: 7 }));
+        assert!(matches!(cfg.variant, Variant::Odl(AlphaKind::Hash)));
+    }
+
+    #[test]
+    fn fixed_theta_requires_value() {
+        let bad = "[pruning]\nmode = \"fixed\"\n";
+        assert!(ExperimentConfig::from_str(bad).is_err());
+        let good = "[pruning]\nmode = \"fixed\"\ntheta = 0.16\n";
+        let cfg = ExperimentConfig::from_str(good).unwrap().protocol;
+        assert!(matches!(cfg.pruning, PruningSpec::Fixed(t) if (t - 0.16).abs() < 1e-6));
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        assert!(ExperimentConfig::from_str("[model]\nvariant = \"transformer\"\n").is_err());
+    }
+
+    #[test]
+    fn fleet_config_parses() {
+        let text = r#"
+[fleet]
+n_edges = 8
+horizon_s = 1200.0
+detector = "centroid"
+seed = 42
+
+[channel]
+loss_prob = 0.1
+"#;
+        let (sc, seed) = fleet_from_str(text).unwrap();
+        assert_eq!(sc.n_edges, 8);
+        assert_eq!(sc.detector, DetectorKind::Centroid);
+        assert!((sc.channel.loss_prob - 0.1).abs() < 1e-12);
+        assert_eq!(seed, 42);
+    }
+
+    #[test]
+    fn defaults_when_sections_missing() {
+        let cfg = ExperimentConfig::from_str("").unwrap().protocol;
+        assert_eq!(cfg.n_hidden, 128);
+        assert_eq!(cfg.trials, 20);
+    }
+}

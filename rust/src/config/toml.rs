@@ -1,0 +1,167 @@
+//! Minimal TOML-subset parser: `[section]`, `key = value` (string, int,
+//! float, bool), `#` comments. Enough for `configs/*.toml`; no arrays,
+//! tables-in-arrays, or multi-line strings.
+
+use std::collections::BTreeMap;
+
+/// A parsed document: section → key → raw value.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(value.trim())
+                .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key)? {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key)? {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`horizon_s = 600`).
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key)? {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key)? {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_value_types() {
+        let doc = TomlDoc::parse(
+            "[a]\ns = \"hello\"\ni = 42\nf = 1.5\nneg = -3\nb = true\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("a", "s"), Some("hello"));
+        assert_eq!(doc.get_int("a", "i"), Some(42));
+        assert_eq!(doc.get_float("a", "f"), Some(1.5));
+        assert_eq!(doc.get_int("a", "neg"), Some(-3));
+        assert_eq!(doc.get_bool("a", "b"), Some(true));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let doc = TomlDoc::parse("# header\n[s]\nk = 1 # trailing\n\nj = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get_int("s", "k"), Some(1));
+        assert_eq!(doc.get_str("s", "j"), Some("a#b"));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = TomlDoc::parse("[s]\nk = 600\n").unwrap();
+        assert_eq!(doc.get_float("s", "k"), Some(600.0));
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let err = TomlDoc::parse("[s]\nbad line\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        let err = TomlDoc::parse("[unterminated\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let err = TomlDoc::parse("[s]\nk = \"open\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let doc = TomlDoc::parse("[s]\nk = 1\n").unwrap();
+        assert!(doc.get("s", "missing").is_none());
+        assert!(doc.get("missing", "k").is_none());
+        assert!(doc.get_str("s", "k").is_none(), "type mismatch is None");
+    }
+}

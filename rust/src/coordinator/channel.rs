@@ -1,0 +1,164 @@
+//! The BLE channel between edges and teacher: latency, loss, retry.
+//!
+//! §2.2: "If such a nearby teacher is not available, the queries to the
+//! teacher will be retried later or skipped." The channel models a lossy
+//! sporadic-connection link: each attempt takes `latency_s` (from the
+//! [`crate::hw::BleModel`] transaction timing) and fails with
+//! `loss_prob`; up to `max_retries` re-attempts happen back-to-back, after
+//! which the query is reported failed (the edge then skips that sample).
+
+use crate::hw::BleModel;
+use crate::util::rng::Rng64;
+
+/// Channel parameters.
+#[derive(Clone, Debug)]
+pub struct ChannelConfig {
+    /// One-attempt round-trip latency [s].
+    pub latency_s: f64,
+    /// Probability an attempt fails (out of range, interference).
+    pub loss_prob: f64,
+    /// Retries after the first failed attempt.
+    pub max_retries: u32,
+}
+
+impl Default for ChannelConfig {
+    fn default() -> Self {
+        Self {
+            latency_s: BleModel::default().query_latency_s(),
+            loss_prob: 0.0,
+            max_retries: 2,
+        }
+    }
+}
+
+/// Outcome of one query over the channel.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Delivery {
+    /// Did the query (eventually) reach the teacher and return?
+    pub delivered: bool,
+    /// Attempts made (1 = first try succeeded).
+    pub attempts: u32,
+    /// Total channel occupancy time [s].
+    pub elapsed_s: f64,
+    /// Radio energy spent [mJ] (every attempt transmits).
+    pub energy_mj: f64,
+}
+
+/// The channel: stateless aside from its RNG stream.
+pub struct Channel {
+    pub cfg: ChannelConfig,
+    ble: BleModel,
+    rng: Rng64,
+    pub total_attempts: u64,
+    pub total_failures: u64,
+}
+
+impl Channel {
+    pub fn new(cfg: ChannelConfig, seed: u64) -> Channel {
+        Channel {
+            cfg,
+            ble: BleModel::default(),
+            rng: Rng64::new(seed),
+            total_attempts: 0,
+            total_failures: 0,
+        }
+    }
+
+    /// Attempt a query round-trip (with retries).
+    pub fn transmit(&mut self) -> Delivery {
+        let mut attempts = 0u32;
+        let mut elapsed = 0.0;
+        let mut energy = 0.0;
+        loop {
+            attempts += 1;
+            self.total_attempts += 1;
+            elapsed += self.cfg.latency_s;
+            energy += self.ble.query_energy_mj();
+            if !self.rng.bernoulli(self.cfg.loss_prob) {
+                return Delivery {
+                    delivered: true,
+                    attempts,
+                    elapsed_s: elapsed,
+                    energy_mj: energy,
+                };
+            }
+            self.total_failures += 1;
+            if attempts > self.cfg.max_retries {
+                return Delivery {
+                    delivered: false,
+                    attempts,
+                    elapsed_s: elapsed,
+                    energy_mj: energy,
+                };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lossless_channel_delivers_first_try() {
+        let mut ch = Channel::new(ChannelConfig::default(), 1);
+        for _ in 0..100 {
+            let d = ch.transmit();
+            assert!(d.delivered);
+            assert_eq!(d.attempts, 1);
+        }
+        assert_eq!(ch.total_failures, 0);
+    }
+
+    #[test]
+    fn lossy_channel_retries_and_sometimes_fails() {
+        let cfg = ChannelConfig {
+            loss_prob: 0.5,
+            max_retries: 1,
+            ..Default::default()
+        };
+        let mut ch = Channel::new(cfg, 2);
+        let n = 4000;
+        let mut failed = 0;
+        for _ in 0..n {
+            let d = ch.transmit();
+            assert!(d.attempts <= 2);
+            if !d.delivered {
+                failed += 1;
+                assert_eq!(d.attempts, 2);
+            }
+        }
+        // P(fail) = 0.5² = 0.25
+        let rate = failed as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.03, "failure rate {rate}");
+    }
+
+    #[test]
+    fn retries_cost_energy_and_time() {
+        let cfg = ChannelConfig {
+            loss_prob: 1.0, // always fails
+            max_retries: 3,
+            ..Default::default()
+        };
+        let mut ch = Channel::new(cfg.clone(), 3);
+        let d = ch.transmit();
+        assert!(!d.delivered);
+        assert_eq!(d.attempts, 4);
+        assert!((d.elapsed_s - 4.0 * cfg.latency_s).abs() < 1e-12);
+        assert!(d.energy_mj > 3.0 * BleModel::default().query_energy_mj());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = ChannelConfig {
+            loss_prob: 0.3,
+            ..Default::default()
+        };
+        let run = |seed| {
+            let mut ch = Channel::new(cfg.clone(), seed);
+            (0..50).map(|_| ch.transmit().attempts).collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+}

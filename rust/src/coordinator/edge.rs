@@ -1,0 +1,321 @@
+//! The edge-device state machine — Algorithm 1 around the tiny ODL core.
+//!
+//! ```text
+//! x ← Sense()
+//! if mode = predicting:
+//!     if IsDrift(x): mode ← training
+//!     return Predict(x)
+//! else:                            # training
+//!     y ← LabelAcquire(Predict(x)) # pruning gate may skip the query
+//!     SequentialTrain(x, y)
+//!     if IsTrainDone(): mode ← predicting
+//! ```
+//!
+//! Query round-trips are asynchronous in the fleet simulator, so the FSM
+//! is split into `on_sense` (returns what the device wants to do) and
+//! `on_label` / `on_query_failed` (completions). While a query is in
+//! flight the device buffers the sample; per §2.2 an unreachable teacher
+//! means the query "will be retried later or skipped" — retry policy
+//! lives in the channel; the FSM just skips training for that sample.
+
+use crate::drift::DriftDetector;
+use crate::odl::activation::Prediction;
+use crate::odl::{OsElm, OsElmConfig};
+use crate::pruning::{Decision, Pruner};
+use crate::util::rng::Rng64;
+
+/// Operating mode (Algorithm 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Predicting,
+    Training,
+}
+
+/// What the device asks the coordinator to do after sensing.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StepAction {
+    /// Predicting mode (or pruned training event): no communication.
+    None,
+    /// Training mode and the pruning gate said "query the teacher".
+    QueryTeacher,
+}
+
+/// Edge-device configuration.
+pub struct EdgeConfig {
+    pub model: OsElmConfig,
+    pub hash_seed: u16,
+    pub pruner: Pruner,
+    pub detector: Box<dyn DriftDetector + Send>,
+    /// IsTrainDone: training-mode samples *trained* before returning to
+    /// predicting mode (the paper's "pre-specified condition").
+    pub train_target: usize,
+}
+
+/// One edge device: ODL core + Algorithm-1 state.
+pub struct EdgeDevice {
+    pub id: usize,
+    pub mode: Mode,
+    pub model: OsElm,
+    pub pruner: Pruner,
+    pub detector: Box<dyn DriftDetector + Send>,
+    pub train_target: usize,
+    /// Samples trained in the current training phase.
+    pub trained_this_phase: usize,
+    /// Training-mode events seen this phase (trained + skipped + failed) —
+    /// what IsTrainDone counts: the paper's "number of required training
+    /// samples" is stream samples, not successful queries (otherwise
+    /// pruning could never reduce the per-episode query count).
+    pub events_this_phase: usize,
+    /// Sample awaiting a teacher reply (x, local prediction).
+    pending: Option<(Vec<f32>, Prediction)>,
+    /// Lifetime counters.
+    pub total_queries: u64,
+    pub total_skips: u64,
+    pub total_trained: u64,
+    pub mode_switches: u64,
+}
+
+impl EdgeDevice {
+    pub fn new(id: usize, cfg: EdgeConfig, rng: &mut Rng64) -> Self {
+        let model = OsElm::new(cfg.model, rng, cfg.hash_seed);
+        EdgeDevice {
+            id,
+            mode: Mode::Predicting,
+            model,
+            pruner: cfg.pruner,
+            detector: cfg.detector,
+            train_target: cfg.train_target,
+            trained_this_phase: 0,
+            events_this_phase: 0,
+            pending: None,
+            total_queries: 0,
+            total_skips: 0,
+            total_trained: 0,
+            mode_switches: 0,
+        }
+    }
+
+    /// Provision the core with an offline-initialized model (the paper's
+    /// step 1: initial training happens before deployment).
+    pub fn provision(&mut self, xs: &crate::linalg::Mat, labels: &[usize]) -> anyhow::Result<()> {
+        self.model.init_batch(xs, labels)?;
+        Ok(())
+    }
+
+    /// Is a query currently in flight?
+    pub fn busy(&self) -> bool {
+        self.pending.is_some()
+    }
+
+    /// Algorithm 1, lines 1–9: sense one sample.
+    /// Returns the local prediction and the requested action.
+    pub fn on_sense(&mut self, x: &[f32]) -> (Prediction, StepAction) {
+        let pred = self.model.predict(x);
+        self.detector.observe(x, Some(&pred));
+
+        match self.mode {
+            Mode::Predicting => {
+                if self.detector.is_drift() {
+                    self.enter_training();
+                }
+                (pred, StepAction::None)
+            }
+            Mode::Training => {
+                if self.pending.is_some() {
+                    // still waiting for the teacher on a previous sample —
+                    // sporadic BLE; this sample is skipped (paper §2.2).
+                    return (pred, StepAction::None);
+                }
+                self.events_this_phase += 1;
+                // Condition 2: drift "currently detected" keeps querying.
+                let drift_now = self.detector.is_drift();
+                match self.pruner.decide(&pred, self.trained_this_phase, drift_now) {
+                    Decision::Skip => {
+                        self.total_skips += 1;
+                        self.pruner.observe(Decision::Skip, None);
+                        self.check_train_done();
+                        (pred, StepAction::None)
+                    }
+                    Decision::Query => {
+                        self.total_queries += 1;
+                        self.pending = Some((x.to_vec(), pred));
+                        (pred, StepAction::QueryTeacher)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Teacher reply arrived: sequential-train on the buffered sample.
+    pub fn on_label(&mut self, teacher_label: usize) {
+        let Some((x, pred)) = self.pending.take() else {
+            return; // stale reply (e.g. after a mode switch) — ignore
+        };
+        self.pruner
+            .observe(Decision::Query, Some(pred.class == teacher_label));
+        self.model.train_step(&x, teacher_label);
+        self.trained_this_phase += 1;
+        self.total_trained += 1;
+        // Once enough samples are trained, the drift episode is considered
+        // handled: clear the detector so condition 2 stops forcing queries.
+        if self.trained_this_phase == self.pruner.warmup {
+            self.detector.reset();
+        }
+        self.check_train_done();
+    }
+
+    /// Query lost / teacher unreachable: skip training for that sample.
+    pub fn on_query_failed(&mut self) {
+        if self.pending.take().is_some() {
+            self.pruner.observe(Decision::Query, None);
+        }
+    }
+
+    fn enter_training(&mut self) {
+        self.mode = Mode::Training;
+        self.mode_switches += 1;
+        self.trained_this_phase = 0;
+        self.events_this_phase = 0;
+    }
+
+    fn check_train_done(&mut self) {
+        if self.events_this_phase >= self.train_target {
+            self.mode = Mode::Predicting;
+            self.mode_switches += 1;
+            self.trained_this_phase = 0;
+            self.events_this_phase = 0;
+            self.detector.reset();
+        }
+    }
+
+    /// Force training mode (scripted-drift scenarios with an oracle
+    /// detector drive this from the fleet).
+    pub fn force_training(&mut self) {
+        if self.mode == Mode::Predicting {
+            self.enter_training();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::drift::OracleDetector;
+    use crate::linalg::Mat;
+    use crate::pruning::{Metric, ThetaPolicy};
+
+    fn mk_edge(train_target: usize, warmup: usize) -> (EdgeDevice, Mat, Vec<usize>) {
+        let mut rng = Rng64::new(3);
+        let model = OsElmConfig {
+            n_in: 12,
+            n_hidden: 16,
+            n_out: 3,
+            ..Default::default()
+        };
+        let cfg = EdgeConfig {
+            model,
+            hash_seed: 5,
+            pruner: Pruner::new(ThetaPolicy::Fixed(0.2), Metric::P1P2, warmup),
+            detector: Box::new(OracleDetector::new()),
+            train_target,
+        };
+        let mut edge = EdgeDevice::new(0, cfg, &mut rng);
+        // provision with a toy problem
+        let mut xs = Mat::zeros(60, 12);
+        let mut labels = Vec::new();
+        for r in 0..60 {
+            let c = r % 3;
+            labels.push(c);
+            for j in 0..12 {
+                *xs.at_mut(r, j) = if j == c { 2.0 } else { -0.5 }
+                    + rng.normal_ms(0.0, 0.3) as f32;
+            }
+        }
+        edge.provision(&xs, &labels).unwrap();
+        (edge, xs, labels)
+    }
+
+    #[test]
+    fn predicting_mode_never_queries() {
+        let (mut edge, xs, _) = mk_edge(10, 0);
+        for r in 0..20 {
+            let (_, action) = edge.on_sense(xs.row(r));
+            assert_eq!(action, StepAction::None);
+        }
+        assert_eq!(edge.total_queries, 0);
+        assert_eq!(edge.mode, Mode::Predicting);
+    }
+
+    #[test]
+    fn training_mode_queries_until_target() {
+        // warmup ≥ target ⇒ every event queries (pruning never engages)
+        let (mut edge, xs, labels) = mk_edge(5, 100);
+        edge.force_training();
+        assert_eq!(edge.mode, Mode::Training);
+        let mut trained = 0;
+        let mut r = 0;
+        while edge.mode == Mode::Training && r < 60 {
+            let (_, action) = edge.on_sense(xs.row(r));
+            if action == StepAction::QueryTeacher {
+                edge.on_label(labels[r]);
+                trained += 1;
+            }
+            r += 1;
+        }
+        assert_eq!(trained, 5);
+        assert_eq!(edge.mode, Mode::Predicting);
+        assert_eq!(edge.trained_this_phase, 0);
+    }
+
+    #[test]
+    fn pending_query_blocks_new_queries() {
+        let (mut edge, xs, _) = mk_edge(10, 100);
+        edge.force_training();
+        let (_, a1) = edge.on_sense(xs.row(0));
+        assert_eq!(a1, StepAction::QueryTeacher);
+        assert!(edge.busy());
+        let (_, a2) = edge.on_sense(xs.row(1));
+        assert_eq!(a2, StepAction::None, "in-flight query must block");
+        edge.on_label(0);
+        assert!(!edge.busy());
+    }
+
+    #[test]
+    fn failed_query_skips_training() {
+        let (mut edge, xs, _) = mk_edge(10, 100);
+        edge.force_training();
+        let (_, a) = edge.on_sense(xs.row(0));
+        assert_eq!(a, StepAction::QueryTeacher);
+        edge.on_query_failed();
+        assert!(!edge.busy());
+        assert_eq!(edge.total_trained, 0);
+        assert_eq!(edge.mode, Mode::Training, "stays in training mode");
+    }
+
+    #[test]
+    fn stale_label_ignored() {
+        let (mut edge, _, _) = mk_edge(10, 0);
+        edge.on_label(2); // no pending query
+        assert_eq!(edge.total_trained, 0);
+    }
+
+    #[test]
+    fn warmup_forces_queries_then_pruning_engages() {
+        let (mut edge, xs, labels) = mk_edge(40, 8);
+        edge.force_training();
+        let mut skips_before_warmup = 0;
+        for r in 0..30 {
+            let (_, action) = edge.on_sense(xs.row(r % 60));
+            match action {
+                StepAction::QueryTeacher => edge.on_label(labels[r % 60]),
+                StepAction::None => {
+                    if edge.trained_this_phase < 8 {
+                        skips_before_warmup += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(skips_before_warmup, 0, "no pruning before warmup");
+        assert!(edge.total_skips > 0, "pruning engages after warmup");
+    }
+}

@@ -1,0 +1,571 @@
+//! Deterministic discrete-event fleet simulator — Figure 2(a) at system
+//! scale: one teacher, many edges, a lossy BLE channel, virtual time,
+//! full energy accounting via the [`crate::hw`] models.
+//!
+//! Each edge senses one sample per `event_period_s` (phases staggered so
+//! the teacher sees interleaved load). A scripted drift moment switches
+//! every edge's sampling distribution from its in-distribution subject to
+//! a held-out subject (the paper's deployment story). Detection is either
+//! scripted (oracle) or organic (centroid detector). Queries ride the
+//! channel with latency/loss/retry; teacher replies complete the edge's
+//! pending training step.
+//!
+//! `run()` is a single-threaded binary-heap event loop (exactly
+//! reproducible); `run_threaded()` drives real edge/teacher threads over
+//! std mpsc channels for the live-system flavour (tokio is not available
+//! offline — see DESIGN.md §9).
+
+use super::channel::{Channel, ChannelConfig};
+use super::edge::{EdgeConfig, EdgeDevice, Mode, StepAction};
+use super::metrics::{EdgeMetrics, FleetReport};
+use super::teacher::Teacher;
+use crate::data::synth::{SynthConfig, SynthHar};
+use crate::data::{Standardizer, HELD_OUT_SUBJECTS};
+use crate::drift::{CentroidDetector, DriftDetector, OracleDetector};
+use crate::hw::{CycleModel, PowerModel, PowerState};
+use crate::odl::{AlphaKind, OsElmConfig};
+use crate::pruning::{Metric, Pruner, ThetaPolicy};
+use anyhow::Result;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Drift-detector selection for the scenario.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DetectorKind {
+    /// Scripted: the fleet flips edges into training mode at the drift moment.
+    Oracle,
+    /// Organic: the centroid detector must notice the shift by itself.
+    Centroid,
+}
+
+/// Fleet scenario description.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub n_edges: usize,
+    pub n_hidden: usize,
+    pub event_period_s: f64,
+    pub horizon_s: f64,
+    /// Virtual time at which the data distribution shifts.
+    pub drift_at_s: f64,
+    pub detector: DetectorKind,
+    /// θ policy: None = auto ladder, Some(t) = fixed.
+    pub fixed_theta: Option<f32>,
+    pub teacher_error: f64,
+    pub channel: ChannelConfig,
+    pub synth: SynthConfig,
+    /// Training-phase length (IsTrainDone target).
+    pub train_target: usize,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Self {
+            n_edges: 4,
+            n_hidden: 128,
+            event_period_s: 1.0,
+            horizon_s: 600.0,
+            drift_at_s: 120.0,
+            detector: DetectorKind::Oracle,
+            fixed_theta: None,
+            teacher_error: 0.0,
+            channel: ChannelConfig::default(),
+            synth: SynthConfig::default(),
+            train_target: 400,
+        }
+    }
+}
+
+/// Fleet configuration = scenario + seed.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub scenario: Scenario,
+    pub seed: u64,
+}
+
+#[derive(Debug)]
+enum Event {
+    /// Edge senses a sample.
+    Sense { edge: usize },
+    /// Teacher reply lands at the edge.
+    Reply { edge: usize, label: usize },
+    /// Channel gave up on the query.
+    QueryFailed { edge: usize },
+    /// Scripted drift moment.
+    Drift,
+}
+
+struct Scheduled {
+    at: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by (time, seq) through reversal
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// The simulator.
+pub struct Fleet {
+    pub cfg: FleetConfig,
+    edges: Vec<EdgeDevice>,
+    metrics: Vec<EdgeMetrics>,
+    teacher: Teacher,
+    channel: Channel,
+    generator: SynthHar,
+    standardizer: Standardizer,
+    /// Per-edge (pre-drift subject, post-drift subject).
+    edge_subjects: Vec<(usize, usize)>,
+    drifted: bool,
+    rng: crate::util::rng::Rng64,
+    power: PowerModel,
+    cycles: CycleModel,
+    queue: BinaryHeap<Scheduled>,
+    seq: u64,
+    now: f64,
+    /// Buffered true label for each edge's in-flight query.
+    pending_truth: Vec<Option<usize>>,
+}
+
+impl Fleet {
+    pub fn new(cfg: FleetConfig) -> Result<Fleet> {
+        let sc = &cfg.scenario;
+        let mut rng = crate::util::rng::Rng64::new(cfg.seed);
+        let mut data_rng = crate::util::rng::Rng64::new(cfg.seed ^ 0xDA7A);
+        let generator = SynthHar::new(sc.synth.clone(), &mut data_rng);
+
+        // Provisioning pool: in-distribution subjects only.
+        let pool = generator.generate(&mut data_rng);
+        let in_dist = pool.filter(|_, s| !HELD_OUT_SUBJECTS.contains(&s));
+        let standardizer = Standardizer::fit(&in_dist.xs);
+        let mut train = in_dist;
+        standardizer.apply(&mut train.xs);
+        train.shuffle(&mut rng);
+
+        let in_subjects: Vec<usize> = (1..=sc.synth.n_subjects)
+            .filter(|s| !HELD_OUT_SUBJECTS.contains(s))
+            .collect();
+
+        let mut edges = Vec::with_capacity(sc.n_edges);
+        let mut edge_subjects = Vec::with_capacity(sc.n_edges);
+        for id in 0..sc.n_edges {
+            let model = OsElmConfig {
+                n_in: sc.synth.n_features,
+                n_hidden: sc.n_hidden,
+                n_out: sc.synth.n_classes,
+                alpha: AlphaKind::Hash,
+                ..Default::default()
+            };
+            let policy = match sc.fixed_theta {
+                Some(t) => ThetaPolicy::Fixed(t),
+                None => ThetaPolicy::auto(),
+            };
+            let detector: Box<dyn DriftDetector + Send> = match sc.detector {
+                DetectorKind::Oracle => Box::new(OracleDetector::new()),
+                DetectorKind::Centroid => {
+                    Box::new(CentroidDetector::new(sc.synth.n_features))
+                }
+            };
+            let warmup = crate::pruning::warmup_for(sc.n_hidden).min(sc.train_target / 2);
+            let mut edge = EdgeDevice::new(
+                id,
+                EdgeConfig {
+                    model,
+                    hash_seed: (cfg.seed as u16).wrapping_add(id as u16 * 31),
+                    pruner: Pruner::new(policy, Metric::P1P2, warmup),
+                    detector,
+                    train_target: sc.train_target,
+                },
+                &mut rng,
+            );
+            edge.provision(&train.xs, &train.labels)?;
+            let pre = in_subjects[id % in_subjects.len()];
+            let post = HELD_OUT_SUBJECTS[id % HELD_OUT_SUBJECTS.len()];
+            edge_subjects.push((pre, post));
+            edges.push(edge);
+        }
+
+        let teacher = Teacher::oracle(sc.teacher_error, cfg.seed ^ 0x7EAC);
+        let channel = Channel::new(sc.channel.clone(), cfg.seed ^ 0xC4A7);
+
+        let n_edges = sc.n_edges;
+        let mut fleet = Fleet {
+            edges,
+            metrics: vec![EdgeMetrics::default(); n_edges],
+            teacher,
+            channel,
+            generator,
+            standardizer,
+            edge_subjects,
+            drifted: false,
+            rng,
+            power: PowerModel::default(),
+            cycles: CycleModel::prototype().with_dims(
+                sc.synth.n_features,
+                sc.n_hidden,
+                sc.synth.n_classes,
+            ),
+            queue: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            pending_truth: vec![None; n_edges],
+            cfg,
+        };
+        // stagger edges across the period; schedule the drift
+        for id in 0..n_edges {
+            let phase =
+                fleet.cfg.scenario.event_period_s * (id as f64 / n_edges.max(1) as f64);
+            fleet.schedule(phase, Event::Sense { edge: id });
+        }
+        let drift_at = fleet.cfg.scenario.drift_at_s;
+        fleet.schedule(drift_at, Event::Drift);
+        Ok(fleet)
+    }
+
+    fn schedule(&mut self, at: f64, event: Event) {
+        self.seq += 1;
+        self.queue.push(Scheduled {
+            at,
+            seq: self.seq,
+            event,
+        });
+    }
+
+    fn sense_sample(&mut self, edge: usize) -> (Vec<f32>, usize) {
+        let (pre, post) = self.edge_subjects[edge];
+        let subject = if self.drifted { post } else { pre };
+        let class = self.rng.below(self.cfg.scenario.synth.n_classes);
+        let mut x = self.generator.sample(class, subject, &mut self.rng);
+        // standardize like the provisioning data
+        for ((v, &m), &s) in x
+            .iter_mut()
+            .zip(&self.standardizer.mean)
+            .zip(&self.standardizer.std)
+        {
+            *v = (*v - m) / s;
+        }
+        (x, class)
+    }
+
+    /// Run to the horizon; returns the report.
+    pub fn run(mut self) -> FleetReport {
+        let horizon = self.cfg.scenario.horizon_s;
+        while let Some(Scheduled { at, event, .. }) = self.queue.pop() {
+            if at > horizon {
+                break;
+            }
+            self.now = at;
+            match event {
+                Event::Drift => {
+                    self.drifted = true;
+                    if self.cfg.scenario.detector == DetectorKind::Oracle {
+                        for e in self.edges.iter_mut() {
+                            e.force_training();
+                        }
+                    }
+                }
+                Event::Sense { edge } => {
+                    self.handle_sense(edge);
+                    let next = self.now + self.cfg.scenario.event_period_s;
+                    self.schedule(next, Event::Sense { edge });
+                }
+                Event::Reply { edge, label } => {
+                    self.edges[edge].on_label(label);
+                    self.metrics[edge].trained = self.edges[edge].total_trained;
+                    self.metrics[edge].record_state(
+                        PowerState::Train,
+                        self.cycles.train_time_s(),
+                        self.power.power_mw(PowerState::Train),
+                    );
+                }
+                Event::QueryFailed { edge } => {
+                    self.edges[edge].on_query_failed();
+                    self.metrics[edge].query_failures += 1;
+                }
+            }
+        }
+        // close the books: remaining time is sleep
+        let mut report = FleetReport {
+            horizon_s: horizon,
+            per_edge: Vec::new(),
+            teacher_queries: self.teacher.queries_served,
+            channel_attempts: self.channel.total_attempts,
+            channel_failures: self.channel.total_failures,
+        };
+        for (i, mut m) in self.metrics.into_iter().enumerate() {
+            let active: f64 = m.state_time_s.values().sum();
+            m.record_state(
+                PowerState::Sleep,
+                (horizon - active).max(0.0),
+                self.power.power_mw(PowerState::Sleep),
+            );
+            m.queries = self.edges[i].total_queries;
+            m.skips = self.edges[i].total_skips;
+            m.trained = self.edges[i].total_trained;
+            m.mode_switches = self.edges[i].mode_switches;
+            report.per_edge.push(m);
+        }
+        report
+    }
+
+    fn handle_sense(&mut self, edge: usize) {
+        let (x, true_label) = self.sense_sample(edge);
+        self.metrics[edge].events += 1;
+        self.metrics[edge].record_state(
+            PowerState::Predict,
+            self.cycles.predict_time_s(),
+            self.power.power_mw(PowerState::Predict),
+        );
+        let (pred, action) = self.edges[edge].on_sense(&x);
+        self.metrics[edge].record_prediction(self.now, pred.class == true_label);
+        if action == StepAction::QueryTeacher {
+            let delivery = self.channel.transmit();
+            self.metrics[edge].radio_energy_mj += delivery.energy_mj;
+            if delivery.delivered {
+                let label = self.teacher.respond(
+                    &x,
+                    true_label,
+                    self.cfg.scenario.synth.n_classes,
+                );
+                self.pending_truth[edge] = Some(true_label);
+                let at = self.now + delivery.elapsed_s + self.teacher.service_time_s;
+                self.schedule(at, Event::Reply { edge, label });
+            } else {
+                let at = self.now + delivery.elapsed_s;
+                self.schedule(at, Event::QueryFailed { edge });
+            }
+        }
+    }
+
+    /// Threaded live-system mode: each edge on its own thread, the teacher
+    /// on another, queries over std mpsc. Event counts replace virtual
+    /// time (energy bookkeeping is the event-loop mode's job; this mode
+    /// demonstrates the concurrent topology works). Returns per-edge
+    /// (queries, trained) counters.
+    pub fn run_threaded(
+        scenario: &Scenario,
+        seed: u64,
+        events_per_edge: usize,
+    ) -> Result<Vec<(u64, u64)>> {
+        use std::sync::mpsc;
+
+        // Build the same fleet state, then split it across threads.
+        let fleet = Fleet::new(FleetConfig {
+            scenario: scenario.clone(),
+            seed,
+        })?;
+        let n_classes = scenario.synth.n_classes;
+        let mut teacher = fleet.teacher;
+
+        // teacher thread: serves (edge_id, x, true_label) -> label
+        type Query = (usize, Vec<f32>, usize);
+        let (q_tx, q_rx) = mpsc::channel::<(Query, mpsc::Sender<usize>)>();
+        let teacher_handle = std::thread::spawn(move || {
+            while let Ok(((_, x, truth), reply_tx)) = q_rx.recv() {
+                let label = teacher.respond(&x, truth, n_classes);
+                let _ = reply_tx.send(label);
+            }
+        });
+
+        let mut handles = Vec::new();
+        let generator_cfg = scenario.synth.clone();
+        for (id, mut edge) in fleet.edges.into_iter().enumerate() {
+            let q_tx = q_tx.clone();
+            let (pre, post) = fleet.edge_subjects[id];
+            let mean = fleet.standardizer.mean.clone();
+            let std = fleet.standardizer.std.clone();
+            let synth_cfg = generator_cfg.clone();
+            let drift_at = events_per_edge / 3;
+            handles.push(std::thread::spawn(move || -> (u64, u64) {
+                // per-thread generator (same family, thread-local stream)
+                let mut rng = crate::util::rng::Rng64::new(seed ^ (id as u64 + 1));
+                let mut data_rng =
+                    crate::util::rng::Rng64::new(seed ^ 0xDA7A);
+                let gen = SynthHar::new(synth_cfg.clone(), &mut data_rng);
+                for ev in 0..events_per_edge {
+                    let subject = if ev >= drift_at { post } else { pre };
+                    if ev == drift_at {
+                        edge.force_training();
+                    }
+                    let class = rng.below(synth_cfg.n_classes);
+                    let mut x = gen.sample(class, subject, &mut rng);
+                    for ((v, &m), &s) in x.iter_mut().zip(&mean).zip(&std) {
+                        *v = (*v - m) / s;
+                    }
+                    let (_, action) = edge.on_sense(&x);
+                    if action == StepAction::QueryTeacher {
+                        let (r_tx, r_rx) = mpsc::channel();
+                        q_tx.send(((id, x, class), r_tx)).expect("teacher gone");
+                        let label = r_rx.recv().expect("teacher reply");
+                        edge.on_label(label);
+                    }
+                }
+                (edge.total_queries, edge.total_trained)
+            }));
+        }
+        drop(q_tx);
+        let counters: Vec<(u64, u64)> = handles
+            .into_iter()
+            .map(|h| h.join().expect("edge thread panicked"))
+            .collect();
+        teacher_handle.join().expect("teacher thread panicked");
+        Ok(counters)
+    }
+
+    /// Current mode of an edge (tests).
+    pub fn edge_mode(&self, id: usize) -> Mode {
+        self.edges[id].mode
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_scenario() -> Scenario {
+        Scenario {
+            n_edges: 3,
+            n_hidden: 32,
+            event_period_s: 1.0,
+            horizon_s: 300.0,
+            drift_at_s: 60.0,
+            train_target: 120,
+            synth: SynthConfig {
+                n_features: 40,
+                n_classes: 4,
+                n_subjects: 30,
+                samples_per_cell: 10,
+                proto_sigma: 1.1,
+                confuse_frac: 0.04,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fleet_runs_and_recovers() {
+        let fleet = Fleet::new(FleetConfig {
+            scenario: small_scenario(),
+            seed: 1,
+        })
+        .unwrap();
+        let report = fleet.run();
+        assert_eq!(report.per_edge.len(), 3);
+        for m in &report.per_edge {
+            assert!(m.events >= 295, "events {}", m.events);
+            assert!(m.queries > 0, "drift must trigger queries");
+            assert!(m.trained > 0);
+            // accuracy at the end must be decent again (recovery)
+            let last = m.accuracy_trace.last().unwrap().1;
+            assert!(last > 0.7, "final rolling accuracy {last}");
+        }
+        assert_eq!(report.teacher_queries, report.total_queries());
+    }
+
+    #[test]
+    fn fleet_is_deterministic() {
+        let run = |seed| {
+            let fleet = Fleet::new(FleetConfig {
+                scenario: small_scenario(),
+                seed,
+            })
+            .unwrap();
+            let r = fleet.run();
+            (
+                r.total_queries(),
+                r.per_edge.iter().map(|m| m.trained).collect::<Vec<_>>(),
+            )
+        };
+        assert_eq!(run(7), run(7));
+    }
+
+    #[test]
+    fn energy_books_balance() {
+        let sc = small_scenario();
+        let horizon = sc.horizon_s;
+        let fleet = Fleet::new(FleetConfig {
+            scenario: sc,
+            seed: 2,
+        })
+        .unwrap();
+        let report = fleet.run();
+        for m in &report.per_edge {
+            let total_time: f64 = m.state_time_s.values().sum();
+            assert!(
+                (total_time - horizon).abs() < 1.0,
+                "state times must cover the horizon: {total_time} vs {horizon}"
+            );
+            // sleep-floor sanity: mean power ≥ retention, ≤ predict+BLE peak
+            let p = m.mean_power_mw(horizon);
+            assert!(p >= 1.33, "mean power {p}");
+        }
+    }
+
+    #[test]
+    fn lossy_channel_causes_skips_not_deadlock() {
+        let mut sc = small_scenario();
+        sc.channel = ChannelConfig {
+            loss_prob: 0.4,
+            max_retries: 0,
+            ..Default::default()
+        };
+        let fleet = Fleet::new(FleetConfig {
+            scenario: sc,
+            seed: 3,
+        })
+        .unwrap();
+        let report = fleet.run();
+        assert!(report.channel_failures > 0);
+        for m in &report.per_edge {
+            assert!(m.query_failures > 0, "failures must surface per edge");
+            assert!(m.trained > 0, "training still progresses");
+        }
+    }
+
+    #[test]
+    fn centroid_detector_triggers_training_organically() {
+        let mut sc = small_scenario();
+        sc.detector = DetectorKind::Centroid;
+        sc.horizon_s = 400.0;
+        let fleet = Fleet::new(FleetConfig {
+            scenario: sc,
+            seed: 4,
+        })
+        .unwrap();
+        let report = fleet.run();
+        let total_trained: u64 = report.per_edge.iter().map(|m| m.trained).sum();
+        assert!(
+            total_trained > 50,
+            "organic detection must kick off retraining (trained {total_trained})"
+        );
+    }
+
+    #[test]
+    fn threaded_mode_matches_topology() {
+        let sc = small_scenario();
+        let counters = Fleet::run_threaded(&sc, 5, 300).unwrap();
+        assert_eq!(counters.len(), 3);
+        for (queries, trained) in counters {
+            assert!(queries > 0, "threaded edges must query");
+            assert!(trained > 0);
+        }
+    }
+}

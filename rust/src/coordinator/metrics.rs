@@ -1,0 +1,155 @@
+//! Per-edge and fleet-level accounting: queries, energy, accuracy traces.
+
+use crate::hw::PowerState;
+use std::collections::HashMap;
+
+/// Energy/activity ledger for one edge device.
+#[derive(Clone, Debug, Default)]
+pub struct EdgeMetrics {
+    pub events: u64,
+    pub queries: u64,
+    pub skips: u64,
+    pub trained: u64,
+    pub query_failures: u64,
+    pub mode_switches: u64,
+    /// Core energy by state [mJ].
+    pub core_energy_mj: f64,
+    /// Radio energy [mJ].
+    pub radio_energy_mj: f64,
+    /// Time spent per state [s].
+    pub state_time_s: HashMap<&'static str, f64>,
+    /// (virtual time, rolling accuracy) checkpoints.
+    pub accuracy_trace: Vec<(f64, f64)>,
+    /// Rolling prediction-correctness window.
+    correct_window: Vec<bool>,
+}
+
+impl EdgeMetrics {
+    pub fn record_state(&mut self, state: PowerState, secs: f64, power_mw: f64) {
+        let name = match state {
+            PowerState::Sleep => "sleep",
+            PowerState::Idle => "idle",
+            PowerState::Predict => "predict",
+            PowerState::Train => "train",
+        };
+        *self.state_time_s.entry(name).or_insert(0.0) += secs;
+        self.core_energy_mj += power_mw * secs;
+    }
+
+    pub fn record_prediction(&mut self, now_s: f64, correct: bool) {
+        self.correct_window.push(correct);
+        if self.correct_window.len() >= 50 {
+            let acc = self.correct_window.iter().filter(|&&c| c).count() as f64
+                / self.correct_window.len() as f64;
+            self.accuracy_trace.push((now_s, acc));
+            self.correct_window.clear();
+        }
+    }
+
+    /// Mean power over a horizon [mW].
+    pub fn mean_power_mw(&self, horizon_s: f64) -> f64 {
+        if horizon_s <= 0.0 {
+            0.0
+        } else {
+            (self.core_energy_mj + self.radio_energy_mj) / horizon_s
+        }
+    }
+
+    /// Communication volume relative to always-querying on every event.
+    pub fn comm_fraction(&self) -> f64 {
+        let considered = self.queries + self.skips;
+        if considered == 0 {
+            0.0
+        } else {
+            self.queries as f64 / considered as f64
+        }
+    }
+}
+
+/// Fleet-level rollup.
+#[derive(Clone, Debug, Default)]
+pub struct FleetReport {
+    pub horizon_s: f64,
+    pub per_edge: Vec<EdgeMetrics>,
+    pub teacher_queries: u64,
+    pub channel_attempts: u64,
+    pub channel_failures: u64,
+}
+
+impl FleetReport {
+    pub fn total_queries(&self) -> u64 {
+        self.per_edge.iter().map(|m| m.queries).sum()
+    }
+
+    pub fn total_energy_mj(&self) -> f64 {
+        self.per_edge
+            .iter()
+            .map(|m| m.core_energy_mj + m.radio_energy_mj)
+            .sum()
+    }
+
+    pub fn mean_edge_power_mw(&self) -> f64 {
+        if self.per_edge.is_empty() || self.horizon_s <= 0.0 {
+            return 0.0;
+        }
+        self.total_energy_mj() / self.horizon_s / self.per_edge.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_accounting_accumulates() {
+        let mut m = EdgeMetrics::default();
+        m.record_state(PowerState::Sleep, 2.0, 1.33);
+        m.record_state(PowerState::Predict, 0.036, 3.39);
+        assert!((m.core_energy_mj - (2.0 * 1.33 + 0.036 * 3.39)).abs() < 1e-9);
+        assert_eq!(m.state_time_s["sleep"], 2.0);
+    }
+
+    #[test]
+    fn accuracy_trace_checkpoints_every_50() {
+        let mut m = EdgeMetrics::default();
+        for i in 0..125 {
+            m.record_prediction(i as f64, i % 2 == 0);
+        }
+        assert_eq!(m.accuracy_trace.len(), 2);
+        let (_, acc) = m.accuracy_trace[0];
+        assert!((acc - 0.5).abs() < 0.03);
+    }
+
+    #[test]
+    fn comm_fraction() {
+        let m = EdgeMetrics {
+            queries: 30,
+            skips: 70,
+            ..Default::default()
+        };
+        assert!((m.comm_fraction() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_rollup() {
+        let mut r = FleetReport {
+            horizon_s: 10.0,
+            ..Default::default()
+        };
+        r.per_edge.push(EdgeMetrics {
+            core_energy_mj: 20.0,
+            radio_energy_mj: 10.0,
+            queries: 5,
+            ..Default::default()
+        });
+        r.per_edge.push(EdgeMetrics {
+            core_energy_mj: 10.0,
+            radio_energy_mj: 0.0,
+            queries: 2,
+            ..Default::default()
+        });
+        assert_eq!(r.total_queries(), 7);
+        assert!((r.total_energy_mj() - 40.0).abs() < 1e-12);
+        assert!((r.mean_edge_power_mw() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,26 @@
+//! L3 coordinator — the paper's system layer (Figure 2(a), Algorithm 1).
+//!
+//! A single **teacher** (mobile computer with accurate labels) serves
+//! multiple **edge devices** over a lossy BLE channel. Each edge runs the
+//! Algorithm-1 state machine around its tiny ODL core: sense → (predicting
+//! mode: drift check → predict) / (training mode: label acquisition with
+//! auto-pruning → sequential train → done check).
+//!
+//! [`fleet::Fleet`] is a deterministic discrete-event simulator over
+//! virtual time that wires edges, channel, and teacher together and
+//! accounts energy with the [`crate::hw`] models — the substrate for the
+//! fleet examples and the power case study. [`fleet::Fleet::run_threaded`]
+//! offers a std-thread real-time-flavoured mode (tokio is not in the
+//! offline vendor set; the event loop is explicit instead).
+
+pub mod channel;
+pub mod edge;
+pub mod fleet;
+pub mod metrics;
+pub mod teacher;
+
+pub use channel::{Channel, ChannelConfig};
+pub use edge::{EdgeConfig, EdgeDevice, Mode, StepAction};
+pub use fleet::{Fleet, FleetConfig, Scenario};
+pub use metrics::{EdgeMetrics, FleetReport};
+pub use teacher::{Teacher, TeacherKind};

@@ -1,0 +1,156 @@
+//! The teacher device (Figure 2(a)): "a mobile computer that has an
+//! ensemble of highly accurate models".
+//!
+//! The paper's experiments use dataset labels as the teacher's predictions
+//! (§3: "Labels of these datasets are used as teacher's predicted
+//! labels"), so the default teacher is a ground-truth oracle with an
+//! optional error rate. A real model ensemble (majority vote over OS-ELM
+//! members trained on bootstrap resamples) is provided for the
+//! teacher-quality ablation.
+
+use crate::data::Dataset;
+use crate::odl::{AlphaKind, OsElm, OsElmConfig};
+use crate::util::rng::Rng64;
+use crate::util::stats::argmax;
+
+/// Which teacher implementation.
+pub enum TeacherKind {
+    /// Ground-truth labels with an error probability (0 = paper protocol).
+    Oracle { error_rate: f64 },
+    /// Majority vote of an OS-ELM ensemble trained on the training pool.
+    Ensemble { members: Vec<OsElm> },
+}
+
+/// The teacher service.
+pub struct Teacher {
+    kind: TeacherKind,
+    rng: Rng64,
+    /// Service time per query [s] (inference + scheduling on the mobile).
+    pub service_time_s: f64,
+    pub queries_served: u64,
+}
+
+impl Teacher {
+    pub fn oracle(error_rate: f64, seed: u64) -> Teacher {
+        Teacher {
+            kind: TeacherKind::Oracle { error_rate },
+            rng: Rng64::new(seed),
+            service_time_s: 0.002,
+            queries_served: 0,
+        }
+    }
+
+    /// Train an ensemble teacher on the given pool.
+    pub fn ensemble(
+        pool: &Dataset,
+        n_members: usize,
+        n_hidden: usize,
+        seed: u64,
+    ) -> anyhow::Result<Teacher> {
+        let mut rng = Rng64::new(seed);
+        let mut members = Vec::with_capacity(n_members);
+        for k in 0..n_members {
+            let cfg = OsElmConfig {
+                n_in: pool.n_features(),
+                n_hidden,
+                n_out: pool.n_classes,
+                alpha: AlphaKind::Hash,
+                ..Default::default()
+            };
+            let mut m = OsElm::new(cfg, &mut rng, (seed as u16).wrapping_add(k as u16 * 17));
+            // bootstrap resample
+            let rows: Vec<usize> = (0..pool.len()).map(|_| rng.below(pool.len())).collect();
+            let boot = pool.take(&rows);
+            m.init_batch(&boot.xs, &boot.labels)?;
+            members.push(m);
+        }
+        Ok(Teacher {
+            kind: TeacherKind::Ensemble { members },
+            rng,
+            service_time_s: 0.010,
+            queries_served: 0,
+        })
+    }
+
+    /// Answer a label query. `true_label` feeds the oracle (and metrics);
+    /// an ensemble teacher ignores it and runs its models.
+    pub fn respond(&mut self, x: &[f32], true_label: usize, n_classes: usize) -> usize {
+        self.queries_served += 1;
+        match &mut self.kind {
+            TeacherKind::Oracle { error_rate } => {
+                if *error_rate > 0.0 && self.rng.bernoulli(*error_rate) {
+                    let mut l = self.rng.below(n_classes - 1);
+                    if l >= true_label {
+                        l += 1;
+                    }
+                    l
+                } else {
+                    true_label
+                }
+            }
+            TeacherKind::Ensemble { members } => {
+                let mut votes = vec![0usize; n_classes];
+                for m in members.iter_mut() {
+                    votes[m.predict(x).class] += 1;
+                }
+                argmax(&votes.iter().map(|&v| v as f32).collect::<Vec<_>>())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{SynthConfig, SynthHar};
+
+    #[test]
+    fn oracle_returns_truth() {
+        let mut t = Teacher::oracle(0.0, 1);
+        for c in 0..6 {
+            assert_eq!(t.respond(&[], c, 6), c);
+        }
+        assert_eq!(t.queries_served, 6);
+    }
+
+    #[test]
+    fn noisy_oracle_errs_at_rate() {
+        let mut t = Teacher::oracle(0.3, 2);
+        let n = 2000;
+        let wrong = (0..n).filter(|_| t.respond(&[], 2, 6) != 2).count();
+        let rate = wrong as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.04, "rate {rate}");
+    }
+
+    #[test]
+    fn noisy_oracle_never_returns_out_of_range() {
+        let mut t = Teacher::oracle(1.0, 3);
+        for _ in 0..200 {
+            let l = t.respond(&[], 5, 6);
+            assert!(l < 6 && l != 5);
+        }
+    }
+
+    #[test]
+    fn ensemble_teacher_is_accurate() {
+        let mut rng = Rng64::new(7);
+        let cfg = SynthConfig {
+            n_features: 40,
+            n_classes: 4,
+            n_subjects: 10,
+            samples_per_cell: 20,
+            proto_sigma: 1.1,
+            confuse_frac: 0.0,
+            ..Default::default()
+        };
+        let pool = SynthHar::new(cfg, &mut rng).generate(&mut rng);
+        let mut teacher = Teacher::ensemble(&pool, 3, 64, 11).unwrap();
+        let correct = (0..200)
+            .filter(|&r| {
+                teacher.respond(pool.xs.row(r), pool.labels[r], pool.n_classes)
+                    == pool.labels[r]
+            })
+            .count();
+        assert!(correct > 170, "ensemble accuracy {correct}/200");
+    }
+}

@@ -1,0 +1,189 @@
+//! PCA by power iteration with deflation — enough to regenerate Figure 1's
+//! 2-D per-class visualizations without an external eigensolver.
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng64;
+
+/// Result of a k-component PCA.
+#[derive(Clone, Debug)]
+pub struct Pca {
+    /// k × n principal directions (rows, unit norm).
+    pub components: Mat,
+    /// Explained variance per component.
+    pub eigenvalues: Vec<f32>,
+    /// Feature means removed before projection.
+    pub mean: Vec<f32>,
+}
+
+impl Pca {
+    /// Fit `k` components on the rows of `xs` via covariance-free power
+    /// iteration (works on the n×n Gram of centered data; n ≤ 561 here).
+    pub fn fit(xs: &Mat, k: usize, rng: &mut Rng64) -> Pca {
+        let n = xs.cols;
+        let rows = xs.rows.max(1);
+        // center
+        let mut mean = vec![0.0f32; n];
+        for r in 0..xs.rows {
+            for (m, &v) in mean.iter_mut().zip(xs.row(r)) {
+                *m += v / rows as f32;
+            }
+        }
+        let mut centered = xs.clone();
+        for r in 0..centered.rows {
+            let cols = centered.cols;
+            let row = &mut centered.data[r * cols..(r + 1) * cols];
+            for (x, &m) in row.iter_mut().zip(&mean) {
+                *x -= m;
+            }
+        }
+        // covariance (n×n)
+        let mut cov = centered.gram();
+        for v in cov.data.iter_mut() {
+            *v /= rows as f32;
+        }
+
+        let mut components = Mat::zeros(k, n);
+        let mut eigenvalues = Vec::with_capacity(k);
+        for comp in 0..k {
+            // power iteration
+            let mut v: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            normalize(&mut v);
+            let mut lambda = 0.0f32;
+            for _ in 0..200 {
+                let mut w = cov.matvec(&v);
+                let nrm = norm(&w);
+                if nrm < 1e-12 {
+                    break;
+                }
+                for x in w.iter_mut() {
+                    *x /= nrm;
+                }
+                let delta: f32 = v.iter().zip(&w).map(|(a, b)| (a - b).abs()).sum();
+                v = w;
+                lambda = nrm;
+                if delta < 1e-7 {
+                    break;
+                }
+            }
+            // deflate: cov ← cov − λ v vᵀ
+            for i in 0..n {
+                let vi = v[i] * lambda;
+                let row = &mut cov.data[i * n..(i + 1) * n];
+                for (j, x) in row.iter_mut().enumerate() {
+                    *x -= vi * v[j];
+                }
+            }
+            components.row_mut(comp).copy_from_slice(&v);
+            eigenvalues.push(lambda);
+        }
+        Pca {
+            components,
+            eigenvalues,
+            mean,
+        }
+    }
+
+    /// Project rows of `xs` onto the components → (rows × k).
+    pub fn transform(&self, xs: &Mat) -> Mat {
+        let k = self.components.rows;
+        let mut out = Mat::zeros(xs.rows, k);
+        let mut centered = vec![0.0f32; xs.cols];
+        for r in 0..xs.rows {
+            for ((c, &x), &m) in centered.iter_mut().zip(xs.row(r)).zip(&self.mean) {
+                *c = x - m;
+            }
+            for comp in 0..k {
+                *out.at_mut(r, comp) =
+                    crate::linalg::mat::dot(&centered, self.components.row(comp));
+            }
+        }
+        out
+    }
+}
+
+fn norm(v: &[f32]) -> f32 {
+    v.iter().map(|x| x * x).sum::<f32>().sqrt()
+}
+
+fn normalize(v: &mut [f32]) {
+    let n = norm(v);
+    if n > 1e-12 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Data with a known dominant direction.
+    fn anisotropic(rng: &mut Rng64, rows: usize) -> Mat {
+        let mut xs = Mat::zeros(rows, 4);
+        for r in 0..rows {
+            let t = rng.normal() as f32 * 5.0; // dominant axis = (1,1,0,0)/√2
+            let s = rng.normal() as f32 * 0.5;
+            *xs.at_mut(r, 0) = t + rng.normal() as f32 * 0.1;
+            *xs.at_mut(r, 1) = t + rng.normal() as f32 * 0.1;
+            *xs.at_mut(r, 2) = s;
+            *xs.at_mut(r, 3) = rng.normal() as f32 * 0.1;
+        }
+        xs
+    }
+
+    #[test]
+    fn finds_dominant_direction() {
+        let mut rng = Rng64::new(5);
+        let xs = anisotropic(&mut rng, 400);
+        let pca = Pca::fit(&xs, 2, &mut rng);
+        let c0 = pca.components.row(0);
+        // dominant direction ≈ ±(1,1,0,0)/√2
+        let expected = 1.0 / 2f32.sqrt();
+        assert!(
+            (c0[0].abs() - expected).abs() < 0.05 && (c0[1].abs() - expected).abs() < 0.05,
+            "c0 = {:?}",
+            c0
+        );
+        assert!(pca.eigenvalues[0] > pca.eigenvalues[1] * 5.0);
+    }
+
+    #[test]
+    fn components_are_orthonormal() {
+        let mut rng = Rng64::new(6);
+        let xs = anisotropic(&mut rng, 300);
+        let pca = Pca::fit(&xs, 3, &mut rng);
+        for i in 0..3 {
+            let ci = pca.components.row(i);
+            assert!((norm(ci) - 1.0).abs() < 1e-3);
+            for j in 0..i {
+                let d = crate::linalg::mat::dot(ci, pca.components.row(j));
+                assert!(d.abs() < 0.02, "components {i},{j} not orthogonal: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn transform_centers_data() {
+        let mut rng = Rng64::new(7);
+        let xs = anisotropic(&mut rng, 200);
+        let pca = Pca::fit(&xs, 2, &mut rng);
+        let proj = pca.transform(&xs);
+        for c in 0..2 {
+            let mean: f32 = (0..proj.rows).map(|r| proj.at(r, c)).sum::<f32>() / proj.rows as f32;
+            assert!(mean.abs() < 0.1, "projected mean {mean}");
+        }
+    }
+
+    #[test]
+    fn projected_variance_matches_eigenvalue() {
+        let mut rng = Rng64::new(8);
+        let xs = anisotropic(&mut rng, 500);
+        let pca = Pca::fit(&xs, 1, &mut rng);
+        let proj = pca.transform(&xs);
+        let var: f32 =
+            (0..proj.rows).map(|r| proj.at(r, 0).powi(2)).sum::<f32>() / proj.rows as f32;
+        let rel = (var - pca.eigenvalues[0]).abs() / pca.eigenvalues[0];
+        assert!(rel < 0.05, "variance {var} vs eigenvalue {}", pca.eigenvalues[0]);
+    }
+}

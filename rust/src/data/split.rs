@@ -1,0 +1,120 @@
+//! The paper's drift-split protocol (§3).
+//!
+//! From the full pool: samples of subjects {9, 14, 16, 19, 25} form the
+//! **test1** (post-drift) set; everything else splits into **training**
+//! and **test0** (pre-drift test). During the ODL phase, ≈60 % of test1 is
+//! streamed for retraining; the remaining 40 % is the post-drift test set.
+
+use super::Dataset;
+use crate::util::rng::Rng64;
+
+/// The human subjects removed from train/test0 and used as the drifted
+/// distribution (paper §3, chosen there from the Figure-1 dimensionality
+/// reduction).
+pub const HELD_OUT_SUBJECTS: [usize; 5] = [9, 14, 16, 19, 25];
+
+/// Fraction of test1 streamed for ODL retraining (paper: "approximately 60%").
+pub const ODL_FRACTION: f64 = 0.6;
+
+/// Materialized drift split.
+#[derive(Clone, Debug)]
+pub struct DriftSplit {
+    /// Initial-training set (in-distribution subjects).
+    pub train: Dataset,
+    /// Pre-drift test set (in-distribution subjects, disjoint from train).
+    pub test0: Dataset,
+    /// ODL retraining stream (≈60 % of held-out-subject samples).
+    pub odl_stream: Dataset,
+    /// Post-drift test set (remaining held-out-subject samples).
+    pub test1: Dataset,
+}
+
+impl DriftSplit {
+    /// Build the paper's split from a pool. `train_frac` is the train share
+    /// of the in-distribution data (UCI uses ≈70/30 train/test).
+    pub fn build(pool: &Dataset, train_frac: f64, rng: &mut Rng64) -> DriftSplit {
+        let in_dist = pool.filter(|_, s| !HELD_OUT_SUBJECTS.contains(&s));
+        let held_out = pool.filter(|_, s| HELD_OUT_SUBJECTS.contains(&s));
+
+        let mut in_dist = in_dist;
+        in_dist.shuffle(rng);
+        let k = (in_dist.len() as f64 * train_frac).round() as usize;
+        let (train, test0) = in_dist.split_at(k);
+
+        let mut held_out = held_out;
+        held_out.shuffle(rng);
+        let k1 = (held_out.len() as f64 * ODL_FRACTION).round() as usize;
+        let (odl_stream, test1) = held_out.split_at(k1);
+
+        DriftSplit {
+            train,
+            test0,
+            odl_stream,
+            test1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{SynthConfig, SynthHar};
+
+    fn pool() -> Dataset {
+        let mut rng = Rng64::new(4);
+        let cfg = SynthConfig {
+            n_features: 30,
+            n_classes: 3,
+            n_subjects: 30,
+            samples_per_cell: 6,
+            ..Default::default()
+        };
+        let gen = SynthHar::new(cfg, &mut rng);
+        gen.generate(&mut rng)
+    }
+
+    #[test]
+    fn split_is_a_partition() {
+        let p = pool();
+        let s = DriftSplit::build(&p, 0.7, &mut Rng64::new(1));
+        let total = s.train.len() + s.test0.len() + s.odl_stream.len() + s.test1.len();
+        assert_eq!(total, p.len());
+    }
+
+    #[test]
+    fn held_out_subjects_only_in_post_drift_sets() {
+        let p = pool();
+        let s = DriftSplit::build(&p, 0.7, &mut Rng64::new(2));
+        for subj in &s.train.subjects {
+            assert!(!HELD_OUT_SUBJECTS.contains(subj));
+        }
+        for subj in &s.test0.subjects {
+            assert!(!HELD_OUT_SUBJECTS.contains(subj));
+        }
+        for subj in &s.odl_stream.subjects {
+            assert!(HELD_OUT_SUBJECTS.contains(subj));
+        }
+        for subj in &s.test1.subjects {
+            assert!(HELD_OUT_SUBJECTS.contains(subj));
+        }
+    }
+
+    #[test]
+    fn odl_fraction_close_to_sixty_percent() {
+        let p = pool();
+        let s = DriftSplit::build(&p, 0.7, &mut Rng64::new(3));
+        let held_total = (s.odl_stream.len() + s.test1.len()) as f64;
+        let frac = s.odl_stream.len() as f64 / held_total;
+        assert!((frac - ODL_FRACTION).abs() < 0.02, "frac {frac}");
+    }
+
+    #[test]
+    fn different_seeds_shuffle_differently() {
+        let p = pool();
+        let a = DriftSplit::build(&p, 0.7, &mut Rng64::new(10));
+        let b = DriftSplit::build(&p, 0.7, &mut Rng64::new(11));
+        assert_ne!(a.train.labels, b.train.labels);
+        // …but sizes are identical
+        assert_eq!(a.train.len(), b.train.len());
+    }
+}

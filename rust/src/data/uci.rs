@@ -1,0 +1,166 @@
+//! Loader for the real UCI HAR dataset (optional).
+//!
+//! If `$HAR_DATASET_DIR` points at the extracted "UCI HAR Dataset"
+//! directory (containing `train/X_train.txt`, `train/y_train.txt`,
+//! `train/subject_train.txt` and the `test/` equivalents), every
+//! experiment can run on the real data instead of the synthetic
+//! substitute. Class labels are remapped 1..6 → 0..5.
+
+use super::Dataset;
+use crate::linalg::Mat;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// Load train+test into a single pool (the paper re-splits by subject).
+pub fn load_pool(dir: &Path) -> Result<Dataset> {
+    let train = load_part(dir, "train")?;
+    let test = load_part(dir, "test")?;
+    Ok(concat(train, test))
+}
+
+/// Try the environment variable; Ok(None) if unset.
+pub fn load_from_env() -> Result<Option<Dataset>> {
+    match std::env::var("HAR_DATASET_DIR") {
+        Ok(dir) if !dir.is_empty() => {
+            let d = load_pool(Path::new(&dir))
+                .with_context(|| format!("loading UCI HAR from {dir}"))?;
+            Ok(Some(d))
+        }
+        _ => Ok(None),
+    }
+}
+
+fn load_part(dir: &Path, part: &str) -> Result<Dataset> {
+    let x_path = dir.join(part).join(format!("X_{part}.txt"));
+    let y_path = dir.join(part).join(format!("y_{part}.txt"));
+    let s_path = dir.join(part).join(format!("subject_{part}.txt"));
+
+    let xs = parse_matrix(&std::fs::read_to_string(&x_path)
+        .with_context(|| format!("reading {}", x_path.display()))?)?;
+    let labels: Vec<usize> = parse_ints(&std::fs::read_to_string(&y_path)?)?
+        .iter()
+        .map(|&v| {
+            ensure!((1..=6).contains(&v), "label {} out of 1..6", v);
+            Ok(v as usize - 1)
+        })
+        .collect::<Result<_>>()?;
+    let subjects: Vec<usize> = parse_ints(&std::fs::read_to_string(&s_path)?)?
+        .iter()
+        .map(|&v| v as usize)
+        .collect();
+
+    ensure!(
+        xs.rows == labels.len() && xs.rows == subjects.len(),
+        "row count mismatch: X {} / y {} / subject {}",
+        xs.rows,
+        labels.len(),
+        subjects.len()
+    );
+    ensure!(xs.cols == 561, "expected 561 features, got {}", xs.cols);
+    Ok(Dataset {
+        xs,
+        labels,
+        subjects,
+        n_classes: 6,
+    })
+}
+
+fn parse_matrix(text: &str) -> Result<Mat> {
+    let mut data = Vec::new();
+    let mut rows = 0usize;
+    let mut cols = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let vals: Vec<f32> = line
+            .split_ascii_whitespace()
+            .map(|t| t.parse::<f32>().with_context(|| format!("line {}", lineno + 1)))
+            .collect::<Result<_>>()?;
+        if rows == 0 {
+            cols = vals.len();
+        } else {
+            ensure!(vals.len() == cols, "ragged row at line {}", lineno + 1);
+        }
+        data.extend_from_slice(&vals);
+        rows += 1;
+    }
+    ensure!(rows > 0, "empty matrix file");
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+fn parse_ints(text: &str) -> Result<Vec<i64>> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| l.trim().parse::<i64>().context("bad integer"))
+        .collect()
+}
+
+fn concat(a: Dataset, b: Dataset) -> Dataset {
+    assert_eq!(a.xs.cols, b.xs.cols);
+    let mut data = a.xs.data;
+    data.extend_from_slice(&b.xs.data);
+    let mut labels = a.labels;
+    labels.extend_from_slice(&b.labels);
+    let mut subjects = a.subjects;
+    subjects.extend_from_slice(&b.subjects);
+    Dataset {
+        xs: Mat::from_vec(a.xs.rows + b.xs.rows, b.xs.cols, data),
+        labels,
+        subjects,
+        n_classes: a.n_classes.max(b.n_classes),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_matrix_basic() {
+        let m = parse_matrix("1.0 2.0 3.0\n4.0 5.0 6.0\n").unwrap();
+        assert_eq!((m.rows, m.cols), (2, 3));
+        assert_eq!(m.at(1, 2), 6.0);
+    }
+
+    #[test]
+    fn parse_matrix_rejects_ragged() {
+        assert!(parse_matrix("1 2\n3\n").is_err());
+        assert!(parse_matrix("").is_err());
+    }
+
+    #[test]
+    fn parse_ints_basic() {
+        assert_eq!(parse_ints("1\n2\n\n3\n").unwrap(), vec![1, 2, 3]);
+        assert!(parse_ints("x\n").is_err());
+    }
+
+    #[test]
+    fn load_from_env_none_when_unset() {
+        // NB: test environment must not define HAR_DATASET_DIR
+        if std::env::var("HAR_DATASET_DIR").is_err() {
+            assert!(load_from_env().unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn load_part_roundtrip_from_tempdir() {
+        let dir = std::env::temp_dir().join(format!("uci_test_{}", std::process::id()));
+        let train = dir.join("train");
+        std::fs::create_dir_all(&train).unwrap();
+        // two samples, 561 features of zeros except first
+        let mut xrow = vec!["0.0"; 561];
+        xrow[0] = "1.5";
+        let line = xrow.join(" ");
+        std::fs::write(train.join("X_train.txt"), format!("{line}\n{line}\n")).unwrap();
+        std::fs::write(train.join("y_train.txt"), "1\n6\n").unwrap();
+        std::fs::write(train.join("subject_train.txt"), "9\n25\n").unwrap();
+        let d = load_part(&dir, "train").unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.labels, vec![0, 5]);
+        assert_eq!(d.subjects, vec![9, 25]);
+        assert_eq!(d.xs.at(0, 0), 1.5);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,311 @@
+//! Data-drift detection (Algorithm 1, line 3).
+//!
+//! The paper treats the detector as pluggable ("Existing data drift
+//! detection algorithms [6] can be used") and, in the experiments, the
+//! drift moment is defined by the protocol itself (the switch to the
+//! held-out-subject stream). Accordingly:
+//!
+//! * [`OracleDetector`] — protocol-exact: drift is signalled externally
+//!   (used by the Table-3 / Figure-3 harnesses, and by a fleet scenario
+//!   script that flips the stream).
+//! * [`CentroidDetector`] — a lightweight runnable detector in the spirit
+//!   of Yamada et al. 2023 [6]: EWMA of the distance between incoming
+//!   features and a running centroid of recent inputs; flags drift when
+//!   the normalized distance exceeds a threshold for `patience`
+//!   consecutive samples.
+//! * [`ConfidenceDetector`] — model-aware alternative: EWMA of the P1P2
+//!   confidence; drift when confidence collapses (used in ablations).
+
+use crate::odl::activation::Prediction;
+
+/// Common interface: feed one observation per event, query the flag.
+pub trait DriftDetector {
+    /// Update with the current input features and the local prediction.
+    fn observe(&mut self, x: &[f32], pred: Option<&Prediction>);
+    /// Is drift currently detected?
+    fn is_drift(&self) -> bool;
+    /// Reset after retraining completes (mode switches back to predicting).
+    fn reset(&mut self);
+}
+
+/// Externally scripted drift (protocol-exact for the paper's evaluation).
+#[derive(Clone, Debug, Default)]
+pub struct OracleDetector {
+    flag: bool,
+}
+
+impl OracleDetector {
+    pub fn new() -> Self {
+        Self { flag: false }
+    }
+
+    /// Script hook: raise/clear the drift flag.
+    pub fn set(&mut self, drift: bool) {
+        self.flag = drift;
+    }
+}
+
+impl DriftDetector for OracleDetector {
+    fn observe(&mut self, _x: &[f32], _pred: Option<&Prediction>) {}
+
+    fn is_drift(&self) -> bool {
+        self.flag
+    }
+
+    fn reset(&mut self) {
+        self.flag = false;
+    }
+}
+
+/// Centroid-distance detector (lightweight, feature-space) — a
+/// Page–Hinkley/CUSUM test on the sample-to-centroid distance.
+///
+/// Tracks the EWMA centroid of inputs plus the mean/variance of the
+/// sample-to-centroid distance, standardizes each new distance to a
+/// z-score, and accumulates `S ← max(0, S + z − k)`. Drift is flagged
+/// when `S > h`. (Instantaneous thresholds are too blunt in high
+/// dimension: a subject shift worth detecting moves the distance by only
+/// ~1–2σ per sample — persistent, but never extreme; CUSUM integrates
+/// exactly that kind of evidence, and is what the lightweight literature
+/// [6] builds on.)
+#[derive(Clone, Debug)]
+pub struct CentroidDetector {
+    /// Running centroid of inputs (slow EWMA).
+    centroid: Vec<f32>,
+    /// Running mean / variance of the distance (EWMA).
+    mean_dist: f32,
+    var_dist: f32,
+    /// EWMA rates.
+    alpha_centroid: f32,
+    alpha_dist: f32,
+    /// CUSUM drift allowance (z-units tolerated per sample).
+    k: f32,
+    /// CUSUM decision threshold.
+    h: f32,
+    /// Accumulated evidence S.
+    cusum: f32,
+    warmup_left: u32,
+    flag: bool,
+}
+
+impl CentroidDetector {
+    pub fn new(n_features: usize) -> Self {
+        Self {
+            centroid: vec![0.0; n_features],
+            mean_dist: 0.0,
+            var_dist: 0.0,
+            alpha_centroid: 0.02,
+            alpha_dist: 0.02,
+            k: 0.75,
+            h: 12.0,
+            cusum: 0.0,
+            warmup_left: 50,
+            flag: false,
+        }
+    }
+
+    /// Override the CUSUM allowance/threshold and warmup.
+    pub fn with_params(mut self, k: f32, h: f32, warmup: u32) -> Self {
+        self.k = k;
+        self.h = h;
+        self.warmup_left = warmup;
+        self
+    }
+
+    fn distance(&self, x: &[f32]) -> f32 {
+        x.iter()
+            .zip(&self.centroid)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    fn track(&mut self, x: &[f32], d: f32, rate_boost: f32) {
+        let ac = self.alpha_centroid * rate_boost;
+        for (c, &xi) in self.centroid.iter_mut().zip(x) {
+            *c += ac * (xi - *c);
+        }
+        let ad = self.alpha_dist * rate_boost;
+        let delta = d - self.mean_dist;
+        self.mean_dist += ad * delta;
+        self.var_dist += ad * (delta * delta - self.var_dist);
+    }
+}
+
+impl DriftDetector for CentroidDetector {
+    fn observe(&mut self, x: &[f32], _pred: Option<&Prediction>) {
+        assert_eq!(x.len(), self.centroid.len());
+        let d = self.distance(x);
+        if self.warmup_left > 0 {
+            // learn the in-distribution geometry first (faster rates)
+            self.warmup_left -= 1;
+            self.track(x, d, 8.0);
+            return;
+        }
+        let std = self.var_dist.max(1e-12).sqrt();
+        // clip: a single extreme sample is an outlier, not drift evidence
+        let z = ((d - self.mean_dist) / std).clamp(-3.0, 3.0);
+        self.cusum = (self.cusum + z - self.k).max(0.0);
+        if self.cusum > self.h {
+            self.flag = true;
+        }
+        // Track the reference distribution only while no evidence is
+        // accumulating (otherwise the EWMA would absorb the drift before
+        // CUSUM can fire). Tuned by Monte-Carlo (see DESIGN.md): FP ≈ 0
+        // over 3 000 stationary samples, median delay ≈ 14 events for a
+        // subject-shift-sized change.
+        if self.cusum < 2.0 {
+            self.track(x, d, 1.0);
+        }
+    }
+
+    fn is_drift(&self) -> bool {
+        self.flag
+    }
+
+    fn reset(&mut self) {
+        self.flag = false;
+        self.cusum = 0.0;
+        // re-learn geometry of the (new) distribution quickly
+        self.warmup_left = 50;
+    }
+}
+
+/// Confidence-collapse detector (uses the model's own P1P2).
+#[derive(Clone, Debug)]
+pub struct ConfidenceDetector {
+    ewma: f32,
+    alpha: f32,
+    threshold: f32,
+    warmup_left: u32,
+    flag: bool,
+}
+
+impl ConfidenceDetector {
+    pub fn new(threshold: f32) -> Self {
+        Self {
+            ewma: 1.0,
+            alpha: 0.05,
+            threshold,
+            warmup_left: 30,
+            flag: false,
+        }
+    }
+}
+
+impl DriftDetector for ConfidenceDetector {
+    fn observe(&mut self, _x: &[f32], pred: Option<&Prediction>) {
+        if let Some(p) = pred {
+            self.ewma += self.alpha * (p.confidence() - self.ewma);
+            if self.warmup_left > 0 {
+                self.warmup_left -= 1;
+                return;
+            }
+            if self.ewma < self.threshold {
+                self.flag = true;
+            }
+        }
+    }
+
+    fn is_drift(&self) -> bool {
+        self.flag
+    }
+
+    fn reset(&mut self) {
+        self.flag = false;
+        self.ewma = 1.0;
+        self.warmup_left = 30;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng64;
+
+    #[test]
+    fn oracle_is_scripted() {
+        let mut d = OracleDetector::new();
+        assert!(!d.is_drift());
+        d.set(true);
+        assert!(d.is_drift());
+        d.reset();
+        assert!(!d.is_drift());
+    }
+
+    #[test]
+    fn centroid_detects_mean_shift() {
+        let mut rng = Rng64::new(3);
+        let mut det = CentroidDetector::new(8);
+        // in-distribution: N(0, 1)
+        for _ in 0..300 {
+            let x: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+            det.observe(&x, None);
+        }
+        assert!(!det.is_drift(), "false positive on stationary data");
+        // drift: mean jumps to 4
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..8).map(|_| rng.normal_ms(4.0, 1.0) as f32).collect();
+            det.observe(&x, None);
+        }
+        assert!(det.is_drift(), "missed a 4σ mean shift");
+    }
+
+    #[test]
+    fn centroid_no_false_positive_on_noise() {
+        let mut rng = Rng64::new(5);
+        let mut det = CentroidDetector::new(4);
+        for _ in 0..2000 {
+            let x: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+            det.observe(&x, None);
+        }
+        assert!(!det.is_drift());
+    }
+
+    #[test]
+    fn centroid_reset_clears_and_relearns() {
+        let mut rng = Rng64::new(7);
+        let mut det = CentroidDetector::new(4);
+        for _ in 0..200 {
+            let x: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+            det.observe(&x, None);
+        }
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..4).map(|_| rng.normal_ms(5.0, 1.0) as f32).collect();
+            det.observe(&x, None);
+        }
+        assert!(det.is_drift());
+        det.reset();
+        assert!(!det.is_drift());
+        // after reset it relearns the *new* distribution without re-flagging
+        for _ in 0..300 {
+            let x: Vec<f32> = (0..4).map(|_| rng.normal_ms(5.0, 1.0) as f32).collect();
+            det.observe(&x, None);
+        }
+        assert!(!det.is_drift(), "should adapt to the new distribution");
+    }
+
+    #[test]
+    fn confidence_detector_flags_collapse() {
+        use crate::odl::activation::Prediction;
+        let mut det = ConfidenceDetector::new(0.4);
+        let confident = Prediction {
+            class: 0,
+            p1: 0.9,
+            p2: 0.05,
+        };
+        for _ in 0..100 {
+            det.observe(&[], Some(&confident));
+        }
+        assert!(!det.is_drift());
+        let unsure = Prediction {
+            class: 0,
+            p1: 0.4,
+            p2: 0.35,
+        };
+        for _ in 0..200 {
+            det.observe(&[], Some(&unsure));
+        }
+        assert!(det.is_drift());
+    }
+}

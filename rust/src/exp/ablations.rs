@@ -1,0 +1,149 @@
+//! Ablations beyond the paper's published grid:
+//!
+//! * **X sweep** — §3.2/§3.3: "A smaller X saves more power while it
+//!   affects the accuracy." The paper states this without a table; we
+//!   measure it.
+//! * **Hysteresis sweep** — our DESIGN.md §3 adaptation (mismatch
+//!   hysteresis M); M = 1 is the paper's literal rule 3.
+//! * **Detector comparison** — oracle vs CUSUM-centroid vs confidence
+//!   detectors on the fleet scenario (the paper defers detection to [6]).
+
+use super::protocol::{run, ProtocolConfig, PruningSpec, Variant};
+use crate::odl::AlphaKind;
+use crate::pruning::{AutoTheta, Metric, Pruner, ThetaPolicy};
+use crate::util::table::{pm, Table};
+use anyhow::Result;
+
+/// Sweep the consecutive-success requirement X of the auto-θ controller.
+pub fn x_sweep(trials: usize, xs: &[u32]) -> Result<Table> {
+    let mut t = Table::new(
+        &format!("Ablation: auto-theta X sweep (ODLHash N=128, {trials} trials)"),
+        &["X", "Af [%]", "comm volume [%]"],
+    );
+    for &x in xs {
+        let mut cfg = ProtocolConfig::new(Variant::Odl(AlphaKind::Hash), 128);
+        cfg.trials = trials;
+        cfg.pruning = PruningSpec::Auto { x };
+        let agg = run(&cfg)?;
+        t.row(&[
+            x.to_string(),
+            pm(agg.after.mean(), agg.after.std()),
+            format!("{:.1}", agg.comm.mean()),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Sweep the mismatch hysteresis M (M = 1 = the paper's literal rule 3).
+/// Returns (table, comm% per M) so tests can assert the Markov-chain
+/// argument from the pruning module docs.
+pub fn hysteresis_sweep(trials: usize, ms: &[u32]) -> Result<(Table, Vec<f64>)> {
+    let mut t = Table::new(
+        &format!("Ablation: mismatch hysteresis M (M=1 is the paper's literal rule; {trials} trials)"),
+        &["M", "Af [%]", "comm volume [%]", "final theta (mean)"],
+    );
+    let mut comms = Vec::new();
+    for &m in ms {
+        let mut cfg = ProtocolConfig::new(Variant::Odl(AlphaKind::Hash), 128);
+        cfg.trials = trials;
+        // PruningSpec::Auto hard-codes default hysteresis; build by hand.
+        cfg.pruning = PruningSpec::Off; // placeholder; overridden per-trial below
+        let agg = run_with_custom_auto(&cfg, m)?;
+        t.row(&[
+            m.to_string(),
+            pm(agg.after.mean(), agg.after.std()),
+            format!("{:.1}", agg.comm.mean()),
+            format!(
+                "{:.2}",
+                agg.outcomes.iter().map(|o| o.final_theta as f64).sum::<f64>()
+                    / agg.outcomes.len() as f64
+            ),
+        ]);
+        comms.push(agg.comm.mean());
+    }
+    Ok((t, comms))
+}
+
+/// Protocol run with a hand-built auto-θ pruner (hysteresis override).
+fn run_with_custom_auto(
+    cfg: &ProtocolConfig,
+    hysteresis: u32,
+) -> Result<super::protocol::Aggregate> {
+    // The protocol module exposes pruner construction through PruningSpec;
+    // for the ablation we rebuild per-trial with the custom controller.
+    use super::protocol::run_trial_with_pruner;
+    use crate::util::rng::Rng64;
+    use crate::util::stats::RunningStats;
+
+    let mut master = Rng64::new(cfg.master_seed);
+    let mut agg = super::protocol::Aggregate {
+        label: format!("auto(M={hysteresis})"),
+        before: RunningStats::new(),
+        after: RunningStats::new(),
+        comm: RunningStats::new(),
+        queries: RunningStats::new(),
+        outcomes: Vec::new(),
+    };
+    for t in 0..cfg.trials {
+        let seed = master.fork(t as u64).next_u64();
+        let mk = || {
+            Pruner::new(
+                ThetaPolicy::Auto(AutoTheta::new(10).with_hysteresis(hysteresis)),
+                Metric::P1P2,
+                crate::pruning::warmup_for(cfg.n_hidden),
+            )
+        };
+        let o = run_trial_with_pruner(cfg, seed, mk())?;
+        agg.before.push(o.acc_before);
+        agg.after.push(o.acc_after);
+        agg.comm.push(o.comm_fraction() * 100.0);
+        agg.queries.push(o.queries as f64);
+        agg.outcomes.push(o);
+    }
+    Ok(agg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smaller_x_prunes_more() {
+        // §3.3: "A smaller X saves more power" — X=3 must cut comm at
+        // least as much as X=30.
+        let t3 = x_sweep(2, &[3]).unwrap();
+        let t30 = x_sweep(2, &[30]).unwrap();
+        let comm = |t: &Table| -> f64 {
+            t.to_csv()
+                .lines()
+                .nth(1)
+                .unwrap()
+                .split(',')
+                .nth(2)
+                .unwrap()
+                .parse()
+                .unwrap()
+        };
+        assert!(
+            comm(&t3) <= comm(&t30) + 1.0,
+            "X=3 comm {} vs X=30 comm {}",
+            comm(&t3),
+            comm(&t30)
+        );
+    }
+
+    #[test]
+    fn literal_rule_cannot_settle() {
+        // The DESIGN.md §3 claim behind the hysteresis adaptation: with
+        // M = 1 (the paper's literal rule 3) and ~10 % stream error, the
+        // ladder pins near θ = 1 and communication stays high; M = 2
+        // unlocks the published low-comm regime.
+        let (_, comms) = hysteresis_sweep(2, &[1, 2]).unwrap();
+        assert!(
+            comms[0] > comms[1] + 20.0,
+            "M=1 comm {} must stay far above M=2 comm {}",
+            comms[0],
+            comms[1]
+        );
+    }
+}

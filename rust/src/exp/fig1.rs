@@ -1,0 +1,159 @@
+//! Figure 1: 2-D visualization of the HAR dataset per activity class,
+//! colored by human subject — the motivation figure showing per-subject
+//! clusters.
+//!
+//! For each class we fit a 2-component PCA on that class's samples and
+//! emit (pc1, pc2, subject, held_out) rows as CSV, one file per class,
+//! plus a cluster-separation summary (mean silhouette-style score of
+//! subject clusters) that quantifies what the paper shows visually.
+
+use crate::data::pca::Pca;
+use crate::data::{Dataset, HELD_OUT_SUBJECTS};
+use crate::util::rng::Rng64;
+use crate::util::table::Table;
+use anyhow::Result;
+use std::path::Path;
+
+/// Per-class PCA projections: returns (class, csv-text, subject-cluster score).
+pub fn project(pool: &Dataset, rng: &mut Rng64) -> Vec<(usize, String, f64)> {
+    let mut out = Vec::new();
+    for class in 0..pool.n_classes {
+        let subset = pool.filter(|l, _| l == class);
+        let pca = Pca::fit(&subset.xs, 2, rng);
+        let proj = pca.transform(&subset.xs);
+        let mut csv = String::from("pc1,pc2,subject,held_out\n");
+        for r in 0..proj.rows {
+            let s = subset.subjects[r];
+            csv.push_str(&format!(
+                "{:.4},{:.4},{},{}\n",
+                proj.at(r, 0),
+                proj.at(r, 1),
+                s,
+                HELD_OUT_SUBJECTS.contains(&s) as u8
+            ));
+        }
+        out.push((class, csv, subject_cluster_score(&proj, &subset.subjects)));
+    }
+    out
+}
+
+/// How clustered are subjects in the 2-D projection? Ratio of mean
+/// between-subject centroid distance to mean within-subject spread
+/// (> 1 ⇒ visible clusters, the paper's qualitative claim).
+pub fn subject_cluster_score(proj: &crate::linalg::Mat, subjects: &[usize]) -> f64 {
+    use std::collections::HashMap;
+    let mut groups: HashMap<usize, Vec<(f32, f32)>> = HashMap::new();
+    for r in 0..proj.rows {
+        groups
+            .entry(subjects[r])
+            .or_default()
+            .push((proj.at(r, 0), proj.at(r, 1)));
+    }
+    let centroids: Vec<(f32, f32)> = groups
+        .values()
+        .map(|pts| {
+            let n = pts.len() as f32;
+            (
+                pts.iter().map(|p| p.0).sum::<f32>() / n,
+                pts.iter().map(|p| p.1).sum::<f32>() / n,
+            )
+        })
+        .collect();
+    let within: f64 = groups
+        .values()
+        .zip(&centroids)
+        .map(|(pts, c)| {
+            pts.iter()
+                .map(|p| (((p.0 - c.0).powi(2) + (p.1 - c.1).powi(2)) as f64).sqrt())
+                .sum::<f64>()
+                / pts.len() as f64
+        })
+        .sum::<f64>()
+        / groups.len() as f64;
+    let mut between = 0.0;
+    let mut pairs = 0usize;
+    for i in 0..centroids.len() {
+        for j in i + 1..centroids.len() {
+            let (a, b) = (centroids[i], centroids[j]);
+            between += (((a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)) as f64).sqrt();
+            pairs += 1;
+        }
+    }
+    if pairs == 0 || within <= 0.0 {
+        return 0.0;
+    }
+    (between / pairs as f64) / within
+}
+
+/// Run the harness: write CSVs under `out_dir`, return the summary table.
+pub fn run(pool: &Dataset, out_dir: &Path, seed: u64) -> Result<Table> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut rng = Rng64::new(seed);
+    let mut t = Table::new(
+        "Figure 1: per-class 2-D projections (CSV per class) + subject-cluster scores",
+        &["class", "samples", "cluster score", "csv"],
+    );
+    for (class, csv, score) in project(pool, &mut rng) {
+        let path = out_dir.join(format!("fig1_class{class}.csv"));
+        std::fs::write(&path, &csv)?;
+        t.row(&[
+            class.to_string(),
+            (csv.lines().count() - 1).to_string(),
+            format!("{score:.2}"),
+            path.display().to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{SynthConfig, SynthHar};
+
+    #[test]
+    fn projections_show_subject_clusters() {
+        let mut rng = Rng64::new(5);
+        // 60 features aggregate less subject signal than 561, so scale the
+        // subject offsets up to match the full-size clustering strength.
+        let cfg = SynthConfig {
+            n_features: 60,
+            n_classes: 3,
+            n_subjects: 12,
+            samples_per_cell: 15,
+            subject_sigma: 1.2,
+            ..Default::default()
+        };
+        let pool = SynthHar::new(cfg, &mut rng).generate(&mut rng);
+        let projections = project(&pool, &mut rng);
+        assert_eq!(projections.len(), 3);
+        for (class, csv, score) in &projections {
+            assert!(csv.lines().count() > 100, "class {class} csv too small");
+            // the paper's Figure-1 claim: same-subject samples cluster
+            assert!(
+                *score > 0.8,
+                "class {class}: subject clusters not visible (score {score})"
+            );
+        }
+    }
+
+    #[test]
+    fn csv_format_parses() {
+        let mut rng = Rng64::new(6);
+        let cfg = SynthConfig {
+            n_features: 30,
+            n_classes: 2,
+            n_subjects: 6,
+            samples_per_cell: 5,
+            ..Default::default()
+        };
+        let pool = SynthHar::new(cfg, &mut rng).generate(&mut rng);
+        let (_, csv, _) = &project(&pool, &mut rng)[0];
+        for line in csv.lines().skip(1) {
+            let cells: Vec<&str> = line.split(',').collect();
+            assert_eq!(cells.len(), 4);
+            cells[0].parse::<f32>().unwrap();
+            cells[2].parse::<usize>().unwrap();
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Figure 3: accuracy (before/after drift) and communication volume vs
+//! the confidence threshold θ, plus the auto-tuned controller.
+//!
+//! Protocol (§3.2): ODLHash N = 128, warmup max(N, 288), θ from 0.01 to 1
+//! (θ = 1 ⇒ no pruning ⇒ 100 % communication volume), X = 10 for Auto,
+//! `trials` runs per configuration.
+
+use super::protocol::{run, Aggregate, ProtocolConfig, PruningSpec, Variant};
+use crate::odl::AlphaKind;
+use crate::util::table::{pm, Table};
+use anyhow::Result;
+
+/// The θ sweep (paper: "varied from 0.01 to 1"; bars at the ladder points).
+pub const THETA_SWEEP: [f32; 8] = [0.01, 0.02, 0.04, 0.08, 0.16, 0.32, 0.64, 1.0];
+
+/// One sweep point result.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub label: String,
+    pub agg: Aggregate,
+}
+
+pub fn sweep(trials: usize, metric: crate::pruning::Metric) -> Result<Vec<SweepPoint>> {
+    let mut points = Vec::new();
+    for &theta in THETA_SWEEP.iter() {
+        let mut cfg = ProtocolConfig::new(Variant::Odl(AlphaKind::Hash), 128);
+        cfg.trials = trials;
+        cfg.metric = metric;
+        cfg.pruning = if theta >= 1.0 {
+            PruningSpec::Off
+        } else {
+            PruningSpec::Fixed(theta)
+        };
+        points.push(SweepPoint {
+            label: format!("{theta}"),
+            agg: run(&cfg)?,
+        });
+    }
+    let mut cfg = ProtocolConfig::new(Variant::Odl(AlphaKind::Hash), 128);
+    cfg.trials = trials;
+    cfg.metric = metric;
+    cfg.pruning = PruningSpec::Auto { x: 10 };
+    points.push(SweepPoint {
+        label: "Auto".into(),
+        agg: run(&cfg)?,
+    });
+    Ok(points)
+}
+
+/// Render the figure as a table + CSV (bars: Be/Af accuracy; line: comm %).
+pub fn run_fig(trials: usize, metric: crate::pruning::Metric) -> Result<(Table, String)> {
+    let points = sweep(trials, metric)?;
+    render(&points, trials, metric)
+}
+
+/// Render from precomputed sweep points (lets callers reuse the sweep).
+pub fn render(
+    points: &[SweepPoint],
+    trials: usize,
+    metric: crate::pruning::Metric,
+) -> Result<(Table, String)> {
+    let mut t = Table::new(
+        &format!(
+            "Figure 3: accuracy & communication volume vs theta (ODLHash N=128, {trials} trials, metric {metric:?})"
+        ),
+        &["theta", "Be [%]", "Af [%]", "comm volume [%]"],
+    );
+    let mut csv = String::from("theta,acc_before,acc_before_std,acc_after,acc_after_std,comm_pct\n");
+    for p in points {
+        t.row(&[
+            p.label.clone(),
+            pm(p.agg.before.mean(), p.agg.before.std()),
+            pm(p.agg.after.mean(), p.agg.after.std()),
+            format!("{:.1}", p.agg.comm.mean()),
+        ]);
+        csv.push_str(&format!(
+            "{},{:.2},{:.2},{:.2},{:.2},{:.2}\n",
+            p.label,
+            p.agg.before.mean(),
+            p.agg.before.std(),
+            p.agg.after.mean(),
+            p.agg.after.std(),
+            p.agg.comm.mean()
+        ));
+    }
+    Ok((t, csv))
+}
+
+/// The headline numbers the paper quotes for Auto (§3.2): communication
+/// reduction vs θ=1 and the accuracy drop.
+pub fn auto_headline(points: &[SweepPoint]) -> Option<(f64, f64)> {
+    let full = points.iter().find(|p| p.label == "1")?;
+    let auto = points.iter().find(|p| p.label == "Auto")?;
+    let comm_reduction = 100.0 - auto.agg.comm.mean();
+    let acc_drop = full.agg.after.mean() - auto.agg.after.mean();
+    Some((comm_reduction, acc_drop))
+}
+
+/// Shared reduced-trial sweep for the fig3/fig4 test modules (the sweep
+/// costs ~10 s at full 561-dim size; compute it once per test binary).
+#[cfg(test)]
+pub(crate) fn test_sweep() -> &'static [SweepPoint] {
+    use std::sync::OnceLock;
+    static SWEEP: OnceLock<Vec<SweepPoint>> = OnceLock::new();
+    SWEEP.get_or_init(|| sweep(2, crate::pruning::Metric::P1P2).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reduced-trial smoke: monotone comm volume + bounded accuracy loss.
+    /// (The full 20-trial run is the bench / CLI path.)
+    #[test]
+    fn sweep_shape_holds() {
+        let points = test_sweep();
+        assert_eq!(points.len(), THETA_SWEEP.len() + 1);
+        // comm volume decreases as theta decreases
+        let comm: Vec<f64> = points[..THETA_SWEEP.len()]
+            .iter()
+            .map(|p| p.agg.comm.mean())
+            .collect();
+        assert!((comm.last().unwrap() - 100.0).abs() < 1e-9, "theta=1 ⇒ 100%");
+        assert!(comm[0] < comm[7] - 30.0, "theta=0.01 must prune a lot");
+        for w in comm.windows(2) {
+            assert!(w[0] <= w[1] + 3.0, "comm roughly monotone: {comm:?}");
+        }
+        // paper: accuracy loss small for theta >= 0.08
+        let full = points[7].agg.after.mean();
+        let t008 = points[3].agg.after.mean();
+        assert!(full - t008 < 2.5, "theta=0.08 loss too big");
+        let (red, drop) = auto_headline(points).unwrap();
+        assert!(red > 30.0, "auto reduction {red}");
+        assert!(drop < 2.5, "auto drop {drop}");
+    }
+}

@@ -1,0 +1,167 @@
+//! Figure 4: total power of the ODLHash core during the training mode vs
+//! θ, for three event frequencies (1 / 0.2 / 0.1 Hz), split into
+//! computation (dark bars) and communication (light bars).
+//!
+//! Power = (core event energy + BLE query energy × measured query rate)
+//! / event period; query rates come from the same runs as Figure 3, so
+//! `run_fig` takes the Fig-3 sweep as input.
+
+use super::fig3::SweepPoint;
+use crate::hw::ble::{training_mode_power_split_mw, BleModel};
+use crate::hw::{CycleModel, PowerModel};
+use crate::util::table::Table;
+use anyhow::Result;
+
+/// Event periods the paper evaluates [s].
+pub const PERIODS: [f64; 3] = [1.0, 5.0, 10.0];
+
+/// Paper's quoted reductions for Auto at the three periods [%].
+pub const PAPER_AUTO_REDUCTION: [f64; 3] = [49.4, 34.7, 25.2];
+
+/// One bar of the figure.
+#[derive(Clone, Debug)]
+pub struct PowerBar {
+    pub theta: String,
+    pub period_s: f64,
+    pub compute_mw: f64,
+    pub comm_mw: f64,
+}
+
+impl PowerBar {
+    pub fn total(&self) -> f64 {
+        self.compute_mw + self.comm_mw
+    }
+}
+
+/// Compute the full figure from Fig-3 sweep points.
+pub fn bars(points: &[SweepPoint]) -> Vec<PowerBar> {
+    let core = PowerModel::default();
+    let cyc = CycleModel::prototype();
+    let ble = BleModel::default();
+    let mut out = Vec::new();
+    for &period in PERIODS.iter() {
+        for p in points {
+            let query_rate = p.agg.comm.mean() / 100.0;
+            let (compute, comm) =
+                training_mode_power_split_mw(&core, &cyc, &ble, period, query_rate);
+            out.push(PowerBar {
+                theta: p.label.clone(),
+                period_s: period,
+                compute_mw: compute,
+                comm_mw: comm,
+            });
+        }
+    }
+    out
+}
+
+/// Render the figure as a table + CSV.
+pub fn run_fig(points: &[SweepPoint]) -> Result<(Table, String)> {
+    let all = bars(points);
+    let mut t = Table::new(
+        "Figure 4: training-mode power vs theta (compute + comm), three event rates",
+        &[
+            "period",
+            "theta",
+            "compute [mW]",
+            "comm [mW]",
+            "total [mW]",
+            "reduction vs theta=1",
+        ],
+    );
+    let mut csv = String::from("period_s,theta,compute_mw,comm_mw,total_mw,reduction_pct\n");
+    for &period in PERIODS.iter() {
+        let at_period: Vec<&PowerBar> =
+            all.iter().filter(|b| b.period_s == period).collect();
+        let full = at_period
+            .iter()
+            .find(|b| b.theta == "1")
+            .map(|b| b.total())
+            .unwrap_or(f64::NAN);
+        for b in at_period {
+            let reduction = 100.0 * (1.0 - b.total() / full);
+            t.row(&[
+                format!("1/{period:.0}s"),
+                b.theta.clone(),
+                format!("{:.3}", b.compute_mw),
+                format!("{:.3}", b.comm_mw),
+                format!("{:.3}", b.total()),
+                format!("{reduction:.1} %"),
+            ]);
+            csv.push_str(&format!(
+                "{},{},{:.4},{:.4},{:.4},{:.2}\n",
+                period,
+                b.theta,
+                b.compute_mw,
+                b.comm_mw,
+                b.total(),
+                reduction
+            ));
+        }
+    }
+    Ok((t, csv))
+}
+
+/// Auto-θ reductions at the three event rates (the §3.3 headline).
+pub fn auto_reductions(points: &[SweepPoint]) -> Vec<(f64, f64)> {
+    let all = bars(points);
+    PERIODS
+        .iter()
+        .map(|&period| {
+            let full = all
+                .iter()
+                .find(|b| b.period_s == period && b.theta == "1")
+                .map(|b| b.total())
+                .unwrap();
+            let auto = all
+                .iter()
+                .find(|b| b.period_s == period && b.theta == "Auto")
+                .map(|b| b.total())
+                .unwrap();
+            (period, 100.0 * (1.0 - auto / full))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::fig3::test_sweep;
+
+    #[test]
+    fn power_reductions_match_paper_shape() {
+        let points = test_sweep();
+        let reductions = auto_reductions(points);
+        // reductions shrink with the event period (comm amortized less)…
+        assert!(reductions[0].1 > reductions[1].1);
+        assert!(reductions[1].1 > reductions[2].1);
+        // …and land in the paper's regime at 1 Hz (49.4 % published; our
+        // auto settles one ladder rung lower, so allow a band)
+        assert!(
+            (35.0..75.0).contains(&reductions[0].1),
+            "1 Hz reduction {reductions:?}"
+        );
+    }
+
+    #[test]
+    fn comm_power_dominates_at_1hz_without_pruning() {
+        let points = test_sweep();
+        let all = bars(points);
+        let full = all
+            .iter()
+            .find(|b| b.period_s == 1.0 && b.theta == "1")
+            .unwrap();
+        assert!(
+            full.comm_mw > full.compute_mw * 2.0,
+            "BLE must dominate: {full:?}"
+        );
+    }
+
+    #[test]
+    fn csv_row_count() {
+        let points = test_sweep();
+        let (_, csv) = run_fig(points).unwrap();
+        // header + 3 periods × (8 thetas + auto)
+        assert_eq!(csv.lines().count(), 1 + 3 * 9);
+    }
+}

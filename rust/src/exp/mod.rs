@@ -1,0 +1,12 @@
+//! Experiment harnesses — one per paper table/figure (see DESIGN.md §5 for
+//! the experiment → module → bench index).
+
+pub mod ablations;
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod protocol;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;

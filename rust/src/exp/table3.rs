@@ -1,0 +1,72 @@
+//! Table 3: "Accuracy of ODL approaches and counterparts before and after
+//! drift" — the paper's central accuracy experiment.
+//!
+//! Grid: {NoODL, ODLBase, ODLHash} × N ∈ {128, 256} + the DNN
+//! (561,512,256,6) baseline; `trials` independent runs (paper: 20),
+//! mean ± std, no pruning during the ODL phase.
+
+use super::protocol::{run, Aggregate, ProtocolConfig, Variant};
+use crate::odl::AlphaKind;
+use crate::util::table::{pm, Table};
+use anyhow::Result;
+
+/// Published Table 3 for side-by-side printing: (label, before, after).
+pub const PAPER: [(&str, &str, &str); 7] = [
+    ("NoODL (N = 128)", "92.9±0.8", "82.9±1.4"),
+    ("ODLBase (N = 128)", "93.4±0.6", "90.8±1.7"),
+    ("ODLHash (N = 128)", "93.1±0.8", "90.7±1.0"),
+    ("NoODL (N = 256)", "95.1±0.3", "83.7±1.0"),
+    ("ODLBase (N = 256)", "95.2±0.3", "92.5±0.6"),
+    ("ODLHash (N = 256)", "95.1±0.4", "92.3±0.7"),
+    ("DNN (561,512,256,6)", "94.1±1.0", "85.2±1.3"),
+];
+
+/// The experiment grid in paper order.
+pub fn grid() -> Vec<(Variant, usize)> {
+    vec![
+        (Variant::NoOdl(AlphaKind::Hash), 128),
+        (Variant::Odl(AlphaKind::Stored), 128),
+        (Variant::Odl(AlphaKind::Hash), 128),
+        (Variant::NoOdl(AlphaKind::Hash), 256),
+        (Variant::Odl(AlphaKind::Stored), 256),
+        (Variant::Odl(AlphaKind::Hash), 256),
+        (Variant::Dnn(vec![561, 512, 256, 6]), 0),
+    ]
+}
+
+/// Run the full grid; returns (table, per-row aggregates).
+pub fn run_table(trials: usize) -> Result<(Table, Vec<Aggregate>)> {
+    let mut t = Table::new(
+        &format!("Table 3: accuracy before/after drift (mean±std over {trials} trials)"),
+        &["", "Before [%]", "After [%]", "paper (Before / After)"],
+    );
+    let mut aggs = Vec::new();
+    for (i, (variant, n_hidden)) in grid().into_iter().enumerate() {
+        let mut cfg = ProtocolConfig::new(variant, n_hidden);
+        cfg.trials = trials;
+        let agg = run(&cfg)?;
+        let (_, p_before, p_after) = PAPER[i];
+        t.row(&[
+            agg.label.clone(),
+            pm(agg.before.mean(), agg.before.std()),
+            pm(agg.after.mean(), agg.after.std()),
+            format!("{p_before} / {p_after}"),
+        ]);
+        aggs.push(agg);
+    }
+    Ok((t, aggs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_matches_paper_rows() {
+        let g = grid();
+        assert_eq!(g.len(), PAPER.len());
+        assert_eq!(g[0].0.label(128), "NoODL (N = 128)");
+        assert_eq!(g[2].0.label(128), "ODLHash (N = 128)");
+        assert_eq!(g[6].0.label(0), "DNN (561,512,256,6)");
+    }
+}

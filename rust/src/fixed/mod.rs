@@ -1,0 +1,278 @@
+//! 32-bit fixed-point arithmetic — the number format of the paper's ASIC.
+//!
+//! §3.3: "Numbers are represented by 32-bit fixed-point format." The paper
+//! does not name the Q-split; we use **Q16.16** (16 integer bits incl.
+//! sign, 16 fractional bits), which covers the dynamic range the OS-ELM
+//! datapath needs (features standardized to ≈N(0,1), hidden activations in
+//! (0,1), P entries bounded by the ridge init) while keeping quantization
+//! noise ≈ 2⁻¹⁶. All operations **saturate** instead of wrapping — what a
+//! sane hardware datapath does — and division rounds toward zero (matching
+//! the iterative divider the cycle model in [`crate::hw::cycles`] charges
+//! for).
+//!
+//! [`crate::odl::fixed_oselm`] runs the full OS-ELM pipeline in this
+//! format to provide the bit-level golden model of the hardware core and to
+//! quantify fixed-vs-float accuracy loss (tests assert it stays small).
+
+mod vecops;
+pub use vecops::{fx_dot, fx_scale_sub_outer, fx_vec_from_f32, fx_vec_to_f32};
+
+/// Number of fractional bits.
+pub const FRAC_BITS: u32 = 16;
+/// Scale factor 2^16.
+pub const ONE_RAW: i32 = 1 << FRAC_BITS;
+
+/// Q16.16 fixed-point value.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct Fx(pub i32);
+
+impl std::fmt::Debug for Fx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Fx({})", self.to_f32())
+    }
+}
+
+impl Fx {
+    pub const ZERO: Fx = Fx(0);
+    pub const ONE: Fx = Fx(ONE_RAW);
+    pub const MAX: Fx = Fx(i32::MAX);
+    pub const MIN: Fx = Fx(i32::MIN);
+
+    /// Convert from f32 with saturation and round-to-nearest.
+    pub fn from_f32(x: f32) -> Fx {
+        let scaled = (x as f64) * ONE_RAW as f64;
+        if scaled >= i32::MAX as f64 {
+            Fx(i32::MAX)
+        } else if scaled <= i32::MIN as f64 {
+            Fx(i32::MIN)
+        } else {
+            Fx(scaled.round() as i32)
+        }
+    }
+
+    pub fn to_f32(self) -> f32 {
+        self.0 as f32 / ONE_RAW as f32
+    }
+
+    pub fn to_f64(self) -> f64 {
+        self.0 as f64 / ONE_RAW as f64
+    }
+
+    /// Saturating add.
+    #[inline]
+    pub fn add(self, rhs: Fx) -> Fx {
+        Fx(self.0.saturating_add(rhs.0))
+    }
+
+    /// Saturating subtract.
+    #[inline]
+    pub fn sub(self, rhs: Fx) -> Fx {
+        Fx(self.0.saturating_sub(rhs.0))
+    }
+
+    /// Saturating multiply: (a·b) >> 16 computed in 64-bit.
+    #[inline]
+    pub fn mul(self, rhs: Fx) -> Fx {
+        let wide = (self.0 as i64 * rhs.0 as i64) >> FRAC_BITS;
+        Fx(clamp_i64(wide))
+    }
+
+    /// Saturating divide, rounding toward zero. Division by zero saturates
+    /// to ±MAX (hardware flags it; the datapath clamps).
+    #[inline]
+    pub fn div(self, rhs: Fx) -> Fx {
+        if rhs.0 == 0 {
+            return if self.0 >= 0 { Fx::MAX } else { Fx::MIN };
+        }
+        let wide = ((self.0 as i64) << FRAC_BITS) / rhs.0 as i64;
+        Fx(clamp_i64(wide))
+    }
+
+    pub fn neg(self) -> Fx {
+        Fx(self.0.saturating_neg())
+    }
+
+    pub fn abs(self) -> Fx {
+        Fx(self.0.saturating_abs())
+    }
+
+    /// Multiply-accumulate in a 64-bit accumulator domain: callers that
+    /// need long dot products should accumulate raw i64 (see `fx_dot`)
+    /// rather than chaining saturating `add`s — this mirrors the ASIC's
+    /// wide accumulator register.
+    #[inline]
+    pub fn mac_raw(self, rhs: Fx) -> i64 {
+        self.0 as i64 * rhs.0 as i64
+    }
+}
+
+#[inline]
+fn clamp_i64(x: i64) -> i32 {
+    if x > i32::MAX as i64 {
+        i32::MAX
+    } else if x < i32::MIN as i64 {
+        i32::MIN
+    } else {
+        x as i32
+    }
+}
+
+/// Reduce a raw 64-bit accumulator (sum of 32.32 products) back to Q16.16.
+#[inline]
+pub fn acc_to_fx(acc: i64) -> Fx {
+    Fx(clamp_i64(acc >> FRAC_BITS))
+}
+
+/// Fixed-point sigmoid via a 3-segment piecewise-quadratic approximation —
+/// the standard tinyML hardware trick (no exp unit on the ASIC).
+///
+/// For |x| ≥ 8 the output saturates to 0/1; in between we use the
+/// well-known approximation σ(x) ≈ 0.5·(1 + x/(1+|x|)·c) refined to a
+/// quadratic that keeps max error < 0.02 — small against the Q16.16 grid
+/// and the OS-ELM tolerance (tests quantify end-to-end agreement).
+pub fn fx_sigmoid(x: Fx) -> Fx {
+    const EIGHT: i32 = 8 * ONE_RAW;
+    if x.0 >= EIGHT {
+        return Fx::ONE;
+    }
+    if x.0 <= -EIGHT {
+        return Fx::ZERO;
+    }
+    // PLAN-style piecewise linear approximation (Amin, Curtis, Hayes-Gill
+    // 1997) — the classic LUT-less sigmoid circuit (shifts + adds only).
+    // Segment boundary moved from 2.375 to 7/3 so adjacent segments meet
+    // exactly (the published PLAN has a 0.004 jump there); the last segment
+    // reaches exactly 1.0 at |x| = 5. Continuous + monotone, max err < 0.02.
+    let ax = x.abs().0 as i64; // Q16.16 positive
+    let one = ONE_RAW as i64;
+    let y = if ax < one {
+        (ax >> 2) + (one >> 1) // 0.25|x| + 0.5
+    } else if ax < (7 * one) / 3 {
+        (ax >> 3) + (5 * one) / 8 // 0.125|x| + 0.625
+    } else if ax < 5 * one {
+        (ax >> 5) + (27 * one) / 32 // 0.03125|x| + 0.84375
+    } else {
+        one
+    };
+    let y = y.min(one);
+    if x.0 >= 0 {
+        Fx(y as i32)
+    } else {
+        Fx((one - y) as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+
+    #[test]
+    fn roundtrip_grid() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, -0.25, 1234.0625, -32767.9] {
+            let fx = Fx::from_f32(x);
+            assert!((fx.to_f32() - x).abs() <= 1.0 / ONE_RAW as f32, "{x}");
+        }
+    }
+
+    #[test]
+    fn saturation_bounds() {
+        assert_eq!(Fx::from_f32(1e9), Fx::MAX);
+        assert_eq!(Fx::from_f32(-1e9), Fx::MIN);
+        assert_eq!(Fx::MAX.add(Fx::ONE), Fx::MAX);
+        assert_eq!(Fx::MIN.sub(Fx::ONE), Fx::MIN);
+        assert_eq!(Fx::MAX.mul(Fx::from_f32(2.0)), Fx::MAX);
+        assert_eq!(Fx::MIN.mul(Fx::from_f32(2.0)), Fx::MIN);
+    }
+
+    #[test]
+    fn div_by_zero_saturates() {
+        assert_eq!(Fx::ONE.div(Fx::ZERO), Fx::MAX);
+        assert_eq!(Fx::ONE.neg().div(Fx::ZERO), Fx::MIN);
+    }
+
+    #[test]
+    fn mul_matches_float_within_grid() {
+        forall(
+            "fx-mul",
+            |r| (gen::f32_in(r, -100.0, 100.0), gen::f32_in(r, -100.0, 100.0)),
+            |&(a, b)| {
+                let fx = Fx::from_f32(a).mul(Fx::from_f32(b)).to_f32();
+                // error bound: input quantization (each ≤ 2⁻¹⁷ relative-ish)
+                // + product truncation 2⁻¹⁶
+                (fx - a * b).abs() <= (a.abs() + b.abs()) * 2.0 / ONE_RAW as f32 + 2.0 / ONE_RAW as f32
+            },
+        );
+    }
+
+    #[test]
+    fn div_matches_float() {
+        forall(
+            "fx-div",
+            |r| {
+                let a = gen::f32_in(r, -100.0, 100.0);
+                let mut b = gen::f32_in(r, 0.1, 50.0);
+                if a < 0.0 {
+                    b = -b; // exercise both sign combinations
+                }
+                (a, b)
+            },
+            |&(a, b)| {
+                let fx = Fx::from_f32(a).div(Fx::from_f32(b)).to_f32();
+                (fx - a / b).abs() <= 0.01 + (a / b).abs() * 1e-3
+            },
+        );
+    }
+
+    #[test]
+    fn mul_commutes_and_one_is_neutral() {
+        forall(
+            "fx-mul-commutes",
+            |r| (gen::f32_in(r, -50.0, 50.0), gen::f32_in(r, -50.0, 50.0)),
+            |&(a, b)| {
+                let (fa, fb) = (Fx::from_f32(a), Fx::from_f32(b));
+                fa.mul(fb) == fb.mul(fa) && fa.mul(Fx::ONE).0 - fa.0 <= 1
+            },
+        );
+    }
+
+    #[test]
+    fn sigmoid_limits_and_monotone() {
+        assert_eq!(fx_sigmoid(Fx::from_f32(20.0)), Fx::ONE);
+        assert_eq!(fx_sigmoid(Fx::from_f32(-20.0)), Fx::ZERO);
+        let mid = fx_sigmoid(Fx::ZERO).to_f32();
+        assert!((mid - 0.5).abs() < 1e-3, "sigmoid(0) = {mid}");
+        let mut prev = -1.0f32;
+        for i in -160..=160 {
+            let y = fx_sigmoid(Fx::from_f32(i as f32 / 20.0)).to_f32();
+            assert!(y + 1e-6 >= prev, "not monotone at {}", i);
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn sigmoid_close_to_real() {
+        for i in -80..=80 {
+            let x = i as f32 / 10.0;
+            let approx = fx_sigmoid(Fx::from_f32(x)).to_f32();
+            let exact = 1.0 / (1.0 + (-x).exp());
+            assert!(
+                (approx - exact).abs() < 0.025,
+                "x={x} approx={approx} exact={exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn sigmoid_symmetry() {
+        forall(
+            "fx-sigmoid-symmetry",
+            |r| gen::f32_in(r, -8.0, 8.0),
+            |&x| {
+                let a = fx_sigmoid(Fx::from_f32(x)).to_f32();
+                let b = fx_sigmoid(Fx::from_f32(-x)).to_f32();
+                (a + b - 1.0).abs() < 2.0 / ONE_RAW as f32 * 4.0
+            },
+        );
+    }
+}

@@ -1,0 +1,100 @@
+//! Vector operations over Q16.16, mirroring the ASIC datapath: long dot
+//! products accumulate in a wide (64-bit) register before renormalizing,
+//! exactly like the hardware MAC's extended accumulator.
+
+use super::{acc_to_fx, Fx};
+
+/// Convert an f32 slice into fixed point.
+pub fn fx_vec_from_f32(xs: &[f32]) -> Vec<Fx> {
+    xs.iter().map(|&x| Fx::from_f32(x)).collect()
+}
+
+/// Convert back to f32.
+pub fn fx_vec_to_f32(xs: &[Fx]) -> Vec<f32> {
+    xs.iter().map(|x| x.to_f32()).collect()
+}
+
+/// Dot product with a wide accumulator (one renormalization at the end).
+#[inline]
+pub fn fx_dot(a: &[Fx], b: &[Fx]) -> Fx {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc: i64 = 0;
+    for (x, y) in a.iter().zip(b) {
+        acc += x.mac_raw(*y);
+    }
+    acc_to_fx(acc)
+}
+
+/// `row[j] -= (ph_i * ph[j]) / denom` for a whole row — the inner loop of
+/// the OS-ELM P-update in fixed point. `scale = ph_i / denom` is computed
+/// once by the caller (one divide per row, like the ASIC schedule).
+#[inline]
+pub fn fx_scale_sub_outer(row: &mut [Fx], ph: &[Fx], scale: Fx) {
+    debug_assert_eq!(row.len(), ph.len());
+    for (r, &p) in row.iter_mut().zip(ph) {
+        *r = r.sub(scale.mul(p));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+
+    #[test]
+    fn dot_matches_float() {
+        forall(
+            "fx-dot",
+            |r| {
+                let n = gen::usize_in(r, 1, 64);
+                let a = gen::vec_f32(r, n, -2.0, 2.0);
+                let b = gen::vec_f32(r, n, -2.0, 2.0);
+                (a, b)
+            },
+            |(a, b)| {
+                let fa = fx_vec_from_f32(a);
+                let fb = fx_vec_from_f32(b);
+                let fx = fx_dot(&fa, &fb).to_f32();
+                let fl: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+                (fx - fl).abs() < 0.01
+            },
+        );
+    }
+
+    #[test]
+    fn dot_empty_is_zero() {
+        assert_eq!(fx_dot(&[], &[]), Fx::ZERO);
+    }
+
+    #[test]
+    fn scale_sub_outer_matches_float() {
+        forall(
+            "fx-scale-sub",
+            |r| {
+                let n = gen::usize_in(r, 1, 32);
+                let row = gen::vec_f32(r, n, -4.0, 4.0);
+                let ph = gen::vec_f32(r, n, -2.0, 2.0);
+                let scale = gen::f32_in(r, -1.0, 1.0);
+                (row, ph, scale)
+            },
+            |(row, ph, scale)| {
+                let mut frow = fx_vec_from_f32(row);
+                let fph = fx_vec_from_f32(ph);
+                fx_scale_sub_outer(&mut frow, &fph, Fx::from_f32(*scale));
+                row.iter()
+                    .zip(ph)
+                    .zip(&frow)
+                    .all(|((r, p), f)| ((r - scale * p) - f.to_f32()).abs() < 0.005)
+            },
+        );
+    }
+
+    #[test]
+    fn roundtrip_vec() {
+        let xs = vec![0.5f32, -1.25, 3.0];
+        let back = fx_vec_to_f32(&fx_vec_from_f32(&xs));
+        for (a, b) in xs.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

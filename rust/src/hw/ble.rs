@@ -1,0 +1,181 @@
+//! BLE communication energy model — the nRF52840 link of §3.3.
+//!
+//! The paper: "edge devices use BLE to send 561 features to a teacher
+//! device and receive the corresponding label … Data rate is 1 Mbps, TX
+//! power is 0 dBm, and supply voltage is 3.0 V. The power values are
+//! estimated by Nordic Semiconductor online tool."
+//!
+//! A label-acquisition transaction is modelled as: radio/link setup
+//! (connection establishment + stack wakeup — the dominant term for a
+//! sporadic, disconnect-between-queries duty cycle, which is what a
+//! multi-edge single-teacher BLE star must do), payload TX at 1 Mbps with
+//! L2CAP/ATT framing, label RX, and MCU stack overhead.
+//!
+//! Calibration: the per-query energy is fit so Figure 4's published
+//! training-mode power reductions under auto-θ — **49.4 % @ 1 event/s,
+//! 34.7 % @ 1/5 s, 25.2 % @ 1/10 s** — reproduce against the core power
+//! model (the fit across all three rates lands at ≈ 12 mJ/query; the Fig-4
+//! test asserts the reductions within a few points).
+
+use super::cycles::CycleModel;
+use super::power::PowerModel;
+
+/// BLE transaction energy model (all energies mJ, times s).
+#[derive(Clone, Copy, Debug)]
+pub struct BleModel {
+    /// Payload bytes per query: 561 features × 4 B (32-bit fixed point).
+    pub payload_bytes: usize,
+    /// PHY data rate, bits/s.
+    pub data_rate_bps: f64,
+    /// TX current at 0 dBm [mA] (nRF52840 datasheet: ≈ 4.8 mA with DC/DC).
+    pub tx_current_ma: f64,
+    /// RX current [mA] (≈ 4.6 mA).
+    pub rx_current_ma: f64,
+    /// Supply voltage [V].
+    pub supply_v: f64,
+    /// Connection-establishment + stack energy per sporadic query [mJ]
+    /// (advertising/scan window + connection events + MCU wakeup — the
+    /// calibrated dominant term).
+    pub setup_mj: f64,
+    /// Protocol framing overhead factor on the raw payload time.
+    pub framing_overhead: f64,
+    /// Label RX time [s] (one connection event holding the 1-byte label).
+    pub rx_time_s: f64,
+}
+
+impl Default for BleModel {
+    fn default() -> Self {
+        Self {
+            payload_bytes: 561 * 4,
+            data_rate_bps: 1e6,
+            tx_current_ma: 4.8,
+            rx_current_ma: 4.6,
+            supply_v: 3.0,
+            setup_mj: 11.2,
+            framing_overhead: 1.35,
+            rx_time_s: 0.005,
+        }
+    }
+}
+
+impl BleModel {
+    /// Time on air for the feature payload [s].
+    pub fn tx_time_s(&self) -> f64 {
+        self.payload_bytes as f64 * 8.0 / self.data_rate_bps * self.framing_overhead
+    }
+
+    /// Energy of one label-acquisition query [mJ].
+    pub fn query_energy_mj(&self) -> f64 {
+        let tx = self.tx_time_s() * self.tx_current_ma * self.supply_v;
+        let rx = self.rx_time_s * self.rx_current_ma * self.supply_v;
+        self.setup_mj + tx + rx
+    }
+
+    /// Latency of one query round-trip [s] (setup + TX + RX turnaround);
+    /// used by the fleet simulator's channel model.
+    pub fn query_latency_s(&self) -> f64 {
+        // connection setup latency (advertising interval dominated)
+        let setup_latency = 0.06;
+        setup_latency + self.tx_time_s() + self.rx_time_s
+    }
+}
+
+/// Mean training-mode power [mW] for an edge running one event per
+/// `period_s`, querying the teacher on a fraction `query_rate` of events
+/// (Figure 4's quantity; the non-query events still predict, then sleep).
+pub fn training_mode_power_mw(
+    core: &PowerModel,
+    cycles: &CycleModel,
+    ble: &BleModel,
+    period_s: f64,
+    query_rate: f64,
+) -> f64 {
+    assert!((0.0..=1.0).contains(&query_rate));
+    let e_query_event = core.event_energy_mj(cycles, period_s, true) + ble.query_energy_mj();
+    let e_skip_event = core.event_energy_mj(cycles, period_s, false);
+    let e = query_rate * e_query_event + (1.0 - query_rate) * e_skip_event;
+    e / period_s
+}
+
+/// The compute/communication split of the same quantity (Fig 4's dark vs
+/// light bars): returns (compute_mw, comm_mw).
+pub fn training_mode_power_split_mw(
+    core: &PowerModel,
+    cycles: &CycleModel,
+    ble: &BleModel,
+    period_s: f64,
+    query_rate: f64,
+) -> (f64, f64) {
+    let comp = query_rate * core.event_energy_mj(cycles, period_s, true)
+        + (1.0 - query_rate) * core.event_energy_mj(cycles, period_s, false);
+    let comm = query_rate * ble.query_energy_mj();
+    (comp / period_s, comm / period_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tx_time_matches_rate() {
+        let b = BleModel::default();
+        // 2244 B ≈ 18 ms raw at 1 Mbps; ×1.35 framing ≈ 24 ms
+        assert!((b.tx_time_s() - 0.02423).abs() < 5e-4, "{}", b.tx_time_s());
+    }
+
+    #[test]
+    fn query_energy_dominated_by_setup() {
+        let b = BleModel::default();
+        let e = b.query_energy_mj();
+        assert!(e > 11.0 && e < 13.0, "query energy {e} mJ");
+        assert!(b.setup_mj / e > 0.8, "setup must dominate sporadic queries");
+    }
+
+    /// Figure 4's headline: auto-θ (query rate 0.443 per the paper) cuts
+    /// training-mode power by ≈ 49.4 / 34.7 / 25.2 % at 1 / 5 / 10 s
+    /// event periods. Our calibration must land within a few points.
+    #[test]
+    fn fig4_reductions_reproduce() {
+        let core = PowerModel::default();
+        let cyc = CycleModel::prototype();
+        let ble = BleModel::default();
+        let paper = [(1.0, 49.4), (5.0, 34.7), (10.0, 25.2)];
+        for (period, want) in paper {
+            let p_full = training_mode_power_mw(&core, &cyc, &ble, period, 1.0);
+            let p_auto = training_mode_power_mw(&core, &cyc, &ble, period, 0.443);
+            let reduction = 100.0 * (1.0 - p_auto / p_full);
+            assert!(
+                (reduction - want).abs() < 6.0,
+                "period {period}s: reduction {reduction:.1} vs paper {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn split_sums_to_total() {
+        let core = PowerModel::default();
+        let cyc = CycleModel::prototype();
+        let ble = BleModel::default();
+        for rate in [0.0, 0.3, 1.0] {
+            let total = training_mode_power_mw(&core, &cyc, &ble, 1.0, rate);
+            let (comp, comm) = training_mode_power_split_mw(&core, &cyc, &ble, 1.0, rate);
+            assert!((comp + comm - total).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn no_queries_means_no_comm_power() {
+        let core = PowerModel::default();
+        let cyc = CycleModel::prototype();
+        let ble = BleModel::default();
+        let (_, comm) = training_mode_power_split_mw(&core, &cyc, &ble, 1.0, 0.0);
+        assert_eq!(comm, 0.0);
+    }
+
+    #[test]
+    fn latency_sane_for_fleet_sim() {
+        let b = BleModel::default();
+        let l = b.query_latency_s();
+        assert!(l > 0.05 && l < 0.2, "query latency {l}s");
+    }
+}

@@ -1,0 +1,133 @@
+//! Core power model — Table 4's four operating points, decomposed the way
+//! §3.3 describes them:
+//!
+//! * the **memory part** retains weights/state and can never power off →
+//!   its retention power is the **sleep** floor (1.33 mW);
+//! * waking the core adds SRAM standby + clock tree + logic leakage →
+//!   **idle** (3.06 mW);
+//! * switching activity of the MAC/divider datapath adds the small active
+//!   deltas → **predict** (3.39 mW) / **train** (3.37 mW; slightly lower
+//!   activity than predict because divider cycles toggle less logic than
+//!   the fully pipelined MAC+PRNG path).
+
+use super::cycles::CycleModel;
+
+/// Operating state of the core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PowerState {
+    /// Logic powered off; SRAM retention only.
+    Sleep,
+    /// Clocked but no datapath activity.
+    Idle,
+    Predict,
+    Train,
+}
+
+/// State-based power model (milliwatts), calibrated to Table 4.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerModel {
+    /// SRAM retention (sleep floor).
+    pub mem_retention_mw: f64,
+    /// Additional power when awake (SRAM standby + clock + leakage).
+    pub awake_extra_mw: f64,
+    /// Additional switching power while predicting.
+    pub predict_extra_mw: f64,
+    /// Additional switching power while training.
+    pub train_extra_mw: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        // Solves exactly to Table 4's four numbers.
+        Self {
+            mem_retention_mw: 1.33,
+            awake_extra_mw: 1.73,
+            predict_extra_mw: 0.33,
+            train_extra_mw: 0.31,
+        }
+    }
+}
+
+impl PowerModel {
+    /// Power draw in a state [mW].
+    pub fn power_mw(&self, state: PowerState) -> f64 {
+        match state {
+            PowerState::Sleep => self.mem_retention_mw,
+            PowerState::Idle => self.mem_retention_mw + self.awake_extra_mw,
+            PowerState::Predict => {
+                self.mem_retention_mw + self.awake_extra_mw + self.predict_extra_mw
+            }
+            PowerState::Train => {
+                self.mem_retention_mw + self.awake_extra_mw + self.train_extra_mw
+            }
+        }
+    }
+
+    /// Energy for `secs` in a state [mJ].
+    pub fn energy_mj(&self, state: PowerState, secs: f64) -> f64 {
+        self.power_mw(state) * secs
+    }
+
+    /// Computation energy of one training-mode event [mJ]: predict, then
+    /// (if the query was made) a sequential train step, then sleep for the
+    /// remainder of the event period. §3.3: "the logic part is stateless
+    /// and can be powered off when it is not used".
+    pub fn event_energy_mj(&self, cycles: &CycleModel, period_s: f64, trained: bool) -> f64 {
+        let t_pred = cycles.predict_time_s();
+        let t_train = if trained { cycles.train_time_s() } else { 0.0 };
+        let active = t_pred + t_train;
+        debug_assert!(active <= period_s, "event longer than its period");
+        self.energy_mj(PowerState::Predict, t_pred)
+            + self.energy_mj(PowerState::Train, t_train)
+            + self.energy_mj(PowerState::Sleep, (period_s - active).max(0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_power_exact() {
+        let p = PowerModel::default();
+        assert!((p.power_mw(PowerState::Predict) - 3.39).abs() < 1e-9);
+        assert!((p.power_mw(PowerState::Train) - 3.37).abs() < 1e-9);
+        assert!((p.power_mw(PowerState::Idle) - 3.06).abs() < 1e-9);
+        assert!((p.power_mw(PowerState::Sleep) - 1.33).abs() < 1e-9);
+    }
+
+    #[test]
+    fn state_ordering() {
+        let p = PowerModel::default();
+        assert!(p.power_mw(PowerState::Predict) > p.power_mw(PowerState::Train));
+        assert!(p.power_mw(PowerState::Train) > p.power_mw(PowerState::Idle));
+        assert!(p.power_mw(PowerState::Idle) > p.power_mw(PowerState::Sleep));
+    }
+
+    #[test]
+    fn event_energy_composition() {
+        let p = PowerModel::default();
+        let c = CycleModel::prototype();
+        let with_train = p.event_energy_mj(&c, 1.0, true);
+        let without = p.event_energy_mj(&c, 1.0, false);
+        // training adds (P_train − P_sleep)·t_train
+        let expect_delta = (3.37 - 1.33) * c.train_time_s();
+        assert!(
+            ((with_train - without) - expect_delta).abs() < 1e-9,
+            "delta {}",
+            with_train - without
+        );
+        // a skipped event (predict + sleep) is ≈ sleep-dominated at 1 Hz
+        assert!(without < 1.5 * p.energy_mj(PowerState::Sleep, 1.0));
+    }
+
+    #[test]
+    fn longer_period_costs_more_sleep_energy_but_less_average_power() {
+        let p = PowerModel::default();
+        let c = CycleModel::prototype();
+        let e1 = p.event_energy_mj(&c, 1.0, true);
+        let e10 = p.event_energy_mj(&c, 10.0, true);
+        assert!(e10 > e1);
+        assert!(e10 / 10.0 < e1 / 1.0, "average power must drop with period");
+    }
+}

@@ -1,0 +1,29 @@
+//! # odl-har
+//!
+//! Full-system reproduction of *"A Tiny Supervised ODL Core with Auto Data
+//! Pruning for Human Activity Recognition"* (Matsutani & Marculescu, 2024)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the edge/teacher coordinator: Algorithm 1's
+//!   device state machine, BLE channel + teacher service, the auto-θ data
+//!   pruning controller, drift detectors, a discrete-event fleet simulator
+//!   with power accounting, and the hardware co-design models (SRAM size,
+//!   cycle-level latency, core power, BLE transaction energy).
+//! * **L2/L1 (python, build-time)** — the OS-ELM compute graphs and Pallas
+//!   kernels, AOT-lowered to HLO text in `artifacts/` and executed from
+//!   rust through PJRT ([`runtime`]).
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod drift;
+pub mod exp;
+pub mod fixed;
+pub mod hw;
+pub mod linalg;
+pub mod odl;
+pub mod pruning;
+pub mod runtime;
+pub mod util;

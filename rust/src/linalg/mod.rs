@@ -1,0 +1,14 @@
+//! Small dense linear algebra over `f32`/`f64` (row-major), sufficient for
+//! OS-ELM: matmul, matvec, transpose, symmetric solves (Cholesky) and a
+//! pivoted-LU fallback for the batch initialization `P₀ = (H₀ᵀH₀+λI)⁻¹`.
+//!
+//! No external BLAS — the shapes here (N ≤ 512) don't warrant one, and the
+//! offline vendor set has none. The hot path (rank-1 OS-ELM update) is
+//! hand-written in `crate::odl` against raw slices; this module serves
+//! initialization, baselines, PCA, and tests.
+
+pub mod mat;
+pub mod solve;
+
+pub use mat::Mat;
+pub use solve::{cholesky_inverse, cholesky_solve_inplace, lu_inverse};

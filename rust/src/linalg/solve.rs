@@ -1,0 +1,235 @@
+//! Symmetric-positive-definite solves (Cholesky) and a pivoted-LU inverse.
+//!
+//! OS-ELM's batch initialization needs `P₀ = (H₀ᵀH₀ + λI)⁻¹` where the
+//! regularized Gram matrix is SPD — Cholesky is the right tool. The LU
+//! path is kept for generality (tests, baselines) and as a fallback when a
+//! matrix is not quite SPD in f32.
+
+use super::mat::Mat;
+use anyhow::{bail, Result};
+
+/// Cholesky factorization in place: returns lower-triangular `L` with
+/// `A = L·Lᵀ`. Fails if the matrix is not positive definite.
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            // sum_{k<j} L[i][k] * L[j][k]
+            let mut s = 0.0f64;
+            for k in 0..j {
+                s += l.at(i, k) as f64 * l.at(j, k) as f64;
+            }
+            if i == j {
+                let d = a.at(i, i) as f64 - s;
+                if d <= 0.0 {
+                    bail!("matrix not positive definite at pivot {} (d={})", i, d);
+                }
+                *l.at_mut(i, j) = d.sqrt() as f32;
+            } else {
+                *l.at_mut(i, j) = ((a.at(i, j) as f64 - s) / l.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `A x = b` in place for SPD `A` given its Cholesky factor `L`.
+pub fn cholesky_solve_with(l: &Mat, b: &mut [f32]) {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    // forward: L y = b
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for k in 0..i {
+            s -= l.at(i, k) as f64 * b[k] as f64;
+        }
+        b[i] = (s / l.at(i, i) as f64) as f32;
+    }
+    // backward: Lᵀ x = y
+    for i in (0..n).rev() {
+        let mut s = b[i] as f64;
+        for k in i + 1..n {
+            s -= l.at(k, i) as f64 * b[k] as f64;
+        }
+        b[i] = (s / l.at(i, i) as f64) as f32;
+    }
+}
+
+/// Solve `A X = B` for SPD `A` (B given column-wise as a matrix), in place.
+pub fn cholesky_solve_inplace(a: &Mat, b: &mut Mat) -> Result<()> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    let mut col = vec![0.0f32; n];
+    for j in 0..b.cols {
+        for i in 0..n {
+            col[i] = b.at(i, j);
+        }
+        cholesky_solve_with(&l, &mut col);
+        for i in 0..n {
+            *b.at_mut(i, j) = col[i];
+        }
+    }
+    Ok(())
+}
+
+/// Inverse of an SPD matrix via Cholesky.
+pub fn cholesky_inverse(a: &Mat) -> Result<Mat> {
+    let mut inv = Mat::eye(a.rows);
+    cholesky_solve_inplace(a, &mut inv)?;
+    Ok(inv)
+}
+
+/// Inverse via partially pivoted LU (general square matrices).
+pub fn lu_inverse(a: &Mat) -> Result<Mat> {
+    assert_eq!(a.rows, a.cols, "lu_inverse needs a square matrix");
+    let n = a.rows;
+    // Work in f64 for stability; shapes are small (≤ 512).
+    let mut lu: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut piv: Vec<usize> = (0..n).collect();
+    for k in 0..n {
+        // pivot
+        let mut p = k;
+        let mut pmax = lu[k * n + k].abs();
+        for i in k + 1..n {
+            let v = lu[i * n + k].abs();
+            if v > pmax {
+                pmax = v;
+                p = i;
+            }
+        }
+        if pmax < 1e-300 {
+            bail!("singular matrix at pivot {}", k);
+        }
+        if p != k {
+            for j in 0..n {
+                lu.swap(k * n + j, p * n + j);
+            }
+            piv.swap(k, p);
+        }
+        let pivot = lu[k * n + k];
+        for i in k + 1..n {
+            let f = lu[i * n + k] / pivot;
+            lu[i * n + k] = f;
+            for j in k + 1..n {
+                lu[i * n + j] -= f * lu[k * n + j];
+            }
+        }
+    }
+    // Solve A X = I column by column using the LU factors.
+    let mut inv = Mat::zeros(n, n);
+    let mut col = vec![0.0f64; n];
+    for c in 0..n {
+        for i in 0..n {
+            col[i] = if piv[i] == c { 1.0 } else { 0.0 };
+        }
+        // forward
+        for i in 0..n {
+            for k in 0..i {
+                col[i] -= lu[i * n + k] * col[k];
+            }
+        }
+        // backward
+        for i in (0..n).rev() {
+            for k in i + 1..n {
+                col[i] -= lu[i * n + k] * col[k];
+            }
+            col[i] /= lu[i * n + i];
+        }
+        for i in 0..n {
+            *inv.at_mut(i, c) = col[i] as f32;
+        }
+    }
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+    use crate::util::rng::Rng64;
+
+    fn random_spd(rng: &mut Rng64, n: usize) -> Mat {
+        // A = BᵀB + I is SPD.
+        let b = Mat::from_vec(n, n, gen::vec_normal(rng, n * n, 1.0));
+        let mut g = b.gram();
+        g.add_diag(1.0);
+        g
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng64::new(3);
+        let a = random_spd(&mut rng, 8);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-3, "diff {}", rec.max_abs_diff(&a));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn spd_inverse_property() {
+        forall(
+            "cholesky-inverse",
+            |r| {
+                let n = gen::usize_in(r, 1, 12);
+                random_spd(r, n)
+            },
+            |a| {
+                let inv = cholesky_inverse(a).unwrap();
+                let eye = a.matmul(&inv);
+                eye.max_abs_diff(&Mat::eye(a.rows)) < 1e-2
+            },
+        );
+    }
+
+    #[test]
+    fn lu_inverse_property() {
+        forall(
+            "lu-inverse",
+            |r| {
+                let n = gen::usize_in(r, 1, 12);
+                // General well-conditioned matrix: random + n·I
+                let mut m = Mat::from_vec(n, n, gen::vec_normal(r, n * n, 1.0));
+                m.add_diag(n as f32);
+                m
+            },
+            |a| {
+                let inv = lu_inverse(a).unwrap();
+                a.matmul(&inv).max_abs_diff(&Mat::eye(a.rows)) < 1e-2
+            },
+        );
+    }
+
+    #[test]
+    fn lu_rejects_singular() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(lu_inverse(&a).is_err());
+    }
+
+    #[test]
+    fn lu_matches_cholesky_on_spd() {
+        let mut rng = Rng64::new(17);
+        let a = random_spd(&mut rng, 16);
+        let i1 = cholesky_inverse(&a).unwrap();
+        let i2 = lu_inverse(&a).unwrap();
+        assert!(i1.max_abs_diff(&i2) < 1e-2);
+    }
+
+    #[test]
+    fn solve_matches_inverse() {
+        let mut rng = Rng64::new(23);
+        let a = random_spd(&mut rng, 10);
+        let b = Mat::from_vec(10, 3, gen::vec_normal(&mut rng, 30, 1.0));
+        let mut x = b.clone();
+        cholesky_solve_inplace(&a, &mut x).unwrap();
+        let x2 = cholesky_inverse(&a).unwrap().matmul(&b);
+        assert!(x.max_abs_diff(&x2) < 1e-2);
+    }
+}

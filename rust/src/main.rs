@@ -1,0 +1,261 @@
+//! `odl-har` — the leader CLI: regenerate every paper table/figure, run
+//! custom experiments from TOML configs, and drive the fleet simulator.
+//!
+//! Subcommands (hand-rolled parser; clap is not in the offline vendor set):
+//!
+//! ```text
+//! odl-har table1                      # SRAM size model (exact Table 1)
+//! odl-har table2 [--trials N]        # params + accuracy vs SOTA
+//! odl-har table3 [--trials N]        # accuracy before/after drift
+//! odl-har table4 [--area] [--ablate-divider]
+//! odl-har fig1   [--out DIR]         # per-class PCA CSVs
+//! odl-har fig3   [--trials N] [--metric p1p2|el2n] [--out DIR]
+//! odl-har fig4   [--trials N] [--out DIR]
+//! odl-har run    --config FILE       # custom protocol experiment
+//! odl-har fleet  [--config FILE] [--threaded]
+//! odl-har artifacts-check            # verify PJRT artifacts load + run
+//! ```
+
+use anyhow::{bail, Context, Result};
+use odl_har::config;
+use odl_har::exp::{fig1, fig3, fig4, protocol, table1, table2, table3, table4};
+use odl_har::pruning::Metric;
+use std::path::PathBuf;
+
+/// Tiny argument scanner: flags (`--area`) and options (`--trials 5`).
+struct Args {
+    rest: Vec<String>,
+}
+
+impl Args {
+    fn new(args: Vec<String>) -> Args {
+        Args { rest: args }
+    }
+
+    fn flag(&mut self, name: &str) -> bool {
+        if let Some(pos) = self.rest.iter().position(|a| a == name) {
+            self.rest.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn opt(&mut self, name: &str) -> Result<Option<String>> {
+        if let Some(pos) = self.rest.iter().position(|a| a == name) {
+            if pos + 1 >= self.rest.len() {
+                bail!("{name} requires a value");
+            }
+            self.rest.remove(pos);
+            Ok(Some(self.rest.remove(pos)))
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn opt_usize(&mut self, name: &str, default: usize) -> Result<usize> {
+        Ok(match self.opt(name)? {
+            Some(v) => v.parse().with_context(|| format!("bad {name} value"))?,
+            None => default,
+        })
+    }
+
+    fn finish(self) -> Result<()> {
+        if !self.rest.is_empty() {
+            bail!("unrecognized arguments: {:?}", self.rest);
+        }
+        Ok(())
+    }
+}
+
+fn results_dir(args: &mut Args) -> Result<PathBuf> {
+    let dir = args
+        .opt("--out")?
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("results"));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+fn main() -> Result<()> {
+    odl_har::util::logging::init();
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_help();
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    let mut args = Args::new(argv);
+
+    match cmd.as_str() {
+        "table1" => {
+            args.finish()?;
+            print!("{}", table1::run().render());
+        }
+        "table2" => {
+            let trials = args.opt_usize("--trials", 20)?;
+            args.finish()?;
+            print!("{}", table2::run_table(trials)?.render());
+        }
+        "table3" => {
+            let trials = args.opt_usize("--trials", 20)?;
+            args.finish()?;
+            let (t, _) = table3::run_table(trials)?;
+            print!("{}", t.render());
+        }
+        "table4" => {
+            let area = args.flag("--area");
+            let ablate = args.flag("--ablate-divider");
+            args.finish()?;
+            print!("{}", table4::run(area).render());
+            if ablate {
+                print!("{}", table4::divider_ablation().render());
+            }
+        }
+        "fig1" => {
+            let out = results_dir(&mut args)?;
+            args.finish()?;
+            let mut data_rng = odl_har::util::rng::Rng64::new(0xDA7A_5EED);
+            let pool = match odl_har::data::uci::load_from_env()? {
+                Some(real) => real,
+                None => odl_har::data::SynthHar::new(
+                    odl_har::data::SynthConfig::default(),
+                    &mut data_rng,
+                )
+                .generate(&mut data_rng),
+            };
+            print!("{}", fig1::run(&pool, &out, 7)?.render());
+        }
+        "fig3" => {
+            let trials = args.opt_usize("--trials", 20)?;
+            let metric = match args.opt("--metric")?.as_deref() {
+                None | Some("p1p2") => Metric::P1P2,
+                Some("el2n") => Metric::ErrorL2,
+                Some(other) => bail!("unknown metric '{other}' (p1p2|el2n)"),
+            };
+            let out = results_dir(&mut args)?;
+            args.finish()?;
+            let points = fig3::sweep(trials, metric)?;
+            let (t, csv) = fig3::render(&points, trials, metric)?;
+            print!("{}", t.render());
+            let path = out.join("fig3.csv");
+            std::fs::write(&path, csv)?;
+            println!("csv: {}", path.display());
+            if let Some((red, drop)) = fig3::auto_headline(&points) {
+                println!(
+                    "Auto: comm reduction {red:.1} % (paper: 55.7 %), accuracy drop {drop:.1} pt (paper: 0.9 pt)"
+                );
+            }
+        }
+        "fig4" => {
+            let trials = args.opt_usize("--trials", 20)?;
+            let out = results_dir(&mut args)?;
+            args.finish()?;
+            let points = fig3::sweep(trials, Metric::P1P2)?;
+            let (t, csv) = fig4::run_fig(&points)?;
+            print!("{}", t.render());
+            let path = out.join("fig4.csv");
+            std::fs::write(&path, csv)?;
+            println!("csv: {}", path.display());
+            for (period, red) in fig4::auto_reductions(&points) {
+                println!("Auto reduction @ 1/{period:.0}s events: {red:.1} %");
+            }
+        }
+        "run" => {
+            let cfg_path = args
+                .opt("--config")?
+                .context("run requires --config FILE")?;
+            args.finish()?;
+            let cfg = config::ExperimentConfig::from_file(&PathBuf::from(cfg_path))?.protocol;
+            let agg = protocol::run(&cfg)?;
+            println!("{}", agg.label);
+            println!(
+                "before {:.1}±{:.1}  after {:.1}±{:.1}  comm {:.1} %  queries {:.0}",
+                agg.before.mean(),
+                agg.before.std(),
+                agg.after.mean(),
+                agg.after.std(),
+                agg.comm.mean(),
+                agg.queries.mean()
+            );
+        }
+        "fleet" => {
+            let threaded = args.flag("--threaded");
+            let cfg_path = args.opt("--config")?;
+            args.finish()?;
+            let (scenario, seed) = match cfg_path {
+                Some(p) => config::fleet_from_file(&PathBuf::from(p))?,
+                None => (odl_har::coordinator::Scenario::default(), 1),
+            };
+            if threaded {
+                let counters =
+                    odl_har::coordinator::Fleet::run_threaded(&scenario, seed, 600)?;
+                for (id, (queries, trained)) in counters.iter().enumerate() {
+                    println!("edge {id}: queries {queries}, trained {trained}");
+                }
+            } else {
+                let fleet = odl_har::coordinator::Fleet::new(
+                    odl_har::coordinator::fleet::FleetConfig { scenario, seed },
+                )?;
+                let report = fleet.run();
+                println!(
+                    "fleet: {} edges, horizon {:.0}s, teacher queries {}, channel fail {}/{}",
+                    report.per_edge.len(),
+                    report.horizon_s,
+                    report.teacher_queries,
+                    report.channel_failures,
+                    report.channel_attempts
+                );
+                for (id, m) in report.per_edge.iter().enumerate() {
+                    println!(
+                        "edge {id}: events {} queries {} skips {} trained {} comm {:.1}% power {:.2} mW (core {:.2} + radio {:.2})",
+                        m.events,
+                        m.queries,
+                        m.skips,
+                        m.trained,
+                        m.comm_fraction() * 100.0,
+                        m.mean_power_mw(report.horizon_s),
+                        m.core_energy_mj / report.horizon_s,
+                        m.radio_energy_mj / report.horizon_s,
+                    );
+                }
+            }
+        }
+        "artifacts-check" => {
+            args.finish()?;
+            let rt = odl_har::runtime::Runtime::open_default()?;
+            let mut names: Vec<String> =
+                rt.manifest.artifacts.keys().cloned().collect();
+            names.sort();
+            for name in &names {
+                let exe = rt.load(name)?;
+                println!("OK {name} ({} args)", exe.meta.arg_shapes.len());
+            }
+            println!("{} artifacts compiled successfully", names.len());
+        }
+        "--help" | "-h" | "help" => print_help(),
+        other => {
+            print_help();
+            bail!("unknown subcommand '{other}'");
+        }
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "odl-har — tiny supervised ODL core with auto data pruning (paper reproduction)\n\
+         \n\
+         subcommands:\n\
+           table1                         SRAM size model (Table 1, exact)\n\
+           table2 [--trials N]            params + accuracy vs SOTA (Table 2)\n\
+           table3 [--trials N]            accuracy before/after drift (Table 3)\n\
+           table4 [--area] [--ablate-divider]   core latency/power (Table 4, Fig 5)\n\
+           fig1   [--out DIR]             per-class PCA projections (Figure 1)\n\
+           fig3   [--trials N] [--metric p1p2|el2n] [--out DIR]   pruning sweep (Figure 3)\n\
+           fig4   [--trials N] [--out DIR]      training-mode power (Figure 4)\n\
+           run    --config FILE           custom experiment from TOML\n\
+           fleet  [--config FILE] [--threaded]  multi-edge fleet simulation\n\
+           artifacts-check                compile every PJRT artifact"
+    );
+}

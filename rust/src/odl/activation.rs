@@ -1,0 +1,163 @@
+//! Activation functions and the P1P2 confidence metric (§2.2).
+
+use crate::util::stats;
+
+/// Logistic sigmoid.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// In-place sigmoid over a slice (hidden layer G1).
+pub fn sigmoid_inplace(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = sigmoid(*x);
+    }
+}
+
+/// Numerically stable softmax (output layer G2 → class probabilities).
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let mut out = logits.to_vec();
+    softmax_inplace(&mut out);
+    out
+}
+
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    for x in xs.iter_mut() {
+        *x /= sum;
+    }
+}
+
+/// Prediction summary for one sample: class, top-2 class scores, and the
+/// paper's P1P2 confidence (p1 − p2).
+///
+/// G2 (the output activation of Figure 2(b)) is the **identity**: the
+/// OS-ELM output layer is trained by least squares against one-hot
+/// targets, so the raw outputs O_{i,j} already estimate class posterior
+/// probabilities (≈ E[y_j | x]), and the ASIC has no exp unit for a
+/// softmax. p1/p2 are therefore the top-2 *raw* outputs, clamped to
+/// [0, 1] (the hardware comparator saturates), which gives the P1P2
+/// metric the dynamic range the θ ladder {1, 0.64, …, 0.08} assumes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Prediction {
+    pub class: usize,
+    pub p1: f32,
+    pub p2: f32,
+}
+
+impl Prediction {
+    /// Build from the raw output-layer values (G2 = identity).
+    pub fn from_logits(logits: &[f32]) -> Prediction {
+        let ((i1, p1), (_i2, p2)) = stats::top2(logits);
+        Prediction {
+            class: i1,
+            p1: p1.clamp(0.0, 1.0),
+            p2: p2.clamp(0.0, 1.0),
+        }
+    }
+
+    /// Build with softmax-normalized probabilities (used by the DNN
+    /// baseline, whose cross-entropy training makes softmax the right
+    /// posterior estimate).
+    pub fn from_logits_softmax(logits: &[f32]) -> Prediction {
+        let probs = softmax(logits);
+        let ((i1, p1), (_i2, p2)) = stats::top2(&probs);
+        Prediction { class: i1, p1, p2 }
+    }
+
+    /// The paper's "P1P2" confidence metric.
+    #[inline]
+    pub fn confidence(&self) -> f32 {
+        (self.p1 - self.p2).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+
+    #[test]
+    fn sigmoid_range_and_midpoint() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(10.0) > 0.9999);
+        assert!(sigmoid(-10.0) < 0.0001);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        forall(
+            "softmax-sum",
+            |r| {
+                let n = gen::usize_in(r, 2, 10);
+                gen::vec_f32(r, n, -50.0, 50.0)
+            },
+            |logits| {
+                let p = softmax(logits);
+                let s: f32 = p.iter().sum();
+                (s - 1.0).abs() < 1e-5 && p.iter().all(|&x| x >= 0.0)
+            },
+        );
+    }
+
+    #[test]
+    fn softmax_shift_invariant() {
+        let a = softmax(&[1.0, 2.0, 3.0]);
+        let b = softmax(&[101.0, 102.0, 103.0]);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_handles_extremes() {
+        let p = softmax(&[1000.0, 0.0, -1000.0]);
+        assert!((p[0] - 1.0).abs() < 1e-6);
+        assert!(p.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn prediction_from_logits() {
+        // Raw OS-ELM outputs live near [0, 1] (one-hot regression).
+        let p = Prediction::from_logits(&[0.05, 0.85, 0.25, -0.1]);
+        assert_eq!(p.class, 1);
+        assert!(p.p1 > p.p2);
+        assert!((p.confidence() - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prediction_clamps_out_of_range_outputs() {
+        let p = Prediction::from_logits(&[3.0, -2.0]);
+        assert_eq!((p.p1, p.p2), (1.0, 0.0));
+        let q = Prediction::from_logits_softmax(&[0.0, 3.0, 1.0, -1.0]);
+        assert_eq!(q.class, 1);
+        assert!(q.p1 > q.p2 && q.p1 <= 1.0);
+    }
+
+    #[test]
+    fn confidence_bounds() {
+        forall(
+            "p1p2-bounds",
+            |r| {
+                let n = gen::usize_in(r, 2, 8);
+                gen::vec_f32(r, n, -10.0, 10.0)
+            },
+            |logits| {
+                let c = Prediction::from_logits(logits).confidence();
+                (0.0..=1.0).contains(&c)
+            },
+        );
+    }
+
+    #[test]
+    fn uniform_logits_zero_confidence() {
+        let p = Prediction::from_logits(&[2.0, 2.0, 2.0]);
+        assert!(p.confidence().abs() < 1e-6);
+    }
+}

@@ -1,0 +1,151 @@
+//! Input-weight (α) providers: the paper's two variants.
+//!
+//! * **ODLBase** (`AlphaKind::Stored`): 32-bit random values stored as α —
+//!   n·N words of SRAM on the ASIC.
+//! * **ODLHash** (`AlphaKind::Hash`): α regenerated from a 16-bit Xorshift,
+//!   zero SRAM (Table 1's memory win comes exactly from dropping this
+//!   array).
+//!
+//! Both variants expose α through the same interface; the golden model
+//! materializes the matrix once per model instance (host memory is not the
+//! constrained resource here — the *hardware* memory model in
+//! [`crate::hw::memory`] is what tracks the paper's SRAM cost).
+
+use super::xorshift::counter_alpha;
+use crate::util::rng::Rng64;
+
+/// Which α scheme a model uses. Carried through configs, experiment
+/// harnesses, and the hardware memory model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlphaKind {
+    /// ODLBase: stored 32-bit random weights.
+    Stored,
+    /// ODLHash: 16-bit Xorshift-generated weights (counter-based variant).
+    Hash,
+}
+
+impl AlphaKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            AlphaKind::Stored => "ODLBase",
+            AlphaKind::Hash => "ODLHash",
+        }
+    }
+}
+
+/// A materialized α matrix (n × hidden, row-major) plus its provenance.
+#[derive(Clone, Debug)]
+pub struct AlphaProvider {
+    pub kind: AlphaKind,
+    pub n: usize,
+    pub hidden: usize,
+    pub scale: f32,
+    data: Vec<f32>,
+}
+
+impl AlphaProvider {
+    /// ODLBase: α ~ U[−1, 1) · scale from the experiment RNG stream.
+    pub fn stored(rng: &mut Rng64, n: usize, hidden: usize, scale: f32) -> Self {
+        let data = (0..n * hidden)
+            .map(|_| rng.uniform(-1.0, 1.0) as f32 * scale)
+            .collect();
+        Self {
+            kind: AlphaKind::Stored,
+            n,
+            hidden,
+            scale,
+            data,
+        }
+    }
+
+    /// ODLHash: α from the counter-based 16-bit Xorshift (kernel-identical).
+    pub fn hash(seed: u16, n: usize, hidden: usize, scale: f32) -> Self {
+        Self {
+            kind: AlphaKind::Hash,
+            n,
+            hidden,
+            scale,
+            data: counter_alpha(seed, n, hidden, scale),
+        }
+    }
+
+    /// ODLHash with the ASIC's *sequential* Xorshift stream — feature-
+    /// compatible with [`crate::odl::fixed_oselm::FixedOsElm`] (used for
+    /// float↔fixed co-simulation handoffs).
+    pub fn hash_sequential(seed: u16, n: usize, hidden: usize, scale: f32) -> Self {
+        Self {
+            kind: AlphaKind::Hash,
+            n,
+            hidden,
+            scale,
+            data: super::xorshift::sequential_alpha(seed, n, hidden, scale),
+        }
+    }
+
+    /// Row-major (n × hidden) weight data.
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Column `j` gathered (used by tests; the hot path walks rows).
+    pub fn column(&self, j: usize) -> Vec<f32> {
+        (0..self.n).map(|i| self.data[i * self.hidden + j]).collect()
+    }
+
+    /// Hidden pre-activation `xᵀ·α` into `out` (length hidden).
+    ///
+    /// Row-major walk: for each input feature i, axpy its α row into the
+    /// accumulator — sequential memory access on both x and α.
+    pub fn accumulate_hidden(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.n, "input dim mismatch");
+        assert_eq!(out.len(), self.hidden, "hidden dim mismatch");
+        out.fill(0.0);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &self.data[i * self.hidden..(i + 1) * self.hidden];
+            crate::linalg::mat::axpy(xi, row, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_alpha_reproducible() {
+        let a = AlphaProvider::hash(7, 20, 10, 1.0);
+        let b = AlphaProvider::hash(7, 20, 10, 1.0);
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn stored_alpha_in_range() {
+        let mut rng = Rng64::new(1);
+        let a = AlphaProvider::stored(&mut rng, 50, 16, 0.5);
+        assert!(a.data().iter().all(|&w| (-0.5..0.5).contains(&w)));
+        assert_eq!(a.data().len(), 50 * 16);
+    }
+
+    #[test]
+    fn accumulate_hidden_matches_matvec() {
+        let a = AlphaProvider::hash(3, 12, 5, 1.0);
+        let x: Vec<f32> = (0..12).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut out = vec![0.0f32; 5];
+        a.accumulate_hidden(&x, &mut out);
+        for j in 0..5 {
+            let col = a.column(j);
+            let expect: f32 = x.iter().zip(&col).map(|(u, v)| u * v).sum();
+            assert!((out[j] - expect).abs() < 1e-4, "col {j}");
+        }
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(AlphaKind::Stored.label(), "ODLBase");
+        assert_eq!(AlphaKind::Hash.label(), "ODLHash");
+    }
+}

@@ -1,0 +1,295 @@
+//! Backprop MLP baseline — the paper's "DNN (561,512,256,6)" row in
+//! Table 3: a simple two-hidden-layer network trained with SGD, *without*
+//! on-device learning capability (its Table-3 role is to show that even a
+//! bigger offline-trained model degrades under drift).
+//!
+//! Implementation: plain SGD + momentum on softmax cross-entropy, ReLU
+//! hidden layers, He init. A native rust twin of the L2 JAX definition in
+//! `python/compile/model.py` (`dnn_*` graphs); the two are cross-checked
+//! through the PJRT runtime in integration tests.
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng64;
+use crate::util::stats::argmax;
+
+/// Layer sizes, e.g. [561, 512, 256, 6].
+#[derive(Clone, Debug)]
+pub struct DnnConfig {
+    pub layers: Vec<usize>,
+    pub lr: f32,
+    pub momentum: f32,
+    pub epochs: usize,
+    pub batch: usize,
+}
+
+impl Default for DnnConfig {
+    fn default() -> Self {
+        Self {
+            layers: vec![561, 512, 256, 6],
+            lr: 0.05,
+            momentum: 0.9,
+            epochs: 10,
+            batch: 32,
+        }
+    }
+}
+
+/// A trained / trainable MLP.
+pub struct Dnn {
+    pub cfg: DnnConfig,
+    /// weights[l]: (layers[l] × layers[l+1]) row-major; biases[l]: layers[l+1].
+    pub weights: Vec<Mat>,
+    pub biases: Vec<Vec<f32>>,
+    vel_w: Vec<Mat>,
+    vel_b: Vec<Vec<f32>>,
+}
+
+impl Dnn {
+    pub fn new(cfg: DnnConfig, rng: &mut Rng64) -> Self {
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        let mut vel_w = Vec::new();
+        let mut vel_b = Vec::new();
+        for w in cfg.layers.windows(2) {
+            let (fan_in, fan_out) = (w[0], w[1]);
+            let std = (2.0 / fan_in as f64).sqrt();
+            let data: Vec<f32> = (0..fan_in * fan_out)
+                .map(|_| rng.normal_ms(0.0, std) as f32)
+                .collect();
+            weights.push(Mat::from_vec(fan_in, fan_out, data));
+            biases.push(vec![0.0; fan_out]);
+            vel_w.push(Mat::zeros(fan_in, fan_out));
+            vel_b.push(vec![0.0; fan_out]);
+        }
+        Self {
+            cfg,
+            weights,
+            biases,
+            vel_w,
+            vel_b,
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.weights
+            .iter()
+            .map(|w| w.data.len())
+            .chain(self.biases.iter().map(|b| b.len()))
+            .sum()
+    }
+
+    /// Forward pass for one sample; returns activations per layer
+    /// (activations[0] = input, last = logits).
+    fn forward(&self, x: &[f32]) -> Vec<Vec<f32>> {
+        let n_layers = self.weights.len();
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers + 1);
+        acts.push(x.to_vec());
+        for l in 0..n_layers {
+            let input = &acts[l];
+            let w = &self.weights[l];
+            let mut out = self.biases[l].clone();
+            for (i, &xi) in input.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                crate::linalg::mat::axpy(xi, w.row(i), &mut out);
+            }
+            if l + 1 < n_layers {
+                for v in out.iter_mut() {
+                    *v = v.max(0.0); // ReLU
+                }
+            }
+            acts.push(out);
+        }
+        acts
+    }
+
+    /// Logits for one sample.
+    pub fn logits(&self, x: &[f32]) -> Vec<f32> {
+        self.forward(x).pop().unwrap()
+    }
+
+    pub fn predict(&self, x: &[f32]) -> usize {
+        argmax(&self.logits(x))
+    }
+
+    pub fn accuracy(&self, xs: &Mat, labels: &[usize]) -> f64 {
+        if xs.rows == 0 {
+            return 0.0;
+        }
+        let correct = (0..xs.rows)
+            .filter(|&r| self.predict(xs.row(r)) == labels[r])
+            .count();
+        correct as f64 / xs.rows as f64
+    }
+
+    /// One SGD minibatch step on softmax cross-entropy; returns mean loss.
+    pub fn train_batch(&mut self, xs: &Mat, labels: &[usize], rows: &[usize]) -> f64 {
+        let n_layers = self.weights.len();
+        let scale = 1.0 / rows.len() as f32;
+        // gradient accumulators
+        let mut gw: Vec<Mat> = self
+            .weights
+            .iter()
+            .map(|w| Mat::zeros(w.rows, w.cols))
+            .collect();
+        let mut gb: Vec<Vec<f32>> = self.biases.iter().map(|b| vec![0.0; b.len()]).collect();
+        let mut loss = 0.0f64;
+
+        for &r in rows {
+            let acts = self.forward(xs.row(r));
+            let logits = acts.last().unwrap();
+            let probs = crate::odl::activation::softmax(logits);
+            let y = labels[r];
+            loss += -((probs[y].max(1e-9)) as f64).ln();
+            // delta at output: p − onehot(y)
+            let mut delta: Vec<f32> = probs;
+            delta[y] -= 1.0;
+            for l in (0..n_layers).rev() {
+                let input = &acts[l];
+                // dW += inputᵀ · delta ; db += delta
+                for (i, &xi) in input.iter().enumerate() {
+                    if xi != 0.0 {
+                        crate::linalg::mat::axpy(xi * scale, &delta, gw[l].row_mut(i));
+                    }
+                }
+                crate::linalg::mat::axpy(scale, &delta, &mut gb[l]);
+                if l > 0 {
+                    // propagate: delta_prev = (W · delta) ⊙ relu'(z_prev)
+                    let w = &self.weights[l];
+                    let mut prev = vec![0.0f32; w.rows];
+                    for (i, p) in prev.iter_mut().enumerate() {
+                        *p = crate::linalg::mat::dot(w.row(i), &delta);
+                    }
+                    for (p, &a) in prev.iter_mut().zip(&acts[l]) {
+                        if a <= 0.0 {
+                            *p = 0.0;
+                        }
+                    }
+                    delta = prev;
+                }
+            }
+        }
+
+        // momentum update
+        for l in 0..n_layers {
+            for (v, g) in self.vel_w[l].data.iter_mut().zip(&gw[l].data) {
+                *v = self.cfg.momentum * *v - self.cfg.lr * g;
+            }
+            for (w, v) in self.weights[l].data.iter_mut().zip(&self.vel_w[l].data) {
+                *w += v;
+            }
+            for (v, g) in self.vel_b[l].iter_mut().zip(&gb[l]) {
+                *v = self.cfg.momentum * *v - self.cfg.lr * g;
+            }
+            for (b, v) in self.biases[l].iter_mut().zip(&self.vel_b[l]) {
+                *b += v;
+            }
+        }
+        loss / rows.len() as f64
+    }
+
+    /// Full training loop; returns final-epoch mean loss.
+    pub fn fit(&mut self, xs: &Mat, labels: &[usize], rng: &mut Rng64) -> f64 {
+        let mut order: Vec<usize> = (0..xs.rows).collect();
+        let mut last = f64::NAN;
+        for _ in 0..self.cfg.epochs {
+            rng.shuffle(&mut order);
+            let mut epoch_loss = 0.0;
+            let mut batches = 0;
+            for chunk in order.chunks(self.cfg.batch) {
+                epoch_loss += self.train_batch(xs, labels, chunk);
+                batches += 1;
+            }
+            last = epoch_loss / batches.max(1) as f64;
+        }
+        last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(rng: &mut Rng64, rows: usize, n_in: usize) -> (Mat, Vec<usize>) {
+        let mut xs = Mat::zeros(rows, n_in);
+        let mut labels = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let c = rng.below(3);
+            labels.push(c);
+            for j in 0..n_in {
+                let mean = if j < 3 {
+                    if j == c {
+                        1.5
+                    } else {
+                        -0.7
+                    }
+                } else {
+                    0.0
+                };
+                *xs.at_mut(r, j) = rng.normal_ms(mean, 0.5) as f32;
+            }
+        }
+        (xs, labels)
+    }
+
+    fn small_cfg() -> DnnConfig {
+        DnnConfig {
+            layers: vec![10, 16, 8, 3],
+            lr: 0.05,
+            momentum: 0.9,
+            epochs: 15,
+            batch: 16,
+        }
+    }
+
+    #[test]
+    fn learns_toy_problem() {
+        let mut rng = Rng64::new(7);
+        let (xs, labels) = toy(&mut rng, 300, 10);
+        let mut dnn = Dnn::new(small_cfg(), &mut rng);
+        let loss = dnn.fit(&xs, &labels, &mut rng);
+        assert!(loss < 0.3, "final loss {loss}");
+        assert!(dnn.accuracy(&xs, &labels) > 0.9);
+    }
+
+    #[test]
+    fn param_count() {
+        let mut rng = Rng64::new(1);
+        let dnn = Dnn::new(
+            DnnConfig {
+                layers: vec![561, 512, 256, 6],
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        // 561·512 + 512 + 512·256 + 256 + 256·6 + 6 = 420_486
+        assert_eq!(dnn.n_params(), 561 * 512 + 512 + 512 * 256 + 256 + 256 * 6 + 6);
+    }
+
+    #[test]
+    fn loss_decreases() {
+        let mut rng = Rng64::new(9);
+        let (xs, labels) = toy(&mut rng, 200, 10);
+        let mut dnn = Dnn::new(small_cfg(), &mut rng);
+        let rows: Vec<usize> = (0..xs.rows).collect();
+        let l0 = dnn.train_batch(&xs, &labels, &rows);
+        for _ in 0..10 {
+            dnn.train_batch(&xs, &labels, &rows);
+        }
+        let l1 = dnn.train_batch(&xs, &labels, &rows);
+        assert!(l1 < l0, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = || {
+            let mut rng = Rng64::new(5);
+            let (xs, labels) = toy(&mut rng, 100, 10);
+            let mut dnn = Dnn::new(small_cfg(), &mut rng);
+            dnn.fit(&xs, &labels, &mut rng);
+            dnn.logits(&vec![0.3; 10])
+        };
+        assert_eq!(mk(), mk());
+    }
+}

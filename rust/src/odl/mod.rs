@@ -1,0 +1,20 @@
+//! The paper's on-device-learning core: OS-ELM prediction + sequential
+//! training, with the ODLHash weight-generation scheme (16-bit Xorshift in
+//! place of stored random input weights), in three implementations:
+//!
+//! * [`oselm::OsElm`] — f32 golden model (the reference for everything),
+//! * [`fixed_oselm::FixedOsElm`] — bit-level Q16.16 model of the ASIC
+//!   datapath (what [`crate::hw::cycles`] charges cycles for),
+//! * the AOT JAX/Pallas artifacts executed through [`crate::runtime`]
+//!   (cross-checked against the golden model in integration tests).
+
+pub mod activation;
+pub mod alpha;
+pub mod dnn;
+pub mod fixed_oselm;
+pub mod oselm;
+pub mod xorshift;
+
+pub use alpha::{AlphaKind, AlphaProvider};
+pub use oselm::{OsElm, OsElmConfig};
+pub use xorshift::{counter_alpha, counter_alpha_value, Xorshift16};

@@ -1,0 +1,447 @@
+//! OS-ELM (Liang et al. 2006) — the paper's ODL algorithm (Figure 2(b)/(d)).
+//!
+//! Network: `x ∈ Rⁿ → H = G1(x·α) ∈ R^N → O = H·β ∈ R^m`, α fixed
+//! (stored or hash-generated, see [`super::alpha`]), β trained.
+//!
+//! * **Batch init** (time 0, k₀ ≥ N samples): `P₀ = (H₀ᵀH₀ + λI)⁻¹`,
+//!   `β₀ = P₀·H₀ᵀ·Y₀` — ridge-regularized least squares.
+//! * **Sequential update** (Figure 2(d), one sample): with `h = H_i`,
+//!   `Ph = P_{i−1}·h`, `denom = 1 + hᵀ·Ph`,
+//!   `P_i = P_{i−1} − Ph·Phᵀ/denom`,
+//!   `β_i = β_{i−1} + Ph·(yᵀ − hᵀ·β_{i−1})/denom`
+//!   (Sherman–Morrison form of recursive least squares).
+//!
+//! The update is the L3 **hot path**: it runs once per training-mode event
+//! for every edge device, so it is written allocation-free against a
+//! preallocated [`Workspace`].
+
+use super::activation::{sigmoid_inplace, Prediction};
+use super::alpha::{AlphaKind, AlphaProvider};
+use crate::linalg::{cholesky_inverse, lu_inverse, Mat};
+use crate::util::rng::Rng64;
+use anyhow::{ensure, Context, Result};
+
+/// Model hyperparameters (defaults = the paper's prototype: 561/128/6).
+#[derive(Clone, Copy, Debug)]
+pub struct OsElmConfig {
+    /// Input features n.
+    pub n_in: usize,
+    /// Hidden nodes N.
+    pub n_hidden: usize,
+    /// Output classes m.
+    pub n_out: usize,
+    /// α scheme (ODLBase stored vs ODLHash).
+    pub alpha: AlphaKind,
+    /// Ridge regularization λ for the batch init.
+    pub lambda: f32,
+    /// α scale; 1/√n keeps pre-activations O(1) for standardized inputs.
+    pub alpha_scale: Option<f32>,
+}
+
+impl Default for OsElmConfig {
+    fn default() -> Self {
+        Self {
+            n_in: 561,
+            n_hidden: 128,
+            n_out: 6,
+            alpha: AlphaKind::Hash,
+            lambda: 0.01,
+            alpha_scale: None,
+        }
+    }
+}
+
+impl OsElmConfig {
+    pub fn scale(&self) -> f32 {
+        self.alpha_scale
+            .unwrap_or_else(|| 1.0 / (self.n_in as f32).sqrt())
+    }
+}
+
+/// Preallocated scratch for the sequential update (no allocation per step).
+#[derive(Clone, Debug)]
+pub struct Workspace {
+    /// Hidden activations h (N).
+    pub h: Vec<f32>,
+    /// P·h (N).
+    pub ph: Vec<f32>,
+    /// Prediction error e = y − hᵀβ (m).
+    pub err: Vec<f32>,
+    /// Output logits (m).
+    pub logits: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new(cfg: &OsElmConfig) -> Self {
+        Self {
+            h: vec![0.0; cfg.n_hidden],
+            ph: vec![0.0; cfg.n_hidden],
+            err: vec![0.0; cfg.n_out],
+            logits: vec![0.0; cfg.n_out],
+        }
+    }
+}
+
+/// The f32 OS-ELM golden model.
+#[derive(Clone, Debug)]
+pub struct OsElm {
+    pub cfg: OsElmConfig,
+    pub alpha: AlphaProvider,
+    /// β ∈ R^{N×m}, row-major.
+    pub beta: Mat,
+    /// P ∈ R^{N×N}, row-major, symmetric.
+    pub p: Mat,
+    /// Number of sequential updates applied since init.
+    pub steps: u64,
+    ws: Workspace,
+}
+
+impl OsElm {
+    /// Create with α drawn per the config; β/P zero until [`Self::init_batch`].
+    pub fn new(cfg: OsElmConfig, rng: &mut Rng64, hash_seed: u16) -> Self {
+        let scale = cfg.scale();
+        let alpha = match cfg.alpha {
+            AlphaKind::Stored => AlphaProvider::stored(rng, cfg.n_in, cfg.n_hidden, scale),
+            AlphaKind::Hash => AlphaProvider::hash(hash_seed, cfg.n_in, cfg.n_hidden, scale),
+        };
+        Self {
+            alpha,
+            beta: Mat::zeros(cfg.n_hidden, cfg.n_out),
+            p: Mat::zeros(cfg.n_hidden, cfg.n_hidden),
+            steps: 0,
+            ws: Workspace::new(&cfg),
+            cfg,
+        }
+    }
+
+    /// Replace the α provider (co-simulation / ablation hook). Resets β/P
+    /// implicitly being invalid is the caller's concern; normally called
+    /// before `init_batch`.
+    pub fn set_alpha(&mut self, alpha: AlphaProvider) {
+        assert_eq!(alpha.n, self.cfg.n_in, "alpha n mismatch");
+        assert_eq!(alpha.hidden, self.cfg.n_hidden, "alpha hidden mismatch");
+        self.alpha = alpha;
+    }
+
+    /// Hidden activations for one sample into `out`: `G1(x·α)`.
+    pub fn hidden(&self, x: &[f32], out: &mut [f32]) {
+        self.alpha.accumulate_hidden(x, out);
+        sigmoid_inplace(out);
+    }
+
+    /// Hidden activations for a batch (rows of `xs`).
+    pub fn hidden_batch(&self, xs: &Mat) -> Mat {
+        ensure_dim(xs.cols, self.cfg.n_in);
+        let mut h = Mat::zeros(xs.rows, self.cfg.n_hidden);
+        for r in 0..xs.rows {
+            let row = &mut h.data[r * self.cfg.n_hidden..(r + 1) * self.cfg.n_hidden];
+            self.alpha.accumulate_hidden(xs.row(r), row);
+            sigmoid_inplace(row);
+        }
+        h
+    }
+
+    /// Batch initialization on (X₀, labels): `P₀=(H₀ᵀH₀+λI)⁻¹`, `β₀=P₀H₀ᵀY₀`.
+    pub fn init_batch(&mut self, xs: &Mat, labels: &[usize]) -> Result<()> {
+        ensure!(
+            xs.rows == labels.len(),
+            "init_batch: {} rows vs {} labels",
+            xs.rows,
+            labels.len()
+        );
+        ensure!(
+            xs.rows >= self.cfg.n_hidden,
+            "OS-ELM init needs ≥ N samples ({} < {})",
+            xs.rows,
+            self.cfg.n_hidden
+        );
+        let h = self.hidden_batch(xs);
+        let mut gram = h.gram();
+        gram.add_diag(self.cfg.lambda);
+        self.p = cholesky_inverse(&gram)
+            .or_else(|_| lu_inverse(&gram))
+            .context("OS-ELM init: Gram matrix inversion failed")?;
+        // β = P · Hᵀ · Y, computed as P · (Hᵀ Y) to stay N×m.
+        let mut hty = Mat::zeros(self.cfg.n_hidden, self.cfg.n_out);
+        for (r, &lbl) in labels.iter().enumerate() {
+            ensure!(lbl < self.cfg.n_out, "label {} out of range", lbl);
+            let hrow = h.row(r);
+            for j in 0..self.cfg.n_hidden {
+                *hty.at_mut(j, lbl) += hrow[j];
+            }
+        }
+        self.beta = self.p.matmul(&hty);
+        self.steps = 0;
+        Ok(())
+    }
+
+    /// One sequential training step (Figure 2(d)). `label` is the one-hot
+    /// target class (the teacher's `t_i`). Allocation-free.
+    pub fn train_step(&mut self, x: &[f32], label: usize) {
+        debug_assert!(label < self.cfg.n_out);
+        let nh = self.cfg.n_hidden;
+        let m = self.cfg.n_out;
+
+        // h = G1(x·α)   — split borrows: compute into a temp view of ws.h
+        self.alpha.accumulate_hidden(x, &mut self.ws.h);
+        sigmoid_inplace(&mut self.ws.h);
+
+        // Ph = P·h ; denom = 1 + hᵀPh
+        let (h, ph) = (&self.ws.h, &mut self.ws.ph);
+        for i in 0..nh {
+            ph[i] = crate::linalg::mat::dot(self.p.row(i), h);
+        }
+        let denom = 1.0 + crate::linalg::mat::dot(h, ph);
+        let inv_denom = 1.0 / denom;
+
+        // err = y − hᵀβ (length m)
+        for j in 0..m {
+            self.ws.err[j] = if j == label { 1.0 } else { 0.0 };
+        }
+        for i in 0..nh {
+            let hi = h[i];
+            if hi == 0.0 {
+                continue;
+            }
+            let brow = self.beta.row(i);
+            for j in 0..m {
+                self.ws.err[j] -= hi * brow[j];
+            }
+        }
+
+        // Fused rank-1 sweeps (one pass over rows i):
+        //   P ← P − Ph·Phᵀ/denom ;  β ← β + Ph·errᵀ/denom
+        // Keeping the P row and the β row of the same i adjacent in time
+        // preserves the scale value in-register and halves loop overhead.
+        for i in 0..nh {
+            let s = ph[i] * inv_denom;
+            if s == 0.0 {
+                continue;
+            }
+            let prow = &mut self.p.data[i * nh..(i + 1) * nh];
+            for (pj, &phj) in prow.iter_mut().zip(ph.iter()) {
+                *pj -= s * phj;
+            }
+            let brow = &mut self.beta.data[i * m..(i + 1) * m];
+            for (bj, &ej) in brow.iter_mut().zip(self.ws.err.iter()) {
+                *bj += s * ej;
+            }
+        }
+        self.steps += 1;
+    }
+
+    /// Predict one sample: logits + class + P1P2 confidence.
+    pub fn predict(&mut self, x: &[f32]) -> Prediction {
+        let nh = self.cfg.n_hidden;
+        self.alpha.accumulate_hidden(x, &mut self.ws.h);
+        sigmoid_inplace(&mut self.ws.h);
+        let m = self.cfg.n_out;
+        self.ws.logits.fill(0.0);
+        for i in 0..nh {
+            let hi = self.ws.h[i];
+            if hi == 0.0 {
+                continue;
+            }
+            let brow = self.beta.row(i);
+            for j in 0..m {
+                self.ws.logits[j] += hi * brow[j];
+            }
+        }
+        Prediction::from_logits(&self.ws.logits)
+    }
+
+    /// Raw logits for one sample (used by tests / the Error-L2 pruning metric).
+    pub fn logits(&mut self, x: &[f32]) -> Vec<f32> {
+        let _ = self.predict(x);
+        self.ws.logits.clone()
+    }
+
+    /// Classification accuracy over a labelled set.
+    pub fn accuracy(&mut self, xs: &Mat, labels: &[usize]) -> f64 {
+        assert_eq!(xs.rows, labels.len());
+        if xs.rows == 0 {
+            return 0.0;
+        }
+        let correct = (0..xs.rows)
+            .filter(|&r| self.predict(xs.row(r)).class == labels[r])
+            .count();
+        correct as f64 / xs.rows as f64
+    }
+}
+
+fn ensure_dim(got: usize, want: usize) {
+    assert_eq!(got, want, "feature dimension mismatch");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::gen;
+
+    /// A small linearly-separable-ish 3-class problem.
+    fn toy_data(rng: &mut Rng64, rows: usize, n_in: usize) -> (Mat, Vec<usize>) {
+        let mut xs = Mat::zeros(rows, n_in);
+        let mut labels = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let c = rng.below(3);
+            labels.push(c);
+            for j in 0..n_in {
+                // class-dependent mean on the first few features
+                let mean = if j < 3 {
+                    if j == c {
+                        2.0
+                    } else {
+                        -1.0
+                    }
+                } else {
+                    0.0
+                };
+                *xs.at_mut(r, j) = rng.normal_ms(mean, 0.6) as f32;
+            }
+        }
+        (xs, labels)
+    }
+
+    fn small_cfg(alpha: AlphaKind) -> OsElmConfig {
+        OsElmConfig {
+            n_in: 12,
+            n_hidden: 24,
+            n_out: 3,
+            alpha,
+            lambda: 0.01,
+            alpha_scale: None,
+        }
+    }
+
+    #[test]
+    fn init_batch_learns_toy_problem() {
+        for alpha in [AlphaKind::Hash, AlphaKind::Stored] {
+            let mut rng = Rng64::new(5);
+            let (xs, labels) = toy_data(&mut rng, 200, 12);
+            let mut m = OsElm::new(small_cfg(alpha), &mut rng, 7);
+            m.init_batch(&xs, &labels).unwrap();
+            let acc = m.accuracy(&xs, &labels);
+            assert!(acc > 0.95, "{alpha:?} train accuracy {acc}");
+        }
+    }
+
+    #[test]
+    fn sequential_matches_batch_ridge() {
+        // Property: init on k0 then seq-train on the rest ≈ batch ridge
+        // solution on all samples (RLS exactness, up to f32 drift).
+        let mut rng = Rng64::new(9);
+        let (xs, labels) = toy_data(&mut rng, 160, 12);
+        let cfg = small_cfg(AlphaKind::Hash);
+
+        let mut seq = OsElm::new(cfg, &mut rng.clone(), 3);
+        let k0 = 40;
+        let init = Mat::from_vec(k0, 12, xs.data[..k0 * 12].to_vec());
+        seq.init_batch(&init, &labels[..k0]).unwrap();
+        for r in k0..xs.rows {
+            seq.train_step(xs.row(r), labels[r]);
+        }
+
+        let mut batch = OsElm::new(cfg, &mut rng.clone(), 3);
+        batch.init_batch(&xs, &labels).unwrap();
+
+        let diff = seq.beta.max_abs_diff(&batch.beta);
+        assert!(diff < 5e-2, "beta diverged: {diff}");
+        let acc_seq = seq.accuracy(&xs, &labels);
+        let acc_batch = batch.accuracy(&xs, &labels);
+        assert!(
+            (acc_seq - acc_batch).abs() < 0.03,
+            "seq {acc_seq} vs batch {acc_batch}"
+        );
+    }
+
+    #[test]
+    fn train_step_reduces_error_on_sample() {
+        let mut rng = Rng64::new(11);
+        let (xs, labels) = toy_data(&mut rng, 60, 12);
+        let mut m = OsElm::new(small_cfg(AlphaKind::Hash), &mut rng, 2);
+        m.init_batch(&xs, &labels).unwrap();
+        // A fresh sample from class 0 trained repeatedly must move logits
+        // toward one-hot(0).
+        let x: Vec<f32> = (0..12)
+            .map(|j| if j == 0 { 2.0 } else { -0.5 })
+            .collect();
+        let before = m.logits(&x)[0];
+        for _ in 0..5 {
+            m.train_step(&x, 0);
+        }
+        let after = m.logits(&x)[0];
+        assert!(after > before, "logit for trained class must grow");
+    }
+
+    #[test]
+    fn p_stays_symmetric() {
+        let mut rng = Rng64::new(13);
+        let (xs, labels) = toy_data(&mut rng, 120, 12);
+        let cfg = small_cfg(AlphaKind::Hash);
+        let mut m = OsElm::new(cfg, &mut rng, 8);
+        m.init_batch(&xs, &labels).unwrap();
+        for r in 0..60 {
+            m.train_step(xs.row(r), labels[r]);
+        }
+        let pt = m.p.transpose();
+        assert!(m.p.max_abs_diff(&pt) < 1e-3, "P must stay symmetric");
+    }
+
+    #[test]
+    fn init_requires_enough_samples() {
+        let mut rng = Rng64::new(1);
+        let cfg = small_cfg(AlphaKind::Hash);
+        let mut m = OsElm::new(cfg, &mut rng, 1);
+        let xs = Mat::zeros(10, 12); // < n_hidden = 24
+        let labels = vec![0usize; 10];
+        assert!(m.init_batch(&xs, &labels).is_err());
+    }
+
+    #[test]
+    fn init_rejects_bad_labels() {
+        let mut rng = Rng64::new(1);
+        let cfg = small_cfg(AlphaKind::Hash);
+        let mut m = OsElm::new(cfg, &mut rng, 1);
+        let (xs, mut labels) = toy_data(&mut rng, 40, 12);
+        labels[5] = 99;
+        assert!(m.init_batch(&xs, &labels).is_err());
+    }
+
+    #[test]
+    fn hash_models_identical_across_instances() {
+        // ODLHash with same seed ⇒ identical α ⇒ identical trained model.
+        let mut rng_data = Rng64::new(21);
+        let (xs, labels) = toy_data(&mut rng_data, 80, 12);
+        let cfg = small_cfg(AlphaKind::Hash);
+        let mut m1 = OsElm::new(cfg, &mut Rng64::new(100), 42);
+        let mut m2 = OsElm::new(cfg, &mut Rng64::new(200), 42);
+        m1.init_batch(&xs, &labels).unwrap();
+        m2.init_batch(&xs, &labels).unwrap();
+        assert_eq!(m1.beta.data, m2.beta.data);
+    }
+
+    #[test]
+    fn prediction_probabilities_valid() {
+        let mut rng = Rng64::new(31);
+        let (xs, labels) = toy_data(&mut rng, 80, 12);
+        let mut m = OsElm::new(small_cfg(AlphaKind::Stored), &mut rng, 0);
+        m.init_batch(&xs, &labels).unwrap();
+        let x = gen::vec_normal(&mut rng, 12, 1.0);
+        let p = m.predict(&x);
+        assert!(p.class < 3);
+        assert!(p.p1 >= p.p2 && p.p2 >= 0.0 && p.p1 <= 1.0);
+    }
+
+    #[test]
+    fn steps_counter_tracks() {
+        let mut rng = Rng64::new(41);
+        let (xs, labels) = toy_data(&mut rng, 60, 12);
+        let mut m = OsElm::new(small_cfg(AlphaKind::Hash), &mut rng, 5);
+        m.init_batch(&xs, &labels).unwrap();
+        assert_eq!(m.steps, 0);
+        for r in 0..10 {
+            m.train_step(xs.row(r), labels[r]);
+        }
+        assert_eq!(m.steps, 10);
+    }
+}

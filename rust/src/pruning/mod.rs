@@ -1,0 +1,372 @@
+//! Automatic data pruning (§2.2) — the paper's main system contribution.
+//!
+//! During the training mode, an edge device may *skip* the teacher query
+//! (and the sequential train step) when all three conditions hold:
+//!
+//! 1. a pre-specified number of samples has been trained (warmup,
+//!    `max(N, 288)` in the paper's experiments),
+//! 2. data drift is not currently detected,
+//! 3. the confidence of the locally predicted label is high:
+//!    `p1 − p2 > θ` ("P1P2" metric).
+//!
+//! θ is auto-tuned at runtime ([`AutoTheta`]): start high, decrease after
+//! `X` consecutive successes (a skip, or a query whose local prediction
+//! matched the teacher), increase on a query that reveals a mismatch.
+//! The paper's broad ladder is {1, 0.64, 0.32, 0.16, 0.08} with X = 10.
+
+use crate::odl::activation::Prediction;
+
+/// Paper's auto-tuning ladder (θ values, high → low).
+pub const THETA_LADDER: [f32; 5] = [1.0, 0.64, 0.32, 0.16, 0.08];
+/// Paper's conservative consecutive-success requirement.
+pub const DEFAULT_X: u32 = 10;
+/// Paper's warmup rule: max(N, 288) samples before pruning engages.
+pub fn warmup_for(n_hidden: usize) -> usize {
+    n_hidden.max(288)
+}
+
+/// Confidence metric: the paper's P1P2, plus the Error-L2-Norm alternative
+/// it mentions (comparisons "omitted due to page limitation" — included
+/// here as an ablation — `odl-har fig3 --metric el2n` and the EL2N sweep in `bench_fig3_pruning`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    /// p1 − p2 (paper's default).
+    P1P2,
+    /// 1 − ‖softmax(o) − onehot(c)‖₂/√2 ∈ [0, 1]: EL2N (Paul et al. 2021)
+    /// against the locally predicted class, folded so that *high = confident*
+    /// and the same θ ladder applies.
+    ErrorL2,
+}
+
+impl Metric {
+    /// Confidence score in [0, 1] from a prediction.
+    pub fn confidence(&self, pred: &Prediction) -> f32 {
+        match self {
+            Metric::P1P2 => pred.p1 - pred.p2,
+            Metric::ErrorL2 => {
+                // ‖p − e_c‖₂² = (1−p1)² + Σ_{j≠c} p_j².  We only carry the
+                // top-2 probabilities; bound the tail by assigning the
+                // remaining mass (1−p1−p2) to one pseudo-class — exact for
+                // m = 3, a tight lower bound for m > 3 (monotone in p1, p2,
+                // which is all thresholding needs).
+                let rest = (1.0 - pred.p1 - pred.p2).max(0.0);
+                let el2n =
+                    ((1.0 - pred.p1).powi(2) + pred.p2.powi(2) + rest.powi(2)).sqrt();
+                1.0 - el2n / std::f32::consts::SQRT_2
+            }
+        }
+    }
+}
+
+/// θ selection policy.
+#[derive(Clone, Debug)]
+pub enum ThetaPolicy {
+    /// Fixed θ (Figure 3's sweep). θ = 1 disables pruning (p1−p2 ≤ 1 always).
+    Fixed(f32),
+    /// The paper's auto-tuner.
+    Auto(AutoTheta),
+}
+
+impl ThetaPolicy {
+    pub fn auto() -> ThetaPolicy {
+        ThetaPolicy::Auto(AutoTheta::new(DEFAULT_X))
+    }
+
+    pub fn theta(&self) -> f32 {
+        match self {
+            ThetaPolicy::Fixed(t) => *t,
+            ThetaPolicy::Auto(a) => a.theta(),
+        }
+    }
+}
+
+/// The auto-θ ladder controller (§2.2's three tuning rules).
+///
+/// **Hysteresis adaptation** (documented in DESIGN.md §3): the paper's
+/// rule 3 as written ascends on *every* mismatched query. A Markov-chain
+/// argument shows the ladder then cannot settle whenever the stream error
+/// rate ε satisfies ε > 1/E[wait for an X-streak] (≈ 1/19 for X = 10 and
+/// ≈90 % stream accuracy) — ascents simply outpace descents and θ pins at
+/// 1.0, which contradicts the paper's measured 55.7 % query reduction.
+/// The minimal damping that restores the published behaviour is to require
+/// `mismatch_hysteresis` (default 2) *consecutive* mismatched queries
+/// before ascending; `with_hysteresis(1)` recovers the literal text.
+#[derive(Clone, Debug)]
+pub struct AutoTheta {
+    /// Index into [`THETA_LADDER`] (0 = highest θ = most conservative).
+    idx: usize,
+    /// Consecutive-success counter.
+    streak: u32,
+    /// Successes required to decrease θ.
+    x_required: u32,
+    /// Consecutive mismatched queries required to increase θ.
+    mismatch_hysteresis: u32,
+    /// Current consecutive-mismatch counter.
+    mismatch_streak: u32,
+    /// Telemetry: number of decreases / increases performed.
+    pub decreases: u32,
+    pub increases: u32,
+}
+
+/// Default mismatch hysteresis (see [`AutoTheta`] docs).
+pub const DEFAULT_HYSTERESIS: u32 = 2;
+
+impl AutoTheta {
+    pub fn new(x_required: u32) -> Self {
+        assert!(x_required > 0);
+        Self {
+            idx: 0,
+            streak: 0,
+            x_required,
+            mismatch_hysteresis: DEFAULT_HYSTERESIS,
+            mismatch_streak: 0,
+            decreases: 0,
+            increases: 0,
+        }
+    }
+
+    /// Override the ascent damping; `1` = the paper's literal rule 3.
+    pub fn with_hysteresis(mut self, m: u32) -> Self {
+        assert!(m > 0);
+        self.mismatch_hysteresis = m;
+        self
+    }
+
+    pub fn theta(&self) -> f32 {
+        THETA_LADDER[self.idx]
+    }
+
+    pub fn streak(&self) -> u32 {
+        self.streak
+    }
+
+    /// Rule 2 success path: confident skip (`p1−p2 > θ`) or correct query
+    /// (`c = t` when `p1−p2 ≤ θ`). After X consecutive successes, θ steps
+    /// down the ladder.
+    pub fn on_success(&mut self) {
+        self.mismatch_streak = 0;
+        self.streak += 1;
+        if self.streak >= self.x_required {
+            self.streak = 0;
+            if self.idx + 1 < THETA_LADDER.len() {
+                self.idx += 1;
+                self.decreases += 1;
+            }
+        }
+    }
+
+    /// Rule 3: a query revealed `c ≠ t` — step θ back up (after
+    /// `mismatch_hysteresis` consecutive mismatches), reset the streak.
+    pub fn on_mismatch(&mut self) {
+        self.streak = 0;
+        self.mismatch_streak += 1;
+        if self.mismatch_streak >= self.mismatch_hysteresis {
+            self.mismatch_streak = 0;
+            if self.idx > 0 {
+                self.idx -= 1;
+                self.increases += 1;
+            }
+        }
+    }
+}
+
+/// Outcome of one training-mode event under the pruning policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Query the teacher (and sequentially train).
+    Query,
+    /// Skip: confident enough, warmed up, no drift.
+    Skip,
+}
+
+/// The full §2.2 gate. Stateless w.r.t. the model; state lives in the policy.
+pub struct Pruner {
+    pub policy: ThetaPolicy,
+    pub metric: Metric,
+    pub warmup: usize,
+}
+
+impl Pruner {
+    pub fn new(policy: ThetaPolicy, metric: Metric, warmup: usize) -> Self {
+        Self {
+            policy,
+            metric,
+            warmup,
+        }
+    }
+
+    /// No pruning at all (θ = 1 — the paper's "communication volume 100 %"
+    /// reference configuration).
+    pub fn disabled() -> Self {
+        Self::new(ThetaPolicy::Fixed(1.0), Metric::P1P2, usize::MAX)
+    }
+
+    /// Decide for one sample. `trained` = sequential steps so far this
+    /// training phase; `drift_now` = detector currently flags drift.
+    pub fn decide(&self, pred: &Prediction, trained: usize, drift_now: bool) -> Decision {
+        if trained < self.warmup || drift_now {
+            return Decision::Query;
+        }
+        if self.metric.confidence(pred) > self.policy.theta() {
+            Decision::Skip
+        } else {
+            Decision::Query
+        }
+    }
+
+    /// Feed back the outcome (drives the auto-tuner; no-op for fixed θ).
+    /// `decision` is what [`Self::decide`] returned; `matched` is
+    /// `Some(c == t)` when a query was made, `None` on skip or when the
+    /// teacher was unreachable.
+    pub fn observe(&mut self, decision: Decision, matched: Option<bool>) {
+        if let ThetaPolicy::Auto(auto) = &mut self.policy {
+            match (decision, matched) {
+                (Decision::Skip, _) => auto.on_success(),
+                (Decision::Query, Some(true)) => auto.on_success(),
+                (Decision::Query, Some(false)) => auto.on_mismatch(),
+                // query attempted but teacher unreachable: no signal
+                (Decision::Query, None) => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pred(p1: f32, p2: f32) -> Prediction {
+        Prediction { class: 0, p1, p2 }
+    }
+
+    #[test]
+    fn ladder_descends_after_x_successes() {
+        let mut a = AutoTheta::new(3);
+        assert_eq!(a.theta(), 1.0);
+        for _ in 0..3 {
+            a.on_success();
+        }
+        assert_eq!(a.theta(), 0.64);
+        for _ in 0..6 {
+            a.on_success();
+        }
+        assert_eq!(a.theta(), 0.16);
+    }
+
+    #[test]
+    fn ladder_clamps_at_bottom() {
+        let mut a = AutoTheta::new(1);
+        for _ in 0..100 {
+            a.on_success();
+        }
+        assert_eq!(a.theta(), *THETA_LADDER.last().unwrap());
+        assert_eq!(a.decreases, (THETA_LADDER.len() - 1) as u32);
+    }
+
+    #[test]
+    fn mismatch_climbs_and_resets_streak() {
+        let mut a = AutoTheta::new(2).with_hysteresis(1); // literal paper rule
+        a.on_success();
+        a.on_success(); // -> 0.64
+        a.on_success(); // streak 1
+        a.on_mismatch(); // back to 1.0, streak 0
+        assert_eq!(a.theta(), 1.0);
+        assert_eq!(a.streak(), 0);
+        a.on_mismatch(); // clamped at top
+        assert_eq!(a.theta(), 1.0);
+        assert_eq!(a.increases, 1); // clamped increase not counted
+    }
+
+    #[test]
+    fn hysteresis_requires_consecutive_mismatches() {
+        let mut a = AutoTheta::new(1).with_hysteresis(2);
+        for _ in 0..4 {
+            a.on_success(); // descend to the bottom (X = 1)
+        }
+        let bottom = a.theta();
+        a.on_mismatch(); // 1 of 2 — no ascent yet
+        assert_eq!(a.theta(), bottom);
+        a.on_success(); // resets the mismatch streak
+        a.on_mismatch();
+        assert_eq!(a.theta(), bottom, "non-consecutive mismatches must not ascend");
+        a.on_mismatch(); // 2 consecutive → ascend
+        assert!(a.theta() > bottom);
+        assert_eq!(a.increases, 1);
+    }
+
+    #[test]
+    fn streak_requires_consecutive() {
+        let mut a = AutoTheta::new(3);
+        a.on_success();
+        a.on_success();
+        a.on_mismatch(); // reset
+        a.on_success();
+        a.on_success();
+        assert_eq!(a.theta(), 1.0, "2 non-consecutive successes must not trigger");
+        a.on_success();
+        assert_eq!(a.theta(), 0.64);
+    }
+
+    #[test]
+    fn theta_one_never_skips() {
+        // p1 − p2 ≤ 1 always, so Fixed(1.0) = no pruning.
+        let p = Pruner::new(ThetaPolicy::Fixed(1.0), Metric::P1P2, 0);
+        let d = p.decide(&pred(1.0, 0.0), 10_000, false);
+        assert_eq!(d, Decision::Query);
+    }
+
+    #[test]
+    fn warmup_blocks_skipping() {
+        let p = Pruner::new(ThetaPolicy::Fixed(0.1), Metric::P1P2, 288);
+        assert_eq!(p.decide(&pred(0.9, 0.01), 287, false), Decision::Query);
+        assert_eq!(p.decide(&pred(0.9, 0.01), 288, false), Decision::Skip);
+    }
+
+    #[test]
+    fn drift_blocks_skipping() {
+        let p = Pruner::new(ThetaPolicy::Fixed(0.1), Metric::P1P2, 0);
+        assert_eq!(p.decide(&pred(0.9, 0.01), 1000, true), Decision::Query);
+    }
+
+    #[test]
+    fn confident_skips_unconfident_queries() {
+        let p = Pruner::new(ThetaPolicy::Fixed(0.3), Metric::P1P2, 0);
+        assert_eq!(p.decide(&pred(0.8, 0.1), 500, false), Decision::Skip);
+        assert_eq!(p.decide(&pred(0.5, 0.4), 500, false), Decision::Query);
+    }
+
+    #[test]
+    fn observe_drives_auto() {
+        let mut p = Pruner::new(ThetaPolicy::auto(), Metric::P1P2, 0);
+        assert_eq!(p.policy.theta(), 1.0);
+        for _ in 0..DEFAULT_X {
+            p.observe(Decision::Query, Some(true));
+        }
+        assert_eq!(p.policy.theta(), 0.64);
+        p.observe(Decision::Query, Some(false));
+        p.observe(Decision::Query, Some(false)); // default hysteresis = 2
+        assert_eq!(p.policy.theta(), 1.0);
+        // unreachable teacher is signal-free
+        for _ in 0..100 {
+            p.observe(Decision::Query, None);
+        }
+        assert_eq!(p.policy.theta(), 1.0);
+    }
+
+    #[test]
+    fn el2n_metric_monotone_in_confidence() {
+        let m = Metric::ErrorL2;
+        let hi = m.confidence(&pred(0.98, 0.01));
+        let mid = m.confidence(&pred(0.6, 0.3));
+        let lo = m.confidence(&pred(0.4, 0.35));
+        assert!(hi > mid && mid > lo, "{hi} {mid} {lo}");
+        assert!((0.0..=1.0).contains(&hi));
+    }
+
+    #[test]
+    fn warmup_rule_matches_paper() {
+        assert_eq!(warmup_for(128), 288);
+        assert_eq!(warmup_for(256), 288);
+        assert_eq!(warmup_for(512), 512);
+    }
+}

@@ -1,0 +1,207 @@
+//! An OS-ELM whose compute runs entirely through the PJRT artifacts — the
+//! "full three-layer stack" twin of [`crate::odl::OsElm`].
+//!
+//! Model state (P, β) lives on the host between calls; every predict /
+//! train step round-trips through the XLA executables compiled from the
+//! JAX/Pallas graphs. Integration tests assert numeric agreement with the
+//! native golden model; `examples/e2e_drift_pjrt.rs` runs the paper's
+//! drift protocol end to end on this backend.
+
+use super::{lit_f32, lit_to_f32, lit_u32_vec1, Exe, Runtime};
+use crate::odl::activation::Prediction;
+use anyhow::{ensure, Context, Result};
+use std::rc::Rc;
+
+/// PJRT-backed ODLHash OS-ELM.
+pub struct PjrtOsElm {
+    pub n_in: usize,
+    pub n_hidden: usize,
+    pub n_out: usize,
+    pub seed: u32,
+    /// β (N × m) row-major.
+    pub beta: Vec<f32>,
+    /// P (N × N) row-major.
+    pub p: Vec<f32>,
+    eval_batch: usize,
+    init_k0: usize,
+    stream_k: usize,
+    exe_train: Rc<Exe>,
+    exe_train_stream: Rc<Exe>,
+    exe_predict_one: Rc<Exe>,
+    exe_predict_batch: Rc<Exe>,
+    exe_init: Rc<Exe>,
+}
+
+impl PjrtOsElm {
+    /// Bind the artifacts for hidden size `n_hidden` (must exist in the
+    /// manifest: aot.py lowers N ∈ {128, 256}).
+    pub fn new(rt: &Runtime, n_hidden: usize, seed: u32) -> Result<PjrtOsElm> {
+        let exe_train = rt.load(&format!("train_step_hash_n{n_hidden}"))?;
+        let exe_train_stream = rt.load(&format!("train_stream_hash_n{n_hidden}"))?;
+        let exe_predict_one = rt.load(&format!("predict_one_hash_n{n_hidden}"))?;
+        let exe_predict_batch = rt.load(&format!("predict_batch_hash_n{n_hidden}"))?;
+        let exe_init = rt.load(&format!("init_batch_hash_n{n_hidden}"))?;
+        let eval_batch = exe_predict_batch
+            .meta
+            .batch
+            .context("predict_batch artifact missing batch size")?;
+        let init_k0 = exe_init.meta.k0.context("init artifact missing k0")?;
+        let stream_k = exe_train_stream.meta.arg_shapes[0][0];
+        let (n_in, n_out) = (rt.manifest.n_in, rt.manifest.n_out);
+        Ok(PjrtOsElm {
+            n_in,
+            n_hidden,
+            n_out,
+            seed,
+            beta: vec![0.0; n_hidden * n_out],
+            p: vec![0.0; n_hidden * n_hidden],
+            eval_batch,
+            init_k0,
+            stream_k,
+            exe_train,
+            exe_train_stream,
+            exe_predict_one,
+            exe_predict_batch,
+            exe_init,
+        })
+    }
+
+    /// Batch-initialize on exactly `k0` samples (the artifact's static
+    /// shape; callers provide ≥ k0 and we take the first k0).
+    pub fn init_batch(&mut self, xs: &crate::linalg::Mat, labels: &[usize]) -> Result<()> {
+        ensure!(xs.cols == self.n_in, "feature dim mismatch");
+        ensure!(
+            xs.rows >= self.init_k0,
+            "PJRT init needs ≥ {} samples, got {}",
+            self.init_k0,
+            xs.rows
+        );
+        let k0 = self.init_k0;
+        let x0 = &xs.data[..k0 * self.n_in];
+        let mut y0 = vec![0.0f32; k0 * self.n_out];
+        for (r, &lbl) in labels.iter().take(k0).enumerate() {
+            ensure!(lbl < self.n_out, "label out of range");
+            y0[r * self.n_out + lbl] = 1.0;
+        }
+        let out = self.exe_init.call(&[
+            lit_f32(x0, &[k0, self.n_in])?,
+            lit_f32(&y0, &[k0, self.n_out])?,
+            lit_u32_vec1(self.seed),
+        ])?;
+        self.p = lit_to_f32(&out[0])?;
+        self.beta = lit_to_f32(&out[1])?;
+        Ok(())
+    }
+
+    /// One sequential training step through the `train_step_hash` artifact.
+    pub fn train_step(&mut self, x: &[f32], label: usize) -> Result<()> {
+        ensure!(x.len() == self.n_in, "feature dim mismatch");
+        ensure!(label < self.n_out, "label out of range");
+        let mut y = vec![0.0f32; self.n_out];
+        y[label] = 1.0;
+        let out = self.exe_train.call(&[
+            lit_f32(x, &[1, self.n_in])?,
+            lit_f32(&y, &[self.n_out])?,
+            lit_f32(&self.p, &[self.n_hidden, self.n_hidden])?,
+            lit_f32(&self.beta, &[self.n_hidden, self.n_out])?,
+            lit_u32_vec1(self.seed),
+        ])?;
+        self.p = lit_to_f32(&out[0])?;
+        self.beta = lit_to_f32(&out[1])?;
+        Ok(())
+    }
+
+    /// Streaming training: sequential updates over all rows of `xs`,
+    /// executed in scan-fused chunks of `stream_k` (one XLA launch per
+    /// chunk — the §Perf L2 optimization) with a per-sample tail.
+    pub fn train_stream(&mut self, xs: &crate::linalg::Mat, labels: &[usize]) -> Result<()> {
+        ensure!(xs.rows == labels.len(), "label count mismatch");
+        ensure!(xs.cols == self.n_in, "feature dim mismatch");
+        let k = self.stream_k;
+        let mut row = 0usize;
+        let mut ys = vec![0.0f32; k * self.n_out];
+        while row + k <= xs.rows {
+            ys.fill(0.0);
+            for (i, &lbl) in labels[row..row + k].iter().enumerate() {
+                ensure!(lbl < self.n_out, "label out of range");
+                ys[i * self.n_out + lbl] = 1.0;
+            }
+            let out = self.exe_train_stream.call(&[
+                lit_f32(&xs.data[row * self.n_in..(row + k) * self.n_in], &[k, self.n_in])?,
+                lit_f32(&ys, &[k, self.n_out])?,
+                lit_f32(&self.p, &[self.n_hidden, self.n_hidden])?,
+                lit_f32(&self.beta, &[self.n_hidden, self.n_out])?,
+                lit_u32_vec1(self.seed),
+            ])?;
+            self.p = lit_to_f32(&out[0])?;
+            self.beta = lit_to_f32(&out[1])?;
+            row += k;
+        }
+        for r in row..xs.rows {
+            self.train_step(xs.row(r), labels[r])?;
+        }
+        Ok(())
+    }
+
+    /// Predict one sample.
+    pub fn predict(&self, x: &[f32]) -> Result<Prediction> {
+        ensure!(x.len() == self.n_in, "feature dim mismatch");
+        let out = self.exe_predict_one.call(&[
+            lit_f32(x, &[1, self.n_in])?,
+            lit_f32(&self.beta, &[self.n_hidden, self.n_out])?,
+            lit_u32_vec1(self.seed),
+        ])?;
+        let logits = lit_to_f32(&out[0])?;
+        Ok(Prediction::from_logits(&logits))
+    }
+
+    /// Raw logits for one sample (tests).
+    pub fn logits(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let out = self.exe_predict_one.call(&[
+            lit_f32(x, &[1, self.n_in])?,
+            lit_f32(&self.beta, &[self.n_hidden, self.n_out])?,
+            lit_u32_vec1(self.seed),
+        ])?;
+        lit_to_f32(&out[0])
+    }
+
+    /// Batched accuracy over a labelled set (pads the tail batch).
+    pub fn accuracy(&self, xs: &crate::linalg::Mat, labels: &[usize]) -> Result<f64> {
+        ensure!(xs.rows == labels.len(), "label count mismatch");
+        if xs.rows == 0 {
+            return Ok(0.0);
+        }
+        let b = self.eval_batch;
+        let mut correct = 0usize;
+        let mut row = 0usize;
+        let mut padded = vec![0.0f32; b * self.n_in];
+        while row < xs.rows {
+            let take = b.min(xs.rows - row);
+            padded[..take * self.n_in]
+                .copy_from_slice(&xs.data[row * self.n_in..(row + take) * self.n_in]);
+            padded[take * self.n_in..].fill(0.0);
+            let out = self.exe_predict_batch.call(&[
+                lit_f32(&padded, &[b, self.n_in])?,
+                lit_f32(&self.beta, &[self.n_hidden, self.n_out])?,
+                lit_u32_vec1(self.seed),
+            ])?;
+            let logits = lit_to_f32(&out[0])?;
+            for i in 0..take {
+                let l = &logits[i * self.n_out..(i + 1) * self.n_out];
+                if crate::util::stats::argmax(l) == labels[row + i] {
+                    correct += 1;
+                }
+            }
+            row += take;
+        }
+        Ok(correct as f64 / xs.rows as f64)
+    }
+
+    /// Copy state from (or compare against) the native golden model.
+    pub fn load_state(&mut self, beta: &[f32], p: &[f32]) -> Result<()> {
+        ensure!(beta.len() == self.beta.len() && p.len() == self.p.len());
+        self.beta.copy_from_slice(beta);
+        self.p.copy_from_slice(p);
+        Ok(())
+    }
+}

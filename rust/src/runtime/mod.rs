@@ -1,0 +1,285 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the boundary of the three-layer architecture: everything below
+//! this module is XLA-compiled code authored in JAX/Pallas at build time;
+//! everything above is the rust coordinator. Python never runs at request
+//! time — the HLO text is compiled here, once per artifact, and cached.
+//!
+//! Interchange is HLO **text** (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod backend;
+
+pub use backend::PjrtOsElm;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `artifacts/manifest.json` entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: String,
+    pub variant: String,
+    pub n_hidden: Option<usize>,
+    pub batch: Option<usize>,
+    pub k0: Option<usize>,
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub arg_dtypes: Vec<String>,
+}
+
+/// The artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let format = json
+            .get("format")
+            .and_then(|f| f.as_str())
+            .unwrap_or_default();
+        if format != "hlo-text" {
+            bail!("unsupported artifact format '{format}'");
+        }
+        let mut artifacts = HashMap::new();
+        let arts = json
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        for (name, meta) in arts {
+            let get_usize = |k: &str| meta.get(k).and_then(|v| v.as_usize());
+            let arg_shapes = meta
+                .get("arg_shapes")
+                .and_then(|v| v.as_arr())
+                .map(|rows| {
+                    rows.iter()
+                        .map(|r| {
+                            r.as_arr()
+                                .unwrap_or(&[])
+                                .iter()
+                                .filter_map(|d| d.as_usize())
+                                .collect()
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            let arg_dtypes = meta
+                .get("arg_dtypes")
+                .and_then(|v| v.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|d| d.as_str().map(|s| s.to_string()))
+                        .collect()
+                })
+                .unwrap_or_default();
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    path: meta
+                        .get("path")
+                        .and_then(|p| p.as_str())
+                        .ok_or_else(|| anyhow!("artifact {name} missing path"))?
+                        .to_string(),
+                    variant: meta
+                        .get("variant")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    n_hidden: get_usize("n_hidden"),
+                    batch: get_usize("batch"),
+                    k0: get_usize("k0"),
+                    arg_shapes,
+                    arg_dtypes,
+                },
+            );
+        }
+        Ok(Manifest {
+            n_in: json
+                .get("n_in")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest missing n_in"))?,
+            n_out: json
+                .get("n_out")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest missing n_out"))?,
+            artifacts,
+        })
+    }
+}
+
+/// A compiled artifact, ready to execute.
+pub struct Exe {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Exe {
+    /// Execute returning raw device buffers (one entry per device, then
+    /// per output) — the zero-copy path for device-resident state.
+    pub fn execute_raw(&self, inputs: &[xla::Literal]) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        Ok(self.exe.execute::<xla::Literal>(inputs)?)
+    }
+
+    /// Execute with device-buffer inputs (state stays on device).
+    pub fn execute_b(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        Ok(self.exe.execute_b(inputs)?)
+    }
+
+    /// Execute with positional literal inputs; returns the flattened tuple
+    /// outputs (aot.py lowers everything with `return_tuple=True`).
+    pub fn call(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact {}", self.meta.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        Ok(out.to_tuple().context("untupling result")?)
+    }
+}
+
+/// The PJRT runtime: CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<Exe>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (default `artifacts/`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT runtime: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: Default::default(),
+        })
+    }
+
+    /// Open `./artifacts` relative to the repo root.
+    pub fn open_default() -> Result<Runtime> {
+        Self::open(default_artifact_dir())
+    }
+
+    /// Load + compile an artifact by manifest name (cached).
+    pub fn load(&self, name: &str) -> Result<std::rc::Rc<Exe>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| {
+                let mut names: Vec<&String> = self.manifest.artifacts.keys().collect();
+                names.sort();
+                anyhow!("unknown artifact '{name}' (have: {names:?})")
+            })?
+            .clone();
+        let path = self.dir.join(&meta.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let exe = std::rc::Rc::new(Exe { meta, exe });
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+}
+
+/// `<repo>/artifacts` (works from the crate root and from target/ binaries).
+pub fn default_artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+// --- literal helpers ---------------------------------------------------------
+
+/// f32 literal with the given dimensions.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal shape/product mismatch");
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// One-element u32 literal (seed plumbing; scalars travel as shape-(1,)).
+pub fn lit_u32_vec1(v: u32) -> xla::Literal {
+    xla::Literal::vec1(&[v])
+}
+
+/// Extract an f32 vector from a literal.
+pub fn lit_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = default_artifact_dir();
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.n_in, 561);
+        assert_eq!(m.n_out, 6);
+        assert!(m.artifacts.contains_key("train_step_hash_n128"));
+        let meta = &m.artifacts["train_step_hash_n128"];
+        assert_eq!(meta.n_hidden, Some(128));
+        assert_eq!(meta.arg_shapes[2], vec![128, 128]);
+        assert_eq!(meta.arg_dtypes.last().map(|s| s.as_str()), Some("uint32"));
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::open(dir).unwrap();
+        assert!(rt.load("no_such_artifact").is_err());
+    }
+
+    #[test]
+    fn lit_f32_shape_checked() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(lit_to_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

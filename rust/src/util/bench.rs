@@ -1,0 +1,119 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Each `rust/benches/*.rs` target (`harness = false`) uses this: timed
+//! closures with warmup, mean/std/min reporting, and a `ODL_BENCH_FAST=1`
+//! mode for CI-speed runs. Regeneration benches also *print the paper
+//! table/figure* they correspond to, so `cargo bench` reproduces the
+//! evaluation end to end.
+
+use crate::util::stats::RunningStats;
+use std::time::Instant;
+
+/// Are we in fast (CI) mode?
+pub fn fast_mode() -> bool {
+    std::env::var("ODL_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Trial count for experiment-regeneration benches (paper uses 20).
+pub fn bench_trials() -> usize {
+    if fast_mode() {
+        3
+    } else {
+        std::env::var("ODL_BENCH_TRIALS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(20)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` calls; print a row.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = RunningStats::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        stats.push(t0.elapsed().as_secs_f64());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        mean_s: stats.mean(),
+        std_s: stats.std(),
+        min_s: stats.min(),
+        iters,
+    };
+    println!("{r}");
+    r
+}
+
+/// One benchmark row.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// Throughput given a per-iteration work count.
+    pub fn per_sec(&self, work_per_iter: f64) -> f64 {
+        work_per_iter / self.mean_s
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "bench {:<42} {:>12} ± {:<10} (min {}, n={})",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.std_s),
+            fmt_time(self.min_s),
+            self.iters
+        )
+    }
+}
+
+/// Human time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.mean_s);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.0), "2.000 s");
+        assert_eq!(fmt_time(0.0025), "2.500 ms");
+        assert_eq!(fmt_time(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_time(5e-9), "5.0 ns");
+    }
+}

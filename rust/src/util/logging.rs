@@ -1,0 +1,56 @@
+//! Tiny `log`-crate backend writing to stderr with a level filter taken
+//! from `ODL_LOG` (error|warn|info|debug|trace; default info).
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::Once;
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let tag = match record.level() {
+                Level::Error => "E",
+                Level::Warn => "W",
+                Level::Info => "I",
+                Level::Debug => "D",
+                Level::Trace => "T",
+            };
+            eprintln!("[{}] {}: {}", tag, record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+static INIT: Once = Once::new();
+
+/// Install the logger (idempotent). Level from `ODL_LOG` env var.
+pub fn init() {
+    INIT.call_once(|| {
+        let level = match std::env::var("ODL_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            _ => LevelFilter::Info,
+        };
+        let _ = log::set_logger(&LOGGER);
+        log::set_max_level(level);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging works");
+    }
+}

@@ -1,0 +1,14 @@
+//! General-purpose substrates: deterministic RNGs, running statistics,
+//! tabular/JSON output, a tiny logger, and an in-house property-testing
+//! harness (the offline vendor set has no `proptest`).
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::{Rng64, SplitMix64};
+pub use stats::{mean_std, RunningStats};

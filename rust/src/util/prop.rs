@@ -1,0 +1,110 @@
+//! A miniature property-testing harness.
+//!
+//! The offline vendor set does not include `proptest`, so this module
+//! provides the subset this repository's tests need: seeded generators,
+//! `forall`-style runners with a configurable case count, and failure
+//! reporting that prints the failing case's seed and index so it can be
+//! replayed deterministically (`ODL_PROP_SEED`, `ODL_PROP_CASES`).
+
+use crate::util::rng::Rng64;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let cases = std::env::var("ODL_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("ODL_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Self { cases, seed }
+    }
+}
+
+/// Run `prop` on `cases` inputs drawn by `gen`. Panics with a replayable
+/// report on the first failure (either a `false` return or a panic inside
+/// the property).
+pub fn forall<T, G, P>(name: &str, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng64) -> T,
+    P: Fn(&T) -> bool + std::panic::RefUnwindSafe,
+    T: std::panic::RefUnwindSafe,
+{
+    let cfg = Config::default();
+    for case in 0..cfg.cases {
+        let mut rng = Rng64::new(cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let input = gen(&mut rng);
+        let outcome = std::panic::catch_unwind(|| prop(&input));
+        let ok = match outcome {
+            Ok(b) => b,
+            Err(_) => false,
+        };
+        if !ok {
+            panic!(
+                "property '{}' failed at case {}/{} (seed {}): input = {:?}\n\
+                 replay with ODL_PROP_SEED={} ODL_PROP_CASES={}",
+                name,
+                case,
+                cfg.cases,
+                cfg.seed,
+                input,
+                cfg.seed,
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::rng::Rng64;
+
+    pub fn usize_in(rng: &mut Rng64, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(rng: &mut Rng64, lo: f32, hi: f32) -> f32 {
+        rng.uniform(lo as f64, hi as f64) as f32
+    }
+
+    pub fn vec_f32(rng: &mut Rng64, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| f32_in(rng, lo, hi)).collect()
+    }
+
+    pub fn vec_normal(rng: &mut Rng64, len: usize, std: f64) -> Vec<f32> {
+        (0..len).map(|_| rng.normal_ms(0.0, std) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("add-commutes", |r| (r.next_f32(), r.next_f32()), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false'")]
+    fn failing_property_reports() {
+        forall("always-false", |r| r.next_u64(), |_| false);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'panics-inside'")]
+    fn panicking_property_is_caught() {
+        forall("panics-inside", |r| r.next_u64(), |_| panic!("boom"));
+    }
+}

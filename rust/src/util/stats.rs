@@ -1,0 +1,199 @@
+//! Running statistics (Welford) and small helpers used by every experiment
+//! harness to report the paper's "mean ± std over 20 trials" rows.
+
+/// Numerically stable running mean / variance (Welford's algorithm).
+#[derive(Clone, Debug, Default)]
+pub struct RunningStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl RunningStats {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (what the paper's ±std over trials reads as).
+    pub fn var(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample variance (n−1 denominator).
+    pub fn sample_var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn sample_std(&self) -> f64 {
+        self.sample_var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Merge another accumulator (parallel trials).
+    pub fn merge(&mut self, other: &RunningStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        let m2 = self.m2 + other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Convenience: mean and population std of a slice.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let mut s = RunningStats::new();
+    for &x in xs {
+        s.push(x);
+    }
+    (s.mean(), s.std())
+}
+
+/// Argmax over a slice of floats; first index wins ties. Panics on empty.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices and values of the top-2 entries (p1 ≥ p2). Panics if len < 2.
+pub fn top2(xs: &[f32]) -> ((usize, f32), (usize, f32)) {
+    assert!(xs.len() >= 2, "top2 needs at least 2 entries");
+    let (mut i1, mut i2) = if xs[0] >= xs[1] { (0, 1) } else { (1, 0) };
+    for (i, &x) in xs.iter().enumerate().skip(2) {
+        if x > xs[i1] {
+            i2 = i1;
+            i1 = i;
+        } else if x > xs[i2] {
+            i2 = i;
+        }
+    }
+    ((i1, xs[i1]), (i2, xs[i2]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.5, -2.0];
+        let mut s = RunningStats::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((s.mean() - mean).abs() < 1e-12);
+        assert!((s.var() - var).abs() < 1e-12);
+        assert_eq!(s.min(), -2.0);
+        assert_eq!(s.max(), 5.5);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = RunningStats::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = RunningStats::new();
+        let mut b = RunningStats::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-10);
+        assert!((a.var() - whole.var()).abs() < 1e-10);
+        assert_eq!(a.count(), whole.count());
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = RunningStats::new();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.var(), 0.0);
+    }
+
+    #[test]
+    fn argmax_first_tie_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn top2_basic() {
+        let ((i1, p1), (i2, p2)) = top2(&[0.1, 0.7, 0.15, 0.05]);
+        assert_eq!((i1, i2), (1, 2));
+        assert!((p1 - 0.7).abs() < 1e-9 && (p2 - 0.15).abs() < 1e-9);
+    }
+
+    #[test]
+    fn top2_handles_descending_and_ties() {
+        let ((i1, _), (i2, _)) = top2(&[0.9, 0.9, 0.1]);
+        assert_eq!((i1, i2), (0, 1));
+        let ((i1, _), (i2, _)) = top2(&[0.2, 0.8]);
+        assert_eq!((i1, i2), (1, 0));
+    }
+}

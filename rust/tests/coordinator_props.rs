@@ -1,0 +1,141 @@
+//! Property tests on the coordinator invariants (routing, accounting,
+//! state machine), using the in-house property harness over randomized
+//! scenarios.
+
+use odl_har::coordinator::fleet::{DetectorKind, Fleet, FleetConfig, Scenario};
+use odl_har::coordinator::ChannelConfig;
+use odl_har::data::SynthConfig;
+use odl_har::util::prop::{forall, gen};
+
+fn random_scenario(rng: &mut odl_har::util::rng::Rng64) -> (Scenario, u64) {
+    let sc = Scenario {
+        n_edges: gen::usize_in(rng, 1, 5),
+        n_hidden: 32,
+        event_period_s: [0.5, 1.0, 2.0][rng.below(3)],
+        horizon_s: gen::usize_in(rng, 120, 300) as f64,
+        drift_at_s: gen::usize_in(rng, 30, 90) as f64,
+        detector: if rng.bernoulli(0.5) {
+            DetectorKind::Oracle
+        } else {
+            DetectorKind::Centroid
+        },
+        fixed_theta: if rng.bernoulli(0.5) {
+            Some([0.08, 0.16, 0.32, 1.0][rng.below(4)])
+        } else {
+            None
+        },
+        teacher_error: [0.0, 0.0, 0.2][rng.below(3)],
+        channel: ChannelConfig {
+            loss_prob: [0.0, 0.1, 0.5][rng.below(3)],
+            max_retries: rng.below(3) as u32,
+            ..Default::default()
+        },
+        synth: SynthConfig {
+            n_features: 40,
+            n_classes: 4,
+            n_subjects: 30,
+            samples_per_cell: 8,
+            proto_sigma: 1.1,
+            ..Default::default()
+        },
+        train_target: gen::usize_in(rng, 50, 200),
+    };
+    let seed = rng.next_u64();
+    (sc, seed)
+}
+
+#[test]
+fn fleet_accounting_invariants() {
+    std::env::set_var("ODL_PROP_CASES", "8"); // fleet runs are not free
+    forall("fleet-accounting", random_scenario, |(sc, seed)| {
+        let report = Fleet::new(FleetConfig {
+            scenario: sc.clone(),
+            seed: *seed,
+        })
+        .unwrap()
+        .run();
+
+        let horizon = sc.horizon_s;
+        for m in &report.per_edge {
+            // 1. every event is exactly one of query/skip/predicting-mode
+            if m.queries + m.skips > m.events {
+                return false;
+            }
+            // 2. trained ≤ queries (training needs a delivered label)
+            if m.trained > m.queries {
+                return false;
+            }
+            // 3. state-time books cover the horizon
+            let t: f64 = m.state_time_s.values().sum();
+            if (t - horizon).abs() > 1.0 {
+                return false;
+            }
+            // 4. power bounded below by SRAM retention, above by
+            //    peak-state + one query per event
+            let p = m.mean_power_mw(horizon);
+            if !(1.33..=200.0).contains(&p) {
+                return false;
+            }
+        }
+        // 5. teacher served exactly the delivered queries
+        let delivered: u64 = report.channel_attempts - report.channel_failures;
+        if report.teacher_queries > delivered {
+            return false;
+        }
+        // 6. lossless channel ⇒ attempts == deliveries
+        if sc.channel.loss_prob == 0.0 && report.channel_failures != 0 {
+            return false;
+        }
+        true
+    });
+}
+
+#[test]
+fn fleet_determinism_property() {
+    std::env::set_var("ODL_PROP_CASES", "4");
+    forall("fleet-determinism", random_scenario, |(sc, seed)| {
+        let run = |s: &Scenario, seed: u64| {
+            let r = Fleet::new(FleetConfig {
+                scenario: s.clone(),
+                seed,
+            })
+            .unwrap()
+            .run();
+            (
+                r.total_queries(),
+                r.channel_attempts,
+                r.per_edge.iter().map(|m| m.trained).collect::<Vec<_>>(),
+            )
+        };
+        run(sc, *seed) == run(sc, *seed)
+    });
+}
+
+#[test]
+fn pruner_ladder_always_on_ladder() {
+    use odl_har::pruning::{AutoTheta, THETA_LADDER};
+    forall(
+        "theta-on-ladder",
+        |rng| {
+            let x = gen::usize_in(rng, 1, 20) as u32;
+            let ops: Vec<bool> = (0..gen::usize_in(rng, 0, 200))
+                .map(|_| rng.bernoulli(0.8))
+                .collect();
+            (x, ops)
+        },
+        |(x, ops)| {
+            let mut a = AutoTheta::new(*x);
+            for &success in ops {
+                if success {
+                    a.on_success();
+                } else {
+                    a.on_mismatch();
+                }
+                if !THETA_LADDER.contains(&a.theta()) {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}

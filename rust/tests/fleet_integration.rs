@@ -1,0 +1,102 @@
+//! Integration: the full-dimension fleet simulation (561 features) with
+//! pruning, lossy channel, energy accounting — the system-level story.
+
+use odl_har::coordinator::fleet::{DetectorKind, Fleet, FleetConfig, Scenario};
+use odl_har::coordinator::ChannelConfig;
+use odl_har::data::SynthConfig;
+
+fn scenario() -> Scenario {
+    Scenario {
+        n_edges: 4,
+        n_hidden: 128,
+        event_period_s: 1.0,
+        horizon_s: 700.0,
+        drift_at_s: 150.0,
+        detector: DetectorKind::Oracle,
+        fixed_theta: None,
+        teacher_error: 0.0,
+        channel: ChannelConfig {
+            loss_prob: 0.05,
+            max_retries: 2,
+            ..Default::default()
+        },
+        synth: SynthConfig::default(),
+        train_target: 400,
+    }
+}
+
+#[test]
+fn fleet_full_scale_recovers_and_saves_power() {
+    let auto = Fleet::new(FleetConfig {
+        scenario: scenario(),
+        seed: 9,
+    })
+    .unwrap()
+    .run();
+    let mut sc_full = scenario();
+    sc_full.fixed_theta = Some(1.0);
+    let full = Fleet::new(FleetConfig {
+        scenario: sc_full,
+        seed: 9,
+    })
+    .unwrap()
+    .run();
+
+    for (m_auto, m_full) in auto.per_edge.iter().zip(&full.per_edge) {
+        // recovery: final rolling accuracy healthy on both
+        let acc_auto = m_auto.accuracy_trace.last().unwrap().1;
+        assert!(acc_auto > 0.75, "auto final acc {acc_auto}");
+        // pruning cuts queries…
+        assert!(
+            m_auto.queries < m_full.queries,
+            "auto {} vs full {}",
+            m_auto.queries,
+            m_full.queries
+        );
+    }
+    // …and mean power
+    assert!(
+        auto.mean_edge_power_mw() < full.mean_edge_power_mw(),
+        "auto {} mW vs full {} mW",
+        auto.mean_edge_power_mw(),
+        full.mean_edge_power_mw()
+    );
+    // the sleep floor bounds power from below
+    assert!(auto.mean_edge_power_mw() > 1.33);
+}
+
+#[test]
+fn noisy_teacher_disables_pruning() {
+    // A correct safety property of the auto-θ controller: when the teacher
+    // disagrees with the local model (here: 60 % wrong labels), the
+    // mismatch rule keeps θ pinned at 1.0, so pruning never engages and
+    // every training-mode event queries — the edge does not silently
+    // trust its own (now unverifiable) confidence.
+    let clean = Fleet::new(FleetConfig {
+        scenario: scenario(),
+        seed: 11,
+    })
+    .unwrap()
+    .run();
+    let mut sc = scenario();
+    sc.teacher_error = 0.6;
+    let noisy = Fleet::new(FleetConfig {
+        scenario: sc,
+        seed: 11,
+    })
+    .unwrap()
+    .run();
+    let queries = |r: &odl_har::coordinator::FleetReport| r.total_queries();
+    assert!(
+        queries(&noisy) as f64 > queries(&clean) as f64 * 1.4,
+        "noisy teacher must suppress pruning: noisy {} vs clean {}",
+        queries(&noisy),
+        queries(&clean)
+    );
+    // and with a clean teacher, pruning must engage within the episode
+    let total_events: u64 = clean.per_edge.iter().map(|m| m.queries + m.skips).sum();
+    assert!(
+        queries(&clean) < total_events,
+        "clean run must skip some queries"
+    );
+}

@@ -1,0 +1,128 @@
+//! Cross-language numerics: the golden vectors emitted by
+//! `python/compile/aot.py` (from the jnp reference in `kernels/ref.py`)
+//! must match the rust implementations bit-for-bit (PRNG) or to f32
+//! round-off (float pipelines).
+
+use odl_har::linalg::Mat;
+use odl_har::odl::xorshift::{counter_alpha, Xorshift16};
+use odl_har::odl::{AlphaKind, OsElm, OsElmConfig};
+use odl_har::util::json::Json;
+use odl_har::util::rng::Rng64;
+use std::path::PathBuf;
+
+fn goldens() -> Option<Json> {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/golden/numerics.json");
+    if !path.exists() {
+        eprintln!("SKIP: goldens not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap())
+}
+
+fn arr_f32(j: &Json) -> Vec<f32> {
+    j.as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect()
+}
+
+#[test]
+fn xorshift_stream_bit_exact() {
+    let Some(g) = goldens() else { return };
+    let want: Vec<u16> = g
+        .get("xorshift16_stream_seed1")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as u16)
+        .collect();
+    let mut s = Xorshift16::new(1);
+    let got: Vec<u16> = (0..want.len()).map(|_| s.next_u16()).collect();
+    assert_eq!(got, want, "sequential xorshift16 stream diverged from python");
+}
+
+#[test]
+fn counter_alpha_bit_exact() {
+    let Some(g) = goldens() else { return };
+    let want = arr_f32(g.get("counter_alpha_seed9_16x8").unwrap());
+    let got = counter_alpha(9, 16, 8, 1.0);
+    assert_eq!(got, want, "counter-based alpha diverged from python");
+}
+
+#[test]
+fn hidden_activations_match() {
+    let Some(g) = goldens() else { return };
+    let want = arr_f32(g.get("hidden_n561_N128_seed7").unwrap());
+    // deterministic input from aot.py: (arange(561) % 17 - 8) / 8
+    let x: Vec<f32> = (0..561).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+    let cfg = OsElmConfig {
+        n_in: 561,
+        n_hidden: 128,
+        n_out: 6,
+        alpha: AlphaKind::Hash,
+        ..Default::default()
+    };
+    let model = OsElm::new(cfg, &mut Rng64::new(0), 7);
+    let mut h = vec![0.0f32; 128];
+    model.hidden(&x, &mut h);
+    for (i, (a, b)) in h.iter().zip(&want).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-5,
+            "hidden[{i}]: rust {a} vs python {b}"
+        );
+    }
+}
+
+#[test]
+fn train_step_matches() {
+    let Some(g) = goldens() else { return };
+    let t = g.get("train_step").unwrap();
+    let nh = t.get("n_hidden").unwrap().as_usize().unwrap();
+    let h = arr_f32(t.get("h").unwrap());
+    let p_diag = t.get("p_diag").unwrap().as_f64().unwrap() as f32;
+    let beta = arr_f32(t.get("beta").unwrap());
+    let y_class = t.get("y_class").unwrap().as_usize().unwrap();
+    let want_p = arr_f32(t.get("p_new").unwrap());
+    let want_beta = arr_f32(t.get("beta_new").unwrap());
+
+    // Rust-side rank-1 update on the same state (replicating the math the
+    // OsElm hot path performs, but from the given H rather than from x).
+    let m = 6usize;
+    let mut p = Mat::zeros(nh, nh);
+    for i in 0..nh {
+        *p.at_mut(i, i) = p_diag;
+    }
+    let mut b = Mat::from_vec(nh, m, beta);
+    let mut ph = vec![0.0f32; nh];
+    for i in 0..nh {
+        ph[i] = odl_har::linalg::mat::dot(p.row(i), &h);
+    }
+    let denom = 1.0 + odl_har::linalg::mat::dot(&h, &ph);
+    let mut err = vec![0.0f32; m];
+    for (j, e) in err.iter_mut().enumerate() {
+        *e = if j == y_class { 1.0 } else { 0.0 };
+    }
+    for i in 0..nh {
+        for j in 0..m {
+            err[j] -= h[i] * b.at(i, j);
+        }
+    }
+    for i in 0..nh {
+        let s = ph[i] / denom;
+        for j in 0..nh {
+            *p.at_mut(i, j) -= s * ph[j];
+        }
+        for j in 0..m {
+            *b.at_mut(i, j) += s * err[j];
+        }
+    }
+    for (i, (a, w)) in p.data.iter().zip(&want_p).enumerate() {
+        assert!((a - w).abs() < 1e-5, "P[{i}]: {a} vs {w}");
+    }
+    for (i, (a, w)) in b.data.iter().zip(&want_beta).enumerate() {
+        assert!((a - w).abs() < 1e-5, "beta[{i}]: {a} vs {w}");
+    }
+}

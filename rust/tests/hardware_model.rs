@@ -1,0 +1,131 @@
+//! Integration: the bit-accurate Q16.16 hardware golden model
+//! ([`FixedOsElm`]) co-simulated against the f32 golden model on the HAR
+//! protocol — quantifies the fixed-point accuracy loss the ASIC pays and
+//! checks the cycle/power models stay consistent with the datapath the
+//! fixed model actually executes.
+
+use odl_har::data::{DriftSplit, Standardizer, SynthConfig, SynthHar};
+use odl_har::fixed::{fx_vec_from_f32, Fx};
+use odl_har::hw::{CycleModel, PowerModel, PowerState};
+use odl_har::odl::fixed_oselm::FixedOsElm;
+use odl_har::odl::{AlphaKind, OsElm, OsElmConfig};
+use odl_har::util::rng::Rng64;
+
+/// Reduced-size workload (the sequential-xorshift hidden loop in the
+/// fixed model is O(n·N) per sample in software).
+fn workload() -> (DriftSplit, usize, usize, usize) {
+    let (n_in, n_hidden, n_out) = (64, 32, 4);
+    let synth = SynthConfig {
+        n_features: n_in,
+        n_classes: n_out,
+        n_subjects: 30,
+        samples_per_cell: 12,
+        proto_sigma: 1.1,
+        confuse_frac: 0.04,
+        ..Default::default()
+    };
+    let mut data_rng = Rng64::new(0xF1DE);
+    let pool = SynthHar::new(synth, &mut data_rng).generate(&mut data_rng);
+    let mut rng = Rng64::new(3);
+    let mut split = DriftSplit::build(&pool, 0.7, &mut rng);
+    let std = Standardizer::fit(&split.train.xs);
+    std.apply(&mut split.train.xs);
+    std.apply(&mut split.test0.xs);
+    std.apply(&mut split.odl_stream.xs);
+    std.apply(&mut split.test1.xs);
+    (split, n_in, n_hidden, n_out)
+}
+
+#[test]
+fn fixed_point_core_tracks_float_on_har_protocol() {
+    let (split, n_in, n_hidden, n_out) = workload();
+
+    // float golden model, trained on the full §3 protocol — provisioned
+    // with the ASIC's *sequential*-stream α so its state is feature-
+    // compatible with the fixed-point core (same seed ⇒ same weights).
+    let cfg = OsElmConfig {
+        n_in,
+        n_hidden,
+        n_out,
+        alpha: AlphaKind::Hash,
+        ..Default::default()
+    };
+    let mut float_model = OsElm::new(cfg, &mut Rng64::new(1), 7);
+    float_model.set_alpha(odl_har::odl::alpha::AlphaProvider::hash_sequential(
+        7,
+        n_in,
+        n_hidden,
+        cfg.scale(),
+    ));
+    let k0 = (2 * n_hidden).max(100);
+    let (init, rest) = split.train.split_at(k0);
+    float_model.init_batch(&init.xs, &init.labels).unwrap();
+    for r in 0..rest.len() {
+        float_model.train_step(rest.xs.row(r), rest.labels[r]);
+    }
+
+    // hardware model provisioned from the float state (the deployment
+    // story: offline init, on-device fixed-point ODL)
+    let mut hw = FixedOsElm::new(n_in, n_hidden, n_out, 7);
+    hw.load_from_float(&float_model.beta.data, &float_model.p.data)
+        .unwrap();
+
+    // both retrain on the drifted stream
+    let fx_stream: Vec<Vec<Fx>> = (0..split.odl_stream.len())
+        .map(|r| fx_vec_from_f32(split.odl_stream.xs.row(r)))
+        .collect();
+    for (r, fx) in fx_stream.iter().enumerate() {
+        let label = split.odl_stream.labels[r];
+        float_model.train_step(split.odl_stream.xs.row(r), label);
+        hw.train_step(fx, label);
+    }
+
+    // post-drift accuracy: fixed-point loss must be small
+    let acc_float = float_model.accuracy(&split.test1.xs, &split.test1.labels);
+    let fx_test: Vec<Vec<Fx>> = (0..split.test1.len())
+        .map(|r| fx_vec_from_f32(split.test1.xs.row(r)))
+        .collect();
+    let acc_fixed = hw.accuracy(&fx_test, &split.test1.labels);
+    assert!(
+        acc_float > 0.8,
+        "float model failed to recover: {acc_float}"
+    );
+    assert!(
+        (acc_float - acc_fixed).abs() < 0.08,
+        "Q16.16 quantization loss too large: float {acc_float:.3} vs fixed {acc_fixed:.3}"
+    );
+}
+
+#[test]
+fn cycle_model_scales_with_the_datapath_it_charges() {
+    // The cycle model's op counts must match what FixedOsElm executes:
+    // hidden n·N MACs, Ph N², rank-1 N²+Nm elements. Scaling n, N, m must
+    // move predicted cycles proportionally.
+    let base = CycleModel::prototype().with_dims(64, 32, 4);
+    let double_n = CycleModel::prototype().with_dims(128, 32, 4);
+    let double_hidden = CycleModel::prototype().with_dims(64, 64, 4);
+
+    // doubling n doubles the hidden MACs (dominant in predict)
+    let p0 = base.predict_cycles() as f64;
+    let p1 = double_n.predict_cycles() as f64;
+    assert!((p1 / p0 - 2.0).abs() < 0.1, "predict n-scaling: {}", p1 / p0);
+
+    // doubling N roughly quadruples the train-time N² terms
+    let t0 = base.train_cycles() as f64;
+    let t1 = double_hidden.train_cycles() as f64;
+    assert!(t1 / t0 > 2.0, "train N-scaling too weak: {}", t1 / t0);
+}
+
+#[test]
+fn energy_per_event_at_prototype_point() {
+    // §3.3's per-event numbers: one predict + one train at 10 MHz draws
+    // predict 3.39 mW × 36.4 ms + train 3.37 mW × 171.28 ms ≈ 0.70 mJ.
+    let cyc = CycleModel::prototype();
+    let pow = PowerModel::default();
+    let e = pow.energy_mj(PowerState::Predict, cyc.predict_time_s())
+        + pow.energy_mj(PowerState::Train, cyc.train_time_s());
+    assert!(
+        (e - 0.7006).abs() < 0.005,
+        "per-event compute energy {e} mJ (expected ≈ 0.70)"
+    );
+}

@@ -1,0 +1,172 @@
+//! Integration: the PJRT-executed JAX/Pallas artifacts must numerically
+//! agree with the native rust golden model — the cross-language contract
+//! of the three-layer architecture.
+//!
+//! These tests skip (with a notice) when `artifacts/` has not been built;
+//! `make test` always builds artifacts first.
+
+use odl_har::linalg::Mat;
+use odl_har::odl::{AlphaKind, OsElm, OsElmConfig};
+use odl_har::runtime::{default_artifact_dir, PjrtOsElm, Runtime};
+use odl_har::util::rng::Rng64;
+
+fn runtime() -> Option<Runtime> {
+    if !default_artifact_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(default_artifact_dir()).expect("runtime open"))
+}
+
+fn native_model(seed: u16) -> OsElm {
+    let cfg = OsElmConfig {
+        n_in: 561,
+        n_hidden: 128,
+        n_out: 6,
+        alpha: AlphaKind::Hash,
+        ..Default::default()
+    };
+    OsElm::new(cfg, &mut Rng64::new(1), seed)
+}
+
+fn random_data(rng: &mut Rng64, rows: usize) -> (Mat, Vec<usize>) {
+    let mut xs = Mat::zeros(rows, 561);
+    let mut labels = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let c = rng.below(6);
+        labels.push(c);
+        for j in 0..561 {
+            let mean = if j % 6 == c { 0.8 } else { -0.2 };
+            *xs.at_mut(r, j) = rng.normal_ms(mean, 1.0) as f32;
+        }
+    }
+    (xs, labels)
+}
+
+#[test]
+fn predict_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng64::new(7);
+    let (xs, _) = random_data(&mut rng, 4);
+
+    let mut native = native_model(42);
+    // random β so logits are nontrivial
+    for (i, b) in native.beta.data.iter_mut().enumerate() {
+        *b = ((i as f32) * 0.37).sin() * 0.3;
+    }
+    let mut pjrt = PjrtOsElm::new(&rt, 128, 42).unwrap();
+    pjrt.load_state(&native.beta.data, &native.p.data).unwrap();
+
+    for r in 0..xs.rows {
+        let ln = native.logits(xs.row(r));
+        let lp = pjrt.logits(xs.row(r)).unwrap();
+        for (a, b) in ln.iter().zip(&lp) {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "logit mismatch: native {a} vs pjrt {b}"
+            );
+        }
+        let pn = native.predict(xs.row(r));
+        let pp = pjrt.predict(xs.row(r)).unwrap();
+        assert_eq!(pn.class, pp.class);
+        assert!((pn.confidence() - pp.confidence()).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn train_step_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng64::new(9);
+    let (xs, labels) = random_data(&mut rng, 8);
+
+    let mut native = native_model(7);
+    // P = 5·I prior (fresh-ish RLS state)
+    for i in 0..128 {
+        *native.p.at_mut(i, i) = 5.0;
+    }
+    let mut pjrt = PjrtOsElm::new(&rt, 128, 7).unwrap();
+    pjrt.load_state(&native.beta.data, &native.p.data).unwrap();
+
+    for r in 0..xs.rows {
+        native.train_step(xs.row(r), labels[r]);
+        pjrt.train_step(xs.row(r), labels[r]).unwrap();
+    }
+    let max_beta = native
+        .beta
+        .data
+        .iter()
+        .zip(&pjrt.beta)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    let max_p = native
+        .p
+        .data
+        .iter()
+        .zip(&pjrt.p)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_beta < 1e-3, "beta drift after 8 steps: {max_beta}");
+    assert!(max_p < 1e-2, "P drift after 8 steps: {max_p}");
+}
+
+#[test]
+fn init_batch_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng64::new(11);
+    let (xs, labels) = random_data(&mut rng, 512);
+
+    let mut native = native_model(3);
+    native.init_batch(&xs, &labels).unwrap();
+    let mut pjrt = PjrtOsElm::new(&rt, 128, 3).unwrap();
+    pjrt.init_batch(&xs, &labels).unwrap();
+
+    // β agreement (Newton–Schulz vs Cholesky: same SPD inverse to ~1e-3)
+    let max_beta = native
+        .beta
+        .data
+        .iter()
+        .zip(&pjrt.beta)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_beta < 5e-3, "init beta mismatch: {max_beta}");
+
+    // and the two models must agree on predictions
+    let (test_xs, test_labels) = random_data(&mut rng, 64);
+    let acc_native = native.accuracy(&test_xs, &test_labels);
+    let acc_pjrt = pjrt.accuracy(&test_xs, &test_labels).unwrap();
+    assert!(
+        (acc_native - acc_pjrt).abs() < 0.04,
+        "accuracy divergence: {acc_native} vs {acc_pjrt}"
+    );
+}
+
+#[test]
+fn batched_accuracy_handles_tail_padding() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng64::new(13);
+    // 300 samples: one full 256 batch + a 44-sample padded tail
+    let (xs, labels) = random_data(&mut rng, 300);
+    let mut native = native_model(5);
+    let (init, _) = (&xs, &labels);
+    native.init_batch(init, labels.as_slice()).unwrap();
+    let mut pjrt = PjrtOsElm::new(&rt, 128, 5).unwrap();
+    pjrt.load_state(&native.beta.data, &native.p.data).unwrap();
+
+    let acc_native = native.accuracy(&xs, &labels);
+    let acc_pjrt = pjrt.accuracy(&xs, &labels).unwrap();
+    assert!(
+        (acc_native - acc_pjrt).abs() < 1e-9,
+        "padded batch eval must match exactly: {acc_native} vs {acc_pjrt}"
+    );
+}
+
+#[test]
+fn n256_artifacts_work() {
+    let Some(rt) = runtime() else { return };
+    let mut pjrt = PjrtOsElm::new(&rt, 256, 1).unwrap();
+    let mut rng = Rng64::new(17);
+    let (xs, labels) = random_data(&mut rng, 512);
+    pjrt.init_batch(&xs, &labels).unwrap();
+    let acc = pjrt.accuracy(&xs, &labels).unwrap();
+    assert!(acc > 0.8, "N=256 self-accuracy {acc}");
+}

@@ -1,0 +1,94 @@
+//! Integration: the §3 protocol at full 561-dim scale — reduced-trial
+//! Table-3 / Figure-3 shape assertions (the full 20-trial runs live in
+//! `cargo bench`).
+
+use odl_har::exp::protocol::{run, ProtocolConfig, PruningSpec, Variant};
+use odl_har::odl::AlphaKind;
+
+fn cfg(variant: Variant, n_hidden: usize) -> ProtocolConfig {
+    let mut c = ProtocolConfig::new(variant, n_hidden);
+    c.trials = 3;
+    c
+}
+
+#[test]
+fn table3_shape_n128() {
+    let no_odl = run(&cfg(Variant::NoOdl(AlphaKind::Hash), 128)).unwrap();
+    let hash = run(&cfg(Variant::Odl(AlphaKind::Hash), 128)).unwrap();
+    let base = run(&cfg(Variant::Odl(AlphaKind::Stored), 128)).unwrap();
+
+    // paper: before ≈ 93, NoODL after ≈ 83 (−10), ODL after ≈ 90.7
+    assert!(
+        (88.0..96.0).contains(&no_odl.before.mean()),
+        "before {}",
+        no_odl.before.mean()
+    );
+    assert!(
+        no_odl.after.mean() < no_odl.before.mean() - 6.0,
+        "drift drop too small: {} -> {}",
+        no_odl.before.mean(),
+        no_odl.after.mean()
+    );
+    for (name, agg) in [("hash", &hash), ("base", &base)] {
+        assert!(
+            agg.after.mean() > no_odl.after.mean() + 4.0,
+            "{name} recovery missing: {} vs noodl {}",
+            agg.after.mean(),
+            no_odl.after.mean()
+        );
+    }
+    // ODLHash ≈ ODLBase (the paper's hash-replacement claim)
+    assert!(
+        (hash.after.mean() - base.after.mean()).abs() < 3.0,
+        "hash {} vs base {}",
+        hash.after.mean(),
+        base.after.mean()
+    );
+}
+
+#[test]
+fn capacity_ordering_n256_beats_n128_before_drift() {
+    let a = run(&cfg(Variant::Odl(AlphaKind::Hash), 128)).unwrap();
+    let b = run(&cfg(Variant::Odl(AlphaKind::Hash), 256)).unwrap();
+    assert!(
+        b.before.mean() > a.before.mean() + 1.0,
+        "N=256 {} must beat N=128 {}",
+        b.before.mean(),
+        a.before.mean()
+    );
+}
+
+#[test]
+fn pruning_tradeoff_at_full_scale() {
+    let mut full = cfg(Variant::Odl(AlphaKind::Hash), 128);
+    full.pruning = PruningSpec::Off;
+    let mut auto = cfg(Variant::Odl(AlphaKind::Hash), 128);
+    auto.pruning = PruningSpec::Auto { x: 10 };
+    let full = run(&full).unwrap();
+    let auto = run(&auto).unwrap();
+    // paper §3.2: 55.7 % comm reduction at ≤ 0.9 pt accuracy cost
+    let reduction = 100.0 - auto.comm.mean();
+    assert!(reduction > 40.0, "auto reduction only {reduction:.1} %");
+    assert!(
+        full.after.mean() - auto.after.mean() < 2.5,
+        "accuracy cost too high: {} vs {}",
+        full.after.mean(),
+        auto.after.mean()
+    );
+}
+
+#[test]
+fn dnn_baseline_also_degrades_under_drift() {
+    let dnn = run(&cfg(Variant::Dnn(vec![561, 512, 256, 6]), 0)).unwrap();
+    assert!(
+        (85.0..97.0).contains(&dnn.before.mean()),
+        "dnn before {}",
+        dnn.before.mean()
+    );
+    assert!(
+        dnn.after.mean() < dnn.before.mean() - 4.0,
+        "a frozen DNN must also drop: {} -> {}",
+        dnn.before.mean(),
+        dnn.after.mean()
+    );
+}
