@@ -1,13 +1,158 @@
 //! Hot-path microbenchmarks across all three layers: the native OS-ELM
 //! core (L3 state), the PJRT-executed artifacts (L2/L1), and the fleet
-//! event loop. §Perf of EXPERIMENTS.md tracks these numbers.
+//! event loop. §Perf of EXPERIMENTS.md and rust/PERF.md track these
+//! numbers.
+//!
+//! Besides the kernel-layer hot path, this bench re-implements the
+//! **pre-kernel scalar baseline** (the seed's row-axpy hidden layer,
+//! 4-way dot, and full-N² Sherman–Morrison sweep) and times both on the
+//! same machine in the same process, so every run produces its own
+//! before/after comparison. Results are also written machine-readably to
+//! `BENCH_hotpath.json` (override the path with `ODL_BENCH_JSON`), which
+//! is how the perf trajectory is tracked from PR to PR.
 
 use odl_har::coordinator::fleet::{Fleet, FleetConfig, Scenario};
 use odl_har::data::SynthConfig;
 use odl_har::linalg::Mat;
+use odl_har::odl::activation::sigmoid_inplace;
 use odl_har::odl::{AlphaKind, OsElm, OsElmConfig};
-use odl_har::util::bench::{bench, fast_mode};
+use odl_har::util::bench::{bench, fast_mode, BenchResult};
+use odl_har::util::json::{obj, Json};
 use odl_har::util::rng::Rng64;
+use odl_har::util::stats::argmax;
+
+/// The seed's 4-way unrolled dot (pre-kernel reference).
+fn naive_dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let k = i * 4;
+        acc[0] += a[k] * b[k];
+        acc[1] += a[k + 1] * b[k + 1];
+        acc[2] += a[k + 2] * b[k + 2];
+        acc[3] += a[k + 3] * b[k + 3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Pre-kernel-layer scalar OS-ELM: the seed's exact predict/train_step
+/// schedule (row-axpy hidden walk with an N-wide in-memory accumulator,
+/// full-matrix rank-1 P sweep), run against copies of the same state.
+struct BaselineModel {
+    n: usize,
+    nh: usize,
+    m: usize,
+    alpha: Vec<f32>,
+    beta: Vec<f32>,
+    p: Vec<f32>,
+    h: Vec<f32>,
+    ph: Vec<f32>,
+    err: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl BaselineModel {
+    fn from(model: &OsElm) -> Self {
+        Self {
+            n: model.cfg.n_in,
+            nh: model.cfg.n_hidden,
+            m: model.cfg.n_out,
+            alpha: model.alpha.data().to_vec(),
+            beta: model.beta.data.clone(),
+            p: model.p.data.clone(),
+            h: vec![0.0; model.cfg.n_hidden],
+            ph: vec![0.0; model.cfg.n_hidden],
+            err: vec![0.0; model.cfg.n_out],
+            logits: vec![0.0; model.cfg.n_out],
+        }
+    }
+
+    fn hidden(&mut self, x: &[f32]) {
+        self.h.fill(0.0);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &self.alpha[i * self.nh..(i + 1) * self.nh];
+            for (o, &w) in self.h.iter_mut().zip(row) {
+                *o += xi * w;
+            }
+        }
+        sigmoid_inplace(&mut self.h);
+    }
+
+    fn predict(&mut self, x: &[f32]) -> usize {
+        self.hidden(x);
+        self.logits.fill(0.0);
+        for i in 0..self.nh {
+            let hi = self.h[i];
+            if hi == 0.0 {
+                continue;
+            }
+            let brow = &self.beta[i * self.m..(i + 1) * self.m];
+            for (l, &b) in self.logits.iter_mut().zip(brow) {
+                *l += hi * b;
+            }
+        }
+        argmax(&self.logits)
+    }
+
+    fn train_step(&mut self, x: &[f32], label: usize) {
+        let (nh, m) = (self.nh, self.m);
+        self.hidden(x);
+        for i in 0..nh {
+            self.ph[i] = naive_dot(&self.p[i * nh..(i + 1) * nh], &self.h);
+        }
+        let denom = 1.0 + naive_dot(&self.h, &self.ph);
+        let inv_denom = 1.0 / denom;
+        for j in 0..m {
+            self.err[j] = if j == label { 1.0 } else { 0.0 };
+        }
+        for i in 0..nh {
+            let hi = self.h[i];
+            if hi == 0.0 {
+                continue;
+            }
+            let brow = &self.beta[i * m..(i + 1) * m];
+            for (e, &b) in self.err.iter_mut().zip(brow) {
+                *e -= hi * b;
+            }
+        }
+        // the seed's fused full-N² rank-1 sweeps
+        for i in 0..nh {
+            let s = self.ph[i] * inv_denom;
+            if s == 0.0 {
+                continue;
+            }
+            let prow = &mut self.p[i * nh..(i + 1) * nh];
+            for (pj, &phj) in prow.iter_mut().zip(self.ph.iter()) {
+                *pj -= s * phj;
+            }
+            let brow = &mut self.beta[i * m..(i + 1) * m];
+            for (bj, &ej) in brow.iter_mut().zip(self.err.iter()) {
+                *bj += s * ej;
+            }
+        }
+    }
+}
+
+fn json_row(r: &BenchResult, samples_per_iter: Option<f64>) -> Json {
+    let mut pairs = vec![
+        ("name", Json::Str(r.name.clone())),
+        ("mean_ns", Json::Num(r.mean_s * 1e9)),
+        ("std_ns", Json::Num(r.std_s * 1e9)),
+        ("min_ns", Json::Num(r.min_s * 1e9)),
+        ("iters", Json::Num(r.iters as f64)),
+    ];
+    if let Some(s) = samples_per_iter {
+        pairs.push(("samples_per_s", Json::Num(r.per_sec(s))));
+    }
+    obj(pairs)
+}
 
 fn main() {
     let mut rng = Rng64::new(1);
@@ -30,14 +175,32 @@ fn main() {
     }
     model.init_batch(&xs, &labels).unwrap();
 
-    // L3 native hot path
+    let mut rows: Vec<Json> = Vec::new();
+
+    // L3 native hot path — kernel layer vs the pre-kernel scalar baseline,
+    // same state, same machine, same process.
     let x = xs.row(0).to_vec();
-    bench("native predict (561/128/6)", 10, 200, || {
+    let mut baseline = BaselineModel::from(&model);
+    let r_pred = bench("native predict (561/128/6)", 10, 200, || {
         std::hint::black_box(model.predict(&x));
     });
-    bench("native train_step (561/128/6)", 10, 200, || {
+    let r_pred_base = bench("baseline predict (561/128/6)", 10, 200, || {
+        std::hint::black_box(baseline.predict(&x));
+    });
+    let r_train = bench("native train_step (561/128/6)", 10, 200, || {
         model.train_step(&x, 3);
     });
+    let r_train_base = bench("baseline train_step (561/128/6)", 10, 200, || {
+        baseline.train_step(&x, 3);
+    });
+    let sp_pred = r_pred_base.mean_s / r_pred.mean_s;
+    let sp_train = r_train_base.mean_s / r_train.mean_s;
+    println!("  -> speedup vs scalar baseline: predict {sp_pred:.2}x, train_step {sp_train:.2}x");
+    rows.push(json_row(&r_pred, None));
+    rows.push(json_row(&r_pred_base, None));
+    rows.push(json_row(&r_train, None));
+    rows.push(json_row(&r_train_base, None));
+
     let mut model256 = OsElm::new(
         OsElmConfig {
             n_hidden: 256,
@@ -47,25 +210,43 @@ fn main() {
         7,
     );
     model256.init_batch(&xs, &labels).unwrap();
-    bench("native train_step (561/256/6)", 5, 100, || {
+    let mut baseline256 = BaselineModel::from(&model256);
+    let r_train256 = bench("native train_step (561/256/6)", 5, 100, || {
         model256.train_step(&x, 3);
     });
-    let r = bench("native init_batch (512 samples, N=128)", 1, 5, || {
+    let r_train256_base = bench("baseline train_step (561/256/6)", 5, 100, || {
+        baseline256.train_step(&x, 3);
+    });
+    let sp_train256 = r_train256_base.mean_s / r_train256.mean_s;
+    println!("  -> speedup vs scalar baseline: train_step N=256 {sp_train256:.2}x");
+    rows.push(json_row(&r_train256, None));
+    rows.push(json_row(&r_train256_base, None));
+
+    let r_batch = bench("native predict_batch 512 (561/128/6)", 3, 30, || {
+        std::hint::black_box(model.accuracy(&xs, &labels));
+    });
+    println!("  -> {:.0} samples/s batched eval", r_batch.per_sec(512.0));
+    rows.push(json_row(&r_batch, Some(512.0)));
+
+    let r_init = bench("native init_batch (512 samples, N=128)", 1, 5, || {
         model.init_batch(&xs, &labels).unwrap();
     });
-    println!("  -> {:.0} samples/s batch init", r.per_sec(512.0));
+    println!("  -> {:.0} samples/s batch init", r_init.per_sec(512.0));
+    rows.push(json_row(&r_init, Some(512.0)));
 
     // L2/L1 via PJRT (skipped when artifacts are absent)
     if odl_har::runtime::default_artifact_dir().join("manifest.json").exists() {
         let rt = odl_har::runtime::Runtime::open_default().expect("runtime");
         let mut pjrt = odl_har::runtime::PjrtOsElm::new(&rt, 128, 7).expect("pjrt model");
         pjrt.load_state(&model.beta.data, &model.p.data).unwrap();
-        bench("pjrt predict_one (561/128/6)", 5, 100, || {
+        let r = bench("pjrt predict_one (561/128/6)", 5, 100, || {
             std::hint::black_box(pjrt.predict(&x).unwrap());
         });
-        bench("pjrt train_step (561/128/6)", 5, 100, || {
+        rows.push(json_row(&r, None));
+        let r = bench("pjrt train_step (561/128/6)", 5, 100, || {
             pjrt.train_step(&x, 3).unwrap();
         });
+        rows.push(json_row(&r, None));
         let r = bench("pjrt train_stream 512 (scan-fused, K=32)", 1, 10, || {
             pjrt.train_stream(&xs, &labels).unwrap();
         });
@@ -74,10 +255,12 @@ fn main() {
             r.mean_s * 1e3 / 512.0,
             r.per_sec(512.0)
         );
+        rows.push(json_row(&r, Some(512.0)));
         let r = bench("pjrt predict_batch 256 (561/128/6)", 3, 30, || {
             std::hint::black_box(pjrt.accuracy(&xs, &labels).unwrap());
         });
         println!("  -> {:.0} samples/s batched eval", r.per_sec(512.0));
+        rows.push(json_row(&r, Some(512.0)));
     } else {
         println!("(skipping PJRT benches: run `make artifacts` first)");
     }
@@ -102,6 +285,7 @@ fn main() {
             .unwrap(),
         );
     });
+    rows.push(json_row(&build, None));
     let r = bench("fleet construct + event loop (4 edges)", 0, 3, || {
         let fleet = Fleet::new(FleetConfig {
             scenario: scenario.clone(),
@@ -110,10 +294,31 @@ fn main() {
         .unwrap();
         std::hint::black_box(fleet.run());
     });
+    rows.push(json_row(&r, None));
     let loop_s = (r.mean_s - build.mean_s).max(1e-9);
     println!(
         "  -> {:.0} fleet events/s simulated (loop only, {:.1} us/event)",
         events / loop_s,
         loop_s / events * 1e6
     );
+
+    // machine-readable dump: per-op ns + samples/s + baseline speedups
+    let out = obj(vec![
+        ("schema", Json::Str("bench_hotpath/v1".into())),
+        ("fast_mode", Json::Bool(fast_mode())),
+        ("results", Json::Arr(rows)),
+        (
+            "speedup_vs_baseline",
+            obj(vec![
+                ("predict_561_128_6", Json::Num(sp_pred)),
+                ("train_step_561_128_6", Json::Num(sp_train)),
+                ("train_step_561_256_6", Json::Num(sp_train256)),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("ODL_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    match std::fs::write(&path, out.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

@@ -129,7 +129,14 @@ impl EdgeDevice {
                 self.events_this_phase += 1;
                 // Condition 2: drift "currently detected" keeps querying.
                 let drift_now = self.detector.is_drift();
-                match self.pruner.decide(&pred, self.trained_this_phase, drift_now) {
+                // Borrow-based metric path (exact EL2N when configured;
+                // identical to P1P2 otherwise) — zero allocation per event.
+                match self.pruner.decide_with_logits(
+                    &pred,
+                    self.model.last_logits(),
+                    self.trained_this_phase,
+                    drift_now,
+                ) {
                     Decision::Skip => {
                         self.total_skips += 1;
                         self.pruner.observe(Decision::Skip, None);

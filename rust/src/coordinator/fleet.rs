@@ -23,6 +23,7 @@ use crate::data::synth::{SynthConfig, SynthHar};
 use crate::data::{Standardizer, HELD_OUT_SUBJECTS};
 use crate::drift::{CentroidDetector, DriftDetector, OracleDetector};
 use crate::hw::{CycleModel, PowerModel, PowerState};
+use crate::linalg::Mat;
 use crate::odl::{AlphaKind, OsElmConfig};
 use crate::pruning::{Metric, Pruner, ThetaPolicy};
 use anyhow::Result;
@@ -55,6 +56,14 @@ pub struct Scenario {
     pub synth: SynthConfig,
     /// Training-phase length (IsTrainDone target).
     pub train_target: usize,
+    /// Periodic evaluation window: every `eval_period_s` of virtual time,
+    /// each edge's model is evaluated on a fresh probe batch drawn from
+    /// its *current* distribution via the batched predict path
+    /// (`OsElm::accuracy`). 0 disables (the default — evaluation windows
+    /// are telemetry, not part of the paper's protocol).
+    pub eval_period_s: f64,
+    /// Probe-batch size per edge per evaluation window.
+    pub eval_samples: usize,
 }
 
 impl Default for Scenario {
@@ -71,6 +80,8 @@ impl Default for Scenario {
             channel: ChannelConfig::default(),
             synth: SynthConfig::default(),
             train_target: 400,
+            eval_period_s: 0.0,
+            eval_samples: 64,
         }
     }
 }
@@ -92,6 +103,8 @@ enum Event {
     QueryFailed { edge: usize },
     /// Scripted drift moment.
     Drift,
+    /// Periodic fleet-wide evaluation window (batched probe accuracy).
+    Eval,
 }
 
 struct Scheduled {
@@ -135,6 +148,10 @@ pub struct Fleet {
     edge_subjects: Vec<(usize, usize)>,
     drifted: bool,
     rng: crate::util::rng::Rng64,
+    /// Dedicated stream for evaluation-window probe draws, so enabling
+    /// the (telemetry-only) eval windows does not perturb the simulation
+    /// trajectory of the main `rng` for a given seed.
+    eval_rng: crate::util::rng::Rng64,
     power: PowerModel,
     cycles: CycleModel,
     queue: BinaryHeap<Scheduled>,
@@ -215,6 +232,7 @@ impl Fleet {
             standardizer,
             edge_subjects,
             drifted: false,
+            eval_rng: crate::util::rng::Rng64::new(cfg.seed ^ 0xE7A1),
             rng,
             power: PowerModel::default(),
             cycles: CycleModel::prototype().with_dims(
@@ -236,6 +254,10 @@ impl Fleet {
         }
         let drift_at = fleet.cfg.scenario.drift_at_s;
         fleet.schedule(drift_at, Event::Drift);
+        let eval_period = fleet.cfg.scenario.eval_period_s;
+        if eval_period > 0.0 {
+            fleet.schedule(eval_period, Event::Eval);
+        }
         Ok(fleet)
     }
 
@@ -248,20 +270,40 @@ impl Fleet {
         });
     }
 
-    fn sense_sample(&mut self, edge: usize) -> (Vec<f32>, usize) {
-        let (pre, post) = self.edge_subjects[edge];
-        let subject = if self.drifted { post } else { pre };
-        let class = self.rng.below(self.cfg.scenario.synth.n_classes);
-        let mut x = self.generator.sample(class, subject, &mut self.rng);
+    /// Draw one standardized sample for `edge` from its current subject
+    /// distribution using the given stream (disjoint-field helper so the
+    /// sense path and the eval-probe path can use different RNGs).
+    fn draw_sample(
+        generator: &SynthHar,
+        standardizer: &Standardizer,
+        subjects: (usize, usize),
+        drifted: bool,
+        n_classes: usize,
+        rng: &mut crate::util::rng::Rng64,
+    ) -> (Vec<f32>, usize) {
+        let subject = if drifted { subjects.1 } else { subjects.0 };
+        let class = rng.below(n_classes);
+        let mut x = generator.sample(class, subject, rng);
         // standardize like the provisioning data
         for ((v, &m), &s) in x
             .iter_mut()
-            .zip(&self.standardizer.mean)
-            .zip(&self.standardizer.std)
+            .zip(&standardizer.mean)
+            .zip(&standardizer.std)
         {
             *v = (*v - m) / s;
         }
         (x, class)
+    }
+
+    fn sense_sample(&mut self, edge: usize) -> (Vec<f32>, usize) {
+        Self::draw_sample(
+            &self.generator,
+            &self.standardizer,
+            self.edge_subjects[edge],
+            self.drifted,
+            self.cfg.scenario.synth.n_classes,
+            &mut self.rng,
+        )
     }
 
     /// Run to the horizon; returns the report.
@@ -299,6 +341,11 @@ impl Fleet {
                     self.edges[edge].on_query_failed();
                     self.metrics[edge].query_failures += 1;
                 }
+                Event::Eval => {
+                    self.run_eval_window();
+                    let next = self.now + self.cfg.scenario.eval_period_s;
+                    self.schedule(next, Event::Eval);
+                }
             }
         }
         // close the books: remaining time is sleep
@@ -323,6 +370,41 @@ impl Fleet {
             report.per_edge.push(m);
         }
         report
+    }
+
+    /// One evaluation window: draw a probe batch per edge from its
+    /// *current* sampling distribution and score it through the batched
+    /// predict path (`OsElm::accuracy` — one packed-α panel sweep + one
+    /// logits GEMM per block, no per-sample allocation). Telemetry only:
+    /// probes don't touch the edge FSM, the pruner, the power ledger, or
+    /// the main RNG stream — the same seed yields the same simulation
+    /// with eval windows on or off.
+    fn run_eval_window(&mut self) {
+        let ns = self.cfg.scenario.eval_samples;
+        if ns == 0 {
+            return;
+        }
+        let nf = self.cfg.scenario.synth.n_features;
+        let n_classes = self.cfg.scenario.synth.n_classes;
+        let now = self.now;
+        for edge in 0..self.edges.len() {
+            let mut xs = Mat::zeros(ns, nf);
+            let mut labels = Vec::with_capacity(ns);
+            for r in 0..ns {
+                let (x, class) = Self::draw_sample(
+                    &self.generator,
+                    &self.standardizer,
+                    self.edge_subjects[edge],
+                    self.drifted,
+                    n_classes,
+                    &mut self.eval_rng,
+                );
+                xs.row_mut(r).copy_from_slice(&x);
+                labels.push(class);
+            }
+            let acc = self.edges[edge].model.accuracy(&xs, &labels);
+            self.metrics[edge].eval_trace.push((now, acc));
+        }
     }
 
     fn handle_sense(&mut self, edge: usize) {
@@ -556,6 +638,71 @@ mod tests {
             total_trained > 50,
             "organic detection must kick off retraining (trained {total_trained})"
         );
+    }
+
+    #[test]
+    fn eval_windows_record_probe_accuracy() {
+        let mut sc = small_scenario();
+        sc.eval_period_s = 50.0;
+        sc.eval_samples = 40;
+        let fleet = Fleet::new(FleetConfig {
+            scenario: sc,
+            seed: 6,
+        })
+        .unwrap();
+        let report = fleet.run();
+        for m in &report.per_edge {
+            // horizon 300 / period 50 → 6 windows (the last lands on the
+            // horizon boundary; allow 5..=6)
+            assert!(
+                (5..=6).contains(&m.eval_trace.len()),
+                "eval windows: {}",
+                m.eval_trace.len()
+            );
+            // pre-drift window must score the provisioned model well
+            let (t0, acc0) = m.eval_trace[0];
+            assert!(t0 <= 60.0, "first window at {t0}");
+            assert!(acc0 > 0.7, "provisioned probe accuracy {acc0}");
+            // post-recovery window must be healthy again (loose bound:
+            // probe batches are small and the subject is held-out)
+            let &(_, acc_last) = m.eval_trace.last().unwrap();
+            assert!(acc_last > 0.55, "final probe accuracy {acc_last}");
+        }
+    }
+
+    #[test]
+    fn eval_windows_do_not_perturb_simulation() {
+        // The probe draws come from a dedicated RNG stream: the same seed
+        // must produce the identical simulation with eval windows on/off.
+        let run = |eval: bool| {
+            let mut sc = small_scenario();
+            if eval {
+                sc.eval_period_s = 50.0;
+                sc.eval_samples = 16;
+            }
+            let r = Fleet::new(FleetConfig {
+                scenario: sc,
+                seed: 11,
+            })
+            .unwrap()
+            .run();
+            (
+                r.total_queries(),
+                r.per_edge.iter().map(|m| m.trained).collect::<Vec<_>>(),
+            )
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn eval_windows_disabled_by_default() {
+        let fleet = Fleet::new(FleetConfig {
+            scenario: small_scenario(),
+            seed: 1,
+        })
+        .unwrap();
+        let report = fleet.run();
+        assert!(report.per_edge.iter().all(|m| m.eval_trace.is_empty()));
     }
 
     #[test]

@@ -20,6 +20,10 @@ pub struct EdgeMetrics {
     pub state_time_s: HashMap<&'static str, f64>,
     /// (virtual time, rolling accuracy) checkpoints.
     pub accuracy_trace: Vec<(f64, f64)>,
+    /// (virtual time, probe accuracy) from the fleet's periodic
+    /// evaluation windows (batched predict over a probe set; empty when
+    /// `Scenario::eval_period_s` is 0).
+    pub eval_trace: Vec<(f64, f64)>,
     /// Rolling prediction-correctness window.
     correct_window: Vec<bool>,
 }

@@ -1,6 +1,13 @@
 //! PCA by power iteration with deflation — enough to regenerate Figure 1's
 //! 2-D per-class visualizations without an external eigensolver.
+//!
+//! The heavy steps all route through the kernel layer: the covariance is
+//! a triangular-blocked [`kernels::gram`] (via [`Mat::gram`]), the power
+//! iteration matvec is 8-lane chunked, deflation is the same symmetric
+//! rank-1 kernel the OS-ELM P update uses, and projection is one
+//! components-matrix matvec per row.
 
+use crate::linalg::kernels;
 use crate::linalg::Mat;
 use crate::util::rng::Rng64;
 
@@ -65,14 +72,9 @@ impl Pca {
                     break;
                 }
             }
-            // deflate: cov ← cov − λ v vᵀ
-            for i in 0..n {
-                let vi = v[i] * lambda;
-                let row = &mut cov.data[i * n..(i + 1) * n];
-                for (j, x) in row.iter_mut().enumerate() {
-                    *x -= vi * v[j];
-                }
-            }
+            // deflate: cov ← cov − λ v vᵀ (symmetric rank-1, upper
+            // triangle + mirror — the same kernel as the OS-ELM P update)
+            kernels::rank1_sym_update(&mut cov.data, n, &v, lambda);
             components.row_mut(comp).copy_from_slice(&v);
             eigenvalues.push(lambda);
         }
@@ -92,10 +94,14 @@ impl Pca {
             for ((c, &x), &m) in centered.iter_mut().zip(xs.row(r)).zip(&self.mean) {
                 *c = x - m;
             }
-            for comp in 0..k {
-                *out.at_mut(r, comp) =
-                    crate::linalg::mat::dot(&centered, self.components.row(comp));
-            }
+            // one k×n matvec per row (8-lane chunked per component)
+            kernels::matvec(
+                &self.components.data,
+                k,
+                xs.cols,
+                &centered,
+                out.row_mut(r),
+            );
         }
         out
     }

@@ -16,6 +16,7 @@
 //! * [`ConfidenceDetector`] — model-aware alternative: EWMA of the P1P2
 //!   confidence; drift when confidence collapses (used in ablations).
 
+use crate::linalg::kernels;
 use crate::odl::activation::Prediction;
 
 /// Common interface: feed one observation per event, query the flag.
@@ -113,18 +114,14 @@ impl CentroidDetector {
     }
 
     fn distance(&self, x: &[f32]) -> f32 {
-        x.iter()
-            .zip(&self.centroid)
-            .map(|(a, b)| (a - b) * (a - b))
-            .sum::<f32>()
-            .sqrt()
+        // kernel-layer squared distance: one call per sensed sample per
+        // edge (561-wide at full scale) — the detector's hot loop
+        kernels::dist2(x, &self.centroid).sqrt()
     }
 
     fn track(&mut self, x: &[f32], d: f32, rate_boost: f32) {
         let ac = self.alpha_centroid * rate_boost;
-        for (c, &xi) in self.centroid.iter_mut().zip(x) {
-            *c += ac * (xi - *c);
-        }
+        kernels::ewma(&mut self.centroid, x, ac);
         let ad = self.alpha_dist * rate_boost;
         let delta = d - self.mean_dist;
         self.mean_dist += ad * delta;

@@ -281,7 +281,10 @@ fn run_oselm_trial(
             // event is the stream switch itself; it is considered over
             // once the model has re-trained on warmup samples).
             let drift_now = false;
-            match pruner.decide(&pred, trained, drift_now) {
+            // Borrow-based metric path: `last_logits` reuses the workspace
+            // logits the predict above just produced — the Error-L2 metric
+            // gets the exact EL2N with zero allocation per event.
+            match pruner.decide_with_logits(&pred, model.last_logits(), trained, drift_now) {
                 Decision::Skip => {
                     pruner.observe(Decision::Skip, None);
                 }

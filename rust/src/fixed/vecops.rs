@@ -1,8 +1,16 @@
 //! Vector operations over Q16.16, mirroring the ASIC datapath: long dot
 //! products accumulate in a wide (64-bit) register before renormalizing,
 //! exactly like the hardware MAC's extended accumulator.
+//!
+//! The loops themselves route through the shared fixed-width kernels in
+//! [`crate::linalg::kernels`] (`fx_dot_raw`, `fx_scale_sub`), so the
+//! Q16.16 hardware model autovectorizes the same way the f32 golden model
+//! does. i64 accumulation is associative, so the 8-lane split is bitwise
+//! identical to the sequential walk — the hardware semantics are
+//! unchanged.
 
 use super::{acc_to_fx, Fx};
+use crate::linalg::kernels;
 
 /// Convert an f32 slice into fixed point.
 pub fn fx_vec_from_f32(xs: &[f32]) -> Vec<Fx> {
@@ -17,12 +25,7 @@ pub fn fx_vec_to_f32(xs: &[Fx]) -> Vec<f32> {
 /// Dot product with a wide accumulator (one renormalization at the end).
 #[inline]
 pub fn fx_dot(a: &[Fx], b: &[Fx]) -> Fx {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc: i64 = 0;
-    for (x, y) in a.iter().zip(b) {
-        acc += x.mac_raw(*y);
-    }
-    acc_to_fx(acc)
+    acc_to_fx(kernels::fx_dot_raw(a, b))
 }
 
 /// `row[j] -= (ph_i * ph[j]) / denom` for a whole row — the inner loop of
@@ -30,10 +33,7 @@ pub fn fx_dot(a: &[Fx], b: &[Fx]) -> Fx {
 /// once by the caller (one divide per row, like the ASIC schedule).
 #[inline]
 pub fn fx_scale_sub_outer(row: &mut [Fx], ph: &[Fx], scale: Fx) {
-    debug_assert_eq!(row.len(), ph.len());
-    for (r, &p) in row.iter_mut().zip(ph) {
-        *r = r.sub(scale.mul(p));
-    }
+    kernels::fx_scale_sub(row, ph, scale)
 }
 
 #[cfg(test)]

@@ -1,0 +1,569 @@
+//! Fixed-width micro-kernels for the L3 hot path.
+//!
+//! Everything that runs once per event per edge in the fleet simulator —
+//! the hidden-layer panel matvec, the Sherman–Morrison P update, logits,
+//! Gram/covariance builds — bottoms out in this module. The kernels are
+//! written in **stable Rust only** (no `std::simd`, no intrinsics): each
+//! inner loop has a compile-time-known width of [`LANES`] = 8 independent
+//! lanes, the shape LLVM's autovectorizer reliably turns into SIMD with
+//! the baseline `x86-64` / `aarch64` targets (2×f32x4 or 2×f32x8 when
+//! `target-cpu` allows).
+//!
+//! **Determinism.** Every kernel has one fixed association order, so a
+//! given input always produces bitwise-identical output across runs and
+//! call sites:
+//!
+//! * elementwise kernels ([`axpy`], [`rank1_sym_update`]'s upper triangle,
+//!   [`fx_scale_sub`]) are bit-for-bit equal to the naive scalar loop;
+//! * reductions ([`dot`], [`dist2`]) use 8 accumulation lanes + a scalar
+//!   tail, a *different but fixed* association vs. the naive sum (the
+//!   property tests bound the difference; for lengths < 8 the orders
+//!   coincide exactly);
+//! * [`gemm`]/[`gram`]/[`matvec`] accumulate strictly in ascending-k
+//!   order, so cache blocking does not change their numerics: `gemm` and
+//!   `gram` are bit-for-bit equal to the naive triple loop;
+//! * the Q16.16 kernels accumulate in `i64`, where addition is associative
+//!   — lane-splitting is bitwise-exact by construction.
+//!
+//! **Symmetry.** OS-ELM's P is symmetric positive definite by
+//! construction; [`rank1_sym_update`] exploits that by updating only the
+//! upper triangle (half the multiplies and half the read traffic of the
+//! full N² sweep) and mirroring rows into the lower triangle, which keeps
+//! P *exactly* symmetric — `p[j][i]` is a bitwise copy of `p[i][j]`.
+
+use crate::fixed::Fx;
+
+/// Lane width of the chunked kernels. 8 × f32 = one AVX register / two
+/// NEON or SSE registers; the accumulators of one chunk stay resident in
+/// registers for the whole reduction.
+pub const LANES: usize = 8;
+
+/// Cache-block sizes for [`gemm`]: a `BLK_K × BLK_N` panel of B is
+/// 64 KiB-safe (64·256·4 B = 64 KiB, L2-resident; each `BLK_N` slice of a
+/// C row stays in L1 across the k-block).
+pub const BLK_K: usize = 64;
+pub const BLK_N: usize = 256;
+
+// --- reductions --------------------------------------------------------------
+
+/// Dot product, 8-lane chunked.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let ac = a.chunks_exact(LANES);
+    let bc = b.chunks_exact(LANES);
+    let (ra, rb) = (ac.remainder(), bc.remainder());
+    let mut lanes = [0.0f32; LANES];
+    for (ca, cb) in ac.zip(bc) {
+        for l in 0..LANES {
+            lanes[l] += ca[l] * cb[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ra.iter().zip(rb) {
+        tail += x * y;
+    }
+    ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+        + tail
+}
+
+/// Squared Euclidean distance `‖a − b‖²`, 8-lane chunked (drift detector
+/// hot loop: one call per sensed sample per edge).
+#[inline]
+pub fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let ac = a.chunks_exact(LANES);
+    let bc = b.chunks_exact(LANES);
+    let (ra, rb) = (ac.remainder(), bc.remainder());
+    let mut lanes = [0.0f32; LANES];
+    for (ca, cb) in ac.zip(bc) {
+        for l in 0..LANES {
+            let d = ca[l] - cb[l];
+            lanes[l] += d * d;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ra.iter().zip(rb) {
+        let d = x - y;
+        tail += d * d;
+    }
+    ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+        + tail
+}
+
+// --- elementwise kernels -----------------------------------------------------
+
+/// `y += alpha · x`. Elementwise (no reduction), so the plain zip loop is
+/// both autovectorization-friendly and bit-for-bit the naive result.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// EWMA tracking `c += rate · (x − c)` (drift-detector centroid update).
+#[inline]
+pub fn ewma(c: &mut [f32], x: &[f32], rate: f32) {
+    debug_assert_eq!(c.len(), x.len());
+    for (ci, &xi) in c.iter_mut().zip(x) {
+        *ci += rate * (xi - *ci);
+    }
+}
+
+// --- matrix kernels ----------------------------------------------------------
+
+/// `out[r] = dot(a.row(r), x)` for a row-major `rows × cols` matrix.
+pub fn matvec(a: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), rows * cols);
+    debug_assert_eq!(x.len(), cols);
+    debug_assert_eq!(out.len(), rows);
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = dot(&a[r * cols..(r + 1) * cols], x);
+    }
+}
+
+/// Cache-blocked `C += A · B` for row-major `A (m×k)`, `B (k×n)`,
+/// `C (m×n)`.
+///
+/// Loop order is jc→pc→i→p with an [`axpy`] inner loop over a `BLK_N`-wide
+/// slice of a C row: the `BLK_K × BLK_N` panel of B is reused across all m
+/// rows of A, and each C slice stays in L1 across the k-block.
+/// Accumulation into any C element happens strictly in ascending-k order,
+/// so the result is bitwise identical to the naive i→k→j triple loop.
+pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let mut jc = 0;
+    while jc < n {
+        let nb = BLK_N.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kb = BLK_K.min(k - pc);
+            for i in 0..m {
+                let arow = &a[i * k + pc..i * k + pc + kb];
+                let crow = &mut c[i * n + jc..i * n + jc + nb];
+                for (p, &av) in arow.iter().enumerate() {
+                    let brow = &b[(pc + p) * n + jc..(pc + p) * n + jc + nb];
+                    axpy(av, brow, crow);
+                }
+            }
+            pc += kb;
+        }
+        jc += nb;
+    }
+}
+
+/// Gram matrix `G = AᵀA` for row-major `A (rows × cols)`, exploiting
+/// symmetry: only the upper triangle is accumulated (half the FLOPs of the
+/// seed's full sweep), then mirrored. Accumulation is in ascending-row
+/// order, so the upper triangle is bitwise identical to the naive triple
+/// loop, and the mirrored lower triangle matches it too (IEEE
+/// multiplication commutes).
+pub fn gram(a: &[f32], rows: usize, cols: usize, g: &mut [f32]) {
+    debug_assert_eq!(a.len(), rows * cols);
+    debug_assert_eq!(g.len(), cols * cols);
+    g.fill(0.0);
+    for r in 0..rows {
+        let row = &a[r * cols..(r + 1) * cols];
+        for i in 0..cols {
+            let xi = row[i];
+            let grow = &mut g[i * cols + i..(i + 1) * cols];
+            axpy(xi, &row[i..], grow);
+        }
+    }
+    mirror_upper(g, cols);
+}
+
+/// Symmetric rank-1 update `P −= scale · v·vᵀ` for row-major `P (n×n)`.
+///
+/// The inner loop of OS-ELM's Sherman–Morrison step (`scale = 1/denom`,
+/// `v = Ph`). Updates only the upper triangle — halving the multiply count
+/// and the read traffic of the seed's full-matrix sweep — then mirrors, so
+/// a symmetric P stays **exactly** symmetric (the lower triangle is a
+/// bitwise copy of the upper). The upper triangle is bit-for-bit the naive
+/// `p[i][j] -= (v[i]·scale)·v[j]`.
+pub fn rank1_sym_update(p: &mut [f32], n: usize, v: &[f32], scale: f32) {
+    debug_assert_eq!(p.len(), n * n);
+    debug_assert_eq!(v.len(), n);
+    for i in 0..n {
+        let s = v[i] * scale;
+        let prow = &mut p[i * n + i..(i + 1) * n];
+        for (pj, &vj) in prow.iter_mut().zip(&v[i..]) {
+            *pj -= s * vj;
+        }
+    }
+    mirror_upper(p, n);
+}
+
+/// Copy the upper triangle of a row-major `n×n` matrix onto the lower
+/// (`g[i][j] ← g[j][i]` for `j < i`). Row-major writes, strided reads.
+pub fn mirror_upper(g: &mut [f32], n: usize) {
+    debug_assert_eq!(g.len(), n * n);
+    for i in 1..n {
+        for j in 0..i {
+            g[i * n + j] = g[j * n + i];
+        }
+    }
+}
+
+/// Exact symmetrization `P ← (P + Pᵀ)/2` in place (used once after the
+/// batch init, whose Cholesky inverse can carry ~1-ulp asymmetry, and as
+/// the periodic drift guard in `OsElm::train_step`).
+pub fn symmetrize(p: &mut [f32], n: usize) {
+    debug_assert_eq!(p.len(), n * n);
+    for i in 0..n {
+        for j in i + 1..n {
+            let avg = 0.5 * (p[i * n + j] + p[j * n + i]);
+            p[i * n + j] = avg;
+            p[j * n + i] = avg;
+        }
+    }
+}
+
+// --- Q16.16 kernels ----------------------------------------------------------
+//
+// The fixed-point twins used by `crate::fixed::vecops` (the ASIC datapath
+// model). Products are 32×32→64-bit raw MACs accumulated in i64 — integer
+// addition is associative, so the 8-lane split is bitwise identical to the
+// sequential walk while autovectorizing to SIMD integer MACs.
+
+/// Raw wide-accumulator dot product: `Σ aᵢ·bᵢ` in the 32.32 product
+/// domain. Callers renormalize once (`acc_to_fx`), like the hardware MAC.
+#[inline]
+pub fn fx_dot_raw(a: &[Fx], b: &[Fx]) -> i64 {
+    debug_assert_eq!(a.len(), b.len());
+    let ac = a.chunks_exact(LANES);
+    let bc = b.chunks_exact(LANES);
+    let (ra, rb) = (ac.remainder(), bc.remainder());
+    let mut lanes = [0i64; LANES];
+    for (ca, cb) in ac.zip(bc) {
+        for l in 0..LANES {
+            lanes[l] += ca[l].mac_raw(cb[l]);
+        }
+    }
+    let mut acc: i64 = lanes.iter().sum();
+    for (x, y) in ra.iter().zip(rb) {
+        acc += x.mac_raw(*y);
+    }
+    acc
+}
+
+/// `row[j] −= scale · v[j]` in saturating Q16.16 — the fixed-point P-update
+/// row sweep (`scale = Ph[i]/denom`, one divide per row like the ASIC
+/// schedule). Elementwise, bit-for-bit the naive loop.
+#[inline]
+pub fn fx_scale_sub(row: &mut [Fx], v: &[Fx], scale: Fx) {
+    debug_assert_eq!(row.len(), v.len());
+    for (r, &p) in row.iter_mut().zip(v) {
+        *r = r.sub(scale.mul(p));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+
+    // Naive references: scalar loops with the textbook association order.
+    fn naive_dot(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    fn naive_gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p];
+                for j in 0..n {
+                    c[i * n + j] += av * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn naive_rank1(p: &mut [f32], n: usize, v: &[f32], scale: f32) {
+        for i in 0..n {
+            let s = v[i] * scale;
+            for j in 0..n {
+                p[i * n + j] -= s * v[j];
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive_0_to_130() {
+        forall(
+            "kernels-dot",
+            |r| {
+                let len = gen::usize_in(r, 0, 130);
+                (gen::vec_normal(r, len, 1.0), gen::vec_normal(r, len, 1.0))
+            },
+            |(a, b)| {
+                let naive = naive_dot(a, b);
+                (dot(a, b) - naive).abs() <= 1e-4 * (1.0 + naive.abs())
+            },
+        );
+    }
+
+    #[test]
+    fn dot_is_deterministic_and_exact_below_lane_width() {
+        forall(
+            "kernels-dot-det",
+            |r| {
+                let len = gen::usize_in(r, 0, 130);
+                (gen::vec_normal(r, len, 1.0), gen::vec_normal(r, len, 1.0))
+            },
+            |(a, b)| {
+                let repeat_bits = dot(a, b).to_bits() == dot(a, b).to_bits();
+                // below one chunk the lane order degenerates to the naive one
+                let small_exact = a.len() >= LANES
+                    || dot(a, b).to_bits() == naive_dot(a, b).to_bits();
+                repeat_bits && small_exact
+            },
+        );
+    }
+
+    #[test]
+    fn axpy_bitwise_matches_naive() {
+        forall(
+            "kernels-axpy",
+            |r| {
+                let len = gen::usize_in(r, 0, 130);
+                (
+                    gen::f32_in(r, -2.0, 2.0),
+                    gen::vec_normal(r, len, 1.0),
+                    gen::vec_normal(r, len, 1.0),
+                )
+            },
+            |(alpha, x, y)| {
+                let mut got = y.clone();
+                axpy(*alpha, x, &mut got);
+                got.iter()
+                    .zip(x.iter().zip(y))
+                    .all(|(g, (xi, yi))| g.to_bits() == (yi + alpha * xi).to_bits())
+            },
+        );
+    }
+
+    #[test]
+    fn gemm_bitwise_matches_naive_triple_loop() {
+        forall(
+            "kernels-gemm",
+            |r| {
+                let m = gen::usize_in(r, 0, 9);
+                let k = gen::usize_in(r, 0, 9);
+                let n = gen::usize_in(r, 0, 9);
+                (m, k, n, gen::vec_normal(r, m * k, 1.0), gen::vec_normal(r, k * n, 1.0))
+            },
+            |(m, k, n, a, b)| {
+                let mut c = vec![0.0f32; m * n];
+                gemm(a, b, &mut c, *m, *k, *n);
+                let naive = naive_gemm(a, b, *m, *k, *n);
+                c.iter().zip(&naive).all(|(x, y)| x.to_bits() == y.to_bits())
+            },
+        );
+    }
+
+    #[test]
+    fn gemm_blocking_boundaries_exact() {
+        // dims straddling BLK_K/BLK_N force multi-block paths
+        let mut rng = crate::util::rng::Rng64::new(99);
+        let (m, k, n) = (5, BLK_K + 17, BLK_N + 33);
+        let a = gen::vec_normal(&mut rng, m * k, 1.0);
+        let b = gen::vec_normal(&mut rng, k * n, 1.0);
+        let mut c = vec![0.0f32; m * n];
+        gemm(&a, &b, &mut c, m, k, n);
+        let naive = naive_gemm(&a, &b, m, k, n);
+        for (x, y) in c.iter().zip(&naive) {
+            assert_eq!(x.to_bits(), y.to_bits(), "blocked gemm must be k-ordered");
+        }
+    }
+
+    #[test]
+    fn gram_matches_naive_and_is_exactly_symmetric() {
+        forall(
+            "kernels-gram",
+            |r| {
+                let rows = gen::usize_in(r, 0, 12);
+                let cols = gen::usize_in(r, 0, 12);
+                (rows, cols, gen::vec_normal(r, rows * cols, 1.0))
+            },
+            |(rows, cols, a)| {
+                let (rows, cols) = (*rows, *cols);
+                let mut g = vec![0.0f32; cols * cols];
+                gram(a, rows, cols, &mut g);
+                // upper triangle: bitwise the naive ascending-r accumulation
+                let mut ok = true;
+                for i in 0..cols {
+                    for j in i..cols {
+                        let mut acc = 0.0f32;
+                        for r in 0..rows {
+                            acc += a[r * cols + i] * a[r * cols + j];
+                        }
+                        ok &= g[i * cols + j].to_bits() == acc.to_bits();
+                    }
+                }
+                // lower: exact mirror
+                for i in 0..cols {
+                    for j in 0..i {
+                        ok &= g[i * cols + j].to_bits() == g[j * cols + i].to_bits();
+                    }
+                }
+                ok
+            },
+        );
+    }
+
+    #[test]
+    fn rank1_sym_update_matches_naive() {
+        forall(
+            "kernels-rank1",
+            |r| {
+                let n = gen::usize_in(r, 0, 130);
+                // start from a symmetric matrix, like OS-ELM's P
+                let half = gen::vec_normal(r, n * n, 1.0);
+                let mut p = vec![0.0f32; n * n];
+                for i in 0..n {
+                    for j in 0..n {
+                        p[i * n + j] = half[i * n + j] + half[j * n + i];
+                    }
+                }
+                (n, p, gen::vec_normal(r, n, 1.0), gen::f32_in(r, -1.0, 1.0))
+            },
+            |(n, p, v, scale)| {
+                let n = *n;
+                let mut got = p.clone();
+                rank1_sym_update(&mut got, n, v, *scale);
+                let mut naive = p.clone();
+                naive_rank1(&mut naive, n, v, *scale);
+                let mut ok = true;
+                for i in 0..n {
+                    for j in i..n {
+                        // upper triangle: bit-for-bit the naive update
+                        ok &= got[i * n + j].to_bits() == naive[i * n + j].to_bits();
+                    }
+                    for j in 0..i {
+                        // lower: exactly symmetric, and within float noise of
+                        // the naive (which rounds (v_j·s)·v_i independently)
+                        ok &= got[i * n + j].to_bits() == got[j * n + i].to_bits();
+                        ok &= (got[i * n + j] - naive[i * n + j]).abs()
+                            <= 1e-5 * (1.0 + naive[i * n + j].abs());
+                    }
+                }
+                ok
+            },
+        );
+    }
+
+    #[test]
+    fn matvec_matches_naive() {
+        forall(
+            "kernels-matvec",
+            |r| {
+                let rows = gen::usize_in(r, 0, 20);
+                let cols = gen::usize_in(r, 0, 130);
+                (
+                    rows,
+                    cols,
+                    gen::vec_normal(r, rows * cols, 1.0),
+                    gen::vec_normal(r, cols, 1.0),
+                )
+            },
+            |(rows, cols, a, x)| {
+                let (rows, cols) = (*rows, *cols);
+                let mut out = vec![0.0f32; rows];
+                matvec(a, rows, cols, x, &mut out);
+                out.iter().enumerate().all(|(r, &o)| {
+                    let naive = naive_dot(&a[r * cols..(r + 1) * cols], x);
+                    (o - naive).abs() <= 1e-4 * (1.0 + naive.abs())
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn dist2_matches_naive() {
+        forall(
+            "kernels-dist2",
+            |r| {
+                let len = gen::usize_in(r, 0, 130);
+                (gen::vec_normal(r, len, 1.0), gen::vec_normal(r, len, 1.0))
+            },
+            |(a, b)| {
+                let naive: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+                (dist2(a, b) - naive).abs() <= 1e-4 * (1.0 + naive.abs())
+            },
+        );
+    }
+
+    #[test]
+    fn ewma_bitwise_matches_naive() {
+        let mut rng = crate::util::rng::Rng64::new(5);
+        let x = gen::vec_normal(&mut rng, 130, 1.0);
+        let c0 = gen::vec_normal(&mut rng, 130, 1.0);
+        let mut c = c0.clone();
+        ewma(&mut c, &x, 0.02);
+        for ((got, &ci), &xi) in c.iter().zip(&c0).zip(&x) {
+            assert_eq!(got.to_bits(), (ci + 0.02 * (xi - ci)).to_bits());
+        }
+    }
+
+    #[test]
+    fn symmetrize_produces_exact_symmetry() {
+        let mut rng = crate::util::rng::Rng64::new(7);
+        let n = 17;
+        let mut p = gen::vec_normal(&mut rng, n * n, 1.0);
+        symmetrize(&mut p, n);
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(p[i * n + j].to_bits(), p[j * n + i].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn fx_dot_raw_lane_split_is_exact() {
+        use crate::fixed::Fx;
+        forall(
+            "kernels-fx-dot",
+            |r| {
+                let len = gen::usize_in(r, 0, 130);
+                (gen::vec_f32(r, len, -4.0, 4.0), gen::vec_f32(r, len, -4.0, 4.0))
+            },
+            |(a, b)| {
+                let fa: Vec<Fx> = a.iter().map(|&x| Fx::from_f32(x)).collect();
+                let fb: Vec<Fx> = b.iter().map(|&x| Fx::from_f32(x)).collect();
+                // integer accumulation is associative: lane split must be
+                // *exactly* the sequential sum
+                let sequential: i64 = fa.iter().zip(&fb).map(|(x, y)| x.mac_raw(*y)).sum();
+                fx_dot_raw(&fa, &fb) == sequential
+            },
+        );
+    }
+
+    #[test]
+    fn fx_scale_sub_matches_naive() {
+        use crate::fixed::Fx;
+        let mut rng = crate::util::rng::Rng64::new(11);
+        let row0: Vec<Fx> = gen::vec_f32(&mut rng, 130, -4.0, 4.0)
+            .iter()
+            .map(|&x| Fx::from_f32(x))
+            .collect();
+        let v: Vec<Fx> = gen::vec_f32(&mut rng, 130, -2.0, 2.0)
+            .iter()
+            .map(|&x| Fx::from_f32(x))
+            .collect();
+        let scale = Fx::from_f32(0.375);
+        let mut row = row0.clone();
+        fx_scale_sub(&mut row, &v, scale);
+        for ((got, &r0), &vi) in row.iter().zip(&row0).zip(&v) {
+            assert_eq!(*got, r0.sub(scale.mul(vi)));
+        }
+    }
+}

@@ -1,5 +1,6 @@
 //! Row-major dense matrix over `f32`.
 
+use super::kernels;
 use std::fmt;
 
 /// Row-major `rows × cols` matrix of `f32`.
@@ -89,52 +90,35 @@ impl Mat {
         t
     }
 
-    /// `self · other` (naive ikj loop with row-major accumulation; fine for
-    /// the N ≤ 512 shapes outside the hot path).
+    /// `self · other` via the cache-blocked [`kernels::gemm`] (bitwise the
+    /// naive ikj loop, but L1/L2-blocked and autovectorized).
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let mut out = Mat::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
-            for (k, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[k * other.cols..(k + 1) * other.cols];
-                for (j, &b) in brow.iter().enumerate() {
-                    orow[j] += a * b;
-                }
-            }
-        }
+        kernels::gemm(
+            &self.data,
+            &other.data,
+            &mut out.data,
+            self.rows,
+            self.cols,
+            other.cols,
+        );
         out
     }
 
     /// `self · v` for a column vector `v`.
     pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
         assert_eq!(self.cols, v.len(), "matvec shape mismatch");
-        (0..self.rows)
-            .map(|r| dot(self.row(r), v))
-            .collect()
+        let mut out = vec![0.0; self.rows];
+        kernels::matvec(&self.data, self.rows, self.cols, v, &mut out);
+        out
     }
 
-    /// `selfᵀ · self` (Gram matrix) without materializing the transpose.
+    /// `selfᵀ · self` (Gram matrix) without materializing the transpose —
+    /// upper triangle accumulated by [`kernels::gram`], mirrored exactly.
     pub fn gram(&self) -> Mat {
-        let n = self.cols;
-        let mut g = Mat::zeros(n, n);
-        for r in 0..self.rows {
-            let row = self.row(r);
-            for i in 0..n {
-                let xi = row[i];
-                if xi == 0.0 {
-                    continue;
-                }
-                let grow = &mut g.data[i * n..(i + 1) * n];
-                for (j, &xj) in row.iter().enumerate() {
-                    grow[j] += xi * xj;
-                }
-            }
-        }
+        let mut g = Mat::zeros(self.cols, self.cols);
+        kernels::gram(&self.data, self.rows, self.cols, &mut g.data);
         g
     }
 
@@ -162,35 +146,17 @@ impl Mat {
     }
 }
 
-/// Dot product.
+/// Dot product (8-lane chunked; see [`kernels::dot`]). Kept here because
+/// half the crate imports it as `linalg::mat::dot`.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation: measurably faster than the naive fold and
-    // deterministic across runs (fixed association order).
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let k = i * 4;
-        acc[0] += a[k] * b[k];
-        acc[1] += a[k + 1] * b[k + 1];
-        acc[2] += a[k + 2] * b[k + 2];
-        acc[3] += a[k + 3] * b[k + 3];
-    }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    for i in chunks * 4..a.len() {
-        s += a[i] * b[i];
-    }
-    s
+    kernels::dot(a, b)
 }
 
-/// `y += alpha * x` (axpy).
+/// `y += alpha * x` (axpy); see [`kernels::axpy`].
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, &xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    kernels::axpy(alpha, x, y)
 }
 
 #[cfg(test)]

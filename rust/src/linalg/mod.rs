@@ -3,10 +3,15 @@
 //! pivoted-LU fallback for the batch initialization `P₀ = (H₀ᵀH₀+λI)⁻¹`.
 //!
 //! No external BLAS — the shapes here (N ≤ 512) don't warrant one, and the
-//! offline vendor set has none. The hot path (rank-1 OS-ELM update) is
-//! hand-written in `crate::odl` against raw slices; this module serves
-//! initialization, baselines, PCA, and tests.
+//! offline vendor set has none. Instead, [`kernels`] provides the
+//! fixed-width (8-lane chunked, autovectorization-friendly) micro-kernels
+//! that every hot path in the crate bottoms out in: the OS-ELM sequential
+//! update and packed-α hidden panel in `crate::odl`, the Q16.16 hardware
+//! model in `crate::fixed`, the drift detectors, and PCA. [`Mat`]'s
+//! `matmul`/`gram`/`matvec` route through the same kernels, so the batch
+//! initialization and the baselines speed up together with the hot path.
 
+pub mod kernels;
 pub mod mat;
 pub mod solve;
 

@@ -13,13 +13,40 @@
 //!
 //! The update is the L3 **hot path**: it runs once per training-mode event
 //! for every edge device, so it is written allocation-free against a
-//! preallocated [`Workspace`].
+//! preallocated [`Workspace`] and bottoms out in the fixed-width kernels
+//! of [`crate::linalg::kernels`]:
+//!
+//! * the hidden layer is a packed-α panel matvec
+//!   ([`AlphaProvider::accumulate_hidden`]) whose accumulators stay in
+//!   registers for the whole feature walk;
+//! * the Sherman–Morrison P update uses `rank1_sym_update`, which touches
+//!   only the upper triangle (P is symmetric by construction) and mirrors
+//!   it — half the multiplies and read traffic of the full N² sweep, and
+//!   P stays **exactly** symmetric (plus a periodic [`RESYM_EVERY`]
+//!   re-symmetrization guarding externally loaded state);
+//! * [`OsElm::predict_batch`] / [`OsElm::accuracy`] evaluate labelled sets
+//!   in blocks of [`PREDICT_BLOCK`] samples against preallocated
+//!   workspace buffers (no per-sample allocation), reusing each α panel
+//!   across the block and computing logits with one blocked GEMM.
 
 use super::activation::{sigmoid_inplace, Prediction};
 use super::alpha::{AlphaKind, AlphaProvider};
+use crate::linalg::kernels;
 use crate::linalg::{cholesky_inverse, lu_inverse, Mat};
 use crate::util::rng::Rng64;
 use anyhow::{ensure, Context, Result};
+
+/// Sample-block size for [`OsElm::predict_batch`] / [`OsElm::accuracy`]:
+/// 32 × 128 hidden activations = 16 KiB, L1-resident next to the streamed
+/// α panel.
+pub const PREDICT_BLOCK: usize = 32;
+
+/// Sequential steps between exact `P ← (P+Pᵀ)/2` re-symmetrizations. The
+/// mirrored rank-1 update keeps P bitwise symmetric on its own; the
+/// periodic pass (amortized cost ≈ N²/2 adds per [`RESYM_EVERY`] steps,
+/// < 1 % of one update) bounds drift for state loaded from outside the
+/// update loop (PJRT handoffs, checkpoint restores).
+pub const RESYM_EVERY: u64 = 64;
 
 /// Model hyperparameters (defaults = the paper's prototype: 561/128/6).
 #[derive(Clone, Copy, Debug)]
@@ -69,6 +96,10 @@ pub struct Workspace {
     pub err: Vec<f32>,
     /// Output logits (m).
     pub logits: Vec<f32>,
+    /// Hidden activations for one predict block (PREDICT_BLOCK × N).
+    pub hblock: Vec<f32>,
+    /// Logits for one predict block (PREDICT_BLOCK × m).
+    pub logit_block: Vec<f32>,
 }
 
 impl Workspace {
@@ -78,6 +109,8 @@ impl Workspace {
             ph: vec![0.0; cfg.n_hidden],
             err: vec![0.0; cfg.n_out],
             logits: vec![0.0; cfg.n_out],
+            hblock: vec![0.0; PREDICT_BLOCK * cfg.n_hidden],
+            logit_block: vec![0.0; PREDICT_BLOCK * cfg.n_out],
         }
     }
 }
@@ -129,15 +162,14 @@ impl OsElm {
         sigmoid_inplace(out);
     }
 
-    /// Hidden activations for a batch (rows of `xs`).
+    /// Hidden activations for a batch (rows of `xs`): one panel-blocked
+    /// sweep over all rows (each α panel is streamed once per batch).
     pub fn hidden_batch(&self, xs: &Mat) -> Mat {
         ensure_dim(xs.cols, self.cfg.n_in);
         let mut h = Mat::zeros(xs.rows, self.cfg.n_hidden);
-        for r in 0..xs.rows {
-            let row = &mut h.data[r * self.cfg.n_hidden..(r + 1) * self.cfg.n_hidden];
-            self.alpha.accumulate_hidden(xs.row(r), row);
-            sigmoid_inplace(row);
-        }
+        self.alpha
+            .accumulate_hidden_batch(&xs.data, xs.rows, &mut h.data);
+        sigmoid_inplace(&mut h.data);
         h
     }
 
@@ -161,6 +193,10 @@ impl OsElm {
         self.p = cholesky_inverse(&gram)
             .or_else(|_| lu_inverse(&gram))
             .context("OS-ELM init: Gram matrix inversion failed")?;
+        // The inverse of a symmetric matrix is symmetric, but the factored
+        // solve can carry ~1-ulp asymmetry; pin it exactly so the mirrored
+        // sequential update keeps P bitwise symmetric from here on.
+        kernels::symmetrize(&mut self.p.data, self.cfg.n_hidden);
         // β = P · Hᵀ · Y, computed as P · (Hᵀ Y) to stay N×m.
         let mut hty = Mat::zeros(self.cfg.n_hidden, self.cfg.n_out);
         for (r, &lbl) in labels.iter().enumerate() {
@@ -182,16 +218,14 @@ impl OsElm {
         let nh = self.cfg.n_hidden;
         let m = self.cfg.n_out;
 
-        // h = G1(x·α)   — split borrows: compute into a temp view of ws.h
+        // h = G1(x·α) — packed-α panel matvec
         self.alpha.accumulate_hidden(x, &mut self.ws.h);
         sigmoid_inplace(&mut self.ws.h);
 
         // Ph = P·h ; denom = 1 + hᵀPh
         let (h, ph) = (&self.ws.h, &mut self.ws.ph);
-        for i in 0..nh {
-            ph[i] = crate::linalg::mat::dot(self.p.row(i), h);
-        }
-        let denom = 1.0 + crate::linalg::mat::dot(h, ph);
+        kernels::matvec(&self.p.data, nh, nh, h, ph);
+        let denom = 1.0 + kernels::dot(h, ph);
         let inv_denom = 1.0 / denom;
 
         // err = y − hᵀβ (length m)
@@ -199,35 +233,24 @@ impl OsElm {
             self.ws.err[j] = if j == label { 1.0 } else { 0.0 };
         }
         for i in 0..nh {
-            let hi = h[i];
-            if hi == 0.0 {
-                continue;
-            }
-            let brow = self.beta.row(i);
-            for j in 0..m {
-                self.ws.err[j] -= hi * brow[j];
-            }
+            kernels::axpy(-h[i], self.beta.row(i), &mut self.ws.err);
         }
 
-        // Fused rank-1 sweeps (one pass over rows i):
-        //   P ← P − Ph·Phᵀ/denom ;  β ← β + Ph·errᵀ/denom
-        // Keeping the P row and the β row of the same i adjacent in time
-        // preserves the scale value in-register and halves loop overhead.
+        // P ← P − Ph·Phᵀ/denom — upper triangle + exact mirror (P is
+        // symmetric by construction; half the multiplies/reads of the
+        // full sweep).
+        kernels::rank1_sym_update(&mut self.p.data, nh, &self.ws.ph, inv_denom);
+
+        // β ← β + Ph·errᵀ/denom
         for i in 0..nh {
-            let s = ph[i] * inv_denom;
-            if s == 0.0 {
-                continue;
-            }
-            let prow = &mut self.p.data[i * nh..(i + 1) * nh];
-            for (pj, &phj) in prow.iter_mut().zip(ph.iter()) {
-                *pj -= s * phj;
-            }
-            let brow = &mut self.beta.data[i * m..(i + 1) * m];
-            for (bj, &ej) in brow.iter_mut().zip(self.ws.err.iter()) {
-                *bj += s * ej;
-            }
+            let s = self.ws.ph[i] * inv_denom;
+            kernels::axpy(s, &self.ws.err, self.beta.row_mut(i));
         }
+
         self.steps += 1;
+        if self.steps % RESYM_EVERY == 0 {
+            kernels::symmetrize(&mut self.p.data, nh);
+        }
     }
 
     /// Predict one sample: logits + class + P1P2 confidence.
@@ -235,36 +258,84 @@ impl OsElm {
         let nh = self.cfg.n_hidden;
         self.alpha.accumulate_hidden(x, &mut self.ws.h);
         sigmoid_inplace(&mut self.ws.h);
-        let m = self.cfg.n_out;
         self.ws.logits.fill(0.0);
         for i in 0..nh {
-            let hi = self.ws.h[i];
-            if hi == 0.0 {
-                continue;
-            }
-            let brow = self.beta.row(i);
-            for j in 0..m {
-                self.ws.logits[j] += hi * brow[j];
-            }
+            kernels::axpy(self.ws.h[i], self.beta.row(i), &mut self.ws.logits);
         }
         Prediction::from_logits(&self.ws.logits)
     }
 
-    /// Raw logits for one sample (used by tests / the Error-L2 pruning metric).
-    pub fn logits(&mut self, x: &[f32]) -> Vec<f32> {
-        let _ = self.predict(x);
-        self.ws.logits.clone()
+    /// Logits of the most recent [`Self::predict`] / [`Self::logits_ref`]
+    /// call — the borrow-based path for the Error-L2 pruning metric (one
+    /// read per training-mode event; no allocation, no recompute).
+    #[inline]
+    pub fn last_logits(&self) -> &[f32] {
+        &self.ws.logits
     }
 
-    /// Classification accuracy over a labelled set.
+    /// Raw logits for one sample, borrowed from the workspace
+    /// (allocation-free; invalidated by the next predict/train call).
+    pub fn logits_ref(&mut self, x: &[f32]) -> &[f32] {
+        let _ = self.predict(x);
+        &self.ws.logits
+    }
+
+    /// Raw logits for one sample as an owned vector (test convenience;
+    /// hot paths use [`Self::logits_ref`] / [`Self::last_logits`]).
+    pub fn logits(&mut self, x: &[f32]) -> Vec<f32> {
+        self.logits_ref(x).to_vec()
+    }
+
+    /// Run the batched predict pipeline over the rows of `xs`, invoking
+    /// `f(row, prediction)` per sample. Blocks of [`PREDICT_BLOCK`]
+    /// samples share one α-panel sweep and one logits GEMM against the
+    /// preallocated workspace — no per-sample allocation, and per-sample
+    /// results are bitwise identical to [`Self::predict`].
+    pub fn for_each_prediction(&mut self, xs: &Mat, mut f: impl FnMut(usize, Prediction)) {
+        ensure_dim(xs.cols, self.cfg.n_in);
+        let nh = self.cfg.n_hidden;
+        let m = self.cfg.n_out;
+        let mut row = 0;
+        while row < xs.rows {
+            let take = PREDICT_BLOCK.min(xs.rows - row);
+            let hb = &mut self.ws.hblock[..take * nh];
+            self.alpha.accumulate_hidden_batch(
+                &xs.data[row * xs.cols..(row + take) * xs.cols],
+                take,
+                hb,
+            );
+            sigmoid_inplace(hb);
+            let lb = &mut self.ws.logit_block[..take * m];
+            lb.fill(0.0);
+            kernels::gemm(hb, &self.beta.data, lb, take, nh, m);
+            for i in 0..take {
+                f(row + i, Prediction::from_logits(&lb[i * m..(i + 1) * m]));
+            }
+            row += take;
+        }
+    }
+
+    /// Predictions for every row of `xs` (one output allocation; the
+    /// pipeline itself is workspace-backed).
+    pub fn predict_batch(&mut self, xs: &Mat) -> Vec<Prediction> {
+        let mut out = Vec::with_capacity(xs.rows);
+        self.for_each_prediction(xs, |_, p| out.push(p));
+        out
+    }
+
+    /// Classification accuracy over a labelled set (batched, allocation-
+    /// free).
     pub fn accuracy(&mut self, xs: &Mat, labels: &[usize]) -> f64 {
         assert_eq!(xs.rows, labels.len());
         if xs.rows == 0 {
             return 0.0;
         }
-        let correct = (0..xs.rows)
-            .filter(|&r| self.predict(xs.row(r)).class == labels[r])
-            .count();
+        let mut correct = 0usize;
+        self.for_each_prediction(xs, |r, p| {
+            if p.class == labels[r] {
+                correct += 1;
+            }
+        });
         correct as f64 / xs.rows as f64
     }
 }
@@ -375,16 +446,67 @@ mod tests {
 
     #[test]
     fn p_stays_symmetric() {
+        // Exactness, not a tolerance: init pins P ← (P+Pᵀ)/2 and the
+        // triangular rank-1 kernel mirrors the upper triangle bit for bit,
+        // so asymmetry must be exactly zero — including across the
+        // RESYM_EVERY re-symmetrization boundary (120 > 64).
         let mut rng = Rng64::new(13);
         let (xs, labels) = toy_data(&mut rng, 120, 12);
         let cfg = small_cfg(AlphaKind::Hash);
         let mut m = OsElm::new(cfg, &mut rng, 8);
         m.init_batch(&xs, &labels).unwrap();
-        for r in 0..60 {
+        let pt0 = m.p.transpose();
+        assert_eq!(m.p.max_abs_diff(&pt0), 0.0, "P must start exactly symmetric");
+        for r in 0..120 {
             m.train_step(xs.row(r), labels[r]);
         }
+        assert!(m.steps > RESYM_EVERY);
         let pt = m.p.transpose();
-        assert!(m.p.max_abs_diff(&pt) < 1e-3, "P must stay symmetric");
+        assert_eq!(m.p.max_abs_diff(&pt), 0.0, "P must stay exactly symmetric");
+    }
+
+    #[test]
+    fn predict_batch_matches_per_sample_bitwise() {
+        let mut rng = Rng64::new(17);
+        // 70 rows: two full 32-blocks + a 6-row tail
+        let (xs, labels) = toy_data(&mut rng, 70, 12);
+        let mut m = OsElm::new(small_cfg(AlphaKind::Hash), &mut rng, 4);
+        m.init_batch(&xs, &labels).unwrap();
+        let batch = m.predict_batch(&xs);
+        assert_eq!(batch.len(), 70);
+        for r in 0..xs.rows {
+            let single = m.predict(xs.row(r));
+            assert_eq!(batch[r].class, single.class, "row {r}");
+            assert_eq!(batch[r].p1.to_bits(), single.p1.to_bits(), "row {r}");
+            assert_eq!(batch[r].p2.to_bits(), single.p2.to_bits(), "row {r}");
+        }
+    }
+
+    #[test]
+    fn accuracy_matches_manual_predict_loop() {
+        let mut rng = Rng64::new(19);
+        let (xs, labels) = toy_data(&mut rng, 90, 12);
+        let mut m = OsElm::new(small_cfg(AlphaKind::Stored), &mut rng, 0);
+        m.init_batch(&xs, &labels).unwrap();
+        let batched = m.accuracy(&xs, &labels);
+        let manual = (0..xs.rows)
+            .filter(|&r| m.predict(xs.row(r)).class == labels[r])
+            .count() as f64
+            / xs.rows as f64;
+        assert_eq!(batched, manual, "batched accuracy must equal the loop");
+    }
+
+    #[test]
+    fn logits_ref_matches_owned_and_last_logits() {
+        let mut rng = Rng64::new(23);
+        let (xs, labels) = toy_data(&mut rng, 60, 12);
+        let mut m = OsElm::new(small_cfg(AlphaKind::Hash), &mut rng, 6);
+        m.init_batch(&xs, &labels).unwrap();
+        let owned = m.logits(xs.row(0));
+        let borrowed = m.logits_ref(xs.row(0)).to_vec();
+        assert_eq!(owned, borrowed);
+        let owned1 = m.logits(xs.row(1));
+        assert_eq!(m.last_logits(), owned1.as_slice());
     }
 
     #[test]

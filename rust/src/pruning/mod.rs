@@ -56,6 +56,27 @@ impl Metric {
             }
         }
     }
+
+    /// Confidence from the *full* output vector — the exact EL2N instead
+    /// of the top-2 bound. Callers pass the model's workspace logits by
+    /// borrow (`OsElm::last_logits`), so the per-event cost is m clamped
+    /// multiply-adds and zero allocation. For `P1P2` this is identical to
+    /// [`Self::confidence`].
+    pub fn confidence_from_logits(&self, pred: &Prediction, logits: &[f32]) -> f32 {
+        match self {
+            Metric::P1P2 => self.confidence(pred),
+            Metric::ErrorL2 => {
+                let mut sum = 0.0f32;
+                for (j, &o) in logits.iter().enumerate() {
+                    // host comparator clamps like the P1P2 path
+                    let p = o.clamp(0.0, 1.0);
+                    let t = if j == pred.class { 1.0 } else { 0.0 };
+                    sum += (p - t) * (p - t);
+                }
+                1.0 - sum.sqrt() / std::f32::consts::SQRT_2
+            }
+        }
+    }
 }
 
 /// θ selection policy.
@@ -201,17 +222,41 @@ impl Pruner {
         Self::new(ThetaPolicy::Fixed(1.0), Metric::P1P2, usize::MAX)
     }
 
-    /// Decide for one sample. `trained` = sequential steps so far this
-    /// training phase; `drift_now` = detector currently flags drift.
-    pub fn decide(&self, pred: &Prediction, trained: usize, drift_now: bool) -> Decision {
+    /// The §2.2 gate shared by both decide paths: query during warmup or
+    /// while drift is flagged; otherwise skip iff confident beyond θ.
+    fn gate(&self, confidence: f32, trained: usize, drift_now: bool) -> Decision {
         if trained < self.warmup || drift_now {
             return Decision::Query;
         }
-        if self.metric.confidence(pred) > self.policy.theta() {
+        if confidence > self.policy.theta() {
             Decision::Skip
         } else {
             Decision::Query
         }
+    }
+
+    /// Decide for one sample. `trained` = sequential steps so far this
+    /// training phase; `drift_now` = detector currently flags drift.
+    pub fn decide(&self, pred: &Prediction, trained: usize, drift_now: bool) -> Decision {
+        self.gate(self.metric.confidence(pred), trained, drift_now)
+    }
+
+    /// Like [`Self::decide`], but with the full output vector available
+    /// (borrowed from the model workspace): the Error-L2 metric uses the
+    /// exact EL2N rather than the top-2 bound. Identical to `decide` for
+    /// P1P2.
+    pub fn decide_with_logits(
+        &self,
+        pred: &Prediction,
+        logits: &[f32],
+        trained: usize,
+        drift_now: bool,
+    ) -> Decision {
+        self.gate(
+            self.metric.confidence_from_logits(pred, logits),
+            trained,
+            drift_now,
+        )
     }
 
     /// Feed back the outcome (drives the auto-tuner; no-op for fixed θ).
@@ -368,5 +413,30 @@ mod tests {
         assert_eq!(warmup_for(128), 288);
         assert_eq!(warmup_for(256), 288);
         assert_eq!(warmup_for(512), 512);
+    }
+
+    #[test]
+    fn logits_metric_path_is_exact_el2n() {
+        use crate::odl::activation::Prediction;
+        // P1P2 ignores the logits entirely
+        let logits = [0.7f32, 0.2, 0.05, 0.05];
+        let pred = Prediction::from_logits(&logits);
+        assert_eq!(
+            Metric::P1P2.confidence_from_logits(&pred, &logits),
+            Metric::P1P2.confidence(&pred)
+        );
+        // m = 3: the top-2 bound is exact, so both paths must agree
+        let l3 = [0.9f32, 0.05, 0.05];
+        let p3 = Prediction::from_logits(&l3);
+        let exact = Metric::ErrorL2.confidence_from_logits(&p3, &l3);
+        let bound = Metric::ErrorL2.confidence(&p3);
+        assert!((exact - bound).abs() < 1e-6, "exact {exact} vs bound {bound}");
+        // m > 3: spreading the tail mass can only shrink Σp², so the
+        // exact confidence dominates the lower-bound one
+        let l6 = [0.6f32, 0.1, 0.08, 0.08, 0.07, 0.07];
+        let p6 = Prediction::from_logits(&l6);
+        let exact6 = Metric::ErrorL2.confidence_from_logits(&p6, &l6);
+        let bound6 = Metric::ErrorL2.confidence(&p6);
+        assert!(exact6 >= bound6 - 1e-6, "exact {exact6} < bound {bound6}");
     }
 }

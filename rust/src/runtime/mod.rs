@@ -10,9 +10,23 @@
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
 
-pub mod backend;
+//! The XLA-bound half of this module (executable loading/compilation and
+//! the [`PjrtOsElm`] backend) requires the external `xla` crate, which is
+//! not in the offline vendor set — it is gated behind the `pjrt` cargo
+//! feature. Without the feature, [`stub`] provides the same API surface
+//! with every entry point returning a descriptive error, so callers that
+//! probe for `artifacts/manifest.json` before opening the runtime (all
+//! benches/tests do) degrade to a clean skip.
 
+#[cfg(feature = "pjrt")]
+pub mod backend;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+
+#[cfg(feature = "pjrt")]
 pub use backend::PjrtOsElm;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Exe, PjrtOsElm, Runtime};
 
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
@@ -121,11 +135,13 @@ impl Manifest {
 }
 
 /// A compiled artifact, ready to execute.
+#[cfg(feature = "pjrt")]
 pub struct Exe {
     pub meta: ArtifactMeta,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl Exe {
     /// Execute returning raw device buffers (one entry per device, then
     /// per output) — the zero-copy path for device-resident state.
@@ -153,6 +169,7 @@ impl Exe {
 }
 
 /// The PJRT runtime: CPU client + compiled-executable cache.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -160,17 +177,21 @@ pub struct Runtime {
     cache: std::cell::RefCell<HashMap<String, std::rc::Rc<Exe>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Open the artifact directory (default `artifacts/`).
     pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        log::info!(
-            "PJRT runtime: platform={} devices={} artifacts={}",
-            client.platform_name(),
-            client.device_count(),
-            manifest.artifacts.len()
+        crate::util::logging::info(
+            "runtime",
+            &format!(
+                "PJRT runtime: platform={} devices={} artifacts={}",
+                client.platform_name(),
+                client.device_count(),
+                manifest.artifacts.len()
+            ),
         );
         Ok(Runtime {
             client,
@@ -224,6 +245,7 @@ pub fn default_artifact_dir() -> PathBuf {
 // --- literal helpers ---------------------------------------------------------
 
 /// f32 literal with the given dimensions.
+#[cfg(feature = "pjrt")]
 pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     let n: usize = dims.iter().product();
     anyhow::ensure!(n == data.len(), "literal shape/product mismatch");
@@ -232,11 +254,13 @@ pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
 }
 
 /// One-element u32 literal (seed plumbing; scalars travel as shape-(1,)).
+#[cfg(feature = "pjrt")]
 pub fn lit_u32_vec1(v: u32) -> xla::Literal {
     xla::Literal::vec1(&[v])
 }
 
 /// Extract an f32 vector from a literal.
+#[cfg(feature = "pjrt")]
 pub fn lit_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
 }
@@ -276,6 +300,7 @@ mod tests {
         assert!(rt.load("no_such_artifact").is_err());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn lit_f32_shape_checked() {
         assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());

@@ -1,0 +1,101 @@
+//! API-compatible stand-in for the XLA-bound runtime, compiled when the
+//! `pjrt` cargo feature is off (the `xla` crate is not in the offline
+//! vendor set — see `Cargo.toml`).
+//!
+//! Every entry point returns the same descriptive error. Callers across
+//! the repo probe for `artifacts/manifest.json` before opening the
+//! runtime, so in practice these paths are never reached in a default
+//! build; the stub exists so `main.rs`, the benches, and the integration
+//! tests compile (and skip) without the feature.
+
+use super::{ArtifactMeta, Manifest};
+use crate::odl::activation::Prediction;
+use anyhow::{bail, Result};
+use std::path::Path;
+use std::rc::Rc;
+
+const UNAVAILABLE: &str =
+    "PJRT backend unavailable: odl_har was built without the `pjrt` feature \
+     (the `xla` crate is not in the offline vendor set; see rust/Cargo.toml)";
+
+/// Stub of a compiled artifact (never constructed).
+pub struct Exe {
+    pub meta: ArtifactMeta,
+    _no_backend: (),
+}
+
+/// Stub runtime (never constructed; `open` always errors).
+pub struct Runtime {
+    pub manifest: Manifest,
+    _no_backend: (),
+}
+
+impl Runtime {
+    pub fn open(_dir: impl AsRef<Path>) -> Result<Runtime> {
+        bail!(UNAVAILABLE);
+    }
+
+    pub fn open_default() -> Result<Runtime> {
+        Self::open(super::default_artifact_dir())
+    }
+
+    pub fn load(&self, _name: &str) -> Result<Rc<Exe>> {
+        bail!(UNAVAILABLE);
+    }
+}
+
+/// Stub of the PJRT-backed OS-ELM (never constructed; `new` always errors).
+pub struct PjrtOsElm {
+    pub n_in: usize,
+    pub n_hidden: usize,
+    pub n_out: usize,
+    pub seed: u32,
+    pub beta: Vec<f32>,
+    pub p: Vec<f32>,
+    _no_backend: (),
+}
+
+impl PjrtOsElm {
+    pub fn new(_rt: &Runtime, _n_hidden: usize, _seed: u32) -> Result<PjrtOsElm> {
+        bail!(UNAVAILABLE);
+    }
+
+    pub fn init_batch(&mut self, _xs: &crate::linalg::Mat, _labels: &[usize]) -> Result<()> {
+        bail!(UNAVAILABLE);
+    }
+
+    pub fn train_step(&mut self, _x: &[f32], _label: usize) -> Result<()> {
+        bail!(UNAVAILABLE);
+    }
+
+    pub fn train_stream(&mut self, _xs: &crate::linalg::Mat, _labels: &[usize]) -> Result<()> {
+        bail!(UNAVAILABLE);
+    }
+
+    pub fn predict(&self, _x: &[f32]) -> Result<Prediction> {
+        bail!(UNAVAILABLE);
+    }
+
+    pub fn logits(&self, _x: &[f32]) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE);
+    }
+
+    pub fn accuracy(&self, _xs: &crate::linalg::Mat, _labels: &[usize]) -> Result<f64> {
+        bail!(UNAVAILABLE);
+    }
+
+    pub fn load_state(&mut self, _beta: &[f32], _p: &[f32]) -> Result<()> {
+        bail!(UNAVAILABLE);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_errors_descriptively() {
+        let err = Runtime::open_default().unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "error should name the feature: {err}");
+    }
+}

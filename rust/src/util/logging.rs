@@ -1,56 +1,110 @@
-//! Tiny `log`-crate backend writing to stderr with a level filter taken
-//! from `ODL_LOG` (error|warn|info|debug|trace; default info).
+//! Tiny self-contained stderr logger with a level filter taken from
+//! `ODL_LOG` (error|warn|info|debug|trace; default info).
+//!
+//! The external `log` crate is not in the offline vendor set, so this
+//! module provides the subset the repo needs directly: a process-wide
+//! atomic level, an idempotent `init()`, and plain `error/warn/info/...`
+//! functions (call sites format with `format!` — none of them are on a
+//! hot path).
 
-use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::Once;
 
-struct StderrLogger;
-
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if self.enabled(record.metadata()) {
-            let tag = match record.level() {
-                Level::Error => "E",
-                Level::Warn => "W",
-                Level::Info => "I",
-                Level::Debug => "D",
-                Level::Trace => "T",
-            };
-            eprintln!("[{}] {}: {}", tag, record.target(), record.args());
-        }
-    }
-
-    fn flush(&self) {}
+/// Log severity, most severe first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
 }
 
-static LOGGER: StderrLogger = StderrLogger;
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "E",
+            Level::Warn => "W",
+            Level::Info => "I",
+            Level::Debug => "D",
+            Level::Trace => "T",
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 static INIT: Once = Once::new();
 
-/// Install the logger (idempotent). Level from `ODL_LOG` env var.
+/// Install the level filter (idempotent). Level from `ODL_LOG` env var.
 pub fn init() {
     INIT.call_once(|| {
         let level = match std::env::var("ODL_LOG").as_deref() {
-            Ok("error") => LevelFilter::Error,
-            Ok("warn") => LevelFilter::Warn,
-            Ok("debug") => LevelFilter::Debug,
-            Ok("trace") => LevelFilter::Trace,
-            _ => LevelFilter::Info,
+            Ok("error") => Level::Error,
+            Ok("warn") => Level::Warn,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Info,
         };
-        let _ = log::set_logger(&LOGGER);
-        log::set_max_level(level);
+        MAX_LEVEL.store(level as u8, Ordering::Relaxed);
     });
+}
+
+/// Would a record at `level` be emitted?
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Override the filter programmatically (embedding / tests). `init()`
+/// only applies `ODL_LOG` once; this always takes effect.
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Emit one record to stderr (no-op when filtered out).
+pub fn log(level: Level, target: &str, msg: &str) {
+    if enabled(level) {
+        eprintln!("[{}] {}: {}", level.tag(), target, msg);
+    }
+}
+
+pub fn error(target: &str, msg: &str) {
+    log(Level::Error, target, msg);
+}
+
+pub fn warn(target: &str, msg: &str) {
+    log(Level::Warn, target, msg);
+}
+
+pub fn info(target: &str, msg: &str) {
+    log(Level::Info, target, msg);
+}
+
+pub fn debug(target: &str, msg: &str) {
+    log(Level::Debug, target, msg);
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logging works");
+        init();
+        init();
+        info("logging", "logging works");
+    }
+
+    #[test]
+    fn level_filter_suppresses_below_threshold() {
+        assert!(Level::Error < Level::Trace);
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Trace));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+        // restore the default so parallel tests see the usual filter
+        set_level(Level::Info);
     }
 }

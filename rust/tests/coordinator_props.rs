@@ -39,6 +39,7 @@ fn random_scenario(rng: &mut odl_har::util::rng::Rng64) -> (Scenario, u64) {
             ..Default::default()
         },
         train_target: gen::usize_in(rng, 50, 200),
+        ..Default::default()
     };
     let seed = rng.next_u64();
     (sc, seed)

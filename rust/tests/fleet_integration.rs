@@ -22,6 +22,7 @@ fn scenario() -> Scenario {
         },
         synth: SynthConfig::default(),
         train_target: 400,
+        ..Default::default()
     }
 }
 

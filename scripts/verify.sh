@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# One-command tier-1 verify + perf smoke run.
+#
+#   scripts/verify.sh            # build, test, fast hot-path bench
+#
+# The bench writes rust/BENCH_hotpath.json (per-op ns, samples/s, and the
+# kernel-vs-scalar-baseline speedups measured on this machine); see
+# rust/PERF.md for how to read it.
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+cargo build --release
+cargo test -q
+ODL_BENCH_FAST=1 cargo bench --bench bench_hotpath
