@@ -4,7 +4,12 @@
 //! organic-detection variant (CUSUM centroid detector instead of the
 //! scripted oracle).
 //!
-//! Run: `cargo run --release --example fleet_power_study`
+//! The simulation runs on the sharded engine (`Fleet::run_parallel`),
+//! spreading edges across the machine's cores; the numbers are bitwise
+//! identical to the single-threaded event loop, so `--workers` (or the
+//! auto default) is purely a wall-clock knob.
+//!
+//! Run: `cargo run --release --example fleet_power_study [-- --workers N]`
 
 use odl_har::coordinator::fleet::{DetectorKind, Fleet, FleetConfig, Scenario};
 use odl_har::coordinator::ChannelConfig;
@@ -27,15 +32,16 @@ fn scenario(fixed_theta: Option<f32>, detector: DetectorKind) -> Scenario {
         },
         synth: SynthConfig::default(),
         train_target: 450,
+        ..Default::default()
     }
 }
 
-fn report(tag: &str, sc: Scenario) -> anyhow::Result<(f64, f64)> {
+fn report(tag: &str, sc: Scenario, workers: usize) -> anyhow::Result<(f64, f64)> {
     let fleet = Fleet::new(FleetConfig {
         scenario: sc,
         seed: 42,
     })?;
-    let r = fleet.run();
+    let r = fleet.run_parallel(workers);
     let comm: f64 = r
         .per_edge
         .iter()
@@ -59,18 +65,33 @@ fn report(tag: &str, sc: Scenario) -> anyhow::Result<(f64, f64)> {
 }
 
 fn main() -> anyhow::Result<()> {
-    println!("fleet: 8 edges, 1 teacher, BLE loss 5 %, drift at t=200 s, horizon 900 s\n");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let workers = match args.iter().position(|a| a == "--workers") {
+        Some(i) => args
+            .get(i + 1)
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("--workers requires a number"))?,
+        None => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+    };
+    println!(
+        "fleet: 8 edges, 1 teacher, BLE loss 5 %, drift at t=200 s, horizon 900 s ({workers} workers)\n"
+    );
     let (comm_off, p_off) = report(
         "no pruning (theta = 1)",
         scenario(Some(1.0), DetectorKind::Oracle),
+        workers,
     )?;
     let (comm_auto, p_auto) = report(
         "auto-theta pruning",
         scenario(None, DetectorKind::Oracle),
+        workers,
     )?;
     report(
         "auto-theta + organic detection",
         scenario(None, DetectorKind::Centroid),
+        workers,
     )?;
     println!(
         "\nauto pruning: communication volume {:.1} % -> {:.1} %, mean training-mode power -{:.1} %",

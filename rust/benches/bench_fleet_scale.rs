@@ -1,0 +1,144 @@
+//! Fleet-scale benchmark: the sequential event loop vs the sharded
+//! `Fleet::run_parallel` engine at 8 / 64 / 256 edges.
+//!
+//! Before timing anything each size asserts the engine contract — the
+//! parallel report must be bitwise identical to the sequential one — so a
+//! sharding regression can never produce a "fast but wrong" number.
+//! Construction (data generation + provisioning all edges) is timed
+//! separately and subtracted, so `speedup_loop` isolates the event-loop
+//! scaling the parallel engine is responsible for; `speedup_total`
+//! includes construction (what `odl-har fleet --workers N` feels).
+//!
+//! Results go to `BENCH_fleet.json` (`ODL_BENCH_FLEET_JSON` overrides);
+//! `scripts/bench_check.sh` diffs them against the previous accepted run.
+
+use odl_har::coordinator::fleet::{Fleet, FleetConfig, Scenario};
+use odl_har::data::SynthConfig;
+use odl_har::util::bench::{bench, fast_mode};
+use odl_har::util::json::{obj, Json};
+
+fn scenario(n_edges: usize) -> Scenario {
+    Scenario {
+        n_edges,
+        n_hidden: 32,
+        event_period_s: 1.0,
+        horizon_s: if fast_mode() { 90.0 } else { 240.0 },
+        drift_at_s: 30.0,
+        train_target: 60,
+        eval_period_s: 60.0,
+        eval_samples: 32,
+        synth: SynthConfig {
+            n_features: 40,
+            n_classes: 4,
+            n_subjects: 30,
+            samples_per_cell: 6,
+            proto_sigma: 1.1,
+            confuse_frac: 0.04,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2);
+    println!(
+        "fleet scale: sequential vs run_parallel({workers}) — reports asserted bitwise equal per size"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    for &edges in &[8usize, 64, 256] {
+        let sc = scenario(edges);
+
+        // determinism gate before timing
+        let seq_report = Fleet::new(FleetConfig {
+            scenario: sc.clone(),
+            seed: 7,
+        })
+        .unwrap()
+        .run();
+        let par_report = Fleet::new(FleetConfig {
+            scenario: sc.clone(),
+            seed: 7,
+        })
+        .unwrap()
+        .run_parallel(workers);
+        assert!(
+            seq_report.bitwise_eq(&par_report),
+            "parallel report diverged from sequential at {edges} edges"
+        );
+
+        // never fewer than 3 iterations: seq_loop_s / speedup_loop feed
+        // the 10% regression gate in scripts/bench_check.sh, and a
+        // single-sample measurement could rotate a noise spike in as the
+        // accepted baseline (fast mode shrinks the horizon instead)
+        let iters = if fast_mode() { 3 } else { 5 };
+        let r_build = bench(&format!("fleet build {edges:>3} edges"), 1, iters, || {
+            std::hint::black_box(
+                Fleet::new(FleetConfig {
+                    scenario: sc.clone(),
+                    seed: 7,
+                })
+                .unwrap(),
+            );
+        });
+        let r_seq = bench(&format!("fleet seq   {edges:>3} edges"), 1, iters, || {
+            let f = Fleet::new(FleetConfig {
+                scenario: sc.clone(),
+                seed: 7,
+            })
+            .unwrap();
+            std::hint::black_box(f.run());
+        });
+        let r_par = bench(
+            &format!("fleet par/{workers} {edges:>3} edges"),
+            1,
+            iters,
+            || {
+                let f = Fleet::new(FleetConfig {
+                    scenario: sc.clone(),
+                    seed: 7,
+                })
+                .unwrap();
+                std::hint::black_box(f.run_parallel(workers));
+            },
+        );
+
+        // floor the construction subtraction at 5 % of the raw mean: if
+        // build noise swamps the loop time the ratio degrades gracefully
+        // instead of exploding toward 1e9 and poisoning the baseline
+        let seq_loop = (r_seq.mean_s - r_build.mean_s).max(r_seq.mean_s * 0.05);
+        let par_loop = (r_par.mean_s - r_build.mean_s).max(r_par.mean_s * 0.05);
+        let speedup_loop = seq_loop / par_loop;
+        let speedup_total = r_seq.mean_s / r_par.mean_s.max(1e-9);
+        println!(
+            "  -> {edges} edges: event loop {speedup_loop:.2}x ({seq_loop:.3}s -> {par_loop:.3}s), end-to-end {speedup_total:.2}x with {workers} workers"
+        );
+        rows.push(obj(vec![
+            ("edges", Json::Num(edges as f64)),
+            ("workers", Json::Num(workers as f64)),
+            ("build_mean_s", Json::Num(r_build.mean_s)),
+            ("seq_mean_s", Json::Num(r_seq.mean_s)),
+            ("par_mean_s", Json::Num(r_par.mean_s)),
+            ("seq_loop_s", Json::Num(seq_loop)),
+            ("par_loop_s", Json::Num(par_loop)),
+            ("speedup_loop", Json::Num(speedup_loop)),
+            ("speedup_total", Json::Num(speedup_total)),
+        ]));
+    }
+
+    let out = obj(vec![
+        ("schema", Json::Str("bench_fleet/v1".into())),
+        ("fast_mode", Json::Bool(fast_mode())),
+        ("workers", Json::Num(workers as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let path =
+        std::env::var("ODL_BENCH_FLEET_JSON").unwrap_or_else(|_| "BENCH_fleet.json".into());
+    match std::fs::write(&path, out.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -228,6 +228,25 @@ fn main() {
     println!("  -> {:.0} samples/s batched eval", r_batch.per_sec(512.0));
     rows.push(json_row(&r_batch, Some(512.0)));
 
+    // thread-parallel batched predict (row-sharded, bitwise identical)
+    let nworkers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2);
+    let r_batch_par = bench(
+        &format!("native accuracy_par/{nworkers} 512 (561/128/6)"),
+        3,
+        30,
+        || {
+            std::hint::black_box(model.accuracy_par(&xs, &labels, nworkers));
+        },
+    );
+    println!(
+        "  -> {:.0} samples/s batched eval ({nworkers} threads, {:.2}x)",
+        r_batch_par.per_sec(512.0),
+        r_batch.mean_s / r_batch_par.mean_s.max(1e-12)
+    );
+    rows.push(json_row(&r_batch_par, Some(512.0)));
+
     let r_init = bench("native init_batch (512 samples, N=128)", 1, 5, || {
         model.init_batch(&xs, &labels).unwrap();
     });

@@ -133,6 +133,15 @@ pub fn fleet_from_str(text: &str) -> Result<(Scenario, u64)> {
             other => bail!("unknown fleet.detector '{other}'"),
         };
     }
+    if let Some(v) = doc.get_float("fleet", "eval_period_s") {
+        sc.eval_period_s = v;
+    }
+    if let Some(v) = doc.get_int("fleet", "eval_samples") {
+        sc.eval_samples = v as usize;
+    }
+    if let Some(v) = doc.get_bool("fleet", "eval_costs_power") {
+        sc.eval_costs_power = v;
+    }
     if let Some(v) = doc.get_float("pruning", "theta") {
         sc.fixed_theta = Some(v as f32);
     }

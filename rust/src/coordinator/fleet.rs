@@ -1,6 +1,6 @@
-//! Deterministic discrete-event fleet simulator — Figure 2(a) at system
-//! scale: one teacher, many edges, a lossy BLE channel, virtual time,
-//! full energy accounting via the [`crate::hw`] models.
+//! Deterministic fleet simulator — Figure 2(a) at system scale: one
+//! teacher, many edges, a lossy BLE channel, virtual time, full energy
+//! accounting via the [`crate::hw`] models.
 //!
 //! Each edge senses one sample per `event_period_s` (phases staggered so
 //! the teacher sees interleaved load). A scripted drift moment switches
@@ -10,10 +10,31 @@
 //! channel with latency/loss/retry; teacher replies complete the edge's
 //! pending training step.
 //!
-//! `run()` is a single-threaded binary-heap event loop (exactly
-//! reproducible); `run_threaded()` drives real edge/teacher threads over
-//! std mpsc channels for the live-system flavour (tokio is not available
-//! offline — see DESIGN.md §9).
+//! # The sharded engine
+//!
+//! The simulator is decomposed into per-edge [`EdgeSim`] shards. Each
+//! shard owns *everything* its edge touches — the FSM + ODL core, the
+//! metrics ledger, its discrete-event queue, and four private
+//! [`CounterRng`] streams (sense draws, eval probes, channel loss,
+//! teacher noise) keyed by `(seed, domain, edge)` via
+//! [`crate::util::rng::stream_seed`]. Shared resources are resolved
+//! without cross-shard communication:
+//!
+//! * the **drift moment** is a pure function of virtual time, applied in
+//!   exactly the order the old global event gave it (before the first
+//!   event at or after `drift_at_s`);
+//! * **channel** and **teacher** state per shard is a counter stream plus
+//!   integer counters, merged by summation when the books close;
+//! * the report merge walks shards in edge order on one thread, so every
+//!   `f64` fold has a single association order.
+//!
+//! Because no f32/f64 operation ever depends on cross-edge interleaving,
+//! [`Fleet::run_parallel`] (scoped worker threads over shard chunks)
+//! produces a [`FleetReport`] **bitwise identical** to the sequential
+//! [`Fleet::run`] for the same seed — asserted by
+//! `tests/fleet_determinism.rs` and re-checked by `bench_fleet_scale`
+//! before it times anything. `run_threaded()` remains the live-system
+//! flavour over std mpsc channels (event counts instead of virtual time).
 
 use super::channel::{Channel, ChannelConfig};
 use super::edge::{EdgeConfig, EdgeDevice, Mode, StepAction};
@@ -26,9 +47,24 @@ use crate::hw::{CycleModel, PowerModel, PowerState};
 use crate::linalg::Mat;
 use crate::odl::{AlphaKind, OsElmConfig};
 use crate::pruning::{Metric, Pruner, ThetaPolicy};
+use crate::util::rng::{stream_seed, CounterRng, Rng64, RngStream};
 use anyhow::Result;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+
+/// Domain tags separating each shard's RNG streams (see
+/// [`crate::util::rng::stream_seed`]). Frozen: changing any of these
+/// changes every recorded fleet trajectory.
+mod domain {
+    /// Sense-path sample draws.
+    pub const SENSE: u64 = 0x5E;
+    /// Evaluation-window probe draws.
+    pub const EVAL: u64 = 0xE7A1;
+    /// Channel loss/retry coin flips.
+    pub const CHANNEL: u64 = 0xC4A7;
+    /// Teacher label-noise draws.
+    pub const TEACHER: u64 = 0x7EAC;
+}
 
 /// Drift-detector selection for the scenario.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -64,6 +100,12 @@ pub struct Scenario {
     pub eval_period_s: f64,
     /// Probe-batch size per edge per evaluation window.
     pub eval_samples: usize,
+    /// When true, evaluation probes cost energy like real on-device
+    /// inference: each window books `eval_samples` predict-state slots
+    /// through the power ledger (a deployed fleet runs its probes on the
+    /// edge core). Off by default so the windows stay pure telemetry and
+    /// seeded trajectories keep their historical energy books.
+    pub eval_costs_power: bool,
 }
 
 impl Default for Scenario {
@@ -82,6 +124,7 @@ impl Default for Scenario {
             train_target: 400,
             eval_period_s: 0.0,
             eval_samples: 64,
+            eval_costs_power: false,
         }
     }
 }
@@ -93,17 +136,17 @@ pub struct FleetConfig {
     pub seed: u64,
 }
 
+/// One shard-local event. Shards never address each other, so events no
+/// longer carry an edge id.
 #[derive(Debug)]
 enum Event {
-    /// Edge senses a sample.
-    Sense { edge: usize },
+    /// The edge senses a sample.
+    Sense,
     /// Teacher reply lands at the edge.
-    Reply { edge: usize, label: usize },
+    Reply { label: usize },
     /// Channel gave up on the query.
-    QueryFailed { edge: usize },
-    /// Scripted drift moment.
-    Drift,
-    /// Periodic fleet-wide evaluation window (batched probe accuracy).
+    QueryFailed,
+    /// Periodic evaluation window (batched probe accuracy).
     Eval,
 }
 
@@ -135,37 +178,223 @@ impl Ord for Scheduled {
     }
 }
 
-/// The simulator.
-pub struct Fleet {
-    pub cfg: FleetConfig,
-    edges: Vec<EdgeDevice>,
-    metrics: Vec<EdgeMetrics>,
-    teacher: Teacher,
-    channel: Channel,
-    generator: SynthHar,
-    standardizer: Standardizer,
-    /// Per-edge (pre-drift subject, post-drift subject).
-    edge_subjects: Vec<(usize, usize)>,
-    drifted: bool,
-    rng: crate::util::rng::Rng64,
-    /// Dedicated stream for evaluation-window probe draws, so enabling
-    /// the (telemetry-only) eval windows does not perturb the simulation
-    /// trajectory of the main `rng` for a given seed.
-    eval_rng: crate::util::rng::Rng64,
+/// Read-only state shared by every shard (passed as `&SimContext`, all
+/// fields `Sync`).
+struct SimContext<'a> {
+    scenario: &'a Scenario,
+    generator: &'a SynthHar,
+    standardizer: &'a Standardizer,
     power: PowerModel,
     cycles: CycleModel,
+    /// Worker budget for the row-sharded predict inside evaluation
+    /// windows. 1 when the fleet itself is sharded (the cores are already
+    /// busy); the unsharded path may spend the caller's worker budget
+    /// here instead — `OsElm::accuracy_par` is bitwise identical for any
+    /// worker count, so this never shows in the report.
+    eval_workers: usize,
+}
+
+/// Everything one edge needs to advance through virtual time on its own:
+/// FSM + model, metrics, a private event queue, and counter-based RNG
+/// streams for every source of randomness it consumes. No state is shared
+/// across `EdgeSim`s — the invariant behind `run_parallel`'s bitwise
+/// determinism.
+struct EdgeSim {
+    edge: EdgeDevice,
+    metrics: EdgeMetrics,
+    /// (pre-drift subject, post-drift subject).
+    subjects: (usize, usize),
+    rng: CounterRng,
+    eval_rng: CounterRng,
+    channel: Channel,
+    teacher: Teacher,
     queue: BinaryHeap<Scheduled>,
     seq: u64,
     now: f64,
-    /// Buffered true label for each edge's in-flight query.
-    pending_truth: Vec<Option<usize>>,
+    drifted: bool,
+}
+
+/// Draw one standardized sample for an edge from its current subject
+/// distribution using the given stream.
+fn draw_sample<R: RngStream>(
+    generator: &SynthHar,
+    standardizer: &Standardizer,
+    subjects: (usize, usize),
+    drifted: bool,
+    n_classes: usize,
+    rng: &mut R,
+) -> (Vec<f32>, usize) {
+    let subject = if drifted { subjects.1 } else { subjects.0 };
+    let class = rng.below(n_classes);
+    let mut x = generator.sample(class, subject, rng);
+    // standardize like the provisioning data
+    for ((v, &m), &s) in x
+        .iter_mut()
+        .zip(&standardizer.mean)
+        .zip(&standardizer.std)
+    {
+        *v = (*v - m) / s;
+    }
+    (x, class)
+}
+
+impl EdgeSim {
+    fn schedule(&mut self, at: f64, event: Event) {
+        self.seq += 1;
+        self.queue.push(Scheduled {
+            at,
+            seq: self.seq,
+            event,
+        });
+    }
+
+    /// Advance this shard's event queue to the horizon. The scripted
+    /// drift is applied before the first event at or after `drift_at_s`.
+    /// Nothing an edge does between events can observe the flag earlier,
+    /// so this matches the old global Drift event in every case but one
+    /// corner: a *first-cycle* Sense whose stagger phase equals
+    /// `drift_at_s` exactly used to pop before Drift (it was scheduled
+    /// first and ties break by lower seq) and sensed pre-drift; here the
+    /// flag flips first. Trajectories were re-baselined by the per-edge
+    /// streams anyway — the binding contract is run ≡ run_parallel, and
+    /// both sides of it use this rule.
+    fn run_to_horizon(&mut self, ctx: &SimContext) {
+        let horizon = ctx.scenario.horizon_s;
+        let drift_at = ctx.scenario.drift_at_s;
+        while let Some(Scheduled { at, event, .. }) = self.queue.pop() {
+            if at > horizon {
+                break;
+            }
+            if !self.drifted && at >= drift_at {
+                self.drifted = true;
+                if ctx.scenario.detector == DetectorKind::Oracle {
+                    self.edge.force_training();
+                }
+            }
+            self.now = at;
+            match event {
+                Event::Sense => {
+                    self.handle_sense(ctx);
+                    let next = self.now + ctx.scenario.event_period_s;
+                    self.schedule(next, Event::Sense);
+                }
+                Event::Reply { label } => {
+                    self.edge.on_label(label);
+                    self.metrics.trained = self.edge.total_trained;
+                    self.metrics.record_state(
+                        PowerState::Train,
+                        ctx.cycles.train_time_s(),
+                        ctx.power.power_mw(PowerState::Train),
+                    );
+                }
+                Event::QueryFailed => {
+                    self.edge.on_query_failed();
+                    self.metrics.query_failures += 1;
+                }
+                Event::Eval => {
+                    self.run_eval_window(ctx);
+                    let next = self.now + ctx.scenario.eval_period_s;
+                    self.schedule(next, Event::Eval);
+                }
+            }
+        }
+    }
+
+    fn handle_sense(&mut self, ctx: &SimContext) {
+        let (x, true_label) = draw_sample(
+            ctx.generator,
+            ctx.standardizer,
+            self.subjects,
+            self.drifted,
+            ctx.scenario.synth.n_classes,
+            &mut self.rng,
+        );
+        self.metrics.events += 1;
+        self.metrics.record_state(
+            PowerState::Predict,
+            ctx.cycles.predict_time_s(),
+            ctx.power.power_mw(PowerState::Predict),
+        );
+        let (pred, action) = self.edge.on_sense(&x);
+        self.metrics.record_prediction(self.now, pred.class == true_label);
+        if action == StepAction::QueryTeacher {
+            let delivery = self.channel.transmit();
+            self.metrics.radio_energy_mj += delivery.energy_mj;
+            if delivery.delivered {
+                let label =
+                    self.teacher
+                        .respond(&x, true_label, ctx.scenario.synth.n_classes);
+                let at = self.now + delivery.elapsed_s + self.teacher.service_time_s;
+                self.schedule(at, Event::Reply { label });
+            } else {
+                let at = self.now + delivery.elapsed_s;
+                self.schedule(at, Event::QueryFailed);
+            }
+        }
+    }
+
+    /// One evaluation window: draw a probe batch from this edge's
+    /// *current* sampling distribution and score it through the batched
+    /// predict path (one packed-α panel sweep + one logits GEMM per
+    /// block, row-sharded when `ctx.eval_workers > 1`). Probes never
+    /// touch the edge FSM, the pruner, or the sense stream; they touch
+    /// the power ledger only when `Scenario::eval_costs_power` asks for
+    /// honest on-device probe energy.
+    fn run_eval_window(&mut self, ctx: &SimContext) {
+        let ns = ctx.scenario.eval_samples;
+        if ns == 0 {
+            return;
+        }
+        let nf = ctx.scenario.synth.n_features;
+        let n_classes = ctx.scenario.synth.n_classes;
+        let mut xs = Mat::zeros(ns, nf);
+        let mut labels = Vec::with_capacity(ns);
+        for r in 0..ns {
+            let (x, class) = draw_sample(
+                ctx.generator,
+                ctx.standardizer,
+                self.subjects,
+                self.drifted,
+                n_classes,
+                &mut self.eval_rng,
+            );
+            xs.row_mut(r).copy_from_slice(&x);
+            labels.push(class);
+        }
+        let acc = if ctx.eval_workers > 1 {
+            self.edge.model.accuracy_par(&xs, &labels, ctx.eval_workers)
+        } else {
+            self.edge.model.accuracy(&xs, &labels)
+        };
+        self.metrics.eval_trace.push((self.now, acc));
+        if ctx.scenario.eval_costs_power {
+            // a real deployment runs the probes on-device: book ns
+            // inferences of predict-state time through the same ledger as
+            // the sense path
+            self.metrics.record_state(
+                PowerState::Predict,
+                ctx.cycles.predict_time_s() * ns as f64,
+                ctx.power.power_mw(PowerState::Predict),
+            );
+        }
+    }
+}
+
+/// The simulator.
+pub struct Fleet {
+    pub cfg: FleetConfig,
+    sims: Vec<EdgeSim>,
+    generator: SynthHar,
+    standardizer: Standardizer,
+    power: PowerModel,
+    cycles: CycleModel,
 }
 
 impl Fleet {
     pub fn new(cfg: FleetConfig) -> Result<Fleet> {
         let sc = &cfg.scenario;
-        let mut rng = crate::util::rng::Rng64::new(cfg.seed);
-        let mut data_rng = crate::util::rng::Rng64::new(cfg.seed ^ 0xDA7A);
+        let mut rng = Rng64::new(cfg.seed);
+        let mut data_rng = Rng64::new(cfg.seed ^ 0xDA7A);
         let generator = SynthHar::new(sc.synth.clone(), &mut data_rng);
 
         // Provisioning pool: in-distribution subjects only.
@@ -180,8 +409,7 @@ impl Fleet {
             .filter(|s| !HELD_OUT_SUBJECTS.contains(s))
             .collect();
 
-        let mut edges = Vec::with_capacity(sc.n_edges);
-        let mut edge_subjects = Vec::with_capacity(sc.n_edges);
+        let mut sims = Vec::with_capacity(sc.n_edges);
         for id in 0..sc.n_edges {
             let model = OsElmConfig {
                 n_in: sc.synth.n_features,
@@ -215,225 +443,133 @@ impl Fleet {
             edge.provision(&train.xs, &train.labels)?;
             let pre = in_subjects[id % in_subjects.len()];
             let post = HELD_OUT_SUBJECTS[id % HELD_OUT_SUBJECTS.len()];
-            edge_subjects.push((pre, post));
-            edges.push(edge);
+            let eid = id as u64;
+            let mut sim = EdgeSim {
+                edge,
+                metrics: EdgeMetrics::default(),
+                subjects: (pre, post),
+                rng: CounterRng::new(cfg.seed, domain::SENSE, eid),
+                eval_rng: CounterRng::new(cfg.seed, domain::EVAL, eid),
+                channel: Channel::new(
+                    sc.channel.clone(),
+                    stream_seed(cfg.seed, domain::CHANNEL, eid),
+                ),
+                teacher: Teacher::oracle(
+                    sc.teacher_error,
+                    stream_seed(cfg.seed, domain::TEACHER, eid),
+                ),
+                queue: BinaryHeap::new(),
+                seq: 0,
+                now: 0.0,
+                drifted: false,
+            };
+            // stagger edges across the period; seed the eval cadence
+            let phase = sc.event_period_s * (id as f64 / sc.n_edges.max(1) as f64);
+            sim.schedule(phase, Event::Sense);
+            if sc.eval_period_s > 0.0 {
+                sim.schedule(sc.eval_period_s, Event::Eval);
+            }
+            sims.push(sim);
         }
 
-        let teacher = Teacher::oracle(sc.teacher_error, cfg.seed ^ 0x7EAC);
-        let channel = Channel::new(sc.channel.clone(), cfg.seed ^ 0xC4A7);
-
-        let n_edges = sc.n_edges;
-        let mut fleet = Fleet {
-            edges,
-            metrics: vec![EdgeMetrics::default(); n_edges],
-            teacher,
-            channel,
+        let cycles = CycleModel::prototype().with_dims(
+            sc.synth.n_features,
+            sc.n_hidden,
+            sc.synth.n_classes,
+        );
+        Ok(Fleet {
+            sims,
             generator,
             standardizer,
-            edge_subjects,
-            drifted: false,
-            eval_rng: crate::util::rng::Rng64::new(cfg.seed ^ 0xE7A1),
-            rng,
             power: PowerModel::default(),
-            cycles: CycleModel::prototype().with_dims(
-                sc.synth.n_features,
-                sc.n_hidden,
-                sc.synth.n_classes,
-            ),
-            queue: BinaryHeap::new(),
-            seq: 0,
-            now: 0.0,
-            pending_truth: vec![None; n_edges],
+            cycles,
             cfg,
+        })
+    }
+
+    /// Run to the horizon on the calling thread; returns the report.
+    /// Defined as `run_parallel(1)`, so the sequential and sharded paths
+    /// are one code path — determinism by construction, not by test alone.
+    pub fn run(self) -> FleetReport {
+        self.run_parallel(1)
+    }
+
+    /// Run to the horizon with the per-edge shards spread over up to
+    /// `n_workers` scoped threads (clamped to the edge count; ≤ 1 runs on
+    /// the calling thread). The report is **bitwise identical** to
+    /// [`Fleet::run`] for the same seed and scenario, for every worker
+    /// count — no shard reads another shard's state, and the close-of-
+    /// books merge always walks edges in id order on one thread.
+    pub fn run_parallel(self, n_workers: usize) -> FleetReport {
+        let Fleet {
+            cfg,
+            mut sims,
+            generator,
+            standardizer,
+            power,
+            cycles,
+        } = self;
+        let n_edges = sims.len();
+        let workers = n_workers.max(1).min(n_edges.max(1));
+        let ctx = SimContext {
+            scenario: &cfg.scenario,
+            generator: &generator,
+            standardizer: &standardizer,
+            power,
+            cycles,
+            eval_workers: if workers > 1 { 1 } else { n_workers.max(1) },
         };
-        // stagger edges across the period; schedule the drift
-        for id in 0..n_edges {
-            let phase =
-                fleet.cfg.scenario.event_period_s * (id as f64 / n_edges.max(1) as f64);
-            fleet.schedule(phase, Event::Sense { edge: id });
-        }
-        let drift_at = fleet.cfg.scenario.drift_at_s;
-        fleet.schedule(drift_at, Event::Drift);
-        let eval_period = fleet.cfg.scenario.eval_period_s;
-        if eval_period > 0.0 {
-            fleet.schedule(eval_period, Event::Eval);
-        }
-        Ok(fleet)
-    }
-
-    fn schedule(&mut self, at: f64, event: Event) {
-        self.seq += 1;
-        self.queue.push(Scheduled {
-            at,
-            seq: self.seq,
-            event,
-        });
-    }
-
-    /// Draw one standardized sample for `edge` from its current subject
-    /// distribution using the given stream (disjoint-field helper so the
-    /// sense path and the eval-probe path can use different RNGs).
-    fn draw_sample(
-        generator: &SynthHar,
-        standardizer: &Standardizer,
-        subjects: (usize, usize),
-        drifted: bool,
-        n_classes: usize,
-        rng: &mut crate::util::rng::Rng64,
-    ) -> (Vec<f32>, usize) {
-        let subject = if drifted { subjects.1 } else { subjects.0 };
-        let class = rng.below(n_classes);
-        let mut x = generator.sample(class, subject, rng);
-        // standardize like the provisioning data
-        for ((v, &m), &s) in x
-            .iter_mut()
-            .zip(&standardizer.mean)
-            .zip(&standardizer.std)
-        {
-            *v = (*v - m) / s;
-        }
-        (x, class)
-    }
-
-    fn sense_sample(&mut self, edge: usize) -> (Vec<f32>, usize) {
-        Self::draw_sample(
-            &self.generator,
-            &self.standardizer,
-            self.edge_subjects[edge],
-            self.drifted,
-            self.cfg.scenario.synth.n_classes,
-            &mut self.rng,
-        )
-    }
-
-    /// Run to the horizon; returns the report.
-    pub fn run(mut self) -> FleetReport {
-        let horizon = self.cfg.scenario.horizon_s;
-        while let Some(Scheduled { at, event, .. }) = self.queue.pop() {
-            if at > horizon {
-                break;
+        if workers <= 1 {
+            for sim in sims.iter_mut() {
+                sim.run_to_horizon(&ctx);
             }
-            self.now = at;
-            match event {
-                Event::Drift => {
-                    self.drifted = true;
-                    if self.cfg.scenario.detector == DetectorKind::Oracle {
-                        for e in self.edges.iter_mut() {
-                            e.force_training();
+        } else {
+            let chunk = n_edges.div_ceil(workers);
+            let ctx_ref = &ctx;
+            std::thread::scope(|scope| {
+                for shard in sims.chunks_mut(chunk) {
+                    scope.spawn(move || {
+                        for sim in shard.iter_mut() {
+                            sim.run_to_horizon(ctx_ref);
                         }
-                    }
+                    });
                 }
-                Event::Sense { edge } => {
-                    self.handle_sense(edge);
-                    let next = self.now + self.cfg.scenario.event_period_s;
-                    self.schedule(next, Event::Sense { edge });
-                }
-                Event::Reply { edge, label } => {
-                    self.edges[edge].on_label(label);
-                    self.metrics[edge].trained = self.edges[edge].total_trained;
-                    self.metrics[edge].record_state(
-                        PowerState::Train,
-                        self.cycles.train_time_s(),
-                        self.power.power_mw(PowerState::Train),
-                    );
-                }
-                Event::QueryFailed { edge } => {
-                    self.edges[edge].on_query_failed();
-                    self.metrics[edge].query_failures += 1;
-                }
-                Event::Eval => {
-                    self.run_eval_window();
-                    let next = self.now + self.cfg.scenario.eval_period_s;
-                    self.schedule(next, Event::Eval);
-                }
-            }
+            });
         }
-        // close the books: remaining time is sleep
+
+        // close the books: remaining time is sleep; merge in edge order
+        let horizon = cfg.scenario.horizon_s;
         let mut report = FleetReport {
             horizon_s: horizon,
-            per_edge: Vec::new(),
-            teacher_queries: self.teacher.queries_served,
-            channel_attempts: self.channel.total_attempts,
-            channel_failures: self.channel.total_failures,
+            per_edge: Vec::with_capacity(n_edges),
+            teacher_queries: 0,
+            channel_attempts: 0,
+            channel_failures: 0,
         };
-        for (i, mut m) in self.metrics.into_iter().enumerate() {
-            let active: f64 = m.state_time_s.values().sum();
-            m.record_state(
+        for sim in sims {
+            let EdgeSim {
+                edge,
+                mut metrics,
+                channel,
+                teacher,
+                ..
+            } = sim;
+            let active: f64 = metrics.state_time_s.values().sum();
+            metrics.record_state(
                 PowerState::Sleep,
                 (horizon - active).max(0.0),
-                self.power.power_mw(PowerState::Sleep),
+                power.power_mw(PowerState::Sleep),
             );
-            m.queries = self.edges[i].total_queries;
-            m.skips = self.edges[i].total_skips;
-            m.trained = self.edges[i].total_trained;
-            m.mode_switches = self.edges[i].mode_switches;
-            report.per_edge.push(m);
+            metrics.queries = edge.total_queries;
+            metrics.skips = edge.total_skips;
+            metrics.trained = edge.total_trained;
+            metrics.mode_switches = edge.mode_switches;
+            report.teacher_queries += teacher.queries_served;
+            report.channel_attempts += channel.total_attempts;
+            report.channel_failures += channel.total_failures;
+            report.per_edge.push(metrics);
         }
         report
-    }
-
-    /// One evaluation window: draw a probe batch per edge from its
-    /// *current* sampling distribution and score it through the batched
-    /// predict path (`OsElm::accuracy` — one packed-α panel sweep + one
-    /// logits GEMM per block, no per-sample allocation). Telemetry only:
-    /// probes don't touch the edge FSM, the pruner, the power ledger, or
-    /// the main RNG stream — the same seed yields the same simulation
-    /// with eval windows on or off.
-    fn run_eval_window(&mut self) {
-        let ns = self.cfg.scenario.eval_samples;
-        if ns == 0 {
-            return;
-        }
-        let nf = self.cfg.scenario.synth.n_features;
-        let n_classes = self.cfg.scenario.synth.n_classes;
-        let now = self.now;
-        for edge in 0..self.edges.len() {
-            let mut xs = Mat::zeros(ns, nf);
-            let mut labels = Vec::with_capacity(ns);
-            for r in 0..ns {
-                let (x, class) = Self::draw_sample(
-                    &self.generator,
-                    &self.standardizer,
-                    self.edge_subjects[edge],
-                    self.drifted,
-                    n_classes,
-                    &mut self.eval_rng,
-                );
-                xs.row_mut(r).copy_from_slice(&x);
-                labels.push(class);
-            }
-            let acc = self.edges[edge].model.accuracy(&xs, &labels);
-            self.metrics[edge].eval_trace.push((now, acc));
-        }
-    }
-
-    fn handle_sense(&mut self, edge: usize) {
-        let (x, true_label) = self.sense_sample(edge);
-        self.metrics[edge].events += 1;
-        self.metrics[edge].record_state(
-            PowerState::Predict,
-            self.cycles.predict_time_s(),
-            self.power.power_mw(PowerState::Predict),
-        );
-        let (pred, action) = self.edges[edge].on_sense(&x);
-        self.metrics[edge].record_prediction(self.now, pred.class == true_label);
-        if action == StepAction::QueryTeacher {
-            let delivery = self.channel.transmit();
-            self.metrics[edge].radio_energy_mj += delivery.energy_mj;
-            if delivery.delivered {
-                let label = self.teacher.respond(
-                    &x,
-                    true_label,
-                    self.cfg.scenario.synth.n_classes,
-                );
-                self.pending_truth[edge] = Some(true_label);
-                let at = self.now + delivery.elapsed_s + self.teacher.service_time_s;
-                self.schedule(at, Event::Reply { edge, label });
-            } else {
-                let at = self.now + delivery.elapsed_s;
-                self.schedule(at, Event::QueryFailed { edge });
-            }
-        }
     }
 
     /// Threaded live-system mode: each edge on its own thread, the teacher
@@ -454,7 +590,10 @@ impl Fleet {
             seed,
         })?;
         let n_classes = scenario.synth.n_classes;
-        let mut teacher = fleet.teacher;
+        let mut teacher = Teacher::oracle(
+            scenario.teacher_error,
+            stream_seed(seed, domain::TEACHER, u64::MAX),
+        );
 
         // teacher thread: serves (edge_id, x, true_label) -> label
         type Query = (usize, Vec<f32>, usize);
@@ -468,18 +607,19 @@ impl Fleet {
 
         let mut handles = Vec::new();
         let generator_cfg = scenario.synth.clone();
-        for (id, mut edge) in fleet.edges.into_iter().enumerate() {
+        let standardizer = fleet.standardizer;
+        for (id, sim) in fleet.sims.into_iter().enumerate() {
             let q_tx = q_tx.clone();
-            let (pre, post) = fleet.edge_subjects[id];
-            let mean = fleet.standardizer.mean.clone();
-            let std = fleet.standardizer.std.clone();
+            let mut edge = sim.edge;
+            let (pre, post) = sim.subjects;
+            let mean = standardizer.mean.clone();
+            let std = standardizer.std.clone();
             let synth_cfg = generator_cfg.clone();
             let drift_at = events_per_edge / 3;
             handles.push(std::thread::spawn(move || -> (u64, u64) {
                 // per-thread generator (same family, thread-local stream)
-                let mut rng = crate::util::rng::Rng64::new(seed ^ (id as u64 + 1));
-                let mut data_rng =
-                    crate::util::rng::Rng64::new(seed ^ 0xDA7A);
+                let mut rng = Rng64::new(seed ^ (id as u64 + 1));
+                let mut data_rng = Rng64::new(seed ^ 0xDA7A);
                 let gen = SynthHar::new(synth_cfg.clone(), &mut data_rng);
                 for ev in 0..events_per_edge {
                     let subject = if ev >= drift_at { post } else { pre };
@@ -513,7 +653,7 @@ impl Fleet {
 
     /// Current mode of an edge (tests).
     pub fn edge_mode(&self, id: usize) -> Mode {
-        self.edges[id].mode
+        self.sims[id].edge.mode
     }
 }
 
@@ -577,6 +717,37 @@ mod tests {
             )
         };
         assert_eq!(run(7), run(7));
+    }
+
+    #[test]
+    fn parallel_run_bitwise_matches_sequential() {
+        // The engine contract, on the in-module scenario (the cross-seed
+        // / cross-detector matrix lives in tests/fleet_determinism.rs):
+        // identical FleetReport bits for every worker count.
+        let mut sc = small_scenario();
+        sc.eval_period_s = 50.0;
+        sc.eval_samples = 16;
+        sc.channel = ChannelConfig {
+            loss_prob: 0.2,
+            max_retries: 1,
+            ..Default::default()
+        };
+        sc.teacher_error = 0.1;
+        let seq = Fleet::new(FleetConfig {
+            scenario: sc.clone(),
+            seed: 5,
+        })
+        .unwrap()
+        .run();
+        for workers in [1usize, 2, 3, 8] {
+            let par = Fleet::new(FleetConfig {
+                scenario: sc.clone(),
+                seed: 5,
+            })
+            .unwrap()
+            .run_parallel(workers);
+            assert!(seq.bitwise_eq(&par), "diverged at {workers} workers");
+        }
     }
 
     #[test]
@@ -672,8 +843,9 @@ mod tests {
 
     #[test]
     fn eval_windows_do_not_perturb_simulation() {
-        // The probe draws come from a dedicated RNG stream: the same seed
-        // must produce the identical simulation with eval windows on/off.
+        // The probe draws come from dedicated per-edge streams: the same
+        // seed must produce the identical simulation with eval windows
+        // on/off.
         let run = |eval: bool| {
             let mut sc = small_scenario();
             if eval {
@@ -692,6 +864,37 @@ mod tests {
             )
         };
         assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn eval_power_flag_books_probe_energy() {
+        let run = |costed: bool| {
+            let mut sc = small_scenario();
+            sc.eval_period_s = 50.0;
+            sc.eval_samples = 32;
+            sc.eval_costs_power = costed;
+            Fleet::new(FleetConfig {
+                scenario: sc,
+                seed: 8,
+            })
+            .unwrap()
+            .run()
+        };
+        let free = run(false);
+        let costed = run(true);
+        for (mf, mc) in free.per_edge.iter().zip(&costed.per_edge) {
+            // the trajectory itself is untouched…
+            assert_eq!(mf.events, mc.events);
+            assert_eq!(mf.queries, mc.queries);
+            assert_eq!(mf.trained, mc.trained);
+            assert_eq!(mf.eval_trace.len(), mc.eval_trace.len());
+            // …but the costed run books extra predict-state time/energy
+            assert!(
+                mc.state_time_s["predict"] > mf.state_time_s["predict"],
+                "probes must add predict time"
+            );
+            assert!(mc.core_energy_mj > mf.core_energy_mj);
+        }
     }
 
     #[test]

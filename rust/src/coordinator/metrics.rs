@@ -1,7 +1,7 @@
 //! Per-edge and fleet-level accounting: queries, energy, accuracy traces.
 
 use crate::hw::PowerState;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Energy/activity ledger for one edge device.
 #[derive(Clone, Debug, Default)]
@@ -16,8 +16,10 @@ pub struct EdgeMetrics {
     pub core_energy_mj: f64,
     /// Radio energy [mJ].
     pub radio_energy_mj: f64,
-    /// Time spent per state [s].
-    pub state_time_s: HashMap<&'static str, f64>,
+    /// Time spent per state [s]. A `BTreeMap` so iteration (and therefore
+    /// every `values().sum()` fold over it) has one fixed order — part of
+    /// the bitwise-reproducibility contract of the fleet reports.
+    pub state_time_s: BTreeMap<&'static str, f64>,
     /// (virtual time, rolling accuracy) checkpoints.
     pub accuracy_trace: Vec<(f64, f64)>,
     /// (virtual time, probe accuracy) from the fleet's periodic
@@ -68,6 +70,36 @@ impl EdgeMetrics {
             self.queries as f64 / considered as f64
         }
     }
+
+    /// Bitwise equality (floats compared by bit pattern) — the contract
+    /// `Fleet::run_parallel` must meet against the sequential run.
+    pub fn bitwise_eq(&self, o: &EdgeMetrics) -> bool {
+        fn feq(a: f64, b: f64) -> bool {
+            a.to_bits() == b.to_bits()
+        }
+        fn trace_eq(a: &[(f64, f64)], b: &[(f64, f64)]) -> bool {
+            a.len() == b.len()
+                && a.iter()
+                    .zip(b)
+                    .all(|(x, y)| feq(x.0, y.0) && feq(x.1, y.1))
+        }
+        self.events == o.events
+            && self.queries == o.queries
+            && self.skips == o.skips
+            && self.trained == o.trained
+            && self.query_failures == o.query_failures
+            && self.mode_switches == o.mode_switches
+            && feq(self.core_energy_mj, o.core_energy_mj)
+            && feq(self.radio_energy_mj, o.radio_energy_mj)
+            && self.state_time_s.len() == o.state_time_s.len()
+            && self
+                .state_time_s
+                .iter()
+                .zip(&o.state_time_s)
+                .all(|((ka, va), (kb, vb))| ka == kb && feq(*va, *vb))
+            && trace_eq(&self.accuracy_trace, &o.accuracy_trace)
+            && trace_eq(&self.eval_trace, &o.eval_trace)
+    }
 }
 
 /// Fleet-level rollup.
@@ -97,6 +129,21 @@ impl FleetReport {
             return 0.0;
         }
         self.total_energy_mj() / self.horizon_s / self.per_edge.len() as f64
+    }
+
+    /// Bitwise equality of the whole report — `run_parallel(k)` must
+    /// satisfy `report.bitwise_eq(&sequential_report)` for every `k`.
+    pub fn bitwise_eq(&self, o: &FleetReport) -> bool {
+        self.horizon_s.to_bits() == o.horizon_s.to_bits()
+            && self.teacher_queries == o.teacher_queries
+            && self.channel_attempts == o.channel_attempts
+            && self.channel_failures == o.channel_failures
+            && self.per_edge.len() == o.per_edge.len()
+            && self
+                .per_edge
+                .iter()
+                .zip(&o.per_edge)
+                .all(|(a, b)| a.bitwise_eq(b))
     }
 }
 

@@ -9,9 +9,13 @@
 //! [`fleet::Fleet`] is a deterministic discrete-event simulator over
 //! virtual time that wires edges, channel, and teacher together and
 //! accounts energy with the [`crate::hw`] models — the substrate for the
-//! fleet examples and the power case study. [`fleet::Fleet::run_threaded`]
-//! offers a std-thread real-time-flavoured mode (tokio is not in the
-//! offline vendor set; the event loop is explicit instead).
+//! fleet examples and the power case study. Its event loop is sharded
+//! per edge over counter-based RNG streams, so
+//! [`fleet::Fleet::run_parallel`] spreads a large fleet across worker
+//! threads while producing a report bitwise identical to the sequential
+//! [`fleet::Fleet::run`]. [`fleet::Fleet::run_threaded`] offers a
+//! std-thread real-time-flavoured mode (tokio is not in the offline
+//! vendor set; the event loop is explicit instead).
 
 pub mod channel;
 pub mod edge;

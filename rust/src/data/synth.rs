@@ -22,7 +22,7 @@
 
 use super::{Dataset, HELD_OUT_SUBJECTS};
 use crate::linalg::Mat;
-use crate::util::rng::Rng64;
+use crate::util::rng::{Rng64, RngStream};
 
 /// Generator parameters. Defaults are the calibrated values used by every
 /// experiment harness (calibration tests live in this module; the
@@ -139,8 +139,11 @@ impl SynthHar {
     }
 
     /// Draw one sample for (class, subject). `subject` is 1-based like the
-    /// UCI ids.
-    pub fn sample(&self, class: usize, subject: usize, rng: &mut Rng64) -> Vec<f32> {
+    /// UCI ids. Generic over the RNG so the fleet's per-edge counter-based
+    /// streams and the classic `Rng64` call sites share one body (the
+    /// trait's samplers are formula-identical, so `Rng64` callers draw
+    /// exactly what they always did).
+    pub fn sample<R: RngStream>(&self, class: usize, subject: usize, rng: &mut R) -> Vec<f32> {
         assert!(class < self.cfg.n_classes);
         assert!((1..=self.cfg.n_subjects).contains(&subject));
         let s = subject - 1;

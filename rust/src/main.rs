@@ -12,7 +12,7 @@
 //! odl-har fig3   [--trials N] [--metric p1p2|el2n] [--out DIR]
 //! odl-har fig4   [--trials N] [--out DIR]
 //! odl-har run    --config FILE       # custom protocol experiment
-//! odl-har fleet  [--config FILE] [--threaded]
+//! odl-har fleet  [--config FILE] [--workers N] [--threaded]
 //! odl-har artifacts-check            # verify PJRT artifacts load + run
 //! ```
 
@@ -181,6 +181,7 @@ fn main() -> Result<()> {
         }
         "fleet" => {
             let threaded = args.flag("--threaded");
+            let workers = args.opt_usize("--workers", 1)?;
             let cfg_path = args.opt("--config")?;
             args.finish()?;
             let (scenario, seed) = match cfg_path {
@@ -197,11 +198,14 @@ fn main() -> Result<()> {
                 let fleet = odl_har::coordinator::Fleet::new(
                     odl_har::coordinator::fleet::FleetConfig { scenario, seed },
                 )?;
-                let report = fleet.run();
+                // run_parallel is bitwise identical to run() for any
+                // worker count, so --workers only changes wall time
+                let report = fleet.run_parallel(workers);
                 println!(
-                    "fleet: {} edges, horizon {:.0}s, teacher queries {}, channel fail {}/{}",
+                    "fleet: {} edges, horizon {:.0}s, {} worker(s), teacher queries {}, channel fail {}/{}",
                     report.per_edge.len(),
                     report.horizon_s,
+                    workers.max(1),
                     report.teacher_queries,
                     report.channel_failures,
                     report.channel_attempts
@@ -255,7 +259,8 @@ fn print_help() {
            fig3   [--trials N] [--metric p1p2|el2n] [--out DIR]   pruning sweep (Figure 3)\n\
            fig4   [--trials N] [--out DIR]      training-mode power (Figure 4)\n\
            run    --config FILE           custom experiment from TOML\n\
-           fleet  [--config FILE] [--threaded]  multi-edge fleet simulation\n\
+           fleet  [--config FILE] [--workers N] [--threaded]  multi-edge fleet simulation\n\
+                                          (--workers shards edges across threads; same report bit for bit)\n\
            artifacts-check                compile every PJRT artifact"
     );
 }

@@ -31,7 +31,14 @@
 //! bitwise identical between `accumulate_hidden`, the batched variant,
 //! and the naive column dot (modulo the seed's skip of exact-zero inputs,
 //! which only ever differed on signed zeros).
+//!
+//! The `*_sigmoid` variants fuse G1 into the panel epilogue: the sigmoid
+//! is applied to the `LANES` accumulators before they are stored, so the
+//! hidden *activation* block is produced in one pass with no second
+//! read-modify-write sweep over `rows × N` — this is the hidden layer the
+//! OS-ELM hot paths actually consume.
 
+use super::activation::sigmoid;
 use super::xorshift::counter_alpha;
 use crate::linalg::kernels::LANES;
 use crate::util::rng::Rng64;
@@ -143,12 +150,36 @@ impl AlphaProvider {
     /// per sample the result is bitwise identical to
     /// [`Self::accumulate_hidden`].
     pub fn accumulate_hidden_batch(&self, xs: &[f32], rows: usize, out: &mut [f32]) {
+        self.panel_matvec::<false>(xs, rows, out);
+    }
+
+    /// Hidden **activations** for one sample: `out = σ(xᵀ·α)`, with the
+    /// sigmoid fused into the panel epilogue (see the batched variant).
+    #[inline]
+    pub fn accumulate_hidden_sigmoid(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.n, "input dim mismatch");
+        assert_eq!(out.len(), self.hidden, "hidden dim mismatch");
+        self.panel_matvec::<true>(x, 1, out);
+    }
+
+    /// Hidden activations for a block: `out = σ(xs·α)` row-major. G1 runs
+    /// on the `LANES` accumulators while they are still in registers, so
+    /// the activation costs zero extra memory traffic — the seed schedule
+    /// instead wrote the `rows × N` pre-activation block and re-read it in
+    /// a second `sigmoid_inplace` sweep. Applying the same scalar function
+    /// to the same f32 values, the result is bitwise identical to
+    /// [`Self::accumulate_hidden_batch`] followed by that sweep.
+    pub fn accumulate_hidden_batch_sigmoid(&self, xs: &[f32], rows: usize, out: &mut [f32]) {
+        self.panel_matvec::<true>(xs, rows, out);
+    }
+
+    fn panel_matvec<const SIGMOID: bool>(&self, xs: &[f32], rows: usize, out: &mut [f32]) {
         assert_eq!(xs.len(), rows * self.n, "input block shape mismatch");
         assert_eq!(out.len(), rows * self.hidden, "output block shape mismatch");
         let n = self.n;
         let h = self.hidden;
         if n == 0 {
-            out.fill(0.0);
+            out.fill(if SIGMOID { sigmoid(0.0) } else { 0.0 });
             return;
         }
         for (pp, panel) in self.panels.chunks_exact(n * LANES).enumerate() {
@@ -160,6 +191,11 @@ impl AlphaProvider {
                 for (&xi, lane) in x.iter().zip(panel.chunks_exact(LANES)) {
                     for l in 0..LANES {
                         acc[l] += xi * lane[l];
+                    }
+                }
+                if SIGMOID {
+                    for a in acc[..w].iter_mut() {
+                        *a = sigmoid(*a);
                     }
                 }
                 out[r * h + j0..r * h + j0 + w].copy_from_slice(&acc[..w]);
@@ -220,6 +256,40 @@ mod tests {
                         batch[r * hidden + j].to_bits(),
                         single[j].to_bits(),
                         "row {r} unit {j} hidden {hidden}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_sigmoid_epilogue_bitwise_matches_two_pass() {
+        use crate::odl::activation::sigmoid_inplace;
+        for (n, hidden) in [(23usize, 1usize), (23, 7), (23, 8), (23, 24), (23, 31), (0, 5)] {
+            let a = AlphaProvider::hash(13, n, hidden, 0.7);
+            let rows = 5;
+            let xs: Vec<f32> = (0..rows * n)
+                .map(|i| ((i as f32) * 0.171).sin() * 1.7)
+                .collect();
+            // reference: raw panel matvec + separate sigmoid sweep
+            let mut two_pass = vec![0.0f32; rows * hidden];
+            a.accumulate_hidden_batch(&xs, rows, &mut two_pass);
+            sigmoid_inplace(&mut two_pass);
+            // fused batch
+            let mut fused = vec![0.0f32; rows * hidden];
+            a.accumulate_hidden_batch_sigmoid(&xs, rows, &mut fused);
+            for (k, (f, t)) in fused.iter().zip(&two_pass).enumerate() {
+                assert_eq!(f.to_bits(), t.to_bits(), "n {n} hidden {hidden} idx {k}");
+            }
+            // fused single-sample
+            let mut single = vec![0.0f32; hidden];
+            for r in 0..rows {
+                a.accumulate_hidden_sigmoid(&xs[r * n..(r + 1) * n], &mut single);
+                for j in 0..hidden {
+                    assert_eq!(
+                        single[j].to_bits(),
+                        two_pass[r * hidden + j].to_bits(),
+                        "row {r} unit {j}"
                     );
                 }
             }

@@ -29,7 +29,7 @@
 //!   workspace buffers (no per-sample allocation), reusing each α panel
 //!   across the block and computing logits with one blocked GEMM.
 
-use super::activation::{sigmoid_inplace, Prediction};
+use super::activation::Prediction;
 use super::alpha::{AlphaKind, AlphaProvider};
 use crate::linalg::kernels;
 use crate::linalg::{cholesky_inverse, lu_inverse, Mat};
@@ -156,20 +156,20 @@ impl OsElm {
         self.alpha = alpha;
     }
 
-    /// Hidden activations for one sample into `out`: `G1(x·α)`.
+    /// Hidden activations for one sample into `out`: `G1(x·α)`, with the
+    /// sigmoid fused into the panel-matvec epilogue.
     pub fn hidden(&self, x: &[f32], out: &mut [f32]) {
-        self.alpha.accumulate_hidden(x, out);
-        sigmoid_inplace(out);
+        self.alpha.accumulate_hidden_sigmoid(x, out);
     }
 
     /// Hidden activations for a batch (rows of `xs`): one panel-blocked
-    /// sweep over all rows (each α panel is streamed once per batch).
+    /// sweep over all rows (each α panel is streamed once per batch, and
+    /// G1 is applied in the epilogue — no second sweep over `rows × N`).
     pub fn hidden_batch(&self, xs: &Mat) -> Mat {
         ensure_dim(xs.cols, self.cfg.n_in);
         let mut h = Mat::zeros(xs.rows, self.cfg.n_hidden);
         self.alpha
-            .accumulate_hidden_batch(&xs.data, xs.rows, &mut h.data);
-        sigmoid_inplace(&mut h.data);
+            .accumulate_hidden_batch_sigmoid(&xs.data, xs.rows, &mut h.data);
         h
     }
 
@@ -218,9 +218,8 @@ impl OsElm {
         let nh = self.cfg.n_hidden;
         let m = self.cfg.n_out;
 
-        // h = G1(x·α) — packed-α panel matvec
-        self.alpha.accumulate_hidden(x, &mut self.ws.h);
-        sigmoid_inplace(&mut self.ws.h);
+        // h = G1(x·α) — packed-α panel matvec, sigmoid fused in the epilogue
+        self.alpha.accumulate_hidden_sigmoid(x, &mut self.ws.h);
 
         // Ph = P·h ; denom = 1 + hᵀPh
         let (h, ph) = (&self.ws.h, &mut self.ws.ph);
@@ -256,8 +255,7 @@ impl OsElm {
     /// Predict one sample: logits + class + P1P2 confidence.
     pub fn predict(&mut self, x: &[f32]) -> Prediction {
         let nh = self.cfg.n_hidden;
-        self.alpha.accumulate_hidden(x, &mut self.ws.h);
-        sigmoid_inplace(&mut self.ws.h);
+        self.alpha.accumulate_hidden_sigmoid(x, &mut self.ws.h);
         self.ws.logits.fill(0.0);
         for i in 0..nh {
             kernels::axpy(self.ws.h[i], self.beta.row(i), &mut self.ws.logits);
@@ -288,31 +286,23 @@ impl OsElm {
 
     /// Run the batched predict pipeline over the rows of `xs`, invoking
     /// `f(row, prediction)` per sample. Blocks of [`PREDICT_BLOCK`]
-    /// samples share one α-panel sweep and one logits GEMM against the
-    /// preallocated workspace — no per-sample allocation, and per-sample
-    /// results are bitwise identical to [`Self::predict`].
+    /// samples share one α-panel sweep (sigmoid fused in its epilogue) and
+    /// one logits GEMM against the preallocated workspace — no per-sample
+    /// allocation, and per-sample results are bitwise identical to
+    /// [`Self::predict`].
     pub fn for_each_prediction(&mut self, xs: &Mat, mut f: impl FnMut(usize, Prediction)) {
         ensure_dim(xs.cols, self.cfg.n_in);
-        let nh = self.cfg.n_hidden;
-        let m = self.cfg.n_out;
-        let mut row = 0;
-        while row < xs.rows {
-            let take = PREDICT_BLOCK.min(xs.rows - row);
-            let hb = &mut self.ws.hblock[..take * nh];
-            self.alpha.accumulate_hidden_batch(
-                &xs.data[row * xs.cols..(row + take) * xs.cols],
-                take,
-                hb,
-            );
-            sigmoid_inplace(hb);
-            let lb = &mut self.ws.logit_block[..take * m];
-            lb.fill(0.0);
-            kernels::gemm(hb, &self.beta.data, lb, take, nh, m);
-            for i in 0..take {
-                f(row + i, Prediction::from_logits(&lb[i * m..(i + 1) * m]));
-            }
-            row += take;
-        }
+        predict_rows(
+            &self.alpha,
+            &self.beta,
+            self.cfg.n_out,
+            xs,
+            0,
+            xs.rows,
+            &mut self.ws.hblock,
+            &mut self.ws.logit_block,
+            &mut f,
+        );
     }
 
     /// Predictions for every row of `xs` (one output allocation; the
@@ -337,6 +327,109 @@ impl OsElm {
             }
         });
         correct as f64 / xs.rows as f64
+    }
+
+    /// Classification accuracy with the [`PREDICT_BLOCK`]-aligned sample
+    /// blocks sharded across `workers` scoped threads, each with its own
+    /// scratch (so `&self` suffices and shards never contend). Because the
+    /// shard boundaries are block-aligned and per-sample correctness is an
+    /// integer, the result is **bitwise identical** to [`Self::accuracy`]
+    /// for every worker count — which is what lets the fleet's evaluation
+    /// windows spend idle cores without perturbing recorded reports.
+    pub fn accuracy_par(&self, xs: &Mat, labels: &[usize], workers: usize) -> f64 {
+        assert_eq!(xs.rows, labels.len());
+        ensure_dim(xs.cols, self.cfg.n_in);
+        if xs.rows == 0 {
+            return 0.0;
+        }
+        let nh = self.cfg.n_hidden;
+        let m = self.cfg.n_out;
+        let blocks = xs.rows.div_ceil(PREDICT_BLOCK);
+        let workers = workers.max(1).min(blocks);
+        let count_range = |r0: usize, r1: usize| -> usize {
+            let mut hblock = vec![0.0f32; PREDICT_BLOCK * nh];
+            let mut logit_block = vec![0.0f32; PREDICT_BLOCK * m];
+            let mut correct = 0usize;
+            predict_rows(
+                &self.alpha,
+                &self.beta,
+                m,
+                xs,
+                r0,
+                r1,
+                &mut hblock,
+                &mut logit_block,
+                &mut |r, p: Prediction| {
+                    if p.class == labels[r] {
+                        correct += 1;
+                    }
+                },
+            );
+            correct
+        };
+        let correct: usize = if workers <= 1 {
+            count_range(0, xs.rows)
+        } else {
+            let rows_per = blocks.div_ceil(workers) * PREDICT_BLOCK;
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(workers);
+                for w in 0..workers {
+                    let r0 = w * rows_per;
+                    let r1 = ((w + 1) * rows_per).min(xs.rows);
+                    if r0 >= r1 {
+                        break;
+                    }
+                    let count_range = &count_range;
+                    handles.push(scope.spawn(move || count_range(r0, r1)));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("predict shard panicked"))
+                    .sum()
+            })
+        };
+        correct as f64 / xs.rows as f64
+    }
+}
+
+/// The blocked predict pipeline over rows `r0..r1` of `xs` with caller-
+/// provided scratch (`hblock` ≥ `PREDICT_BLOCK·N`, `logit_block` ≥
+/// `PREDICT_BLOCK·m`). Free function over the model's immutable pieces so
+/// the workspace path ([`OsElm::for_each_prediction`]) and the thread-
+/// parallel path ([`OsElm::accuracy_par`]) share one implementation — and
+/// therefore one bitwise result. `r0` must be a multiple of
+/// [`PREDICT_BLOCK`] for the block decomposition to match a from-zero
+/// walk.
+#[allow(clippy::too_many_arguments)]
+fn predict_rows<F: FnMut(usize, Prediction)>(
+    alpha: &AlphaProvider,
+    beta: &Mat,
+    n_out: usize,
+    xs: &Mat,
+    r0: usize,
+    r1: usize,
+    hblock: &mut [f32],
+    logit_block: &mut [f32],
+    f: &mut F,
+) {
+    debug_assert_eq!(r0 % PREDICT_BLOCK, 0, "shard start must be block-aligned");
+    let nh = alpha.hidden;
+    let mut row = r0;
+    while row < r1 {
+        let take = PREDICT_BLOCK.min(r1 - row);
+        let hb = &mut hblock[..take * nh];
+        alpha.accumulate_hidden_batch_sigmoid(
+            &xs.data[row * xs.cols..(row + take) * xs.cols],
+            take,
+            hb,
+        );
+        let lb = &mut logit_block[..take * n_out];
+        lb.fill(0.0);
+        kernels::gemm(hb, &beta.data, lb, take, nh, n_out);
+        for i in 0..take {
+            f(row + i, Prediction::from_logits(&lb[i * n_out..(i + 1) * n_out]));
+        }
+        row += take;
     }
 }
 
@@ -479,6 +572,29 @@ mod tests {
             assert_eq!(batch[r].class, single.class, "row {r}");
             assert_eq!(batch[r].p1.to_bits(), single.p1.to_bits(), "row {r}");
             assert_eq!(batch[r].p2.to_bits(), single.p2.to_bits(), "row {r}");
+        }
+    }
+
+    #[test]
+    fn accuracy_par_bitwise_matches_accuracy() {
+        let mut rng = Rng64::new(29);
+        let (train_xs, train_labels) = toy_data(&mut rng, 120, 12);
+        let mut m = OsElm::new(small_cfg(AlphaKind::Hash), &mut rng, 9);
+        m.init_batch(&train_xs, &train_labels).unwrap();
+        // row counts straddling block boundaries: sub-block, exact blocks,
+        // blocks + tail
+        for rows in [5usize, 32, 64, 70, 97, 120] {
+            let xs = Mat::from_vec(rows, 12, train_xs.data[..rows * 12].to_vec());
+            let labels = &train_labels[..rows];
+            let serial = m.accuracy(&xs, labels);
+            for workers in [1usize, 2, 3, 4, 16] {
+                let par = m.accuracy_par(&xs, labels, workers);
+                assert_eq!(
+                    par.to_bits(),
+                    serial.to_bits(),
+                    "rows {rows} workers {workers}"
+                );
+            }
         }
     }
 

@@ -9,6 +9,145 @@
 //! weight generation lives in [`crate::odl::xorshift`]; the generators here
 //! are infrastructure, not part of the reproduced system.
 
+/// Weyl-sequence increment of SplitMix64 (2⁶⁴/φ, odd).
+pub const GOLDEN_GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Odd multiplier that separates the `domain` coordinate of
+/// [`stream_seed`] from the `stream` coordinate (so `(domain, stream)`
+/// and `(stream, domain)` land on different keys).
+const DOMAIN_MULT: u64 = 0x9FB2_1C65_1E98_DF25;
+
+/// The SplitMix64 output finalizer: a bijective 64-bit avalanche mix.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Derive the key of stream `stream` in domain `domain` under `master`:
+/// three chained [`mix64`] rounds so that nearby masters, domains, and
+/// stream ids (0, 1, 2, …) decorrelate fully. This is the seed schedule
+/// behind every per-edge RNG stream in the fleet engine — each (edge,
+/// purpose) pair owns a statistically independent stream that can be
+/// created O(1) on any shard without a shared generator to contend on.
+#[inline]
+pub fn stream_seed(master: u64, domain: u64, stream: u64) -> u64 {
+    let a = mix64(master.wrapping_add(GOLDEN_GAMMA));
+    let b = mix64(a ^ domain.wrapping_mul(DOMAIN_MULT));
+    mix64(b ^ stream.wrapping_mul(GOLDEN_GAMMA))
+}
+
+/// The sampling surface shared by every generator in the repository.
+///
+/// Implementors provide raw 64-bit draws; all derived samplers are
+/// provided methods whose bodies are **verbatim** the historical `Rng64`
+/// formulas, so routing a call site through the trait (e.g. the generic
+/// [`crate::data::synth::SynthHar::sample`]) never changes the values an
+/// `Rng64` produces for a given state.
+pub trait RngStream {
+    fn next_u64(&mut self) -> u64;
+
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in [0, n). `n` must be > 0.
+    #[inline]
+    fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_f64() * n as f64) as usize % n
+    }
+
+    /// Standard normal via Box–Muller (second value dropped).
+    fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-12 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with mean/std.
+    fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Bernoulli(p).
+    fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T])
+    where
+        Self: Sized,
+    {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Counter-based stream generator: output *i* is `mix64(key + i·γ)` for a
+/// key derived by [`stream_seed`]. Unlike a stateful xorshift, the whole
+/// sequence is a pure function of `(master, domain, stream, i)` — streams
+/// for different edges/purposes are created independently on any worker
+/// thread, draw in any interleaving, and still produce exactly the
+/// sequence the single-threaded simulation sees. This is what makes the
+/// fleet's parallel engine bitwise-deterministic (see
+/// `coordinator::fleet`).
+#[derive(Clone, Debug)]
+pub struct CounterRng {
+    key: u64,
+    ctr: u64,
+}
+
+impl CounterRng {
+    pub fn new(master: u64, domain: u64, stream: u64) -> Self {
+        Self {
+            key: stream_seed(master, domain, stream),
+            ctr: 0,
+        }
+    }
+
+    /// Number of 64-bit draws made so far.
+    #[inline]
+    pub fn position(&self) -> u64 {
+        self.ctr
+    }
+}
+
+impl RngStream for CounterRng {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.ctr = self.ctr.wrapping_add(1);
+        mix64(self.key.wrapping_add(self.ctr.wrapping_mul(GOLDEN_GAMMA)))
+    }
+}
+
 /// SplitMix64: used to derive independent stream seeds from a master seed.
 ///
 /// Reference: Steele, Lea, Flood — "Fast Splittable Pseudorandom Number
@@ -25,11 +164,15 @@ impl SplitMix64 {
 
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
-        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
-        let mut z = self.state;
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-        z ^ (z >> 31)
+        self.state = self.state.wrapping_add(GOLDEN_GAMMA);
+        mix64(self.state)
+    }
+}
+
+impl RngStream for SplitMix64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        SplitMix64::next_u64(self)
     }
 }
 
@@ -61,70 +204,73 @@ impl Rng64 {
         x.wrapping_mul(0x2545_F491_4F6C_DD1D)
     }
 
+    // The samplers below delegate to the RngStream provided methods (one
+    // source of truth — direct call sites and generic ones draw the same
+    // values by construction); inherent wrappers are kept so the many
+    // `Rng64` call sites need no trait import.
+
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
-        (self.next_u64() >> 32) as u32
+        RngStream::next_u32(self)
     }
 
     /// Uniform in [0, 1).
     #[inline]
     pub fn next_f64(&mut self) -> f64 {
-        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+        RngStream::next_f64(self)
     }
 
     /// Uniform in [0, 1).
     #[inline]
     pub fn next_f32(&mut self) -> f32 {
-        self.next_f64() as f32
+        RngStream::next_f32(self)
     }
 
     /// Uniform in [lo, hi).
     #[inline]
     pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
-        lo + (hi - lo) * self.next_f64()
+        RngStream::uniform(self, lo, hi)
     }
 
     /// Uniform integer in [0, n). `n` must be > 0.
     #[inline]
     pub fn below(&mut self, n: usize) -> usize {
-        debug_assert!(n > 0);
-        // Lemire-style rejection-free mapping is fine here (non-crypto).
-        (self.next_f64() * n as f64) as usize % n
+        RngStream::below(self, n)
     }
 
     /// Standard normal via Box–Muller (cached second value dropped for
     /// simplicity; generation is not on any hot path).
     pub fn normal(&mut self) -> f64 {
-        loop {
-            let u1 = self.next_f64();
-            if u1 > 1e-12 {
-                let u2 = self.next_f64();
-                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
-            }
-        }
+        RngStream::normal(self)
     }
 
     /// Normal with mean/std.
     pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
-        mean + std * self.normal()
+        RngStream::normal_ms(self, mean, std)
     }
 
     /// Bernoulli(p).
     pub fn bernoulli(&mut self, p: f64) -> bool {
-        self.next_f64() < p
+        RngStream::bernoulli(self, p)
     }
 
     /// Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
-        for i in (1..xs.len()).rev() {
-            let j = self.below(i + 1);
-            xs.swap(i, j);
-        }
+        RngStream::shuffle(self, xs)
     }
 
     /// Derive a child RNG with a distinct stream (for per-trial seeding).
     pub fn fork(&mut self, tag: u64) -> Rng64 {
-        Rng64::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        Rng64::new(self.next_u64() ^ tag.wrapping_mul(GOLDEN_GAMMA))
+    }
+}
+
+impl RngStream for Rng64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        // resolves to the inherent method (inherent wins over the trait),
+        // so generic call sites draw exactly the historical stream
+        Rng64::next_u64(self)
     }
 }
 
@@ -208,5 +354,115 @@ mod tests {
         let mut b = base.fork(2);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert!(same <= 1);
+    }
+
+    #[test]
+    fn counter_rng_stream_is_stable() {
+        // Per-edge stream stability: the fleet's parallel engine relies on
+        // the whole sequence being a pure function of (master, domain,
+        // stream), so the key schedule and the first outputs are golden-
+        // pinned (cross-checked against an independent reference
+        // implementation of mix64/stream_seed). Any change here breaks
+        // bitwise reproducibility of every recorded fleet run.
+        assert_eq!(stream_seed(42, 1, 0), 0x3993_CB26_10D6_0FA2);
+        assert_eq!(stream_seed(42, 1, 1), 0x21B9_7A3B_E8B2_1F0E);
+        assert_eq!(stream_seed(42, 2, 0), 0xD124_D804_2A35_3E86);
+        assert_eq!(stream_seed(7, 1, 0), 0xC77C_A3E6_A391_5E7B);
+        let mut r = CounterRng::new(42, 1, 0);
+        assert_eq!(r.next_u64(), 0x5872_8671_4722_995D);
+        assert_eq!(r.next_u64(), 0x3288_8C35_1744_4854);
+        assert_eq!(r.next_u64(), 0x557B_8DDC_7F49_83B7);
+        assert_eq!(r.next_u64(), 0xE7BA_7E0D_A8A8_63AC);
+        assert_eq!(r.position(), 4);
+    }
+
+    #[test]
+    fn counter_rng_clone_resumes_identically() {
+        // A shard may clone a stream mid-flight (e.g. report snapshots);
+        // the clone must continue the exact sequence.
+        let mut a = CounterRng::new(3, 9, 2);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let mut b = a.clone();
+        for _ in 0..50 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn counter_rng_streams_disjoint() {
+        // Disjointness across edge ids and domains: 4 streams × 256 draws
+        // must not collide (they are distinct mix64 fibers).
+        let mut seen = std::collections::HashSet::new();
+        for domain in [1u64, 2] {
+            for stream in 0..4u64 {
+                let mut r = CounterRng::new(9, domain, stream);
+                for _ in 0..256 {
+                    assert!(seen.insert(r.next_u64()), "stream collision");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn counter_rng_f64_in_unit_interval() {
+        let mut r = CounterRng::new(11, 0, 0);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+        for n in [1usize, 3, 10] {
+            for _ in 0..100 {
+                assert!(r.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn trait_samplers_match_inherent_rng64() {
+        // Inherent Rng64 samplers delegate to the RngStream bodies, so a
+        // generic call site must draw identical values for every method
+        // (this test is the tripwire should the delegation ever fork).
+        fn generic_draws<R: RngStream>(r: &mut R) -> (u32, f64, f32, f64, usize, bool, f64, f64, Vec<u32>) {
+            let mut xs: Vec<u32> = (0..20).collect();
+            r.shuffle(&mut xs);
+            (
+                r.next_u32(),
+                r.next_f64(),
+                r.next_f32(),
+                r.uniform(-2.0, 3.0),
+                r.below(13),
+                r.bernoulli(0.4),
+                r.normal(),
+                r.normal_ms(1.0, 2.0),
+                xs,
+            )
+        }
+        let mut a = Rng64::new(77);
+        let mut xs: Vec<u32> = (0..20).collect();
+        a.shuffle(&mut xs);
+        let inherent = (
+            a.next_u32(),
+            a.next_f64(),
+            a.next_f32(),
+            a.uniform(-2.0, 3.0),
+            a.below(13),
+            a.bernoulli(0.4),
+            a.normal(),
+            a.normal_ms(1.0, 2.0),
+            xs,
+        );
+        let mut b = Rng64::new(77);
+        let via_trait = generic_draws(&mut b);
+        assert_eq!(inherent.0, via_trait.0);
+        assert_eq!(inherent.1.to_bits(), via_trait.1.to_bits());
+        assert_eq!(inherent.2.to_bits(), via_trait.2.to_bits());
+        assert_eq!(inherent.3.to_bits(), via_trait.3.to_bits());
+        assert_eq!(inherent.4, via_trait.4);
+        assert_eq!(inherent.5, via_trait.5);
+        assert_eq!(inherent.6.to_bits(), via_trait.6.to_bits());
+        assert_eq!(inherent.7.to_bits(), via_trait.7.to_bits());
+        assert_eq!(inherent.8, via_trait.8);
     }
 }

@@ -1,0 +1,89 @@
+#!/usr/bin/env bash
+# Perf regression gate: re-runs the self-measuring benches and compares
+# BENCH_hotpath.json / BENCH_fleet.json against the previous accepted run
+# (kept next to them as BENCH_<name>.prev.json). Fails on a >10 %
+# regression of any tracked metric; on success rotates the fresh numbers
+# in as the new baseline.
+#
+#   scripts/bench_check.sh                 # bench + compare + rotate
+#   SKIP_BENCH=1 scripts/bench_check.sh    # compare existing JSONs only
+#
+# Tracked metrics:
+#   hotpath: speedup_vs_baseline.{predict,train_step}_561_128_6,
+#            train_step_561_256_6             (higher is better)
+#   fleet:   speedup_loop @ 256 edges         (higher is better)
+#            seq_loop_s   @ 256 edges         (lower is better)
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
+  ODL_BENCH_FAST=1 cargo bench --bench bench_hotpath
+  ODL_BENCH_FAST=1 cargo bench --bench bench_fleet_scale
+fi
+
+python3 - <<'PY'
+import json, os, sys
+
+TOL = 0.10
+failures = []
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+def check(name, new_path, prev_path, metrics):
+    if not os.path.exists(new_path):
+        print(f"bench_check: {new_path} missing (bench not run?)")
+        sys.exit(2)
+    if not os.path.exists(prev_path):
+        print(f"bench_check: no {prev_path} — first run, accepting as baseline")
+        return
+    new, prev = load(new_path), load(prev_path)
+    for label, getter, higher_is_better in metrics:
+        try:
+            a, b = getter(prev), getter(new)
+        except Exception:
+            a = b = None
+        if a is None or b is None or a <= 0 or b <= 0:
+            print(f"bench_check: {name}:{label} not comparable, skipping")
+            continue
+        ratio = (b / a) if higher_is_better else (a / b)
+        status = "ok" if ratio >= 1.0 - TOL else "REGRESSION"
+        print(f"bench_check: {name}:{label} prev={a:.4g} new={b:.4g} [{status}]")
+        if status != "ok":
+            failures.append(f"{name}:{label}")
+
+def hot_speedup(key):
+    return lambda d: d.get("speedup_vs_baseline", {}).get(key)
+
+def fleet_metric(edges, key):
+    def get(d):
+        for row in d.get("results", []):
+            if row.get("edges") == edges:
+                return row.get(key)
+        return None
+    return get
+
+check("hotpath", "BENCH_hotpath.json", "BENCH_hotpath.prev.json", [
+    ("predict_561_128_6", hot_speedup("predict_561_128_6"), True),
+    ("train_step_561_128_6", hot_speedup("train_step_561_128_6"), True),
+    ("train_step_561_256_6", hot_speedup("train_step_561_256_6"), True),
+])
+check("fleet", "BENCH_fleet.json", "BENCH_fleet.prev.json", [
+    ("speedup_loop@256edges", fleet_metric(256, "speedup_loop"), True),
+    ("seq_loop_s@256edges", fleet_metric(256, "seq_loop_s"), False),
+])
+
+if failures:
+    print("bench_check: FAIL (>10% regression): " + ", ".join(failures))
+    sys.exit(1)
+print("bench_check: PASS")
+PY
+
+for f in BENCH_hotpath.json BENCH_fleet.json; do
+  if [[ -f "$f" ]]; then
+    cp "$f" "${f%.json}.prev.json"
+  fi
+done
+echo "bench_check: baselines rotated (*.prev.json)"

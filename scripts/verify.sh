@@ -1,15 +1,22 @@
 #!/usr/bin/env bash
 # One-command tier-1 verify + perf smoke run.
 #
-#   scripts/verify.sh            # build, test, fast hot-path bench
+#   scripts/verify.sh            # build, test, fast benches
 #
-# The bench writes rust/BENCH_hotpath.json (per-op ns, samples/s, and the
-# kernel-vs-scalar-baseline speedups measured on this machine); see
-# rust/PERF.md for how to read it.
+# The benches write rust/BENCH_hotpath.json (per-op ns, samples/s, and the
+# kernel-vs-scalar-baseline speedups measured on this machine) and
+# rust/BENCH_fleet.json (sequential vs sharded event-loop wall time); see
+# rust/PERF.md for how to read them. Use scripts/bench_check.sh to gate a
+# change on >10 % perf regressions against the previous accepted run.
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
 cargo build --release
 cargo test -q
+# the parallel-engine determinism contract, explicitly (it is part of the
+# suite above too; run again by name so a sharding regression fails loudly
+# and in isolation)
+cargo test -q --test fleet_determinism
 ODL_BENCH_FAST=1 cargo bench --bench bench_hotpath
+ODL_BENCH_FAST=1 cargo bench --bench bench_fleet_scale
