@@ -66,15 +66,14 @@ fn report(tag: &str, sc: Scenario, workers: usize) -> anyhow::Result<(f64, f64)>
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let workers = match args.iter().position(|a| a == "--workers") {
+    // 0 (or omitting the flag) means auto, per the repo-wide convention
+    let workers = odl_har::util::auto_workers(match args.iter().position(|a| a == "--workers") {
         Some(i) => args
             .get(i + 1)
             .and_then(|v| v.parse().ok())
             .ok_or_else(|| anyhow::anyhow!("--workers requires a number"))?,
-        None => std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1),
-    };
+        None => 0,
+    });
     println!(
         "fleet: 8 edges, 1 teacher, BLE loss 5 %, drift at t=200 s, horizon 900 s ({workers} workers)\n"
     );

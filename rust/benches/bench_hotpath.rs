@@ -229,9 +229,7 @@ fn main() {
     rows.push(json_row(&r_batch, Some(512.0)));
 
     // thread-parallel batched predict (row-sharded, bitwise identical)
-    let nworkers = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(2);
+    let nworkers = odl_har::util::auto_workers(0);
     let r_batch_par = bench(
         &format!("native accuracy_par/{nworkers} 512 (561/128/6)"),
         3,

@@ -1,0 +1,144 @@
+//! Scenario-sweep benchmark: a TOML-shaped grid (seeds × thetas × edge
+//! counts) run the naive way — one full `Fleet::new` per cell, back to
+//! back — vs the memoized `coordinator::sweep` engine (shared artifacts
+//! fitted once per data config, cells fanned over the worker pool).
+//!
+//! Before timing anything it asserts the engine contracts:
+//!
+//! * memoization actually engages (`artifact_builds == 1`,
+//!   `artifact_hits == cells − 1` for the pinned data seed);
+//! * every memoized cell report is **bitwise identical** to the
+//!   individually constructed fleet for the same scenario.
+//!
+//! Results go to `BENCH_sweep.json` (`ODL_BENCH_SWEEP_JSON` overrides);
+//! `scripts/bench_check.sh` gates `memo_speedup` regressions > 10 %.
+
+use odl_har::coordinator::fleet::{DetectorKind, Fleet, FleetConfig, Scenario};
+use odl_har::coordinator::sweep::{run_sweep, SweepSpec};
+use odl_har::data::SynthConfig;
+use odl_har::util::bench::{bench, fast_mode};
+use odl_har::util::json::{obj, Json};
+
+fn base_scenario() -> Scenario {
+    Scenario {
+        n_edges: 4,
+        n_hidden: 24,
+        event_period_s: 1.0,
+        horizon_s: if fast_mode() { 60.0 } else { 150.0 },
+        drift_at_s: 20.0,
+        train_target: 40,
+        data_seed: Some(0x5EED_CAFE),
+        synth: SynthConfig {
+            n_features: 32,
+            n_classes: 4,
+            n_subjects: 30,
+            samples_per_cell: 5,
+            proto_sigma: 1.1,
+            confuse_frac: 0.04,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn spec(workers: usize) -> SweepSpec {
+    SweepSpec {
+        base: base_scenario(),
+        seeds: vec![1, 2],
+        thetas: vec![None, Some(0.2)],
+        edge_counts: vec![4, 8],
+        detectors: vec![DetectorKind::Oracle],
+        workers,
+        record_pca: false,
+    }
+}
+
+fn run_naive(spec: &SweepSpec) -> Vec<odl_har::coordinator::FleetReport> {
+    spec.cells()
+        .into_iter()
+        .map(|(cell, sc)| {
+            Fleet::new(FleetConfig {
+                scenario: sc,
+                seed: cell.seed,
+            })
+            .unwrap()
+            .run()
+        })
+        .collect()
+}
+
+fn main() {
+    let workers = odl_har::util::auto_workers(0);
+    let spec = spec(workers);
+    let n_cells = spec.cells().len();
+    println!(
+        "sweep grid: {n_cells} cells, memoized engine with {workers} workers vs naive per-cell construction"
+    );
+
+    // contract gates before timing
+    let outcome = run_sweep(&spec).expect("sweep failed");
+    assert_eq!(outcome.stats.cells, n_cells);
+    assert_eq!(
+        outcome.stats.artifact_builds, 1,
+        "pinned data seed must fit the data exactly once"
+    );
+    assert!(
+        outcome.stats.artifact_hits == n_cells - 1 && outcome.stats.artifact_hits > 0,
+        "memoization must hit every remaining cell (hits {})",
+        outcome.stats.artifact_hits
+    );
+    let naive_reports = run_naive(&spec);
+    for ((cell, memo), naive) in outcome.reports.iter().zip(&naive_reports) {
+        assert!(
+            memo.bitwise_eq(naive),
+            "cell {} diverged from the individually constructed fleet",
+            cell.index
+        );
+    }
+    println!(
+        "  contracts hold: builds {}, hits {}, all {} reports bitwise equal",
+        outcome.stats.artifact_builds, outcome.stats.artifact_hits, n_cells
+    );
+
+    let iters = if fast_mode() { 3 } else { 5 };
+    let r_naive = bench(&format!("sweep naive {n_cells:>2} cells"), 1, iters, || {
+        std::hint::black_box(run_naive(&spec));
+    });
+    let r_memo = bench(
+        &format!("sweep memo/{workers} {n_cells:>2} cells"),
+        1,
+        iters,
+        || {
+            std::hint::black_box(run_sweep(&spec).expect("sweep failed"));
+        },
+    );
+    let memo_speedup = r_naive.mean_s / r_memo.mean_s.max(1e-9);
+    println!(
+        "  -> grid {memo_speedup:.2}x ({:.3}s -> {:.3}s) with memoized artifacts + {workers} workers",
+        r_naive.mean_s, r_memo.mean_s
+    );
+
+    let out = obj(vec![
+        ("schema", Json::Str("bench_sweep/v1".into())),
+        ("fast_mode", Json::Bool(fast_mode())),
+        ("workers", Json::Num(workers as f64)),
+        ("cells", Json::Num(n_cells as f64)),
+        (
+            "artifact_builds",
+            Json::Num(outcome.stats.artifact_builds as f64),
+        ),
+        (
+            "artifact_hits",
+            Json::Num(outcome.stats.artifact_hits as f64),
+        ),
+        ("naive_s", Json::Num(r_naive.mean_s)),
+        ("memo_s", Json::Num(r_memo.mean_s)),
+        ("memo_speedup", Json::Num(memo_speedup)),
+    ]);
+    let path =
+        std::env::var("ODL_BENCH_SWEEP_JSON").unwrap_or_else(|_| "BENCH_sweep.json".into());
+    match std::fs::write(&path, out.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

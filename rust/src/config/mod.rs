@@ -8,13 +8,14 @@
 pub mod toml;
 
 use crate::coordinator::fleet::{DetectorKind, Scenario};
+use crate::coordinator::sweep::SweepSpec;
 use crate::coordinator::ChannelConfig;
 use crate::data::SynthConfig;
 use crate::exp::protocol::{ProtocolConfig, PruningSpec, Variant};
 use crate::odl::AlphaKind;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
-use toml::TomlDoc;
+use toml::{TomlDoc, Value as TomlValue};
 
 /// Typed experiment configuration (drives `odl-har run`).
 #[derive(Clone, Debug)]
@@ -98,15 +99,25 @@ fn apply_synth(synth: &mut SynthConfig, doc: &TomlDoc) -> Result<()> {
     Ok(())
 }
 
-/// Fleet scenario config (drives `odl-har fleet`).
-pub fn fleet_from_file(path: &Path) -> Result<(Scenario, u64)> {
+/// Fleet scenario config (drives `odl-har fleet`): `(scenario, seed,
+/// workers)`. `workers = 0` in the TOML means "auto" — the caller resolves
+/// it at startup via [`crate::util::auto_workers`]; the key defaults to 1
+/// (the historical sequential run).
+pub fn fleet_from_file(path: &Path) -> Result<(Scenario, u64, usize)> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading config {}", path.display()))?;
     fleet_from_str(&text)
 }
 
-pub fn fleet_from_str(text: &str) -> Result<(Scenario, u64)> {
+pub fn fleet_from_str(text: &str) -> Result<(Scenario, u64, usize)> {
     let doc = TomlDoc::parse(text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+    scenario_from_doc(&doc)
+}
+
+/// Parse the `[fleet]` / `[pruning]` / `[teacher]` / `[channel]` /
+/// `[data]` sections into a scenario (shared by the fleet and sweep
+/// configs).
+fn scenario_from_doc(doc: &TomlDoc) -> Result<(Scenario, u64, usize)> {
     let mut sc = Scenario::default();
     if let Some(v) = doc.get_int("fleet", "n_edges") {
         sc.n_edges = v as usize;
@@ -127,11 +138,8 @@ pub fn fleet_from_str(text: &str) -> Result<(Scenario, u64)> {
         sc.train_target = v as usize;
     }
     if let Some(v) = doc.get_str("fleet", "detector") {
-        sc.detector = match v {
-            "oracle" => DetectorKind::Oracle,
-            "centroid" => DetectorKind::Centroid,
-            other => bail!("unknown fleet.detector '{other}'"),
-        };
+        sc.detector = DetectorKind::parse(v)
+            .ok_or_else(|| anyhow::anyhow!("unknown fleet.detector '{v}'"))?;
     }
     if let Some(v) = doc.get_float("fleet", "eval_period_s") {
         sc.eval_period_s = v;
@@ -141,6 +149,9 @@ pub fn fleet_from_str(text: &str) -> Result<(Scenario, u64)> {
     }
     if let Some(v) = doc.get_bool("fleet", "eval_costs_power") {
         sc.eval_costs_power = v;
+    }
+    if let Some(v) = doc.get_int("fleet", "data_seed") {
+        sc.data_seed = Some(v as u64);
     }
     if let Some(v) = doc.get_float("pruning", "theta") {
         sc.fixed_theta = Some(v as f32);
@@ -156,9 +167,110 @@ pub fn fleet_from_str(text: &str) -> Result<(Scenario, u64)> {
         ch.max_retries = v as u32;
     }
     sc.channel = ch;
-    apply_synth(&mut sc.synth, &doc)?;
+    apply_synth(&mut sc.synth, doc)?;
     let seed = doc.get_int("fleet", "seed").unwrap_or(1) as u64;
-    Ok((sc, seed))
+    // negatives clamp to 0 = auto rather than wrapping through `as usize`
+    let workers = doc.get_int("fleet", "workers").unwrap_or(1).max(0) as usize;
+    Ok((sc, seed, workers))
+}
+
+/// Scenario-sweep config (drives `odl-har sweep`): the `[sweep]` section
+/// declares the grid axes over a `[fleet]`-section base scenario.
+///
+/// ```toml
+/// [sweep]
+/// seeds = [1, 2, 3]
+/// thetas = ["auto", 0.1, 0.2]   # "auto" = the auto-θ ladder
+/// edge_counts = [8, 64]
+/// detectors = ["oracle", "centroid"]
+/// workers = 0                   # cross-cell workers; 0 = auto
+/// record_pca = false
+/// ```
+///
+/// Omitted axes default to the base scenario's single value. Pin
+/// `[fleet] data_seed` to share one provisioning-artifact build across
+/// every simulation seed in the grid.
+pub fn sweep_from_file(path: &Path) -> Result<SweepSpec> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading config {}", path.display()))?;
+    sweep_from_str(&text)
+}
+
+/// A `[sweep]` axis key: absent is fine (the axis defaults), but a
+/// present key MUST be an array — a scalar would otherwise be silently
+/// ignored by `get_arr` and collapse the declared grid axis.
+fn sweep_axis<'a>(doc: &'a TomlDoc, key: &str) -> Result<Option<&'a [TomlValue]>> {
+    match doc.get("sweep", key) {
+        None => Ok(None),
+        Some(TomlValue::Arr(items)) => Ok(Some(items)),
+        Some(other) => bail!("sweep.{key} must be an array (e.g. [1, 2]), got {other:?}"),
+    }
+}
+
+pub fn sweep_from_str(text: &str) -> Result<SweepSpec> {
+    let doc = TomlDoc::parse(text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+    let (base, seed, _fleet_workers) = scenario_from_doc(&doc)?;
+    let mut spec = SweepSpec {
+        seeds: vec![seed],
+        thetas: vec![base.fixed_theta],
+        edge_counts: vec![base.n_edges],
+        detectors: vec![base.detector],
+        workers: doc.get_int("sweep", "workers").unwrap_or(0).max(0) as usize,
+        record_pca: doc.get_bool("sweep", "record_pca").unwrap_or(false),
+        base,
+    };
+    if let Some(items) = sweep_axis(&doc, "seeds")? {
+        spec.seeds = items
+            .iter()
+            .map(|v| match v {
+                TomlValue::Int(i) => Ok(*i as u64),
+                other => bail!("sweep.seeds entries must be integers, got {other:?}"),
+            })
+            .collect::<Result<_>>()?;
+    }
+    if let Some(items) = sweep_axis(&doc, "thetas")? {
+        spec.thetas = items
+            .iter()
+            .map(|v| match v {
+                TomlValue::Float(f) => Ok(Some(*f as f32)),
+                TomlValue::Int(i) => Ok(Some(*i as f32)),
+                TomlValue::Str(s) if s == "auto" => Ok(None),
+                other => bail!(
+                    "sweep.thetas entries must be numbers or \"auto\", got {other:?}"
+                ),
+            })
+            .collect::<Result<_>>()?;
+    }
+    if let Some(items) = sweep_axis(&doc, "edge_counts")? {
+        spec.edge_counts = items
+            .iter()
+            .map(|v| match v {
+                TomlValue::Int(i) if *i > 0 => Ok(*i as usize),
+                other => bail!(
+                    "sweep.edge_counts entries must be positive integers, got {other:?}"
+                ),
+            })
+            .collect::<Result<_>>()?;
+    }
+    if let Some(items) = sweep_axis(&doc, "detectors")? {
+        spec.detectors = items
+            .iter()
+            .map(|v| match v {
+                TomlValue::Str(s) => DetectorKind::parse(s).ok_or_else(|| {
+                    anyhow::anyhow!("unknown sweep.detectors entry '{s}'")
+                }),
+                other => bail!("sweep.detectors entries must be strings, got {other:?}"),
+            })
+            .collect::<Result<_>>()?;
+    }
+    ensure!(
+        !spec.seeds.is_empty()
+            && !spec.thetas.is_empty()
+            && !spec.edge_counts.is_empty()
+            && !spec.detectors.is_empty(),
+        "sweep grid axes must be non-empty"
+    );
+    Ok(spec)
 }
 
 #[cfg(test)]
@@ -218,15 +330,79 @@ n_edges = 8
 horizon_s = 1200.0
 detector = "centroid"
 seed = 42
+data_seed = 7
+workers = 0
 
 [channel]
 loss_prob = 0.1
 "#;
-        let (sc, seed) = fleet_from_str(text).unwrap();
+        let (sc, seed, workers) = fleet_from_str(text).unwrap();
         assert_eq!(sc.n_edges, 8);
         assert_eq!(sc.detector, DetectorKind::Centroid);
         assert!((sc.channel.loss_prob - 0.1).abs() < 1e-12);
+        assert_eq!(sc.data_seed, Some(7));
         assert_eq!(seed, 42);
+        assert_eq!(workers, 0, "0 stays 0 here; main resolves auto at startup");
+    }
+
+    #[test]
+    fn fleet_workers_default_to_one_and_data_seed_to_derived() {
+        let (sc, _, workers) = fleet_from_str("[fleet]\nn_edges = 2\n").unwrap();
+        assert_eq!(workers, 1);
+        assert_eq!(sc.data_seed, None);
+    }
+
+    #[test]
+    fn sweep_config_parses_grid_axes() {
+        let text = r#"
+[fleet]
+n_edges = 4
+seed = 9
+data_seed = 123
+
+[sweep]
+seeds = [1, 2]
+thetas = ["auto", 0.2]
+edge_counts = [4, 8]
+detectors = ["oracle", "centroid"]
+workers = 3
+record_pca = true
+"#;
+        let spec = sweep_from_str(text).unwrap();
+        assert_eq!(spec.seeds, vec![1, 2]);
+        assert_eq!(spec.thetas, vec![None, Some(0.2)]);
+        assert_eq!(spec.edge_counts, vec![4, 8]);
+        assert_eq!(
+            spec.detectors,
+            vec![DetectorKind::Oracle, DetectorKind::Centroid]
+        );
+        assert_eq!(spec.workers, 3);
+        assert!(spec.record_pca);
+        assert_eq!(spec.base.data_seed, Some(123));
+        assert_eq!(spec.cells().len(), 16);
+    }
+
+    #[test]
+    fn sweep_axes_default_to_base_scenario() {
+        let spec = sweep_from_str("[fleet]\nn_edges = 6\nseed = 4\n").unwrap();
+        assert_eq!(spec.seeds, vec![4]);
+        assert_eq!(spec.thetas, vec![None]);
+        assert_eq!(spec.edge_counts, vec![6]);
+        assert_eq!(spec.detectors, vec![DetectorKind::Oracle]);
+        assert_eq!(spec.workers, 0, "sweep default is auto");
+        assert_eq!(spec.cells().len(), 1);
+    }
+
+    #[test]
+    fn sweep_rejects_bad_axis_entries() {
+        assert!(sweep_from_str("[sweep]\nthetas = [\"nope\"]\n").is_err());
+        assert!(sweep_from_str("[sweep]\ndetectors = [\"kalman\"]\n").is_err());
+        assert!(sweep_from_str("[sweep]\nedge_counts = [0]\n").is_err());
+        assert!(sweep_from_str("[sweep]\nseeds = []\n").is_err());
+        // a present-but-scalar axis must error, not silently collapse the
+        // grid to the base scenario's single value
+        assert!(sweep_from_str("[sweep]\nseeds = 5\n").is_err());
+        assert!(sweep_from_str("[sweep]\nedge_counts = 64\n").is_err());
     }
 
     #[test]

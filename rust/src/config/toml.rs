@@ -1,6 +1,8 @@
 //! Minimal TOML-subset parser: `[section]`, `key = value` (string, int,
-//! float, bool), `#` comments. Enough for `configs/*.toml`; no arrays,
-//! tables-in-arrays, or multi-line strings.
+//! float, bool, single-line scalar arrays like `[1, 2, 3]` or
+//! `["a", "b"]`), `#` comments. Enough for `configs/*.toml`; no nested
+//! arrays, tables-in-arrays, multi-line strings/arrays, or commas inside
+//! quoted array elements.
 
 use std::collections::BTreeMap;
 
@@ -16,6 +18,8 @@ pub enum Value {
     Int(i64),
     Float(f64),
     Bool(bool),
+    /// Single-line array of scalars (the sweep grid axes).
+    Arr(Vec<Value>),
 }
 
 impl TomlDoc {
@@ -81,6 +85,13 @@ impl TomlDoc {
             _ => None,
         }
     }
+
+    pub fn get_arr(&self, section: &str, key: &str) -> Option<&[Value]> {
+        match self.get(section, key)? {
+            Value::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -97,6 +108,18 @@ fn strip_comment(line: &str) -> &str {
 }
 
 fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array (arrays must be single-line)".to_string())?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
     if let Some(rest) = s.strip_prefix('"') {
         let inner = rest
             .strip_suffix('"')
@@ -139,6 +162,32 @@ mod tests {
         let doc = TomlDoc::parse("# header\n[s]\nk = 1 # trailing\n\nj = \"a#b\"\n").unwrap();
         assert_eq!(doc.get_int("s", "k"), Some(1));
         assert_eq!(doc.get_str("s", "j"), Some("a#b"));
+    }
+
+    #[test]
+    fn parses_scalar_arrays() {
+        let doc = TomlDoc::parse(
+            "[s]\nseeds = [1, 2, 3]\nthetas = [0.1, \"auto\"]\nempty = []\n",
+        )
+        .unwrap();
+        let seeds = doc.get_arr("s", "seeds").unwrap();
+        assert_eq!(seeds, &[Value::Int(1), Value::Int(2), Value::Int(3)]);
+        let thetas = doc.get_arr("s", "thetas").unwrap();
+        assert_eq!(
+            thetas,
+            &[Value::Float(0.1), Value::Str("auto".to_string())]
+        );
+        assert_eq!(doc.get_arr("s", "empty").unwrap().len(), 0);
+        // scalar accessors see arrays as a type mismatch
+        assert!(doc.get_int("s", "seeds").is_none());
+        // and non-arrays are not arrays
+        let doc = TomlDoc::parse("[s]\nk = 1\n").unwrap();
+        assert!(doc.get_arr("s", "k").is_none());
+    }
+
+    #[test]
+    fn rejects_unterminated_array() {
+        assert!(TomlDoc::parse("[s]\nk = [1, 2\n").is_err());
     }
 
     #[test]

@@ -35,20 +35,39 @@
 //! `tests/fleet_determinism.rs` and re-checked by `bench_fleet_scale`
 //! before it times anything. `run_threaded()` remains the live-system
 //! flavour over std mpsc channels (event counts instead of virtual time).
+//!
+//! # Sharded provisioning
+//!
+//! Construction is staged the same way the event loop is:
+//!
+//! 1. **Shared artifacts** ([`ProvisionArtifacts`]): the synthetic pool,
+//!    the in-distribution split, the standardization stats (and optional
+//!    PCA summary) are a pure function of `(synth config, data seed)` —
+//!    built once, hashed by [`ProvisionArtifacts::data_key`], and shared
+//!    read-only by every fleet whose data config matches (the
+//!    [`super::sweep`] engine memoizes them across a scenario grid).
+//! 2. **Per-edge provisioning**: each edge's model build + `init_batch`
+//!    reads only the shared artifacts and its own id, so
+//!    [`Fleet::new_parallel`] shards edge construction over scoped
+//!    worker threads on per-edge seed streams
+//!    (`stream_seed(seed, PROVISION, edge)`) — bitwise identical to the
+//!    sequential [`Fleet::new`] for every worker count, by the same
+//!    no-shared-mutable-state argument as the event loop.
 
 use super::channel::{Channel, ChannelConfig};
 use super::edge::{EdgeConfig, EdgeDevice, Mode, StepAction};
 use super::metrics::{EdgeMetrics, FleetReport};
 use super::teacher::Teacher;
+use crate::data::pca::Pca;
 use crate::data::synth::{SynthConfig, SynthHar};
-use crate::data::{Standardizer, HELD_OUT_SUBJECTS};
+use crate::data::{Dataset, Standardizer, HELD_OUT_SUBJECTS};
 use crate::drift::{CentroidDetector, DriftDetector, OracleDetector};
 use crate::hw::{CycleModel, PowerModel, PowerState};
 use crate::linalg::Mat;
 use crate::odl::{AlphaKind, OsElmConfig};
 use crate::pruning::{Metric, Pruner, ThetaPolicy};
-use crate::util::rng::{stream_seed, CounterRng, Rng64, RngStream};
-use anyhow::Result;
+use crate::util::rng::{mix64, stream_seed, CounterRng, Rng64, RngStream, GOLDEN_GAMMA};
+use anyhow::{ensure, Result};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -64,6 +83,11 @@ mod domain {
     pub const CHANNEL: u64 = 0xC4A7;
     /// Teacher label-noise draws.
     pub const TEACHER: u64 = 0x7EAC;
+    /// Per-edge provisioning streams (model construction). Construction
+    /// draws nothing from these under `AlphaKind::Hash` (the fleet's α
+    /// scheme), but giving every edge its own stream keeps the
+    /// provisioning shards independent if a future α kind samples here.
+    pub const PROVISION: u64 = 0xB007;
 }
 
 /// Drift-detector selection for the scenario.
@@ -73,6 +97,26 @@ pub enum DetectorKind {
     Oracle,
     /// Organic: the centroid detector must notice the shift by itself.
     Centroid,
+}
+
+impl DetectorKind {
+    /// The canonical config/results-file name (the single source for the
+    /// TOML parsers and sweep rows).
+    pub fn name(self) -> &'static str {
+        match self {
+            DetectorKind::Oracle => "oracle",
+            DetectorKind::Centroid => "centroid",
+        }
+    }
+
+    /// Inverse of [`Self::name`]; `None` for unknown names.
+    pub fn parse(name: &str) -> Option<DetectorKind> {
+        match name {
+            "oracle" => Some(DetectorKind::Oracle),
+            "centroid" => Some(DetectorKind::Centroid),
+            _ => None,
+        }
+    }
 }
 
 /// Fleet scenario description.
@@ -106,6 +150,12 @@ pub struct Scenario {
     /// edge core). Off by default so the windows stay pure telemetry and
     /// seeded trajectories keep their historical energy books.
     pub eval_costs_power: bool,
+    /// Seed of the data-generation stream (pool, standardizer, PCA).
+    /// `None` (the default, and every historical trajectory) derives it
+    /// from the fleet seed as `seed ^ 0xDA7A`; a sweep pins it explicitly
+    /// so cells that differ only in simulation seed share one
+    /// [`ProvisionArtifacts`] build.
+    pub data_seed: Option<u64>,
 }
 
 impl Default for Scenario {
@@ -125,6 +175,120 @@ impl Default for Scenario {
             eval_period_s: 0.0,
             eval_samples: 64,
             eval_costs_power: false,
+            data_seed: None,
+        }
+    }
+}
+
+/// Salt for the PCA power-iteration stream inside an artifact build.
+const PCA_SEED_SALT: u64 = 0x9CA1;
+
+/// The provisioning artifacts every edge of a fleet shares read-only: the
+/// calibrated generator, the standardized in-distribution pool (pre-
+/// shuffle — each fleet derives its own seed-keyed row order from it),
+/// the standardization stats, the in-distribution subject list, and an
+/// optional 2-component PCA summary of the pool. All of it is a pure
+/// function of `(synth config, data seed)`, hashed into [`Self::key`] —
+/// the memoization key the scenario-sweep engine uses to fit the data
+/// once per data config instead of once per grid cell.
+pub struct ProvisionArtifacts {
+    /// The resolved data-stream seed this build used.
+    pub data_seed: u64,
+    /// `data_key` of the `(synth, data_seed)` pair that produced this.
+    pub key: u64,
+    pub generator: SynthHar,
+    pub standardizer: Standardizer,
+    /// Standardized in-distribution pool, in generation order (unshuffled).
+    pub train: Dataset,
+    /// 1-based in-distribution subject ids (pre-drift assignments).
+    pub in_subjects: Vec<usize>,
+    /// 2-component PCA of the standardized pool (telemetry fingerprint;
+    /// costs one covariance build, so it is opt-in).
+    pub pca: Option<Pca>,
+}
+
+impl ProvisionArtifacts {
+    /// The data seed a scenario resolves to under fleet seed `seed`.
+    pub fn effective_data_seed(sc: &Scenario, seed: u64) -> u64 {
+        sc.data_seed.unwrap_or(seed ^ 0xDA7A)
+    }
+
+    /// Memoization key: a mix64 fold over every field of the synth config
+    /// plus the resolved data seed. Two scenarios with equal keys generate
+    /// bitwise-identical pools, standardizers, and PCA summaries.
+    pub fn data_key(sc: &Scenario, seed: u64) -> u64 {
+        // exhaustive destructuring (no `..` rest pattern): adding a
+        // SynthConfig field without extending this hash is a compile
+        // error, not a silent memoization collision
+        let SynthConfig {
+            n_features,
+            n_classes,
+            n_subjects,
+            samples_per_cell,
+            variation_rank,
+            subject_sigma,
+            drift_scale,
+            noise_sigma,
+            proto_sigma,
+            variation_sigma,
+            confuse_frac,
+            confuse_blend,
+        } = &sc.synth;
+        let fold = |acc: u64, v: u64| mix64(acc ^ v.wrapping_mul(GOLDEN_GAMMA));
+        let mut k = 0x0DA7A_u64;
+        for v in [
+            *n_features as u64,
+            *n_classes as u64,
+            *n_subjects as u64,
+            *samples_per_cell as u64,
+            *variation_rank as u64,
+            subject_sigma.to_bits(),
+            drift_scale.to_bits(),
+            noise_sigma.to_bits(),
+            proto_sigma.to_bits(),
+            variation_sigma.to_bits(),
+            confuse_frac.to_bits(),
+            confuse_blend.0.to_bits(),
+            confuse_blend.1.to_bits(),
+            Self::effective_data_seed(sc, seed),
+        ] {
+            k = fold(k, v);
+        }
+        k
+    }
+
+    /// Fit the shared artifacts for `(scenario.synth, data seed)`. The
+    /// generation sequence is verbatim the historical `Fleet::new`
+    /// preamble (same `Rng64` stream, same filter → fit → apply order), so
+    /// a fleet built from these artifacts is bitwise identical to one
+    /// built the old monolithic way.
+    pub fn build(sc: &Scenario, seed: u64, with_pca: bool) -> ProvisionArtifacts {
+        let data_seed = Self::effective_data_seed(sc, seed);
+        let mut data_rng = Rng64::new(data_seed);
+        let generator = SynthHar::new(sc.synth.clone(), &mut data_rng);
+
+        // Provisioning pool: in-distribution subjects only.
+        let pool = generator.generate(&mut data_rng);
+        let in_dist = pool.filter(|_, s| !HELD_OUT_SUBJECTS.contains(&s));
+        let standardizer = Standardizer::fit(&in_dist.xs);
+        let mut train = in_dist;
+        standardizer.apply(&mut train.xs);
+
+        let in_subjects: Vec<usize> = (1..=sc.synth.n_subjects)
+            .filter(|s| !HELD_OUT_SUBJECTS.contains(s))
+            .collect();
+
+        let pca = with_pca
+            .then(|| Pca::fit(&train.xs, 2, &mut Rng64::new(data_seed ^ PCA_SEED_SALT)));
+
+        ProvisionArtifacts {
+            data_seed,
+            key: Self::data_key(sc, seed),
+            generator,
+            standardizer,
+            train,
+            in_subjects,
+            pca,
         }
     }
 }
@@ -380,97 +544,172 @@ impl EdgeSim {
     }
 }
 
-/// The simulator.
+/// Build one fully provisioned [`EdgeSim`] shard. Pure function of the
+/// scenario, the fleet seed, the edge id, and the (shuffled) provisioning
+/// pool — the invariant that makes sharded construction bitwise equal to
+/// the sequential walk for any worker partitioning.
+fn build_edge_sim(
+    sc: &Scenario,
+    seed: u64,
+    id: usize,
+    train: &Dataset,
+    in_subjects: &[usize],
+) -> Result<EdgeSim> {
+    let model = OsElmConfig {
+        n_in: sc.synth.n_features,
+        n_hidden: sc.n_hidden,
+        n_out: sc.synth.n_classes,
+        alpha: AlphaKind::Hash,
+        ..Default::default()
+    };
+    let policy = match sc.fixed_theta {
+        Some(t) => ThetaPolicy::Fixed(t),
+        None => ThetaPolicy::auto(),
+    };
+    let detector: Box<dyn DriftDetector + Send> = match sc.detector {
+        DetectorKind::Oracle => Box::new(OracleDetector::new()),
+        DetectorKind::Centroid => Box::new(CentroidDetector::new(sc.synth.n_features)),
+    };
+    let warmup = crate::pruning::warmup_for(sc.n_hidden).min(sc.train_target / 2);
+    // Per-edge provisioning stream. AlphaKind::Hash draws nothing here
+    // (α comes from the 16-bit xorshift keyed by hash_seed), so this
+    // matches the historical shared-rng construction bit for bit while
+    // keeping shards independent.
+    let mut edge_rng = Rng64::new(stream_seed(seed, domain::PROVISION, id as u64));
+    let mut edge = EdgeDevice::new(
+        id,
+        EdgeConfig {
+            model,
+            hash_seed: (seed as u16).wrapping_add(id as u16 * 31),
+            pruner: Pruner::new(policy, Metric::P1P2, warmup),
+            detector,
+            train_target: sc.train_target,
+        },
+        &mut edge_rng,
+    );
+    edge.provision(&train.xs, &train.labels)?;
+    let pre = in_subjects[id % in_subjects.len()];
+    let post = HELD_OUT_SUBJECTS[id % HELD_OUT_SUBJECTS.len()];
+    let eid = id as u64;
+    let mut sim = EdgeSim {
+        edge,
+        metrics: EdgeMetrics::default(),
+        subjects: (pre, post),
+        rng: CounterRng::new(seed, domain::SENSE, eid),
+        eval_rng: CounterRng::new(seed, domain::EVAL, eid),
+        channel: Channel::new(sc.channel.clone(), stream_seed(seed, domain::CHANNEL, eid)),
+        teacher: Teacher::oracle(sc.teacher_error, stream_seed(seed, domain::TEACHER, eid)),
+        queue: BinaryHeap::new(),
+        seq: 0,
+        now: 0.0,
+        drifted: false,
+    };
+    // stagger edges across the period; seed the eval cadence
+    let phase = sc.event_period_s * (id as f64 / sc.n_edges.max(1) as f64);
+    sim.schedule(phase, Event::Sense);
+    if sc.eval_period_s > 0.0 {
+        sim.schedule(sc.eval_period_s, Event::Eval);
+    }
+    Ok(sim)
+}
+
+/// The simulator. Holds only what the event loop needs from the
+/// provisioning artifacts (generator, standardizer, resolved data seed —
+/// a few hundred KB at most); the training pool itself is dropped when
+/// construction finishes, exactly like the pre-staging code.
 pub struct Fleet {
     pub cfg: FleetConfig,
     sims: Vec<EdgeSim>,
     generator: SynthHar,
     standardizer: Standardizer,
+    data_seed: u64,
     power: PowerModel,
     cycles: CycleModel,
 }
 
 impl Fleet {
+    /// Sequential construction — defined as [`Fleet::new_parallel`] with
+    /// one provisioning worker, so the sequential and sharded paths are
+    /// one code path (the same by-construction argument `run` makes for
+    /// the event loop).
     pub fn new(cfg: FleetConfig) -> Result<Fleet> {
+        Fleet::new_parallel(cfg, 1)
+    }
+
+    /// Construct the fleet with per-edge provisioning (`OsElm::init_batch`
+    /// + `EdgeDevice::provision`) sharded over up to `provision_workers`
+    /// scoped threads. The shared artifacts are built once on the calling
+    /// thread; every edge build is a pure function of `(scenario, seed,
+    /// id, shuffled pool)`, so the resulting fleet — and every report it
+    /// produces — is **bitwise identical** to sequential construction for
+    /// every worker count (asserted in `tests/fleet_determinism.rs`).
+    pub fn new_parallel(cfg: FleetConfig, provision_workers: usize) -> Result<Fleet> {
+        let artifacts = ProvisionArtifacts::build(&cfg.scenario, cfg.seed, false);
+        // the pool inside `artifacts` is dropped here, right after the
+        // edges are provisioned from it
+        Fleet::with_artifacts(cfg, &artifacts, provision_workers)
+    }
+
+    /// Construct from pre-built shared artifacts (the sweep engine's
+    /// memoized path — it keeps them in `Arc`s and lends them out per
+    /// cell). `artifacts.key` must match the scenario's
+    /// [`ProvisionArtifacts::data_key`] under `cfg.seed`. The fleet
+    /// copies out only the generator/standardizer; it never retains the
+    /// pool.
+    pub fn with_artifacts(
+        cfg: FleetConfig,
+        artifacts: &ProvisionArtifacts,
+        provision_workers: usize,
+    ) -> Result<Fleet> {
         let sc = &cfg.scenario;
+        ensure!(
+            artifacts.key == ProvisionArtifacts::data_key(sc, cfg.seed),
+            "provisioning artifacts were built for a different data config"
+        );
+        // The per-fleet row order: same stream and draw sequence as the
+        // historical in-place shuffle.
         let mut rng = Rng64::new(cfg.seed);
-        let mut data_rng = Rng64::new(cfg.seed ^ 0xDA7A);
-        let generator = SynthHar::new(sc.synth.clone(), &mut data_rng);
+        let train = artifacts.train.shuffled(&mut rng);
 
-        // Provisioning pool: in-distribution subjects only.
-        let pool = generator.generate(&mut data_rng);
-        let in_dist = pool.filter(|_, s| !HELD_OUT_SUBJECTS.contains(&s));
-        let standardizer = Standardizer::fit(&in_dist.xs);
-        let mut train = in_dist;
-        standardizer.apply(&mut train.xs);
-        train.shuffle(&mut rng);
-
-        let in_subjects: Vec<usize> = (1..=sc.synth.n_subjects)
-            .filter(|s| !HELD_OUT_SUBJECTS.contains(s))
-            .collect();
-
-        let mut sims = Vec::with_capacity(sc.n_edges);
-        for id in 0..sc.n_edges {
-            let model = OsElmConfig {
-                n_in: sc.synth.n_features,
-                n_hidden: sc.n_hidden,
-                n_out: sc.synth.n_classes,
-                alpha: AlphaKind::Hash,
-                ..Default::default()
-            };
-            let policy = match sc.fixed_theta {
-                Some(t) => ThetaPolicy::Fixed(t),
-                None => ThetaPolicy::auto(),
-            };
-            let detector: Box<dyn DriftDetector + Send> = match sc.detector {
-                DetectorKind::Oracle => Box::new(OracleDetector::new()),
-                DetectorKind::Centroid => {
-                    Box::new(CentroidDetector::new(sc.synth.n_features))
-                }
-            };
-            let warmup = crate::pruning::warmup_for(sc.n_hidden).min(sc.train_target / 2);
-            let mut edge = EdgeDevice::new(
-                id,
-                EdgeConfig {
-                    model,
-                    hash_seed: (cfg.seed as u16).wrapping_add(id as u16 * 31),
-                    pruner: Pruner::new(policy, Metric::P1P2, warmup),
-                    detector,
-                    train_target: sc.train_target,
-                },
-                &mut rng,
-            );
-            edge.provision(&train.xs, &train.labels)?;
-            let pre = in_subjects[id % in_subjects.len()];
-            let post = HELD_OUT_SUBJECTS[id % HELD_OUT_SUBJECTS.len()];
-            let eid = id as u64;
-            let mut sim = EdgeSim {
-                edge,
-                metrics: EdgeMetrics::default(),
-                subjects: (pre, post),
-                rng: CounterRng::new(cfg.seed, domain::SENSE, eid),
-                eval_rng: CounterRng::new(cfg.seed, domain::EVAL, eid),
-                channel: Channel::new(
-                    sc.channel.clone(),
-                    stream_seed(cfg.seed, domain::CHANNEL, eid),
-                ),
-                teacher: Teacher::oracle(
-                    sc.teacher_error,
-                    stream_seed(cfg.seed, domain::TEACHER, eid),
-                ),
-                queue: BinaryHeap::new(),
-                seq: 0,
-                now: 0.0,
-                drifted: false,
-            };
-            // stagger edges across the period; seed the eval cadence
-            let phase = sc.event_period_s * (id as f64 / sc.n_edges.max(1) as f64);
-            sim.schedule(phase, Event::Sense);
-            if sc.eval_period_s > 0.0 {
-                sim.schedule(sc.eval_period_s, Event::Eval);
+        let n_edges = sc.n_edges;
+        let workers = provision_workers.max(1).min(n_edges.max(1));
+        let sims: Vec<EdgeSim> = if workers <= 1 {
+            let mut sims = Vec::with_capacity(n_edges);
+            for id in 0..n_edges {
+                sims.push(build_edge_sim(sc, cfg.seed, id, &train, &artifacts.in_subjects)?);
             }
-            sims.push(sim);
-        }
+            sims
+        } else {
+            let chunk = n_edges.div_ceil(workers);
+            let train_ref = &train;
+            let subjects = artifacts.in_subjects.as_slice();
+            let seed = cfg.seed;
+            let shards: Vec<Result<Vec<EdgeSim>>> = std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(workers);
+                let mut start = 0;
+                while start < n_edges {
+                    let end = (start + chunk).min(n_edges);
+                    handles.push(scope.spawn(move || -> Result<Vec<EdgeSim>> {
+                        let mut shard = Vec::with_capacity(end - start);
+                        for id in start..end {
+                            shard.push(build_edge_sim(sc, seed, id, train_ref, subjects)?);
+                        }
+                        Ok(shard)
+                    }));
+                    start = end;
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("provisioning worker panicked"))
+                    .collect()
+            });
+            // join order == spawn order == ascending edge ids
+            let mut sims = Vec::with_capacity(n_edges);
+            for shard in shards {
+                sims.extend(shard?);
+            }
+            sims
+        };
 
         let cycles = CycleModel::prototype().with_dims(
             sc.synth.n_features,
@@ -479,8 +718,9 @@ impl Fleet {
         );
         Ok(Fleet {
             sims,
-            generator,
-            standardizer,
+            generator: artifacts.generator.clone(),
+            standardizer: artifacts.standardizer.clone(),
+            data_seed: artifacts.data_seed,
             power: PowerModel::default(),
             cycles,
             cfg,
@@ -508,6 +748,7 @@ impl Fleet {
             standardizer,
             power,
             cycles,
+            ..
         } = self;
         let n_edges = sims.len();
         let workers = n_workers.max(1).min(n_edges.max(1));
@@ -607,6 +848,7 @@ impl Fleet {
 
         let mut handles = Vec::new();
         let generator_cfg = scenario.synth.clone();
+        let data_seed = fleet.data_seed;
         let standardizer = fleet.standardizer;
         for (id, sim) in fleet.sims.into_iter().enumerate() {
             let q_tx = q_tx.clone();
@@ -619,7 +861,7 @@ impl Fleet {
             handles.push(std::thread::spawn(move || -> (u64, u64) {
                 // per-thread generator (same family, thread-local stream)
                 let mut rng = Rng64::new(seed ^ (id as u64 + 1));
-                let mut data_rng = Rng64::new(seed ^ 0xDA7A);
+                let mut data_rng = Rng64::new(data_seed);
                 let gen = SynthHar::new(synth_cfg.clone(), &mut data_rng);
                 for ev in 0..events_per_edge {
                     let subject = if ev >= drift_at { post } else { pre };
@@ -748,6 +990,121 @@ mod tests {
             .run_parallel(workers);
             assert!(seq.bitwise_eq(&par), "diverged at {workers} workers");
         }
+    }
+
+    #[test]
+    fn parallel_provisioning_bitwise_matches_sequential_construction() {
+        // The construction contract (the run-phase matrix lives in
+        // tests/fleet_determinism.rs): a fleet provisioned with k workers
+        // must be indistinguishable — report bits included — from the
+        // sequentially built one.
+        let sc = small_scenario();
+        let seq = Fleet::new(FleetConfig {
+            scenario: sc.clone(),
+            seed: 9,
+        })
+        .unwrap()
+        .run();
+        for workers in [2usize, 3, 8] {
+            let par = Fleet::new_parallel(
+                FleetConfig {
+                    scenario: sc.clone(),
+                    seed: 9,
+                },
+                workers,
+            )
+            .unwrap()
+            .run();
+            assert!(
+                seq.bitwise_eq(&par),
+                "construction diverged at {workers} provisioning workers"
+            );
+        }
+    }
+
+    #[test]
+    fn with_artifacts_matches_monolithic_construction() {
+        let sc = small_scenario();
+        let cfg = FleetConfig {
+            scenario: sc.clone(),
+            seed: 12,
+        };
+        let artifacts = ProvisionArtifacts::build(&sc, 12, false);
+        let direct = Fleet::new(cfg.clone()).unwrap().run();
+        let shared = Fleet::with_artifacts(cfg, &artifacts, 2).unwrap().run();
+        assert!(direct.bitwise_eq(&shared));
+    }
+
+    #[test]
+    fn with_artifacts_rejects_mismatched_data_config() {
+        let sc = small_scenario();
+        // artifacts built under a different fleet seed resolve to a
+        // different derived data seed → key mismatch
+        let artifacts = ProvisionArtifacts::build(&sc, 1, false);
+        let err = Fleet::with_artifacts(
+            FleetConfig {
+                scenario: sc,
+                seed: 2,
+            },
+            &artifacts,
+            1,
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn explicit_data_seed_shares_artifacts_across_sim_seeds() {
+        let mut sc = small_scenario();
+        sc.data_seed = Some(0xFEED);
+        // same data key for different simulation seeds…
+        assert_eq!(
+            ProvisionArtifacts::data_key(&sc, 1),
+            ProvisionArtifacts::data_key(&sc, 2)
+        );
+        // …and one artifact build provisions both, while the simulation
+        // streams still differ
+        let artifacts = ProvisionArtifacts::build(&sc, 1, false);
+        let r1 = Fleet::with_artifacts(
+            FleetConfig {
+                scenario: sc.clone(),
+                seed: 1,
+            },
+            &artifacts,
+            1,
+        )
+        .unwrap()
+        .run();
+        let r2 = Fleet::with_artifacts(
+            FleetConfig {
+                scenario: sc.clone(),
+                seed: 2,
+            },
+            &artifacts,
+            1,
+        )
+        .unwrap()
+        .run();
+        assert!(!r1.bitwise_eq(&r2), "different sim seeds must differ");
+        // equality against the monolithic path for the same scenario
+        let direct = Fleet::new(FleetConfig {
+            scenario: sc,
+            seed: 2,
+        })
+        .unwrap()
+        .run();
+        assert!(direct.bitwise_eq(&r2));
+    }
+
+    #[test]
+    fn pca_artifact_is_opt_in_and_sized() {
+        let sc = small_scenario();
+        let bare = ProvisionArtifacts::build(&sc, 3, false);
+        assert!(bare.pca.is_none());
+        let with = ProvisionArtifacts::build(&sc, 3, true);
+        let pca = with.pca.as_ref().unwrap();
+        assert_eq!(pca.components.rows, 2);
+        assert_eq!(pca.components.cols, sc.synth.n_features);
+        assert_eq!(pca.eigenvalues.len(), 2);
     }
 
     #[test]

@@ -15,16 +15,21 @@
 //! threads while producing a report bitwise identical to the sequential
 //! [`fleet::Fleet::run`]. [`fleet::Fleet::run_threaded`] offers a
 //! std-thread real-time-flavoured mode (tokio is not in the offline
-//! vendor set; the event loop is explicit instead).
+//! vendor set; the event loop is explicit instead). Construction is
+//! sharded the same way ([`fleet::Fleet::new_parallel`]), and
+//! [`sweep`] fans whole scenario grids over a worker pool with the
+//! shared provisioning artifacts memoized per data config.
 
 pub mod channel;
 pub mod edge;
 pub mod fleet;
 pub mod metrics;
+pub mod sweep;
 pub mod teacher;
 
 pub use channel::{Channel, ChannelConfig};
 pub use edge::{EdgeConfig, EdgeDevice, Mode, StepAction};
-pub use fleet::{Fleet, FleetConfig, Scenario};
+pub use fleet::{Fleet, FleetConfig, ProvisionArtifacts, Scenario};
 pub use metrics::{EdgeMetrics, FleetReport};
+pub use sweep::{SweepOutcome, SweepSpec, SweepStats};
 pub use teacher::{Teacher, TeacherKind};

@@ -1,0 +1,565 @@
+//! Memoized scenario-sweep engine — the cross-fleet level of the parallel
+//! provisioning stack (`odl-har sweep`).
+//!
+//! A parameter study (the paper's Fig. 3/4 and Table 3 are exactly this)
+//! runs a grid of fleet scenarios: seeds × pruning thresholds × fleet
+//! sizes × detectors. Naively each cell pays the full `Fleet::new` —
+//! pool generation, standardizer fit, and per-edge `init_batch` — even
+//! though every cell with the same data config generates bitwise the same
+//! pool. This engine:
+//!
+//! 1. enumerates the grid in one deterministic order
+//!    ([`SweepSpec::cells`]: seeds → thetas → edge counts → detectors);
+//! 2. **memoizes** [`ProvisionArtifacts`] by
+//!    [`ProvisionArtifacts::data_key`], so a P-point grid fits the data
+//!    once per distinct `(synth config, data seed)` instead of P times
+//!    (pin `Scenario::data_seed` in the sweep config to share across
+//!    simulation seeds too);
+//! 3. fans the cells over a scoped worker pool and **streams** one JSON
+//!    row per cell, in cell order, into the results file (an
+//!    [`OrderedSink`] reorders out-of-order completions before writing).
+//!
+//! Determinism contract: each cell's `FleetReport` is **bitwise
+//! identical** to the report of an individually constructed
+//! `Fleet::new(cfg).run()` for the same scenario — memoization and the
+//! worker pool are wall-clock knobs, never numerics knobs. Asserted by
+//! the in-module tests and re-checked by `benches/bench_sweep.rs` before
+//! it times anything.
+
+use super::fleet::{DetectorKind, Fleet, FleetConfig, ProvisionArtifacts, Scenario};
+use super::metrics::FleetReport;
+use crate::util::json::{obj, Json};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A declared scenario grid. Every axis left at its one-element default
+/// degenerates to the base scenario's value, so a sweep with only
+/// `seeds = [...]` is a plain seed study.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// Base scenario; each cell clones and overrides it.
+    pub base: Scenario,
+    /// Simulation seeds.
+    pub seeds: Vec<u64>,
+    /// Pruning thresholds; `None` = the auto-θ ladder.
+    pub thetas: Vec<Option<f32>>,
+    /// Fleet sizes.
+    pub edge_counts: Vec<usize>,
+    /// Drift detectors.
+    pub detectors: Vec<DetectorKind>,
+    /// Cross-cell worker threads (0 = auto via
+    /// [`crate::util::auto_workers`]; resolve before calling the engine).
+    pub workers: usize,
+    /// Fit the optional PCA summary per data config and record its
+    /// eigenvalues in the results rows.
+    pub record_pca: bool,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        let base = Scenario::default();
+        SweepSpec {
+            seeds: vec![1],
+            thetas: vec![base.fixed_theta],
+            edge_counts: vec![base.n_edges],
+            detectors: vec![base.detector],
+            workers: 1,
+            record_pca: false,
+            base,
+        }
+    }
+}
+
+/// One grid coordinate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SweepCell {
+    pub index: usize,
+    pub seed: u64,
+    pub theta: Option<f32>,
+    pub n_edges: usize,
+    pub detector: DetectorKind,
+}
+
+impl SweepSpec {
+    /// Materialize the grid in its one deterministic order:
+    /// seeds → thetas → edge counts → detectors.
+    pub fn cells(&self) -> Vec<(SweepCell, Scenario)> {
+        let mut out = Vec::with_capacity(
+            self.seeds.len() * self.thetas.len() * self.edge_counts.len() * self.detectors.len(),
+        );
+        for &seed in &self.seeds {
+            for &theta in &self.thetas {
+                for &n_edges in &self.edge_counts {
+                    for &detector in &self.detectors {
+                        let mut sc = self.base.clone();
+                        sc.fixed_theta = theta;
+                        sc.n_edges = n_edges;
+                        sc.detector = detector;
+                        out.push((
+                            SweepCell {
+                                index: out.len(),
+                                seed,
+                                theta,
+                                n_edges,
+                                detector,
+                            },
+                            sc,
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Memoization accounting: `artifact_builds + artifact_hits == cells`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SweepStats {
+    pub cells: usize,
+    pub artifact_builds: usize,
+    pub artifact_hits: usize,
+}
+
+/// The engine's result: per-cell reports in cell order plus the
+/// memoization ledger.
+pub struct SweepOutcome {
+    pub reports: Vec<(SweepCell, FleetReport)>,
+    pub stats: SweepStats,
+}
+
+/// Re-orders out-of-order line completions so the output stream is written
+/// strictly in cell order regardless of worker scheduling.
+struct OrderedSink<W: Write> {
+    next: usize,
+    pending: BTreeMap<usize, String>,
+    out: W,
+}
+
+impl<W: Write> OrderedSink<W> {
+    fn new(out: W) -> Self {
+        OrderedSink {
+            next: 0,
+            pending: BTreeMap::new(),
+            out,
+        }
+    }
+
+    fn push(&mut self, index: usize, line: String) -> std::io::Result<()> {
+        self.pending.insert(index, line);
+        let mut wrote = false;
+        while let Some(line) = self.pending.remove(&self.next) {
+            self.out.write_all(line.as_bytes())?;
+            self.out.write_all(b"\n")?;
+            self.next += 1;
+            wrote = true;
+        }
+        // flush only when a line actually drained — keeps tail -f
+        // streaming without paying a syscall for buffered-only pushes
+        if wrote {
+            self.out.flush()?;
+        }
+        Ok(())
+    }
+}
+
+/// The per-cell results row: grid coordinates + a `FleetReport` rollup.
+pub fn cell_row(cell: &SweepCell, report: &FleetReport, artifacts: &ProvisionArtifacts) -> Json {
+    let edges = report.per_edge.len().max(1) as f64;
+    // Mean of the last rolling-accuracy checkpoint over the edges that
+    // have one (traces checkpoint every 50 predictions, so short horizons
+    // may leave some — or all — edges without a reading; averaging those
+    // in as 0.0 would skew the rollup). Null when no edge has reported.
+    let acc_readings: Vec<f64> = report
+        .per_edge
+        .iter()
+        .filter_map(|m| m.accuracy_trace.last().map(|&(_, a)| a))
+        .collect();
+    let final_acc = if acc_readings.is_empty() {
+        Json::Null
+    } else {
+        Json::Num(acc_readings.iter().sum::<f64>() / acc_readings.len() as f64)
+    };
+    let comm: f64 = report.per_edge.iter().map(|m| m.comm_fraction()).sum::<f64>() / edges;
+    let trained: u64 = report.per_edge.iter().map(|m| m.trained).sum();
+    let mut pairs = vec![
+        ("cell", Json::Num(cell.index as f64)),
+        ("seed", Json::Num(cell.seed as f64)),
+        (
+            "theta",
+            match cell.theta {
+                Some(t) => Json::Num(t as f64),
+                None => Json::Str("auto".into()),
+            },
+        ),
+        ("n_edges", Json::Num(cell.n_edges as f64)),
+        ("detector", Json::Str(cell.detector.name().into())),
+        ("data_key", Json::Str(format!("{:016x}", artifacts.key))),
+        ("queries", Json::Num(report.total_queries() as f64)),
+        ("trained", Json::Num(trained as f64)),
+        ("teacher_queries", Json::Num(report.teacher_queries as f64)),
+        ("channel_attempts", Json::Num(report.channel_attempts as f64)),
+        ("channel_failures", Json::Num(report.channel_failures as f64)),
+        ("comm_fraction", Json::Num(comm)),
+        ("final_accuracy", final_acc),
+        ("mean_edge_power_mw", Json::Num(report.mean_edge_power_mw())),
+        ("total_energy_mj", Json::Num(report.total_energy_mj())),
+    ];
+    if let Some(pca) = &artifacts.pca {
+        pairs.push((
+            "pca_eigenvalues",
+            Json::Arr(pca.eigenvalues.iter().map(|&e| Json::Num(e as f64)).collect()),
+        ));
+    }
+    obj(pairs)
+}
+
+/// Run the grid with memoized artifacts; collect reports only (no file).
+pub fn run_sweep(spec: &SweepSpec) -> Result<SweepOutcome> {
+    run_sweep_inner(spec, None)
+}
+
+/// Run the grid, streaming one JSON row per cell (in cell order) into
+/// `path` — a header line, the cell rows, and a stats trailer, one JSON
+/// object per line.
+pub fn run_sweep_to_file(spec: &SweepSpec, path: &Path) -> Result<SweepOutcome> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating results file {}", path.display()))?;
+    let mut sink = OrderedSink::new(std::io::BufWriter::new(file));
+    let n_cells = spec.cells().len();
+    let header = obj(vec![
+        ("schema", Json::Str("odl-har-sweep/v1".into())),
+        ("cells", Json::Num(n_cells as f64)),
+        ("workers", Json::Num(spec.workers as f64)),
+    ]);
+    // header occupies slot 0; cell i lands in slot i + 1
+    sink.push(0, header.to_string())?;
+    let sink = Mutex::new(sink);
+    let outcome = run_sweep_inner(spec, Some(&sink))?;
+    let mut sink = sink.into_inner().expect("sweep sink poisoned");
+    let trailer = obj(vec![
+        ("cells", Json::Num(outcome.stats.cells as f64)),
+        (
+            "artifact_builds",
+            Json::Num(outcome.stats.artifact_builds as f64),
+        ),
+        (
+            "artifact_hits",
+            Json::Num(outcome.stats.artifact_hits as f64),
+        ),
+    ]);
+    sink.push(n_cells + 1, obj(vec![("stats", trailer)]).to_string())?;
+    Ok(outcome)
+}
+
+fn run_sweep_inner(
+    spec: &SweepSpec,
+    sink: Option<&Mutex<OrderedSink<std::io::BufWriter<std::fs::File>>>>,
+) -> Result<SweepOutcome> {
+    let cells = spec.cells();
+    let mut stats = SweepStats {
+        cells: cells.len(),
+        ..Default::default()
+    };
+
+    // Phase 1 — fit shared artifacts once per distinct data key. The
+    // distinct keys are enumerated in first-occurrence order (a linear
+    // scan; a handful of keys at most), then the independent builds fan
+    // over the same worker budget phase 2 uses — a grid with one key per
+    // simulation seed would otherwise pay every pool fit back to back on
+    // the caller thread before any cell ran. Builds are pure functions of
+    // the key, so the fan-out cannot change any artifact bit.
+    let mut distinct: Vec<(u64, usize)> = Vec::new(); // (key, first cell index)
+    let mut cell_key_slot: Vec<usize> = Vec::with_capacity(cells.len());
+    for (i, (cell, sc)) in cells.iter().enumerate() {
+        let key = ProvisionArtifacts::data_key(sc, cell.seed);
+        match distinct.iter().position(|(k, _)| *k == key) {
+            Some(slot) => {
+                stats.artifact_hits += 1;
+                cell_key_slot.push(slot);
+            }
+            None => {
+                stats.artifact_builds += 1;
+                cell_key_slot.push(distinct.len());
+                distinct.push((key, i));
+            }
+        }
+    }
+    let build_workers = spec.workers.max(1).min(distinct.len().max(1));
+    let built: Vec<Arc<ProvisionArtifacts>> = if build_workers <= 1 {
+        distinct
+            .iter()
+            .map(|&(_, i)| {
+                let (cell, sc) = &cells[i];
+                Arc::new(ProvisionArtifacts::build(sc, cell.seed, spec.record_pca))
+            })
+            .collect()
+    } else {
+        let next_build = AtomicUsize::new(0);
+        let build_slots: Vec<Mutex<Option<Arc<ProvisionArtifacts>>>> =
+            (0..distinct.len()).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..build_workers {
+                scope.spawn(|| loop {
+                    let b = next_build.fetch_add(1, Ordering::SeqCst);
+                    if b >= distinct.len() {
+                        break;
+                    }
+                    let (cell, sc) = &cells[distinct[b].1];
+                    let artifacts =
+                        Arc::new(ProvisionArtifacts::build(sc, cell.seed, spec.record_pca));
+                    *build_slots[b].lock().expect("build slot poisoned") = Some(artifacts);
+                });
+            }
+        });
+        build_slots
+            .into_iter()
+            .map(|slot| {
+                slot.into_inner()
+                    .expect("build slot poisoned")
+                    .expect("artifact build never ran")
+            })
+            .collect()
+    };
+    let cell_artifacts: Vec<Arc<ProvisionArtifacts>> =
+        cell_key_slot.iter().map(|&slot| built[slot].clone()).collect();
+
+    // Phase 2 — fan the cells over the worker pool. Each cell provisions
+    // from its shared artifacts and runs single-threaded (the pool is the
+    // parallelism); every slot is written by exactly one worker.
+    let workers = spec.workers.max(1).min(cells.len().max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<FleetReport>>>> =
+        (0..cells.len()).map(|_| Mutex::new(None)).collect();
+    let run_cell = |i: usize| -> Result<FleetReport> {
+        let (cell, sc) = &cells[i];
+        let result = Fleet::with_artifacts(
+            FleetConfig {
+                scenario: sc.clone(),
+                seed: cell.seed,
+            },
+            &cell_artifacts[i],
+            1,
+        )
+        .map(|fleet| fleet.run_parallel(1));
+        if let Some(sink) = sink {
+            // a failed cell still claims its slot (with an error row) so
+            // the ordered sink can drain every later cell's completed row
+            // instead of buffering them forever behind the gap
+            let line = match &result {
+                Ok(report) => cell_row(cell, report, &cell_artifacts[i]).to_string(),
+                Err(e) => obj(vec![
+                    ("cell", Json::Num(cell.index as f64)),
+                    ("error", Json::Str(e.to_string())),
+                ])
+                .to_string(),
+            };
+            sink.lock()
+                .expect("sweep sink poisoned")
+                // slot 0 is the header line
+                .push(i + 1, line)
+                .context("writing sweep results row")?;
+        }
+        result
+    };
+    if workers <= 1 {
+        for i in 0..cells.len() {
+            *slots[i].lock().expect("slot poisoned") = Some(run_cell(i));
+        }
+    } else {
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= cells.len() {
+                        break;
+                    }
+                    *slots[i].lock().expect("slot poisoned") = Some(run_cell(i));
+                });
+            }
+        });
+    }
+
+    let mut reports = Vec::with_capacity(cells.len());
+    for ((cell, _), slot) in cells.iter().zip(slots) {
+        let report = slot
+            .into_inner()
+            .expect("slot poisoned")
+            .expect("sweep cell never ran")
+            .with_context(|| format!("sweep cell {} (seed {})", cell.index, cell.seed))?;
+        reports.push((*cell, report));
+    }
+    Ok(SweepOutcome { reports, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthConfig;
+
+    fn small_base() -> Scenario {
+        Scenario {
+            n_edges: 2,
+            n_hidden: 16,
+            event_period_s: 1.0,
+            horizon_s: 80.0,
+            drift_at_s: 25.0,
+            train_target: 40,
+            synth: SynthConfig {
+                n_features: 24,
+                n_classes: 3,
+                n_subjects: 30,
+                samples_per_cell: 4,
+                proto_sigma: 1.1,
+                confuse_frac: 0.04,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    fn small_spec() -> SweepSpec {
+        SweepSpec {
+            base: {
+                let mut b = small_base();
+                b.data_seed = Some(0x5EED);
+                b
+            },
+            seeds: vec![1, 2],
+            thetas: vec![None, Some(0.2)],
+            edge_counts: vec![2, 3],
+            detectors: vec![DetectorKind::Oracle],
+            workers: 2,
+            record_pca: false,
+        }
+    }
+
+    #[test]
+    fn grid_enumeration_is_deterministic_and_complete() {
+        let spec = small_spec();
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2 * 2 * 2);
+        assert_eq!(cells[0].0.index, 0);
+        // detectors is the fastest axis, seeds the slowest
+        assert_eq!(cells[0].0.seed, 1);
+        assert_eq!(cells[cells.len() - 1].0.seed, 2);
+        assert_eq!(cells[0].0.theta, None);
+        assert_eq!(cells[1].0.n_edges, 3);
+        let again = spec.cells();
+        for (a, b) in cells.iter().zip(&again) {
+            assert_eq!(a.0, b.0);
+        }
+    }
+
+    #[test]
+    fn memoization_fits_data_once_per_config() {
+        let spec = small_spec();
+        let outcome = run_sweep(&spec).unwrap();
+        assert_eq!(outcome.stats.cells, 8);
+        // pinned data_seed → one data config across the whole grid
+        assert_eq!(outcome.stats.artifact_builds, 1);
+        assert_eq!(outcome.stats.artifact_hits, 7);
+    }
+
+    #[test]
+    fn derived_data_seed_memoizes_per_simulation_seed() {
+        let mut spec = small_spec();
+        spec.base.data_seed = None;
+        let outcome = run_sweep(&spec).unwrap();
+        // one build per distinct sim seed, hits for the rest of the grid
+        assert_eq!(outcome.stats.artifact_builds, 2);
+        assert_eq!(outcome.stats.artifact_hits, 6);
+    }
+
+    #[test]
+    fn sweep_reports_bitwise_match_individually_built_fleets() {
+        let spec = small_spec();
+        let outcome = run_sweep(&spec).unwrap();
+        for ((cell, report), (_, sc)) in outcome.reports.iter().zip(spec.cells()) {
+            let direct = Fleet::new(FleetConfig {
+                scenario: sc,
+                seed: cell.seed,
+            })
+            .unwrap()
+            .run();
+            assert!(
+                direct.bitwise_eq(report),
+                "cell {} diverged from the individually built fleet",
+                cell.index
+            );
+        }
+    }
+
+    #[test]
+    fn worker_count_never_changes_results() {
+        let mut spec = small_spec();
+        spec.workers = 1;
+        let seq = run_sweep(&spec).unwrap();
+        spec.workers = 4;
+        let par = run_sweep(&spec).unwrap();
+        assert_eq!(seq.stats, par.stats);
+        for ((_, a), (_, b)) in seq.reports.iter().zip(&par.reports) {
+            assert!(a.bitwise_eq(b));
+        }
+    }
+
+    #[test]
+    fn results_file_streams_rows_in_cell_order() {
+        let spec = small_spec();
+        let dir = std::env::temp_dir().join("odl_har_sweep_test");
+        let path = dir.join("sweep.jsonl");
+        let outcome = run_sweep_to_file(&spec, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // header + one row per cell + stats trailer
+        assert_eq!(lines.len(), outcome.stats.cells + 2);
+        let header = Json::parse(lines[0]).unwrap();
+        assert_eq!(
+            header.get("schema").unwrap().as_str().unwrap(),
+            "odl-har-sweep/v1"
+        );
+        for (i, line) in lines[1..=outcome.stats.cells].iter().enumerate() {
+            let row = Json::parse(line).unwrap();
+            assert_eq!(row.get("cell").unwrap().as_usize().unwrap(), i);
+            assert!(row.get("final_accuracy").unwrap().as_f64().is_some());
+        }
+        let trailer = Json::parse(lines[lines.len() - 1]).unwrap();
+        assert_eq!(
+            trailer
+                .get("stats")
+                .unwrap()
+                .get("artifact_hits")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            outcome.stats.artifact_hits
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn record_pca_adds_eigenvalues_to_rows() {
+        let mut spec = small_spec();
+        spec.seeds = vec![1];
+        spec.thetas = vec![None];
+        spec.edge_counts = vec![2];
+        spec.record_pca = true;
+        let outcome = run_sweep(&spec).unwrap();
+        let (cell, sc) = &spec.cells()[0];
+        let artifacts = Arc::new(ProvisionArtifacts::build(sc, cell.seed, true));
+        let row = cell_row(cell, &outcome.reports[0].1, &artifacts);
+        let eig = row.get("pca_eigenvalues").unwrap().as_arr().unwrap();
+        assert_eq!(eig.len(), 2);
+        assert!(eig[0].as_f64().unwrap() >= eig[1].as_f64().unwrap());
+    }
+}

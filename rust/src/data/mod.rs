@@ -77,9 +77,18 @@ impl Dataset {
 
     /// Shuffle rows in place (used by the per-trial protocol).
     pub fn shuffle(&mut self, rng: &mut crate::util::rng::Rng64) {
+        *self = self.shuffled(rng);
+    }
+
+    /// A shuffled copy — same draw sequence and row order as
+    /// [`Self::shuffle`], without mutating `self`. This is what lets the
+    /// fleet's shared provisioning artifacts keep one immutable
+    /// standardized pool while each fleet derives its own seed-keyed
+    /// ordering from it.
+    pub fn shuffled(&self, rng: &mut crate::util::rng::Rng64) -> Dataset {
         let mut order: Vec<usize> = (0..self.len()).collect();
         rng.shuffle(&mut order);
-        *self = self.take(&order);
+        self.take(&order)
     }
 
     /// Split at `k` into (first k rows, rest).

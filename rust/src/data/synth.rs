@@ -76,6 +76,10 @@ impl Default for SynthConfig {
 
 /// The generator: holds prototypes / subject parameters so that train and
 /// test samples for the same subject share their idiosyncrasies.
+/// Cheap to clone (a few subject/prototype matrices, no sample pool) —
+/// each `Fleet` keeps its own copy so the provisioning pool can be
+/// dropped as soon as construction finishes.
+#[derive(Clone)]
 pub struct SynthHar {
     pub cfg: SynthConfig,
     protos: Mat,           // n_classes × n

@@ -93,6 +93,41 @@ pub fn dist2(a: &[f32], b: &[f32]) -> f32 {
         + tail
 }
 
+/// Widening dot product `Σ aᵢ·bᵢ` with one strictly sequential `f64`
+/// accumulator — the association order of the SPD solver's reference
+/// loops (`linalg::solve`). Unlike [`dot`]'s 8-lane split, the
+/// accumulation chain here must stay sequential: the Cholesky
+/// factorization and triangular solves are pinned **bit-for-bit** to the
+/// historical scalar code, and a lane split would change the f64
+/// rounding sequence. The speedup of the blocked factorization comes
+/// from its panel schedule (cache reuse), not from reassociating this
+/// reduction.
+#[inline]
+pub fn dot_wide(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        s += x as f64 * y as f64;
+    }
+    s
+}
+
+/// Substitution kernel `acc − Σ aᵢ·bᵢ` with strictly sequential `f64`
+/// decrements (`acc -= x·y` per element) — the inner loop of the
+/// forward/backward triangular solves in `linalg::solve`, which start
+/// from the right-hand side and subtract term by term. The decrement
+/// association differs from `acc − dot_wide(a, b)` in f64 rounding, so
+/// it gets its own kernel; bit-for-bit the naive loop by construction.
+#[inline]
+pub fn subdot_wide(acc: f64, a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = acc;
+    for (&x, &y) in a.iter().zip(b) {
+        s -= x as f64 * y as f64;
+    }
+    s
+}
+
 // --- elementwise kernels -----------------------------------------------------
 
 /// `y += alpha · x`. Elementwise (no reduction), so the plain zip loop is
@@ -364,6 +399,46 @@ mod tests {
                 let small_exact = a.len() >= LANES
                     || dot(a, b).to_bits() == naive_dot(a, b).to_bits();
                 repeat_bits && small_exact
+            },
+        );
+    }
+
+    #[test]
+    fn dot_wide_bitwise_matches_naive_widening_loop() {
+        forall(
+            "kernels-dot-wide",
+            |r| {
+                let len = gen::usize_in(r, 0, 130);
+                (gen::vec_normal(r, len, 1.0), gen::vec_normal(r, len, 1.0))
+            },
+            |(a, b)| {
+                let mut s = 0.0f64;
+                for (&x, &y) in a.iter().zip(b) {
+                    s += x as f64 * y as f64;
+                }
+                dot_wide(a, b).to_bits() == s.to_bits()
+            },
+        );
+    }
+
+    #[test]
+    fn subdot_wide_bitwise_matches_naive_decrement_loop() {
+        forall(
+            "kernels-subdot-wide",
+            |r| {
+                let len = gen::usize_in(r, 0, 130);
+                (
+                    gen::f32_in(r, -3.0, 3.0) as f64,
+                    gen::vec_normal(r, len, 1.0),
+                    gen::vec_normal(r, len, 1.0),
+                )
+            },
+            |(acc, a, b)| {
+                let mut s = *acc;
+                for (&x, &y) in a.iter().zip(b) {
+                    s -= x as f64 * y as f64;
+                }
+                subdot_wide(*acc, a, b).to_bits() == s.to_bits()
             },
         );
     }

@@ -4,55 +4,114 @@
 //! regularized Gram matrix is SPD — Cholesky is the right tool. The LU
 //! path is kept for generality (tests, baselines) and as a fallback when a
 //! matrix is not quite SPD in f32.
+//!
+//! # The blocked factorization
+//!
+//! [`cholesky`] runs a panel-blocked schedule: columns are processed in
+//! panels of [`CHOL_PANEL`], the panel's diagonal block is factored
+//! column by column, and the sub-diagonal rows are then filled in
+//! [`CHOL_ROW_TILE`]-row tiles. Every element is still computed as one
+//! widening prefix dot ([`kernels::dot_wide`]: a single sequential `f64`
+//! accumulator over `k < j`), so the value of each `L[i][j]` — and the
+//! index/value of the first failing pivot — is **bit-for-bit identical**
+//! to the historical row-by-row scalar loop (property-tested below on
+//! SPD matrices with sizes spanning 0..=600). What the schedule changes
+//! is locality: a tile's dots reuse the panel's pivot rows (≤
+//! `CHOL_PANEL · n` floats, cache-resident) instead of re-streaming the
+//! whole factored triangle per row, which is what the seed loop did.
+//!
+//! The triangular solves route through [`kernels::subdot_wide`] (the
+//! sequential-decrement substitution kernel); back-substitution reads
+//! `Lᵀ` rows — contiguous — instead of striding down columns of `L`.
+//! [`cholesky_solve_inplace`] builds the transpose once per solve batch.
 
 use super::mat::Mat;
+use crate::linalg::kernels;
 use anyhow::{bail, Result};
 
-/// Cholesky factorization in place: returns lower-triangular `L` with
-/// `A = L·Lᵀ`. Fails if the matrix is not positive definite.
+/// Column-panel width of the blocked [`cholesky`]. A panel's pivot-row
+/// block is `CHOL_PANEL × n` f32 (64 KiB at n = 256), which stays
+/// L2-resident while a row tile sweeps over it.
+pub const CHOL_PANEL: usize = 64;
+
+/// Row-tile height of the sub-diagonal fill: tile rows' own prefixes stay
+/// L1-hot across the panel's columns.
+pub const CHOL_ROW_TILE: usize = 32;
+
+/// Cholesky factorization: returns lower-triangular `L` with `A = L·Lᵀ`.
+/// Fails if the matrix is not positive definite (same pivot index and
+/// discriminant as the scalar reference — the element schedule is blocked
+/// but the per-element arithmetic is unchanged).
 pub fn cholesky(a: &Mat) -> Result<Mat> {
     assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
     let n = a.rows;
     let mut l = Mat::zeros(n, n);
-    for i in 0..n {
-        for j in 0..=i {
-            // sum_{k<j} L[i][k] * L[j][k]
-            let mut s = 0.0f64;
-            for k in 0..j {
-                s += l.at(i, k) as f64 * l.at(j, k) as f64;
+    let ld = &mut l.data;
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + CHOL_PANEL).min(n);
+        // factor the diagonal block, column by column: pivot j needs row j
+        // finalized through column j−1 (previous panels + this block)
+        for j in j0..j1 {
+            let s = kernels::dot_wide(&ld[j * n..j * n + j], &ld[j * n..j * n + j]);
+            let d = a.at(j, j) as f64 - s;
+            if d <= 0.0 {
+                bail!("matrix not positive definite at pivot {} (d={})", j, d);
             }
-            if i == j {
-                let d = a.at(i, i) as f64 - s;
-                if d <= 0.0 {
-                    bail!("matrix not positive definite at pivot {} (d={})", i, d);
-                }
-                *l.at_mut(i, j) = d.sqrt() as f32;
-            } else {
-                *l.at_mut(i, j) = ((a.at(i, j) as f64 - s) / l.at(j, j) as f64) as f32;
+            ld[j * n + j] = d.sqrt() as f32;
+            for i in j + 1..j1 {
+                let s = kernels::dot_wide(&ld[i * n..i * n + j], &ld[j * n..j * n + j]);
+                ld[i * n + j] = ((a.at(i, j) as f64 - s) / ld[j * n + j] as f64) as f32;
             }
         }
+        // sub-diagonal fill in row tiles; within a row, columns ascend so
+        // the row's own panel prefix is always finalized before it is read
+        let mut i0 = j1;
+        while i0 < n {
+            let i1 = (i0 + CHOL_ROW_TILE).min(n);
+            for i in i0..i1 {
+                for j in j0..j1 {
+                    let s =
+                        kernels::dot_wide(&ld[i * n..i * n + j], &ld[j * n..j * n + j]);
+                    ld[i * n + j] = ((a.at(i, j) as f64 - s) / ld[j * n + j] as f64) as f32;
+                }
+            }
+            i0 = i1;
+        }
+        j0 = j1;
     }
     Ok(l)
 }
 
 /// Solve `A x = b` in place for SPD `A` given its Cholesky factor `L`.
+/// Builds `Lᵀ` for the back-substitution pass; batch callers should
+/// transpose once and use [`cholesky_solve_with_t`].
 pub fn cholesky_solve_with(l: &Mat, b: &mut [f32]) {
+    let lt = l.transpose();
+    cholesky_solve_with_t(l, &lt, b);
+}
+
+/// Solve `A x = b` in place given the factor `L` *and* its transpose
+/// (amortizes the transpose across a batch of right-hand sides). Both
+/// substitution sweeps are sequential-decrement [`kernels::subdot_wide`]
+/// walks over contiguous rows — bit-for-bit the historical scalar loops,
+/// which strided down columns of `L` in the backward pass.
+pub fn cholesky_solve_with_t(l: &Mat, lt: &Mat, b: &mut [f32]) {
     let n = l.rows;
     assert_eq!(b.len(), n);
+    debug_assert_eq!(lt.rows, n);
     // forward: L y = b
     for i in 0..n {
-        let mut s = b[i] as f64;
-        for k in 0..i {
-            s -= l.at(i, k) as f64 * b[k] as f64;
-        }
+        let s = kernels::subdot_wide(b[i] as f64, &l.data[i * n..i * n + i], &b[..i]);
         b[i] = (s / l.at(i, i) as f64) as f32;
     }
-    // backward: Lᵀ x = y
+    // backward: Lᵀ x = y (row i of Lᵀ = column i of L, contiguous in lt)
     for i in (0..n).rev() {
-        let mut s = b[i] as f64;
-        for k in i + 1..n {
-            s -= l.at(k, i) as f64 * b[k] as f64;
-        }
+        let s = kernels::subdot_wide(
+            b[i] as f64,
+            &lt.data[i * n + i + 1..(i + 1) * n],
+            &b[i + 1..],
+        );
         b[i] = (s / l.at(i, i) as f64) as f32;
     }
 }
@@ -60,13 +119,14 @@ pub fn cholesky_solve_with(l: &Mat, b: &mut [f32]) {
 /// Solve `A X = B` for SPD `A` (B given column-wise as a matrix), in place.
 pub fn cholesky_solve_inplace(a: &Mat, b: &mut Mat) -> Result<()> {
     let l = cholesky(a)?;
+    let lt = l.transpose();
     let n = a.rows;
     let mut col = vec![0.0f32; n];
     for j in 0..b.cols {
         for i in 0..n {
             col[i] = b.at(i, j);
         }
-        cholesky_solve_with(&l, &mut col);
+        cholesky_solve_with_t(&l, &lt, &mut col);
         for i in 0..n {
             *b.at_mut(i, j) = col[i];
         }
@@ -156,6 +216,172 @@ mod tests {
         let mut g = b.gram();
         g.add_diag(1.0);
         g
+    }
+
+    /// SPD by diagonal dominance: `M + Mᵀ + (2n+1)·I` — O(n²) to build, so
+    /// the large-size bitwise pins stay cheap (no O(n³) Gram).
+    fn random_spd_dd(rng: &mut Rng64, n: usize) -> Mat {
+        let m = gen::vec_normal(rng, n * n, 1.0);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                *a.at_mut(i, j) = m[i * n + j] + m[j * n + i];
+            }
+            *a.at_mut(i, i) += 2.0 * n as f32 + 1.0;
+        }
+        a
+    }
+
+    /// The seed's scalar Cholesky, verbatim — the bitwise reference the
+    /// blocked schedule is pinned against.
+    mod reference {
+        use crate::linalg::mat::Mat;
+        use anyhow::{bail, Result};
+
+        pub fn cholesky_ref(a: &Mat) -> Result<Mat> {
+            let n = a.rows;
+            let mut l = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..=i {
+                    let mut s = 0.0f64;
+                    for k in 0..j {
+                        s += l.at(i, k) as f64 * l.at(j, k) as f64;
+                    }
+                    if i == j {
+                        let d = a.at(i, i) as f64 - s;
+                        if d <= 0.0 {
+                            bail!("matrix not positive definite at pivot {} (d={})", i, d);
+                        }
+                        *l.at_mut(i, j) = d.sqrt() as f32;
+                    } else {
+                        *l.at_mut(i, j) =
+                            ((a.at(i, j) as f64 - s) / l.at(j, j) as f64) as f32;
+                    }
+                }
+            }
+            Ok(l)
+        }
+
+        pub fn solve_with_ref(l: &Mat, b: &mut [f32]) {
+            let n = l.rows;
+            for i in 0..n {
+                let mut s = b[i] as f64;
+                for k in 0..i {
+                    s -= l.at(i, k) as f64 * b[k] as f64;
+                }
+                b[i] = (s / l.at(i, i) as f64) as f32;
+            }
+            for i in (0..n).rev() {
+                let mut s = b[i] as f64;
+                for k in i + 1..n {
+                    s -= l.at(k, i) as f64 * b[k] as f64;
+                }
+                b[i] = (s / l.at(i, i) as f64) as f32;
+            }
+        }
+    }
+
+    fn assert_bitwise_eq_mat(got: &Mat, want: &Mat, tag: &str) {
+        assert_eq!(got.rows, want.rows, "{tag}: rows");
+        for (k, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{tag}: element {k}");
+        }
+    }
+
+    #[test]
+    fn blocked_cholesky_bitwise_matches_scalar_reference() {
+        // random sizes around the row-tile boundary…
+        forall(
+            "cholesky-bitwise",
+            |r| {
+                let n = gen::usize_in(r, 0, 40);
+                random_spd(r, n)
+            },
+            |a| {
+                let blocked = cholesky(a).unwrap();
+                let scalar = reference::cholesky_ref(a).unwrap();
+                blocked
+                    .data
+                    .iter()
+                    .zip(&scalar.data)
+                    .all(|(x, y)| x.to_bits() == y.to_bits())
+            },
+        );
+        // …and explicit pins straddling CHOL_ROW_TILE / CHOL_PANEL /
+        // multi-panel boundaries up to 600 (the same span the PR-1 mirror
+        // kernel pins)
+        let mut rng = Rng64::new(41);
+        for n in [
+            0usize,
+            1,
+            CHOL_ROW_TILE - 1,
+            CHOL_ROW_TILE,
+            CHOL_ROW_TILE + 1,
+            CHOL_PANEL - 1,
+            CHOL_PANEL,
+            CHOL_PANEL + 1,
+            2 * CHOL_PANEL + CHOL_ROW_TILE + 5,
+            256,
+            600,
+        ] {
+            let a = random_spd_dd(&mut rng, n);
+            let blocked = cholesky(&a).unwrap();
+            let scalar = reference::cholesky_ref(&a).unwrap();
+            assert_bitwise_eq_mat(&blocked, &scalar, &format!("cholesky n={n}"));
+        }
+    }
+
+    #[test]
+    fn kernel_solves_bitwise_match_scalar_reference() {
+        forall(
+            "cholesky-solve-bitwise",
+            |r| {
+                let n = gen::usize_in(r, 0, 40);
+                let a = random_spd(r, n);
+                let b = gen::vec_normal(r, n, 1.0);
+                (a, b)
+            },
+            |(a, b)| {
+                let l = cholesky(a).unwrap();
+                let mut kernel = b.clone();
+                cholesky_solve_with(&l, &mut kernel);
+                let mut scalar = b.clone();
+                reference::solve_with_ref(&l, &mut scalar);
+                kernel
+                    .iter()
+                    .zip(&scalar)
+                    .all(|(x, y)| x.to_bits() == y.to_bits())
+            },
+        );
+        // a large pin so the transposed back-substitution crosses many
+        // cache lines
+        let mut rng = Rng64::new(43);
+        for n in [CHOL_PANEL + 3, 300] {
+            let a = random_spd_dd(&mut rng, n);
+            let l = cholesky(&a).unwrap();
+            let b = gen::vec_normal(&mut rng, n, 1.0);
+            let mut kernel = b.clone();
+            cholesky_solve_with(&l, &mut kernel);
+            let mut scalar = b;
+            reference::solve_with_ref(&l, &mut scalar);
+            for (k, (x, y)) in kernel.iter().zip(&scalar).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "solve n={n} idx {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_pd_failure_pivot_matches_reference() {
+        // both paths must report the same first failing pivot
+        let a = Mat::from_rows(&[
+            &[4.0, 2.0, 0.5],
+            &[2.0, 1.0, 0.3], // pivot 1 goes non-positive after elimination
+            &[0.5, 0.3, 2.0],
+        ]);
+        let e_blocked = cholesky(&a).unwrap_err().to_string();
+        let e_scalar = reference::cholesky_ref(&a).unwrap_err().to_string();
+        assert_eq!(e_blocked, e_scalar);
+        assert!(e_blocked.contains("pivot 1"), "{e_blocked}");
     }
 
     #[test]

@@ -13,8 +13,12 @@
 //! odl-har fig4   [--trials N] [--out DIR]
 //! odl-har run    --config FILE       # custom protocol experiment
 //! odl-har fleet  [--config FILE] [--workers N] [--threaded]
+//! odl-har sweep  --config FILE [--workers N] [--out FILE]
 //! odl-har artifacts-check            # verify PJRT artifacts load + run
 //! ```
+//!
+//! Every `--workers` flag (and TOML `workers` key) treats `0` as "auto":
+//! it resolves to `std::thread::available_parallelism()` once at startup.
 
 use anyhow::{bail, Context, Result};
 use odl_har::config;
@@ -58,6 +62,14 @@ impl Args {
             Some(v) => v.parse().with_context(|| format!("bad {name} value"))?,
             None => default,
         })
+    }
+
+    /// Like [`Self::opt_usize`] but with no default — `None` when the
+    /// flag is absent (used where a TOML value is the fallback).
+    fn opt_usize_opt(&mut self, name: &str) -> Result<Option<usize>> {
+        self.opt(name)?
+            .map(|v| v.parse().with_context(|| format!("bad {name} value")))
+            .transpose()
     }
 
     fn finish(self) -> Result<()> {
@@ -181,13 +193,16 @@ fn main() -> Result<()> {
         }
         "fleet" => {
             let threaded = args.flag("--threaded");
-            let workers = args.opt_usize("--workers", 1)?;
+            let workers_cli = args.opt_usize_opt("--workers")?;
             let cfg_path = args.opt("--config")?;
             args.finish()?;
-            let (scenario, seed) = match cfg_path {
+            let (scenario, seed, workers_toml) = match cfg_path {
                 Some(p) => config::fleet_from_file(&PathBuf::from(p))?,
-                None => (odl_har::coordinator::Scenario::default(), 1),
+                None => (odl_har::coordinator::Scenario::default(), 1, 1),
             };
+            // CLI beats TOML; 0 means auto (available_parallelism),
+            // resolved once at startup
+            let workers = odl_har::util::auto_workers(workers_cli.unwrap_or(workers_toml));
             if threaded {
                 let counters =
                     odl_har::coordinator::Fleet::run_threaded(&scenario, seed, 600)?;
@@ -195,11 +210,13 @@ fn main() -> Result<()> {
                     println!("edge {id}: queries {queries}, trained {trained}");
                 }
             } else {
-                let fleet = odl_har::coordinator::Fleet::new(
+                // both construction and the event loop ride the worker
+                // budget; either path is bitwise identical to sequential
+                // for any count, so --workers only changes wall time
+                let fleet = odl_har::coordinator::Fleet::new_parallel(
                     odl_har::coordinator::fleet::FleetConfig { scenario, seed },
+                    workers,
                 )?;
-                // run_parallel is bitwise identical to run() for any
-                // worker count, so --workers only changes wall time
                 let report = fleet.run_parallel(workers);
                 println!(
                     "fleet: {} edges, horizon {:.0}s, {} worker(s), teacher queries {}, channel fail {}/{}",
@@ -224,6 +241,40 @@ fn main() -> Result<()> {
                     );
                 }
             }
+        }
+        "sweep" => {
+            let cfg_path = args
+                .opt("--config")?
+                .context("sweep requires --config FILE")?;
+            let workers_cli = args.opt_usize_opt("--workers")?;
+            let out = args
+                .opt("--out")?
+                .map(PathBuf::from)
+                .unwrap_or_else(|| PathBuf::from("results/sweep.jsonl"));
+            args.finish()?;
+            let mut spec = config::sweep_from_file(&PathBuf::from(cfg_path))?;
+            if let Some(w) = workers_cli {
+                spec.workers = w;
+            }
+            // 0 = auto, resolved once at startup
+            spec.workers = odl_har::util::auto_workers(spec.workers);
+            let n_cells = spec.cells().len();
+            println!(
+                "sweep: {n_cells} cells ({} seeds x {} thetas x {} edge counts x {} detectors), {} workers",
+                spec.seeds.len(),
+                spec.thetas.len(),
+                spec.edge_counts.len(),
+                spec.detectors.len(),
+                spec.workers
+            );
+            let outcome = odl_har::coordinator::sweep::run_sweep_to_file(&spec, &out)?;
+            println!(
+                "sweep: done — {} cells, data fitted {} time(s), {} memoization hit(s)",
+                outcome.stats.cells,
+                outcome.stats.artifact_builds,
+                outcome.stats.artifact_hits
+            );
+            println!("results: {}", out.display());
         }
         "artifacts-check" => {
             args.finish()?;
@@ -260,7 +311,11 @@ fn print_help() {
            fig4   [--trials N] [--out DIR]      training-mode power (Figure 4)\n\
            run    --config FILE           custom experiment from TOML\n\
            fleet  [--config FILE] [--workers N] [--threaded]  multi-edge fleet simulation\n\
-                                          (--workers shards edges across threads; same report bit for bit)\n\
+                                          (--workers shards provisioning + event loop; 0 = auto;\n\
+                                           same report bit for bit for any count)\n\
+           sweep  --config FILE [--workers N] [--out FILE]    memoized scenario-grid sweep\n\
+                                          (TOML-declared seeds x thetas x edge counts x detectors;\n\
+                                           shared data fitted once per data config, JSONL results)\n\
            artifacts-check                compile every PJRT artifact"
     );
 }

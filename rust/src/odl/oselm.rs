@@ -197,13 +197,22 @@ impl OsElm {
         // solve can carry ~1-ulp asymmetry; pin it exactly so the mirrored
         // sequential update keeps P bitwise symmetric from here on.
         kernels::symmetrize(&mut self.p.data, self.cfg.n_hidden);
-        // β = P · Hᵀ · Y, computed as P · (Hᵀ Y) to stay N×m.
-        let mut hty = Mat::zeros(self.cfg.n_hidden, self.cfg.n_out);
+        // β = P · Hᵀ · Y, computed as P · (Hᵀ Y) to stay N×m. Y is one-hot,
+        // so HᵀY column c is the sum of the H rows labelled c: accumulate
+        // per-class row sums with contiguous kernels::axpy sweeps (the
+        // seed's loop wrote an m-strided column per sample), then lay the
+        // class rows out as columns. Ascending-row accumulation per
+        // (hidden, class) cell with 1.0·x = x, so the result is bitwise
+        // the seed's strided walk.
+        let mut class_acc = Mat::zeros(self.cfg.n_out, self.cfg.n_hidden);
         for (r, &lbl) in labels.iter().enumerate() {
             ensure!(lbl < self.cfg.n_out, "label {} out of range", lbl);
-            let hrow = h.row(r);
+            kernels::axpy(1.0, h.row(r), class_acc.row_mut(lbl));
+        }
+        let mut hty = Mat::zeros(self.cfg.n_hidden, self.cfg.n_out);
+        for c in 0..self.cfg.n_out {
             for j in 0..self.cfg.n_hidden {
-                *hty.at_mut(j, lbl) += hrow[j];
+                *hty.at_mut(j, c) = class_acc.at(c, j);
             }
         }
         self.beta = self.p.matmul(&hty);
@@ -486,6 +495,29 @@ mod tests {
             m.init_batch(&xs, &labels).unwrap();
             let acc = m.accuracy(&xs, &labels);
             assert!(acc > 0.95, "{alpha:?} train accuracy {acc}");
+        }
+    }
+
+    #[test]
+    fn init_hty_axpy_accumulation_matches_scalar_walk() {
+        // β = P·(HᵀY); the axpy-routed HᵀY must be bitwise the seed's
+        // per-sample strided column walk, so β recomputed from the scalar
+        // walk must equal the model's β bit for bit.
+        let mut rng = Rng64::new(57);
+        let (xs, labels) = toy_data(&mut rng, 90, 12);
+        let mut m = OsElm::new(small_cfg(AlphaKind::Hash), &mut rng, 3);
+        m.init_batch(&xs, &labels).unwrap();
+        let h = m.hidden_batch(&xs);
+        let mut hty = Mat::zeros(m.cfg.n_hidden, m.cfg.n_out);
+        for (r, &lbl) in labels.iter().enumerate() {
+            let hrow = h.row(r);
+            for j in 0..m.cfg.n_hidden {
+                *hty.at_mut(j, lbl) += hrow[j];
+            }
+        }
+        let beta_scalar = m.p.matmul(&hty);
+        for (a, b) in m.beta.data.iter().zip(&beta_scalar.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

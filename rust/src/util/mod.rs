@@ -12,3 +12,30 @@ pub mod table;
 
 pub use rng::{Rng64, SplitMix64};
 pub use stats::{mean_std, RunningStats};
+
+/// Resolve a worker-count request at startup: `0` means **auto** — use
+/// [`std::thread::available_parallelism`]. This is the convention for
+/// every `--workers` flag and TOML `workers` key (see `rust/PERF.md`);
+/// worker counts are wall-clock knobs only, so auto-resolution can never
+/// change a recorded report.
+pub fn auto_workers(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+#[cfg(test)]
+mod worker_tests {
+    use super::auto_workers;
+
+    #[test]
+    fn zero_resolves_to_available_parallelism() {
+        assert!(auto_workers(0) >= 1);
+        assert_eq!(auto_workers(3), 3);
+        assert_eq!(auto_workers(1), 1);
+    }
+}

@@ -96,3 +96,63 @@ fn eval_power_flag_preserves_parallel_determinism() {
     let par = run(&sc, 29, 4);
     assert!(seq.bitwise_eq(&par), "eval_costs_power run diverged");
 }
+
+fn run_provisioned(sc: &Scenario, seed: u64, provision_workers: usize) -> FleetReport {
+    Fleet::new_parallel(
+        FleetConfig {
+            scenario: sc.clone(),
+            seed,
+        },
+        provision_workers,
+    )
+    .unwrap()
+    .run_parallel(2)
+}
+
+#[test]
+fn provisioning_workers_bitwise_identical_across_seeds_and_detectors() {
+    // The construction contract: Fleet::new built with 1/2/8 provisioning
+    // workers must yield bitwise-equal FleetReports after run_parallel,
+    // across seeds and detectors (per-edge init_batch is a pure function
+    // of the shared pool and the edge id — no worker partitioning may
+    // leak into the numbers).
+    for detector in [DetectorKind::Oracle, DetectorKind::Centroid] {
+        let sc = scenario(detector);
+        for seed in [3u64, 17] {
+            let reference = run_provisioned(&sc, seed, 1);
+            for workers in [2usize, 8] {
+                let sharded = run_provisioned(&sc, seed, workers);
+                assert!(
+                    reference.bitwise_eq(&sharded),
+                    "provisioning diverged: {detector:?}, seed {seed}, {workers} workers"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn provisioning_worker_oversubscription_is_safe_and_identical() {
+    // more provisioning workers than edges must clamp, not skew
+    let sc = scenario(DetectorKind::Oracle);
+    let reference = run_provisioned(&sc, 7, 1);
+    let oversubscribed = run_provisioned(&sc, 7, 64);
+    assert!(reference.bitwise_eq(&oversubscribed));
+}
+
+#[test]
+fn provisioning_and_run_workers_compose_bitwise() {
+    // sequential everything vs sharded construction + sharded event loop
+    let sc = scenario(DetectorKind::Oracle);
+    let sequential = run(&sc, 23, 0);
+    let sharded = Fleet::new_parallel(
+        FleetConfig {
+            scenario: sc.clone(),
+            seed: 23,
+        },
+        8,
+    )
+    .unwrap()
+    .run_parallel(4);
+    assert!(sequential.bitwise_eq(&sharded));
+}

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Perf regression gate: re-runs the self-measuring benches and compares
-# BENCH_hotpath.json / BENCH_fleet.json against the previous accepted run
+# BENCH_hotpath.json / BENCH_fleet.json / BENCH_sweep.json against the
+# previous accepted run
 # (kept next to them as BENCH_<name>.prev.json). Fails on a >10 %
 # regression of any tracked metric; on success rotates the fresh numbers
 # in as the new baseline.
@@ -13,6 +14,9 @@
 #            train_step_561_256_6             (higher is better)
 #   fleet:   speedup_loop @ 256 edges         (higher is better)
 #            seq_loop_s   @ 256 edges         (lower is better)
+#            provision_speedup @ 256 edges    (higher is better)
+#            provision_ms @ 256 edges         (lower is better)
+#   sweep:   memo_speedup                     (higher is better)
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -20,6 +24,7 @@ cd "$(dirname "$0")/../rust"
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
   ODL_BENCH_FAST=1 cargo bench --bench bench_hotpath
   ODL_BENCH_FAST=1 cargo bench --bench bench_fleet_scale
+  ODL_BENCH_FAST=1 cargo bench --bench bench_sweep
 fi
 
 python3 - <<'PY'
@@ -73,6 +78,11 @@ check("hotpath", "BENCH_hotpath.json", "BENCH_hotpath.prev.json", [
 check("fleet", "BENCH_fleet.json", "BENCH_fleet.prev.json", [
     ("speedup_loop@256edges", fleet_metric(256, "speedup_loop"), True),
     ("seq_loop_s@256edges", fleet_metric(256, "seq_loop_s"), False),
+    ("provision_speedup@256edges", fleet_metric(256, "provision_speedup"), True),
+    ("provision_ms@256edges", fleet_metric(256, "provision_ms"), False),
+])
+check("sweep", "BENCH_sweep.json", "BENCH_sweep.prev.json", [
+    ("memo_speedup", lambda d: d.get("memo_speedup"), True),
 ])
 
 if failures:
@@ -81,7 +91,13 @@ if failures:
 print("bench_check: PASS")
 PY
 
-for f in BENCH_hotpath.json BENCH_fleet.json; do
+# compare-only mode must not accept numbers it did not measure: rotating
+# here would let repeated <=10% regressions compound into the baseline
+if [[ "${SKIP_BENCH:-0}" == "1" ]]; then
+  echo "bench_check: SKIP_BENCH=1 — compare only, baselines NOT rotated"
+  exit 0
+fi
+for f in BENCH_hotpath.json BENCH_fleet.json BENCH_sweep.json; do
   if [[ -f "$f" ]]; then
     cp "$f" "${f%.json}.prev.json"
   fi

@@ -1,13 +1,15 @@
 #!/usr/bin/env bash
 # One-command tier-1 verify + perf smoke run.
 #
-#   scripts/verify.sh            # build, test, fast benches
+#   scripts/verify.sh            # build, test, fast benches, sweep smoke
 #
 # The benches write rust/BENCH_hotpath.json (per-op ns, samples/s, and the
-# kernel-vs-scalar-baseline speedups measured on this machine) and
-# rust/BENCH_fleet.json (sequential vs sharded event-loop wall time); see
-# rust/PERF.md for how to read them. Use scripts/bench_check.sh to gate a
-# change on >10 % perf regressions against the previous accepted run.
+# kernel-vs-scalar-baseline speedups measured on this machine),
+# rust/BENCH_fleet.json (sequential vs sharded event-loop wall time plus
+# the sequential-vs-sharded provisioning split), and rust/BENCH_sweep.json
+# (naive vs memoized scenario grid); see rust/PERF.md for how to read
+# them. Use scripts/bench_check.sh to gate a change on >10 % perf
+# regressions against the previous accepted run.
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -15,8 +17,18 @@ cd "$(dirname "$0")/../rust"
 cargo build --release
 cargo test -q
 # the parallel-engine determinism contract, explicitly (it is part of the
-# suite above too; run again by name so a sharding regression fails loudly
-# and in isolation)
+# suite above too; run again by name so a sharding regression — event
+# loop or provisioning — fails loudly and in isolation)
 cargo test -q --test fleet_determinism
 ODL_BENCH_FAST=1 cargo bench --bench bench_hotpath
 ODL_BENCH_FAST=1 cargo bench --bench bench_fleet_scale
+ODL_BENCH_FAST=1 cargo bench --bench bench_sweep
+# sweep smoke: a TOML-declared grid end to end through the CLI; the
+# results file must contain header + 4 cells + stats trailer
+./target/release/odl-har sweep --config configs/sweep_smoke.toml --out /tmp/odl_sweep_smoke.jsonl
+lines=$(wc -l < /tmp/odl_sweep_smoke.jsonl)
+if [[ "$lines" -ne 6 ]]; then
+  echo "sweep smoke: expected 6 result lines, got $lines" >&2
+  exit 1
+fi
+echo "verify: OK"
