@@ -1,20 +1,28 @@
 //! Scenario-sweep benchmark: a TOML-shaped grid (seeds × thetas × edge
 //! counts) run the naive way — one full `Fleet::new` per cell, back to
-//! back — vs the memoized `coordinator::sweep` engine (shared artifacts
-//! fitted once per data config, cells fanned over the worker pool).
+//! back — vs the memoized `coordinator::sweep` engine (shared artifacts +
+//! per-fleet shuffles memoized, built lazily, dropped at last use, cells
+//! fanned over the shared executor), plus the resume path.
 //!
 //! Before timing anything it asserts the engine contracts:
 //!
 //! * memoization actually engages (`artifact_builds == 1`,
-//!   `artifact_hits == cells − 1` for the pinned data seed);
+//!   `artifact_hits == cells − 1` for the pinned data seed; one shuffle
+//!   build per simulation seed);
 //! * every memoized cell report is **bitwise identical** to the
-//!   individually constructed fleet for the same scenario.
+//!   individually constructed fleet for the same scenario;
+//! * a sweep resumed from a truncated results file finishes **byte
+//!   identical** to the uninterrupted file.
 //!
 //! Results go to `BENCH_sweep.json` (`ODL_BENCH_SWEEP_JSON` overrides);
-//! `scripts/bench_check.sh` gates `memo_speedup` regressions > 10 %.
+//! `scripts/bench_check.sh` gates `memo_speedup` regressions > 10 % and
+//! `resume_overhead_frac` (a resumed-complete run must be ~free —
+//! skipping every cell, verifying the trailer, writing nothing).
 
 use odl_har::coordinator::fleet::{DetectorKind, Fleet, FleetConfig, Scenario};
-use odl_har::coordinator::sweep::{run_sweep, SweepSpec};
+use odl_har::coordinator::sweep::{
+    resume_sweep_to_file, run_sweep, run_sweep_to_file, SweepSpec,
+};
 use odl_har::data::SynthConfig;
 use odl_har::util::bench::{bench, fast_mode};
 use odl_har::util::json::{obj, Json};
@@ -42,14 +50,18 @@ fn base_scenario() -> Scenario {
 }
 
 fn spec(workers: usize) -> SweepSpec {
+    let base = base_scenario();
     SweepSpec {
-        base: base_scenario(),
         seeds: vec![1, 2],
         thetas: vec![None, Some(0.2)],
         edge_counts: vec![4, 8],
         detectors: vec![DetectorKind::Oracle],
+        n_hiddens: vec![base.n_hidden],
+        loss_probs: vec![base.channel.loss_prob],
+        teacher_errors: vec![base.teacher_error],
         workers,
         record_pca: false,
+        base,
     }
 }
 
@@ -87,6 +99,11 @@ fn main() {
         "memoization must hit every remaining cell (hits {})",
         outcome.stats.artifact_hits
     );
+    assert_eq!(
+        outcome.stats.shuffle_builds, 2,
+        "the per-fleet shuffle must memoize per (data key, seed)"
+    );
+    assert_eq!(outcome.stats.shuffle_hits, n_cells - 2);
     let naive_reports = run_naive(&spec);
     for ((cell, memo), naive) in outcome.reports.iter().zip(&naive_reports) {
         assert!(
@@ -96,9 +113,34 @@ fn main() {
         );
     }
     println!(
-        "  contracts hold: builds {}, hits {}, all {} reports bitwise equal",
-        outcome.stats.artifact_builds, outcome.stats.artifact_hits, n_cells
+        "  contracts hold: builds {}, hits {}, shuffles {}+{}, all {} reports bitwise equal",
+        outcome.stats.artifact_builds,
+        outcome.stats.artifact_hits,
+        outcome.stats.shuffle_builds,
+        outcome.stats.shuffle_hits,
+        n_cells
     );
+
+    // resume contract: truncate mid-grid, resume, compare bytes
+    let dir = std::env::temp_dir().join("odl_har_bench_sweep");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("sweep.jsonl");
+    run_sweep_to_file(&spec, &path).expect("sweep to file failed");
+    let full = std::fs::read_to_string(&path).expect("read results");
+    let cut: String = full.lines().take(4).map(|l| format!("{l}\n")).collect();
+    std::fs::write(&path, cut).expect("truncate results");
+    let resumed = resume_sweep_to_file(&spec, &path).expect("resume failed");
+    assert_eq!(
+        (resumed.skipped, resumed.ran),
+        (3, n_cells - 3),
+        "resume must keep the 3-row prefix and run the rest"
+    );
+    assert_eq!(
+        std::fs::read_to_string(&path).expect("read resumed results"),
+        full,
+        "resumed file must be byte-identical to the uninterrupted run"
+    );
+    println!("  resume contract holds: 3 kept + {} rerun, bytes identical", n_cells - 3);
 
     let iters = if fast_mode() { 3 } else { 5 };
     let r_naive = bench(&format!("sweep naive {n_cells:>2} cells"), 1, iters, || {
@@ -118,8 +160,36 @@ fn main() {
         r_naive.mean_s, r_memo.mean_s
     );
 
+    // resume overhead: a full file run vs resuming the already complete
+    // file (parse + verify + write nothing). The latter must be ~free.
+    let r_file = bench(
+        &format!("sweep to-file {n_cells:>2} cells"),
+        1,
+        iters,
+        || {
+            std::hint::black_box(run_sweep_to_file(&spec, &path).expect("sweep to file failed"));
+        },
+    );
+    let r_resume = bench(
+        &format!("sweep resume complete {n_cells:>2} cells"),
+        1,
+        iters,
+        || {
+            let out = resume_sweep_to_file(&spec, &path).expect("resume failed");
+            assert!(out.already_complete, "complete file must resume as a no-op");
+            std::hint::black_box(out);
+        },
+    );
+    let resume_overhead_frac = r_resume.mean_s / r_file.mean_s.max(1e-9);
+    println!(
+        "  -> resume of a complete file: {:.1} ms = {:.3} of a full file run",
+        r_resume.mean_s * 1e3,
+        resume_overhead_frac
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+
     let out = obj(vec![
-        ("schema", Json::Str("bench_sweep/v1".into())),
+        ("schema", Json::Str("bench_sweep/v2".into())),
         ("fast_mode", Json::Bool(fast_mode())),
         ("workers", Json::Num(workers as f64)),
         ("cells", Json::Num(n_cells as f64)),
@@ -131,9 +201,20 @@ fn main() {
             "artifact_hits",
             Json::Num(outcome.stats.artifact_hits as f64),
         ),
+        (
+            "shuffle_builds",
+            Json::Num(outcome.stats.shuffle_builds as f64),
+        ),
+        (
+            "shuffle_hits",
+            Json::Num(outcome.stats.shuffle_hits as f64),
+        ),
         ("naive_s", Json::Num(r_naive.mean_s)),
         ("memo_s", Json::Num(r_memo.mean_s)),
         ("memo_speedup", Json::Num(memo_speedup)),
+        ("file_s", Json::Num(r_file.mean_s)),
+        ("resume_complete_s", Json::Num(r_resume.mean_s)),
+        ("resume_overhead_frac", Json::Num(resume_overhead_frac)),
     ]);
     let path =
         std::env::var("ODL_BENCH_SWEEP_JSON").unwrap_or_else(|_| "BENCH_sweep.json".into());

@@ -183,6 +183,9 @@ fn scenario_from_doc(doc: &TomlDoc) -> Result<(Scenario, u64, usize)> {
 /// thetas = ["auto", 0.1, 0.2]   # "auto" = the auto-θ ladder
 /// edge_counts = [8, 64]
 /// detectors = ["oracle", "centroid"]
+/// n_hiddens = [64, 128, 256]    # hidden-layer widths
+/// loss_probs = [0.0, 0.25]      # channel loss probabilities
+/// teacher_errors = [0.0, 0.1]   # teacher label-error rates
 /// workers = 0                   # cross-cell workers; 0 = auto
 /// record_pca = false
 /// ```
@@ -215,6 +218,9 @@ pub fn sweep_from_str(text: &str) -> Result<SweepSpec> {
         thetas: vec![base.fixed_theta],
         edge_counts: vec![base.n_edges],
         detectors: vec![base.detector],
+        n_hiddens: vec![base.n_hidden],
+        loss_probs: vec![base.channel.loss_prob],
+        teacher_errors: vec![base.teacher_error],
         workers: doc.get_int("sweep", "workers").unwrap_or(0).max(0) as usize,
         record_pca: doc.get_bool("sweep", "record_pca").unwrap_or(false),
         base,
@@ -263,11 +269,49 @@ pub fn sweep_from_str(text: &str) -> Result<SweepSpec> {
             })
             .collect::<Result<_>>()?;
     }
+    if let Some(items) = sweep_axis(&doc, "n_hiddens")? {
+        spec.n_hiddens = items
+            .iter()
+            .map(|v| match v {
+                TomlValue::Int(i) if *i > 0 => Ok(*i as usize),
+                other => bail!(
+                    "sweep.n_hiddens entries must be positive integers, got {other:?}"
+                ),
+            })
+            .collect::<Result<_>>()?;
+    }
+    let prob_axis = |key: &str, out: &mut Vec<f64>| -> Result<()> {
+        if let Some(items) = sweep_axis(&doc, key)? {
+            *out = items
+                .iter()
+                .map(|v| {
+                    let p = match v {
+                        TomlValue::Float(f) => *f,
+                        TomlValue::Int(i) => *i as f64,
+                        other => bail!(
+                            "sweep.{key} entries must be probabilities in [0, 1], got {other:?}"
+                        ),
+                    };
+                    ensure!(
+                        (0.0..=1.0).contains(&p),
+                        "sweep.{key} entry {p} is outside [0, 1]"
+                    );
+                    Ok(p)
+                })
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    };
+    prob_axis("loss_probs", &mut spec.loss_probs)?;
+    prob_axis("teacher_errors", &mut spec.teacher_errors)?;
     ensure!(
         !spec.seeds.is_empty()
             && !spec.thetas.is_empty()
             && !spec.edge_counts.is_empty()
-            && !spec.detectors.is_empty(),
+            && !spec.detectors.is_empty()
+            && !spec.n_hiddens.is_empty()
+            && !spec.loss_probs.is_empty()
+            && !spec.teacher_errors.is_empty(),
         "sweep grid axes must be non-empty"
     );
     Ok(spec)
@@ -365,6 +409,9 @@ seeds = [1, 2]
 thetas = ["auto", 0.2]
 edge_counts = [4, 8]
 detectors = ["oracle", "centroid"]
+n_hiddens = [64, 128]
+loss_probs = [0.0, 0.25]
+teacher_errors = [0.0, 0.1]
 workers = 3
 record_pca = true
 "#;
@@ -376,19 +423,25 @@ record_pca = true
             spec.detectors,
             vec![DetectorKind::Oracle, DetectorKind::Centroid]
         );
+        assert_eq!(spec.n_hiddens, vec![64, 128]);
+        assert_eq!(spec.loss_probs, vec![0.0, 0.25]);
+        assert_eq!(spec.teacher_errors, vec![0.0, 0.1]);
         assert_eq!(spec.workers, 3);
         assert!(spec.record_pca);
         assert_eq!(spec.base.data_seed, Some(123));
-        assert_eq!(spec.cells().len(), 16);
+        assert_eq!(spec.cells().len(), 128);
     }
 
     #[test]
     fn sweep_axes_default_to_base_scenario() {
-        let spec = sweep_from_str("[fleet]\nn_edges = 6\nseed = 4\n").unwrap();
+        let spec = sweep_from_str("[fleet]\nn_edges = 6\nn_hidden = 48\nseed = 4\n").unwrap();
         assert_eq!(spec.seeds, vec![4]);
         assert_eq!(spec.thetas, vec![None]);
         assert_eq!(spec.edge_counts, vec![6]);
         assert_eq!(spec.detectors, vec![DetectorKind::Oracle]);
+        assert_eq!(spec.n_hiddens, vec![48]);
+        assert_eq!(spec.loss_probs, vec![0.0]);
+        assert_eq!(spec.teacher_errors, vec![0.0]);
         assert_eq!(spec.workers, 0, "sweep default is auto");
         assert_eq!(spec.cells().len(), 1);
     }
@@ -399,10 +452,25 @@ record_pca = true
         assert!(sweep_from_str("[sweep]\ndetectors = [\"kalman\"]\n").is_err());
         assert!(sweep_from_str("[sweep]\nedge_counts = [0]\n").is_err());
         assert!(sweep_from_str("[sweep]\nseeds = []\n").is_err());
+        assert!(sweep_from_str("[sweep]\nn_hiddens = [0]\n").is_err());
+        assert!(sweep_from_str("[sweep]\nn_hiddens = [\"wide\"]\n").is_err());
+        assert!(sweep_from_str("[sweep]\nloss_probs = [1.5]\n").is_err());
+        assert!(sweep_from_str("[sweep]\nloss_probs = [-0.1]\n").is_err());
+        assert!(sweep_from_str("[sweep]\nteacher_errors = [2]\n").is_err());
+        assert!(sweep_from_str("[sweep]\nteacher_errors = [\"oops\"]\n").is_err());
         // a present-but-scalar axis must error, not silently collapse the
         // grid to the base scenario's single value
         assert!(sweep_from_str("[sweep]\nseeds = 5\n").is_err());
         assert!(sweep_from_str("[sweep]\nedge_counts = 64\n").is_err());
+        assert!(sweep_from_str("[sweep]\nloss_probs = 0.5\n").is_err());
+    }
+
+    #[test]
+    fn sweep_prob_axes_accept_integer_endpoints() {
+        let spec =
+            sweep_from_str("[sweep]\nloss_probs = [0, 1]\nteacher_errors = [0]\n").unwrap();
+        assert_eq!(spec.loss_probs, vec![0.0, 1.0]);
+        assert_eq!(spec.teacher_errors, vec![0.0]);
     }
 
     #[test]

@@ -29,8 +29,9 @@
 //!   `f64` fold has a single association order.
 //!
 //! Because no f32/f64 operation ever depends on cross-edge interleaving,
-//! [`Fleet::run_parallel`] (scoped worker threads over shard chunks)
-//! produces a [`FleetReport`] **bitwise identical** to the sequential
+//! [`Fleet::run_parallel`] (contiguous shard chunks over
+//! [`crate::util::parallel::for_each_shard_mut`]) produces a
+//! [`FleetReport`] **bitwise identical** to the sequential
 //! [`Fleet::run`] for the same seed — asserted by
 //! `tests/fleet_determinism.rs` and re-checked by `bench_fleet_scale`
 //! before it times anything. `run_threaded()` remains the live-system
@@ -48,9 +49,10 @@
 //!    [`super::sweep`] engine memoizes them across a scenario grid).
 //! 2. **Per-edge provisioning**: each edge's model build + `init_batch`
 //!    reads only the shared artifacts and its own id, so
-//!    [`Fleet::new_parallel`] shards edge construction over scoped
-//!    worker threads on per-edge seed streams
-//!    (`stream_seed(seed, PROVISION, edge)`) — bitwise identical to the
+//!    [`Fleet::new_parallel`] fans edge construction over the shared
+//!    executor's keyed streams
+//!    ([`crate::util::parallel::parallel_map_keyed`], per-edge
+//!    `stream_seed(seed, PROVISION, edge)`) — bitwise identical to the
 //!    sequential [`Fleet::new`] for every worker count, by the same
 //!    no-shared-mutable-state argument as the event loop.
 
@@ -66,7 +68,8 @@ use crate::hw::{CycleModel, PowerModel, PowerState};
 use crate::linalg::Mat;
 use crate::odl::{AlphaKind, OsElmConfig};
 use crate::pruning::{Metric, Pruner, ThetaPolicy};
-use crate::util::rng::{mix64, stream_seed, CounterRng, Rng64, RngStream, GOLDEN_GAMMA};
+use crate::util::parallel;
+use crate::util::rng::{hash_fold, stream_seed, CounterRng, Rng64, RngStream};
 use anyhow::{ensure, Result};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -234,7 +237,7 @@ impl ProvisionArtifacts {
             confuse_frac,
             confuse_blend,
         } = &sc.synth;
-        let fold = |acc: u64, v: u64| mix64(acc ^ v.wrapping_mul(GOLDEN_GAMMA));
+        let fold = hash_fold;
         let mut k = 0x0DA7A_u64;
         for v in [
             *n_features as u64,
@@ -290,6 +293,17 @@ impl ProvisionArtifacts {
             in_subjects,
             pca,
         }
+    }
+
+    /// The per-fleet provisioning row order under fleet seed `seed` —
+    /// verbatim the historic in-place shuffle (same `Rng64::new(seed)`
+    /// stream and draw sequence). A pure function of `(artifacts, seed)`,
+    /// which is what lets the sweep engine memoize the shuffled pool per
+    /// `(data key, seed)` pair and lend it to every cell that shares
+    /// both.
+    pub fn shuffled_train(&self, seed: u64) -> Dataset {
+        let mut rng = Rng64::new(seed);
+        self.train.shuffled(&mut rng)
     }
 }
 
@@ -552,6 +566,7 @@ fn build_edge_sim(
     sc: &Scenario,
     seed: u64,
     id: usize,
+    edge_rng: &mut Rng64,
     train: &Dataset,
     in_subjects: &[usize],
 ) -> Result<EdgeSim> {
@@ -571,11 +586,12 @@ fn build_edge_sim(
         DetectorKind::Centroid => Box::new(CentroidDetector::new(sc.synth.n_features)),
     };
     let warmup = crate::pruning::warmup_for(sc.n_hidden).min(sc.train_target / 2);
-    // Per-edge provisioning stream. AlphaKind::Hash draws nothing here
-    // (α comes from the 16-bit xorshift keyed by hash_seed), so this
-    // matches the historical shared-rng construction bit for bit while
-    // keeping shards independent.
-    let mut edge_rng = Rng64::new(stream_seed(seed, domain::PROVISION, id as u64));
+    // `edge_rng` is this edge's private provisioning stream,
+    // `stream_seed(seed, PROVISION, id)` — handed in by the executor's
+    // keyed-stream fan-out. AlphaKind::Hash draws nothing from it (α
+    // comes from the 16-bit xorshift keyed by hash_seed), so this matches
+    // the historical shared-rng construction bit for bit while keeping
+    // shards independent.
     let mut edge = EdgeDevice::new(
         id,
         EdgeConfig {
@@ -585,7 +601,7 @@ fn build_edge_sim(
             detector,
             train_target: sc.train_target,
         },
-        &mut edge_rng,
+        edge_rng,
     );
     edge.provision(&train.xs, &train.labels)?;
     let pre = in_subjects[id % in_subjects.len()];
@@ -661,55 +677,46 @@ impl Fleet {
         artifacts: &ProvisionArtifacts,
         provision_workers: usize,
     ) -> Result<Fleet> {
+        // The per-fleet row order: same stream and draw sequence as the
+        // historical in-place shuffle.
+        let train = artifacts.shuffled_train(cfg.seed);
+        Fleet::with_shuffled_pool(cfg, artifacts, &train, provision_workers)
+    }
+
+    /// Construct from pre-built shared artifacts **and** a pre-shuffled
+    /// provisioning pool. `train` must be
+    /// `artifacts.shuffled_train(cfg.seed)` — the per-fleet row order is
+    /// part of every recorded trajectory, so the sweep engine memoizes it
+    /// per `(data key, seed)` pair and lends the same shuffled pool to
+    /// every cell sharing both.
+    pub fn with_shuffled_pool(
+        cfg: FleetConfig,
+        artifacts: &ProvisionArtifacts,
+        train: &Dataset,
+        provision_workers: usize,
+    ) -> Result<Fleet> {
         let sc = &cfg.scenario;
         ensure!(
             artifacts.key == ProvisionArtifacts::data_key(sc, cfg.seed),
             "provisioning artifacts were built for a different data config"
         );
-        // The per-fleet row order: same stream and draw sequence as the
-        // historical in-place shuffle.
-        let mut rng = Rng64::new(cfg.seed);
-        let train = artifacts.train.shuffled(&mut rng);
-
         let n_edges = sc.n_edges;
-        let workers = provision_workers.max(1).min(n_edges.max(1));
-        let sims: Vec<EdgeSim> = if workers <= 1 {
-            let mut sims = Vec::with_capacity(n_edges);
-            for id in 0..n_edges {
-                sims.push(build_edge_sim(sc, cfg.seed, id, &train, &artifacts.in_subjects)?);
-            }
-            sims
-        } else {
-            let chunk = n_edges.div_ceil(workers);
-            let train_ref = &train;
-            let subjects = artifacts.in_subjects.as_slice();
-            let seed = cfg.seed;
-            let shards: Vec<Result<Vec<EdgeSim>>> = std::thread::scope(|scope| {
-                let mut handles = Vec::with_capacity(workers);
-                let mut start = 0;
-                while start < n_edges {
-                    let end = (start + chunk).min(n_edges);
-                    handles.push(scope.spawn(move || -> Result<Vec<EdgeSim>> {
-                        let mut shard = Vec::with_capacity(end - start);
-                        for id in start..end {
-                            shard.push(build_edge_sim(sc, seed, id, train_ref, subjects)?);
-                        }
-                        Ok(shard)
-                    }));
-                    start = end;
-                }
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("provisioning worker panicked"))
-                    .collect()
-            });
-            // join order == spawn order == ascending edge ids
-            let mut sims = Vec::with_capacity(n_edges);
-            for shard in shards {
-                sims.extend(shard?);
-            }
-            sims
-        };
+        let seed = cfg.seed;
+        // Per-edge provisioning over the shared executor's keyed streams:
+        // edge `id` draws (if its α kind ever samples) from the private
+        // `stream_seed(seed, PROVISION, id)` stream, so the build is a
+        // pure function of `(scenario, seed, id, shuffled pool)` and the
+        // ordered fan-out is bitwise identical to the sequential walk for
+        // every worker count.
+        let sims: Vec<EdgeSim> = parallel::parallel_map_keyed(
+            provision_workers,
+            n_edges,
+            seed,
+            domain::PROVISION,
+            |id, edge_rng| build_edge_sim(sc, seed, id, edge_rng, train, &artifacts.in_subjects),
+        )
+        .into_iter()
+        .collect::<Result<_>>()?;
 
         let cycles = CycleModel::prototype().with_dims(
             sc.synth.n_features,
@@ -760,23 +767,9 @@ impl Fleet {
             cycles,
             eval_workers: if workers > 1 { 1 } else { n_workers.max(1) },
         };
-        if workers <= 1 {
-            for sim in sims.iter_mut() {
-                sim.run_to_horizon(&ctx);
-            }
-        } else {
-            let chunk = n_edges.div_ceil(workers);
-            let ctx_ref = &ctx;
-            std::thread::scope(|scope| {
-                for shard in sims.chunks_mut(chunk) {
-                    scope.spawn(move || {
-                        for sim in shard.iter_mut() {
-                            sim.run_to_horizon(ctx_ref);
-                        }
-                    });
-                }
-            });
-        }
+        // contiguous ⌈n/w⌉ shards over the shared executor — the same
+        // chunk layout the bespoke scope used, now one audited code path
+        parallel::for_each_shard_mut(workers, &mut sims, |sim| sim.run_to_horizon(&ctx));
 
         // close the books: remaining time is sleep; merge in edge order
         let horizon = cfg.scenario.horizon_s;
@@ -1033,6 +1026,24 @@ mod tests {
         let direct = Fleet::new(cfg.clone()).unwrap().run();
         let shared = Fleet::with_artifacts(cfg, &artifacts, 2).unwrap().run();
         assert!(direct.bitwise_eq(&shared));
+    }
+
+    #[test]
+    fn memoized_shuffled_pool_matches_with_artifacts() {
+        // the sweep engine's (data key, seed)-memoized shuffle path must
+        // be indistinguishable from with_artifacts' private shuffle
+        let sc = small_scenario();
+        let cfg = FleetConfig {
+            scenario: sc.clone(),
+            seed: 12,
+        };
+        let artifacts = ProvisionArtifacts::build(&sc, 12, false);
+        let train = artifacts.shuffled_train(12);
+        let direct = Fleet::with_artifacts(cfg.clone(), &artifacts, 1).unwrap().run();
+        let memoized = Fleet::with_shuffled_pool(cfg, &artifacts, &train, 2)
+            .unwrap()
+            .run();
+        assert!(direct.bitwise_eq(&memoized));
     }
 
     #[test]

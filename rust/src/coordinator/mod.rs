@@ -18,7 +18,10 @@
 //! vendor set; the event loop is explicit instead). Construction is
 //! sharded the same way ([`fleet::Fleet::new_parallel`]), and
 //! [`sweep`] fans whole scenario grids over a worker pool with the
-//! shared provisioning artifacts memoized per data config.
+//! shared provisioning artifacts (and per-fleet shuffles) memoized,
+//! lazily built, dropped at their last-use cell, and resumable into an
+//! existing results file. Every fan-out rides the shared deterministic
+//! executor in [`crate::util::parallel`].
 
 pub mod channel;
 pub mod edge;
@@ -31,5 +34,5 @@ pub use channel::{Channel, ChannelConfig};
 pub use edge::{EdgeConfig, EdgeDevice, Mode, StepAction};
 pub use fleet::{Fleet, FleetConfig, ProvisionArtifacts, Scenario};
 pub use metrics::{EdgeMetrics, FleetReport};
-pub use sweep::{SweepOutcome, SweepSpec, SweepStats};
+pub use sweep::{ResumeOutcome, SweepOutcome, SweepPlan, SweepSpec, SweepStats};
 pub use teacher::{Teacher, TeacherKind};

@@ -1,40 +1,70 @@
-//! Memoized scenario-sweep engine — the cross-fleet level of the parallel
-//! provisioning stack (`odl-har sweep`).
+//! Memoized, resumable scenario-sweep engine — the cross-fleet level of
+//! the parallel provisioning stack (`odl-har sweep`).
 //!
 //! A parameter study (the paper's Fig. 3/4 and Table 3 are exactly this)
-//! runs a grid of fleet scenarios: seeds × pruning thresholds × fleet
-//! sizes × detectors. Naively each cell pays the full `Fleet::new` —
-//! pool generation, standardizer fit, and per-edge `init_batch` — even
-//! though every cell with the same data config generates bitwise the same
-//! pool. This engine:
+//! runs a grid of fleet scenarios. The grid spans **seven axes** — seeds ×
+//! pruning thresholds × fleet sizes × detectors × hidden widths × channel
+//! loss × teacher error — enumerated in one deterministic order
+//! ([`SweepSpec::cells`]). Naively each cell pays the full `Fleet::new`:
+//! pool generation, standardizer fit, the per-fleet shuffle, and per-edge
+//! `init_batch`. This engine instead precomputes a [`SweepPlan`] and
+//! executes it over the shared deterministic executor
+//! ([`crate::util::parallel`]):
 //!
-//! 1. enumerates the grid in one deterministic order
-//!    ([`SweepSpec::cells`]: seeds → thetas → edge counts → detectors);
-//! 2. **memoizes** [`ProvisionArtifacts`] by
-//!    [`ProvisionArtifacts::data_key`], so a P-point grid fits the data
-//!    once per distinct `(synth config, data seed)` instead of P times
-//!    (pin `Scenario::data_seed` in the sweep config to share across
-//!    simulation seeds too);
-//! 3. fans the cells over a scoped worker pool and **streams** one JSON
-//!    row per cell, in cell order, into the results file (an
-//!    [`OrderedSink`] reorders out-of-order completions before writing).
+//! 1. [`ProvisionArtifacts`] are **memoized** by
+//!    [`ProvisionArtifacts::data_key`] and built **lazily** at their
+//!    first-use cell — whichever worker gets there first builds under the
+//!    slot lock (a pure function of the key, so any builder produces the
+//!    same bits) — and **dropped at their last-use cell**, so peak memory
+//!    tracks the in-flight working set, not the grid's seed count.
+//! 2. The per-fleet **shuffled pool** is memoized the same way, keyed
+//!    `(data key, fleet seed)` alongside the artifact memo
+//!    ([`ProvisionArtifacts::shuffled_train`] is pure), with its own
+//!    last-use drop point.
+//! 3. Cells fan over [`crate::util::parallel::parallel_map_n`] and
+//!    **stream** one JSON row per cell, in cell order, into the results
+//!    file (an [`OrderedSink`] reorders out-of-order completions).
+//!
+//! # Resume protocol
+//!
+//! [`resume_sweep_to_file`] (`odl-har sweep --resume`) restarts an
+//! interrupted sweep: it re-derives the header (schema + cell count +
+//! [`SweepPlan::grid_hash`], a fingerprint of every cell's full scenario
+//! plus `record_pca` — every knob that can move an output byte) and
+//! refuses to touch a file whose header doesn't match byte for byte.
+//! It then keeps the longest valid prefix of completed cell rows (original
+//! bytes, verbatim — a truncated trailing line from a kill mid-write is
+//! discarded), re-runs only the remaining cells, and appends the stats
+//! trailer. Because every cell report is deterministic, the final file is
+//! **byte-identical** to an uninterrupted run; resuming an already
+//! complete file verifies the trailer and writes nothing.
 //!
 //! Determinism contract: each cell's `FleetReport` is **bitwise
 //! identical** to the report of an individually constructed
-//! `Fleet::new(cfg).run()` for the same scenario — memoization and the
-//! worker pool are wall-clock knobs, never numerics knobs. Asserted by
-//! the in-module tests and re-checked by `benches/bench_sweep.rs` before
-//! it times anything.
+//! `Fleet::new(cfg).run()` for the same scenario — memoization, lazy
+//! builds, drop points, the worker pool, and resume are wall-clock/memory
+//! knobs, never numerics knobs. Asserted by the in-module tests and
+//! re-checked by `benches/bench_sweep.rs` before it times anything.
 
+use super::channel::ChannelConfig;
 use super::fleet::{DetectorKind, Fleet, FleetConfig, ProvisionArtifacts, Scenario};
 use super::metrics::FleetReport;
+use crate::data::Dataset;
 use crate::util::json::{obj, Json};
-use anyhow::{Context, Result};
+use crate::util::parallel;
+use crate::util::rng::hash_fold;
+use anyhow::{ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Results-file schema tag. v2 added the `n_hidden` / `loss_prob` /
+/// `teacher_error` axes and the `grid_hash` resume fingerprint, and
+/// dropped the worker count from the header (the stream is a pure
+/// function of the spec; worker counts are wall-clock knobs and a resume
+/// may legitimately use a different count than the original run).
+const SCHEMA: &str = "odl-har-sweep/v2";
 
 /// A declared scenario grid. Every axis left at its one-element default
 /// degenerates to the base scenario's value, so a sweep with only
@@ -51,6 +81,12 @@ pub struct SweepSpec {
     pub edge_counts: Vec<usize>,
     /// Drift detectors.
     pub detectors: Vec<DetectorKind>,
+    /// Hidden-layer widths (the model-capacity axis).
+    pub n_hiddens: Vec<usize>,
+    /// Channel loss probabilities (the connectivity axis).
+    pub loss_probs: Vec<f64>,
+    /// Teacher label-error rates (the supervision-quality axis).
+    pub teacher_errors: Vec<f64>,
     /// Cross-cell worker threads (0 = auto via
     /// [`crate::util::auto_workers`]; resolve before calling the engine).
     pub workers: usize,
@@ -67,6 +103,9 @@ impl Default for SweepSpec {
             thetas: vec![base.fixed_theta],
             edge_counts: vec![base.n_edges],
             detectors: vec![base.detector],
+            n_hiddens: vec![base.n_hidden],
+            loss_probs: vec![base.channel.loss_prob],
+            teacher_errors: vec![base.teacher_error],
             workers: 1,
             record_pca: false,
             base,
@@ -82,47 +121,239 @@ pub struct SweepCell {
     pub theta: Option<f32>,
     pub n_edges: usize,
     pub detector: DetectorKind,
+    pub n_hidden: usize,
+    pub loss_prob: f64,
+    pub teacher_error: f64,
 }
 
 impl SweepSpec {
-    /// Materialize the grid in its one deterministic order:
-    /// seeds → thetas → edge counts → detectors.
+    /// Materialize the grid in its one deterministic order: seeds →
+    /// thetas → edge counts → detectors → hidden widths → loss probs →
+    /// teacher errors (first axis slowest, last axis fastest).
     pub fn cells(&self) -> Vec<(SweepCell, Scenario)> {
         let mut out = Vec::with_capacity(
-            self.seeds.len() * self.thetas.len() * self.edge_counts.len() * self.detectors.len(),
+            self.seeds.len()
+                * self.thetas.len()
+                * self.edge_counts.len()
+                * self.detectors.len()
+                * self.n_hiddens.len()
+                * self.loss_probs.len()
+                * self.teacher_errors.len(),
         );
         for &seed in &self.seeds {
             for &theta in &self.thetas {
                 for &n_edges in &self.edge_counts {
                     for &detector in &self.detectors {
-                        let mut sc = self.base.clone();
-                        sc.fixed_theta = theta;
-                        sc.n_edges = n_edges;
-                        sc.detector = detector;
-                        out.push((
-                            SweepCell {
-                                index: out.len(),
-                                seed,
-                                theta,
-                                n_edges,
-                                detector,
-                            },
-                            sc,
-                        ));
+                        for &n_hidden in &self.n_hiddens {
+                            for &loss_prob in &self.loss_probs {
+                                for &teacher_error in &self.teacher_errors {
+                                    let mut sc = self.base.clone();
+                                    sc.fixed_theta = theta;
+                                    sc.n_edges = n_edges;
+                                    sc.detector = detector;
+                                    sc.n_hidden = n_hidden;
+                                    sc.channel.loss_prob = loss_prob;
+                                    sc.teacher_error = teacher_error;
+                                    out.push((
+                                        SweepCell {
+                                            index: out.len(),
+                                            seed,
+                                            theta,
+                                            n_edges,
+                                            detector,
+                                            n_hidden,
+                                            loss_prob,
+                                            teacher_error,
+                                        },
+                                        sc,
+                                    ));
+                                }
+                            }
+                        }
                     }
                 }
             }
         }
         out
     }
+
+    /// Precompute the execution plan: cell enumeration, memo slots,
+    /// artifact/shuffle lifetimes, the memo ledger, and the grid
+    /// fingerprint. `run_sweep*` and `odl-har sweep --dry-run` share this.
+    pub fn plan(&self) -> SweepPlan {
+        let cells = self.cells();
+        let mut artifacts: Vec<ArtifactPlan> = Vec::new();
+        let mut cell_slots = Vec::with_capacity(cells.len());
+        let mut stats = SweepStats {
+            cells: cells.len(),
+            ..Default::default()
+        };
+        // record_pca is the one spec knob outside Scenario that changes
+        // row bytes (pca_eigenvalues), so it belongs in the fingerprint
+        let mut grid = hash_fold(
+            hash_fold(0x6B1D, cells.len() as u64),
+            self.record_pca as u64,
+        );
+        for (i, (cell, sc)) in cells.iter().enumerate() {
+            grid = hash_fold(grid, scenario_fingerprint(sc, cell.seed));
+            let key = ProvisionArtifacts::data_key(sc, cell.seed);
+            let slot = match artifacts.iter().position(|a| a.key == key) {
+                Some(slot) => {
+                    stats.artifact_hits += 1;
+                    let a = &mut artifacts[slot];
+                    a.last_cell = i;
+                    a.uses += 1;
+                    slot
+                }
+                None => {
+                    stats.artifact_builds += 1;
+                    artifacts.push(ArtifactPlan {
+                        key,
+                        first_cell: i,
+                        last_cell: i,
+                        uses: 1,
+                        shuffles: Vec::new(),
+                    });
+                    artifacts.len() - 1
+                }
+            };
+            let a = &mut artifacts[slot];
+            let shuf = match a.shuffles.iter().position(|s| s.seed == cell.seed) {
+                Some(shuf) => {
+                    stats.shuffle_hits += 1;
+                    let s = &mut a.shuffles[shuf];
+                    s.last_cell = i;
+                    s.uses += 1;
+                    shuf
+                }
+                None => {
+                    stats.shuffle_builds += 1;
+                    a.shuffles.push(ShufflePlan {
+                        seed: cell.seed,
+                        first_cell: i,
+                        last_cell: i,
+                        uses: 1,
+                    });
+                    a.shuffles.len() - 1
+                }
+            };
+            cell_slots.push((slot, shuf));
+        }
+        SweepPlan {
+            cells,
+            artifacts,
+            cell_slots,
+            stats,
+            grid_hash: grid,
+        }
+    }
 }
 
-/// Memoization accounting: `artifact_builds + artifact_hits == cells`.
+/// Identity hash of one cell's full scenario under its simulation seed —
+/// every field that can move a report bit. Exhaustive destructuring (no
+/// `..` rest pattern): adding a `Scenario` field without extending this
+/// hash is a compile error, not a silent resume-compatibility hole.
+fn scenario_fingerprint(sc: &Scenario, seed: u64) -> u64 {
+    let Scenario {
+        n_edges,
+        n_hidden,
+        event_period_s,
+        horizon_s,
+        drift_at_s,
+        detector,
+        fixed_theta,
+        teacher_error,
+        channel,
+        synth: _, // covered (with the resolved data seed) by data_key below
+        train_target,
+        eval_period_s,
+        eval_samples,
+        eval_costs_power,
+        data_seed,
+    } = sc;
+    let ChannelConfig {
+        latency_s,
+        loss_prob,
+        max_retries,
+    } = channel;
+    let detector_tag = match detector {
+        DetectorKind::Oracle => 1u64,
+        DetectorKind::Centroid => 2,
+    };
+    let mut k = 0x5EE9_u64;
+    for v in [
+        seed,
+        *n_edges as u64,
+        *n_hidden as u64,
+        event_period_s.to_bits(),
+        horizon_s.to_bits(),
+        drift_at_s.to_bits(),
+        detector_tag,
+        fixed_theta.is_some() as u64,
+        fixed_theta.unwrap_or(0.0).to_bits() as u64,
+        teacher_error.to_bits(),
+        latency_s.to_bits(),
+        loss_prob.to_bits(),
+        *max_retries as u64,
+        *train_target as u64,
+        eval_period_s.to_bits(),
+        *eval_samples as u64,
+        *eval_costs_power as u64,
+        data_seed.is_some() as u64,
+        data_seed.unwrap_or(0),
+        ProvisionArtifacts::data_key(sc, seed),
+    ] {
+        k = hash_fold(k, v);
+    }
+    k
+}
+
+/// Memoization accounting, computed from the plan (never from execution,
+/// so a resumed run reports the same ledger an uninterrupted run would):
+/// `artifact_builds + artifact_hits == cells` and
+/// `shuffle_builds + shuffle_hits == cells`.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct SweepStats {
     pub cells: usize,
     pub artifact_builds: usize,
     pub artifact_hits: usize,
+    pub shuffle_builds: usize,
+    pub shuffle_hits: usize,
+}
+
+/// Lifetime plan for one memoized artifact slot: built lazily at
+/// `first_cell`, lent to `uses` cells, dropped when the cell at
+/// `last_cell` finishes.
+#[derive(Clone, Debug)]
+pub struct ArtifactPlan {
+    pub key: u64,
+    pub first_cell: usize,
+    pub last_cell: usize,
+    pub uses: usize,
+    /// Per-`(slot, fleet seed)` shuffled-pool memo, in first-use order.
+    pub shuffles: Vec<ShufflePlan>,
+}
+
+/// Lifetime plan for one memoized shuffled pool (keyed by the fleet seed
+/// within its artifact slot).
+#[derive(Clone, Debug)]
+pub struct ShufflePlan {
+    pub seed: u64,
+    pub first_cell: usize,
+    pub last_cell: usize,
+    pub uses: usize,
+}
+
+/// The precomputed execution plan shared by the engine and `--dry-run`.
+pub struct SweepPlan {
+    pub cells: Vec<(SweepCell, Scenario)>,
+    pub artifacts: Vec<ArtifactPlan>,
+    /// cell index → (artifact slot, shuffle slot within that artifact).
+    pub cell_slots: Vec<(usize, usize)>,
+    pub stats: SweepStats,
+    /// Fingerprint of the enumerated grid (every cell's full scenario);
+    /// the resume header's compatibility check.
+    pub grid_hash: u64,
 }
 
 /// The engine's result: per-cell reports in cell order plus the
@@ -132,8 +363,21 @@ pub struct SweepOutcome {
     pub stats: SweepStats,
 }
 
+/// Outcome of [`resume_sweep_to_file`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResumeOutcome {
+    /// Completed cells kept from the existing file (original bytes).
+    pub skipped: usize,
+    /// Cells (re-)run by this invocation.
+    pub ran: usize,
+    /// The file already held the full grid plus trailer; nothing was
+    /// written.
+    pub already_complete: bool,
+    pub stats: SweepStats,
+}
+
 /// Re-orders out-of-order line completions so the output stream is written
-/// strictly in cell order regardless of worker scheduling.
+/// strictly in slot order regardless of worker scheduling.
 struct OrderedSink<W: Write> {
     next: usize,
     pending: BTreeMap<usize, String>,
@@ -142,8 +386,14 @@ struct OrderedSink<W: Write> {
 
 impl<W: Write> OrderedSink<W> {
     fn new(out: W) -> Self {
+        OrderedSink::starting_at(out, 0)
+    }
+
+    /// A sink whose first expected slot is `next` — the resume path seeds
+    /// it past the header and the kept prefix rows.
+    fn starting_at(out: W, next: usize) -> Self {
         OrderedSink {
-            next: 0,
+            next,
             pending: BTreeMap::new(),
             out,
         }
@@ -198,6 +448,9 @@ pub fn cell_row(cell: &SweepCell, report: &FleetReport, artifacts: &ProvisionArt
         ),
         ("n_edges", Json::Num(cell.n_edges as f64)),
         ("detector", Json::Str(cell.detector.name().into())),
+        ("n_hidden", Json::Num(cell.n_hidden as f64)),
+        ("loss_prob", Json::Num(cell.loss_prob)),
+        ("teacher_error", Json::Num(cell.teacher_error)),
         ("data_key", Json::Str(format!("{:016x}", artifacts.key))),
         ("queries", Json::Num(report.total_queries() as f64)),
         ("trained", Json::Num(trained as f64)),
@@ -218,137 +471,271 @@ pub fn cell_row(cell: &SweepCell, report: &FleetReport, artifacts: &ProvisionArt
     obj(pairs)
 }
 
+fn header_json(plan: &SweepPlan) -> Json {
+    obj(vec![
+        ("schema", Json::Str(SCHEMA.into())),
+        ("cells", Json::Num(plan.cells.len() as f64)),
+        ("grid_hash", Json::Str(format!("{:016x}", plan.grid_hash))),
+    ])
+}
+
+fn trailer_json(stats: &SweepStats) -> Json {
+    obj(vec![(
+        "stats",
+        obj(vec![
+            ("cells", Json::Num(stats.cells as f64)),
+            ("artifact_builds", Json::Num(stats.artifact_builds as f64)),
+            ("artifact_hits", Json::Num(stats.artifact_hits as f64)),
+            ("shuffle_builds", Json::Num(stats.shuffle_builds as f64)),
+            ("shuffle_hits", Json::Num(stats.shuffle_hits as f64)),
+        ]),
+    )])
+}
+
 /// Run the grid with memoized artifacts; collect reports only (no file).
 pub fn run_sweep(spec: &SweepSpec) -> Result<SweepOutcome> {
-    run_sweep_inner(spec, None)
+    let plan = spec.plan();
+    let reports = run_cells::<std::io::Sink>(spec, &plan, 0, None)?;
+    Ok(SweepOutcome {
+        reports,
+        stats: plan.stats,
+    })
 }
 
 /// Run the grid, streaming one JSON row per cell (in cell order) into
 /// `path` — a header line, the cell rows, and a stats trailer, one JSON
 /// object per line.
 pub fn run_sweep_to_file(spec: &SweepSpec, path: &Path) -> Result<SweepOutcome> {
+    run_planned_to_file(spec, &spec.plan(), path)
+}
+
+/// [`run_sweep_to_file`] over an already-computed plan — for callers
+/// (the CLI banner/dry-run, the resume path) that hold one anyway;
+/// planning a large grid twice is pure waste. `plan` must come from
+/// `spec.plan()`.
+pub fn run_planned_to_file(spec: &SweepSpec, plan: &SweepPlan, path: &Path) -> Result<SweepOutcome> {
+    let mut sink = OrderedSink::new(create_results_file(path)?);
+    // header occupies slot 0; cell i lands in slot i + 1
+    sink.push(0, header_json(plan).to_string())?;
+    let sink = Mutex::new(sink);
+    let reports = run_cells(spec, plan, 0, Some(&sink))?;
+    let mut sink = sink.into_inner().expect("sweep sink poisoned");
+    sink.push(plan.cells.len() + 1, trailer_json(&plan.stats).to_string())?;
+    Ok(SweepOutcome {
+        reports,
+        stats: plan.stats,
+    })
+}
+
+/// Resume (or start) a sweep into `path`. See the module docs for the
+/// protocol; the post-condition is a results file byte-identical to an
+/// uninterrupted [`run_sweep_to_file`] over the same spec.
+pub fn resume_sweep_to_file(spec: &SweepSpec, path: &Path) -> Result<ResumeOutcome> {
+    resume_planned_to_file(spec, &spec.plan(), path)
+}
+
+/// [`resume_sweep_to_file`] over an already-computed plan (see
+/// [`run_planned_to_file`]). `plan` must come from `spec.plan()`.
+pub fn resume_planned_to_file(
+    spec: &SweepSpec,
+    plan: &SweepPlan,
+    path: &Path,
+) -> Result<ResumeOutcome> {
+    let n = plan.cells.len();
+    let text = if path.exists() {
+        std::fs::read_to_string(path)
+            .with_context(|| format!("reading results file {}", path.display()))?
+    } else {
+        String::new()
+    };
+    // Complete lines only: a kill mid-write can leave a trailing partial
+    // line, which resume must discard, never trust. split('\n') makes the
+    // final element either "" (text ended with a newline) or the partial
+    // line — pop it either way.
+    let mut lines: Vec<&str> = text.split('\n').collect();
+    lines.pop();
+    if lines.is_empty() {
+        // missing, empty, or truncated-to-nothing: a fresh full run
+        let outcome = run_planned_to_file(spec, plan, path)?;
+        return Ok(ResumeOutcome {
+            skipped: 0,
+            ran: n,
+            already_complete: false,
+            stats: outcome.stats,
+        });
+    }
+    let header = header_json(plan).to_string();
+    ensure!(
+        lines[0] == header,
+        "refusing to resume {}: its header does not match this spec \
+         (different grid, schema version, or engine revision)",
+        path.display()
+    );
+    // The longest valid prefix of completed cell rows. Error rows and
+    // anything after the first gap are re-run.
+    let mut done = 0usize;
+    for line in &lines[1..] {
+        if done >= n {
+            break;
+        }
+        let row = match Json::parse(line) {
+            Ok(row) => row,
+            Err(_) => break,
+        };
+        if row.get("error").is_some() || row.get("cell").and_then(Json::as_usize) != Some(done) {
+            break;
+        }
+        done += 1;
+    }
+    let trailer = trailer_json(&plan.stats).to_string();
+    // complete = header + n rows + trailer and nothing else; extra
+    // trailing lines would survive an early return and break the
+    // byte-identical post-condition
+    if done == n
+        && lines.len() == n + 2
+        && lines.get(1 + n).copied() == Some(trailer.as_str())
+    {
+        return Ok(ResumeOutcome {
+            skipped: n,
+            ran: 0,
+            already_complete: true,
+            stats: plan.stats,
+        });
+    }
+    // Rewrite: header + the verified prefix (original bytes, verbatim),
+    // then run the remaining cells into the ordered sink and close with
+    // the trailer.
+    let mut out = create_results_file(path)?;
+    out.write_all(header.as_bytes())?;
+    out.write_all(b"\n")?;
+    for line in lines.iter().skip(1).take(done) {
+        out.write_all(line.as_bytes())?;
+        out.write_all(b"\n")?;
+    }
+    out.flush()?;
+    let sink = Mutex::new(OrderedSink::starting_at(out, done + 1));
+    run_cells(spec, plan, done, Some(&sink))?;
+    let mut sink = sink.into_inner().expect("sweep sink poisoned");
+    sink.push(n + 1, trailer)?;
+    Ok(ResumeOutcome {
+        skipped: done,
+        ran: n - done,
+        already_complete: false,
+        stats: plan.stats,
+    })
+}
+
+fn create_results_file(path: &Path) -> Result<std::io::BufWriter<std::fs::File>> {
     if let Some(dir) = path.parent() {
         if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir)
-                .with_context(|| format!("creating {}", dir.display()))?;
+            std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
         }
     }
     let file = std::fs::File::create(path)
         .with_context(|| format!("creating results file {}", path.display()))?;
-    let mut sink = OrderedSink::new(std::io::BufWriter::new(file));
-    let n_cells = spec.cells().len();
-    let header = obj(vec![
-        ("schema", Json::Str("odl-har-sweep/v1".into())),
-        ("cells", Json::Num(n_cells as f64)),
-        ("workers", Json::Num(spec.workers as f64)),
-    ]);
-    // header occupies slot 0; cell i lands in slot i + 1
-    sink.push(0, header.to_string())?;
-    let sink = Mutex::new(sink);
-    let outcome = run_sweep_inner(spec, Some(&sink))?;
-    let mut sink = sink.into_inner().expect("sweep sink poisoned");
-    let trailer = obj(vec![
-        ("cells", Json::Num(outcome.stats.cells as f64)),
-        (
-            "artifact_builds",
-            Json::Num(outcome.stats.artifact_builds as f64),
-        ),
-        (
-            "artifact_hits",
-            Json::Num(outcome.stats.artifact_hits as f64),
-        ),
-    ]);
-    sink.push(n_cells + 1, obj(vec![("stats", trailer)]).to_string())?;
-    Ok(outcome)
+    Ok(std::io::BufWriter::new(file))
 }
 
-fn run_sweep_inner(
+/// Per-slot memo state during a run: lazily built, refcounted down to
+/// its planned drop point. The artifact and each (slot, seed) shuffle
+/// carry independent locks so shuffles for distinct seeds build
+/// concurrently (only peers needing the *same* shuffle block on its
+/// build); no two locks are ever held at once — acquire takes artifact
+/// then shuffle, release takes shuffle then artifact, each dropped
+/// before the next is taken, so lock order cannot deadlock.
+struct Slot {
+    artifact: Mutex<ArtifactState>,
+    shuffles: Vec<Mutex<ShuffleState>>,
+}
+
+struct ArtifactState {
+    artifact: Option<Arc<ProvisionArtifacts>>,
+    /// Cells (of this invocation) that still need this artifact.
+    remaining: usize,
+}
+
+struct ShuffleState {
+    train: Option<Arc<Dataset>>,
+    remaining: usize,
+}
+
+/// Run cells `first..` of the plan (0 for a full run; the kept-prefix
+/// length when resuming) over the worker pool, with lazily built,
+/// last-use-dropped memo state. Returns the reports of exactly the cells
+/// it ran, in cell order.
+fn run_cells<W: Write + Send>(
     spec: &SweepSpec,
-    sink: Option<&Mutex<OrderedSink<std::io::BufWriter<std::fs::File>>>>,
-) -> Result<SweepOutcome> {
-    let cells = spec.cells();
-    let mut stats = SweepStats {
-        cells: cells.len(),
-        ..Default::default()
-    };
-
-    // Phase 1 — fit shared artifacts once per distinct data key. The
-    // distinct keys are enumerated in first-occurrence order (a linear
-    // scan; a handful of keys at most), then the independent builds fan
-    // over the same worker budget phase 2 uses — a grid with one key per
-    // simulation seed would otherwise pay every pool fit back to back on
-    // the caller thread before any cell ran. Builds are pure functions of
-    // the key, so the fan-out cannot change any artifact bit.
-    let mut distinct: Vec<(u64, usize)> = Vec::new(); // (key, first cell index)
-    let mut cell_key_slot: Vec<usize> = Vec::with_capacity(cells.len());
-    for (i, (cell, sc)) in cells.iter().enumerate() {
-        let key = ProvisionArtifacts::data_key(sc, cell.seed);
-        match distinct.iter().position(|(k, _)| *k == key) {
-            Some(slot) => {
-                stats.artifact_hits += 1;
-                cell_key_slot.push(slot);
-            }
-            None => {
-                stats.artifact_builds += 1;
-                cell_key_slot.push(distinct.len());
-                distinct.push((key, i));
-            }
-        }
+    plan: &SweepPlan,
+    first: usize,
+    sink: Option<&Mutex<OrderedSink<W>>>,
+) -> Result<Vec<(SweepCell, FleetReport)>> {
+    let n = plan.cells.len();
+    // Remaining-use counts restricted to the cells this invocation
+    // actually runs, so a resume drops (or never builds) memo state whose
+    // uses all sit in the completed prefix.
+    let slots: Vec<Slot> = plan
+        .artifacts
+        .iter()
+        .map(|a| Slot {
+            artifact: Mutex::new(ArtifactState {
+                artifact: None,
+                remaining: 0,
+            }),
+            shuffles: a
+                .shuffles
+                .iter()
+                .map(|_| {
+                    Mutex::new(ShuffleState {
+                        train: None,
+                        remaining: 0,
+                    })
+                })
+                .collect(),
+        })
+        .collect();
+    for &(slot, shuf) in &plan.cell_slots[first..] {
+        slots[slot]
+            .artifact
+            .lock()
+            .expect("sweep slot poisoned")
+            .remaining += 1;
+        slots[slot].shuffles[shuf]
+            .lock()
+            .expect("sweep shuffle poisoned")
+            .remaining += 1;
     }
-    let build_workers = spec.workers.max(1).min(distinct.len().max(1));
-    let built: Vec<Arc<ProvisionArtifacts>> = if build_workers <= 1 {
-        distinct
-            .iter()
-            .map(|&(_, i)| {
-                let (cell, sc) = &cells[i];
-                Arc::new(ProvisionArtifacts::build(sc, cell.seed, spec.record_pca))
-            })
-            .collect()
-    } else {
-        let next_build = AtomicUsize::new(0);
-        let build_slots: Vec<Mutex<Option<Arc<ProvisionArtifacts>>>> =
-            (0..distinct.len()).map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|scope| {
-            for _ in 0..build_workers {
-                scope.spawn(|| loop {
-                    let b = next_build.fetch_add(1, Ordering::SeqCst);
-                    if b >= distinct.len() {
-                        break;
-                    }
-                    let (cell, sc) = &cells[distinct[b].1];
-                    let artifacts =
-                        Arc::new(ProvisionArtifacts::build(sc, cell.seed, spec.record_pca));
-                    *build_slots[b].lock().expect("build slot poisoned") = Some(artifacts);
-                });
-            }
-        });
-        build_slots
-            .into_iter()
-            .map(|slot| {
-                slot.into_inner()
-                    .expect("build slot poisoned")
-                    .expect("artifact build never ran")
-            })
-            .collect()
-    };
-    let cell_artifacts: Vec<Arc<ProvisionArtifacts>> =
-        cell_key_slot.iter().map(|&slot| built[slot].clone()).collect();
 
-    // Phase 2 — fan the cells over the worker pool. Each cell provisions
-    // from its shared artifacts and runs single-threaded (the pool is the
-    // parallelism); every slot is written by exactly one worker.
-    let workers = spec.workers.max(1).min(cells.len().max(1));
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<Result<FleetReport>>>> =
-        (0..cells.len()).map(|_| Mutex::new(None)).collect();
     let run_cell = |i: usize| -> Result<FleetReport> {
-        let (cell, sc) = &cells[i];
-        let result = Fleet::with_artifacts(
+        let (cell, sc) = &plan.cells[i];
+        let (slot, shuf) = plan.cell_slots[i];
+        // Acquire: build lazily under the respective lock. Whichever
+        // worker gets there first builds; only peers needing the *same*
+        // artifact / shuffle block until that build lands. Builds are
+        // pure functions of the key / (key, seed), so the scheduling
+        // race cannot change a bit.
+        let artifacts = {
+            let mut st = slots[slot].artifact.lock().expect("sweep slot poisoned");
+            st.artifact
+                .get_or_insert_with(|| {
+                    Arc::new(ProvisionArtifacts::build(sc, cell.seed, spec.record_pca))
+                })
+                .clone()
+        };
+        let train = {
+            let mut sh = slots[slot].shuffles[shuf]
+                .lock()
+                .expect("sweep shuffle poisoned");
+            sh.train
+                .get_or_insert_with(|| Arc::new(artifacts.shuffled_train(cell.seed)))
+                .clone()
+        };
+        let result = Fleet::with_shuffled_pool(
             FleetConfig {
                 scenario: sc.clone(),
                 seed: cell.seed,
             },
-            &cell_artifacts[i],
+            &artifacts,
+            &train,
             1,
         )
         .map(|fleet| fleet.run_parallel(1));
@@ -357,7 +744,7 @@ fn run_sweep_inner(
             // the ordered sink can drain every later cell's completed row
             // instead of buffering them forever behind the gap
             let line = match &result {
-                Ok(report) => cell_row(cell, report, &cell_artifacts[i]).to_string(),
+                Ok(report) => cell_row(cell, report, &artifacts).to_string(),
                 Err(e) => obj(vec![
                     ("cell", Json::Num(cell.index as f64)),
                     ("error", Json::Str(e.to_string())),
@@ -370,36 +757,39 @@ fn run_sweep_inner(
                 .push(i + 1, line)
                 .context("writing sweep results row")?;
         }
+        // Release: drop this worker's handles, then retire the memo state
+        // at its planned last use so peak memory tracks the in-flight
+        // working set, not the grid's seed count.
+        drop(train);
+        drop(artifacts);
+        {
+            let mut sh = slots[slot].shuffles[shuf]
+                .lock()
+                .expect("sweep shuffle poisoned");
+            sh.remaining -= 1;
+            if sh.remaining == 0 {
+                sh.train = None;
+            }
+        }
+        {
+            let mut st = slots[slot].artifact.lock().expect("sweep slot poisoned");
+            st.remaining -= 1;
+            if st.remaining == 0 {
+                st.artifact = None;
+            }
+        }
         result
     };
-    if workers <= 1 {
-        for i in 0..cells.len() {
-            *slots[i].lock().expect("slot poisoned") = Some(run_cell(i));
-        }
-    } else {
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::SeqCst);
-                    if i >= cells.len() {
-                        break;
-                    }
-                    *slots[i].lock().expect("slot poisoned") = Some(run_cell(i));
-                });
-            }
-        });
-    }
 
-    let mut reports = Vec::with_capacity(cells.len());
-    for ((cell, _), slot) in cells.iter().zip(slots) {
-        let report = slot
-            .into_inner()
-            .expect("slot poisoned")
-            .expect("sweep cell never ran")
-            .with_context(|| format!("sweep cell {} (seed {})", cell.index, cell.seed))?;
-        reports.push((*cell, report));
+    let results = parallel::parallel_map_n(spec.workers, n - first, |j| run_cell(first + j));
+    let mut reports = Vec::with_capacity(n - first);
+    for ((cell, _), report) in plan.cells[first..].iter().zip(results) {
+        reports.push((
+            *cell,
+            report.with_context(|| format!("sweep cell {} (seed {})", cell.index, cell.seed))?,
+        ));
     }
-    Ok(SweepOutcome { reports, stats })
+    Ok(reports)
 }
 
 #[cfg(test)]
@@ -429,18 +819,44 @@ mod tests {
     }
 
     fn small_spec() -> SweepSpec {
+        let base = {
+            let mut b = small_base();
+            b.data_seed = Some(0x5EED);
+            b
+        };
         SweepSpec {
-            base: {
-                let mut b = small_base();
-                b.data_seed = Some(0x5EED);
-                b
-            },
             seeds: vec![1, 2],
             thetas: vec![None, Some(0.2)],
             edge_counts: vec![2, 3],
             detectors: vec![DetectorKind::Oracle],
+            n_hiddens: vec![base.n_hidden],
+            loss_probs: vec![base.channel.loss_prob],
+            teacher_errors: vec![base.teacher_error],
             workers: 2,
             record_pca: false,
+            base,
+        }
+    }
+
+    /// A grid that exercises the three new axes (hidden width, channel
+    /// loss, teacher error) over one seed.
+    fn new_axes_spec() -> SweepSpec {
+        let base = {
+            let mut b = small_base();
+            b.data_seed = Some(0xA7E5);
+            b
+        };
+        SweepSpec {
+            seeds: vec![1],
+            thetas: vec![None],
+            edge_counts: vec![2],
+            detectors: vec![DetectorKind::Oracle],
+            n_hiddens: vec![16, 24],
+            loss_probs: vec![0.0, 0.3],
+            teacher_errors: vec![0.0, 0.3],
+            workers: 2,
+            record_pca: false,
+            base,
         }
     }
 
@@ -450,7 +866,8 @@ mod tests {
         let cells = spec.cells();
         assert_eq!(cells.len(), 2 * 2 * 2);
         assert_eq!(cells[0].0.index, 0);
-        // detectors is the fastest axis, seeds the slowest
+        // seeds are the slowest axis; with the trailing axes at their
+        // one-element defaults, edge counts vary fastest here
         assert_eq!(cells[0].0.seed, 1);
         assert_eq!(cells[cells.len() - 1].0.seed, 2);
         assert_eq!(cells[0].0.theta, None);
@@ -462,6 +879,27 @@ mod tests {
     }
 
     #[test]
+    fn new_axes_enumerate_fastest_last() {
+        let spec = new_axes_spec();
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2 * 2 * 2);
+        // teacher error is the fastest axis, then loss, then n_hidden
+        assert_eq!(
+            (cells[0].0.n_hidden, cells[0].0.loss_prob, cells[0].0.teacher_error),
+            (16, 0.0, 0.0)
+        );
+        assert_eq!(cells[1].0.teacher_error, 0.3);
+        assert_eq!(cells[2].0.loss_prob, 0.3);
+        assert_eq!(cells[4].0.n_hidden, 24);
+        // and each cell's scenario carries the overrides
+        for (cell, sc) in &cells {
+            assert_eq!(sc.n_hidden, cell.n_hidden);
+            assert_eq!(sc.channel.loss_prob, cell.loss_prob);
+            assert_eq!(sc.teacher_error, cell.teacher_error);
+        }
+    }
+
+    #[test]
     fn memoization_fits_data_once_per_config() {
         let spec = small_spec();
         let outcome = run_sweep(&spec).unwrap();
@@ -469,6 +907,9 @@ mod tests {
         // pinned data_seed → one data config across the whole grid
         assert_eq!(outcome.stats.artifact_builds, 1);
         assert_eq!(outcome.stats.artifact_hits, 7);
+        // the per-fleet shuffle memoizes per (data key, seed)
+        assert_eq!(outcome.stats.shuffle_builds, 2);
+        assert_eq!(outcome.stats.shuffle_hits, 6);
     }
 
     #[test]
@@ -479,6 +920,41 @@ mod tests {
         // one build per distinct sim seed, hits for the rest of the grid
         assert_eq!(outcome.stats.artifact_builds, 2);
         assert_eq!(outcome.stats.artifact_hits, 6);
+        assert_eq!(outcome.stats.shuffle_builds, 2);
+        assert_eq!(outcome.stats.shuffle_hits, 6);
+    }
+
+    #[test]
+    fn plan_tracks_artifact_and_shuffle_lifetimes() {
+        let spec = small_spec();
+        let plan = spec.plan();
+        assert_eq!(plan.artifacts.len(), 1);
+        let a = &plan.artifacts[0];
+        assert_eq!((a.first_cell, a.last_cell, a.uses), (0, 7, 8));
+        // seeds are the slowest axis: seed 1 owns cells 0..=3, seed 2
+        // cells 4..=7 — the shuffle drop points the engine retires at
+        assert_eq!(a.shuffles.len(), 2);
+        let s0 = &a.shuffles[0];
+        assert_eq!((s0.seed, s0.first_cell, s0.last_cell, s0.uses), (1, 0, 3, 4));
+        let s1 = &a.shuffles[1];
+        assert_eq!((s1.seed, s1.first_cell, s1.last_cell, s1.uses), (2, 4, 7, 4));
+        assert_eq!(
+            plan.stats,
+            SweepStats {
+                cells: 8,
+                artifact_builds: 1,
+                artifact_hits: 7,
+                shuffle_builds: 2,
+                shuffle_hits: 6,
+            }
+        );
+        // every cell points at a live slot
+        for (i, &(slot, shuf)) in plan.cell_slots.iter().enumerate() {
+            let a = &plan.artifacts[slot];
+            assert!(a.first_cell <= i && i <= a.last_cell);
+            let s = &a.shuffles[shuf];
+            assert!(s.first_cell <= i && i <= s.last_cell);
+        }
     }
 
     #[test]
@@ -501,15 +977,48 @@ mod tests {
     }
 
     #[test]
+    fn new_axes_cells_bitwise_match_individually_built_fleets() {
+        let spec = new_axes_spec();
+        let outcome = run_sweep(&spec).unwrap();
+        // model/connectivity/supervision axes are simulation knobs, not
+        // data knobs: the pinned data seed still fits the pool once, and
+        // one seed means one shuffle
+        assert_eq!(outcome.stats.artifact_builds, 1);
+        assert_eq!(outcome.stats.shuffle_builds, 1);
+        for ((cell, report), (_, sc)) in outcome.reports.iter().zip(spec.cells()) {
+            let direct = Fleet::new(FleetConfig {
+                scenario: sc,
+                seed: cell.seed,
+            })
+            .unwrap()
+            .run();
+            assert!(
+                direct.bitwise_eq(report),
+                "cell {} diverged from the individually built fleet",
+                cell.index
+            );
+        }
+        // the axes must actually move the trajectories
+        let r = &outcome.reports;
+        assert!(!r[0].1.bitwise_eq(&r[1].1), "teacher-error axis is inert");
+        assert!(!r[0].1.bitwise_eq(&r[2].1), "loss axis is inert");
+        assert!(!r[0].1.bitwise_eq(&r[4].1), "n_hidden axis is inert");
+    }
+
+    #[test]
     fn worker_count_never_changes_results() {
+        // the shared executor's canonical worker sweep, applied to whole
+        // grid runs
         let mut spec = small_spec();
-        spec.workers = 1;
-        let seq = run_sweep(&spec).unwrap();
-        spec.workers = 4;
-        let par = run_sweep(&spec).unwrap();
-        assert_eq!(seq.stats, par.stats);
-        for ((_, a), (_, b)) in seq.reports.iter().zip(&par.reports) {
-            assert!(a.bitwise_eq(b));
+        spec.workers = parallel::WORKER_SWEEP[0];
+        let reference = run_sweep(&spec).unwrap();
+        for &workers in &parallel::WORKER_SWEEP[1..] {
+            spec.workers = workers;
+            let got = run_sweep(&spec).unwrap();
+            assert_eq!(reference.stats, got.stats);
+            for ((_, a), (_, b)) in reference.reports.iter().zip(&got.reports) {
+                assert!(a.bitwise_eq(b), "sweep diverged at {workers} workers");
+            }
         }
     }
 
@@ -524,26 +1033,121 @@ mod tests {
         // header + one row per cell + stats trailer
         assert_eq!(lines.len(), outcome.stats.cells + 2);
         let header = Json::parse(lines[0]).unwrap();
+        assert_eq!(header.get("schema").unwrap().as_str().unwrap(), SCHEMA);
         assert_eq!(
-            header.get("schema").unwrap().as_str().unwrap(),
-            "odl-har-sweep/v1"
+            header.get("grid_hash").unwrap().as_str().unwrap(),
+            format!("{:016x}", spec.plan().grid_hash)
         );
         for (i, line) in lines[1..=outcome.stats.cells].iter().enumerate() {
             let row = Json::parse(line).unwrap();
             assert_eq!(row.get("cell").unwrap().as_usize().unwrap(), i);
             assert!(row.get("final_accuracy").unwrap().as_f64().is_some());
+            assert!(row.get("n_hidden").unwrap().as_usize().is_some());
+            assert!(row.get("loss_prob").unwrap().as_f64().is_some());
+            assert!(row.get("teacher_error").unwrap().as_f64().is_some());
         }
         let trailer = Json::parse(lines[lines.len() - 1]).unwrap();
+        let stats = trailer.get("stats").unwrap();
         assert_eq!(
-            trailer
-                .get("stats")
-                .unwrap()
-                .get("artifact_hits")
-                .unwrap()
-                .as_usize()
-                .unwrap(),
+            stats.get("artifact_hits").unwrap().as_usize().unwrap(),
             outcome.stats.artifact_hits
         );
+        assert_eq!(
+            stats.get("shuffle_builds").unwrap().as_usize().unwrap(),
+            outcome.stats.shuffle_builds
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_is_byte_identical_across_cut_points() {
+        // the acceptance contract, over a grid exercising the three new
+        // axes: resuming from any interruption point reproduces the
+        // uninterrupted file byte for byte
+        let spec = new_axes_spec();
+        let n = spec.cells().len();
+        let dir = std::env::temp_dir().join("odl_har_sweep_resume_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let full_path = dir.join("full.jsonl");
+        run_sweep_to_file(&spec, &full_path).unwrap();
+        let full = std::fs::read_to_string(&full_path).unwrap();
+        let lines: Vec<&str> = full.lines().collect();
+        assert_eq!(lines.len(), n + 2);
+
+        for cut in [0usize, 1, 3, n, n + 2] {
+            // keep header + `cut` rows (cut = n + 2 keeps trailer too)
+            let keep = (cut + 1).min(lines.len());
+            let text: String = lines[..keep].iter().map(|l| format!("{l}\n")).collect();
+            let path = dir.join(format!("cut{cut}.jsonl"));
+            std::fs::write(&path, &text).unwrap();
+            let out = resume_sweep_to_file(&spec, &path).unwrap();
+            assert_eq!(
+                std::fs::read_to_string(&path).unwrap(),
+                full,
+                "resume from a {cut}-row prefix must reproduce the full file"
+            );
+            if cut >= n + 2 {
+                assert!(out.already_complete);
+                assert_eq!((out.skipped, out.ran), (n, 0));
+            } else {
+                let done = cut.min(n);
+                assert!(!out.already_complete);
+                assert_eq!((out.skipped, out.ran), (done, n - done));
+            }
+        }
+
+        // junk appended after a complete stream is not "already
+        // complete": resume must rewrite back to the canonical bytes
+        let path = dir.join("appended.jsonl");
+        std::fs::write(&path, format!("{full}{{\"cell\":0}}\n")).unwrap();
+        let out = resume_sweep_to_file(&spec, &path).unwrap();
+        assert!(!out.already_complete);
+        assert_eq!((out.skipped, out.ran), (n, 0));
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), full);
+
+        // a partial trailing line (kill mid-write) is discarded, never
+        // trusted
+        let mut text: String = lines[..3].iter().map(|l| format!("{l}\n")).collect();
+        text.push_str("{\"cell\":2,\"trunc");
+        let path = dir.join("partial.jsonl");
+        std::fs::write(&path, &text).unwrap();
+        let out = resume_sweep_to_file(&spec, &path).unwrap();
+        assert_eq!((out.skipped, out.ran), (2, n - 2));
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), full);
+
+        // missing file = fresh full run through the resume entry point
+        let path = dir.join("fresh.jsonl");
+        let out = resume_sweep_to_file(&spec, &path).unwrap();
+        assert_eq!((out.skipped, out.ran), (0, n));
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), full);
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_rejects_a_mismatched_grid() {
+        let spec = small_spec();
+        let dir = std::env::temp_dir().join("odl_har_sweep_mismatch_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sweep.jsonl");
+        run_sweep_to_file(&spec, &path).unwrap();
+        // a different grid (extra seed) must refuse the existing file…
+        let mut other = spec.clone();
+        other.seeds.push(3);
+        assert!(resume_sweep_to_file(&other, &path).is_err());
+        // …as must a changed base scenario (same axes, different horizon)
+        let mut other = spec.clone();
+        other.base.horizon_s += 1.0;
+        assert!(resume_sweep_to_file(&other, &path).is_err());
+        // …and a flipped record_pca (it changes row bytes, so mixing it
+        // into an existing file would break byte-identity)
+        let mut other = spec.clone();
+        other.record_pca = true;
+        assert!(resume_sweep_to_file(&other, &path).is_err());
+        // …and a file that is not a sweep stream at all
+        let garbage = dir.join("garbage.jsonl");
+        std::fs::write(&garbage, "{\"schema\":\"odl-har-sweep/v1\",\"cells\":8}\n").unwrap();
+        assert!(resume_sweep_to_file(&spec, &garbage).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

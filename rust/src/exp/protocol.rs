@@ -17,6 +17,7 @@ use crate::data::{synth::SynthHar, DriftSplit, Dataset, Standardizer, SynthConfi
 use crate::odl::dnn::{Dnn, DnnConfig};
 use crate::odl::{AlphaKind, OsElm, OsElmConfig};
 use crate::pruning::{Decision, Metric, Pruner, ThetaPolicy};
+use crate::util::parallel;
 use crate::util::rng::Rng64;
 use crate::util::stats::RunningStats;
 use anyhow::Result;
@@ -358,30 +359,13 @@ pub fn run(cfg: &ProtocolConfig) -> Result<Aggregate> {
         seeds.push(master.fork(t as u64).next_u64());
     }
 
-    let n_workers = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .min(cfg.trials.max(1));
-    let outcomes: Vec<TrialOutcome> = std::thread::scope(|scope| {
-        let chunks: Vec<Vec<u64>> = seeds
-            .chunks(cfg.trials.div_ceil(n_workers))
-            .map(|c| c.to_vec())
-            .collect();
-        let handles: Vec<_> = chunks
+    // one trial per executor item; the ordered result vector keeps the
+    // aggregation walking outcomes in seed order for every worker count
+    let n_workers = parallel::resolve_workers(0, cfg.trials);
+    let outcomes: Vec<TrialOutcome> =
+        parallel::parallel_map(n_workers, &seeds, |_, &s| run_trial(cfg, s))
             .into_iter()
-            .map(|chunk| {
-                let cfg = cfg.clone();
-                scope.spawn(move || -> Result<Vec<TrialOutcome>> {
-                    chunk.iter().map(|&s| run_trial(&cfg, s)).collect()
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("trial worker panicked"))
-            .collect::<Result<Vec<_>>>()
-            .map(|vs| vs.into_iter().flatten().collect())
-    })?;
+            .collect::<Result<Vec<_>>>()?;
 
     let mut agg = Aggregate {
         label: cfg.variant.label(cfg.n_hidden),

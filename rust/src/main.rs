@@ -13,7 +13,7 @@
 //! odl-har fig4   [--trials N] [--out DIR]
 //! odl-har run    --config FILE       # custom protocol experiment
 //! odl-har fleet  [--config FILE] [--workers N] [--threaded]
-//! odl-har sweep  --config FILE [--workers N] [--out FILE]
+//! odl-har sweep  --config FILE [--workers N] [--out FILE] [--resume] [--dry-run]
 //! odl-har artifacts-check            # verify PJRT artifacts load + run
 //! ```
 //!
@@ -246,6 +246,8 @@ fn main() -> Result<()> {
             let cfg_path = args
                 .opt("--config")?
                 .context("sweep requires --config FILE")?;
+            let dry_run = args.flag("--dry-run");
+            let resume = args.flag("--resume");
             let workers_cli = args.opt_usize_opt("--workers")?;
             let out = args
                 .opt("--out")?
@@ -258,21 +260,51 @@ fn main() -> Result<()> {
             }
             // 0 = auto, resolved once at startup
             spec.workers = odl_har::util::auto_workers(spec.workers);
-            let n_cells = spec.cells().len();
+            let plan = spec.plan();
             println!(
-                "sweep: {n_cells} cells ({} seeds x {} thetas x {} edge counts x {} detectors), {} workers",
+                "sweep: {} cells ({} seeds x {} thetas x {} edge counts x {} detectors x {} n_hiddens x {} loss probs x {} teacher errors), {} workers",
+                plan.cells.len(),
                 spec.seeds.len(),
                 spec.thetas.len(),
                 spec.edge_counts.len(),
                 spec.detectors.len(),
+                spec.n_hiddens.len(),
+                spec.loss_probs.len(),
+                spec.teacher_errors.len(),
                 spec.workers
             );
-            let outcome = odl_har::coordinator::sweep::run_sweep_to_file(&spec, &out)?;
+            if dry_run {
+                print_sweep_plan(&plan);
+                return Ok(());
+            }
+            // the banner plan above is the one the engine runs — planned
+            // entry points avoid re-enumerating a large grid
+            let stats = if resume {
+                let outcome =
+                    odl_har::coordinator::sweep::resume_planned_to_file(&spec, &plan, &out)?;
+                if outcome.already_complete {
+                    println!(
+                        "sweep: {} already holds the complete grid ({} cells) — nothing to do",
+                        out.display(),
+                        outcome.skipped
+                    );
+                } else {
+                    println!(
+                        "sweep: resumed — {} completed cell(s) kept, {} run",
+                        outcome.skipped, outcome.ran
+                    );
+                }
+                outcome.stats
+            } else {
+                odl_har::coordinator::sweep::run_planned_to_file(&spec, &plan, &out)?.stats
+            };
             println!(
-                "sweep: done — {} cells, data fitted {} time(s), {} memoization hit(s)",
-                outcome.stats.cells,
-                outcome.stats.artifact_builds,
-                outcome.stats.artifact_hits
+                "sweep: done — {} cells, data fitted {} time(s) ({} hit(s)), pools shuffled {} time(s) ({} hit(s))",
+                stats.cells,
+                stats.artifact_builds,
+                stats.artifact_hits,
+                stats.shuffle_builds,
+                stats.shuffle_hits
             );
             println!("results: {}", out.display());
         }
@@ -297,6 +329,70 @@ fn main() -> Result<()> {
     Ok(())
 }
 
+/// `odl-har sweep --dry-run`: the enumerated grid, each cell's memo
+/// build/hit role, and the artifact/shuffle lifetimes (build at first
+/// use, drop after last use) — without running a single cell.
+fn print_sweep_plan(plan: &odl_har::coordinator::SweepPlan) {
+    println!("dry run: plan only — no cells will run");
+    for (cell, _) in &plan.cells {
+        let (slot, shuf) = plan.cell_slots[cell.index];
+        let a = &plan.artifacts[slot];
+        let s = &a.shuffles[shuf];
+        let mut notes = Vec::new();
+        if a.first_cell == cell.index {
+            notes.push(format!("build artifact a{slot}"));
+        }
+        if s.first_cell == cell.index {
+            notes.push(format!("shuffle a{slot}/seed {}", s.seed));
+        }
+        if s.last_cell == cell.index {
+            notes.push(format!("drop shuffle a{slot}/seed {}", s.seed));
+        }
+        if a.last_cell == cell.index {
+            notes.push(format!("drop artifact a{slot}"));
+        }
+        let theta = match cell.theta {
+            Some(t) => format!("{t}"),
+            None => "auto".into(),
+        };
+        println!(
+            "  cell {:>4}: seed {} theta {} edges {} detector {} n_hidden {} loss {} teacher_err {}{}",
+            cell.index,
+            cell.seed,
+            theta,
+            cell.n_edges,
+            cell.detector.name(),
+            cell.n_hidden,
+            cell.loss_prob,
+            cell.teacher_error,
+            if notes.is_empty() {
+                String::new()
+            } else {
+                format!("  [{}]", notes.join(", "))
+            }
+        );
+    }
+    println!(
+        "memo plan: {} artifact build(s) + {} hit(s), {} shuffle build(s) + {} hit(s)",
+        plan.stats.artifact_builds,
+        plan.stats.artifact_hits,
+        plan.stats.shuffle_builds,
+        plan.stats.shuffle_hits
+    );
+    for (slot, a) in plan.artifacts.iter().enumerate() {
+        println!(
+            "  artifact a{slot} (data_key {:016x}): build at cell {}, {} use(s), drop after cell {}",
+            a.key, a.first_cell, a.uses, a.last_cell
+        );
+        for s in &a.shuffles {
+            println!(
+                "    shuffle seed {}: build at cell {}, {} use(s), drop after cell {}",
+                s.seed, s.first_cell, s.uses, s.last_cell
+            );
+        }
+    }
+}
+
 fn print_help() {
     println!(
         "odl-har — tiny supervised ODL core with auto data pruning (paper reproduction)\n\
@@ -313,9 +409,14 @@ fn print_help() {
            fleet  [--config FILE] [--workers N] [--threaded]  multi-edge fleet simulation\n\
                                           (--workers shards provisioning + event loop; 0 = auto;\n\
                                            same report bit for bit for any count)\n\
-           sweep  --config FILE [--workers N] [--out FILE]    memoized scenario-grid sweep\n\
-                                          (TOML-declared seeds x thetas x edge counts x detectors;\n\
-                                           shared data fitted once per data config, JSONL results)\n\
+           sweep  --config FILE [--workers N] [--out FILE] [--resume] [--dry-run]\n\
+                                          memoized, resumable scenario-grid sweep (TOML-declared\n\
+                                          seeds x thetas x edge counts x detectors x n_hiddens x\n\
+                                          loss_probs x teacher_errors; artifacts fitted once per\n\
+                                          data config, built lazily and dropped at last use;\n\
+                                          --resume keeps an interrupted file's completed cells and\n\
+                                          finishes it byte-identical to an uninterrupted run;\n\
+                                          --dry-run prints the grid + memo plan without running)\n\
            artifacts-check                compile every PJRT artifact"
     );
 }

@@ -33,6 +33,7 @@ use super::activation::Prediction;
 use super::alpha::{AlphaKind, AlphaProvider};
 use crate::linalg::kernels;
 use crate::linalg::{cholesky_inverse, lu_inverse, Mat};
+use crate::util::parallel;
 use crate::util::rng::Rng64;
 use anyhow::{ensure, Context, Result};
 
@@ -379,23 +380,18 @@ impl OsElm {
         let correct: usize = if workers <= 1 {
             count_range(0, xs.rows)
         } else {
+            // block-aligned contiguous row shards, fanned over the shared
+            // deterministic executor; the ordered result vector is summed
+            // on the caller's thread (integer sum — any order would do,
+            // but the fixed order keeps the argument trivial)
             let rows_per = blocks.div_ceil(workers) * PREDICT_BLOCK;
-            std::thread::scope(|scope| {
-                let mut handles = Vec::with_capacity(workers);
-                for w in 0..workers {
-                    let r0 = w * rows_per;
-                    let r1 = ((w + 1) * rows_per).min(xs.rows);
-                    if r0 >= r1 {
-                        break;
-                    }
-                    let count_range = &count_range;
-                    handles.push(scope.spawn(move || count_range(r0, r1)));
-                }
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("predict shard panicked"))
-                    .sum()
-            })
+            let shards: Vec<(usize, usize)> = (0..workers)
+                .map(|w| (w * rows_per, ((w + 1) * rows_per).min(xs.rows)))
+                .filter(|&(r0, r1)| r0 < r1)
+                .collect();
+            parallel::parallel_map(shards.len(), &shards, |_, &(r0, r1)| count_range(r0, r1))
+                .into_iter()
+                .sum()
         };
         correct as f64 / xs.rows as f64
     }

@@ -1,10 +1,12 @@
-//! General-purpose substrates: deterministic RNGs, running statistics,
-//! tabular/JSON output, a tiny logger, and an in-house property-testing
-//! harness (the offline vendor set has no `proptest`).
+//! General-purpose substrates: deterministic RNGs, the deterministic
+//! parallel executor, running statistics, tabular/JSON output, a tiny
+//! logger, and an in-house property-testing harness (the offline vendor
+//! set has no `proptest`).
 
 pub mod bench;
 pub mod json;
 pub mod logging;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod stats;

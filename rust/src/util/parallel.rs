@@ -1,0 +1,260 @@
+//! The one deterministic execution layer — every scoped-thread fan-out in
+//! the stack routes through here (`OsElm::accuracy_par` shards, protocol
+//! trials, fleet provisioning and the event loop, the sweep engine's cell
+//! pool). One audited implementation means one place where the
+//! determinism argument has to hold:
+//!
+//! * **Worker-count-invariant output order.** [`parallel_map`] /
+//!   [`parallel_map_n`] return results in *item* order no matter how the
+//!   scheduler interleaves workers — each item's slot is written by
+//!   exactly one worker, and the collection walk happens on the caller's
+//!   thread after every worker has joined. [`for_each_shard_mut`] splits
+//!   a mutable slice into contiguous `⌈n/w⌉` chunks (the fleet's shard
+//!   layout), so no item is ever touched by two workers.
+//! * **Worker counts are wall-clock knobs only.** As long as the mapped
+//!   function is a pure function of the item (or, for RNG-bearing tasks,
+//!   of the item plus its [`parallel_map_keyed`] stream), the output is
+//!   bitwise identical for every worker count — the property the fleet
+//!   and sweep determinism suites assert over the shared
+//!   [`WORKER_SWEEP`].
+//! * **Panic propagation.** Workers run inside [`std::thread::scope`];
+//!   a panicking task propagates to the caller when the scope joins, for
+//!   every worker count (the single-worker path panics inline).
+//! * **Scheduling.** `parallel_map*` uses a dynamic atomic cursor
+//!   (work-stealing order, robust to heterogeneous task costs);
+//!   `for_each_shard_mut` uses static contiguous chunks (cache-friendly
+//!   for the fleet's long-running shards). Neither choice can show up in
+//!   any output bit.
+//! * **`auto_workers` integration.** Worker requests follow the repo
+//!   convention (`0` = auto, resolved once at startup); use
+//!   [`resolve_workers`] where a raw `--workers`-style request meets an
+//!   item count. The executors themselves clamp to `[1, n]` and treat
+//!   `0` like `1`, preserving the historical "0 workers runs inline"
+//!   behaviour of the call sites they replaced.
+
+use crate::util::auto_workers;
+use crate::util::rng::{stream_seed, Rng64};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// The canonical worker counts the determinism suites sweep: sequential,
+/// the smallest real split, and an oversubscribed pool. Shared by the
+/// in-module property tests and the fleet/sweep suites so "bitwise
+/// identical for 1/2/8 workers" means the same thing everywhere.
+pub const WORKER_SWEEP: [usize; 3] = [1, 2, 8];
+
+/// Clamp an already-resolved worker request to `[1, n_items]` (`0`, like
+/// the call sites this layer replaced, runs inline).
+fn clamp_workers(requested: usize, n_items: usize) -> usize {
+    requested.max(1).min(n_items.max(1))
+}
+
+/// Resolve a `--workers`-style request against an item count: `0` means
+/// auto ([`auto_workers`] → `available_parallelism`), then clamp to
+/// `[1, n_items]`.
+pub fn resolve_workers(requested: usize, n_items: usize) -> usize {
+    clamp_workers(auto_workers(requested), n_items)
+}
+
+/// Ordered parallel map over indices `0..n`: spread `f(i)` over up to
+/// `workers` scoped threads (dynamic scheduling) and return the results
+/// in index order. The output is independent of the worker count and of
+/// scheduling; a panicking `f` propagates to the caller.
+pub fn parallel_map_n<R, F>(workers: usize, n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let workers = clamp_workers(workers, n);
+    if workers <= 1 {
+        return (0..n).map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    // every slot is written by exactly one worker (the one that claimed
+    // its index off the cursor); the Mutex is the cheap safe idiom for
+    // "disjoint writes, collected after the join"
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                *slots[i].lock().expect("parallel_map slot poisoned") = Some(r);
+            });
+        }
+        // scope join: a panicked worker re-raises here, before any slot
+        // is read
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("parallel_map slot poisoned")
+                .expect("parallel_map item never ran")
+        })
+        .collect()
+}
+
+/// Ordered parallel map over a slice: `f(index, &item)` with the results
+/// in item order for every worker count.
+pub fn parallel_map<T, R, F>(workers: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    parallel_map_n(workers, items.len(), |i| f(i, &items[i]))
+}
+
+/// [`parallel_map_n`] for RNG-bearing tasks: item `i` receives a private
+/// `Rng64` on the `stream_seed(seed, domain, i)` stream — keyed by the
+/// *item index*, never the worker — so a task may draw randomness and the
+/// output stays worker-count invariant. This is the fleet's per-edge
+/// provisioning-stream convention, lifted into the executor.
+pub fn parallel_map_keyed<R, F>(workers: usize, n: usize, seed: u64, domain: u64, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, &mut Rng64) -> R + Sync,
+{
+    parallel_map_n(workers, n, |i| {
+        let mut rng = Rng64::new(stream_seed(seed, domain, i as u64));
+        f(i, &mut rng)
+    })
+}
+
+/// Chunked shard executor: split `items` into contiguous `⌈n/workers⌉`
+/// chunks, one scoped thread per chunk, and run `f(&mut item)` on every
+/// item. Each item is visited exactly once by exactly one worker; within
+/// a chunk, items run in slice order. This is the fleet event loop's
+/// shard layout (long-running stateful shards want contiguity, not
+/// work-stealing).
+pub fn for_each_shard_mut<T, F>(workers: usize, items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(&mut T) + Sync,
+{
+    let n = items.len();
+    let workers = clamp_workers(workers, n);
+    if workers <= 1 {
+        for item in items.iter_mut() {
+            f(item);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for shard in items.chunks_mut(chunk) {
+            let f = &f;
+            scope.spawn(move || {
+                for item in shard.iter_mut() {
+                    f(item);
+                }
+            });
+        }
+    });
+}
+
+/// Assert `f` produces an identical output vector under every
+/// [`WORKER_SWEEP`] worker count. (The fleet/sweep determinism suites
+/// compare whole `FleetReport`s via `bitwise_eq` and share only
+/// [`WORKER_SWEEP`]; this `PartialEq` flavour serves the in-module
+/// property tests, so it is test-gated rather than shipped.)
+#[cfg(test)]
+fn assert_worker_invariant<T, R, F>(items: &[T], f: F)
+where
+    T: Sync,
+    R: Send + PartialEq + std::fmt::Debug,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let reference = parallel_map(WORKER_SWEEP[0], items, &f);
+    for &workers in &WORKER_SWEEP[1..] {
+        let got = parallel_map(workers, items, &f);
+        assert_eq!(
+            reference, got,
+            "parallel_map output changed at {workers} workers"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_is_ordered_for_every_worker_count_and_boundary_size() {
+        // sizes straddling chunk/cursor boundaries: empty, single, around
+        // the 8-worker split, exact multiples, off-by-one
+        for n in [0usize, 1, 2, 3, 7, 8, 9, 16, 17, 64] {
+            let items: Vec<usize> = (0..n).collect();
+            let expect: Vec<usize> = items.iter().map(|&x| x * x + 1).collect();
+            for w in [0usize, 1, 2, 3, 8, 64] {
+                let got = parallel_map(w, &items, |_, &x| x * x + 1);
+                assert_eq!(got, expect, "n={n} workers={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_input_runs_nothing() {
+        let got: Vec<u32> = parallel_map_n(8, 0, |_| unreachable!());
+        assert!(got.is_empty());
+        let mut items: Vec<u32> = Vec::new();
+        for_each_shard_mut(8, &mut items, |_| unreachable!());
+    }
+
+    #[test]
+    fn worker_invariance_helper_covers_the_canonical_sweep() {
+        assert_eq!(WORKER_SWEEP, [1, 2, 8]);
+        let items: Vec<u64> = (0..100).collect();
+        assert_worker_invariant(&items, |i, &x| x.wrapping_mul(0x9E37) ^ i as u64);
+    }
+
+    #[test]
+    fn keyed_streams_depend_on_index_not_worker() {
+        let draw = |w: usize| parallel_map_keyed(w, 16, 42, 0x7E57, |_, rng| rng.next_u64());
+        let reference = draw(1);
+        for &w in &WORKER_SWEEP[1..] {
+            assert_eq!(reference, draw(w), "keyed stream moved at {w} workers");
+        }
+        // the stream really is (seed, domain, index)-keyed
+        let mut direct = Rng64::new(stream_seed(42, 0x7E57, 3));
+        assert_eq!(reference[3], direct.next_u64());
+    }
+
+    #[test]
+    fn shard_mut_touches_every_item_exactly_once() {
+        for n in [0usize, 1, 5, 8, 9, 17] {
+            for w in [1usize, 2, 3, 8, 32] {
+                let mut items = vec![0u32; n];
+                for_each_shard_mut(w, &mut items, |x| *x += 1);
+                assert!(items.iter().all(|&x| x == 1), "n={n} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn panics_propagate_for_every_worker_count() {
+        for w in [1usize, 4] {
+            let caught = std::panic::catch_unwind(|| {
+                parallel_map_n(w, 8, |i| {
+                    if i == 5 {
+                        panic!("task panic");
+                    }
+                    i
+                })
+            });
+            assert!(caught.is_err(), "panic must propagate at {w} workers");
+        }
+    }
+
+    #[test]
+    fn resolve_workers_clamps_and_autodetects() {
+        assert!(resolve_workers(0, 1000) >= 1);
+        assert_eq!(resolve_workers(4, 2), 2);
+        assert_eq!(resolve_workers(3, 100), 3);
+        assert_eq!(resolve_workers(8, 0), 1);
+    }
+}

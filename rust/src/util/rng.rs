@@ -25,6 +25,16 @@ pub fn mix64(mut z: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// One step of the canonical identity-hash fold used by every
+/// content-addressed key in the repo (`ProvisionArtifacts::data_key`, the
+/// sweep engine's `grid_hash`): a golden-ratio spread of `v` mixed into
+/// the accumulator. One definition so the derivations can never drift
+/// apart.
+#[inline]
+pub fn hash_fold(acc: u64, v: u64) -> u64 {
+    mix64(acc ^ v.wrapping_mul(GOLDEN_GAMMA))
+}
+
 /// Derive the key of stream `stream` in domain `domain` under `master`:
 /// three chained [`mix64`] rounds so that nearby masters, domains, and
 /// stream ids (0, 1, 2, …) decorrelate fully. This is the seed schedule

@@ -3,11 +3,16 @@
 //! the same seed — across seeds, worker counts, detectors, a lossy
 //! channel, a noisy teacher, and live evaluation windows (every RNG
 //! stream the shards own gets exercised). Floats are compared by bit
-//! pattern (`FleetReport::bitwise_eq`), not tolerance.
+//! pattern (`FleetReport::bitwise_eq`), not tolerance. Worker counts come
+//! from the shared executor's canonical `util::parallel::WORKER_SWEEP`
+//! (1/2/8), so this suite and the sweep-engine suite assert the same
+//! sweep against the same `util::parallel` layer every call site now
+//! routes through.
 
 use odl_har::coordinator::fleet::{DetectorKind, Fleet, FleetConfig, Scenario};
 use odl_har::coordinator::{ChannelConfig, FleetReport};
 use odl_har::data::SynthConfig;
+use odl_har::util::parallel::WORKER_SWEEP;
 
 fn scenario(detector: DetectorKind) -> Scenario {
     Scenario {
@@ -57,7 +62,7 @@ fn parallel_bitwise_identical_across_seeds_and_worker_counts() {
     let sc = scenario(DetectorKind::Oracle);
     for seed in [1u64, 7, 23] {
         let seq = run(&sc, seed, 0);
-        for k in [1usize, 2, 4] {
+        for k in WORKER_SWEEP {
             let par = run(&sc, seed, k);
             assert!(
                 seq.bitwise_eq(&par),
@@ -73,7 +78,7 @@ fn parallel_bitwise_identical_with_centroid_detector() {
     // shard instead of the scripted force at drift_at_s
     let sc = scenario(DetectorKind::Centroid);
     let seq = run(&sc, 5, 0);
-    for k in [2usize, 3] {
+    for &k in &WORKER_SWEEP[1..] {
         let par = run(&sc, 5, k);
         assert!(seq.bitwise_eq(&par), "centroid diverged at {k} workers");
     }
@@ -119,8 +124,8 @@ fn provisioning_workers_bitwise_identical_across_seeds_and_detectors() {
     for detector in [DetectorKind::Oracle, DetectorKind::Centroid] {
         let sc = scenario(detector);
         for seed in [3u64, 17] {
-            let reference = run_provisioned(&sc, seed, 1);
-            for workers in [2usize, 8] {
+            let reference = run_provisioned(&sc, seed, WORKER_SWEEP[0]);
+            for &workers in &WORKER_SWEEP[1..] {
                 let sharded = run_provisioned(&sc, seed, workers);
                 assert!(
                     reference.bitwise_eq(&sharded),

@@ -17,6 +17,10 @@
 #            provision_speedup @ 256 edges    (higher is better)
 #            provision_ms @ 256 edges         (lower is better)
 #   sweep:   memo_speedup                     (higher is better)
+#
+# Absolute gates (not baseline-relative):
+#   sweep:   resume_overhead_frac <= 0.20 — resuming an already complete
+#            results file must be ~free (parse + verify, no cells run)
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -84,6 +88,19 @@ check("fleet", "BENCH_fleet.json", "BENCH_fleet.prev.json", [
 check("sweep", "BENCH_sweep.json", "BENCH_sweep.prev.json", [
     ("memo_speedup", lambda d: d.get("memo_speedup"), True),
 ])
+
+# absolute resume gate: a resumed-complete run skips every cell, so its
+# cost must be a small fraction of a full file run on any machine
+RESUME_TOL = 0.20
+sweep = load("BENCH_sweep.json")
+frac = sweep.get("resume_overhead_frac")
+if frac is None:
+    print("bench_check: sweep:resume_overhead_frac not measured (old bench?), skipping")
+elif frac > RESUME_TOL:
+    print(f"bench_check: sweep:resume_overhead_frac {frac:.3f} [REGRESSION > {RESUME_TOL}]")
+    failures.append("sweep:resume_overhead_frac")
+else:
+    print(f"bench_check: sweep:resume_overhead_frac {frac:.3f} [ok]")
 
 if failures:
     print("bench_check: FAIL (>10% regression): " + ", ".join(failures))

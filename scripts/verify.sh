@@ -23,12 +23,27 @@ cargo test -q --test fleet_determinism
 ODL_BENCH_FAST=1 cargo bench --bench bench_hotpath
 ODL_BENCH_FAST=1 cargo bench --bench bench_fleet_scale
 ODL_BENCH_FAST=1 cargo bench --bench bench_sweep
-# sweep smoke: a TOML-declared grid end to end through the CLI; the
-# results file must contain header + 4 cells + stats trailer
+# sweep smoke: a TOML-declared grid (incl. the n_hidden/loss/teacher-error
+# axes) end to end through the CLI; the results file must contain
+# header + 16 cells + stats trailer
 ./target/release/odl-har sweep --config configs/sweep_smoke.toml --out /tmp/odl_sweep_smoke.jsonl
 lines=$(wc -l < /tmp/odl_sweep_smoke.jsonl)
-if [[ "$lines" -ne 6 ]]; then
-  echo "sweep smoke: expected 6 result lines, got $lines" >&2
+if [[ "$lines" -ne 18 ]]; then
+  echo "sweep smoke: expected 18 result lines, got $lines" >&2
   exit 1
 fi
+# dry-run smoke: the plan printer must enumerate the grid without running
+# a cell (and without touching any results file); capture-then-grep avoids
+# a SIGPIPE from grep -q under pipefail
+dry_out=$(./target/release/odl-har sweep --config configs/sweep_smoke.toml --dry-run)
+grep -q "memo plan:" <<< "$dry_out"
+grep -q "cell   15" <<< "$dry_out"
+# kill-then-resume smoke: truncate the results mid-grid (simulating a
+# kill), resume, and require the final file byte-identical to the
+# uninterrupted run; resuming the complete file again must be a no-op
+head -n 5 /tmp/odl_sweep_smoke.jsonl > /tmp/odl_sweep_resume.jsonl
+./target/release/odl-har sweep --config configs/sweep_smoke.toml --out /tmp/odl_sweep_resume.jsonl --resume
+cmp /tmp/odl_sweep_smoke.jsonl /tmp/odl_sweep_resume.jsonl
+./target/release/odl-har sweep --config configs/sweep_smoke.toml --out /tmp/odl_sweep_resume.jsonl --resume
+cmp /tmp/odl_sweep_smoke.jsonl /tmp/odl_sweep_resume.jsonl
 echo "verify: OK"
