@@ -12,16 +12,26 @@
 //! * every memoized cell report is **bitwise identical** to the
 //!   individually constructed fleet for the same scenario;
 //! * a sweep resumed from a truncated results file finishes **byte
-//!   identical** to the uninterrupted file.
+//!   identical** to the uninterrupted file;
+//! * a 3-way `--shard` split, merged, is **byte identical** to the
+//!   single-process file;
+//! * the edge-state memo (provisioned cores shared across cells that
+//!   differ only in `n_edges`) is bitwise invisible on an
+//!   `edge_counts`-heavy grid — then that grid is timed memo-off vs
+//!   memo-on (`edge_memo_speedup`, plus the plan-derived
+//!   `edge_hit_rate`).
 //!
 //! Results go to `BENCH_sweep.json` (`ODL_BENCH_SWEEP_JSON` overrides);
-//! `scripts/bench_check.sh` gates `memo_speedup` regressions > 10 % and
-//! `resume_overhead_frac` (a resumed-complete run must be ~free —
-//! skipping every cell, verifying the trailer, writing nothing).
+//! `scripts/bench_check.sh` gates `memo_speedup` / `edge_memo_speedup`
+//! regressions > 10 %, `resume_overhead_frac` (a resumed-complete run
+//! must be ~free), and the absolute edge-memo gates (`edge_hit_rate` ≥
+//! 0.5, and `edge_memo_speedup` ≥ 0.9 — the memo must be a wall-clock
+//! win, floor held with the shared 10 % noise tolerance).
 
 use odl_har::coordinator::fleet::{DetectorKind, Fleet, FleetConfig, Scenario};
 use odl_har::coordinator::sweep::{
-    resume_sweep_to_file, run_sweep, run_sweep_to_file, SweepSpec,
+    merge_shard_files, resume_sweep_to_file, run_shard_to_file, run_sweep, run_sweep_to_file,
+    ShardSpec, SweepSpec,
 };
 use odl_har::data::SynthConfig;
 use odl_har::util::bench::{bench, fast_mode};
@@ -61,6 +71,30 @@ fn spec(workers: usize) -> SweepSpec {
         teacher_errors: vec![base.teacher_error],
         workers,
         record_pca: false,
+        memo_edge_state: true,
+        base,
+    }
+}
+
+/// An `edge_counts`-heavy grid where per-edge `init_batch` dominates —
+/// the edge-state memo's target workload: one seed, one hidden width,
+/// fleets of growing size, so memo-off provisions Σ n_edges cores per
+/// theta while memo-on builds max(n_edges) once and lends them out.
+fn edge_spec(workers: usize, memo: bool) -> SweepSpec {
+    let mut base = base_scenario();
+    base.n_hidden = 64;
+    base.horizon_s = if fast_mode() { 30.0 } else { 80.0 };
+    SweepSpec {
+        seeds: vec![1],
+        thetas: vec![None, Some(0.2), Some(0.3)],
+        edge_counts: vec![4, 8, 16],
+        detectors: vec![DetectorKind::Oracle],
+        n_hiddens: vec![base.n_hidden],
+        loss_probs: vec![base.channel.loss_prob],
+        teacher_errors: vec![base.teacher_error],
+        workers,
+        record_pca: false,
+        memo_edge_state: memo,
         base,
     }
 }
@@ -142,6 +176,52 @@ fn main() {
     );
     println!("  resume contract holds: 3 kept + {} rerun, bytes identical", n_cells - 3);
 
+    // shard/merge contract: a 3-way split of the same grid, merged in
+    // scrambled order, must reproduce the single-process file byte for
+    // byte (the process-level fan-out protocol)
+    let plan = spec.plan();
+    let mut shard_paths = Vec::new();
+    for index in 1..=3usize {
+        let p = dir.join(format!("shard_{index}.jsonl"));
+        run_shard_to_file(&spec, &plan, ShardSpec { index, of: 3 }, &p).expect("shard failed");
+        shard_paths.push(p);
+    }
+    shard_paths.reverse();
+    let merged = dir.join("merged.jsonl");
+    merge_shard_files(&plan, &shard_paths, &merged).expect("merge failed");
+    assert_eq!(
+        std::fs::read_to_string(&merged).expect("read merged results"),
+        full,
+        "merged shard set must be byte-identical to the single-process run"
+    );
+    println!("  shard contract holds: 3-way split merges byte-identical");
+
+    // edge-state memo contract: an edge_counts-heavy grid must be
+    // bitwise identical with the memo on and off before we time it
+    let e_on = run_sweep(&edge_spec(workers, true)).expect("edge sweep failed");
+    let e_off = run_sweep(&edge_spec(workers, false)).expect("edge sweep failed");
+    for ((cell, a), (_, b)) in e_on.reports.iter().zip(&e_off.reports) {
+        assert!(
+            a.bitwise_eq(b),
+            "edge grid cell {} diverged with the memo on",
+            cell.index
+        );
+    }
+    let edge_total = e_on.stats.edge_builds + e_on.stats.edge_hits;
+    assert_eq!(e_off.stats.edge_hits, 0);
+    assert_eq!(e_off.stats.edge_builds, edge_total);
+    assert!(
+        e_on.stats.edge_hits > e_on.stats.edge_builds,
+        "edge memo must hit more than it builds on this grid ({} builds, {} hits)",
+        e_on.stats.edge_builds,
+        e_on.stats.edge_hits
+    );
+    let edge_hit_rate = e_on.stats.edge_hits as f64 / edge_total.max(1) as f64;
+    println!(
+        "  edge-state memo contract holds: {} builds + {} hits (hit rate {:.2}), bitwise equal to memo off",
+        e_on.stats.edge_builds, e_on.stats.edge_hits, edge_hit_rate
+    );
+
     let iters = if fast_mode() { 3 } else { 5 };
     let r_naive = bench(&format!("sweep naive {n_cells:>2} cells"), 1, iters, || {
         std::hint::black_box(run_naive(&spec));
@@ -188,8 +268,33 @@ fn main() {
     );
     let _ = std::fs::remove_dir_all(&dir);
 
+    // edge-state memo wall clock: the same edge_counts-heavy grid with
+    // shared provisioned cores vs per-cell re-provisioning
+    let n_edge_cells = edge_spec(workers, true).cells().len();
+    let r_edge_off = bench(
+        &format!("edge grid memo-off {n_edge_cells:>2} cells"),
+        1,
+        iters,
+        || {
+            std::hint::black_box(run_sweep(&edge_spec(workers, false)).expect("sweep failed"));
+        },
+    );
+    let r_edge_on = bench(
+        &format!("edge grid memo-on  {n_edge_cells:>2} cells"),
+        1,
+        iters,
+        || {
+            std::hint::black_box(run_sweep(&edge_spec(workers, true)).expect("sweep failed"));
+        },
+    );
+    let edge_memo_speedup = r_edge_off.mean_s / r_edge_on.mean_s.max(1e-9);
+    println!(
+        "  -> edge-state memo {edge_memo_speedup:.2}x ({:.3}s -> {:.3}s) on the edge_counts-heavy grid",
+        r_edge_off.mean_s, r_edge_on.mean_s
+    );
+
     let out = obj(vec![
-        ("schema", Json::Str("bench_sweep/v2".into())),
+        ("schema", Json::Str("bench_sweep/v3".into())),
         ("fast_mode", Json::Bool(fast_mode())),
         ("workers", Json::Num(workers as f64)),
         ("cells", Json::Num(n_cells as f64)),
@@ -215,6 +320,13 @@ fn main() {
         ("file_s", Json::Num(r_file.mean_s)),
         ("resume_complete_s", Json::Num(r_resume.mean_s)),
         ("resume_overhead_frac", Json::Num(resume_overhead_frac)),
+        ("edge_cells", Json::Num(n_edge_cells as f64)),
+        ("edge_builds", Json::Num(e_on.stats.edge_builds as f64)),
+        ("edge_hits", Json::Num(e_on.stats.edge_hits as f64)),
+        ("edge_hit_rate", Json::Num(edge_hit_rate)),
+        ("edge_off_s", Json::Num(r_edge_off.mean_s)),
+        ("edge_memo_s", Json::Num(r_edge_on.mean_s)),
+        ("edge_memo_speedup", Json::Num(edge_memo_speedup)),
     ]);
     let path =
         std::env::var("ODL_BENCH_SWEEP_JSON").unwrap_or_else(|_| "BENCH_sweep.json".into());

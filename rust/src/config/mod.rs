@@ -188,6 +188,7 @@ fn scenario_from_doc(doc: &TomlDoc) -> Result<(Scenario, u64, usize)> {
 /// teacher_errors = [0.0, 0.1]   # teacher label-error rates
 /// workers = 0                   # cross-cell workers; 0 = auto
 /// record_pca = false
+/// memo_edge_state = true        # share provisioned edge cores across cells
 /// ```
 ///
 /// Omitted axes default to the base scenario's single value. Pin
@@ -210,9 +211,46 @@ fn sweep_axis<'a>(doc: &'a TomlDoc, key: &str) -> Result<Option<&'a [TomlValue]>
     }
 }
 
+/// The keys the `[sweep]` section understands — a present key outside
+/// this list is a rejected typo, not a silently ignored one (a
+/// misspelled axis would otherwise quietly collapse the declared grid).
+const SWEEP_KEYS: &[&str] = &[
+    "seeds",
+    "thetas",
+    "edge_counts",
+    "detectors",
+    "n_hiddens",
+    "loss_probs",
+    "teacher_errors",
+    "workers",
+    "record_pca",
+    "memo_edge_state",
+];
+
 pub fn sweep_from_str(text: &str) -> Result<SweepSpec> {
     let doc = TomlDoc::parse(text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+    for key in doc.section_keys("sweep") {
+        ensure!(
+            SWEEP_KEYS.contains(&key),
+            "unknown [sweep] key '{key}' — valid keys: {}",
+            SWEEP_KEYS.join(", ")
+        );
+    }
     let (base, seed, _fleet_workers) = scenario_from_doc(&doc)?;
+    // present-but-wrong-typed scalars must error like a typo'd key would
+    // — a silently dropped value makes the sweep lie about what it ran
+    let sweep_bool = |key: &str, default: bool| -> Result<bool> {
+        match doc.get("sweep", key) {
+            None => Ok(default),
+            Some(TomlValue::Bool(b)) => Ok(*b),
+            Some(other) => bail!("sweep.{key} must be a boolean, got {other:?}"),
+        }
+    };
+    let workers = match doc.get("sweep", "workers") {
+        None => 0,
+        Some(TomlValue::Int(i)) => (*i).max(0) as usize,
+        Some(other) => bail!("sweep.workers must be an integer (0 = auto), got {other:?}"),
+    };
     let mut spec = SweepSpec {
         seeds: vec![seed],
         thetas: vec![base.fixed_theta],
@@ -221,8 +259,9 @@ pub fn sweep_from_str(text: &str) -> Result<SweepSpec> {
         n_hiddens: vec![base.n_hidden],
         loss_probs: vec![base.channel.loss_prob],
         teacher_errors: vec![base.teacher_error],
-        workers: doc.get_int("sweep", "workers").unwrap_or(0).max(0) as usize,
-        record_pca: doc.get_bool("sweep", "record_pca").unwrap_or(false),
+        workers,
+        record_pca: sweep_bool("record_pca", false)?,
+        memo_edge_state: sweep_bool("memo_edge_state", true)?,
         base,
     };
     if let Some(items) = sweep_axis(&doc, "seeds")? {
@@ -428,8 +467,83 @@ record_pca = true
         assert_eq!(spec.teacher_errors, vec![0.0, 0.1]);
         assert_eq!(spec.workers, 3);
         assert!(spec.record_pca);
+        assert!(spec.memo_edge_state, "edge-state memo defaults on");
         assert_eq!(spec.base.data_seed, Some(123));
         assert_eq!(spec.cells().len(), 128);
+    }
+
+    #[test]
+    fn sweep_memo_edge_state_parses_and_validates() {
+        let spec = sweep_from_str("[sweep]\nmemo_edge_state = false\n").unwrap();
+        assert!(!spec.memo_edge_state);
+        let err = sweep_from_str("[sweep]\nmemo_edge_state = 1\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("memo_edge_state"), "{err}");
+    }
+
+    #[test]
+    fn sweep_scalar_keys_reject_wrong_types() {
+        // the same strictness as memo_edge_state: a declared-but-mistyped
+        // value must error, not silently fall back to the default
+        let err = sweep_from_str("[sweep]\nrecord_pca = 1\n").unwrap_err().to_string();
+        assert!(err.contains("record_pca"), "{err}");
+        let err = sweep_from_str("[sweep]\nworkers = \"4\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("workers"), "{err}");
+        // negative workers still clamp to auto rather than wrapping
+        assert_eq!(sweep_from_str("[sweep]\nworkers = -2\n").unwrap().workers, 0);
+    }
+
+    #[test]
+    fn sweep_rejects_unknown_axes() {
+        // a typo'd axis must error with the valid keys listed, not
+        // silently collapse the grid to the base scenario
+        let err = sweep_from_str("[sweep]\nseedz = [1, 2]\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown [sweep] key 'seedz'"), "{err}");
+        assert!(err.contains("edge_counts"), "{err}");
+        let err = sweep_from_str("[sweep]\nn_hidden = [64]\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("'n_hidden'"), "{err}");
+        // unknown keys outside [sweep] stay permitted (fleet/experiment
+        // sections are shared with other subcommands)
+        assert!(sweep_from_str("[fleet]\nn_edges = 2\ncomment_key = 1\n").is_ok());
+    }
+
+    #[test]
+    fn sweep_rejects_out_of_range_probability_axes() {
+        for bad in [
+            "[sweep]\nloss_probs = [0.0, 1.01]\n",
+            "[sweep]\nloss_probs = [-0.5]\n",
+            "[sweep]\nteacher_errors = [7]\n",
+            "[sweep]\nteacher_errors = [0.1, -1]\n",
+        ] {
+            let err = sweep_from_str(bad).unwrap_err().to_string();
+            assert!(err.contains("[0, 1]") || err.contains("outside"), "{bad:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn sweep_rejects_malformed_and_duplicate_toml() {
+        // malformed array: parser error with the line number
+        let err = sweep_from_str("[sweep]\nseeds = [1, 2\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        // nested arrays are not scalars: axis entry type error
+        let err = sweep_from_str("[sweep]\nseeds = [[1]]\n").unwrap_err().to_string();
+        assert!(err.contains("seeds"), "{err}");
+        // duplicate keys are a parse error, not last-write-wins
+        let err = sweep_from_str("[sweep]\nseeds = [1]\nseeds = [2]\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate key 'seeds'"), "{err}");
+        let err = sweep_from_str("[fleet]\nn_edges = 2\nn_edges = 4\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate key 'n_edges'"), "{err}");
     }
 
     #[test]

@@ -44,10 +44,25 @@ impl TomlDoc {
                 .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
             let value = parse_value(value.trim())
                 .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
-            doc.sections
+            let key = key.trim().to_string();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            // TOML forbids redefining a key; silently keeping the last
+            // write would make a typo'd config lie about what it ran
+            let prev = doc
+                .sections
                 .entry(section.clone())
                 .or_default()
-                .insert(key.trim().to_string(), value);
+                .insert(key.clone(), value);
+            if prev.is_some() {
+                return Err(format!(
+                    "line {}: duplicate key '{}' in section '[{}]'",
+                    lineno + 1,
+                    key,
+                    section
+                ));
+            }
         }
         Ok(doc)
     }
@@ -91,6 +106,16 @@ impl TomlDoc {
             Value::Arr(items) => Some(items),
             _ => None,
         }
+    }
+
+    /// Every key present in `section`, in sorted order (empty when the
+    /// section is absent). Lets typed configs reject unknown keys instead
+    /// of silently ignoring a typo'd axis.
+    pub fn section_keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|keys| keys.keys().map(String::as_str).collect())
+            .unwrap_or_default()
     }
 }
 
@@ -188,6 +213,45 @@ mod tests {
     #[test]
     fn rejects_unterminated_array() {
         assert!(TomlDoc::parse("[s]\nk = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_arrays_descriptively() {
+        // every malformation names its line and never panics
+        for (bad, needle) in [
+            ("[s]\nk = [1, 2\n", "line 2"),
+            ("[s]\nk = [1,, 2]\n", "line 2"),
+            ("[s]\nk = [1 2]\n", "line 2"),
+            ("[s]\nk = [\"open]\n", "line 2"),
+            ("[s]\nk = [nope]\n", "line 2"),
+        ] {
+            let err = TomlDoc::parse(bad).unwrap_err();
+            assert!(err.contains(needle), "{bad:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn rejects_duplicate_keys() {
+        let err = TomlDoc::parse("[s]\nk = 1\nk = 2\n").unwrap_err();
+        assert!(err.contains("line 3"), "{err}");
+        assert!(err.contains("duplicate key 'k'"), "{err}");
+        assert!(err.contains("[s]"), "{err}");
+        // a re-opened section is still the same namespace
+        let err = TomlDoc::parse("[s]\nk = 1\n[t]\nj = 2\n[s]\nk = 3\n").unwrap_err();
+        assert!(err.contains("line 6"), "{err}");
+        assert!(err.contains("duplicate key 'k'"), "{err}");
+        // same key in different sections is fine
+        let doc = TomlDoc::parse("[s]\nk = 1\n[t]\nk = 2\n").unwrap();
+        assert_eq!(doc.get_int("s", "k"), Some(1));
+        assert_eq!(doc.get_int("t", "k"), Some(2));
+    }
+
+    #[test]
+    fn section_keys_enumerate_only_that_section() {
+        let doc = TomlDoc::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3\n").unwrap();
+        assert_eq!(doc.section_keys("a"), vec!["x", "y"]);
+        assert_eq!(doc.section_keys("b"), vec!["z"]);
+        assert!(doc.section_keys("missing").is_empty());
     }
 
     #[test]

@@ -78,13 +78,28 @@ pub struct EdgeDevice {
 impl EdgeDevice {
     pub fn new(id: usize, cfg: EdgeConfig, rng: &mut Rng64) -> Self {
         let model = OsElm::new(cfg.model, rng, cfg.hash_seed);
+        Self::from_parts(id, model, cfg.pruner, cfg.detector, cfg.train_target)
+    }
+
+    /// Assemble a device around an already-constructed (typically
+    /// pre-provisioned) ODL core. The fleet's edge-state memo clones a
+    /// provisioned `OsElm` across scenario cells that share it and hands
+    /// it in here; everything else (FSM, pruner, detector, counters)
+    /// starts fresh exactly as [`Self::new`] would.
+    pub fn from_parts(
+        id: usize,
+        model: OsElm,
+        pruner: Pruner,
+        detector: Box<dyn DriftDetector + Send>,
+        train_target: usize,
+    ) -> Self {
         EdgeDevice {
             id,
             mode: Mode::Predicting,
             model,
-            pruner: cfg.pruner,
-            detector: cfg.detector,
-            train_target: cfg.train_target,
+            pruner,
+            detector,
+            train_target,
             trained_this_phase: 0,
             events_this_phase: 0,
             pending: None,

@@ -55,9 +55,16 @@
 //!    `stream_seed(seed, PROVISION, edge)`) — bitwise identical to the
 //!    sequential [`Fleet::new`] for every worker count, by the same
 //!    no-shared-mutable-state argument as the event loop.
+//! 3. **Edge-state sharing**: the provisioned core itself
+//!    ([`provisioned_edge_model`]) is independent of `n_edges` and of
+//!    every pure-simulation knob (θ, detector, channel, teacher), so the
+//!    [`super::sweep`] engine memoizes it per `(data key, seed,
+//!    n_hidden)` and [`Fleet::with_edge_models`] clones the shared cores
+//!    instead of re-running `init_batch` per cell — bitwise invisible by
+//!    the purity of the build.
 
 use super::channel::{Channel, ChannelConfig};
-use super::edge::{EdgeConfig, EdgeDevice, Mode, StepAction};
+use super::edge::{EdgeDevice, Mode, StepAction};
 use super::metrics::{EdgeMetrics, FleetReport};
 use super::teacher::Teacher;
 use crate::data::pca::Pca;
@@ -66,13 +73,14 @@ use crate::data::{Dataset, Standardizer, HELD_OUT_SUBJECTS};
 use crate::drift::{CentroidDetector, DriftDetector, OracleDetector};
 use crate::hw::{CycleModel, PowerModel, PowerState};
 use crate::linalg::Mat;
-use crate::odl::{AlphaKind, OsElmConfig};
+use crate::odl::{AlphaKind, OsElm, OsElmConfig};
 use crate::pruning::{Metric, Pruner, ThetaPolicy};
 use crate::util::parallel;
 use crate::util::rng::{hash_fold, stream_seed, CounterRng, Rng64, RngStream};
 use anyhow::{ensure, Result};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 
 /// Domain tags separating each shard's RNG streams (see
 /// [`crate::util::rng::stream_seed`]). Frozen: changing any of these
@@ -558,25 +566,74 @@ impl EdgeSim {
     }
 }
 
-/// Build one fully provisioned [`EdgeSim`] shard. Pure function of the
-/// scenario, the fleet seed, the edge id, and the (shuffled) provisioning
-/// pool — the invariant that makes sharded construction bitwise equal to
-/// the sequential walk for any worker partitioning.
-fn build_edge_sim(
-    sc: &Scenario,
-    seed: u64,
-    id: usize,
-    edge_rng: &mut Rng64,
-    train: &Dataset,
-    in_subjects: &[usize],
-) -> Result<EdgeSim> {
-    let model = OsElmConfig {
+/// The OS-ELM config every edge of a scenario runs — the single source
+/// for the inline and memoized provisioning paths.
+fn edge_model_config(sc: &Scenario) -> OsElmConfig {
+    OsElmConfig {
         n_in: sc.synth.n_features,
         n_hidden: sc.n_hidden,
         n_out: sc.synth.n_classes,
         alpha: AlphaKind::Hash,
         ..Default::default()
-    };
+    }
+}
+
+/// α hash seed of edge `id` under fleet seed `seed`. Frozen: part of
+/// every recorded trajectory. Wrapping arithmetic throughout — the
+/// product overflows u16 from edge 2115 up, which is well inside a
+/// "millions of edges" fleet; release builds always wrapped here, and
+/// `wrapping_mul` keeps debug builds bit-identical instead of panicking.
+fn edge_hash_seed(seed: u64, id: usize) -> u16 {
+    (seed as u16).wrapping_add((id as u16).wrapping_mul(31))
+}
+
+/// Construct + batch-provision edge `id`'s OS-ELM core from the
+/// (shuffled) provisioning pool. `edge_rng` must be the edge's canonical
+/// `stream_seed(seed, PROVISION, id)` stream (unused under
+/// `AlphaKind::Hash` — α comes from the 16-bit xorshift keyed by
+/// [`edge_hash_seed`] — but a future α kind may sample here).
+fn provision_edge_model_with(
+    sc: &Scenario,
+    seed: u64,
+    id: usize,
+    edge_rng: &mut Rng64,
+    train: &Dataset,
+) -> Result<OsElm> {
+    let mut model = OsElm::new(edge_model_config(sc), edge_rng, edge_hash_seed(seed, id));
+    model.init_batch(&train.xs, &train.labels)?;
+    Ok(model)
+}
+
+/// [`provision_edge_model_with`] on a freshly derived canonical stream —
+/// the entry point the sweep engine's **edge-state memo** uses. The
+/// provisioned core is a pure function of the data/model knobs (synth
+/// config, data seed, `n_hidden`), the fleet seed, the edge id, and the
+/// shuffled pool — and is **independent of `n_edges`**, `fixed_theta`,
+/// the detector, the channel, and the teacher — so cells of a scenario
+/// grid that share those inputs can share one build per edge and clone
+/// it, bitwise indistinguishable from provisioning from scratch.
+pub fn provisioned_edge_model(
+    sc: &Scenario,
+    seed: u64,
+    id: usize,
+    train: &Dataset,
+) -> Result<OsElm> {
+    let mut rng = Rng64::new(stream_seed(seed, domain::PROVISION, id as u64));
+    provision_edge_model_with(sc, seed, id, &mut rng, train)
+}
+
+/// Assemble one [`EdgeSim`] shard around an already-provisioned core.
+/// Pure function of the scenario, the fleet seed, the edge id, and the
+/// model — the invariant that makes sharded construction bitwise equal
+/// to the sequential walk for any worker partitioning (and a memoized
+/// model clone bitwise equal to a fresh provisioning).
+fn build_edge_sim(
+    sc: &Scenario,
+    seed: u64,
+    id: usize,
+    model: OsElm,
+    in_subjects: &[usize],
+) -> EdgeSim {
     let policy = match sc.fixed_theta {
         Some(t) => ThetaPolicy::Fixed(t),
         None => ThetaPolicy::auto(),
@@ -586,24 +643,13 @@ fn build_edge_sim(
         DetectorKind::Centroid => Box::new(CentroidDetector::new(sc.synth.n_features)),
     };
     let warmup = crate::pruning::warmup_for(sc.n_hidden).min(sc.train_target / 2);
-    // `edge_rng` is this edge's private provisioning stream,
-    // `stream_seed(seed, PROVISION, id)` — handed in by the executor's
-    // keyed-stream fan-out. AlphaKind::Hash draws nothing from it (α
-    // comes from the 16-bit xorshift keyed by hash_seed), so this matches
-    // the historical shared-rng construction bit for bit while keeping
-    // shards independent.
-    let mut edge = EdgeDevice::new(
+    let edge = EdgeDevice::from_parts(
         id,
-        EdgeConfig {
-            model,
-            hash_seed: (seed as u16).wrapping_add(id as u16 * 31),
-            pruner: Pruner::new(policy, Metric::P1P2, warmup),
-            detector,
-            train_target: sc.train_target,
-        },
-        edge_rng,
+        model,
+        Pruner::new(policy, Metric::P1P2, warmup),
+        detector,
+        sc.train_target,
     );
-    edge.provision(&train.xs, &train.labels)?;
     let pre = in_subjects[id % in_subjects.len()];
     let post = HELD_OUT_SUBJECTS[id % HELD_OUT_SUBJECTS.len()];
     let eid = id as u64;
@@ -626,7 +672,7 @@ fn build_edge_sim(
     if sc.eval_period_s > 0.0 {
         sim.schedule(sc.eval_period_s, Event::Eval);
     }
-    Ok(sim)
+    sim
 }
 
 /// The simulator. Holds only what the event loop needs from the
@@ -695,6 +741,56 @@ impl Fleet {
         train: &Dataset,
         provision_workers: usize,
     ) -> Result<Fleet> {
+        Fleet::build_with_models(cfg, artifacts, train, None, provision_workers)
+    }
+
+    /// Construct from pre-built artifacts, a pre-shuffled pool, **and**
+    /// pre-provisioned per-edge cores — the sweep engine's edge-state
+    /// memo path. `models[id]` must be (bitwise) the model
+    /// [`provisioned_edge_model`]`(sc, seed, id, train)` returns; each
+    /// edge clones its core instead of re-running `init_batch`, so the
+    /// fleet — and every report it produces — is bitwise identical to
+    /// [`Fleet::with_shuffled_pool`] while skipping the dominant
+    /// construction cost.
+    pub fn with_edge_models(
+        cfg: FleetConfig,
+        artifacts: &ProvisionArtifacts,
+        train: &Dataset,
+        models: &[Arc<OsElm>],
+        provision_workers: usize,
+    ) -> Result<Fleet> {
+        ensure!(
+            models.len() >= cfg.scenario.n_edges,
+            "edge-state memo holds {} model(s) but the scenario needs {}",
+            models.len(),
+            cfg.scenario.n_edges
+        );
+        let want = edge_model_config(&cfg.scenario);
+        for (id, m) in models.iter().take(cfg.scenario.n_edges).enumerate() {
+            ensure!(
+                m.cfg.n_in == want.n_in
+                    && m.cfg.n_hidden == want.n_hidden
+                    && m.cfg.n_out == want.n_out,
+                "memoized model for edge {id} was provisioned for a different \
+                 shape ({}x{}x{} vs {}x{}x{})",
+                m.cfg.n_in,
+                m.cfg.n_hidden,
+                m.cfg.n_out,
+                want.n_in,
+                want.n_hidden,
+                want.n_out
+            );
+        }
+        Fleet::build_with_models(cfg, artifacts, train, Some(models), provision_workers)
+    }
+
+    fn build_with_models(
+        cfg: FleetConfig,
+        artifacts: &ProvisionArtifacts,
+        train: &Dataset,
+        models: Option<&[Arc<OsElm>]>,
+        provision_workers: usize,
+    ) -> Result<Fleet> {
         let sc = &cfg.scenario;
         ensure!(
             artifacts.key == ProvisionArtifacts::data_key(sc, cfg.seed),
@@ -707,13 +803,20 @@ impl Fleet {
         // `stream_seed(seed, PROVISION, id)` stream, so the build is a
         // pure function of `(scenario, seed, id, shuffled pool)` and the
         // ordered fan-out is bitwise identical to the sequential walk for
-        // every worker count.
+        // every worker count. A memoized core was provisioned on the
+        // identical stream, so cloning it cannot move a bit either.
         let sims: Vec<EdgeSim> = parallel::parallel_map_keyed(
             provision_workers,
             n_edges,
             seed,
             domain::PROVISION,
-            |id, edge_rng| build_edge_sim(sc, seed, id, edge_rng, train, &artifacts.in_subjects),
+            |id, edge_rng| -> Result<EdgeSim> {
+                let model = match models {
+                    Some(ms) => (*ms[id]).clone(),
+                    None => provision_edge_model_with(sc, seed, id, edge_rng, train)?,
+                };
+                Ok(build_edge_sim(sc, seed, id, model, &artifacts.in_subjects))
+            },
         )
         .into_iter()
         .collect::<Result<_>>()?;
@@ -1044,6 +1147,67 @@ mod tests {
             .unwrap()
             .run();
         assert!(direct.bitwise_eq(&memoized));
+    }
+
+    #[test]
+    fn memoized_edge_models_match_fresh_provisioning() {
+        // the sweep engine's edge-state memo path: cores provisioned
+        // once via provisioned_edge_model, cloned into fleets — bitwise
+        // equal to provisioning from scratch, including for a smaller
+        // fleet that borrows a prefix of the same model set
+        let sc = small_scenario();
+        let artifacts = ProvisionArtifacts::build(&sc, 21, false);
+        let train = artifacts.shuffled_train(21);
+        let models: Vec<Arc<OsElm>> = (0..sc.n_edges)
+            .map(|id| Arc::new(provisioned_edge_model(&sc, 21, id, &train).unwrap()))
+            .collect();
+        let cfg = FleetConfig {
+            scenario: sc.clone(),
+            seed: 21,
+        };
+        let fresh = Fleet::with_shuffled_pool(cfg.clone(), &artifacts, &train, 1)
+            .unwrap()
+            .run();
+        let memo = Fleet::with_edge_models(cfg, &artifacts, &train, &models, 2)
+            .unwrap()
+            .run();
+        assert!(fresh.bitwise_eq(&memo));
+        // n_edges is not a provisioning knob: a 2-edge cell clones the
+        // first two of the same cores and must match a monolithic build
+        let mut small = sc.clone();
+        small.n_edges = 2;
+        let cfg2 = FleetConfig {
+            scenario: small,
+            seed: 21,
+        };
+        let fresh2 = Fleet::new(cfg2.clone()).unwrap().run();
+        let memo2 = Fleet::with_edge_models(cfg2, &artifacts, &train, &models, 1)
+            .unwrap()
+            .run();
+        assert!(fresh2.bitwise_eq(&memo2));
+    }
+
+    #[test]
+    fn with_edge_models_rejects_short_or_mismatched_sets() {
+        let sc = small_scenario();
+        let artifacts = ProvisionArtifacts::build(&sc, 4, false);
+        let train = artifacts.shuffled_train(4);
+        let cfg = FleetConfig {
+            scenario: sc.clone(),
+            seed: 4,
+        };
+        // too few models for the fleet
+        let short: Vec<Arc<OsElm>> = (0..sc.n_edges - 1)
+            .map(|id| Arc::new(provisioned_edge_model(&sc, 4, id, &train).unwrap()))
+            .collect();
+        assert!(Fleet::with_edge_models(cfg.clone(), &artifacts, &train, &short, 1).is_err());
+        // models provisioned for a different hidden width
+        let mut wide = sc.clone();
+        wide.n_hidden = 48;
+        let wrong: Vec<Arc<OsElm>> = (0..sc.n_edges)
+            .map(|id| Arc::new(provisioned_edge_model(&wide, 4, id, &train).unwrap()))
+            .collect();
+        assert!(Fleet::with_edge_models(cfg, &artifacts, &train, &wrong, 1).is_err());
     }
 
     #[test]

@@ -18,10 +18,14 @@
 //! vendor set; the event loop is explicit instead). Construction is
 //! sharded the same way ([`fleet::Fleet::new_parallel`]), and
 //! [`sweep`] fans whole scenario grids over a worker pool with the
-//! shared provisioning artifacts (and per-fleet shuffles) memoized,
+//! shared provisioning artifacts (and per-fleet shuffles, and
+//! per-`(data, seed, n_hidden)` provisioned edge cores) memoized,
 //! lazily built, dropped at their last-use cell, and resumable into an
-//! existing results file. Every fan-out rides the shared deterministic
-//! executor in [`crate::util::parallel`].
+//! existing results file. Grids also fan out across *processes*:
+//! `odl-har sweep --shard I/N` runs an artifact-locality-aware slice of
+//! the grid, and `odl-har merge` recombines a complete shard set into a
+//! file byte-identical to a single-process run. Every in-process fan-out
+//! rides the shared deterministic executor in [`crate::util::parallel`].
 
 pub mod channel;
 pub mod edge;
@@ -34,5 +38,7 @@ pub use channel::{Channel, ChannelConfig};
 pub use edge::{EdgeConfig, EdgeDevice, Mode, StepAction};
 pub use fleet::{Fleet, FleetConfig, ProvisionArtifacts, Scenario};
 pub use metrics::{EdgeMetrics, FleetReport};
-pub use sweep::{ResumeOutcome, SweepOutcome, SweepPlan, SweepSpec, SweepStats};
+pub use sweep::{
+    MergeOutcome, ResumeOutcome, ShardSpec, SweepOutcome, SweepPlan, SweepSpec, SweepStats,
+};
 pub use teacher::{Teacher, TeacherKind};

@@ -21,7 +21,15 @@
 //!    `(data key, fleet seed)` alongside the artifact memo
 //!    ([`ProvisionArtifacts::shuffled_train`] is pure), with its own
 //!    last-use drop point.
-//! 3. Cells fan over [`crate::util::parallel::parallel_map_n`] and
+//! 3. Per-edge **provisioned cores** are memoized per `(data key, fleet
+//!    seed, n_hidden)` —
+//!    [`super::fleet::provisioned_edge_model`] is independent of
+//!    `n_edges` and of every pure-simulation knob (θ, detector, channel,
+//!    teacher) — so cells that differ only in fleet size (or those
+//!    knobs) clone the shared cores via [`Fleet::with_edge_models`]
+//!    instead of re-running `init_batch` per edge. Toggleable
+//!    ([`SweepSpec::memo_edge_state`]); bitwise invisible either way.
+//! 4. Cells fan over [`crate::util::parallel::parallel_map_n`] and
 //!    **stream** one JSON row per cell, in cell order, into the results
 //!    file (an [`OrderedSink`] reorders out-of-order completions).
 //!
@@ -37,7 +45,37 @@
 //! discarded), re-runs only the remaining cells, and appends the stats
 //! trailer. Because every cell report is deterministic, the final file is
 //! **byte-identical** to an uninterrupted run; resuming an already
-//! complete file verifies the trailer and writes nothing.
+//! complete file verifies the trailer and writes nothing. The prefix
+//! rewrite goes through a sibling temp file renamed into place before
+//! new rows are appended, so a crash at any point of a resume loses at
+//! most one in-flight row — never the completed prefix.
+//!
+//! # Shards + merge (process-level fan-out)
+//!
+//! [`run_shard_to_file`] (`odl-har sweep --shard I/N`) runs one of `N`
+//! disjoint slices of the grid, so a big study can fan out across
+//! processes or hosts. [`SweepPlan::shard_ranges`] partitions the cell
+//! order into `N` contiguous ranges, snapping each cut to a `data_key`
+//! group boundary when one lies within half a shard of the even split —
+//! shards keep whole artifact groups whenever the grid has enough of
+//! them, so each shard's memo hit rate matches its slice and no shard
+//! rebuilds a neighbour's artifacts. A shard file is the same stream a
+//! full run writes — header, completed-cell rows carrying their
+//! **global** cell indices, stats trailer — except the header carries a
+//! `shard` annotation (`index`/`of`/`start`/`count`) and the trailer
+//! accounts the slice, not the grid. `--shard 1/1` **is** the unsharded
+//! stream, byte for byte. Shards resume independently
+//! ([`resume_shard_to_file`]) under the same protocol as full runs.
+//!
+//! [`merge_shard_files`] (`odl-har merge`) validates a complete shard
+//! set — every header byte-compared against this spec's plan, every
+//! shard complete (no error rows, no missing trailer), indices `1..=N`
+//! present exactly once, which makes the ranges tile the grid by
+//! construction — then re-interleaves the row bytes in global cell
+//! order and writes a header + stats trailer recomputed from the full
+//! plan. The output is **byte-identical** to a single-process
+//! [`run_sweep_to_file`] over the same spec, from any complete shard
+//! set, in any argument order, for any `N`.
 //!
 //! Determinism contract: each cell's `FleetReport` is **bitwise
 //! identical** to the report of an individually constructed
@@ -47,15 +85,19 @@
 //! re-checked by `benches/bench_sweep.rs` before it times anything.
 
 use super::channel::ChannelConfig;
-use super::fleet::{DetectorKind, Fleet, FleetConfig, ProvisionArtifacts, Scenario};
+use super::fleet::{
+    provisioned_edge_model, DetectorKind, Fleet, FleetConfig, ProvisionArtifacts, Scenario,
+};
 use super::metrics::FleetReport;
 use crate::data::Dataset;
+use crate::odl::OsElm;
 use crate::util::json::{obj, Json};
 use crate::util::parallel;
 use crate::util::rng::hash_fold;
-use anyhow::{ensure, Context, Result};
-use std::collections::BTreeMap;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::{BTreeMap, HashMap};
 use std::io::Write;
+use std::ops::Range;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
@@ -63,8 +105,10 @@ use std::sync::{Arc, Mutex};
 /// `teacher_error` axes and the `grid_hash` resume fingerprint, and
 /// dropped the worker count from the header (the stream is a pure
 /// function of the spec; worker counts are wall-clock knobs and a resume
-/// may legitimately use a different count than the original run).
-const SCHEMA: &str = "odl-har-sweep/v2";
+/// may legitimately use a different count than the original run). v3
+/// added the shard annotation to sharded headers and the edge-state memo
+/// ledger (`edge_builds` / `edge_hits`) to the stats trailer.
+const SCHEMA: &str = "odl-har-sweep/v3";
 
 /// A declared scenario grid. Every axis left at its one-element default
 /// degenerates to the base scenario's value, so a sweep with only
@@ -93,6 +137,12 @@ pub struct SweepSpec {
     /// Fit the optional PCA summary per data config and record its
     /// eigenvalues in the results rows.
     pub record_pca: bool,
+    /// Memoize provisioned per-edge cores across cells that share
+    /// `(data key, fleet seed, n_hidden)` — on by default; off re-runs
+    /// `init_batch` per cell per edge (the pre-memo behaviour). Bitwise
+    /// invisible in every cell report either way; only the stats
+    /// trailer's edge ledger (and the wall clock) moves.
+    pub memo_edge_state: bool,
 }
 
 impl Default for SweepSpec {
@@ -108,6 +158,7 @@ impl Default for SweepSpec {
             teacher_errors: vec![base.teacher_error],
             workers: 1,
             record_pca: false,
+            memo_edge_state: true,
             base,
         }
     }
@@ -178,35 +229,42 @@ impl SweepSpec {
     }
 
     /// Precompute the execution plan: cell enumeration, memo slots,
-    /// artifact/shuffle lifetimes, the memo ledger, and the grid
-    /// fingerprint. `run_sweep*` and `odl-har sweep --dry-run` share this.
+    /// artifact/shuffle/edge-state lifetimes, the memo ledger, and the
+    /// grid fingerprint. `run_sweep*`, the shard engine, and `odl-har
+    /// sweep --dry-run` share this.
     pub fn plan(&self) -> SweepPlan {
         let cells = self.cells();
         let mut artifacts: Vec<ArtifactPlan> = Vec::new();
         let mut cell_slots = Vec::with_capacity(cells.len());
-        let mut stats = SweepStats {
-            cells: cells.len(),
-            ..Default::default()
-        };
-        // record_pca is the one spec knob outside Scenario that changes
-        // row bytes (pca_eigenvalues), so it belongs in the fingerprint
+        // O(1) key → slot lookups (lookup only, never iterated, so map
+        // order cannot touch the plan): a derived-data-seed study has one
+        // artifact group per seed, and linear slot scans would make
+        // planning quadratic in the seed count — plan() runs in every
+        // shard process, in merge, and in --dry-run
+        let mut slot_by_key: HashMap<u64, usize> = HashMap::new();
+        let mut shuf_by_key: HashMap<(usize, u64), usize> = HashMap::new();
+        let mut est_by_key: HashMap<(usize, usize, usize), usize> = HashMap::new();
+        // record_pca changes row bytes (pca_eigenvalues) and
+        // memo_edge_state changes the trailer's edge ledger — both belong
+        // in the fingerprint alongside every cell's scenario
         let mut grid = hash_fold(
-            hash_fold(0x6B1D, cells.len() as u64),
-            self.record_pca as u64,
+            hash_fold(
+                hash_fold(0x6B1D, cells.len() as u64),
+                self.record_pca as u64,
+            ),
+            self.memo_edge_state as u64,
         );
         for (i, (cell, sc)) in cells.iter().enumerate() {
             grid = hash_fold(grid, scenario_fingerprint(sc, cell.seed));
             let key = ProvisionArtifacts::data_key(sc, cell.seed);
-            let slot = match artifacts.iter().position(|a| a.key == key) {
-                Some(slot) => {
-                    stats.artifact_hits += 1;
+            let slot = match slot_by_key.get(&key) {
+                Some(&slot) => {
                     let a = &mut artifacts[slot];
                     a.last_cell = i;
                     a.uses += 1;
                     slot
                 }
                 None => {
-                    stats.artifact_builds += 1;
                     artifacts.push(ArtifactPlan {
                         key,
                         first_cell: i,
@@ -214,38 +272,104 @@ impl SweepSpec {
                         uses: 1,
                         shuffles: Vec::new(),
                     });
+                    slot_by_key.insert(key, artifacts.len() - 1);
                     artifacts.len() - 1
                 }
             };
             let a = &mut artifacts[slot];
-            let shuf = match a.shuffles.iter().position(|s| s.seed == cell.seed) {
-                Some(shuf) => {
-                    stats.shuffle_hits += 1;
+            let shuf = match shuf_by_key.get(&(slot, cell.seed)) {
+                Some(&shuf) => {
                     let s = &mut a.shuffles[shuf];
                     s.last_cell = i;
                     s.uses += 1;
                     shuf
                 }
                 None => {
-                    stats.shuffle_builds += 1;
                     a.shuffles.push(ShufflePlan {
                         seed: cell.seed,
                         first_cell: i,
                         last_cell: i,
                         uses: 1,
+                        edge_states: Vec::new(),
                     });
+                    shuf_by_key.insert((slot, cell.seed), a.shuffles.len() - 1);
                     a.shuffles.len() - 1
                 }
             };
-            cell_slots.push((slot, shuf));
+            let s = &mut a.shuffles[shuf];
+            let est = match est_by_key.get(&(slot, shuf, cell.n_hidden)) {
+                Some(&est) => {
+                    let e = &mut s.edge_states[est];
+                    e.last_cell = i;
+                    e.max_edges = e.max_edges.max(cell.n_edges);
+                    e.edge_uses += cell.n_edges;
+                    est
+                }
+                None => {
+                    s.edge_states.push(EdgeStatePlan {
+                        n_hidden: cell.n_hidden,
+                        first_cell: i,
+                        last_cell: i,
+                        max_edges: cell.n_edges,
+                        edge_uses: cell.n_edges,
+                    });
+                    est_by_key.insert((slot, shuf, cell.n_hidden), s.edge_states.len() - 1);
+                    s.edge_states.len() - 1
+                }
+            };
+            cell_slots.push((slot, shuf, est));
         }
-        SweepPlan {
+        let mut plan = SweepPlan {
             cells,
             artifacts,
             cell_slots,
-            stats,
+            stats: SweepStats::default(),
             grid_hash: grid,
-        }
+            memo_edge_state: self.memo_edge_state,
+        };
+        let stats = plan.range_stats(0..plan.cells.len());
+        plan.stats = stats;
+        plan
+    }
+}
+
+/// One slice of a sharded sweep: shard `index` of `of`, 1-based (the CLI
+/// form `--shard 2/3`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub index: usize,
+    pub of: usize,
+}
+
+impl ShardSpec {
+    /// The degenerate whole-grid shard. Its stream is defined as the
+    /// unsharded stream — `--shard 1/1` is byte-identical to no `--shard`
+    /// flag at all.
+    pub const WHOLE: ShardSpec = ShardSpec { index: 1, of: 1 };
+
+    /// Parse the CLI form `I/N` (1-based, `1 <= I <= N`).
+    pub fn parse(s: &str) -> Result<ShardSpec> {
+        let (i, n) = s
+            .split_once('/')
+            .with_context(|| format!("--shard wants I/N (e.g. 2/3), got '{s}'"))?;
+        let index: usize = i
+            .trim()
+            .parse()
+            .with_context(|| format!("bad shard index in '{s}'"))?;
+        let of: usize = n
+            .trim()
+            .parse()
+            .with_context(|| format!("bad shard count in '{s}'"))?;
+        ensure!(of >= 1, "shard count must be >= 1, got '{s}'");
+        ensure!(
+            (1..=of).contains(&index),
+            "shard index {index} outside 1..={of}"
+        );
+        Ok(ShardSpec { index, of })
+    }
+
+    fn is_whole(self) -> bool {
+        self.of == 1
     }
 }
 
@@ -309,9 +433,13 @@ fn scenario_fingerprint(sc: &Scenario, seed: u64) -> u64 {
 }
 
 /// Memoization accounting, computed from the plan (never from execution,
-/// so a resumed run reports the same ledger an uninterrupted run would):
-/// `artifact_builds + artifact_hits == cells` and
-/// `shuffle_builds + shuffle_hits == cells`.
+/// so a resumed run — or a shard — reports the same ledger an
+/// uninterrupted run over the same slice would):
+/// `artifact_builds + artifact_hits == cells`,
+/// `shuffle_builds + shuffle_hits == cells`, and
+/// `edge_builds + edge_hits == Σ n_edges` over the accounted cells
+/// (edge-state accounting is per provisioned *core*, not per cell;
+/// with the memo off every core is a build).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct SweepStats {
     pub cells: usize,
@@ -319,6 +447,8 @@ pub struct SweepStats {
     pub artifact_hits: usize,
     pub shuffle_builds: usize,
     pub shuffle_hits: usize,
+    pub edge_builds: usize,
+    pub edge_hits: usize,
 }
 
 /// Lifetime plan for one memoized artifact slot: built lazily at
@@ -342,18 +472,196 @@ pub struct ShufflePlan {
     pub first_cell: usize,
     pub last_cell: usize,
     pub uses: usize,
+    /// Per-`(slot, seed, n_hidden)` provisioned-core memo, in first-use
+    /// order.
+    pub edge_states: Vec<EdgeStatePlan>,
 }
 
-/// The precomputed execution plan shared by the engine and `--dry-run`.
+/// Lifetime plan for one memoized set of provisioned edge cores (keyed
+/// by `n_hidden` within its `(artifact, seed)` shuffle slot — the only
+/// scenario knob besides the data config and fleet seed that a
+/// provisioned core depends on). Grown lazily in edge-id order up to
+/// `max_edges`, lent to every cell of the key, dropped when the cell at
+/// `last_cell` finishes.
+#[derive(Clone, Debug)]
+pub struct EdgeStatePlan {
+    pub n_hidden: usize,
+    pub first_cell: usize,
+    pub last_cell: usize,
+    /// Largest fleet among the key's cells = cores built (memo on).
+    pub max_edges: usize,
+    /// Σ `n_edges` over the key's cells = cores lent out.
+    pub edge_uses: usize,
+}
+
+/// First/last use and lend count of one memo entry within a slice of the
+/// grid (see [`SweepPlan::slice_lifetimes`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemoLife {
+    pub first: usize,
+    pub last: usize,
+    /// Cells lent to (artifacts/shuffles) or cores lent out (edge
+    /// states).
+    pub uses: usize,
+}
+
+impl MemoLife {
+    fn at(i: usize, uses: usize) -> MemoLife {
+        MemoLife { first: i, last: i, uses }
+    }
+
+    fn touch(&mut self, i: usize, uses: usize) {
+        self.last = i;
+        self.uses += uses;
+    }
+}
+
+/// Slice-local lifetimes of every memo entry a cell range touches —
+/// keyed by the same (artifact slot, shuffle slot, edge-state slot)
+/// coordinates as [`SweepPlan::cell_slots`]; edge-state entries also
+/// carry the slice-local largest fleet (= cores built when the memo is
+/// on).
+pub struct SliceLifetimes {
+    pub artifacts: BTreeMap<usize, MemoLife>,
+    pub shuffles: BTreeMap<(usize, usize), MemoLife>,
+    pub edge_states: BTreeMap<(usize, usize, usize), (MemoLife, usize)>,
+}
+
+/// The precomputed execution plan shared by the engine, the shard
+/// partitioner, and `--dry-run`.
 pub struct SweepPlan {
     pub cells: Vec<(SweepCell, Scenario)>,
     pub artifacts: Vec<ArtifactPlan>,
-    /// cell index → (artifact slot, shuffle slot within that artifact).
-    pub cell_slots: Vec<(usize, usize)>,
+    /// cell index → (artifact slot, shuffle slot within that artifact,
+    /// edge-state slot within that shuffle).
+    pub cell_slots: Vec<(usize, usize, usize)>,
     pub stats: SweepStats,
-    /// Fingerprint of the enumerated grid (every cell's full scenario);
-    /// the resume header's compatibility check.
+    /// Fingerprint of the enumerated grid (every cell's full scenario,
+    /// plus `record_pca` and `memo_edge_state`); the resume header's
+    /// compatibility check.
     pub grid_hash: u64,
+    /// Whether the edge-state memo is active (it moves the trailer's
+    /// edge ledger, so it is part of the fingerprint).
+    pub memo_edge_state: bool,
+}
+
+impl SweepPlan {
+    /// Memoization accounting restricted to the cells of `range` — what
+    /// executing exactly that slice builds and hits (the full-grid stats
+    /// are `range_stats(0..cells.len())`). Plan-derived, never
+    /// execution-derived, so shard trailers and resumed runs report the
+    /// numbers an uninterrupted run over the same slice would.
+    pub fn range_stats(&self, range: Range<usize>) -> SweepStats {
+        let cells = range.len();
+        let lt = self.slice_lifetimes(range);
+        let edge_uses: usize = lt.edge_states.values().map(|(l, _)| l.uses).sum();
+        let edge_builds = if self.memo_edge_state {
+            // each key builds up to its slice-local largest fleet once
+            lt.edge_states.values().map(|(_, max_edges)| *max_edges).sum()
+        } else {
+            edge_uses
+        };
+        SweepStats {
+            cells,
+            artifact_builds: lt.artifacts.len(),
+            artifact_hits: cells - lt.artifacts.len(),
+            shuffle_builds: lt.shuffles.len(),
+            shuffle_hits: cells - lt.shuffles.len(),
+            edge_builds,
+            edge_hits: edge_uses - edge_builds,
+        }
+    }
+
+    /// Slice-local memo lifetimes: first/last use and lend counts of every
+    /// artifact / shuffle / edge-state entry touched by the cells of
+    /// `range`. This is exactly what `run_cells` over that slice builds
+    /// and drops (its remaining-use counts are slice-restricted), so the
+    /// `--dry-run` display and [`Self::range_stats`] both derive from it —
+    /// one source of truth for the lifetime semantics.
+    pub fn slice_lifetimes(&self, range: Range<usize>) -> SliceLifetimes {
+        let mut lt = SliceLifetimes {
+            artifacts: BTreeMap::new(),
+            shuffles: BTreeMap::new(),
+            edge_states: BTreeMap::new(),
+        };
+        for i in range {
+            let (slot, shuf, est) = self.cell_slots[i];
+            let n_edges = self.cells[i].0.n_edges;
+            lt.artifacts
+                .entry(slot)
+                .and_modify(|l| l.touch(i, 1))
+                .or_insert(MemoLife::at(i, 1));
+            lt.shuffles
+                .entry((slot, shuf))
+                .and_modify(|l| l.touch(i, 1))
+                .or_insert(MemoLife::at(i, 1));
+            lt.edge_states
+                .entry((slot, shuf, est))
+                .and_modify(|(l, max_edges)| {
+                    l.touch(i, n_edges);
+                    *max_edges = (*max_edges).max(n_edges);
+                })
+                .or_insert((MemoLife::at(i, n_edges), n_edges));
+        }
+        lt
+    }
+
+    /// Partition the cell order into `of` disjoint, contiguous,
+    /// artifact-locality-aware ranges (the `--shard I/N` split). Cut
+    /// points start at the even split and snap to the nearest `data_key`
+    /// group boundary within half an ideal shard, so shards keep whole
+    /// artifact groups whenever the grid has at least `of` of them —
+    /// each shard's memo hit rate then matches its slice, and no shard
+    /// rebuilds a neighbour's artifacts. Every cell lands in exactly one
+    /// range; the ranges concatenate to `0..cells.len()` in order (so
+    /// every shard's cell order is a subsequence of the global order);
+    /// `of = 1` returns the whole grid.
+    pub fn shard_ranges(&self, of: usize) -> Vec<Range<usize>> {
+        let n = self.cells.len();
+        let of = of.max(1);
+        // artifact-group boundaries: the cut candidates
+        let mut bounds = vec![0usize];
+        for i in 1..n {
+            if self.cell_slots[i].0 != self.cell_slots[i - 1].0 {
+                bounds.push(i);
+            }
+        }
+        bounds.push(n);
+        let mut cuts = Vec::with_capacity(of + 1);
+        cuts.push(0usize);
+        for k in 1..of {
+            let ideal = (k * n + of / 2) / of;
+            // snap to a group boundary when one is within half an ideal
+            // shard of the even split; otherwise cut mid-group (a single
+            // huge group must still split to keep the shards busy). Only
+            // boundaries strictly past the previous cut are candidates —
+            // two cuts snapping onto the same boundary would starve a
+            // shard while its neighbours carry double load.
+            let tol = n / (2 * of);
+            let prev = *cuts.last().expect("cuts start non-empty");
+            let cut = bounds
+                .iter()
+                .copied()
+                .filter(|b| *b > prev)
+                .min_by_key(|b| b.abs_diff(ideal))
+                .filter(|b| b.abs_diff(ideal) <= tol)
+                .unwrap_or(ideal);
+            cuts.push(cut.max(prev));
+        }
+        cuts.push(n);
+        (0..of).map(|k| cuts[k]..cuts[k + 1]).collect()
+    }
+
+    /// The cell range shard `shard` owns under this plan.
+    pub fn shard_range(&self, shard: ShardSpec) -> Result<Range<usize>> {
+        ensure!(
+            shard.of >= 1 && (1..=shard.of).contains(&shard.index),
+            "invalid shard {}/{}",
+            shard.index,
+            shard.of
+        );
+        Ok(self.shard_ranges(shard.of).swap_remove(shard.index - 1))
+    }
 }
 
 /// The engine's result: per-cell reports in cell order plus the
@@ -471,12 +779,32 @@ pub fn cell_row(cell: &SweepCell, report: &FleetReport, artifacts: &ProvisionArt
     obj(pairs)
 }
 
-fn header_json(plan: &SweepPlan) -> Json {
-    obj(vec![
+/// The stream header: schema + total cell count + grid fingerprint, plus
+/// the shard annotation (`index`/`of`/`start`/`count`) when the stream is
+/// a real slice. Shard 1/1 writes the unsharded header — that is what
+/// makes `--shard 1/1` byte-identical to no `--shard` flag.
+fn header_json(plan: &SweepPlan, shard: ShardSpec) -> Json {
+    let mut pairs = vec![
         ("schema", Json::Str(SCHEMA.into())),
         ("cells", Json::Num(plan.cells.len() as f64)),
         ("grid_hash", Json::Str(format!("{:016x}", plan.grid_hash))),
-    ])
+    ];
+    if !shard.is_whole() {
+        // every caller validates the shard before writing a header
+        let range = plan
+            .shard_range(shard)
+            .expect("header_json: shard validated by caller");
+        pairs.push((
+            "shard",
+            obj(vec![
+                ("index", Json::Num(shard.index as f64)),
+                ("of", Json::Num(shard.of as f64)),
+                ("start", Json::Num(range.start as f64)),
+                ("count", Json::Num(range.len() as f64)),
+            ]),
+        ));
+    }
+    obj(pairs)
 }
 
 fn trailer_json(stats: &SweepStats) -> Json {
@@ -488,6 +816,8 @@ fn trailer_json(stats: &SweepStats) -> Json {
             ("artifact_hits", Json::Num(stats.artifact_hits as f64)),
             ("shuffle_builds", Json::Num(stats.shuffle_builds as f64)),
             ("shuffle_hits", Json::Num(stats.shuffle_hits as f64)),
+            ("edge_builds", Json::Num(stats.edge_builds as f64)),
+            ("edge_hits", Json::Num(stats.edge_hits as f64)),
         ]),
     )])
 }
@@ -495,7 +825,8 @@ fn trailer_json(stats: &SweepStats) -> Json {
 /// Run the grid with memoized artifacts; collect reports only (no file).
 pub fn run_sweep(spec: &SweepSpec) -> Result<SweepOutcome> {
     let plan = spec.plan();
-    let reports = run_cells::<std::io::Sink>(spec, &plan, 0, None)?;
+    let n = plan.cells.len();
+    let reports = run_cells::<std::io::Sink>(spec, &plan, 0..n, 0, None)?;
     Ok(SweepOutcome {
         reports,
         stats: plan.stats,
@@ -514,17 +845,32 @@ pub fn run_sweep_to_file(spec: &SweepSpec, path: &Path) -> Result<SweepOutcome> 
 /// planning a large grid twice is pure waste. `plan` must come from
 /// `spec.plan()`.
 pub fn run_planned_to_file(spec: &SweepSpec, plan: &SweepPlan, path: &Path) -> Result<SweepOutcome> {
+    run_shard_to_file(spec, plan, ShardSpec::WHOLE, path)
+}
+
+/// Run one shard of the grid (`odl-har sweep --shard I/N`), streaming
+/// its slice of cell rows into `path`: the shard-annotated header, the
+/// slice's rows (global cell indices, byte-identical to the rows a
+/// single-process run writes), and a trailer accounting the slice.
+/// Returns exactly the slice's reports and stats. `plan` must come from
+/// `spec.plan()`.
+pub fn run_shard_to_file(
+    spec: &SweepSpec,
+    plan: &SweepPlan,
+    shard: ShardSpec,
+    path: &Path,
+) -> Result<SweepOutcome> {
+    let range = plan.shard_range(shard)?;
+    let stats = plan.range_stats(range.clone());
     let mut sink = OrderedSink::new(create_results_file(path)?);
-    // header occupies slot 0; cell i lands in slot i + 1
-    sink.push(0, header_json(plan).to_string())?;
+    // header occupies slot 0; the slice's cell i lands in slot
+    // i - range.start + 1
+    sink.push(0, header_json(plan, shard).to_string())?;
     let sink = Mutex::new(sink);
-    let reports = run_cells(spec, plan, 0, Some(&sink))?;
+    let reports = run_cells(spec, plan, range.clone(), range.start, Some(&sink))?;
     let mut sink = sink.into_inner().expect("sweep sink poisoned");
-    sink.push(plan.cells.len() + 1, trailer_json(&plan.stats).to_string())?;
-    Ok(SweepOutcome {
-        reports,
-        stats: plan.stats,
-    })
+    sink.push(range.len() + 1, trailer_json(&stats).to_string())?;
+    Ok(SweepOutcome { reports, stats })
 }
 
 /// Resume (or start) a sweep into `path`. See the module docs for the
@@ -541,7 +887,23 @@ pub fn resume_planned_to_file(
     plan: &SweepPlan,
     path: &Path,
 ) -> Result<ResumeOutcome> {
-    let n = plan.cells.len();
+    resume_shard_to_file(spec, plan, ShardSpec::WHOLE, path)
+}
+
+/// Resume (or start) one shard's results file — the full-run resume
+/// protocol applied to the shard's slice: header (including the shard
+/// annotation) byte-checked, longest valid prefix of the slice's rows
+/// kept verbatim, the remainder re-run, trailer appended. Byte-identical
+/// to an uninterrupted [`run_shard_to_file`] from any cut point.
+pub fn resume_shard_to_file(
+    spec: &SweepSpec,
+    plan: &SweepPlan,
+    shard: ShardSpec,
+    path: &Path,
+) -> Result<ResumeOutcome> {
+    let range = plan.shard_range(shard)?;
+    let count = range.len();
+    let stats = plan.range_stats(range.clone());
     let text = if path.exists() {
         std::fs::read_to_string(path)
             .with_context(|| format!("reading results file {}", path.display()))?
@@ -556,72 +918,340 @@ pub fn resume_planned_to_file(
     lines.pop();
     if lines.is_empty() {
         // missing, empty, or truncated-to-nothing: a fresh full run
-        let outcome = run_planned_to_file(spec, plan, path)?;
+        let outcome = run_shard_to_file(spec, plan, shard, path)?;
         return Ok(ResumeOutcome {
             skipped: 0,
-            ran: n,
+            ran: count,
             already_complete: false,
             stats: outcome.stats,
         });
     }
-    let header = header_json(plan).to_string();
+    let header = header_json(plan, shard).to_string();
     ensure!(
         lines[0] == header,
         "refusing to resume {}: its header does not match this spec \
-         (different grid, schema version, or engine revision)",
+         (different grid, shard split, schema version, or engine revision)",
         path.display()
     );
     // The longest valid prefix of completed cell rows. Error rows and
     // anything after the first gap are re-run.
     let mut done = 0usize;
     for line in &lines[1..] {
-        if done >= n {
+        if done >= count {
             break;
         }
         let row = match Json::parse(line) {
             Ok(row) => row,
             Err(_) => break,
         };
-        if row.get("error").is_some() || row.get("cell").and_then(Json::as_usize) != Some(done) {
+        if row.get("error").is_some()
+            || row.get("cell").and_then(Json::as_usize) != Some(range.start + done)
+        {
             break;
         }
         done += 1;
     }
-    let trailer = trailer_json(&plan.stats).to_string();
-    // complete = header + n rows + trailer and nothing else; extra
+    let trailer = trailer_json(&stats).to_string();
+    // complete = header + count rows + trailer and nothing else; extra
     // trailing lines would survive an early return and break the
     // byte-identical post-condition
-    if done == n
-        && lines.len() == n + 2
-        && lines.get(1 + n).copied() == Some(trailer.as_str())
+    if done == count
+        && lines.len() == count + 2
+        && lines.get(1 + count).copied() == Some(trailer.as_str())
     {
         return Ok(ResumeOutcome {
-            skipped: n,
+            skipped: count,
             ran: 0,
             already_complete: true,
-            stats: plan.stats,
+            stats,
         });
     }
-    // Rewrite: header + the verified prefix (original bytes, verbatim),
-    // then run the remaining cells into the ordered sink and close with
-    // the trailer.
-    let mut out = create_results_file(path)?;
-    out.write_all(header.as_bytes())?;
-    out.write_all(b"\n")?;
-    for line in lines.iter().skip(1).take(done) {
-        out.write_all(line.as_bytes())?;
+    // Rewrite header + the verified prefix (original bytes, verbatim)
+    // into a sibling temp file renamed into place, then append the re-run
+    // rows: a kill during the prefix rewrite can no longer destroy the
+    // completed rows (the original file stays intact until the atomic
+    // rename), and a kill during the append leaves a partial trailing
+    // line the next resume discards — the protocol's designed case.
+    let tmp = temp_sibling(path);
+    let rewrite = || -> Result<()> {
+        let mut out = create_results_file(&tmp)?;
+        out.write_all(header.as_bytes())?;
         out.write_all(b"\n")?;
+        for line in lines.iter().skip(1).take(done) {
+            out.write_all(line.as_bytes())?;
+            out.write_all(b"\n")?;
+        }
+        out.flush()?;
+        Ok(())
+    };
+    if let Err(e) = rewrite() {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
     }
-    out.flush()?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("moving resumed results into place at {}", path.display()))?;
+    let out = std::io::BufWriter::new(
+        std::fs::OpenOptions::new()
+            .append(true)
+            .open(path)
+            .with_context(|| format!("reopening results file {} for append", path.display()))?,
+    );
     let sink = Mutex::new(OrderedSink::starting_at(out, done + 1));
-    run_cells(spec, plan, done, Some(&sink))?;
+    run_cells(spec, plan, range.start + done..range.end, range.start, Some(&sink))?;
     let mut sink = sink.into_inner().expect("sweep sink poisoned");
-    sink.push(n + 1, trailer)?;
+    sink.push(count + 1, trailer)?;
     Ok(ResumeOutcome {
         skipped: done,
-        ran: n - done,
+        ran: count - done,
         already_complete: false,
+        stats,
+    })
+}
+
+/// Outcome of [`merge_shard_files`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MergeOutcome {
+    /// Shard files merged.
+    pub shards: usize,
+    /// Grid cells in the merged file.
+    pub cells: usize,
+    /// The full grid's (plan-derived) memo ledger — what the merged
+    /// trailer reports.
+    pub stats: SweepStats,
+}
+
+/// Recombine a complete shard set into `out`, **byte-identical** to a
+/// single-process [`run_sweep_to_file`] over the same spec (see the
+/// module docs). Every input header is byte-compared against the header
+/// this plan writes for its claimed shard — one check covering schema,
+/// cell count, `grid_hash`, and the slice annotation — every shard must
+/// be complete (count rows, in order, no error rows, slice trailer
+/// intact), and indices `1..=N` must each appear exactly once; the
+/// contiguous ranges then tile the grid by construction. Rows are copied
+/// verbatim; header and trailer are regenerated from the full plan.
+/// `plan` must come from `spec.plan()` of the sweep's spec.
+pub fn merge_shard_files(
+    plan: &SweepPlan,
+    inputs: &[std::path::PathBuf],
+    out: &Path,
+) -> Result<MergeOutcome> {
+    ensure!(!inputs.is_empty(), "merge needs at least one shard file");
+    struct Piece<'a> {
+        index: usize,
+        start: usize,
+        count: usize,
+        path: &'a std::path::Path,
+    }
+    // Pass 1 — validate the set (each file's text is dropped before the
+    // next loads, so peak memory is one shard file, not the whole study):
+    // header byte-compared against this plan, stream complete (line
+    // count + trailer byte-compared against the slice's plan-derived
+    // stats), indices consistent and unique.
+    let mut of_seen: Option<usize> = None;
+    let mut pieces: Vec<Piece> = Vec::new();
+    for path in inputs {
+        let text = read_shard_text(path)?;
+        let (shard, range, line_count) = shard_frame(plan, path, &text)?;
+        match of_seen {
+            None => of_seen = Some(shard.of),
+            Some(of) => ensure!(
+                of == shard.of,
+                "mixed shard splits: {} is part of a 1..{} set but earlier files are 1..{}",
+                path.display(),
+                shard.of,
+                of
+            ),
+        }
+        ensure!(
+            pieces.iter().all(|p| p.index != shard.index),
+            "duplicate shard {}/{}: {}",
+            shard.index,
+            shard.of,
+            path.display()
+        );
+        let count = range.len();
+        ensure!(
+            line_count == count + 2,
+            "shard file {} is incomplete ({} of {} expected lines) — \
+             `odl-har sweep --resume` it first",
+            path.display(),
+            line_count,
+            count + 2
+        );
+        pieces.push(Piece {
+            index: shard.index,
+            start: range.start,
+            count,
+            path: path.as_path(),
+        });
+    }
+    let of = of_seen.expect("at least one shard parsed");
+    if pieces.len() != of {
+        let mut missing: Vec<String> = (1..=of)
+            .filter(|i| pieces.iter().all(|p| p.index != *i))
+            .map(|i| format!("{i}/{of}"))
+            .collect();
+        missing.truncate(8);
+        bail!(
+            "incomplete shard set: {} of {of} shard file(s) given (missing {})",
+            pieces.len(),
+            missing.join(", ")
+        );
+    }
+    // indices 1..=of each exactly once ⇒ the contiguous ranges tile the
+    // grid; interleave = concatenate in range order.
+    pieces.sort_by_key(|p| p.start);
+    // The output must not be one of the inputs: create_results_file
+    // truncates, which would destroy a validated shard before it is
+    // copied. (Every input was just read, so canonicalize resolves.)
+    if let Ok(out_canon) = out.canonicalize() {
+        for piece in &pieces {
+            ensure!(
+                piece.path.canonicalize().ok().as_deref() != Some(out_canon.as_path()),
+                "merge output {} is one of the input shard files — refusing to overwrite it",
+                out.display()
+            );
+        }
+    }
+    // Pass 2 — stream the row bytes verbatim, one shard file in memory at
+    // a time, validating each row (parses, no error, right cell index) as
+    // it is copied. The frame is re-validated against the SAME text the
+    // rows are copied from, so a file swapped between the passes is
+    // caught, and each file is read exactly once per pass. The stream
+    // goes to a sibling temp file renamed into place on success, so a
+    // row-level failure (or a crash) can never leave a truncated/partial
+    // stream at `out` — whatever was there before survives intact.
+    let tmp = temp_sibling(out);
+    let write = || -> Result<()> {
+        let mut sink = create_results_file(&tmp)?;
+        sink.write_all(header_json(plan, ShardSpec::WHOLE).to_string().as_bytes())?;
+        sink.write_all(b"\n")?;
+        for piece in &pieces {
+            let path = piece.path;
+            let text = read_shard_text(path)?;
+            let (_, range, line_count) = shard_frame(plan, path, &text)?;
+            ensure!(
+                range.start == piece.start && line_count == piece.count + 2,
+                "shard file {} changed while merging",
+                path.display()
+            );
+            for (j, line) in text.lines().skip(1).take(piece.count).enumerate() {
+                let row = Json::parse(line)
+                    .map_err(|e| anyhow::anyhow!("shard file {} row {j}: {e}", path.display()))?;
+                ensure!(
+                    row.get("error").is_none(),
+                    "shard file {} cell {} recorded an error — re-run that shard",
+                    path.display(),
+                    range.start + j
+                );
+                ensure!(
+                    row.get("cell").and_then(Json::as_usize) == Some(range.start + j),
+                    "shard file {} row {j} is out of cell order",
+                    path.display()
+                );
+                sink.write_all(line.as_bytes())?;
+                sink.write_all(b"\n")?;
+            }
+        }
+        sink.write_all(trailer_json(&plan.stats).to_string().as_bytes())?;
+        sink.write_all(b"\n")?;
+        sink.flush()?;
+        Ok(())
+    };
+    if let Err(e) = write() {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    std::fs::rename(&tmp, out)
+        .with_context(|| format!("moving merged results into place at {}", out.display()))?;
+    Ok(MergeOutcome {
+        shards: of,
+        cells: plan.cells.len(),
         stats: plan.stats,
+    })
+}
+
+/// Read one shard file, requiring the stream's terminating newline (a
+/// missing one means a kill mid-write — resume it, don't merge it).
+fn read_shard_text(path: &std::path::Path) -> Result<String> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading shard file {}", path.display()))?;
+    ensure!(
+        text.ends_with('\n'),
+        "shard file {} is truncated mid-line — `odl-har sweep --resume` it first",
+        path.display()
+    );
+    Ok(text)
+}
+
+/// Validate one shard stream's frame — header (byte-compared against the
+/// plan for the shard it claims) and, when the stream is complete, the
+/// slice trailer (byte-compared against plan-derived stats) — returning
+/// the claimed shard, its cell range, and the complete-line count.
+/// Operates on already-read text so a caller copying rows validates the
+/// same bytes it copies.
+fn shard_frame(
+    plan: &SweepPlan,
+    path: &std::path::Path,
+    text: &str,
+) -> Result<(ShardSpec, Range<usize>, usize)> {
+    let lines: Vec<&str> = text.lines().collect();
+    ensure!(!lines.is_empty(), "shard file {} is empty", path.display());
+    let header = Json::parse(lines[0])
+        .map_err(|e| anyhow::anyhow!("shard file {} header: {e}", path.display()))?;
+    let shard = match header.get("shard") {
+        // an unannotated header is the whole-grid stream (shard 1/1)
+        None => ShardSpec::WHOLE,
+        Some(s) => ShardSpec {
+            index: s
+                .get("index")
+                .and_then(Json::as_usize)
+                .with_context(|| format!("shard file {}: bad shard.index", path.display()))?,
+            of: s
+                .get("of")
+                .and_then(Json::as_usize)
+                .with_context(|| format!("shard file {}: bad shard.of", path.display()))?,
+        },
+    };
+    ensure!(
+        shard.of >= 1 && (1..=shard.of).contains(&shard.index),
+        "shard file {} claims invalid shard {}/{}",
+        path.display(),
+        shard.index,
+        shard.of
+    );
+    // one byte-compare validates schema, cell count, grid_hash, and the
+    // start/count annotation against this plan
+    ensure!(
+        lines[0] == header_json(plan, shard).to_string(),
+        "shard file {} does not belong to this sweep spec (header mismatch — \
+         different grid, schema version, shard split, or engine revision)",
+        path.display()
+    );
+    let range = plan.shard_range(shard).expect("shard validated above");
+    let count = range.len();
+    // the trailer is only in place when the stream is complete; checking
+    // it here keeps 'incomplete' (wrong line count) and 'stale' (foreign
+    // trailer bytes) failures distinct for the caller's messages
+    if lines.len() == count + 2 {
+        let expect_trailer = trailer_json(&plan.range_stats(range.clone())).to_string();
+        ensure!(
+            lines[count + 1] == expect_trailer,
+            "shard file {} has an unexpected stats trailer — \
+             `odl-har sweep --resume` it first",
+            path.display()
+        );
+    }
+    Ok((shard, range, lines.len()))
+}
+
+/// Sibling path for atomic replace-by-rename writes (resume's prefix
+/// rewrite, merge's output): same directory, `.tmp`-suffixed name, so
+/// the rename can never cross a filesystem boundary.
+fn temp_sibling(path: &Path) -> std::path::PathBuf {
+    path.with_file_name(match path.file_name() {
+        Some(name) => format!("{}.tmp", name.to_string_lossy()),
+        None => ".tmp".to_string(),
     })
 }
 
@@ -637,15 +1267,21 @@ fn create_results_file(path: &Path) -> Result<std::io::BufWriter<std::fs::File>>
 }
 
 /// Per-slot memo state during a run: lazily built, refcounted down to
-/// its planned drop point. The artifact and each (slot, seed) shuffle
-/// carry independent locks so shuffles for distinct seeds build
-/// concurrently (only peers needing the *same* shuffle block on its
-/// build); no two locks are ever held at once — acquire takes artifact
-/// then shuffle, release takes shuffle then artifact, each dropped
-/// before the next is taken, so lock order cannot deadlock.
+/// its planned drop point. The artifact, each (slot, seed) shuffle, and
+/// each (slot, seed, n_hidden) edge-state set carry independent locks so
+/// unrelated builds proceed concurrently (only peers needing the *same*
+/// memo entry block on its build); no two locks are ever held at once —
+/// acquire takes artifact, then shuffle, then edge state; release takes
+/// the reverse order; each lock is dropped before the next is taken, so
+/// lock order cannot deadlock.
 struct Slot {
     artifact: Mutex<ArtifactState>,
-    shuffles: Vec<Mutex<ShuffleState>>,
+    shuffles: Vec<ShuffleSlot>,
+}
+
+struct ShuffleSlot {
+    state: Mutex<ShuffleState>,
+    edge_states: Vec<Mutex<EdgeStateState>>,
 }
 
 struct ArtifactState {
@@ -659,20 +1295,29 @@ struct ShuffleState {
     remaining: usize,
 }
 
-/// Run cells `first..` of the plan (0 for a full run; the kept-prefix
-/// length when resuming) over the worker pool, with lazily built,
-/// last-use-dropped memo state. Returns the reports of exactly the cells
-/// it ran, in cell order.
+/// The edge-state memo: provisioned cores in edge-id order, grown lazily
+/// to the largest fleet that asks, cleared when the last cell of the
+/// `(data key, seed, n_hidden)` key retires.
+struct EdgeStateState {
+    models: Vec<Arc<OsElm>>,
+    remaining: usize,
+}
+
+/// Run the cells of `run` (a full grid, a shard's slice, or a resume's
+/// remainder) over the worker pool, with lazily built, last-use-dropped
+/// memo state. `origin` is the start of the stream's slice — the slice's
+/// cell `i` claims sink slot `i - origin + 1` (slot 0 is the header).
+/// Returns the reports of exactly the cells it ran, in cell order.
 fn run_cells<W: Write + Send>(
     spec: &SweepSpec,
     plan: &SweepPlan,
-    first: usize,
+    run: Range<usize>,
+    origin: usize,
     sink: Option<&Mutex<OrderedSink<W>>>,
 ) -> Result<Vec<(SweepCell, FleetReport)>> {
-    let n = plan.cells.len();
     // Remaining-use counts restricted to the cells this invocation
-    // actually runs, so a resume drops (or never builds) memo state whose
-    // uses all sit in the completed prefix.
+    // actually runs, so a shard or resume drops (or never builds) memo
+    // state whose uses all sit outside its slice.
     let slots: Vec<Slot> = plan
         .artifacts
         .iter()
@@ -684,35 +1329,50 @@ fn run_cells<W: Write + Send>(
             shuffles: a
                 .shuffles
                 .iter()
-                .map(|_| {
-                    Mutex::new(ShuffleState {
+                .map(|s| ShuffleSlot {
+                    state: Mutex::new(ShuffleState {
                         train: None,
                         remaining: 0,
-                    })
+                    }),
+                    edge_states: s
+                        .edge_states
+                        .iter()
+                        .map(|_| {
+                            Mutex::new(EdgeStateState {
+                                models: Vec::new(),
+                                remaining: 0,
+                            })
+                        })
+                        .collect(),
                 })
                 .collect(),
         })
         .collect();
-    for &(slot, shuf) in &plan.cell_slots[first..] {
+    for &(slot, shuf, est) in &plan.cell_slots[run.clone()] {
         slots[slot]
             .artifact
             .lock()
             .expect("sweep slot poisoned")
             .remaining += 1;
         slots[slot].shuffles[shuf]
+            .state
             .lock()
             .expect("sweep shuffle poisoned")
+            .remaining += 1;
+        slots[slot].shuffles[shuf].edge_states[est]
+            .lock()
+            .expect("sweep edge memo poisoned")
             .remaining += 1;
     }
 
     let run_cell = |i: usize| -> Result<FleetReport> {
         let (cell, sc) = &plan.cells[i];
-        let (slot, shuf) = plan.cell_slots[i];
+        let (slot, shuf, est) = plan.cell_slots[i];
         // Acquire: build lazily under the respective lock. Whichever
         // worker gets there first builds; only peers needing the *same*
-        // artifact / shuffle block until that build lands. Builds are
-        // pure functions of the key / (key, seed), so the scheduling
-        // race cannot change a bit.
+        // memo entry block until that build lands. Builds are pure
+        // functions of their key, so the scheduling race cannot change a
+        // bit.
         let artifacts = {
             let mut st = slots[slot].artifact.lock().expect("sweep slot poisoned");
             st.artifact
@@ -723,22 +1383,48 @@ fn run_cells<W: Write + Send>(
         };
         let train = {
             let mut sh = slots[slot].shuffles[shuf]
+                .state
                 .lock()
                 .expect("sweep shuffle poisoned");
             sh.train
                 .get_or_insert_with(|| Arc::new(artifacts.shuffled_train(cell.seed)))
                 .clone()
         };
-        let result = Fleet::with_shuffled_pool(
-            FleetConfig {
-                scenario: sc.clone(),
-                seed: cell.seed,
-            },
-            &artifacts,
-            &train,
-            1,
-        )
-        .map(|fleet| fleet.run_parallel(1));
+        // Edge-state memo: grow the shared core set to this cell's fleet
+        // size under the estate lock (provisioned_edge_model is a pure
+        // function of (data/model knobs, seed, edge id, pool)), then lend
+        // Arc clones out. A provisioning failure becomes this cell's
+        // error row, exactly like a fleet-construction failure.
+        let models: Result<Option<Vec<Arc<OsElm>>>> = if spec.memo_edge_state {
+            let mut es = slots[slot].shuffles[shuf].edge_states[est]
+                .lock()
+                .expect("sweep edge memo poisoned");
+            let mut built = Ok(());
+            while es.models.len() < cell.n_edges {
+                match provisioned_edge_model(sc, cell.seed, es.models.len(), &train) {
+                    Ok(m) => es.models.push(Arc::new(m)),
+                    Err(e) => {
+                        built = Err(e);
+                        break;
+                    }
+                }
+            }
+            built.map(|()| Some(es.models[..cell.n_edges].to_vec()))
+        } else {
+            Ok(None)
+        };
+        let result = models
+            .and_then(|models| {
+                let cfg = FleetConfig {
+                    scenario: sc.clone(),
+                    seed: cell.seed,
+                };
+                match models {
+                    Some(ms) => Fleet::with_edge_models(cfg, &artifacts, &train, &ms, 1),
+                    None => Fleet::with_shuffled_pool(cfg, &artifacts, &train, 1),
+                }
+            })
+            .map(|fleet| fleet.run_parallel(1));
         if let Some(sink) = sink {
             // a failed cell still claims its slot (with an error row) so
             // the ordered sink can drain every later cell's completed row
@@ -754,16 +1440,27 @@ fn run_cells<W: Write + Send>(
             sink.lock()
                 .expect("sweep sink poisoned")
                 // slot 0 is the header line
-                .push(i + 1, line)
+                .push(i - origin + 1, line)
                 .context("writing sweep results row")?;
         }
         // Release: drop this worker's handles, then retire the memo state
-        // at its planned last use so peak memory tracks the in-flight
-        // working set, not the grid's seed count.
+        // at its planned last use (reverse acquisition order, each lock
+        // held alone) so peak memory tracks the in-flight working set,
+        // not the grid's seed count.
         drop(train);
         drop(artifacts);
         {
+            let mut es = slots[slot].shuffles[shuf].edge_states[est]
+                .lock()
+                .expect("sweep edge memo poisoned");
+            es.remaining -= 1;
+            if es.remaining == 0 {
+                es.models = Vec::new();
+            }
+        }
+        {
             let mut sh = slots[slot].shuffles[shuf]
+                .state
                 .lock()
                 .expect("sweep shuffle poisoned");
             sh.remaining -= 1;
@@ -781,9 +1478,11 @@ fn run_cells<W: Write + Send>(
         result
     };
 
-    let results = parallel::parallel_map_n(spec.workers, n - first, |j| run_cell(first + j));
-    let mut reports = Vec::with_capacity(n - first);
-    for ((cell, _), report) in plan.cells[first..].iter().zip(results) {
+    let n_run = run.len();
+    let start = run.start;
+    let results = parallel::parallel_map_n(spec.workers, n_run, |j| run_cell(start + j));
+    let mut reports = Vec::with_capacity(n_run);
+    for ((cell, _), report) in plan.cells[run].iter().zip(results) {
         reports.push((
             *cell,
             report.with_context(|| format!("sweep cell {} (seed {})", cell.index, cell.seed))?,
@@ -834,6 +1533,7 @@ mod tests {
             teacher_errors: vec![base.teacher_error],
             workers: 2,
             record_pca: false,
+            memo_edge_state: true,
             base,
         }
     }
@@ -856,6 +1556,7 @@ mod tests {
             teacher_errors: vec![0.0, 0.3],
             workers: 2,
             record_pca: false,
+            memo_edge_state: true,
             base,
         }
     }
@@ -910,6 +1611,10 @@ mod tests {
         // the per-fleet shuffle memoizes per (data key, seed)
         assert_eq!(outcome.stats.shuffle_builds, 2);
         assert_eq!(outcome.stats.shuffle_hits, 6);
+        // the edge-state memo builds each seed's largest fleet once
+        // (edge_counts [2, 3] → 3 cores per seed) and lends the rest
+        assert_eq!(outcome.stats.edge_builds, 6);
+        assert_eq!(outcome.stats.edge_hits, 14);
     }
 
     #[test]
@@ -922,6 +1627,8 @@ mod tests {
         assert_eq!(outcome.stats.artifact_hits, 6);
         assert_eq!(outcome.stats.shuffle_builds, 2);
         assert_eq!(outcome.stats.shuffle_hits, 6);
+        assert_eq!(outcome.stats.edge_builds, 6);
+        assert_eq!(outcome.stats.edge_hits, 14);
     }
 
     #[test]
@@ -938,6 +1645,15 @@ mod tests {
         assert_eq!((s0.seed, s0.first_cell, s0.last_cell, s0.uses), (1, 0, 3, 4));
         let s1 = &a.shuffles[1];
         assert_eq!((s1.seed, s1.first_cell, s1.last_cell, s1.uses), (2, 4, 7, 4));
+        // one hidden width per seed → one edge-state set per shuffle,
+        // alive for the seed's block, sized by the largest fleet
+        for s in &a.shuffles {
+            assert_eq!(s.edge_states.len(), 1);
+            let e = &s.edge_states[0];
+            assert_eq!(e.n_hidden, 16);
+            assert_eq!((e.first_cell, e.last_cell), (s.first_cell, s.last_cell));
+            assert_eq!((e.max_edges, e.edge_uses), (3, 10));
+        }
         assert_eq!(
             plan.stats,
             SweepStats {
@@ -946,15 +1662,42 @@ mod tests {
                 artifact_hits: 7,
                 shuffle_builds: 2,
                 shuffle_hits: 6,
+                edge_builds: 6,
+                edge_hits: 14,
             }
         );
         // every cell points at a live slot
-        for (i, &(slot, shuf)) in plan.cell_slots.iter().enumerate() {
+        for (i, &(slot, shuf, est)) in plan.cell_slots.iter().enumerate() {
             let a = &plan.artifacts[slot];
             assert!(a.first_cell <= i && i <= a.last_cell);
             let s = &a.shuffles[shuf];
             assert!(s.first_cell <= i && i <= s.last_cell);
+            let e = &s.edge_states[est];
+            assert!(e.first_cell <= i && i <= e.last_cell);
         }
+    }
+
+    #[test]
+    fn edge_state_memo_is_bitwise_invisible() {
+        // the memo must be a wall-clock knob only: identical FleetReports
+        // with it on and off, for the same grid
+        let on = run_sweep(&small_spec()).unwrap();
+        let mut spec = small_spec();
+        spec.memo_edge_state = false;
+        let off = run_sweep(&spec).unwrap();
+        assert_eq!(on.reports.len(), off.reports.len());
+        for ((cell, a), (_, b)) in on.reports.iter().zip(&off.reports) {
+            assert!(
+                a.bitwise_eq(b),
+                "cell {} diverged with the edge-state memo off",
+                cell.index
+            );
+        }
+        // only the ledger moves: memo off provisions every core fresh
+        assert_eq!(on.stats.edge_builds, 6);
+        assert_eq!(on.stats.edge_hits, 14);
+        assert_eq!(off.stats.edge_builds, 20);
+        assert_eq!(off.stats.edge_hits, 0);
     }
 
     #[test]
@@ -1056,6 +1799,14 @@ mod tests {
             stats.get("shuffle_builds").unwrap().as_usize().unwrap(),
             outcome.stats.shuffle_builds
         );
+        assert_eq!(
+            stats.get("edge_builds").unwrap().as_usize().unwrap(),
+            outcome.stats.edge_builds
+        );
+        assert_eq!(
+            stats.get("edge_hits").unwrap().as_usize().unwrap(),
+            outcome.stats.edge_hits
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -1144,6 +1895,11 @@ mod tests {
         let mut other = spec.clone();
         other.record_pca = true;
         assert!(resume_sweep_to_file(&other, &path).is_err());
+        // …and a flipped edge-state memo (it changes the trailer's edge
+        // ledger, so it is part of the fingerprint too)
+        let mut other = spec.clone();
+        other.memo_edge_state = false;
+        assert!(resume_sweep_to_file(&other, &path).is_err());
         // …and a file that is not a sweep stream at all
         let garbage = dir.join("garbage.jsonl");
         std::fs::write(&garbage, "{\"schema\":\"odl-har-sweep/v1\",\"cells\":8}\n").unwrap();
@@ -1165,5 +1921,387 @@ mod tests {
         let eig = row.get("pca_eigenvalues").unwrap().as_arr().unwrap();
         assert_eq!(eig.len(), 2);
         assert!(eig[0].as_f64().unwrap() >= eig[1].as_f64().unwrap());
+    }
+
+    /// A spec whose grid has exactly `k` cells (k seeds, one value per
+    /// remaining axis) — plan-only helper for the partitioner properties.
+    fn k_cell_spec(k: usize) -> SweepSpec {
+        let base = small_base();
+        SweepSpec {
+            seeds: (1..=k as u64).collect(),
+            thetas: vec![base.fixed_theta],
+            edge_counts: vec![base.n_edges],
+            detectors: vec![base.detector],
+            n_hiddens: vec![base.n_hidden],
+            loss_probs: vec![base.channel.loss_prob],
+            teacher_errors: vec![base.teacher_error],
+            workers: 1,
+            record_pca: false,
+            memo_edge_state: true,
+            base,
+        }
+    }
+
+    #[test]
+    fn shard_partition_covers_every_cell_exactly_once() {
+        // boundary grid sizes (empty, single, prime, power of two,
+        // composite, N > cells) × every canonical shard count: the ranges
+        // must be contiguous, in order, disjoint, and complete — so every
+        // cell lands in exactly one shard and each shard's cell order is
+        // a subsequence of the global order
+        let mut specs = vec![
+            k_cell_spec(0),
+            k_cell_spec(1),
+            k_cell_spec(7),
+            k_cell_spec(8),
+            small_spec(),
+            new_axes_spec(),
+        ];
+        {
+            // a 12-cell grid with 3 artifact groups of 4
+            let mut s = small_spec();
+            s.base.data_seed = None;
+            s.seeds = vec![1, 2, 3];
+            specs.push(s);
+        }
+        for spec in &specs {
+            let plan = spec.plan();
+            let n = plan.cells.len();
+            for of in [1usize, 2, 3, 8] {
+                let ranges = plan.shard_ranges(of);
+                assert_eq!(ranges.len(), of, "{n} cells / {of} shards");
+                assert_eq!(ranges[0].start, 0);
+                for k in 1..of {
+                    assert_eq!(
+                        ranges[k].start,
+                        ranges[k - 1].end,
+                        "gap or overlap at shard {k} ({n} cells / {of} shards)"
+                    );
+                }
+                assert_eq!(ranges[of - 1].end, n);
+                let flattened: Vec<usize> = ranges.iter().cloned().flatten().collect();
+                assert_eq!(flattened, (0..n).collect::<Vec<_>>());
+                // per-shard stats account exactly the slice's cells
+                let total: usize = ranges
+                    .iter()
+                    .map(|r| plan.range_stats(r.clone()).cells)
+                    .sum();
+                assert_eq!(total, n);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_cuts_respect_artifact_groups() {
+        // derived data seeds → one artifact group per sim seed; with as
+        // many shards as groups, every cut must land on a group boundary
+        // and every shard must build exactly one artifact (its memo hit
+        // rate matches its slice)
+        let mut spec = small_spec();
+        spec.base.data_seed = None;
+        spec.seeds = vec![1, 2, 3];
+        let plan = spec.plan();
+        assert_eq!(plan.cells.len(), 12);
+        assert_eq!(plan.artifacts.len(), 3);
+        let ranges = plan.shard_ranges(3);
+        assert_eq!(ranges, vec![0..4, 4..8, 8..12]);
+        for r in ranges {
+            let stats = plan.range_stats(r);
+            assert_eq!(stats.artifact_builds, 1);
+            assert_eq!(stats.artifact_hits, stats.cells - 1);
+        }
+    }
+
+    #[test]
+    fn shard_cuts_never_double_snap_onto_one_boundary() {
+        // two data_key groups of 6 split 3 ways: both interior ideal cuts
+        // (4 and 8) are within snapping distance of the single boundary
+        // at 6 — the second cut must fall back toward the even split
+        // instead of snapping onto 6 again and starving shard 2 while its
+        // neighbours carry double load
+        let mut spec = small_spec();
+        spec.base.data_seed = None;
+        spec.seeds = vec![1, 2];
+        spec.thetas = vec![None, Some(0.1), Some(0.2)];
+        let plan = spec.plan();
+        assert_eq!(plan.cells.len(), 12);
+        assert_eq!(plan.artifacts.len(), 2);
+        let ranges = plan.shard_ranges(3);
+        assert_eq!(ranges, vec![0..6, 6..8, 8..12]);
+        assert!(ranges.iter().all(|r| !r.is_empty()));
+    }
+
+    #[test]
+    fn slice_lifetimes_agree_with_range_stats() {
+        // the dry-run display and the trailer ledger must share one
+        // lifetime semantics: builds == distinct entries, lends == cells
+        // (or Σ n_edges), and every first/last lies inside the slice
+        let spec = small_spec();
+        let plan = spec.plan();
+        let n = plan.cells.len();
+        for (a, b) in [(0usize, n), (0, 3), (2, 7), (5, 5), (n - 1, n)] {
+            let stats = plan.range_stats(a..b);
+            let lt = plan.slice_lifetimes(a..b);
+            assert_eq!(lt.artifacts.len(), stats.artifact_builds);
+            assert_eq!(lt.shuffles.len(), stats.shuffle_builds);
+            let max_sum: usize = lt.edge_states.values().map(|(_, m)| *m).sum();
+            let use_sum: usize = lt.edge_states.values().map(|(l, _)| l.uses).sum();
+            assert_eq!(max_sum, stats.edge_builds);
+            assert_eq!(use_sum, stats.edge_builds + stats.edge_hits);
+            for l in lt.artifacts.values() {
+                assert!(a <= l.first && l.first <= l.last && l.last < b);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_one_of_one_is_byte_identical_to_unsharded() {
+        let spec = small_spec();
+        let plan = spec.plan();
+        let dir = std::env::temp_dir().join("odl_har_sweep_shard11_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let full = dir.join("full.jsonl");
+        let shard = dir.join("shard.jsonl");
+        run_planned_to_file(&spec, &plan, &full).unwrap();
+        run_shard_to_file(&spec, &plan, ShardSpec::WHOLE, &shard).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&full).unwrap(),
+            std::fs::read_to_string(&shard).unwrap(),
+            "--shard 1/1 must write the unsharded stream byte for byte"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shards_merge_byte_identical_for_every_split() {
+        // the merge acceptance contract on two grids (one exercising the
+        // v2 axes): merge(shard 1/N .. N/N) == the unsharded file, byte
+        // for byte, for N ∈ {1, 2, 3} and an N > 1-cell boundary split,
+        // with the shard files given in scrambled order
+        for (tag, spec) in [("small", small_spec()), ("axes", new_axes_spec())] {
+            let plan = spec.plan();
+            let n = plan.cells.len();
+            let dir =
+                std::env::temp_dir().join(format!("odl_har_sweep_merge_test_{tag}"));
+            std::fs::create_dir_all(&dir).unwrap();
+            let full_path = dir.join("full.jsonl");
+            run_planned_to_file(&spec, &plan, &full_path).unwrap();
+            let full = std::fs::read_to_string(&full_path).unwrap();
+            for of in [1usize, 2, 3, 8] {
+                let mut paths = Vec::new();
+                for index in 1..=of {
+                    let path = dir.join(format!("shard_{index}_of_{of}.jsonl"));
+                    let outcome = run_shard_to_file(
+                        &spec,
+                        &plan,
+                        ShardSpec { index, of },
+                        &path,
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        outcome.stats.cells,
+                        plan.shard_ranges(of)[index - 1].len()
+                    );
+                    paths.push(path);
+                }
+                paths.reverse();
+                let merged_path = dir.join(format!("merged_{of}.jsonl"));
+                let outcome = merge_shard_files(&plan, &paths, &merged_path).unwrap();
+                assert_eq!((outcome.shards, outcome.cells), (of, n));
+                assert_eq!(outcome.stats, plan.stats);
+                assert_eq!(
+                    std::fs::read_to_string(&merged_path).unwrap(),
+                    full,
+                    "{tag}: merge of {of} shard(s) must reproduce the unsharded file"
+                );
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn kill_then_merge_is_byte_identical() {
+        // interrupt any one shard at any point, resume it, merge — the
+        // merged file must equal the uninterrupted single-process run
+        let spec = new_axes_spec();
+        let plan = spec.plan();
+        let of = 3usize;
+        let dir = std::env::temp_dir().join("odl_har_sweep_kill_merge_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let full_path = dir.join("full.jsonl");
+        run_planned_to_file(&spec, &plan, &full_path).unwrap();
+        let full = std::fs::read_to_string(&full_path).unwrap();
+        let shard_paths: Vec<std::path::PathBuf> = (1..=of)
+            .map(|index| {
+                let path = dir.join(format!("shard_{index}.jsonl"));
+                run_shard_to_file(&spec, &plan, ShardSpec { index, of }, &path).unwrap();
+                path
+            })
+            .collect();
+        let pristine: Vec<String> = shard_paths
+            .iter()
+            .map(|p| std::fs::read_to_string(p).unwrap())
+            .collect();
+        for victim in 0..of {
+            let shard = ShardSpec {
+                index: victim + 1,
+                of,
+            };
+            let count = plan.shard_ranges(of)[victim].len();
+            let lines: Vec<&str> = pristine[victim].lines().collect();
+            for cut in [0usize, 1, count / 2, count + 2] {
+                // restore every shard, then truncate the victim to
+                // header + `cut` rows (cut = count + 2 keeps the trailer:
+                // the already-complete path)
+                for (p, text) in shard_paths.iter().zip(&pristine) {
+                    std::fs::write(p, text).unwrap();
+                }
+                let keep = (cut + 1).min(lines.len());
+                let text: String =
+                    lines[..keep].iter().map(|l| format!("{l}\n")).collect();
+                std::fs::write(&shard_paths[victim], &text).unwrap();
+                let out =
+                    resume_shard_to_file(&spec, &plan, shard, &shard_paths[victim])
+                        .unwrap();
+                if cut >= count + 2 {
+                    assert!(out.already_complete);
+                } else {
+                    let done = cut.min(count);
+                    assert_eq!((out.skipped, out.ran), (done, count - done));
+                }
+                assert_eq!(
+                    std::fs::read_to_string(&shard_paths[victim]).unwrap(),
+                    pristine[victim],
+                    "shard {}/{} resumed from cut {cut} must match the uninterrupted shard",
+                    shard.index,
+                    of
+                );
+                let merged_path = dir.join("merged.jsonl");
+                merge_shard_files(&plan, &shard_paths, &merged_path).unwrap();
+                assert_eq!(
+                    std::fs::read_to_string(&merged_path).unwrap(),
+                    full,
+                    "merge after interrupting shard {}/{} at cut {cut} diverged",
+                    shard.index,
+                    of
+                );
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shard_resume_rejects_a_mismatched_shard_or_spec() {
+        let spec = small_spec();
+        let plan = spec.plan();
+        let dir = std::env::temp_dir().join("odl_har_sweep_shard_mismatch_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shard.jsonl");
+        run_shard_to_file(&spec, &plan, ShardSpec { index: 1, of: 2 }, &path).unwrap();
+        // same spec, wrong shard coordinates
+        assert!(
+            resume_shard_to_file(&spec, &plan, ShardSpec { index: 2, of: 2 }, &path)
+                .is_err()
+        );
+        assert!(
+            resume_shard_to_file(&spec, &plan, ShardSpec { index: 1, of: 3 }, &path)
+                .is_err()
+        );
+        // unsharded resume must refuse a shard file too
+        assert!(resume_planned_to_file(&spec, &plan, &path).is_err());
+        // a different spec refuses the shard file even at the right
+        // coordinates
+        let mut other = spec.clone();
+        other.base.horizon_s += 1.0;
+        let other_plan = other.plan();
+        assert!(resume_shard_to_file(
+            &other,
+            &other_plan,
+            ShardSpec { index: 1, of: 2 },
+            &path
+        )
+        .is_err());
+        // out-of-range shard coordinates are rejected up front
+        assert!(plan.shard_range(ShardSpec { index: 0, of: 2 }).is_err());
+        assert!(plan.shard_range(ShardSpec { index: 3, of: 2 }).is_err());
+        assert!(ShardSpec::parse("0/2").is_err());
+        assert!(ShardSpec::parse("3/2").is_err());
+        assert!(ShardSpec::parse("1of2").is_err());
+        assert_eq!(ShardSpec::parse("2/3").unwrap(), ShardSpec { index: 2, of: 3 });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn merge_rejects_incomplete_or_inconsistent_sets() {
+        let spec = small_spec();
+        let plan = spec.plan();
+        let dir = std::env::temp_dir().join("odl_har_sweep_merge_reject_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut paths = Vec::new();
+        for index in 1..=2usize {
+            let path = dir.join(format!("shard_{index}.jsonl"));
+            run_shard_to_file(&spec, &plan, ShardSpec { index, of: 2 }, &path).unwrap();
+            paths.push(path);
+        }
+        let out = dir.join("merged.jsonl");
+        // a complete set merges…
+        merge_shard_files(&plan, &paths, &out).unwrap();
+        // …but a missing shard is rejected with the gap named
+        let err = merge_shard_files(&plan, &paths[..1].to_vec(), &out)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("incomplete shard set"), "{err}");
+        assert!(err.contains("2/2"), "{err}");
+        // a duplicate shard is rejected
+        let dup = vec![paths[0].clone(), paths[0].clone()];
+        assert!(merge_shard_files(&plan, &dup, &out).is_err());
+        // an interrupted shard (header + 1 row, no trailer) is rejected
+        let text = std::fs::read_to_string(&paths[1]).unwrap();
+        let cut: String = text.lines().take(2).map(|l| format!("{l}\n")).collect();
+        let broken = dir.join("broken.jsonl");
+        std::fs::write(&broken, cut).unwrap();
+        let bad = vec![paths[0].clone(), broken.clone()];
+        let err = merge_shard_files(&plan, &bad, &out).unwrap_err().to_string();
+        assert!(err.contains("incomplete"), "{err}");
+        // mixed splits are rejected
+        let odd = dir.join("shard_1_of_3.jsonl");
+        run_shard_to_file(&spec, &plan, ShardSpec { index: 1, of: 3 }, &odd).unwrap();
+        let mixed = vec![paths[0].clone(), odd];
+        assert!(merge_shard_files(&plan, &mixed, &out).is_err());
+        // another spec's shard files are rejected outright
+        let mut other = spec.clone();
+        other.base.horizon_s += 1.0;
+        assert!(merge_shard_files(&other.plan(), &paths, &out).is_err());
+        // merging onto one of the inputs must refuse before truncating it
+        let before = std::fs::read_to_string(&paths[0]).unwrap();
+        let err = merge_shard_files(&plan, &paths, &paths[0])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("refusing to overwrite"), "{err}");
+        assert_eq!(std::fs::read_to_string(&paths[0]).unwrap(), before);
+        // a damaged row behind an intact frame (rows swapped: header,
+        // line count, and trailer all still byte-exact) fails row
+        // validation — and must leave a pre-existing output untouched,
+        // because the merge streams into a temp file renamed only on
+        // success
+        let good_out = std::fs::read_to_string(&out).unwrap();
+        let text = std::fs::read_to_string(&paths[1]).unwrap();
+        let mut rows: Vec<&str> = text.lines().collect();
+        rows.swap(1, 2);
+        let damaged = dir.join("damaged.jsonl");
+        std::fs::write(
+            &damaged,
+            rows.iter().map(|l| format!("{l}\n")).collect::<String>(),
+        )
+        .unwrap();
+        let bad = vec![paths[0].clone(), damaged];
+        let err = merge_shard_files(&plan, &bad, &out).unwrap_err().to_string();
+        assert!(err.contains("out of cell order"), "{err}");
+        assert_eq!(
+            std::fs::read_to_string(&out).unwrap(),
+            good_out,
+            "a failed merge must not disturb the existing output file"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

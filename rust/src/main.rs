@@ -13,7 +13,8 @@
 //! odl-har fig4   [--trials N] [--out DIR]
 //! odl-har run    --config FILE       # custom protocol experiment
 //! odl-har fleet  [--config FILE] [--workers N] [--threaded]
-//! odl-har sweep  --config FILE [--workers N] [--out FILE] [--resume] [--dry-run]
+//! odl-har sweep  --config FILE [--workers N] [--out FILE] [--resume] [--dry-run] [--shard I/N]
+//! odl-har merge  --config FILE [--out FILE] SHARD_FILE...
 //! odl-har artifacts-check            # verify PJRT artifacts load + run
 //! ```
 //!
@@ -77,6 +78,12 @@ impl Args {
             bail!("unrecognized arguments: {:?}", self.rest);
         }
         Ok(())
+    }
+
+    /// Consume whatever remains after the flags/options as positional
+    /// arguments (the `merge` subcommand's shard files).
+    fn positional(self) -> Vec<String> {
+        self.rest
     }
 }
 
@@ -249,10 +256,23 @@ fn main() -> Result<()> {
             let dry_run = args.flag("--dry-run");
             let resume = args.flag("--resume");
             let workers_cli = args.opt_usize_opt("--workers")?;
-            let out = args
-                .opt("--out")?
-                .map(PathBuf::from)
-                .unwrap_or_else(|| PathBuf::from("results/sweep.jsonl"));
+            let shard = args
+                .opt("--shard")?
+                .map(|s| odl_har::coordinator::ShardSpec::parse(&s))
+                .transpose()?
+                .unwrap_or(odl_har::coordinator::ShardSpec::WHOLE);
+            // shards must not share the unsharded default path — two
+            // shard runs without --out would silently clobber each other
+            let out = args.opt("--out")?.map(PathBuf::from).unwrap_or_else(|| {
+                if shard.of > 1 {
+                    PathBuf::from(format!(
+                        "results/sweep.shard{}of{}.jsonl",
+                        shard.index, shard.of
+                    ))
+                } else {
+                    PathBuf::from("results/sweep.jsonl")
+                }
+            });
             args.finish()?;
             let mut spec = config::sweep_from_file(&PathBuf::from(cfg_path))?;
             if let Some(w) = workers_cli {
@@ -273,18 +293,33 @@ fn main() -> Result<()> {
                 spec.teacher_errors.len(),
                 spec.workers
             );
+            let range = plan.shard_range(shard)?;
+            if shard.of > 1 {
+                println!(
+                    "sweep: shard {}/{} owns cells [{}, {}) — {} of {}",
+                    shard.index,
+                    shard.of,
+                    range.start,
+                    range.end,
+                    range.len(),
+                    plan.cells.len()
+                );
+            }
             if dry_run {
-                print_sweep_plan(&plan);
+                // a sharded dry run plans exactly the slice that shard
+                // will execute (slice-local lifetimes + ledger)
+                print_sweep_plan(&plan, range);
                 return Ok(());
             }
             // the banner plan above is the one the engine runs — planned
             // entry points avoid re-enumerating a large grid
             let stats = if resume {
-                let outcome =
-                    odl_har::coordinator::sweep::resume_planned_to_file(&spec, &plan, &out)?;
+                let outcome = odl_har::coordinator::sweep::resume_shard_to_file(
+                    &spec, &plan, shard, &out,
+                )?;
                 if outcome.already_complete {
                     println!(
-                        "sweep: {} already holds the complete grid ({} cells) — nothing to do",
+                        "sweep: {} already holds the complete slice ({} cells) — nothing to do",
                         out.display(),
                         outcome.skipped
                     );
@@ -296,15 +331,47 @@ fn main() -> Result<()> {
                 }
                 outcome.stats
             } else {
-                odl_har::coordinator::sweep::run_planned_to_file(&spec, &plan, &out)?.stats
+                odl_har::coordinator::sweep::run_shard_to_file(&spec, &plan, shard, &out)?
+                    .stats
             };
             println!(
-                "sweep: done — {} cells, data fitted {} time(s) ({} hit(s)), pools shuffled {} time(s) ({} hit(s))",
+                "sweep: done — {} cells, data fitted {} time(s) ({} hit(s)), pools shuffled {} time(s) ({} hit(s)), edge cores provisioned {} time(s) ({} hit(s))",
                 stats.cells,
                 stats.artifact_builds,
                 stats.artifact_hits,
                 stats.shuffle_builds,
-                stats.shuffle_hits
+                stats.shuffle_hits,
+                stats.edge_builds,
+                stats.edge_hits
+            );
+            println!("results: {}", out.display());
+        }
+        "merge" => {
+            let cfg_path = args
+                .opt("--config")?
+                .context("merge requires --config FILE (the sweep's config)")?;
+            let out = args
+                .opt("--out")?
+                .map(PathBuf::from)
+                .unwrap_or_else(|| PathBuf::from("results/sweep.jsonl"));
+            let positional = args.positional();
+            // a stray flag must error like every other subcommand, not be
+            // opened as a shard file
+            if let Some(flag) = positional.iter().find(|a| a.starts_with("--")) {
+                bail!("unrecognized argument '{flag}' (merge takes --config, --out, and shard files)");
+            }
+            let inputs: Vec<PathBuf> = positional.into_iter().map(PathBuf::from).collect();
+            anyhow::ensure!(
+                !inputs.is_empty(),
+                "merge requires the shard files as positional arguments"
+            );
+            let spec = config::sweep_from_file(&PathBuf::from(cfg_path))?;
+            let plan = spec.plan();
+            let outcome =
+                odl_har::coordinator::sweep::merge_shard_files(&plan, &inputs, &out)?;
+            println!(
+                "merge: {} shard file(s) -> {} cells, byte-identical to a single-process run",
+                outcome.shards, outcome.cells
             );
             println!("results: {}", out.display());
         }
@@ -330,25 +397,54 @@ fn main() -> Result<()> {
 }
 
 /// `odl-har sweep --dry-run`: the enumerated grid, each cell's memo
-/// build/hit role, and the artifact/shuffle lifetimes (build at first
-/// use, drop after last use) — without running a single cell.
-fn print_sweep_plan(plan: &odl_har::coordinator::SweepPlan) {
-    println!("dry run: plan only — no cells will run");
-    for (cell, _) in &plan.cells {
-        let (slot, shuf) = plan.cell_slots[cell.index];
-        let a = &plan.artifacts[slot];
-        let s = &a.shuffles[shuf];
+/// build/hit role, and the artifact/shuffle/edge-core lifetimes (build at
+/// first use, drop after last use) — without running a single cell.
+fn print_sweep_plan(plan: &odl_har::coordinator::SweepPlan, range: std::ops::Range<usize>) {
+    if range.len() == plan.cells.len() {
+        println!("dry run: plan only — no cells will run");
+    } else {
+        println!(
+            "dry run: plan only — no cells will run (shard slice: cells [{}, {}))",
+            range.start, range.end
+        );
+    }
+    // Slice-local lifetimes: the engine restricts remaining-use counts to
+    // the cells it actually runs, so a shard builds at the slice's first
+    // use and drops at the slice's last use — a sharded dry run must show
+    // exactly what that shard will do, not the whole grid's lifetimes.
+    // One source of truth: the same helper range_stats derives from.
+    let lt = plan.slice_lifetimes(range.clone());
+    let (art, shf, estates) = (&lt.artifacts, &lt.shuffles, &lt.edge_states);
+    for (cell, _) in &plan.cells[range.clone()] {
+        let (slot, shuf, est) = plan.cell_slots[cell.index];
+        let s = &plan.artifacts[slot].shuffles[shuf];
+        let e = &s.edge_states[est];
+        let al = art[&slot];
+        let sl = shf[&(slot, shuf)];
+        let (el, _) = estates[&(slot, shuf, est)];
         let mut notes = Vec::new();
-        if a.first_cell == cell.index {
+        if al.first == cell.index {
             notes.push(format!("build artifact a{slot}"));
         }
-        if s.first_cell == cell.index {
+        if sl.first == cell.index {
             notes.push(format!("shuffle a{slot}/seed {}", s.seed));
         }
-        if s.last_cell == cell.index {
+        if plan.memo_edge_state && el.first == cell.index {
+            notes.push(format!(
+                "provision edge cores a{slot}/seed {}/h{}",
+                s.seed, e.n_hidden
+            ));
+        }
+        if plan.memo_edge_state && el.last == cell.index {
+            notes.push(format!(
+                "drop edge cores a{slot}/seed {}/h{}",
+                s.seed, e.n_hidden
+            ));
+        }
+        if sl.last == cell.index {
             notes.push(format!("drop shuffle a{slot}/seed {}", s.seed));
         }
-        if a.last_cell == cell.index {
+        if al.last == cell.index {
             notes.push(format!("drop artifact a{slot}"));
         }
         let theta = match cell.theta {
@@ -372,23 +468,47 @@ fn print_sweep_plan(plan: &odl_har::coordinator::SweepPlan) {
             }
         );
     }
+    // the ledger a run over exactly this slice will report in its trailer
+    let stats = plan.range_stats(range);
     println!(
-        "memo plan: {} artifact build(s) + {} hit(s), {} shuffle build(s) + {} hit(s)",
-        plan.stats.artifact_builds,
-        plan.stats.artifact_hits,
-        plan.stats.shuffle_builds,
-        plan.stats.shuffle_hits
+        "memo plan: {} artifact build(s) + {} hit(s), {} shuffle build(s) + {} hit(s), {} edge core(s) + {} hit(s){}",
+        stats.artifact_builds,
+        stats.artifact_hits,
+        stats.shuffle_builds,
+        stats.shuffle_hits,
+        stats.edge_builds,
+        stats.edge_hits,
+        if plan.memo_edge_state {
+            ""
+        } else {
+            " (edge-state memo off)"
+        }
     );
-    for (slot, a) in plan.artifacts.iter().enumerate() {
+    for (slot, al) in art {
+        let a = &plan.artifacts[*slot];
         println!(
             "  artifact a{slot} (data_key {:016x}): build at cell {}, {} use(s), drop after cell {}",
-            a.key, a.first_cell, a.uses, a.last_cell
+            a.key, al.first, al.uses, al.last
         );
-        for s in &a.shuffles {
+        for ((_, shuf), sl) in shf.range((*slot, 0)..(*slot, usize::MAX)) {
+            let s = &a.shuffles[*shuf];
             println!(
                 "    shuffle seed {}: build at cell {}, {} use(s), drop after cell {}",
-                s.seed, s.first_cell, s.uses, s.last_cell
+                s.seed, sl.first, sl.uses, sl.last
             );
+            // with the memo off no shared core set ever exists — listing
+            // build/drop points for it would contradict the ledger line
+            if plan.memo_edge_state {
+                for ((_, _, est), (el, max_edges)) in
+                    estates.range((*slot, *shuf, 0)..(*slot, *shuf, usize::MAX))
+                {
+                    let e = &s.edge_states[*est];
+                    println!(
+                        "      edge cores n_hidden {}: up to {} core(s) from cell {}, {} lend(s), drop after cell {}",
+                        e.n_hidden, max_edges, el.first, el.uses, el.last
+                    );
+                }
+            }
         }
     }
 }
@@ -409,14 +529,23 @@ fn print_help() {
            fleet  [--config FILE] [--workers N] [--threaded]  multi-edge fleet simulation\n\
                                           (--workers shards provisioning + event loop; 0 = auto;\n\
                                            same report bit for bit for any count)\n\
-           sweep  --config FILE [--workers N] [--out FILE] [--resume] [--dry-run]\n\
+           sweep  --config FILE [--workers N] [--out FILE] [--resume] [--dry-run] [--shard I/N]\n\
                                           memoized, resumable scenario-grid sweep (TOML-declared\n\
                                           seeds x thetas x edge counts x detectors x n_hiddens x\n\
                                           loss_probs x teacher_errors; artifacts fitted once per\n\
-                                          data config, built lazily and dropped at last use;\n\
-                                          --resume keeps an interrupted file's completed cells and\n\
-                                          finishes it byte-identical to an uninterrupted run;\n\
-                                          --dry-run prints the grid + memo plan without running)\n\
+                                          data config, per-edge cores shared across cells that\n\
+                                          differ only in fleet size, all built lazily and dropped\n\
+                                          at last use; --resume keeps an interrupted file's\n\
+                                          completed cells and finishes it byte-identical to an\n\
+                                          uninterrupted run; --dry-run prints the grid + memo\n\
+                                          plan without running; --shard I/N runs the I-th of N\n\
+                                          disjoint grid slices for process-level fan-out —\n\
+                                          1/1 is byte-identical to no --shard at all)\n\
+           merge  --config FILE [--out FILE] SHARD_FILE...\n\
+                                          recombine a complete --shard file set into one results\n\
+                                          file byte-identical to a single-process sweep (headers\n\
+                                          validated against the config's grid, rows re-interleaved\n\
+                                          in cell order, stats trailer recomputed from the plan)\n\
            artifacts-check                compile every PJRT artifact"
     );
 }

@@ -7,9 +7,13 @@
 //! from the shared executor's canonical `util::parallel::WORKER_SWEEP`
 //! (1/2/8), so this suite and the sweep-engine suite assert the same
 //! sweep against the same `util::parallel` layer every call site now
-//! routes through.
+//! routes through. The sweep engine's edge-state memo rides the same
+//! contract: provisioned cores shared across cells that differ only in
+//! `n_edges` must leave every report bit untouched (asserted here over
+//! the same worker sweep, memo on vs off).
 
 use odl_har::coordinator::fleet::{DetectorKind, Fleet, FleetConfig, Scenario};
+use odl_har::coordinator::sweep::{run_sweep, SweepSpec};
 use odl_har::coordinator::{ChannelConfig, FleetReport};
 use odl_har::data::SynthConfig;
 use odl_har::util::parallel::WORKER_SWEEP;
@@ -160,4 +164,81 @@ fn provisioning_and_run_workers_compose_bitwise() {
     .unwrap()
     .run_parallel(4);
     assert!(sequential.bitwise_eq(&sharded));
+}
+
+/// A sweep whose only moving axis is the fleet size — the edge-state
+/// memo's home turf: every cell of a seed shares one provisioned-core
+/// set. Lossy channel + noisy teacher + eval windows keep every RNG
+/// stream hot; the shortened horizon keeps the grid affordable.
+fn edge_memo_spec(workers: usize, memo: bool) -> SweepSpec {
+    let mut base = scenario(DetectorKind::Oracle);
+    base.n_edges = 2;
+    base.horizon_s = 120.0;
+    base.data_seed = Some(0xED6E);
+    SweepSpec {
+        seeds: vec![3, 17],
+        thetas: vec![base.fixed_theta],
+        edge_counts: WORKER_SWEEP.to_vec(),
+        detectors: vec![base.detector],
+        n_hiddens: vec![base.n_hidden],
+        loss_probs: vec![base.channel.loss_prob],
+        teacher_errors: vec![base.teacher_error],
+        workers,
+        record_pca: false,
+        memo_edge_state: memo,
+        base,
+    }
+}
+
+#[test]
+fn edge_state_memo_bitwise_invisible_across_worker_counts() {
+    // The edge-state-memo contract: cells differing only in n_edges
+    // share provisioned cores when the memo is on, and every FleetReport
+    // must equal the memo-off run bit for bit, over the shared
+    // WORKER_SWEEP — the memo (like every worker count) is a wall-clock
+    // knob, never a numerics knob.
+    let reference = run_sweep(&edge_memo_spec(1, false)).unwrap();
+    assert_eq!(reference.stats.edge_hits, 0, "memo off must never hit");
+    for &workers in &WORKER_SWEEP {
+        for memo in [false, true] {
+            if workers == 1 && !memo {
+                continue; // that is the reference itself
+            }
+            let got = run_sweep(&edge_memo_spec(workers, memo)).unwrap();
+            assert_eq!(reference.reports.len(), got.reports.len());
+            for ((cell, a), (_, b)) in reference.reports.iter().zip(&got.reports) {
+                assert!(
+                    a.bitwise_eq(b),
+                    "cell {} diverged (memo {memo}, {workers} workers)",
+                    cell.index
+                );
+            }
+        }
+    }
+    // and the memo genuinely engages: per seed, the largest fleet
+    // (max(1, 2, 8) = 8) is built once and the smaller cells borrow —
+    // 8 builds + (1 + 2) hits per seed over two seeds
+    let memo_stats = run_sweep(&edge_memo_spec(1, true)).unwrap().stats;
+    assert_eq!(memo_stats.edge_builds, 16);
+    assert_eq!(memo_stats.edge_hits, 6);
+}
+
+#[test]
+fn edge_state_memo_cells_match_individually_built_fleets() {
+    // every memoized cell also equals a from-scratch Fleet::new(..).run()
+    let spec = edge_memo_spec(2, true);
+    let outcome = run_sweep(&spec).unwrap();
+    for ((cell, report), (_, sc)) in outcome.reports.iter().zip(spec.cells()) {
+        let direct = Fleet::new(FleetConfig {
+            scenario: sc,
+            seed: cell.seed,
+        })
+        .unwrap()
+        .run();
+        assert!(
+            direct.bitwise_eq(report),
+            "cell {} diverged from a fresh fleet",
+            cell.index
+        );
+    }
 }

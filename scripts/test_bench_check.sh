@@ -1,0 +1,146 @@
+#!/usr/bin/env bash
+# Fixture tests for scripts/bench_check.sh — runnable without a Rust
+# toolchain (SKIP_BENCH=1 compares existing JSONs only; BENCH_DIR points
+# the gate at a throwaway fixture directory).
+#
+#   scripts/test_bench_check.sh
+#
+# Covers the graceful-degradation paths (missing, empty, and corrupt
+# bench/baseline files must warn and skip — a fresh tree seeds baselines,
+# it never fails) and each gate (baseline-relative memo_speedup /
+# edge_memo_speedup, absolute resume_overhead_frac / edge_hit_rate /
+# edge_memo_speedup floors).
+
+set -euo pipefail
+here="$(cd "$(dirname "$0")" && pwd)"
+check="$here/bench_check.sh"
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+
+pass=0
+fail=0
+
+# run_case NAME EXPECTED_EXIT GREP_PATTERN
+run_case() {
+  local name="$1" want="$2" pattern="$3"
+  local out rc=0
+  out=$(SKIP_BENCH=1 BENCH_DIR="$tmp" bash "$check" 2>&1) || rc=$?
+  if [[ "$rc" -ne "$want" ]]; then
+    echo "FAIL $name: exit $rc (wanted $want)"
+    echo "$out" | sed 's/^/    /'
+    fail=$((fail + 1))
+    return
+  fi
+  if ! grep -q "$pattern" <<<"$out"; then
+    echo "FAIL $name: output missing pattern '$pattern'"
+    echo "$out" | sed 's/^/    /'
+    fail=$((fail + 1))
+    return
+  fi
+  echo "ok   $name"
+  pass=$((pass + 1))
+}
+
+sweep_json() {
+  # sweep_json MEMO_SPEEDUP RESUME_FRAC EDGE_HIT_RATE EDGE_MEMO_SPEEDUP
+  printf '{"schema":"bench_sweep/v3","memo_speedup":%s,"resume_overhead_frac":%s,"edge_hit_rate":%s,"edge_memo_speedup":%s}' \
+    "$1" "$2" "$3" "$4"
+}
+
+# 1. fresh tree: nothing measured at all — degrade, never fail
+run_case "fresh tree (all JSONs missing)" 0 "BENCH_sweep.json missing"
+
+# 2. empty bench file (the current bench trajectory): warn + skip + pass
+: > "$tmp/BENCH_sweep.json"
+run_case "empty BENCH_sweep.json" 0 "BENCH_sweep.json is empty"
+
+# 3. corrupt bench file: warn + skip + pass
+echo '{"schema": truncated' > "$tmp/BENCH_sweep.json"
+run_case "corrupt BENCH_sweep.json" 0 "unreadable"
+
+# 4. first healthy run, no baseline yet: accepted as baseline
+sweep_json 2.0 0.05 0.8 3.0 > "$tmp/BENCH_sweep.json"
+run_case "first run seeds baseline" 0 "first run, accepting as baseline"
+
+# 5. empty baseline file: treated as a first run, not a crash
+: > "$tmp/BENCH_sweep.prev.json"
+run_case "empty baseline degrades to first run" 0 "BENCH_sweep.prev.json is empty"
+
+# 6. healthy numbers vs a healthy baseline: PASS
+sweep_json 2.0 0.05 0.8 3.0 > "$tmp/BENCH_sweep.prev.json"
+run_case "healthy vs baseline" 0 "bench_check: PASS"
+
+# 7. memo_speedup regression (>10% below baseline): FAIL
+sweep_json 1.0 0.05 0.8 3.0 > "$tmp/BENCH_sweep.json"
+run_case "memo_speedup regression fails" 1 "sweep:memo_speedup.*REGRESSION"
+
+# 8. edge_memo_speedup regression vs baseline: FAIL
+sweep_json 2.0 0.05 0.8 2.0 > "$tmp/BENCH_sweep.json"
+run_case "edge_memo_speedup regression fails" 1 "sweep:edge_memo_speedup.*REGRESSION"
+
+# 9. absolute resume gate: a resumed-complete run must be ~free
+sweep_json 2.0 0.50 0.8 3.0 > "$tmp/BENCH_sweep.json"
+run_case "resume_overhead_frac gate fails" 1 "sweep:resume_overhead_frac.*REGRESSION"
+
+# 10. absolute edge-hit-rate floor: the memo must engage
+sweep_json 2.0 0.05 0.2 3.0 > "$tmp/BENCH_sweep.json"
+run_case "edge_hit_rate floor fails" 1 "sweep:edge_hit_rate.*REGRESSION"
+
+# 11. absolute edge wall-clock floor (0.9 = 1.0 minus the shared noise
+# tolerance): a memo that clearly loses wall clock must fail
+sweep_json 2.0 0.05 0.8 0.85 > "$tmp/BENCH_sweep.json"
+run_case "edge_memo_speedup floor fails" 1 "sweep:edge_memo_speedup.*REGRESSION"
+# 11b. and a within-noise 0.95 passes the floor (the relative gate is
+# judged against its own baseline, here equal)
+sweep_json 2.0 0.05 0.8 0.95 > "$tmp/BENCH_sweep.json"
+sweep_json 2.0 0.05 0.8 0.95 > "$tmp/BENCH_sweep.prev.json"
+run_case "within-noise speedup passes floor" 0 "bench_check: PASS"
+sweep_json 2.0 0.05 0.8 3.0 > "$tmp/BENCH_sweep.prev.json"
+
+# 12. an old bench JSON without the edge metrics: skip those gates
+printf '{"schema":"bench_sweep/v2","memo_speedup":2.0,"resume_overhead_frac":0.05}' \
+  > "$tmp/BENCH_sweep.json"
+run_case "pre-v3 bench JSON skips edge gates" 0 "edge_hit_rate not measured"
+
+# 13. a bench-run invocation (REQUIRE_FRESH=1) must FAIL on a missing
+# fresh measurement — write failures cannot hide regressions
+rm -f "$tmp"/BENCH_*.json "$tmp"/BENCH_*.prev.json
+out=$(SKIP_BENCH=1 REQUIRE_FRESH=1 BENCH_DIR="$tmp" bash "$check" 2>&1) && rc=0 || rc=$?
+if [[ "$rc" -eq 1 ]] && grep -q "missing-results" <<<"$out"; then
+  echo "ok   missing fresh measurement fails when benches ran"
+  pass=$((pass + 1))
+else
+  echo "FAIL missing fresh measurement must fail when benches ran (rc=$rc)"
+  echo "$out" | sed 's/^/    /'
+  fail=$((fail + 1))
+fi
+
+# 14. and passes again once the fresh measurements exist
+sweep_json 2.0 0.05 0.8 3.0 > "$tmp/BENCH_sweep.json"
+printf '{"schema":"bench_hotpath/v1","speedup_vs_baseline":{}}' > "$tmp/BENCH_hotpath.json"
+printf '{"schema":"bench_fleet/v1","results":[]}' > "$tmp/BENCH_fleet.json"
+out=$(SKIP_BENCH=1 REQUIRE_FRESH=1 BENCH_DIR="$tmp" bash "$check" 2>&1) && rc=0 || rc=$?
+if [[ "$rc" -eq 0 ]] && grep -q "bench_check: PASS" <<<"$out"; then
+  echo "ok   fresh measurements satisfy REQUIRE_FRESH"
+  pass=$((pass + 1))
+else
+  echo "FAIL fresh measurements should pass under REQUIRE_FRESH (rc=$rc)"
+  echo "$out" | sed 's/^/    /'
+  fail=$((fail + 1))
+fi
+rm -f "$tmp"/BENCH_hotpath.json "$tmp"/BENCH_fleet.json
+
+# 15. compare-only mode never rotates baselines
+sweep_json 2.0 0.05 0.8 3.0 > "$tmp/BENCH_sweep.json"
+rm -f "$tmp/BENCH_sweep.prev.json"
+SKIP_BENCH=1 BENCH_DIR="$tmp" bash "$check" > /dev/null 2>&1
+if [[ -f "$tmp/BENCH_sweep.prev.json" ]]; then
+  echo "FAIL compare-only must not rotate baselines"
+  fail=$((fail + 1))
+else
+  echo "ok   compare-only does not rotate baselines"
+  pass=$((pass + 1))
+fi
+
+echo "test_bench_check: $pass passed, $fail failed"
+[[ "$fail" -eq 0 ]]

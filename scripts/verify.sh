@@ -46,4 +46,19 @@ head -n 5 /tmp/odl_sweep_smoke.jsonl > /tmp/odl_sweep_resume.jsonl
 cmp /tmp/odl_sweep_smoke.jsonl /tmp/odl_sweep_resume.jsonl
 ./target/release/odl-har sweep --config configs/sweep_smoke.toml --out /tmp/odl_sweep_resume.jsonl --resume
 cmp /tmp/odl_sweep_smoke.jsonl /tmp/odl_sweep_resume.jsonl
+# shard/merge smoke: a 2-way process-level split of the same grid, with
+# one shard killed mid-slice and resumed, must merge back byte-identical
+# to the single-process file (and --shard 1/1 IS the unsharded stream)
+./target/release/odl-har sweep --config configs/sweep_smoke.toml --shard 1/2 --out /tmp/odl_sweep_shard1.jsonl
+./target/release/odl-har sweep --config configs/sweep_smoke.toml --shard 2/2 --out /tmp/odl_sweep_shard2.jsonl
+head -n 4 /tmp/odl_sweep_shard2.jsonl > /tmp/odl_sweep_shard2_cut.jsonl
+mv /tmp/odl_sweep_shard2_cut.jsonl /tmp/odl_sweep_shard2.jsonl
+./target/release/odl-har sweep --config configs/sweep_smoke.toml --shard 2/2 --out /tmp/odl_sweep_shard2.jsonl --resume
+./target/release/odl-har merge --config configs/sweep_smoke.toml --out /tmp/odl_sweep_merged.jsonl \
+  /tmp/odl_sweep_shard2.jsonl /tmp/odl_sweep_shard1.jsonl
+cmp /tmp/odl_sweep_smoke.jsonl /tmp/odl_sweep_merged.jsonl
+./target/release/odl-har sweep --config configs/sweep_smoke.toml --shard 1/1 --out /tmp/odl_sweep_shard11.jsonl
+cmp /tmp/odl_sweep_smoke.jsonl /tmp/odl_sweep_shard11.jsonl
+# the bench_check gate's own fixture suite (no toolchain needed)
+../scripts/test_bench_check.sh
 echo "verify: OK"
