@@ -24,18 +24,56 @@
 //! Results go to `BENCH_sweep.json` (`ODL_BENCH_SWEEP_JSON` overrides);
 //! `scripts/bench_check.sh` gates `memo_speedup` / `edge_memo_speedup`
 //! regressions > 10 %, `resume_overhead_frac` (a resumed-complete run
-//! must be ~free), and the absolute edge-memo gates (`edge_hit_rate` ≥
+//! must be ~free), the absolute edge-memo gates (`edge_hit_rate` ≥
 //! 0.5, and `edge_memo_speedup` ≥ 0.9 — the memo must be a wall-clock
-//! win, floor held with the shared 10 % noise tolerance).
+//! win, floor held with the shared 10 % noise tolerance), and
+//! `supervise_overhead_frac` ≤ 0.15 — the fault-free self-healing
+//! supervisor (`--shard auto`: child processes + heartbeat polling +
+//! auto-merge, see `coordinator::supervise`) must cost ≤ 15 % over a
+//! single-process run of the same grid.
 
+use odl_har::config;
 use odl_har::coordinator::fleet::{DetectorKind, Fleet, FleetConfig, Scenario};
+use odl_har::coordinator::supervise::{
+    shard_out_paths, supervise, ProcessLauncher, SuperviseConfig, SuperviseStatus,
+};
 use odl_har::coordinator::sweep::{
-    merge_shard_files, resume_sweep_to_file, run_shard_to_file, run_sweep, run_sweep_to_file,
-    ShardSpec, SweepSpec,
+    merge_shard_files, resume_sweep_to_file, run_planned_to_file, run_shard_to_file, run_sweep,
+    run_sweep_to_file, ShardSpec, SweepSpec,
 };
 use odl_har::data::SynthConfig;
 use odl_har::util::bench::{bench, fast_mode};
 use odl_har::util::json::{obj, Json};
+
+/// The supervised grid must be TOML-declared: child processes re-derive
+/// the spec (and grid hash) from this config file, so every knob has to
+/// round-trip through the config parser. 8 cells over one pinned data
+/// build.
+fn supervise_toml() -> String {
+    format!(
+        "[fleet]\n\
+         n_edges = 2\n\
+         n_hidden = 24\n\
+         horizon_s = {}\n\
+         drift_at_s = 20\n\
+         train_target = 40\n\
+         seed = 1\n\
+         data_seed = 190\n\
+         [data]\n\
+         n_features = 32\n\
+         n_classes = 4\n\
+         samples_per_cell = 5\n\
+         [sweep]\n\
+         seeds = [1, 2]\n\
+         thetas = [\"auto\", 0.2]\n\
+         edge_counts = [2]\n\
+         detectors = [\"oracle\"]\n\
+         n_hiddens = [24]\n\
+         loss_probs = [0.0, 0.2]\n\
+         teacher_errors = [0.0]\n",
+        if fast_mode() { 60 } else { 120 }
+    )
+}
 
 fn base_scenario() -> Scenario {
     Scenario {
@@ -293,8 +331,80 @@ fn main() {
         r_edge_off.mean_s, r_edge_on.mean_s
     );
 
+    // supervise overhead: the fault-free `--shard auto` path (2 child
+    // processes, heartbeat polling, auto-merge) vs a single-process run
+    // of the same TOML-declared grid with the same total worker budget
+    let sdir = std::env::temp_dir().join("odl_har_bench_supervise");
+    std::fs::create_dir_all(&sdir).expect("temp dir");
+    let toml_text = supervise_toml();
+    let cfg_path = sdir.join("grid.toml");
+    std::fs::write(&cfg_path, &toml_text).expect("write config");
+    let mut sspec = config::sweep_from_str(&toml_text).expect("bench grid must parse");
+    sspec.workers = workers;
+    let splan = sspec.plan();
+    let n_sup_cells = splan.cells.len();
+    let single_path = sdir.join("single.jsonl");
+    run_planned_to_file(&sspec, &splan, &single_path).expect("single-process run failed");
+    let single_bytes = std::fs::read(&single_path).expect("read single-process results");
+    let scfg = SuperviseConfig {
+        shards: 2,
+        workers_per_shard: (workers / 2).max(1),
+        poll_ms: 5,
+        ..Default::default()
+    };
+    let launcher = ProcessLauncher {
+        exe: std::path::PathBuf::from(env!("CARGO_BIN_EXE_odl-har")),
+        config_path: cfg_path.clone(),
+    };
+    let merged = sdir.join("merged.jsonl");
+    let shard_files = shard_out_paths(&merged, 2);
+    // contract before timing: a supervised run completes and its merge is
+    // byte-identical to the single-process file
+    let run_supervised = || {
+        for p in &shard_files {
+            let _ = std::fs::remove_file(p);
+        }
+        let outcome =
+            supervise(&splan, &scfg, &launcher, &shard_files, Some(&merged)).expect("supervise");
+        assert_eq!(
+            outcome.status,
+            SuperviseStatus::Complete,
+            "fault-free supervision must complete: {:?}",
+            outcome.shards
+        );
+    };
+    run_supervised();
+    assert_eq!(
+        std::fs::read(&merged).expect("read merged results"),
+        single_bytes,
+        "supervised auto-merge must be byte-identical to the single-process run"
+    );
+    println!("  supervise contract holds: 2 children auto-merge byte-identical");
+    let r_sup_single = bench(
+        &format!("supervise baseline  {n_sup_cells:>2} cells"),
+        1,
+        iters,
+        || {
+            std::hint::black_box(
+                run_planned_to_file(&sspec, &splan, &single_path).expect("run failed"),
+            );
+        },
+    );
+    let r_sup = bench(
+        &format!("supervise 2 shards  {n_sup_cells:>2} cells"),
+        1,
+        iters,
+        run_supervised,
+    );
+    let supervise_overhead_frac = r_sup.mean_s / r_sup_single.mean_s.max(1e-9) - 1.0;
+    println!(
+        "  -> supervised run: {:.3}s vs {:.3}s single-process = {:+.3} overhead frac",
+        r_sup.mean_s, r_sup_single.mean_s, supervise_overhead_frac
+    );
+    let _ = std::fs::remove_dir_all(&sdir);
+
     let out = obj(vec![
-        ("schema", Json::Str("bench_sweep/v3".into())),
+        ("schema", Json::Str("bench_sweep/v4".into())),
         ("fast_mode", Json::Bool(fast_mode())),
         ("workers", Json::Num(workers as f64)),
         ("cells", Json::Num(n_cells as f64)),
@@ -327,6 +437,13 @@ fn main() {
         ("edge_off_s", Json::Num(r_edge_off.mean_s)),
         ("edge_memo_s", Json::Num(r_edge_on.mean_s)),
         ("edge_memo_speedup", Json::Num(edge_memo_speedup)),
+        ("supervise_cells", Json::Num(n_sup_cells as f64)),
+        ("supervise_single_s", Json::Num(r_sup_single.mean_s)),
+        ("supervise_s", Json::Num(r_sup.mean_s)),
+        (
+            "supervise_overhead_frac",
+            Json::Num(supervise_overhead_frac),
+        ),
     ]);
     let path =
         std::env::var("ODL_BENCH_SWEEP_JSON").unwrap_or_else(|_| "BENCH_sweep.json".into());

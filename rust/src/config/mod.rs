@@ -8,6 +8,7 @@
 pub mod toml;
 
 use crate::coordinator::fleet::{DetectorKind, Scenario};
+use crate::coordinator::supervise::SuperviseConfig;
 use crate::coordinator::sweep::SweepSpec;
 use crate::coordinator::ChannelConfig;
 use crate::data::SynthConfig;
@@ -356,6 +357,88 @@ pub fn sweep_from_str(text: &str) -> Result<SweepSpec> {
     Ok(spec)
 }
 
+/// The keys the optional `[supervise]` section understands (knobs for
+/// `odl-har sweep --shard auto`; see
+/// `coordinator::supervise::SuperviseConfig`). Same contract as
+/// [`SWEEP_KEYS`]: a present key outside this list is a rejected typo.
+/// Per-run knobs (fault spec, workers) stay CLI-only, and CLI flags
+/// override these values.
+const SUPERVISE_KEYS: &[&str] = &[
+    "shards",
+    "retry_budget",
+    "heartbeat_timeout_s",
+    "backoff_base_ms",
+    "backoff_cap_ms",
+    "poll_ms",
+];
+
+/// Parse the optional `[supervise]` section onto the default
+/// [`SuperviseConfig`]:
+///
+/// ```toml
+/// [supervise]
+/// shards = 4                 # 0 = auto (one per core)
+/// retry_budget = 2           # relaunches per shard before quarantine
+/// heartbeat_timeout_s = 60.0 # kill a child whose file stops growing
+/// backoff_base_ms = 250      # first relaunch delay (doubles, capped)
+/// backoff_cap_ms = 5000
+/// poll_ms = 50
+/// ```
+pub fn supervise_from_str(text: &str) -> Result<SuperviseConfig> {
+    let doc = TomlDoc::parse(text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+    for key in doc.section_keys("supervise") {
+        ensure!(
+            SUPERVISE_KEYS.contains(&key),
+            "unknown [supervise] key '{key}' — valid keys: {}",
+            SUPERVISE_KEYS.join(", ")
+        );
+    }
+    let mut cfg = SuperviseConfig::default();
+    // present-but-wrong-typed values must error, not silently keep the
+    // default — same rule as the [sweep] section
+    let uint = |key: &str| -> Result<Option<u64>> {
+        match doc.get("supervise", key) {
+            None => Ok(None),
+            Some(TomlValue::Int(i)) if *i >= 0 => Ok(Some(*i as u64)),
+            Some(other) => {
+                bail!("supervise.{key} must be a non-negative integer, got {other:?}")
+            }
+        }
+    };
+    if let Some(v) = uint("shards")? {
+        cfg.shards = v as usize;
+    }
+    if let Some(v) = uint("retry_budget")? {
+        cfg.retry_budget = v as usize;
+    }
+    if let Some(v) = uint("backoff_base_ms")? {
+        cfg.backoff_base_ms = v;
+    }
+    if let Some(v) = uint("backoff_cap_ms")? {
+        cfg.backoff_cap_ms = v;
+    }
+    if let Some(v) = uint("poll_ms")? {
+        cfg.poll_ms = v;
+    }
+    match doc.get("supervise", "heartbeat_timeout_s") {
+        None => {}
+        Some(TomlValue::Float(f)) if *f > 0.0 => cfg.heartbeat_timeout_s = *f,
+        Some(TomlValue::Int(i)) if *i > 0 => cfg.heartbeat_timeout_s = *i as f64,
+        Some(other) => {
+            bail!("supervise.heartbeat_timeout_s must be a positive number, got {other:?}")
+        }
+    }
+    Ok(cfg)
+}
+
+/// [`supervise_from_str`] over the sweep's config file (the section is
+/// optional — a config without `[supervise]` yields the defaults).
+pub fn supervise_from_file(path: &Path) -> Result<SuperviseConfig> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading config {}", path.display()))?;
+    supervise_from_str(&text)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -592,5 +675,44 @@ record_pca = true
         let cfg = ExperimentConfig::from_str("").unwrap().protocol;
         assert_eq!(cfg.n_hidden, 128);
         assert_eq!(cfg.trials, 20);
+    }
+
+    #[test]
+    fn supervise_section_parses_onto_defaults() {
+        // absent section = pure defaults
+        let cfg = supervise_from_str("[fleet]\nn_edges = 2\n").unwrap();
+        assert_eq!(cfg.shards, 0);
+        assert_eq!(cfg.retry_budget, 2);
+        assert!((cfg.heartbeat_timeout_s - 60.0).abs() < 1e-12);
+        assert_eq!((cfg.backoff_base_ms, cfg.backoff_cap_ms), (250, 5000));
+        assert_eq!(cfg.poll_ms, 50);
+
+        let cfg = supervise_from_str(
+            "[supervise]\nshards = 4\nretry_budget = 0\nheartbeat_timeout_s = 1.5\n\
+             backoff_base_ms = 10\nbackoff_cap_ms = 40\npoll_ms = 5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.retry_budget, 0);
+        assert!((cfg.heartbeat_timeout_s - 1.5).abs() < 1e-12);
+        assert_eq!((cfg.backoff_base_ms, cfg.backoff_cap_ms), (10, 40));
+        assert_eq!(cfg.poll_ms, 5);
+        // integer timeouts are accepted
+        let cfg = supervise_from_str("[supervise]\nheartbeat_timeout_s = 2\n").unwrap();
+        assert!((cfg.heartbeat_timeout_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn supervise_rejects_unknown_keys_and_bad_types() {
+        let err = supervise_from_str("[supervise]\nretry_budgets = 3\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown [supervise] key 'retry_budgets'"), "{err}");
+        // wrong types must error, not silently keep the default
+        assert!(supervise_from_str("[supervise]\nshards = \"auto\"\n").is_err());
+        assert!(supervise_from_str("[supervise]\nretry_budget = -1\n").is_err());
+        assert!(supervise_from_str("[supervise]\nheartbeat_timeout_s = 0\n").is_err());
+        assert!(supervise_from_str("[supervise]\nheartbeat_timeout_s = true\n").is_err());
+        assert!(supervise_from_str("[supervise]\npoll_ms = 1.5\n").is_err());
     }
 }

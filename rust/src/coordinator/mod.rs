@@ -22,15 +22,23 @@
 //! per-`(data, seed, n_hidden)` provisioned edge cores) memoized,
 //! lazily built, dropped at their last-use cell, and resumable into an
 //! existing results file. Grids also fan out across *processes*:
-//! `odl-har sweep --shard I/N` runs an artifact-locality-aware slice of
-//! the grid, and `odl-har merge` recombines a complete shard set into a
-//! file byte-identical to a single-process run. Every in-process fan-out
-//! rides the shared deterministic executor in [`crate::util::parallel`].
+//! `odl-har sweep --shard I/N` runs an artifact-locality-aware,
+//! cost-weighted slice of the grid, and `odl-har merge` recombines a
+//! complete shard set into a file byte-identical to a single-process
+//! run. Every in-process fan-out rides the shared deterministic executor
+//! in [`crate::util::parallel`]. [`supervise`] closes the loop for
+//! unattended studies: `odl-har sweep --shard auto[:N]` launches one
+//! child process per shard, watches each through a byte-growth
+//! heartbeat, relaunches crashed or hung children with bounded
+//! exponential backoff onto the existing `--resume` path, quarantines
+//! shards that exhaust their retry budget, and auto-merges when the
+//! shard set completes — see `rust/RELIABILITY.md` for the fault model.
 
 pub mod channel;
 pub mod edge;
 pub mod fleet;
 pub mod metrics;
+pub mod supervise;
 pub mod sweep;
 pub mod teacher;
 
@@ -38,6 +46,10 @@ pub use channel::{Channel, ChannelConfig};
 pub use edge::{EdgeConfig, EdgeDevice, Mode, StepAction};
 pub use fleet::{Fleet, FleetConfig, ProvisionArtifacts, Scenario};
 pub use metrics::{EdgeMetrics, FleetReport};
+pub use supervise::{
+    shard_out_paths, supervise, Launcher, ProcessLauncher, ShardReport, SuperviseConfig,
+    SuperviseOutcome, SuperviseStatus, ThreadLauncher,
+};
 pub use sweep::{
     MergeOutcome, ResumeOutcome, ShardSpec, SweepOutcome, SweepPlan, SweepSpec, SweepStats,
 };

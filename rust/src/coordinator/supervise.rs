@@ -1,0 +1,816 @@
+//! Self-healing shard supervisor — `odl-har sweep --shard auto[:N]`.
+//!
+//! [`supervise`] turns the manual shard/merge workflow (PR 5) into an
+//! unattended one: it launches one `sweep --shard I/N --resume` child per
+//! shard (cost-weighted slices via
+//! [`SweepPlan::cost_shard_ranges`]), watches each child's results file,
+//! and recombines the finished shard set with the byte-identical merge.
+//! The supervisor adds **zero** bytes of its own to any results stream —
+//! children own their files end to end, so the merged output is
+//! byte-identical to an undisturbed single-process run no matter how
+//! many crashes, hangs, or retries happened along the way.
+//!
+//! # Failure handling
+//!
+//! - **Liveness**: the shard's streaming results rows double as its
+//!   heartbeat — any byte growth of the shard file counts as progress.
+//!   A child whose file stops growing for `heartbeat_timeout_s` is
+//!   presumed hung, killed, and relaunched.
+//! - **Crashes**: a child that exits nonzero, dies on a signal, or exits
+//!   zero with an incomplete stream is relaunched. Every relaunch goes
+//!   through the existing `--resume` path, so it continues from the last
+//!   durable row rather than starting over.
+//! - **Backoff + quarantine**: relaunches back off exponentially
+//!   (`backoff_base_ms << (attempt-1)`, capped at `backoff_cap_ms`). A
+//!   shard that exhausts `retry_budget` relaunches is **quarantined**:
+//!   the study keeps going for the other shards and the supervisor
+//!   reports the failure structurally ([`ShardReport`]) instead of
+//!   aborting everything.
+//! - **Exit status**: [`SuperviseStatus`] distinguishes `Complete` (all
+//!   shards done, merge published — exit 0), `Degraded` (some shards
+//!   quarantined, merge skipped — exit 2), and `Failed` (every shard
+//!   quarantined, or the final merge itself failed — exit 3).
+//!
+//! Completion is never taken on faith: a shard counts as done only when
+//! [`shard_stream_complete`] revalidates its file (header, row count,
+//! per-row cell indices, no error rows) — a child exiting 0 with a
+//! wounded stream is treated as a crash.
+//!
+//! # Launchers
+//!
+//! The supervisor is generic over a [`Launcher`] so the retry/heartbeat
+//! logic is testable without processes. [`ProcessLauncher`] is the real
+//! one (spawns `odl-har sweep` children — kill means SIGKILL);
+//! [`ThreadLauncher`] runs shards on in-process threads (used by unit
+//! tests and useful for library callers; threads cannot be killed, so
+//! hang faults need the process launcher). Deterministic fault injection
+//! ([`FaultPlan`], `--inject-faults`) threads through both; see
+//! `rust/RELIABILITY.md` for the fault model and replayability story.
+
+use super::sweep::{
+    merge_shard_files, resume_shard_to_file_with_faults, shard_stream_complete, MergeOutcome,
+    ShardSpec, SweepPlan, SweepSpec,
+};
+use crate::util::faults::FaultPlan;
+use anyhow::{ensure, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Supervisor knobs (CLI flags and the `[supervise]` TOML section; see
+/// `crate::config`). Defaults are production-shaped; tests shrink the
+/// timing knobs.
+#[derive(Clone, Debug)]
+pub struct SuperviseConfig {
+    /// Shard count requested on the CLI (`--shard auto:N`); `0` means
+    /// auto (resolved against cores and grid size by the caller — the
+    /// supervisor itself takes the count from the shard path list).
+    pub shards: usize,
+    /// `--workers` forwarded to each child process.
+    pub workers_per_shard: usize,
+    /// Relaunches allowed per shard after its first attempt; exhausting
+    /// the budget quarantines the shard.
+    pub retry_budget: usize,
+    /// Kill a child whose results file has not grown for this long.
+    pub heartbeat_timeout_s: f64,
+    /// First relaunch delay; doubles per relaunch.
+    pub backoff_base_ms: u64,
+    /// Ceiling on the relaunch delay.
+    pub backoff_cap_ms: u64,
+    /// Supervisor poll interval.
+    pub poll_ms: u64,
+    /// `--inject-faults` spec forwarded to children (chaos testing).
+    pub fault_spec: Option<String>,
+    /// Number of leading attempts per shard that carry the fault spec;
+    /// later relaunches run clean. The default (1) models "the fault
+    /// happened once"; raise it to keep a shard failing through retries.
+    pub fault_attempts: usize,
+}
+
+impl Default for SuperviseConfig {
+    fn default() -> Self {
+        SuperviseConfig {
+            shards: 0,
+            workers_per_shard: 1,
+            retry_budget: 2,
+            heartbeat_timeout_s: 60.0,
+            backoff_base_ms: 250,
+            backoff_cap_ms: 5000,
+            poll_ms: 50,
+            fault_spec: None,
+            fault_attempts: 1,
+        }
+    }
+}
+
+/// Terminal classification of a supervised run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SuperviseStatus {
+    /// Every shard completed; the merge (when requested) was published.
+    Complete,
+    /// Some shards quarantined — the merge is skipped (it would not be
+    /// byte-complete), but the surviving shard files are durable and a
+    /// later `--shard auto` run resumes only the quarantined slices.
+    Degraded,
+    /// Every shard quarantined, or the final merge itself failed.
+    Failed,
+}
+
+impl SuperviseStatus {
+    /// Process exit code contract: 0 complete / 2 degraded / 3 failed
+    /// (1 is left to generic CLI errors).
+    pub fn exit_code(self) -> i32 {
+        match self {
+            SuperviseStatus::Complete => 0,
+            SuperviseStatus::Degraded => 2,
+            SuperviseStatus::Failed => 3,
+        }
+    }
+}
+
+/// Per-shard structured outcome.
+#[derive(Clone, Debug)]
+pub struct ShardReport {
+    /// 1-based shard index.
+    pub index: usize,
+    /// Launches performed (0 if the shard file was already complete).
+    pub attempts: usize,
+    /// True if the shard exhausted its retry budget.
+    pub quarantined: bool,
+    /// The most recent failure, if any attempt failed.
+    pub last_error: Option<String>,
+    /// The shard's results file.
+    pub path: PathBuf,
+}
+
+/// What [`supervise`] hands back. Always `Ok` once the state machine
+/// settles — degraded/failed studies are data, not `Err` (the CLI maps
+/// [`SuperviseStatus::exit_code`]).
+#[derive(Debug)]
+pub struct SuperviseOutcome {
+    pub status: SuperviseStatus,
+    pub shards: Vec<ShardReport>,
+    /// The merge result when one was requested and published.
+    pub merged: Option<MergeOutcome>,
+    /// Why the merge failed, when it did.
+    pub merge_error: Option<String>,
+}
+
+/// A running shard attempt, as the supervisor sees it.
+pub trait ShardChild {
+    /// `Ok(None)` while running; `Ok(Some(success))` once exited.
+    fn poll_exit(&mut self) -> Result<Option<bool>>;
+    /// Best-effort terminate (SIGKILL for processes; threads cannot be
+    /// killed and implement this as a no-op).
+    fn kill(&mut self);
+}
+
+/// Strategy for launching one shard attempt.
+pub trait Launcher {
+    type Child: ShardChild;
+    /// Start attempt `attempt` (0-based) of `shard`, writing to `out`.
+    fn launch(
+        &self,
+        shard: ShardSpec,
+        out: &Path,
+        attempt: usize,
+        cfg: &SuperviseConfig,
+    ) -> Result<Self::Child>;
+}
+
+/// The real launcher: one `odl-har sweep --shard I/N --resume` child
+/// process per attempt.
+pub struct ProcessLauncher {
+    /// Path to the `odl-har` binary (tests use `CARGO_BIN_EXE_odl-har`).
+    pub exe: PathBuf,
+    /// `--config` forwarded to each child, so the child re-derives the
+    /// exact same spec (and therefore grid hash) as the supervisor.
+    pub config_path: PathBuf,
+}
+
+pub struct ProcessChild {
+    child: Option<std::process::Child>,
+}
+
+impl Launcher for ProcessLauncher {
+    type Child = ProcessChild;
+
+    fn launch(
+        &self,
+        shard: ShardSpec,
+        out: &Path,
+        attempt: usize,
+        cfg: &SuperviseConfig,
+    ) -> Result<ProcessChild> {
+        let mut cmd = std::process::Command::new(&self.exe);
+        cmd.arg("sweep")
+            .arg("--config")
+            .arg(&self.config_path)
+            .arg("--shard")
+            .arg(format!("{}/{}", shard.index, shard.of))
+            .arg("--out")
+            .arg(out)
+            .arg("--resume")
+            .arg("--workers")
+            .arg(cfg.workers_per_shard.to_string())
+            .stdin(std::process::Stdio::null())
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::inherit());
+        if let Some(spec) = &cfg.fault_spec {
+            if attempt < cfg.fault_attempts {
+                cmd.arg("--inject-faults").arg(spec);
+            }
+        }
+        let child = cmd
+            .spawn()
+            .with_context(|| format!("spawning shard {}/{} child", shard.index, shard.of))?;
+        Ok(ProcessChild { child: Some(child) })
+    }
+}
+
+impl ShardChild for ProcessChild {
+    fn poll_exit(&mut self) -> Result<Option<bool>> {
+        let Some(child) = self.child.as_mut() else {
+            return Ok(Some(false));
+        };
+        match child.try_wait().context("polling shard child")? {
+            None => Ok(None),
+            Some(status) => {
+                self.child = None;
+                Ok(Some(status.success()))
+            }
+        }
+    }
+
+    fn kill(&mut self) {
+        if let Some(mut child) = self.child.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+impl Drop for ProcessChild {
+    /// Never leak a child past the supervisor (e.g. on panic/`?`).
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// In-process launcher: each attempt is
+/// [`resume_shard_to_file_with_faults`] on a std thread. Used by the
+/// unit tests and usable by library callers that want supervision
+/// without process fan-out. `kill` is a no-op (std threads cannot be
+/// terminated), so hang-style faults require [`ProcessLauncher`].
+pub struct ThreadLauncher {
+    spec: Arc<SweepSpec>,
+}
+
+impl ThreadLauncher {
+    pub fn new(spec: Arc<SweepSpec>) -> Self {
+        ThreadLauncher { spec }
+    }
+}
+
+pub struct ThreadChild {
+    handle: Option<std::thread::JoinHandle<bool>>,
+}
+
+impl Launcher for ThreadLauncher {
+    type Child = ThreadChild;
+
+    fn launch(
+        &self,
+        shard: ShardSpec,
+        out: &Path,
+        attempt: usize,
+        cfg: &SuperviseConfig,
+    ) -> Result<ThreadChild> {
+        let faults = match &cfg.fault_spec {
+            Some(spec) if attempt < cfg.fault_attempts => {
+                FaultPlan::parse(spec)?.for_shard(shard.index)
+            }
+            _ => FaultPlan::default(),
+        };
+        let spec = Arc::clone(&self.spec);
+        let out = out.to_path_buf();
+        let handle = std::thread::Builder::new()
+            .name(format!("shard-{}of{}", shard.index, shard.of))
+            .spawn(move || {
+                // the plan is cheap to re-derive and keeps the closure
+                // free of borrowed supervisor state
+                let plan = spec.plan();
+                match resume_shard_to_file_with_faults(&spec, &plan, shard, &out, &faults) {
+                    Ok(_) => true,
+                    Err(e) => {
+                        eprintln!("shard {}/{} attempt failed: {e:#}", shard.index, shard.of);
+                        false
+                    }
+                }
+            })
+            .context("spawning shard thread")?;
+        Ok(ThreadChild {
+            handle: Some(handle),
+        })
+    }
+}
+
+impl ShardChild for ThreadChild {
+    fn poll_exit(&mut self) -> Result<Option<bool>> {
+        let Some(handle) = self.handle.as_ref() else {
+            return Ok(Some(false));
+        };
+        if !handle.is_finished() {
+            return Ok(None);
+        }
+        let handle = self.handle.take().expect("handle vanished");
+        // a panicked shard thread is a failed attempt, not a supervisor
+        // crash (cell panics are already caught inside the pool; this
+        // only fires for panics outside run_cells)
+        Ok(Some(handle.join().unwrap_or(false)))
+    }
+
+    fn kill(&mut self) {}
+}
+
+/// The canonical shard-file siblings for an output path: `a/b.jsonl` →
+/// `a/b.shard{I}of{N}.jsonl` — the same naming the `sweep --shard I/N`
+/// CLI defaults to, so supervised and manual runs share files.
+pub fn shard_out_paths(out: &Path, of: usize) -> Vec<PathBuf> {
+    let stem = out
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("sweep")
+        .to_string();
+    let ext = out
+        .extension()
+        .and_then(|s| s.to_str())
+        .unwrap_or("jsonl")
+        .to_string();
+    (1..=of)
+        .map(|i| out.with_file_name(format!("{stem}.shard{i}of{of}.{ext}")))
+        .collect()
+}
+
+enum ShardState<C> {
+    Pending { attempt: usize, not_before: Instant },
+    Running { child: C, attempt: usize, last_len: u64, last_progress: Instant },
+    Done,
+    Quarantined,
+}
+
+fn file_len(path: &Path) -> u64 {
+    std::fs::metadata(path).map(|m| m.len()).unwrap_or(0)
+}
+
+/// Record a failed attempt and decide the shard's next state: backoff
+/// into another `Pending`, or `Quarantined` once the budget is spent.
+fn retire<C>(
+    report: &mut ShardReport,
+    cfg: &SuperviseConfig,
+    attempt: usize,
+    error: String,
+) -> ShardState<C> {
+    report.last_error = Some(error);
+    let next = attempt + 1;
+    if next > cfg.retry_budget {
+        report.quarantined = true;
+        return ShardState::Quarantined;
+    }
+    let backoff = cfg
+        .backoff_base_ms
+        .saturating_mul(1u64 << (next - 1).min(20))
+        .min(cfg.backoff_cap_ms);
+    ShardState::Pending {
+        attempt: next,
+        not_before: Instant::now() + Duration::from_millis(backoff),
+    }
+}
+
+/// Drive every shard of `plan` to completion (or quarantine) and then
+/// merge into `merged_out` (when given and no shard quarantined). One
+/// results file per entry of `shard_paths`; shard `i+1/N` owns
+/// `shard_paths[i]`. Shards whose file already passes
+/// [`shard_stream_complete`] are recognized without a launch, so a
+/// degraded study can be re-supervised to finish only its quarantined
+/// slices.
+pub fn supervise<L: Launcher>(
+    plan: &SweepPlan,
+    cfg: &SuperviseConfig,
+    launcher: &L,
+    shard_paths: &[PathBuf],
+    merged_out: Option<&Path>,
+) -> Result<SuperviseOutcome> {
+    let of = shard_paths.len();
+    ensure!(of >= 1, "supervise needs at least one shard path");
+    ensure!(
+        cfg.heartbeat_timeout_s > 0.0,
+        "heartbeat timeout must be positive"
+    );
+    let timeout = Duration::from_secs_f64(cfg.heartbeat_timeout_s);
+
+    let mut reports: Vec<ShardReport> = (0..of)
+        .map(|s| ShardReport {
+            index: s + 1,
+            attempts: 0,
+            quarantined: false,
+            last_error: None,
+            path: shard_paths[s].clone(),
+        })
+        .collect();
+    let mut states: Vec<ShardState<L::Child>> = (0..of)
+        .map(|_| ShardState::Pending {
+            attempt: 0,
+            not_before: Instant::now(),
+        })
+        .collect();
+
+    loop {
+        let mut settled = true;
+        for s in 0..of {
+            if matches!(states[s], ShardState::Done | ShardState::Quarantined) {
+                continue;
+            }
+            settled = false;
+            let shard = ShardSpec { index: s + 1, of };
+            let path = &shard_paths[s];
+            let state = std::mem::replace(&mut states[s], ShardState::Quarantined);
+            states[s] = match state {
+                ShardState::Pending { attempt, not_before } => {
+                    if Instant::now() < not_before {
+                        ShardState::Pending { attempt, not_before }
+                    } else if shard_stream_complete(plan, shard, path) {
+                        // already durable (prior run, or a crash after
+                        // the stream finished) — no launch needed
+                        ShardState::Done
+                    } else {
+                        reports[s].attempts += 1;
+                        match launcher.launch(shard, path, attempt, cfg) {
+                            Ok(child) => ShardState::Running {
+                                child,
+                                attempt,
+                                last_len: file_len(path),
+                                last_progress: Instant::now(),
+                            },
+                            Err(e) => {
+                                retire(&mut reports[s], cfg, attempt, format!("launch: {e:#}"))
+                            }
+                        }
+                    }
+                }
+                ShardState::Running {
+                    mut child,
+                    attempt,
+                    mut last_len,
+                    mut last_progress,
+                } => match child.poll_exit() {
+                    Ok(Some(true)) if shard_stream_complete(plan, shard, path) => ShardState::Done,
+                    Ok(Some(true)) => retire(
+                        &mut reports[s],
+                        cfg,
+                        attempt,
+                        "child exited cleanly but its results stream is incomplete".to_string(),
+                    ),
+                    Ok(Some(false)) => retire(
+                        &mut reports[s],
+                        cfg,
+                        attempt,
+                        "child exited with a failure status".to_string(),
+                    ),
+                    Err(e) => {
+                        child.kill();
+                        retire(&mut reports[s], cfg, attempt, format!("poll: {e:#}"))
+                    }
+                    Ok(None) => {
+                        let len = file_len(path);
+                        if len > last_len {
+                            last_len = len;
+                            last_progress = Instant::now();
+                        }
+                        if last_progress.elapsed() >= timeout {
+                            child.kill();
+                            retire(
+                                &mut reports[s],
+                                cfg,
+                                attempt,
+                                format!(
+                                    "no heartbeat (results file static) for {:.1}s — killed",
+                                    cfg.heartbeat_timeout_s
+                                ),
+                            )
+                        } else {
+                            ShardState::Running {
+                                child,
+                                attempt,
+                                last_len,
+                                last_progress,
+                            }
+                        }
+                    }
+                },
+                done_or_quarantined => done_or_quarantined,
+            };
+        }
+        if settled {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(cfg.poll_ms.max(1)));
+    }
+
+    let quarantined = reports.iter().filter(|r| r.quarantined).count();
+    let (status, merged, merge_error) = if quarantined == 0 {
+        match merged_out {
+            None => (SuperviseStatus::Complete, None, None),
+            Some(out) => match merge_shard_files(plan, shard_paths, out) {
+                Ok(m) => (SuperviseStatus::Complete, Some(m), None),
+                Err(e) => (SuperviseStatus::Failed, None, Some(format!("{e:#}"))),
+            },
+        }
+    } else if quarantined == of {
+        (SuperviseStatus::Failed, None, None)
+    } else {
+        (SuperviseStatus::Degraded, None, None)
+    };
+    Ok(SuperviseOutcome {
+        status,
+        shards: reports,
+        merged,
+        merge_error,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fleet::{DetectorKind, Scenario};
+    use super::super::sweep::{resume_shard_to_file, run_planned_to_file};
+    use super::*;
+    use crate::data::SynthConfig;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    fn fixture_spec() -> SweepSpec {
+        let base = {
+            let mut b = Scenario {
+                n_edges: 2,
+                n_hidden: 16,
+                event_period_s: 1.0,
+                horizon_s: 40.0,
+                drift_at_s: 15.0,
+                train_target: 24,
+                synth: SynthConfig {
+                    n_features: 24,
+                    n_classes: 3,
+                    n_subjects: 30,
+                    samples_per_cell: 4,
+                    proto_sigma: 1.1,
+                    confuse_frac: 0.04,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            b.data_seed = Some(0x50BE);
+            b
+        };
+        SweepSpec {
+            seeds: vec![1, 2],
+            thetas: vec![None, Some(0.2)],
+            edge_counts: vec![2],
+            detectors: vec![DetectorKind::Oracle],
+            n_hiddens: vec![base.n_hidden],
+            loss_probs: vec![base.channel.loss_prob],
+            teacher_errors: vec![base.teacher_error],
+            workers: 2,
+            record_pca: false,
+            memo_edge_state: true,
+            base,
+        }
+    }
+
+    fn fast_cfg() -> SuperviseConfig {
+        SuperviseConfig {
+            shards: 2,
+            poll_ms: 2,
+            backoff_base_ms: 1,
+            backoff_cap_ms: 4,
+            ..Default::default()
+        }
+    }
+
+    fn setup(name: &str) -> (SweepSpec, SweepPlan, PathBuf, Vec<u8>) {
+        let spec = fixture_spec();
+        let plan = spec.plan();
+        let dir = std::env::temp_dir().join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let single = dir.join("single.jsonl");
+        run_planned_to_file(&spec, &plan, &single).unwrap();
+        let bytes = std::fs::read(&single).unwrap();
+        (spec, plan, dir, bytes)
+    }
+
+    #[test]
+    fn clean_supervised_run_completes_and_merges_byte_identically() {
+        let (spec, plan, dir, single) = setup("odl_har_supervise_clean_test");
+        let merged = dir.join("merged.jsonl");
+        let paths = shard_out_paths(&merged, 2);
+        let cfg = fast_cfg();
+        let launcher = ThreadLauncher::new(Arc::new(spec));
+        let out = supervise(&plan, &cfg, &launcher, &paths, Some(&merged)).unwrap();
+        assert_eq!(out.status, SuperviseStatus::Complete);
+        assert_eq!(out.status.exit_code(), 0);
+        assert!(out.merged.is_some());
+        assert!(out
+            .shards
+            .iter()
+            .all(|r| r.attempts == 1 && !r.quarantined && r.last_error.is_none()));
+        assert_eq!(std::fs::read(&merged).unwrap(), single);
+        // re-supervising a finished study recognizes the durable shards
+        // without a single launch and republishes the identical merge
+        let again = supervise(&plan, &cfg, &launcher, &paths, Some(&merged)).unwrap();
+        assert_eq!(again.status, SuperviseStatus::Complete);
+        assert!(again.shards.iter().all(|r| r.attempts == 0));
+        assert_eq!(std::fs::read(&merged).unwrap(), single);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_failure_is_retried_to_byte_identical_completion() {
+        let (spec, plan, dir, single) = setup("odl_har_supervise_retry_test");
+        let merged = dir.join("merged.jsonl");
+        let paths = shard_out_paths(&merged, 2);
+        let cfg = SuperviseConfig {
+            // both shards fail their first attempt at results slot 2,
+            // then retry clean and resume from the durable prefix
+            fault_spec: Some("0:ioerr@2".to_string()),
+            fault_attempts: 1,
+            ..fast_cfg()
+        };
+        let launcher = ThreadLauncher::new(Arc::new(spec));
+        let out = supervise(&plan, &cfg, &launcher, &paths, Some(&merged)).unwrap();
+        assert_eq!(out.status, SuperviseStatus::Complete);
+        for r in &out.shards {
+            assert_eq!(r.attempts, 2, "shard {} should fail once then heal", r.index);
+            assert!(!r.quarantined);
+            assert!(r.last_error.as_deref().unwrap().contains("failure status"));
+        }
+        assert_eq!(std::fs::read(&merged).unwrap(), single);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn exhausted_budget_quarantines_every_shard_and_reports_failed() {
+        let (spec, plan, dir, _single) = setup("odl_har_supervise_failed_test");
+        let merged = dir.join("merged.jsonl");
+        let paths = shard_out_paths(&merged, 2);
+        let cfg = SuperviseConfig {
+            fault_spec: Some("0:ioerr@1".to_string()),
+            fault_attempts: 99, // the fault never clears
+            retry_budget: 1,
+            ..fast_cfg()
+        };
+        let launcher = ThreadLauncher::new(Arc::new(spec));
+        let out = supervise(&plan, &cfg, &launcher, &paths, Some(&merged)).unwrap();
+        assert_eq!(out.status, SuperviseStatus::Failed);
+        assert_eq!(out.status.exit_code(), 3);
+        assert!(out.merged.is_none());
+        assert!(!merged.exists(), "a failed study must not publish a merge");
+        for r in &out.shards {
+            assert!(r.quarantined);
+            assert_eq!(r.attempts, 2); // first try + the one budgeted retry
+            assert!(r.last_error.is_some());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn single_quarantine_degrades_without_merging() {
+        let (spec, plan, dir, _single) = setup("odl_har_supervise_degraded_test");
+        let merged = dir.join("merged.jsonl");
+        let paths = shard_out_paths(&merged, 2);
+        let cfg = SuperviseConfig {
+            fault_spec: Some("0:ioerr@1#2".to_string()), // only shard 2
+            fault_attempts: 99,
+            retry_budget: 1,
+            ..fast_cfg()
+        };
+        let launcher = ThreadLauncher::new(Arc::new(spec));
+        let out = supervise(&plan, &cfg, &launcher, &paths, Some(&merged)).unwrap();
+        assert_eq!(out.status, SuperviseStatus::Degraded);
+        assert_eq!(out.status.exit_code(), 2);
+        assert!(out.merged.is_none() && !merged.exists());
+        assert!(!out.shards[0].quarantined && out.shards[0].attempts == 1);
+        assert!(out.shards[1].quarantined);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Scripted launcher for the pure supervisor logic (hangs, kills,
+    /// launch errors) that ThreadLauncher cannot express.
+    struct FakeLauncher {
+        spec: Arc<SweepSpec>,
+        plan: SweepPlan,
+        script: Mutex<std::collections::HashMap<usize, Vec<FakeAct>>>,
+        kills: Arc<AtomicUsize>,
+    }
+
+    #[derive(Clone, Copy)]
+    enum FakeAct {
+        CompleteOk,
+        FailExit,
+        Hang,
+    }
+
+    struct FakeChild {
+        exit: Option<bool>,
+        kills: Arc<AtomicUsize>,
+    }
+
+    impl Launcher for FakeLauncher {
+        type Child = FakeChild;
+        fn launch(
+            &self,
+            shard: ShardSpec,
+            out: &Path,
+            _attempt: usize,
+            _cfg: &SuperviseConfig,
+        ) -> Result<FakeChild> {
+            let act = {
+                let mut script = self.script.lock().unwrap();
+                let acts = script.entry(shard.index).or_default();
+                if acts.is_empty() {
+                    FakeAct::CompleteOk
+                } else {
+                    acts.remove(0)
+                }
+            };
+            let exit = match act {
+                FakeAct::CompleteOk => {
+                    resume_shard_to_file(&self.spec, &self.plan, shard, out)?;
+                    Some(true)
+                }
+                FakeAct::FailExit => Some(false),
+                FakeAct::Hang => None,
+            };
+            Ok(FakeChild {
+                exit,
+                kills: Arc::clone(&self.kills),
+            })
+        }
+    }
+
+    impl ShardChild for FakeChild {
+        fn poll_exit(&mut self) -> Result<Option<bool>> {
+            Ok(self.exit)
+        }
+        fn kill(&mut self) {
+            self.kills.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    #[test]
+    fn hung_child_is_killed_on_heartbeat_timeout_and_relaunched() {
+        let (spec, plan, dir, _single) = setup("odl_har_supervise_hang_test");
+        let merged = dir.join("merged.jsonl");
+        let paths = shard_out_paths(&merged, 2);
+        let kills = Arc::new(AtomicUsize::new(0));
+        let spec = Arc::new(spec);
+        let launcher = FakeLauncher {
+            spec: Arc::clone(&spec),
+            // plans are deterministic; re-deriving avoids a Clone bound
+            plan: spec.plan(),
+            script: Mutex::new(
+                [(1, vec![FakeAct::Hang]), (2, vec![FakeAct::FailExit])]
+                    .into_iter()
+                    .collect(),
+            ),
+            kills: Arc::clone(&kills),
+        };
+        let cfg = SuperviseConfig {
+            heartbeat_timeout_s: 0.05,
+            ..fast_cfg()
+        };
+        let out = supervise(&plan, &cfg, &launcher, &paths, Some(&merged)).unwrap();
+        assert_eq!(out.status, SuperviseStatus::Complete);
+        assert_eq!(kills.load(Ordering::SeqCst), 1, "the hung child is killed");
+        assert_eq!(out.shards[0].attempts, 2);
+        assert!(out.shards[0]
+            .last_error
+            .as_deref()
+            .unwrap()
+            .contains("no heartbeat"));
+        assert_eq!(out.shards[1].attempts, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shard_out_paths_name_canonical_siblings() {
+        let paths = shard_out_paths(Path::new("results/sweep.jsonl"), 3);
+        assert_eq!(
+            paths,
+            vec![
+                PathBuf::from("results/sweep.shard1of3.jsonl"),
+                PathBuf::from("results/sweep.shard2of3.jsonl"),
+                PathBuf::from("results/sweep.shard3of3.jsonl"),
+            ]
+        );
+    }
+}

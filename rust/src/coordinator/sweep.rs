@@ -54,12 +54,16 @@
 //!
 //! [`run_shard_to_file`] (`odl-har sweep --shard I/N`) runs one of `N`
 //! disjoint slices of the grid, so a big study can fan out across
-//! processes or hosts. [`SweepPlan::shard_ranges`] partitions the cell
-//! order into `N` contiguous ranges, snapping each cut to a `data_key`
-//! group boundary when one lies within half a shard of the even split —
-//! shards keep whole artifact groups whenever the grid has enough of
-//! them, so each shard's memo hit rate matches its slice and no shard
-//! rebuilds a neighbour's artifacts. A shard file is the same stream a
+//! processes or hosts. [`SweepPlan::cost_shard_ranges`] (the body behind
+//! [`SweepPlan::shard_ranges`]) partitions the cell order into `N`
+//! contiguous ranges by **estimated cell cost** (`n_edges × horizon` —
+//! the knobs that dominate a cell's wall clock), not by cell count, so a
+//! grid mixing big and small fleets still hands every shard a comparable
+//! amount of work. Each cut starts at the even *cost* split and snaps to
+//! a `data_key` group boundary when one lies within half a shard's cost
+//! of it — shards keep whole artifact groups whenever the grid has
+//! enough of them, so each shard's memo hit rate matches its slice and
+//! no shard rebuilds a neighbour's artifacts. A shard file is the same stream a
 //! full run writes — header, completed-cell rows carrying their
 //! **global** cell indices, stats trailer — except the header carries a
 //! `shard` annotation (`index`/`of`/`start`/`count`) and the trailer
@@ -77,12 +81,30 @@
 //! [`run_sweep_to_file`] over the same spec, from any complete shard
 //! set, in any argument order, for any `N`.
 //!
+//! # Failure domain
+//!
+//! The contract extends through failures (see `rust/RELIABILITY.md`):
+//! the prefix rewrite and the merge publish fsync their temp file **and
+//! its parent directory** around the rename, so a power loss cannot
+//! surface an empty or stale results file; the resume prefix scan reads
+//! raw bytes and treats a trailing line with a partial UTF-8 sequence or
+//! interleaved NULs (a torn write) as a discardable partial row; a
+//! worker-cell panic is caught per cell
+//! ([`crate::util::parallel::parallel_map_n_caught`]), retried once, and
+//! only then recorded as a structured error row — the pool survives. A
+//! [`FaultPlan`](crate::util::faults::FaultPlan) threads these failure
+//! paths deterministically through the `*_with_faults` entry points
+//! (`odl-har sweep --inject-faults`); the empty plan is a no-op. The
+//! shard supervisor ([`super::supervise`]) drives sharded runs through
+//! crash/hang/retry cycles on top of these primitives.
+//!
 //! Determinism contract: each cell's `FleetReport` is **bitwise
 //! identical** to the report of an individually constructed
 //! `Fleet::new(cfg).run()` for the same scenario — memoization, lazy
-//! builds, drop points, the worker pool, and resume are wall-clock/memory
-//! knobs, never numerics knobs. Asserted by the in-module tests and
-//! re-checked by `benches/bench_sweep.rs` before it times anything.
+//! builds, drop points, the worker pool, resume, and every injected or
+//! organic failure above are wall-clock/memory knobs, never numerics
+//! knobs. Asserted by the in-module tests and re-checked by
+//! `benches/bench_sweep.rs` before it times anything.
 
 use super::channel::ChannelConfig;
 use super::fleet::{
@@ -91,6 +113,7 @@ use super::fleet::{
 use super::metrics::FleetReport;
 use crate::data::Dataset;
 use crate::odl::OsElm;
+use crate::util::faults::{self, FaultKind, FaultPlan};
 use crate::util::json::{obj, Json};
 use crate::util::parallel;
 use crate::util::rng::hash_fold;
@@ -107,8 +130,12 @@ use std::sync::{Arc, Mutex};
 /// function of the spec; worker counts are wall-clock knobs and a resume
 /// may legitimately use a different count than the original run). v3
 /// added the shard annotation to sharded headers and the edge-state memo
-/// ledger (`edge_builds` / `edge_hits`) to the stats trailer.
-const SCHEMA: &str = "odl-har-sweep/v3";
+/// ledger (`edge_builds` / `edge_hits`) to the stats trailer. v4
+/// switched the shard partitioner to cost-weighted cuts — the stream
+/// layout is unchanged, but a shard header's `start`/`count` for a given
+/// grid can differ from v3's, so v3 shard files must not be resumed or
+/// merged under v4 semantics (the header byte-compare refuses them).
+const SCHEMA: &str = "odl-har-sweep/v4";
 
 /// A declared scenario grid. Every axis left at its one-element default
 /// degenerates to the base scenario's value, so a sweep with only
@@ -606,20 +633,42 @@ impl SweepPlan {
         lt
     }
 
+    /// Estimated execution cost of cell `i`: fleet size × simulated
+    /// horizon, the two knobs that dominate a cell's wall clock (every
+    /// edge steps through every simulated second). Only the *ratios*
+    /// matter to the partitioner, so the estimate being in arbitrary
+    /// units is fine; it must merely be deterministic.
+    pub fn cell_cost(&self, i: usize) -> u64 {
+        let (cell, sc) = &self.cells[i];
+        (cell.n_edges as u64).max(1) * (sc.horizon_s.max(1.0) as u64)
+    }
+
     /// Partition the cell order into `of` disjoint, contiguous,
-    /// artifact-locality-aware ranges (the `--shard I/N` split). Cut
-    /// points start at the even split and snap to the nearest `data_key`
-    /// group boundary within half an ideal shard, so shards keep whole
-    /// artifact groups whenever the grid has at least `of` of them —
-    /// each shard's memo hit rate then matches its slice, and no shard
-    /// rebuilds a neighbour's artifacts. Every cell lands in exactly one
-    /// range; the ranges concatenate to `0..cells.len()` in order (so
-    /// every shard's cell order is a subsequence of the global order);
-    /// `of = 1` returns the whole grid.
-    pub fn shard_ranges(&self, of: usize) -> Vec<Range<usize>> {
+    /// artifact-locality-aware ranges (the `--shard I/N` split),
+    /// balanced by [`Self::cell_cost`] rather than cell count — a grid
+    /// mixing 2-edge and 64-edge fleets hands every shard a comparable
+    /// amount of *work*, not a comparable number of cells. Cut points
+    /// start at the even cost split and snap to the nearest `data_key`
+    /// group boundary within half an ideal shard's cost, so shards keep
+    /// whole artifact groups whenever the grid has at least `of` of
+    /// them — each shard's memo hit rate then matches its slice, and no
+    /// shard rebuilds a neighbour's artifacts. Every cell lands in
+    /// exactly one range; the ranges concatenate to `0..cells.len()` in
+    /// order (so every shard's cell order is a subsequence of the global
+    /// order); `of = 1` returns the whole grid.
+    pub fn cost_shard_ranges(&self, of: usize) -> Vec<Range<usize>> {
         let n = self.cells.len();
         let of = of.max(1);
-        // artifact-group boundaries: the cut candidates
+        // prefix cost sums: w[i] = total cost of cells 0..i (u128 so a
+        // huge grid of huge fleets cannot overflow the running sum)
+        let mut w = Vec::with_capacity(n + 1);
+        w.push(0u128);
+        for i in 0..n {
+            let last = *w.last().expect("w starts non-empty");
+            w.push(last + self.cell_cost(i) as u128);
+        }
+        let total = w[n];
+        // artifact-group boundaries: the preferred cut candidates
         let mut bounds = vec![0usize];
         for i in 1..n {
             if self.cell_slots[i].0 != self.cell_slots[i - 1].0 {
@@ -630,26 +679,40 @@ impl SweepPlan {
         let mut cuts = Vec::with_capacity(of + 1);
         cuts.push(0usize);
         for k in 1..of {
-            let ideal = (k * n + of / 2) / of;
-            // snap to a group boundary when one is within half an ideal
-            // shard of the even split; otherwise cut mid-group (a single
-            // huge group must still split to keep the shards busy). Only
-            // boundaries strictly past the previous cut are candidates —
-            // two cuts snapping onto the same boundary would starve a
-            // shard while its neighbours carry double load.
-            let tol = n / (2 * of);
             let prev = *cuts.last().expect("cuts start non-empty");
-            let cut = bounds
-                .iter()
-                .copied()
-                .filter(|b| *b > prev)
-                .min_by_key(|b| b.abs_diff(ideal))
-                .filter(|b| b.abs_diff(ideal) <= tol)
-                .unwrap_or(ideal);
+            let cut = if total == 0 {
+                // degenerate zero-cost grid (n = 0): even cell-count split
+                (k * n + of / 2) / of
+            } else {
+                let target = (k as u128 * total + of as u128 / 2) / of as u128;
+                // snap to a group boundary when one is within half an
+                // ideal shard's cost of the even split; otherwise cut
+                // mid-group at the cell edge nearest the cost target (a
+                // single huge group must still split to keep the shards
+                // busy). Only boundaries strictly past the previous cut
+                // are candidates — two cuts snapping onto the same
+                // boundary would starve a shard while its neighbours
+                // carry double load.
+                let tol = total / (2 * of as u128);
+                let dist = |b: usize| w[b].abs_diff(target);
+                bounds
+                    .iter()
+                    .copied()
+                    .filter(|b| *b > prev)
+                    .min_by_key(|b| dist(*b))
+                    .filter(|b| dist(*b) <= tol)
+                    .unwrap_or_else(|| (prev + 1..=n).min_by_key(|b| dist(*b)).unwrap_or(n))
+            };
             cuts.push(cut.max(prev));
         }
         cuts.push(n);
         (0..of).map(|k| cuts[k]..cuts[k + 1]).collect()
+    }
+
+    /// [`Self::cost_shard_ranges`] — the one shard partition every
+    /// consumer (headers, resume, merge, the supervisor) agrees on.
+    pub fn shard_ranges(&self, of: usize) -> Vec<Range<usize>> {
+        self.cost_shard_ranges(of)
     }
 
     /// The cell range shard `shard` owns under this plan.
@@ -685,11 +748,15 @@ pub struct ResumeOutcome {
 }
 
 /// Re-orders out-of-order line completions so the output stream is written
-/// strictly in slot order regardless of worker scheduling.
+/// strictly in slot order regardless of worker scheduling. Carries the
+/// run's [`FaultPlan`]: write faults key on the *slot* a line drains
+/// into, so an injected tear/kill/ioerr lands at a deterministic stream
+/// position no matter how workers interleave.
 struct OrderedSink<W: Write> {
     next: usize,
     pending: BTreeMap<usize, String>,
     out: W,
+    faults: FaultPlan,
 }
 
 impl<W: Write> OrderedSink<W> {
@@ -704,17 +771,60 @@ impl<W: Write> OrderedSink<W> {
             next,
             pending: BTreeMap::new(),
             out,
+            faults: FaultPlan::default(),
         }
+    }
+
+    fn with_faults(mut self, faults: &FaultPlan) -> Self {
+        self.faults = faults.clone();
+        self
     }
 
     fn push(&mut self, index: usize, line: String) -> std::io::Result<()> {
         self.pending.insert(index, line);
         let mut wrote = false;
         while let Some(line) = self.pending.remove(&self.next) {
+            let fault = if self.faults.is_noop() {
+                None
+            } else {
+                self.faults.write_fault(self.next)
+            };
+            match fault {
+                Some(FaultKind::IoErr) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::Other,
+                        format!("injected I/O error at results slot {}", self.next),
+                    ));
+                }
+                Some(FaultKind::Tear) => {
+                    // torn write: a prefix of the correct bytes, no
+                    // newline, then die — resume must discard the partial
+                    // trailing line
+                    let bytes = line.as_bytes();
+                    let cut = (bytes.len() / 2).max(1);
+                    self.out.write_all(&bytes[..cut])?;
+                    self.out.flush()?;
+                    faults::die(&format!("torn write at results slot {}", self.next));
+                }
+                _ => {}
+            }
             self.out.write_all(line.as_bytes())?;
             self.out.write_all(b"\n")?;
             self.next += 1;
             wrote = true;
+            match fault {
+                // a "kill" lands after a fully flushed row — the
+                // in-process stand-in for an external SIGKILL between rows
+                Some(FaultKind::Kill) => {
+                    self.out.flush()?;
+                    faults::die(&format!("killed after results slot {}", self.next - 1));
+                }
+                Some(FaultKind::Hang) => {
+                    self.out.flush()?;
+                    faults::hang(&format!("hung after results slot {}", self.next - 1));
+                }
+                _ => {}
+            }
         }
         // flush only when a line actually drained — keeps tail -f
         // streaming without paying a syscall for buffered-only pushes
@@ -826,7 +936,7 @@ fn trailer_json(stats: &SweepStats) -> Json {
 pub fn run_sweep(spec: &SweepSpec) -> Result<SweepOutcome> {
     let plan = spec.plan();
     let n = plan.cells.len();
-    let reports = run_cells::<std::io::Sink>(spec, &plan, 0..n, 0, None)?;
+    let reports = run_cells::<std::io::Sink>(spec, &plan, 0..n, 0, None, &FaultPlan::default())?;
     Ok(SweepOutcome {
         reports,
         stats: plan.stats,
@@ -860,14 +970,28 @@ pub fn run_shard_to_file(
     shard: ShardSpec,
     path: &Path,
 ) -> Result<SweepOutcome> {
+    run_shard_to_file_with_faults(spec, plan, shard, path, &FaultPlan::default())
+}
+
+/// [`run_shard_to_file`] with a [`FaultPlan`] threaded through the
+/// results sink and the cell pool (`odl-har sweep --inject-faults`).
+/// The empty plan is a no-op; with faults the run may abort, hang, or
+/// fail by design — recovery is resume's (and the supervisor's) job.
+pub fn run_shard_to_file_with_faults(
+    spec: &SweepSpec,
+    plan: &SweepPlan,
+    shard: ShardSpec,
+    path: &Path,
+    faults: &FaultPlan,
+) -> Result<SweepOutcome> {
     let range = plan.shard_range(shard)?;
     let stats = plan.range_stats(range.clone());
-    let mut sink = OrderedSink::new(create_results_file(path)?);
+    let mut sink = OrderedSink::new(create_results_file(path)?).with_faults(faults);
     // header occupies slot 0; the slice's cell i lands in slot
     // i - range.start + 1
     sink.push(0, header_json(plan, shard).to_string())?;
     let sink = Mutex::new(sink);
-    let reports = run_cells(spec, plan, range.clone(), range.start, Some(&sink))?;
+    let reports = run_cells(spec, plan, range.clone(), range.start, Some(&sink), faults)?;
     let mut sink = sink.into_inner().expect("sweep sink poisoned");
     sink.push(range.len() + 1, trailer_json(&stats).to_string())?;
     Ok(SweepOutcome { reports, stats })
@@ -901,24 +1025,41 @@ pub fn resume_shard_to_file(
     shard: ShardSpec,
     path: &Path,
 ) -> Result<ResumeOutcome> {
+    resume_shard_to_file_with_faults(spec, plan, shard, path, &FaultPlan::default())
+}
+
+/// [`resume_shard_to_file`] with a [`FaultPlan`] threaded through the
+/// appended rows' sink and the cell pool (see
+/// [`run_shard_to_file_with_faults`]). The prefix scan and rewrite are
+/// never faulted: they are the recovery path itself.
+pub fn resume_shard_to_file_with_faults(
+    spec: &SweepSpec,
+    plan: &SweepPlan,
+    shard: ShardSpec,
+    path: &Path,
+    faults: &FaultPlan,
+) -> Result<ResumeOutcome> {
     let range = plan.shard_range(shard)?;
     let count = range.len();
     let stats = plan.range_stats(range.clone());
-    let text = if path.exists() {
-        std::fs::read_to_string(path)
-            .with_context(|| format!("reading results file {}", path.display()))?
+    // Raw bytes, not read_to_string: a torn write can leave a partial
+    // multi-byte UTF-8 sequence (or NUL garbage) in the trailing line,
+    // and that must read as "discardable partial row", never abort the
+    // resume with a decode error.
+    let bytes = if path.exists() {
+        std::fs::read(path).with_context(|| format!("reading results file {}", path.display()))?
     } else {
-        String::new()
+        Vec::new()
     };
     // Complete lines only: a kill mid-write can leave a trailing partial
     // line, which resume must discard, never trust. split('\n') makes the
-    // final element either "" (text ended with a newline) or the partial
-    // line — pop it either way.
-    let mut lines: Vec<&str> = text.split('\n').collect();
+    // final element either "" (the bytes ended with a newline) or the
+    // partial line — pop it either way.
+    let mut lines: Vec<&[u8]> = bytes.split(|&b| b == b'\n').collect();
     lines.pop();
     if lines.is_empty() {
         // missing, empty, or truncated-to-nothing: a fresh full run
-        let outcome = run_shard_to_file(spec, plan, shard, path)?;
+        let outcome = run_shard_to_file_with_faults(spec, plan, shard, path, faults)?;
         return Ok(ResumeOutcome {
             skipped: 0,
             ran: count,
@@ -928,18 +1069,24 @@ pub fn resume_shard_to_file(
     }
     let header = header_json(plan, shard).to_string();
     ensure!(
-        lines[0] == header,
+        lines[0] == header.as_bytes(),
         "refusing to resume {}: its header does not match this spec \
          (different grid, shard split, schema version, or engine revision)",
         path.display()
     );
-    // The longest valid prefix of completed cell rows. Error rows and
-    // anything after the first gap are re-run.
+    // The longest valid prefix of completed cell rows. Error rows, lines
+    // that are not valid UTF-8 (torn multi-byte sequences), lines that
+    // are not valid JSON (interleaved NULs), and anything after the
+    // first gap are re-run.
     let mut done = 0usize;
-    for line in &lines[1..] {
+    for raw in &lines[1..] {
         if done >= count {
             break;
         }
+        let line = match std::str::from_utf8(raw) {
+            Ok(line) => line,
+            Err(_) => break,
+        };
         let row = match Json::parse(line) {
             Ok(row) => row,
             Err(_) => break,
@@ -957,7 +1104,7 @@ pub fn resume_shard_to_file(
     // byte-identical post-condition
     if done == count
         && lines.len() == count + 2
-        && lines.get(1 + count).copied() == Some(trailer.as_str())
+        && lines.get(1 + count).copied() == Some(trailer.as_bytes())
     {
         return Ok(ResumeOutcome {
             skipped: count,
@@ -971,18 +1118,20 @@ pub fn resume_shard_to_file(
     // rows: a kill during the prefix rewrite can no longer destroy the
     // completed rows (the original file stays intact until the atomic
     // rename), and a kill during the append leaves a partial trailing
-    // line the next resume discards — the protocol's designed case.
+    // line the next resume discards — the protocol's designed case. The
+    // temp file is fsynced before the rename and the parent directory
+    // after it, so a power loss around the swap cannot surface an empty
+    // or stale file where completed rows used to be.
     let tmp = temp_sibling(path);
     let rewrite = || -> Result<()> {
         let mut out = create_results_file(&tmp)?;
         out.write_all(header.as_bytes())?;
         out.write_all(b"\n")?;
         for line in lines.iter().skip(1).take(done) {
-            out.write_all(line.as_bytes())?;
+            out.write_all(line)?;
             out.write_all(b"\n")?;
         }
-        out.flush()?;
-        Ok(())
+        sync_writer(out, &tmp)
     };
     if let Err(e) = rewrite() {
         let _ = std::fs::remove_file(&tmp);
@@ -990,14 +1139,22 @@ pub fn resume_shard_to_file(
     }
     std::fs::rename(&tmp, path)
         .with_context(|| format!("moving resumed results into place at {}", path.display()))?;
+    sync_parent_dir(path)?;
     let out = std::io::BufWriter::new(
         std::fs::OpenOptions::new()
             .append(true)
             .open(path)
             .with_context(|| format!("reopening results file {} for append", path.display()))?,
     );
-    let sink = Mutex::new(OrderedSink::starting_at(out, done + 1));
-    run_cells(spec, plan, range.start + done..range.end, range.start, Some(&sink))?;
+    let sink = Mutex::new(OrderedSink::starting_at(out, done + 1).with_faults(faults));
+    run_cells(
+        spec,
+        plan,
+        range.start + done..range.end,
+        range.start,
+        Some(&sink),
+        faults,
+    )?;
     let mut sink = sink.into_inner().expect("sweep sink poisoned");
     sink.push(count + 1, trailer)?;
     Ok(ResumeOutcome {
@@ -1155,8 +1312,10 @@ pub fn merge_shard_files(
         }
         sink.write_all(trailer_json(&plan.stats).to_string().as_bytes())?;
         sink.write_all(b"\n")?;
-        sink.flush()?;
-        Ok(())
+        // fsync before the rename (and the directory after): the merged
+        // file is the study's publish point — a power loss must never
+        // surface an empty or stale file at `out`
+        sync_writer(sink, &tmp)
     };
     if let Err(e) = write() {
         let _ = std::fs::remove_file(&tmp);
@@ -1164,11 +1323,72 @@ pub fn merge_shard_files(
     }
     std::fs::rename(&tmp, out)
         .with_context(|| format!("moving merged results into place at {}", out.display()))?;
+    sync_parent_dir(out)?;
     Ok(MergeOutcome {
         shards: of,
         cells: plan.cells.len(),
         stats: plan.stats,
     })
+}
+
+/// Flush a buffered results writer and fsync its file — the durability
+/// half of every replace-by-rename publish (the rename itself is only
+/// atomic against crashes once the temp file's bytes are on disk).
+fn sync_writer(out: std::io::BufWriter<std::fs::File>, path: &Path) -> Result<()> {
+    let file = out
+        .into_inner()
+        .map_err(|e| anyhow::anyhow!("flushing {}: {}", path.display(), e.error()))?;
+    file.sync_all()
+        .with_context(|| format!("fsyncing {}", path.display()))?;
+    Ok(())
+}
+
+/// Fsync the directory containing `path`, so a rename into it survives a
+/// power loss (on POSIX the directory entry itself must be synced; on
+/// other platforms this is a no-op).
+fn sync_parent_dir(path: &Path) -> Result<()> {
+    #[cfg(unix)]
+    {
+        let dir = match path.parent() {
+            Some(d) if !d.as_os_str().is_empty() => d,
+            _ => Path::new("."),
+        };
+        std::fs::File::open(dir)
+            .and_then(|d| d.sync_all())
+            .with_context(|| format!("fsyncing directory {}", dir.display()))?;
+    }
+    #[cfg(not(unix))]
+    let _ = path;
+    Ok(())
+}
+
+/// Whether `path` holds a complete, valid results stream for `shard`
+/// under this plan — the supervisor's post-exit acceptance check. The
+/// frame (header bytes, trailer bytes, line count) and every row (valid
+/// JSON, no `error` key, the right global cell index) are validated;
+/// any failure is simply `false` — the caller's move is always the same
+/// (resume or retry the shard), so the reasons stay in merge's errors.
+pub fn shard_stream_complete(plan: &SweepPlan, shard: ShardSpec, path: &Path) -> bool {
+    let Ok(text) = read_shard_text(path) else {
+        return false;
+    };
+    let Ok((claimed, range, line_count)) = shard_frame(plan, path, &text) else {
+        return false;
+    };
+    if claimed != shard || line_count != range.len() + 2 {
+        return false;
+    }
+    text.lines()
+        .skip(1)
+        .take(range.len())
+        .enumerate()
+        .all(|(j, line)| match Json::parse(line) {
+            Ok(row) => {
+                row.get("error").is_none()
+                    && row.get("cell").and_then(Json::as_usize) == Some(range.start + j)
+            }
+            Err(_) => false,
+        })
 }
 
 /// Read one shard file, requiring the stream's terminating newline (a
@@ -1308,12 +1528,24 @@ struct EdgeStateState {
 /// memo state. `origin` is the start of the stream's slice — the slice's
 /// cell `i` claims sink slot `i - origin + 1` (slot 0 is the header).
 /// Returns the reports of exactly the cells it ran, in cell order.
+///
+/// Panic isolation: every cell attempt runs caught
+/// ([`parallel::parallel_map_n_caught`]), so a panicking cell — injected
+/// via `faults` or organic — cannot take the pool down. A panicked cell
+/// gets one clean sequential retry after the pool joins; a second panic
+/// becomes the cell's structured error row (which still claims its sink
+/// slot, so the stream drains) and the run's overall `Err`. Injected
+/// panics fire before any memo state is touched, so their retries are
+/// side-effect-free; an organic mid-cell panic may at worst leak memo
+/// entries or poison a peer's lock — degrading to more error rows, never
+/// to corrupt output bytes.
 fn run_cells<W: Write + Send>(
     spec: &SweepSpec,
     plan: &SweepPlan,
     run: Range<usize>,
     origin: usize,
     sink: Option<&Mutex<OrderedSink<W>>>,
+    faults: &FaultPlan,
 ) -> Result<Vec<(SweepCell, FleetReport)>> {
     // Remaining-use counts restricted to the cells this invocation
     // actually runs, so a shard or resume drops (or never builds) memo
@@ -1365,9 +1597,17 @@ fn run_cells<W: Write + Send>(
             .remaining += 1;
     }
 
-    let run_cell = |i: usize| -> Result<FleetReport> {
+    let run_cell = |i: usize, attempt: usize| -> Result<FleetReport> {
         let (cell, sc) = &plan.cells[i];
         let (slot, shuf, est) = plan.cell_slots[i];
+        // injected panics fire here, before any lock or refcount is
+        // touched, so the one-shot retry re-enters a clean cell
+        if !faults.is_noop() && faults.cell_panics(cell.index, attempt) {
+            panic!(
+                "injected cell fault (cell {}, attempt {attempt})",
+                cell.index
+            );
+        }
         // Acquire: build lazily under the respective lock. Whichever
         // worker gets there first builds; only peers needing the *same*
         // memo entry block until that build lands. Builds are pure
@@ -1480,9 +1720,53 @@ fn run_cells<W: Write + Send>(
 
     let n_run = run.len();
     let start = run.start;
-    let results = parallel::parallel_map_n(spec.workers, n_run, |j| run_cell(start + j));
+    // attempt 0 over the pool, each cell caught so one panic cannot
+    // poison the run; panicked cells retry once, sequentially, after the
+    // pool joins (the retry fills the cell's sink slot, draining any rows
+    // buffered behind the gap)
+    let mut results = parallel::parallel_map_n_caught(spec.workers, n_run, |j| {
+        run_cell(start + j, 0)
+    });
+    for (j, caught) in results.iter_mut().enumerate() {
+        if caught.is_ok() {
+            continue;
+        }
+        *caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_cell(start + j, 1)
+        }));
+    }
+    // twice-panicked cells: record a structured error row for every one
+    // of them first (each claims its sink slot, so completed rows behind
+    // the gaps still drain), then surface the panic as the cell's error
+    let finals: Vec<Result<FleetReport>> = results
+        .into_iter()
+        .enumerate()
+        .map(|(j, caught)| {
+            caught.unwrap_or_else(|payload| {
+                let cell = &plan.cells[start + j].0;
+                let e = anyhow::anyhow!(
+                    "cell worker panicked twice: {}",
+                    parallel::panic_message(payload.as_ref())
+                );
+                if let Some(sink) = sink {
+                    let pushed = sink.lock().expect("sweep sink poisoned").push(
+                        start + j - origin + 1,
+                        obj(vec![
+                            ("cell", Json::Num(cell.index as f64)),
+                            ("error", Json::Str(e.to_string())),
+                        ])
+                        .to_string(),
+                    );
+                    if let Err(io) = pushed {
+                        return Err(anyhow::Error::new(io).context("writing sweep results row"));
+                    }
+                }
+                Err(e)
+            })
+        })
+        .collect();
     let mut reports = Vec::with_capacity(n_run);
-    for ((cell, _), report) in plan.cells[run].iter().zip(results) {
+    for ((cell, _), report) in plan.cells[run].iter().zip(finals) {
         reports.push((
             *cell,
             report.with_context(|| format!("sweep cell {} (seed {})", cell.index, cell.seed))?,
@@ -1876,6 +2160,186 @@ mod tests {
     }
 
     #[test]
+    fn resume_discards_torn_utf8_and_nul_tails() {
+        // byte-level hardening: a crash can leave the tail of the file
+        // mid-way through a multi-byte UTF-8 sequence, or a storage layer
+        // can interleave NUL bytes into the last page. Every such tail is
+        // a partial row — discarded, never trusted, never fatal
+        let spec = new_axes_spec();
+        let n = spec.cells().len();
+        let dir = std::env::temp_dir().join("odl_har_sweep_bytetail_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let full_path = dir.join("full.jsonl");
+        run_sweep_to_file(&spec, &full_path).unwrap();
+        let full = std::fs::read(&full_path).unwrap();
+        let text = String::from_utf8(full.clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // header + first two rows, intact
+        let prefix: Vec<u8> = lines[..3]
+            .iter()
+            .flat_map(|l| l.bytes().chain(std::iter::once(b'\n')))
+            .collect();
+
+        let tails: [&[u8]; 5] = [
+            b"\xE2\x82",              // torn multi-byte sequence, no newline
+            b"\xE2\x82\n",            // torn sequence "completed" by a newline
+            b"{\"cell\":2,\x00\x00",  // NUL-ridden partial row
+            b"{\"cell\":2\x00}\n",    // complete line poisoned by a NUL
+            b"\xFF\xFE\n",            // bytes that are never valid UTF-8
+        ];
+        for (t, tail) in tails.iter().enumerate() {
+            let mut bytes = prefix.clone();
+            bytes.extend_from_slice(tail);
+            let path = dir.join(format!("tail{t}.jsonl"));
+            std::fs::write(&path, &bytes).unwrap();
+            let out = resume_sweep_to_file(&spec, &path).unwrap();
+            assert_eq!(
+                (out.skipped, out.ran),
+                (2, n - 2),
+                "tail #{t} must be treated as a discarded partial row"
+            );
+            assert_eq!(
+                std::fs::read(&path).unwrap(),
+                full,
+                "resume over tail #{t} must restore byte identity"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_is_byte_identical_from_truncation_at_every_byte_offset() {
+        // the strongest form of the resume contract: truncate a complete
+        // stream at *every* byte offset — not just line boundaries — and
+        // resume must reproduce the uninterrupted file byte for byte. A
+        // deliberately tiny two-cell scenario keeps ~1000 resumes cheap
+        let base = {
+            let mut b = small_base();
+            b.data_seed = Some(0x71AB);
+            b.horizon_s = 10.0;
+            b.drift_at_s = 4.0;
+            b.train_target = 12;
+            b
+        };
+        let spec = SweepSpec {
+            seeds: vec![1, 2],
+            thetas: vec![None],
+            edge_counts: vec![2],
+            detectors: vec![DetectorKind::Oracle],
+            n_hiddens: vec![base.n_hidden],
+            loss_probs: vec![base.channel.loss_prob],
+            teacher_errors: vec![base.teacher_error],
+            workers: 2,
+            record_pca: false,
+            memo_edge_state: true,
+            base,
+        };
+        let dir = std::env::temp_dir().join("odl_har_sweep_bytecut_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let full_path = dir.join("full.jsonl");
+        run_sweep_to_file(&spec, &full_path).unwrap();
+        let full = std::fs::read(&full_path).unwrap();
+        let path = dir.join("cut.jsonl");
+        for cut in 0..=full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            resume_sweep_to_file(&spec, &path).unwrap();
+            assert_eq!(
+                std::fs::read(&path).unwrap(),
+                full,
+                "resume from a byte-{cut} truncation diverged"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_cell_panic_heals_in_process_byte_identically() {
+        // a worker-cell panic is caught, retried once outside the pool,
+        // and the stream comes out byte-identical to an undisturbed run
+        let spec = new_axes_spec();
+        let plan = spec.plan();
+        let dir = std::env::temp_dir().join("odl_har_sweep_panicheal_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let clean = dir.join("clean.jsonl");
+        run_planned_to_file(&spec, &plan, &clean).unwrap();
+        let faulty = dir.join("faulty.jsonl");
+        let faults = FaultPlan::parse("0:panic@1,panic@4").unwrap();
+        let out =
+            run_shard_to_file_with_faults(&spec, &plan, ShardSpec::WHOLE, &faulty, &faults)
+                .unwrap();
+        assert_eq!(out.stats.cells, plan.cells.len());
+        assert_eq!(
+            std::fs::read(&faulty).unwrap(),
+            std::fs::read(&clean).unwrap()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn double_panic_becomes_error_row_and_resume_heals() {
+        // `panic2` defeats the one-shot retry: the run fails with a
+        // structured error row in the stream (not a poisoned pool), and a
+        // clean resume reruns from that row and restores byte identity
+        let spec = new_axes_spec();
+        let plan = spec.plan();
+        let n = plan.cells.len();
+        let dir = std::env::temp_dir().join("odl_har_sweep_panic2_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let clean = dir.join("clean.jsonl");
+        run_planned_to_file(&spec, &plan, &clean).unwrap();
+        let path = dir.join("wounded.jsonl");
+        let faults = FaultPlan::parse("0:panic2@2").unwrap();
+        let err = run_shard_to_file_with_faults(&spec, &plan, ShardSpec::WHOLE, &path, &faults)
+            .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("panicked"),
+            "error should describe the panic: {err:#}"
+        );
+        // the stream drained through the error row: header + every row,
+        // no trailer, and cell 2's slot holds a structured error
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1 + n);
+        let row = Json::parse(lines[3]).unwrap();
+        assert_eq!(row.get("cell").unwrap().as_usize().unwrap(), 2);
+        assert!(row.get("error").is_some());
+        let out = resume_planned_to_file(&spec, &plan, &path).unwrap();
+        assert_eq!((out.skipped, out.ran), (2, n - 2));
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            std::fs::read(&clean).unwrap()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_io_error_fails_the_run_and_resume_heals() {
+        let spec = new_axes_spec();
+        let plan = spec.plan();
+        let n = plan.cells.len();
+        let dir = std::env::temp_dir().join("odl_har_sweep_ioerr_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let clean = dir.join("clean.jsonl");
+        run_planned_to_file(&spec, &plan, &clean).unwrap();
+        let path = dir.join("wounded.jsonl");
+        let faults = FaultPlan::parse("0:ioerr@3").unwrap();
+        let err = run_shard_to_file_with_faults(&spec, &plan, ShardSpec::WHOLE, &path, &faults)
+            .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("injected I/O error"),
+            "unexpected error chain: {err:#}"
+        );
+        // whatever prefix made it to disk, a clean resume completes it
+        let out = resume_planned_to_file(&spec, &plan, &path).unwrap();
+        assert_eq!(out.skipped + out.ran, n);
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            std::fs::read(&clean).unwrap()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn resume_rejects_a_mismatched_grid() {
         let spec = small_spec();
         let dir = std::env::temp_dir().join("odl_har_sweep_mismatch_test");
@@ -2010,6 +2474,28 @@ mod tests {
             assert_eq!(stats.artifact_builds, 1);
             assert_eq!(stats.artifact_hits, stats.cells - 1);
         }
+    }
+
+    #[test]
+    fn cost_weighted_cuts_balance_heterogeneous_fleets() {
+        // edge_counts [1, 2, 3, 18]: per-cell costs h, 2h, 3h, 18h (one
+        // seed, pinned data seed → a single artifact group, so no
+        // boundary is within snapping reach and the cost fallback
+        // decides). An even *count* split of 4 cells would hand shard 2
+        // a 21h/3h imbalance; the cost split cuts 3|1 — 6h vs 18h, the
+        // best contiguous partition of this grid
+        let mut spec = small_spec();
+        spec.seeds = vec![1];
+        spec.thetas = vec![None];
+        spec.edge_counts = vec![1, 2, 3, 18];
+        let plan = spec.plan();
+        assert_eq!(plan.cells.len(), 4);
+        let h = 80; // small_base horizon_s
+        assert_eq!(plan.cell_cost(0), h);
+        assert_eq!(plan.cell_cost(3), 18 * h);
+        assert_eq!(plan.shard_ranges(2), vec![0..3, 3..4]);
+        // the public entry and the cost partitioner are the same split
+        assert_eq!(plan.shard_ranges(2), plan.cost_shard_ranges(2));
     }
 
     #[test]

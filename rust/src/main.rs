@@ -13,7 +13,9 @@
 //! odl-har fig4   [--trials N] [--out DIR]
 //! odl-har run    --config FILE       # custom protocol experiment
 //! odl-har fleet  [--config FILE] [--workers N] [--threaded]
-//! odl-har sweep  --config FILE [--workers N] [--out FILE] [--resume] [--dry-run] [--shard I/N]
+//! odl-har sweep  --config FILE [--workers N] [--out FILE] [--resume] [--dry-run]
+//!                [--shard I/N | --shard auto[:N]] [--retry-budget K]
+//!                [--heartbeat-timeout SECS] [--inject-faults SPEC] [--fault-attempts K]
 //! odl-har merge  --config FILE [--out FILE] SHARD_FILE...
 //! odl-har artifacts-check            # verify PJRT artifacts load + run
 //! ```
@@ -256,11 +258,71 @@ fn main() -> Result<()> {
             let dry_run = args.flag("--dry-run");
             let resume = args.flag("--resume");
             let workers_cli = args.opt_usize_opt("--workers")?;
-            let shard = args
-                .opt("--shard")?
+            let shard_raw = args.opt("--shard")?;
+            let retry_budget = args.opt_usize_opt("--retry-budget")?;
+            let heartbeat = args
+                .opt("--heartbeat-timeout")?
+                .map(|v| {
+                    v.parse::<f64>()
+                        .with_context(|| format!("bad --heartbeat-timeout value '{v}'"))
+                })
+                .transpose()?;
+            let fault_spec = args.opt("--inject-faults")?;
+            let fault_attempts = args.opt_usize_opt("--fault-attempts")?;
+            // `--shard auto[:N]` switches to the self-healing supervisor
+            // (coordinator::supervise): spawn one child per shard, watch,
+            // relaunch onto --resume, quarantine, auto-merge
+            let auto = match shard_raw.as_deref() {
+                Some("auto") => Some(0usize), // 0 = one shard per worker
+                Some(s) => match s.strip_prefix("auto:") {
+                    Some(n) => Some(
+                        n.parse::<usize>()
+                            .with_context(|| format!("bad --shard auto:N count '{n}'"))?,
+                    ),
+                    None => None,
+                },
+                None => None,
+            };
+            if let Some(requested) = auto {
+                let out = args
+                    .opt("--out")?
+                    .map(PathBuf::from)
+                    .unwrap_or_else(|| PathBuf::from("results/sweep.jsonl"));
+                args.finish()?;
+                return run_supervised(
+                    &PathBuf::from(cfg_path),
+                    requested,
+                    workers_cli,
+                    retry_budget,
+                    heartbeat,
+                    fault_spec,
+                    fault_attempts,
+                    resume,
+                    dry_run,
+                    &out,
+                );
+            }
+            for (flag, given) in [
+                ("--retry-budget", retry_budget.is_some()),
+                ("--heartbeat-timeout", heartbeat.is_some()),
+                ("--fault-attempts", fault_attempts.is_some()),
+            ] {
+                anyhow::ensure!(
+                    !given,
+                    "{flag} only applies to the supervisor (--shard auto[:N])"
+                );
+            }
+            let shard = shard_raw
                 .map(|s| odl_har::coordinator::ShardSpec::parse(&s))
                 .transpose()?
                 .unwrap_or(odl_har::coordinator::ShardSpec::WHOLE);
+            // deterministic chaos for one process: parse the spec and
+            // rebind it to the shard actually being run
+            let faults = fault_spec
+                .map(|s| odl_har::util::faults::FaultPlan::parse(&s))
+                .transpose()?
+                .map(|p| p.for_shard(shard.index))
+                .unwrap_or_default();
             // shards must not share the unsharded default path — two
             // shard runs without --out would silently clobber each other
             let out = args.opt("--out")?.map(PathBuf::from).unwrap_or_else(|| {
@@ -314,8 +376,8 @@ fn main() -> Result<()> {
             // the banner plan above is the one the engine runs — planned
             // entry points avoid re-enumerating a large grid
             let stats = if resume {
-                let outcome = odl_har::coordinator::sweep::resume_shard_to_file(
-                    &spec, &plan, shard, &out,
+                let outcome = odl_har::coordinator::sweep::resume_shard_to_file_with_faults(
+                    &spec, &plan, shard, &out, &faults,
                 )?;
                 if outcome.already_complete {
                     println!(
@@ -331,8 +393,10 @@ fn main() -> Result<()> {
                 }
                 outcome.stats
             } else {
-                odl_har::coordinator::sweep::run_shard_to_file(&spec, &plan, shard, &out)?
-                    .stats
+                odl_har::coordinator::sweep::run_shard_to_file_with_faults(
+                    &spec, &plan, shard, &out, &faults,
+                )?
+                .stats
             };
             println!(
                 "sweep: done — {} cells, data fitted {} time(s) ({} hit(s)), pools shuffled {} time(s) ({} hit(s)), edge cores provisioned {} time(s) ({} hit(s))",
@@ -394,6 +458,141 @@ fn main() -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// `odl-har sweep --shard auto[:N]`: resolve the shard count and worker
+/// split, build the supervisor config (CLI beats `[supervise]` TOML
+/// beats defaults), and drive every shard to completion — relaunching
+/// crashed/hung children onto `--resume` — before auto-merging into
+/// `out`. Exits 0 complete / 2 degraded / 3 failed (see
+/// `coordinator::supervise`).
+#[allow(clippy::too_many_arguments)]
+fn run_supervised(
+    cfg_path: &PathBuf,
+    requested_shards: usize,
+    workers_cli: Option<usize>,
+    retry_budget: Option<usize>,
+    heartbeat: Option<f64>,
+    fault_spec: Option<String>,
+    fault_attempts: Option<usize>,
+    _resume: bool, // supervision always resumes; the flag is harmless
+    dry_run: bool,
+    out: &PathBuf,
+) -> Result<()> {
+    use odl_har::coordinator::supervise::{
+        shard_out_paths, supervise, ProcessLauncher, SuperviseStatus,
+    };
+
+    let mut spec = config::sweep_from_file(cfg_path)?;
+    if let Some(w) = workers_cli {
+        spec.workers = w;
+    }
+    let total_workers = odl_har::util::auto_workers(spec.workers);
+    spec.workers = total_workers;
+    let plan = spec.plan();
+    anyhow::ensure!(
+        !plan.cells.is_empty(),
+        "--shard auto needs a non-empty grid"
+    );
+
+    let mut scfg = config::supervise_from_file(cfg_path)?;
+    // CLI count beats the TOML one; 0 means one shard per worker. Never
+    // more shards than cells (or workers).
+    let requested = if requested_shards > 0 {
+        requested_shards
+    } else {
+        scfg.shards
+    };
+    let n = if requested == 0 { total_workers } else { requested }
+        .min(plan.cells.len())
+        .max(1);
+    scfg.shards = n;
+    scfg.workers_per_shard = (total_workers / n).max(1);
+    if let Some(rb) = retry_budget {
+        scfg.retry_budget = rb;
+    }
+    if let Some(hb) = heartbeat {
+        scfg.heartbeat_timeout_s = hb;
+    }
+    scfg.fault_spec = fault_spec;
+    if let Some(fa) = fault_attempts {
+        scfg.fault_attempts = fa;
+    }
+
+    let ranges = plan.shard_ranges(n);
+    println!(
+        "sweep: supervising {} shard(s) x {} worker(s) over {} cells (cost-weighted cuts)",
+        n,
+        scfg.workers_per_shard,
+        plan.cells.len()
+    );
+    let paths = shard_out_paths(out, n);
+    for (r, p) in ranges.iter().zip(&paths) {
+        let cost: u64 = (r.start..r.end).map(|i| plan.cell_cost(i)).sum();
+        println!(
+            "  cells [{}, {}) cost {} -> {}",
+            r.start,
+            r.end,
+            cost,
+            p.display()
+        );
+    }
+    if dry_run {
+        println!("dry run: plan only — no children launched");
+        return Ok(());
+    }
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let launcher = ProcessLauncher {
+        exe: std::env::current_exe().context("resolving the odl-har binary path")?,
+        config_path: cfg_path.clone(),
+    };
+    let outcome = supervise(&plan, &scfg, &launcher, &paths, Some(out))?;
+    for r in &outcome.shards {
+        let state = if r.quarantined {
+            "QUARANTINED"
+        } else {
+            "complete"
+        };
+        match &r.last_error {
+            Some(e) => println!(
+                "shard {}/{}: {} after {} attempt(s) (last error: {e})",
+                r.index, n, state, r.attempts
+            ),
+            None => println!(
+                "shard {}/{}: {} after {} attempt(s)",
+                r.index, n, state, r.attempts
+            ),
+        }
+    }
+    match outcome.status {
+        SuperviseStatus::Complete => {
+            let m = outcome.merged.expect("complete status implies a merge");
+            println!(
+                "merge: {} shard file(s) -> {} cells, byte-identical to a single-process run",
+                m.shards, m.cells
+            );
+            println!("results: {}", out.display());
+            Ok(())
+        }
+        status => {
+            if let Some(e) = &outcome.merge_error {
+                eprintln!("merge failed: {e}");
+            }
+            eprintln!(
+                "sweep: {} — merge skipped; rerun `sweep --shard auto` to resume the \
+                 unfinished shard(s)",
+                match status {
+                    SuperviseStatus::Degraded => "degraded (some shards quarantined)",
+                    _ => "failed",
+                }
+            );
+            std::process::exit(status.exit_code());
+        }
+    }
 }
 
 /// `odl-har sweep --dry-run`: the enumerated grid, each cell's memo
@@ -530,6 +729,8 @@ fn print_help() {
                                           (--workers shards provisioning + event loop; 0 = auto;\n\
                                            same report bit for bit for any count)\n\
            sweep  --config FILE [--workers N] [--out FILE] [--resume] [--dry-run] [--shard I/N]\n\
+                  [--shard auto[:N] [--retry-budget K] [--heartbeat-timeout SECS]\n\
+                   [--fault-attempts K]] [--inject-faults SPEC]\n\
                                           memoized, resumable scenario-grid sweep (TOML-declared\n\
                                           seeds x thetas x edge counts x detectors x n_hiddens x\n\
                                           loss_probs x teacher_errors; artifacts fitted once per\n\
@@ -539,8 +740,16 @@ fn print_help() {
                                           completed cells and finishes it byte-identical to an\n\
                                           uninterrupted run; --dry-run prints the grid + memo\n\
                                           plan without running; --shard I/N runs the I-th of N\n\
-                                          disjoint grid slices for process-level fan-out —\n\
-                                          1/1 is byte-identical to no --shard at all)\n\
+                                          disjoint cost-weighted grid slices for process-level\n\
+                                          fan-out — 1/1 is byte-identical to no --shard at all;\n\
+                                          --shard auto[:N] self-heals: one child per shard,\n\
+                                          heartbeat-watched, crashed/hung children relaunched\n\
+                                          onto --resume with exponential backoff, quarantined\n\
+                                          after K retries, auto-merged on completion (exit 0\n\
+                                          complete / 2 degraded / 3 failed; [supervise] TOML\n\
+                                          section sets the defaults); --inject-faults SPEC\n\
+                                          replays a deterministic fault schedule for chaos\n\
+                                          testing — see rust/RELIABILITY.md)\n\
            merge  --config FILE [--out FILE] SHARD_FILE...\n\
                                           recombine a complete --shard file set into one results\n\
                                           file byte-identical to a single-process sweep (headers\n\

@@ -1,0 +1,323 @@
+//! Deterministic, replayable fault injection for the sweep stack.
+//!
+//! The sweep engine's byte-identity contract is only credible if it holds
+//! *through* failures — torn writes, killed shard processes, worker-cell
+//! panics, transient I/O errors. This module is the one switchboard those
+//! failures flow through: a [`FaultPlan`] names exactly which faults fire
+//! where, the engine consults it at its injection points (the results
+//! sink's per-slot drain, the cell pool's per-attempt entry), and an
+//! empty plan is a no-op the fault-free path never pays for beyond one
+//! branch.
+//!
+//! Two ways to build a schedule (the CLI form is
+//! `--inject-faults SEED[:SITE[,SITE…]]`):
+//!
+//! * **Explicit sites** — `SEED:KIND@INDEX[#SHARD],…` fires exactly the
+//!   named faults. `KIND` is one of `kill` (flush the row, then abort the
+//!   process — an in-process stand-in for an external SIGKILL), `tear`
+//!   (write a *prefix* of the row's bytes, flush, abort — a torn write),
+//!   `ioerr` (the row write returns an I/O error), `hang` (flush the row,
+//!   then block forever — exercises the supervisor's heartbeat timeout),
+//!   `panic` (the cell's first attempt panics; the in-pool retry heals
+//!   it), and `panic2` (both attempts panic; the cell becomes a
+//!   structured error row). Write faults index the stream's **slot**
+//!   (0 = header, k = the slice's k-th row); panic faults index the
+//!   **global cell**. `#SHARD` restricts a site to one shard of a
+//!   supervised run.
+//! * **Seeded chaos** — a bare `SEED` derives a pseudo-random schedule
+//!   from [`stream_seed`]`(seed, FAULT_DOMAIN, site)`: roughly one row
+//!   write in eight draws a kill/tear/ioerr, and roughly one cell in
+//!   eight panics on its first attempt. The schedule is a pure function
+//!   of `(seed, shard, site)` — replaying the same seed replays the same
+//!   chaos, which is what makes a chaos-suite failure debuggable.
+//!
+//! Faults never forge bytes: a torn write is a prefix of the *correct*
+//! row, a kill lands after a fully flushed row, and panics fire before
+//! the cell touches any shared memo state. Recovery (resume, supervisor
+//! retry) therefore always converges on the uninterrupted stream, byte
+//! for byte — the property `tests/sweep_faults.rs` asserts.
+
+use crate::util::rng::{mix64, stream_seed};
+use anyhow::{bail, ensure, Context, Result};
+
+/// Domain tag separating fault-schedule streams from every other
+/// [`stream_seed`] consumer (provisioning, shuffles, channel noise).
+pub const FAULT_DOMAIN: u64 = 0xFA17;
+
+/// One injectable failure kind. See the module docs for semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Abort the process after the indexed row is fully written+flushed.
+    Kill,
+    /// Write a prefix of the indexed row's bytes, flush, then abort.
+    Tear,
+    /// Fail the indexed row's write with an I/O error.
+    IoErr,
+    /// Flush the indexed row, then block forever (heartbeat-timeout bait).
+    Hang,
+    /// Panic the indexed cell's first attempt (the retry heals it).
+    Panic,
+    /// Panic the indexed cell's first two attempts (becomes an error row).
+    Panic2,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Result<FaultKind> {
+        Ok(match s {
+            "kill" => FaultKind::Kill,
+            "tear" => FaultKind::Tear,
+            "ioerr" => FaultKind::IoErr,
+            "hang" => FaultKind::Hang,
+            "panic" => FaultKind::Panic,
+            "panic2" => FaultKind::Panic2,
+            _ => bail!("unknown fault kind '{s}' (kill|tear|ioerr|hang|panic|panic2)"),
+        })
+    }
+
+    fn is_write_fault(self) -> bool {
+        matches!(
+            self,
+            FaultKind::Kill | FaultKind::Tear | FaultKind::IoErr | FaultKind::Hang
+        )
+    }
+}
+
+/// One explicit fault site: `KIND@INDEX[#SHARD]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSite {
+    pub kind: FaultKind,
+    /// Sink slot (write faults) or global cell index (panic faults).
+    pub index: usize,
+    /// Restrict the site to one shard index of a supervised run; `None`
+    /// fires in every shard (and in unsharded runs).
+    pub shard: Option<usize>,
+}
+
+/// A deterministic fault schedule. The default (empty) plan is a no-op;
+/// [`FaultPlan::parse`] builds one from the CLI grammar; call
+/// [`FaultPlan::for_shard`] to bind the shard context before handing the
+/// plan to a shard's engine.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Bare-seed mode: derive a pseudo-random schedule instead of (not in
+    /// addition to) explicit sites.
+    seeded: bool,
+    sites: Vec<FaultSite>,
+    /// Current shard context (1-based; 0 = unsharded / unbound). Explicit
+    /// `#SHARD` sites and the seeded stream both key on it.
+    shard: usize,
+}
+
+impl FaultPlan {
+    /// Parse the CLI grammar `SEED[:SITE[,SITE…]]` with
+    /// `SITE = KIND@INDEX[#SHARD]`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let spec = spec.trim();
+        let (seed_text, sites_text) = match spec.split_once(':') {
+            Some((s, rest)) => (s, Some(rest)),
+            None => (spec, None),
+        };
+        let seed: u64 = seed_text
+            .trim()
+            .parse()
+            .with_context(|| format!("bad fault seed in '{spec}'"))?;
+        let mut sites = Vec::new();
+        if let Some(text) = sites_text {
+            for part in text.split(',') {
+                let part = part.trim();
+                ensure!(!part.is_empty(), "empty fault site in '{spec}'");
+                let (kind_text, rest) = part
+                    .split_once('@')
+                    .with_context(|| format!("fault site '{part}' wants KIND@INDEX[#SHARD]"))?;
+                let kind = FaultKind::parse(kind_text.trim())?;
+                let (index_text, shard) = match rest.split_once('#') {
+                    Some((i, s)) => {
+                        let shard: usize = s
+                            .trim()
+                            .parse()
+                            .with_context(|| format!("bad shard in fault site '{part}'"))?;
+                        ensure!(shard >= 1, "fault site shard is 1-based, got '{part}'");
+                        (i, Some(shard))
+                    }
+                    None => (rest, None),
+                };
+                let index: usize = index_text
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("bad index in fault site '{part}'"))?;
+                sites.push(FaultSite { kind, index, shard });
+            }
+            ensure!(!sites.is_empty(), "no fault sites after ':' in '{spec}'");
+        }
+        Ok(FaultPlan {
+            seed,
+            seeded: sites.is_empty(),
+            sites,
+            shard: 0,
+        })
+    }
+
+    /// The plan rebound to shard `index` (1-based): `#SHARD`-scoped sites
+    /// fire only when their shard matches, and the seeded stream keys on
+    /// the shard so different shards draw different chaos.
+    pub fn for_shard(&self, index: usize) -> FaultPlan {
+        let mut plan = self.clone();
+        plan.shard = index;
+        plan
+    }
+
+    /// Whether this plan can ever fire — the engine's fast path skips all
+    /// fault bookkeeping when it cannot.
+    pub fn is_noop(&self) -> bool {
+        !self.seeded && self.sites.is_empty()
+    }
+
+    fn site_matches(&self, site: &FaultSite) -> bool {
+        match site.shard {
+            None => true,
+            Some(s) => s == self.shard,
+        }
+    }
+
+    /// Per-site stream draw for seeded mode: a pure function of
+    /// `(seed, shard, domain-offset, index)`.
+    fn draw(&self, lane: u64, index: usize) -> u64 {
+        mix64(stream_seed(
+            self.seed,
+            FAULT_DOMAIN ^ lane,
+            ((self.shard as u64) << 32) | index as u64,
+        ))
+    }
+
+    /// The write fault (if any) for results-stream slot `slot`, consulted
+    /// by the ordered sink as each line drains. Seeded mode draws
+    /// kill/tear/ioerr with probability ~1/8 per slot (never `hang`: a
+    /// seeded schedule must stay recoverable without a supervisor).
+    pub fn write_fault(&self, slot: usize) -> Option<FaultKind> {
+        for site in &self.sites {
+            if site.index == slot && site.kind.is_write_fault() && self.site_matches(site) {
+                return Some(site.kind);
+            }
+        }
+        if self.seeded {
+            return match self.draw(0, slot) % 24 {
+                0 => Some(FaultKind::Kill),
+                1 => Some(FaultKind::Tear),
+                2 => Some(FaultKind::IoErr),
+                _ => None,
+            };
+        }
+        None
+    }
+
+    /// Whether global cell `cell` panics on `attempt` (0-based). Seeded
+    /// mode panics ~1 cell in 8, first attempt only, so an unsupervised
+    /// seeded run still self-heals through the in-pool retry.
+    pub fn cell_panics(&self, cell: usize, attempt: usize) -> bool {
+        for site in &self.sites {
+            if site.index == cell && self.site_matches(site) {
+                match site.kind {
+                    FaultKind::Panic if attempt == 0 => return true,
+                    FaultKind::Panic2 if attempt <= 1 => return true,
+                    _ => {}
+                }
+            }
+        }
+        self.seeded && attempt == 0 && self.draw(1, cell) % 8 == 0
+    }
+}
+
+/// Abort the process without unwinding — the injected stand-in for an
+/// external SIGKILL. Nothing beyond what the caller already flushed
+/// reaches the results file, which is exactly the crash surface resume
+/// is specified against.
+pub fn die(reason: &str) -> ! {
+    eprintln!("fault-injection: {reason} — aborting process");
+    std::process::abort();
+}
+
+/// Block this thread forever — bait for the supervisor's heartbeat
+/// timeout (the only way out is an external kill).
+pub fn hang(reason: &str) -> ! {
+    eprintln!("fault-injection: {reason} — hanging");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_default_plans_are_noops() {
+        assert!(FaultPlan::default().is_noop());
+        assert!(FaultPlan::default().write_fault(0).is_none());
+        assert!(!FaultPlan::default().cell_panics(0, 0));
+        // binding a shard keeps a no-op a no-op
+        assert!(FaultPlan::default().for_shard(2).is_noop());
+    }
+
+    #[test]
+    fn explicit_sites_parse_and_fire_exactly_where_named() {
+        let plan = FaultPlan::parse("7:kill@2,tear@5#2,panic@3,panic2@4").unwrap();
+        assert!(!plan.is_noop());
+        // unscoped kill fires in any shard context
+        assert_eq!(plan.write_fault(2), Some(FaultKind::Kill));
+        assert_eq!(plan.for_shard(1).write_fault(2), Some(FaultKind::Kill));
+        assert_eq!(plan.write_fault(0), None);
+        assert_eq!(plan.write_fault(3), None);
+        // #2-scoped tear fires only in shard 2
+        assert_eq!(plan.write_fault(5), None);
+        assert_eq!(plan.for_shard(1).write_fault(5), None);
+        assert_eq!(plan.for_shard(2).write_fault(5), Some(FaultKind::Tear));
+        // panic fires on attempt 0 only; panic2 on attempts 0 and 1
+        assert!(plan.cell_panics(3, 0));
+        assert!(!plan.cell_panics(3, 1));
+        assert!(plan.cell_panics(4, 0));
+        assert!(plan.cell_panics(4, 1));
+        assert!(!plan.cell_panics(4, 2));
+        // panic sites are not write faults and vice versa
+        assert_eq!(plan.write_fault(4), None);
+        assert!(!plan.cell_panics(2, 0));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("x").is_err());
+        assert!(FaultPlan::parse("7:").is_err());
+        assert!(FaultPlan::parse("7:boom@1").is_err());
+        assert!(FaultPlan::parse("7:kill").is_err());
+        assert!(FaultPlan::parse("7:kill@x").is_err());
+        assert!(FaultPlan::parse("7:kill@1#0").is_err());
+        assert!(FaultPlan::parse("7:kill@1,").is_err());
+    }
+
+    #[test]
+    fn seeded_schedules_are_replayable_and_shard_keyed() {
+        let plan = FaultPlan::parse("1701").unwrap();
+        assert!(!plan.is_noop());
+        let schedule: Vec<Option<FaultKind>> = (0..64).map(|s| plan.write_fault(s)).collect();
+        // pure function of (seed, shard, slot): replays identically
+        assert_eq!(
+            schedule,
+            (0..64)
+                .map(|s| FaultPlan::parse("1701").unwrap().write_fault(s))
+                .collect::<Vec<_>>()
+        );
+        // a fault actually fires somewhere in a 64-slot window, and a
+        // different shard draws a different schedule
+        assert!(schedule.iter().any(|f| f.is_some()));
+        let other: Vec<Option<FaultKind>> =
+            (0..64).map(|s| plan.for_shard(2).write_fault(s)).collect();
+        assert_ne!(schedule, other);
+        // seeded panics are first-attempt only (self-healing)
+        let panicky = (0..64).find(|&c| plan.cell_panics(c, 0));
+        assert!(panicky.is_some());
+        assert!(!plan.cell_panics(panicky.unwrap(), 1));
+        // seeded mode never draws a hang
+        assert!(schedule.iter().all(|f| *f != Some(FaultKind::Hang)));
+    }
+}

@@ -4,6 +4,7 @@
 //! set has no `proptest`).
 
 pub mod bench;
+pub mod faults;
 pub mod json;
 pub mod logging;
 pub mod parallel;

@@ -98,6 +98,38 @@ where
         .collect()
 }
 
+/// [`parallel_map_n`] with per-item panic isolation: each `f(i)` runs
+/// under [`std::panic::catch_unwind`], so one panicking item yields an
+/// `Err` in *its* slot while every other item still completes and the
+/// pool survives. This is the sweep engine's cell executor — a worker
+/// panic (injected or real) must become that cell's structured error
+/// row, not a poisoned pool that takes the whole shard down. Ordering
+/// and worker-count invariance are exactly [`parallel_map_n`]'s; `f` is
+/// wrapped in `AssertUnwindSafe` (the callers' shared state is
+/// lock-guarded, and a panicked item's result is never read).
+pub fn parallel_map_n_caught<R, F>(workers: usize, n: usize, f: F) -> Vec<std::thread::Result<R>>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    parallel_map_n(workers, n, |i| {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)))
+    })
+}
+
+/// Best-effort human-readable message from a caught panic payload
+/// (`&str` and `String` payloads — `panic!` produces these — are
+/// extracted; anything else gets a placeholder).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Ordered parallel map over a slice: `f(index, &item)` with the results
 /// in item order for every worker count.
 pub fn parallel_map<T, R, F>(workers: usize, items: &[T], f: F) -> Vec<R>
@@ -248,6 +280,30 @@ mod tests {
             });
             assert!(caught.is_err(), "panic must propagate at {w} workers");
         }
+    }
+
+    #[test]
+    fn caught_map_isolates_panics_to_their_slot() {
+        for w in [1usize, 2, 8] {
+            let results = parallel_map_n_caught(w, 9, |i| {
+                if i == 4 {
+                    panic!("boom at {i}");
+                }
+                i * 10
+            });
+            assert_eq!(results.len(), 9, "workers={w}");
+            for (i, r) in results.iter().enumerate() {
+                if i == 4 {
+                    let payload = r.as_ref().expect_err("item 4 must be caught");
+                    assert_eq!(panic_message(payload.as_ref()), "boom at 4");
+                } else {
+                    assert_eq!(*r.as_ref().unwrap(), i * 10, "workers={w}");
+                }
+            }
+        }
+        // String payloads extract too; exotic payloads degrade gracefully
+        let caught = std::panic::catch_unwind(|| std::panic::panic_any(7usize)).unwrap_err();
+        assert_eq!(panic_message(caught.as_ref()), "non-string panic payload");
     }
 
     #[test]

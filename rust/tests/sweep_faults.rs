@@ -1,0 +1,245 @@
+//! Chaos suite for the self-healing shard supervisor: drive real
+//! `odl-har sweep --shard I/N` child processes through seeded
+//! kill/torn-write/cell-panic/hang schedules (`--inject-faults`, see
+//! `util::faults`) and assert the supervisor's auto-merged output is
+//! **byte-identical** to an undisturbed single-process run — the
+//! determinism contract extended to the failure domain. Also pins the
+//! CLI exit-code contract: 0 complete / 2 degraded / 3 failed.
+
+use odl_har::config;
+use odl_har::coordinator::supervise::{
+    shard_out_paths, supervise, ProcessLauncher, SuperviseStatus,
+};
+use odl_har::coordinator::sweep::{run_planned_to_file, SweepPlan};
+use std::path::PathBuf;
+
+/// A 4-cell grid (2 seeds x 2 loss probs) that a sweep finishes in
+/// about a second — big enough for two shards with a real interior cut,
+/// small enough to chaos-test many schedules. The `[supervise]` section
+/// doubles as coverage for the TOML knobs.
+const CONFIG: &str = r#"
+[fleet]
+n_edges = 2
+n_hidden = 16
+horizon_s = 30
+drift_at_s = 12
+train_target = 24
+seed = 1
+data_seed = 77
+workers = 1
+
+[data]
+n_features = 24
+n_classes = 3
+samples_per_cell = 4
+
+[sweep]
+seeds = [1, 2]
+thetas = ["auto"]
+edge_counts = [2]
+detectors = ["oracle"]
+n_hiddens = [16]
+loss_probs = [0.0, 0.2]
+teacher_errors = [0.0]
+workers = 1
+
+[supervise]
+retry_budget = 3
+backoff_base_ms = 5
+backoff_cap_ms = 20
+poll_ms = 5
+"#;
+
+fn exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_odl-har"))
+}
+
+struct Setup {
+    dir: PathBuf,
+    cfg_path: PathBuf,
+    plan: SweepPlan,
+    clean: Vec<u8>,
+}
+
+fn setup(name: &str) -> Setup {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("grid.toml");
+    std::fs::write(&cfg_path, CONFIG).unwrap();
+    let mut spec = config::sweep_from_str(CONFIG).unwrap();
+    spec.workers = 2; // worker counts never move an output byte
+    let plan = spec.plan();
+    let single = dir.join("single.jsonl");
+    run_planned_to_file(&spec, &plan, &single).unwrap();
+    let clean = std::fs::read(&single).unwrap();
+    Setup {
+        dir,
+        cfg_path,
+        plan,
+        clean,
+    }
+}
+
+#[test]
+fn chaos_schedules_recover_to_byte_identical_merge() {
+    let s = setup("odl_har_chaos_schedules_test");
+    // one schedule per injected failure mode: a child SIGKILL mid-stream,
+    // a torn trailer write, and a cell that defeats the in-pool retry
+    let schedules = ["11:kill@2", "12:tear@3", "13:panic2@1"];
+    for (si, sched) in schedules.iter().enumerate() {
+        for &w in &[1usize, 2, 8] {
+            let merged = s.dir.join(format!("merged_{si}_w{w}.jsonl"));
+            let paths = shard_out_paths(&merged, 2);
+            let mut scfg = config::supervise_from_str(CONFIG).unwrap();
+            scfg.workers_per_shard = w;
+            scfg.fault_spec = Some(sched.to_string());
+            let launcher = ProcessLauncher {
+                exe: exe(),
+                config_path: s.cfg_path.clone(),
+            };
+            let out = supervise(&s.plan, &scfg, &launcher, &paths, Some(&merged)).unwrap();
+            assert_eq!(
+                out.status,
+                SuperviseStatus::Complete,
+                "schedule {sched} x {w} workers must self-heal: {:?}",
+                out.shards
+            );
+            assert!(
+                out.shards.iter().any(|r| r.attempts > 1),
+                "schedule {sched} should have forced at least one relaunch"
+            );
+            assert_eq!(
+                std::fs::read(&merged).unwrap(),
+                s.clean,
+                "schedule {sched} x {w} workers: merged bytes diverged"
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&s.dir);
+}
+
+#[test]
+fn seeded_chaos_is_replayable_and_recovers() {
+    let s = setup("odl_har_chaos_seeded_test");
+    let mut attempts_seen = Vec::new();
+    for round in 0..2 {
+        let merged = s.dir.join(format!("merged_r{round}.jsonl"));
+        let paths = shard_out_paths(&merged, 2);
+        let mut scfg = config::supervise_from_str(CONFIG).unwrap();
+        scfg.workers_per_shard = 2;
+        // bare seed = fully seeded schedule drawn from stream_seed —
+        // write faults and first-attempt cell panics, never hangs
+        scfg.fault_spec = Some("1701".to_string());
+        let launcher = ProcessLauncher {
+            exe: exe(),
+            config_path: s.cfg_path.clone(),
+        };
+        let out = supervise(&s.plan, &scfg, &launcher, &paths, Some(&merged)).unwrap();
+        assert_eq!(out.status, SuperviseStatus::Complete);
+        assert_eq!(std::fs::read(&merged).unwrap(), s.clean);
+        attempts_seen.push(out.shards.iter().map(|r| r.attempts).collect::<Vec<_>>());
+    }
+    assert_eq!(
+        attempts_seen[0], attempts_seen[1],
+        "the same fault seed must replay the same failure schedule"
+    );
+    let _ = std::fs::remove_dir_all(&s.dir);
+}
+
+#[test]
+fn hung_child_process_is_sigkilled_and_recovered() {
+    let s = setup("odl_har_chaos_hang_test");
+    let merged = s.dir.join("merged.jsonl");
+    let paths = shard_out_paths(&merged, 2);
+    let mut scfg = config::supervise_from_str(CONFIG).unwrap();
+    scfg.workers_per_shard = 1;
+    // shard 2 wedges (flushes its durable prefix, then spins) — only the
+    // byte-growth heartbeat can catch this
+    scfg.fault_spec = Some("14:hang@2#2".to_string());
+    scfg.heartbeat_timeout_s = 1.0;
+    scfg.poll_ms = 50;
+    let launcher = ProcessLauncher {
+        exe: exe(),
+        config_path: s.cfg_path.clone(),
+    };
+    let out = supervise(&s.plan, &scfg, &launcher, &paths, Some(&merged)).unwrap();
+    assert_eq!(out.status, SuperviseStatus::Complete, "{:?}", out.shards);
+    assert!(out.shards[1].attempts >= 2, "the hung shard must relaunch");
+    assert!(out.shards[1]
+        .last_error
+        .as_deref()
+        .unwrap()
+        .contains("no heartbeat"));
+    assert_eq!(std::fs::read(&merged).unwrap(), s.clean);
+    let _ = std::fs::remove_dir_all(&s.dir);
+}
+
+#[test]
+fn cli_exit_codes_distinguish_complete_degraded_failed() {
+    let s = setup("odl_har_chaos_exitcode_test");
+    let run = |extra: &[&str], out: &std::path::Path| -> i32 {
+        let status = std::process::Command::new(exe())
+            .arg("sweep")
+            .arg("--config")
+            .arg(&s.cfg_path)
+            .arg("--shard")
+            .arg("auto:2")
+            .arg("--out")
+            .arg(out)
+            .args(extra)
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .status()
+            .expect("spawning the supervisor CLI");
+        status.code().expect("supervisor must exit, not die on a signal")
+    };
+
+    // complete (0): a mid-run kill is retried and auto-merged
+    let merged = s.dir.join("merged_ok.jsonl");
+    let code = run(&["--retry-budget", "3", "--inject-faults", "11:kill@2"], &merged);
+    assert_eq!(code, 0);
+    assert_eq!(std::fs::read(&merged).unwrap(), s.clean);
+
+    // degraded (2): shard 2 tears forever with no retry budget; shard 1
+    // completes — merge is skipped
+    let merged = s.dir.join("merged_degraded.jsonl");
+    let code = run(
+        &[
+            "--retry-budget",
+            "0",
+            "--fault-attempts",
+            "9",
+            "--inject-faults",
+            "7:tear@1#2",
+        ],
+        &merged,
+    );
+    assert_eq!(code, 2);
+    assert!(!merged.exists(), "a degraded study must not publish a merge");
+
+    // failed (3): every shard tears forever
+    let merged = s.dir.join("merged_failed.jsonl");
+    let code = run(
+        &[
+            "--retry-budget",
+            "0",
+            "--fault-attempts",
+            "9",
+            "--inject-faults",
+            "7:tear@1",
+        ],
+        &merged,
+    );
+    assert_eq!(code, 3);
+    assert!(!merged.exists());
+
+    // a degraded study resumes: rerunning with the fault cleared finishes
+    // only the quarantined shard and publishes the byte-identical merge
+    let merged = s.dir.join("merged_degraded.jsonl");
+    let code = run(&["--retry-budget", "1"], &merged);
+    assert_eq!(code, 0);
+    assert_eq!(std::fs::read(&merged).unwrap(), s.clean);
+
+    let _ = std::fs::remove_dir_all(&s.dir);
+}

@@ -37,6 +37,10 @@
 #            noisy timings (the baseline-relative gate above still
 #            catches sustained drift, and the expected value on the
 #            bench grid is several x)
+#   sweep:   supervise_overhead_frac <= 0.15 — the fault-free --shard
+#            auto supervisor (child processes + heartbeat polling +
+#            auto-merge) must cost at most 15% over a single-process
+#            run of the same grid
 
 set -euo pipefail
 cd "${BENCH_DIR:-"$(dirname "$0")/../rust"}"
@@ -161,6 +165,8 @@ if sweep is not None:
     # value on the bench grid is several x; the relative gate catches
     # sustained drift)
     absolute_gate(sweep, "edge_memo_speedup", 1.0 - TOL, True)
+    # self-healing supervision must be ~free when nothing fails
+    absolute_gate(sweep, "supervise_overhead_frac", 0.15, False)
 
 if failures:
     print("bench_check: FAIL (regression): " + ", ".join(failures))

@@ -9,7 +9,7 @@
 # bench/baseline files must warn and skip — a fresh tree seeds baselines,
 # it never fails) and each gate (baseline-relative memo_speedup /
 # edge_memo_speedup, absolute resume_overhead_frac / edge_hit_rate /
-# edge_memo_speedup floors).
+# edge_memo_speedup / supervise_overhead_frac floors and ceilings).
 
 set -euo pipefail
 here="$(cd "$(dirname "$0")" && pwd)"
@@ -42,9 +42,9 @@ run_case() {
 }
 
 sweep_json() {
-  # sweep_json MEMO_SPEEDUP RESUME_FRAC EDGE_HIT_RATE EDGE_MEMO_SPEEDUP
-  printf '{"schema":"bench_sweep/v3","memo_speedup":%s,"resume_overhead_frac":%s,"edge_hit_rate":%s,"edge_memo_speedup":%s}' \
-    "$1" "$2" "$3" "$4"
+  # sweep_json MEMO_SPEEDUP RESUME_FRAC EDGE_HIT_RATE EDGE_MEMO_SPEEDUP SUPERVISE_FRAC
+  printf '{"schema":"bench_sweep/v4","memo_speedup":%s,"resume_overhead_frac":%s,"edge_hit_rate":%s,"edge_memo_speedup":%s,"supervise_overhead_frac":%s}' \
+    "$1" "$2" "$3" "$4" "$5"
 }
 
 # 1. fresh tree: nothing measured at all — degrade, never fail
@@ -59,7 +59,7 @@ echo '{"schema": truncated' > "$tmp/BENCH_sweep.json"
 run_case "corrupt BENCH_sweep.json" 0 "unreadable"
 
 # 4. first healthy run, no baseline yet: accepted as baseline
-sweep_json 2.0 0.05 0.8 3.0 > "$tmp/BENCH_sweep.json"
+sweep_json 2.0 0.05 0.8 3.0 0.05 > "$tmp/BENCH_sweep.json"
 run_case "first run seeds baseline" 0 "first run, accepting as baseline"
 
 # 5. empty baseline file: treated as a first run, not a crash
@@ -67,40 +67,50 @@ run_case "first run seeds baseline" 0 "first run, accepting as baseline"
 run_case "empty baseline degrades to first run" 0 "BENCH_sweep.prev.json is empty"
 
 # 6. healthy numbers vs a healthy baseline: PASS
-sweep_json 2.0 0.05 0.8 3.0 > "$tmp/BENCH_sweep.prev.json"
+sweep_json 2.0 0.05 0.8 3.0 0.05 > "$tmp/BENCH_sweep.prev.json"
 run_case "healthy vs baseline" 0 "bench_check: PASS"
 
 # 7. memo_speedup regression (>10% below baseline): FAIL
-sweep_json 1.0 0.05 0.8 3.0 > "$tmp/BENCH_sweep.json"
+sweep_json 1.0 0.05 0.8 3.0 0.05 > "$tmp/BENCH_sweep.json"
 run_case "memo_speedup regression fails" 1 "sweep:memo_speedup.*REGRESSION"
 
 # 8. edge_memo_speedup regression vs baseline: FAIL
-sweep_json 2.0 0.05 0.8 2.0 > "$tmp/BENCH_sweep.json"
+sweep_json 2.0 0.05 0.8 2.0 0.05 > "$tmp/BENCH_sweep.json"
 run_case "edge_memo_speedup regression fails" 1 "sweep:edge_memo_speedup.*REGRESSION"
 
 # 9. absolute resume gate: a resumed-complete run must be ~free
-sweep_json 2.0 0.50 0.8 3.0 > "$tmp/BENCH_sweep.json"
+sweep_json 2.0 0.50 0.8 3.0 0.05 > "$tmp/BENCH_sweep.json"
 run_case "resume_overhead_frac gate fails" 1 "sweep:resume_overhead_frac.*REGRESSION"
 
 # 10. absolute edge-hit-rate floor: the memo must engage
-sweep_json 2.0 0.05 0.2 3.0 > "$tmp/BENCH_sweep.json"
+sweep_json 2.0 0.05 0.2 3.0 0.05 > "$tmp/BENCH_sweep.json"
 run_case "edge_hit_rate floor fails" 1 "sweep:edge_hit_rate.*REGRESSION"
 
 # 11. absolute edge wall-clock floor (0.9 = 1.0 minus the shared noise
 # tolerance): a memo that clearly loses wall clock must fail
-sweep_json 2.0 0.05 0.8 0.85 > "$tmp/BENCH_sweep.json"
+sweep_json 2.0 0.05 0.8 0.85 0.05 > "$tmp/BENCH_sweep.json"
 run_case "edge_memo_speedup floor fails" 1 "sweep:edge_memo_speedup.*REGRESSION"
 # 11b. and a within-noise 0.95 passes the floor (the relative gate is
 # judged against its own baseline, here equal)
-sweep_json 2.0 0.05 0.8 0.95 > "$tmp/BENCH_sweep.json"
-sweep_json 2.0 0.05 0.8 0.95 > "$tmp/BENCH_sweep.prev.json"
+sweep_json 2.0 0.05 0.8 0.95 0.05 > "$tmp/BENCH_sweep.json"
+sweep_json 2.0 0.05 0.8 0.95 0.05 > "$tmp/BENCH_sweep.prev.json"
 run_case "within-noise speedup passes floor" 0 "bench_check: PASS"
-sweep_json 2.0 0.05 0.8 3.0 > "$tmp/BENCH_sweep.prev.json"
+sweep_json 2.0 0.05 0.8 3.0 0.05 > "$tmp/BENCH_sweep.prev.json"
 
 # 12. an old bench JSON without the edge metrics: skip those gates
 printf '{"schema":"bench_sweep/v2","memo_speedup":2.0,"resume_overhead_frac":0.05}' \
   > "$tmp/BENCH_sweep.json"
 run_case "pre-v3 bench JSON skips edge gates" 0 "edge_hit_rate not measured"
+
+# 12b. absolute supervise ceiling: the fault-free --shard auto supervisor
+# must cost <= 15% over a single-process run of the same grid
+sweep_json 2.0 0.05 0.8 3.0 0.50 > "$tmp/BENCH_sweep.json"
+run_case "supervise_overhead_frac gate fails" 1 "sweep:supervise_overhead_frac.*REGRESSION"
+
+# 12c. a v3-era bench JSON without the supervise metric skips that gate
+printf '{"schema":"bench_sweep/v3","memo_speedup":2.0,"resume_overhead_frac":0.05,"edge_hit_rate":0.8,"edge_memo_speedup":3.0}' \
+  > "$tmp/BENCH_sweep.json"
+run_case "pre-v4 bench JSON skips supervise gate" 0 "supervise_overhead_frac not measured"
 
 # 13. a bench-run invocation (REQUIRE_FRESH=1) must FAIL on a missing
 # fresh measurement — write failures cannot hide regressions
@@ -116,7 +126,7 @@ else
 fi
 
 # 14. and passes again once the fresh measurements exist
-sweep_json 2.0 0.05 0.8 3.0 > "$tmp/BENCH_sweep.json"
+sweep_json 2.0 0.05 0.8 3.0 0.05 > "$tmp/BENCH_sweep.json"
 printf '{"schema":"bench_hotpath/v1","speedup_vs_baseline":{}}' > "$tmp/BENCH_hotpath.json"
 printf '{"schema":"bench_fleet/v1","results":[]}' > "$tmp/BENCH_fleet.json"
 out=$(SKIP_BENCH=1 REQUIRE_FRESH=1 BENCH_DIR="$tmp" bash "$check" 2>&1) && rc=0 || rc=$?
@@ -131,7 +141,7 @@ fi
 rm -f "$tmp"/BENCH_hotpath.json "$tmp"/BENCH_fleet.json
 
 # 15. compare-only mode never rotates baselines
-sweep_json 2.0 0.05 0.8 3.0 > "$tmp/BENCH_sweep.json"
+sweep_json 2.0 0.05 0.8 3.0 0.05 > "$tmp/BENCH_sweep.json"
 rm -f "$tmp/BENCH_sweep.prev.json"
 SKIP_BENCH=1 BENCH_DIR="$tmp" bash "$check" > /dev/null 2>&1
 if [[ -f "$tmp/BENCH_sweep.prev.json" ]]; then

@@ -59,6 +59,37 @@ mv /tmp/odl_sweep_shard2_cut.jsonl /tmp/odl_sweep_shard2.jsonl
 cmp /tmp/odl_sweep_smoke.jsonl /tmp/odl_sweep_merged.jsonl
 ./target/release/odl-har sweep --config configs/sweep_smoke.toml --shard 1/1 --out /tmp/odl_sweep_shard11.jsonl
 cmp /tmp/odl_sweep_smoke.jsonl /tmp/odl_sweep_shard11.jsonl
+# chaos smoke: the self-healing supervisor (--shard auto) with an
+# injected mid-run child SIGKILL must relaunch onto --resume, auto-merge,
+# and produce bytes identical to the clean single-process run (exit 0)
+rm -f /tmp/odl_sweep_chaos.jsonl /tmp/odl_sweep_chaos.shard*.jsonl
+./target/release/odl-har sweep --config configs/sweep_smoke.toml --shard auto:2 \
+  --retry-budget 3 --inject-faults 7:kill@3 --out /tmp/odl_sweep_chaos.jsonl
+cmp /tmp/odl_sweep_smoke.jsonl /tmp/odl_sweep_chaos.jsonl
+# exit-code contract: all shards quarantined (torn write every attempt,
+# no retry budget) must exit 3; a single quarantined shard must exit 2
+rm -f /tmp/odl_sweep_chaos_fail.jsonl /tmp/odl_sweep_chaos_fail.shard*.jsonl
+rc=0
+./target/release/odl-har sweep --config configs/sweep_smoke.toml --shard auto:2 \
+  --retry-budget 0 --fault-attempts 9 --inject-faults 7:tear@1 \
+  --out /tmp/odl_sweep_chaos_fail.jsonl >/dev/null 2>&1 || rc=$?
+if [[ "$rc" -ne 3 ]]; then
+  echo "chaos smoke: all-quarantined supervisor run must exit 3, got $rc" >&2
+  exit 1
+fi
+rm -f /tmp/odl_sweep_chaos_deg.jsonl /tmp/odl_sweep_chaos_deg.shard*.jsonl
+rc=0
+./target/release/odl-har sweep --config configs/sweep_smoke.toml --shard auto:2 \
+  --retry-budget 0 --fault-attempts 9 --inject-faults "7:tear@1#2" \
+  --out /tmp/odl_sweep_chaos_deg.jsonl >/dev/null 2>&1 || rc=$?
+if [[ "$rc" -ne 2 ]]; then
+  echo "chaos smoke: degraded supervisor run must exit 2, got $rc" >&2
+  exit 1
+fi
+if [[ -f /tmp/odl_sweep_chaos_deg.jsonl ]]; then
+  echo "chaos smoke: a degraded run must not publish a merged file" >&2
+  exit 1
+fi
 # the bench_check gate's own fixture suite (no toolchain needed)
 ../scripts/test_bench_check.sh
 echo "verify: OK"
