@@ -1,0 +1,142 @@
+//! Serve-path benchmark: an in-process `coordinator::serve` server on an
+//! ephemeral port, one client streaming the deterministic loadgen event
+//! stream over real TCP, measuring end-to-end request→decision latency
+//! (p50/p99) and sustained throughput (events/s).
+//!
+//! Before timing it asserts the service contracts: every event is
+//! applied exactly once (`summary.events == n`, and every applied event
+//! either trained or was pruned), and the drained server exits cleanly.
+//!
+//! Results go to `BENCH_serve.json` (`ODL_BENCH_SERVE_JSON` overrides);
+//! `scripts/bench_check.sh` gates `throughput_eps` (higher is better)
+//! and `p99_ms` (lower is better) against the rotated baseline.
+
+use odl_har::coordinator::proto::{bits_of, Request, Response};
+use odl_har::coordinator::serve::{gen_events, serve_with, ServeConfig};
+use odl_har::data::SynthConfig;
+use odl_har::util::bench::fast_mode;
+use odl_har::util::faults::FaultPlan;
+use odl_har::util::json::{obj, Json};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::Instant;
+
+fn send(stream: &mut TcpStream, req: &Request) {
+    let mut bytes = req.to_line().into_bytes();
+    bytes.push(b'\n');
+    stream.write_all(&bytes).expect("request write");
+}
+
+fn recv(reader: &mut BufReader<TcpStream>) -> Response {
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("response read");
+    Response::parse(line.trim()).expect("response parse")
+}
+
+fn percentile_ms(sorted: &[f64], p: f64) -> f64 {
+    let idx = ((sorted.len() as f64 * p).ceil() as usize)
+        .saturating_sub(1)
+        .min(sorted.len() - 1);
+    sorted[idx] * 1e3
+}
+
+fn main() {
+    let cfg = ServeConfig {
+        n_hidden: 16,
+        warmup: Some(32),
+        seed: 11,
+        synth: SynthConfig {
+            n_features: 12,
+            n_classes: 3,
+            n_subjects: 2,
+            samples_per_cell: 12,
+            ..SynthConfig::default()
+        },
+        ..ServeConfig::default()
+    };
+    let n = if fast_mode() { 500 } else { 2000 };
+    let events = gen_events(&cfg.synth, cfg.data_seed(), cfg.seed, "bench-edge", n);
+    println!("serve bench: {n} events over loopback TCP, n_hidden {}", cfg.n_hidden);
+
+    let (tx, rx) = mpsc::channel();
+    let server_cfg = cfg.clone();
+    let server = std::thread::spawn(move || {
+        serve_with(&server_cfg, &FaultPlan::default(), move |addr| {
+            tx.send(addr).expect("address handoff");
+        })
+        .expect("serve failed")
+    });
+    let addr = rx.recv().expect("server never became ready");
+
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).expect("nodelay");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    send(&mut stream, &Request::Hello { client: "bench-edge".into() });
+    match recv(&mut reader) {
+        Response::Welcome { restored, .. } => assert!(!restored, "fresh server"),
+        other => panic!("expected welcome, got {other:?}"),
+    }
+
+    let mut latencies = Vec::with_capacity(events.len());
+    let t0 = Instant::now();
+    for (seq, (x, label)) in events.iter().enumerate() {
+        let req = Request::Event {
+            seq: seq as u64,
+            label: *label,
+            x_bits: bits_of(x),
+        };
+        let t = Instant::now();
+        send(&mut stream, &req);
+        match recv(&mut reader) {
+            Response::Decision { seq: got, .. } => {
+                assert_eq!(got, seq as u64, "acks must come back in order")
+            }
+            other => panic!("expected a decision for seq {seq}, got {other:?}"),
+        }
+        latencies.push(t.elapsed().as_secs_f64());
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+
+    send(&mut stream, &Request::Shutdown);
+    match recv(&mut reader) {
+        Response::Draining => {}
+        other => panic!("expected draining, got {other:?}"),
+    }
+    drop(stream);
+    let summary = server.join().expect("server thread");
+    assert_eq!(summary.events, n as u64, "every event applied exactly once");
+    assert_eq!(
+        summary.trained + summary.skipped,
+        summary.events,
+        "every applied event either trained or was pruned"
+    );
+    println!(
+        "  contracts hold: {} events = {} trained + {} skipped, clean drain",
+        summary.events, summary.trained, summary.skipped
+    );
+
+    latencies.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    let throughput_eps = n as f64 / total_s.max(1e-9);
+    let p50_ms = percentile_ms(&latencies, 0.50);
+    let p99_ms = percentile_ms(&latencies, 0.99);
+    println!(
+        "  -> {throughput_eps:.0} events/s, p50 {p50_ms:.3} ms, p99 {p99_ms:.3} ms over {total_s:.3} s"
+    );
+
+    let out = obj(vec![
+        ("schema", Json::Str("bench_serve/v1".into())),
+        ("fast_mode", Json::Bool(fast_mode())),
+        ("events", Json::Num(n as f64)),
+        ("total_s", Json::Num(total_s)),
+        ("throughput_eps", Json::Num(throughput_eps)),
+        ("p50_ms", Json::Num(p50_ms)),
+        ("p99_ms", Json::Num(p99_ms)),
+    ]);
+    let path =
+        std::env::var("ODL_BENCH_SERVE_JSON").unwrap_or_else(|_| "BENCH_serve.json".into());
+    match std::fs::write(&path, out.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -8,6 +8,7 @@
 pub mod toml;
 
 use crate::coordinator::fleet::{DetectorKind, Scenario};
+use crate::coordinator::serve::ServeConfig;
 use crate::coordinator::supervise::SuperviseConfig;
 use crate::coordinator::sweep::SweepSpec;
 use crate::coordinator::ChannelConfig;
@@ -439,6 +440,107 @@ pub fn supervise_from_file(path: &Path) -> Result<SuperviseConfig> {
     supervise_from_str(&text)
 }
 
+/// The keys the optional `[serve]` section understands (knobs for
+/// `odl-har serve`; see `coordinator::serve::ServeConfig`). Same contract
+/// as [`SWEEP_KEYS`]: a present key outside this list is a rejected typo.
+/// The scenario itself (model shape, teacher, pruning, data) comes from
+/// the shared `[fleet]`/`[pruning]`/`[teacher]`/`[data]` sections.
+const SERVE_KEYS: &[&str] = &[
+    "bind",
+    "max_clients",
+    "queue_depth",
+    "read_timeout_ms",
+    "idle_timeout_ms",
+    "retry_after_ms",
+    "warmup",
+    "snapshot",
+];
+
+/// Parse a serve config: the `[serve]` section onto defaults, plus the
+/// scenario base shared with `fleet`/`sweep`:
+///
+/// ```toml
+/// [serve]
+/// bind = "127.0.0.1:4710"    # port 0 = ephemeral
+/// max_clients = 8            # admission cap (busy beyond it)
+/// queue_depth = 64           # per-connection input bound [KiB]
+/// read_timeout_ms = 250      # socket deadline granularity
+/// idle_timeout_ms = 30000    # disconnect stalled clients
+/// retry_after_ms = 50        # back-off hint in busy/shed responses
+/// warmup = 128               # pruning warmup (default: warmup_for(n_hidden))
+/// snapshot = "serve.snap.json"
+/// ```
+pub fn serve_from_str(text: &str) -> Result<ServeConfig> {
+    let doc = TomlDoc::parse(text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+    for key in doc.section_keys("serve") {
+        ensure!(
+            SERVE_KEYS.contains(&key),
+            "unknown [serve] key '{key}' — valid keys: {}",
+            SERVE_KEYS.join(", ")
+        );
+    }
+    let (sc, seed, _workers) = scenario_from_doc(&doc)?;
+    let mut cfg = ServeConfig {
+        seed,
+        data_seed: sc.data_seed,
+        teacher_error: sc.teacher_error,
+        fixed_theta: sc.fixed_theta,
+        n_hidden: sc.n_hidden,
+        synth: sc.synth,
+        ..ServeConfig::default()
+    };
+    // present-but-wrong-typed values must error, not silently keep the
+    // default — same rule as the [sweep]/[supervise] sections
+    let uint = |key: &str| -> Result<Option<u64>> {
+        match doc.get("serve", key) {
+            None => Ok(None),
+            Some(TomlValue::Int(i)) if *i >= 0 => Ok(Some(*i as u64)),
+            Some(other) => bail!("serve.{key} must be a non-negative integer, got {other:?}"),
+        }
+    };
+    if let Some(v) = uint("max_clients")? {
+        ensure!(v >= 1, "serve.max_clients must be ≥ 1");
+        cfg.max_clients = v as usize;
+    }
+    if let Some(v) = uint("queue_depth")? {
+        ensure!(v >= 1, "serve.queue_depth must be ≥ 1 (KiB)");
+        cfg.queue_depth = v as usize;
+    }
+    if let Some(v) = uint("read_timeout_ms")? {
+        ensure!(v >= 1, "serve.read_timeout_ms must be ≥ 1");
+        cfg.read_timeout_ms = v;
+    }
+    if let Some(v) = uint("idle_timeout_ms")? {
+        ensure!(v >= 1, "serve.idle_timeout_ms must be ≥ 1");
+        cfg.idle_timeout_ms = v;
+    }
+    if let Some(v) = uint("retry_after_ms")? {
+        cfg.retry_after_ms = v;
+    }
+    if let Some(v) = uint("warmup")? {
+        cfg.warmup = Some(v as usize);
+    }
+    match doc.get("serve", "bind") {
+        None => {}
+        Some(TomlValue::Str(s)) => cfg.bind = s.clone(),
+        Some(other) => bail!("serve.bind must be a string address, got {other:?}"),
+    }
+    match doc.get("serve", "snapshot") {
+        None => {}
+        Some(TomlValue::Str(s)) => cfg.snapshot = Some(std::path::PathBuf::from(s)),
+        Some(other) => bail!("serve.snapshot must be a string path, got {other:?}"),
+    }
+    Ok(cfg)
+}
+
+/// [`serve_from_str`] over a config file (the `[serve]` section is
+/// optional — a scenario config without it yields the defaults).
+pub fn serve_from_file(path: &Path) -> Result<ServeConfig> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading config {}", path.display()))?;
+    serve_from_str(&text)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -700,6 +802,62 @@ record_pca = true
         // integer timeouts are accepted
         let cfg = supervise_from_str("[supervise]\nheartbeat_timeout_s = 2\n").unwrap();
         assert!((cfg.heartbeat_timeout_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serve_section_parses_onto_defaults_with_scenario_base() {
+        // absent section = defaults + the shared scenario sections
+        let cfg = serve_from_str(
+            "[fleet]\nn_hidden = 48\nseed = 9\ndata_seed = 77\n\n\
+             [pruning]\ntheta = 0.16\n\n[teacher]\nerror_rate = 0.1\n\n\
+             [data]\nn_features = 24\nn_classes = 4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.n_hidden, 48);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.data_seed, Some(77));
+        assert_eq!(cfg.data_seed(), 77);
+        assert!((cfg.teacher_error - 0.1).abs() < 1e-12);
+        assert_eq!(cfg.fixed_theta.map(f32::to_bits), Some(0.16f32.to_bits()));
+        assert_eq!(cfg.synth.n_features, 24);
+        assert_eq!(cfg.synth.n_classes, 4);
+        assert_eq!(cfg.bind, "127.0.0.1:0");
+        assert_eq!(cfg.max_clients, 8);
+        assert!(cfg.warmup.is_none());
+        assert!(cfg.snapshot.is_none());
+
+        let cfg = serve_from_str(
+            "[serve]\nbind = \"0.0.0.0:4710\"\nmax_clients = 3\nqueue_depth = 16\n\
+             read_timeout_ms = 100\nidle_timeout_ms = 5000\nretry_after_ms = 25\n\
+             warmup = 12\nsnapshot = \"out/serve.snap.json\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.bind, "0.0.0.0:4710");
+        assert_eq!(cfg.max_clients, 3);
+        assert_eq!(cfg.queue_depth, 16);
+        assert_eq!(cfg.read_timeout_ms, 100);
+        assert_eq!(cfg.idle_timeout_ms, 5000);
+        assert_eq!(cfg.retry_after_ms, 25);
+        assert_eq!(cfg.warmup, Some(12));
+        assert_eq!(
+            cfg.snapshot.as_deref(),
+            Some(std::path::Path::new("out/serve.snap.json"))
+        );
+    }
+
+    #[test]
+    fn serve_rejects_unknown_keys_and_bad_types() {
+        let err = serve_from_str("[serve]\nmax_client = 4\n").unwrap_err().to_string();
+        assert!(err.contains("unknown [serve] key 'max_client'"), "{err}");
+        assert!(err.contains("max_clients"), "{err}");
+        // wrong types must error, not silently keep the default
+        assert!(serve_from_str("[serve]\nmax_clients = \"many\"\n").is_err());
+        assert!(serve_from_str("[serve]\nmax_clients = 0\n").is_err());
+        assert!(serve_from_str("[serve]\nqueue_depth = 0\n").is_err());
+        assert!(serve_from_str("[serve]\nread_timeout_ms = -5\n").is_err());
+        assert!(serve_from_str("[serve]\nbind = 4710\n").is_err());
+        assert!(serve_from_str("[serve]\nsnapshot = true\n").is_err());
+        assert!(serve_from_str("[serve]\nwarmup = 1.5\n").is_err());
     }
 
     #[test]

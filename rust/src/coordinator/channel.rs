@@ -149,6 +149,64 @@ mod tests {
     }
 
     #[test]
+    fn total_loss_fails_every_query_deterministically() {
+        // loss probability 1.0: every transmit exhausts first try +
+        // max_retries and fails — and two channels with the same seed
+        // produce byte-identical delivery streams (bernoulli(1.0) draws
+        // from the RNG on every attempt, so the stream has positions to
+        // replay)
+        let cfg = ChannelConfig {
+            loss_prob: 1.0,
+            max_retries: 2,
+            ..Default::default()
+        };
+        let run = || {
+            let mut ch = Channel::new(cfg.clone(), 19);
+            (0..64).map(|_| ch.transmit()).collect::<Vec<_>>()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed must replay the same delivery stream");
+        for d in &a {
+            assert!(!d.delivered);
+            assert_eq!(d.attempts, 3, "first try + 2 retries, always");
+        }
+        let mut ch = Channel::new(cfg, 19);
+        let _ = ch.transmit();
+        assert_eq!(ch.total_attempts, 3);
+        assert_eq!(ch.total_failures, 3);
+    }
+
+    #[test]
+    fn zero_retries_is_single_shot() {
+        // max_retries 0: exactly one attempt no matter the outcome
+        let cfg = ChannelConfig {
+            loss_prob: 1.0,
+            max_retries: 0,
+            ..Default::default()
+        };
+        let mut ch = Channel::new(cfg, 23);
+        let d = ch.transmit();
+        assert!(!d.delivered);
+        assert_eq!(d.attempts, 1);
+    }
+
+    #[test]
+    fn zero_loss_draws_but_never_fails() {
+        // loss 0.0 still draws once per attempt (bernoulli(0) consumes a
+        // sample), so repeated streams stay aligned — pinned here so a
+        // future "optimization" that skips the draw shows up as a
+        // determinism break, not a silent trajectory change
+        let run = || {
+            let mut ch = Channel::new(ChannelConfig::default(), 31);
+            (0..128).map(|_| ch.transmit()).collect::<Vec<_>>()
+        };
+        let a = run();
+        assert_eq!(a, run());
+        assert!(a.iter().all(|d| d.delivered && d.attempts == 1));
+    }
+
+    #[test]
     fn deterministic_given_seed() {
         let cfg = ChannelConfig {
             loss_prob: 0.3,

@@ -33,11 +33,19 @@
 //! exponential backoff onto the existing `--resume` path, quarantines
 //! shards that exhaust their retry budget, and auto-merges when the
 //! shard set completes — see `rust/RELIABILITY.md` for the fault model.
+//! [`serve`] lifts the coordinator into a long-running TCP service —
+//! admission control, bounded queues, read/idle deadlines, exactly-once
+//! in-order event application, and a graceful drain that publishes every
+//! client's OS-ELM/pruner/teacher state through the same crash-consistent
+//! snapshot path; [`proto`] is its JSONL wire protocol and
+//! `odl-har loadgen` its deterministic, chaos-tested edge client.
 
 pub mod channel;
 pub mod edge;
 pub mod fleet;
 pub mod metrics;
+pub mod proto;
+pub mod serve;
 pub mod supervise;
 pub mod sweep;
 pub mod teacher;
@@ -46,6 +54,10 @@ pub use channel::{Channel, ChannelConfig};
 pub use edge::{EdgeConfig, EdgeDevice, Mode, StepAction};
 pub use fleet::{Fleet, FleetConfig, ProvisionArtifacts, Scenario};
 pub use metrics::{EdgeMetrics, FleetReport};
+pub use proto::{DecisionAction, Request, Response};
+pub use serve::{
+    loadgen, serve, serve_with, LoadgenConfig, LoadgenSummary, ServeConfig, ServeSummary,
+};
 pub use supervise::{
     shard_out_paths, supervise, Launcher, ProcessLauncher, ShardReport, SuperviseConfig,
     SuperviseOutcome, SuperviseStatus, ThreadLauncher,

@@ -1,0 +1,416 @@
+//! The `odl-har serve` wire protocol: JSONL over TCP.
+//!
+//! One JSON object per line in each direction, built on the in-tree
+//! [`crate::util::json`] (no external deps, stable key order). The
+//! protocol is designed so that *every* network failure is recoverable by
+//! replay: events carry a client-assigned sequence number, the server
+//! applies them exactly once in order (duplicates are acknowledged
+//! without re-training, gaps are shed), and the handshake returns the
+//! server's applied watermark so a reconnecting client fast-forwards its
+//! buffered stream instead of replaying blind.
+//!
+//! Feature vectors and probabilities travel as **f32 bit patterns**
+//! (`u32` integers), not decimal floats — the serve stack's byte-identity
+//! contract (chaos run ≡ undisturbed run, snapshot round-trips exactly)
+//! leaves no room for decimal rounding on the wire.
+//!
+//! ```text
+//! client → server                         server → client
+//! ---------------                         ---------------
+//! {"type":"hello","client":NAME}          {"type":"welcome","client":NAME,
+//!                                          "restored":BOOL,"next_seq":N}
+//!                                         {"type":"busy","retry_after_ms":MS}
+//! {"type":"event","seq":N,"label":L,      {"type":"decision","seq":N,
+//!  "x":[bits,…]}                           "action":"trained"|"skipped"|
+//!                                          "duplicate","class":C,
+//!                                          "p1":bits,"p2":bits[,"label":L]}
+//!                                         {"type":"shed","seq":N,
+//!                                          "retry_after_ms":MS}
+//! {"type":"ping"}                         {"type":"pong"}
+//! {"type":"bye"}                          (close)
+//! {"type":"shutdown"}                     {"type":"draining"}
+//!                                         {"type":"error","reason":STR}
+//! ```
+
+use crate::util::json::{obj, Json};
+use anyhow::{bail, Context, Result};
+
+/// Protocol / snapshot schema tag.
+pub const PROTO_VERSION: &str = "odl-har-serve/v1";
+
+/// Encode a feature vector as its f32 bit patterns.
+pub fn bits_of(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Decode f32 bit patterns back into the exact feature vector.
+pub fn floats_of(bits: &[u32]) -> Vec<f32> {
+    bits.iter().map(|&b| f32::from_bits(b)).collect()
+}
+
+/// What the server did with an applied (or re-seen) event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecisionAction {
+    /// Pruning gate said query: the teacher labelled it, the model trained.
+    Trained,
+    /// Pruning gate said skip: no teacher query, no training.
+    Skipped,
+    /// `seq` below the applied watermark — acknowledged, not re-applied.
+    Duplicate,
+}
+
+impl DecisionAction {
+    fn as_str(self) -> &'static str {
+        match self {
+            DecisionAction::Trained => "trained",
+            DecisionAction::Skipped => "skipped",
+            DecisionAction::Duplicate => "duplicate",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "trained" => DecisionAction::Trained,
+            "skipped" => DecisionAction::Skipped,
+            "duplicate" => DecisionAction::Duplicate,
+            other => bail!("unknown decision action '{other}'"),
+        })
+    }
+}
+
+/// A client → server message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Register (or re-attach to) per-client state under `client`.
+    Hello { client: String },
+    /// One sensed sample: client-assigned sequence number, ground-truth
+    /// label (feeds the oracle teacher), f32-bit feature vector.
+    Event { seq: u64, label: usize, x_bits: Vec<u32> },
+    /// Liveness probe.
+    Ping,
+    /// Orderly goodbye — the server keeps the client's state in memory.
+    Bye,
+    /// Admin: stop accepting, drain in-flight work, snapshot, exit.
+    Shutdown,
+}
+
+impl Request {
+    /// One JSONL line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        match self {
+            Request::Hello { client } => obj(vec![
+                ("type", Json::Str("hello".into())),
+                ("client", Json::Str(client.clone())),
+            ]),
+            Request::Event { seq, label, x_bits } => obj(vec![
+                ("type", Json::Str("event".into())),
+                ("seq", Json::Num(*seq as f64)),
+                ("label", Json::Num(*label as f64)),
+                (
+                    "x",
+                    Json::Arr(x_bits.iter().map(|&b| Json::Num(b as f64)).collect()),
+                ),
+            ]),
+            Request::Ping => obj(vec![("type", Json::Str("ping".into()))]),
+            Request::Bye => obj(vec![("type", Json::Str("bye".into()))]),
+            Request::Shutdown => obj(vec![("type", Json::Str("shutdown".into()))]),
+        }
+        .to_string()
+    }
+
+    /// Parse one request line.
+    pub fn parse(line: &str) -> Result<Request> {
+        let j = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad request JSON: {e}"))?;
+        let ty = j
+            .get("type")
+            .and_then(Json::as_str)
+            .context("request missing 'type'")?;
+        Ok(match ty {
+            "hello" => Request::Hello {
+                client: j
+                    .get("client")
+                    .and_then(Json::as_str)
+                    .context("hello missing 'client'")?
+                    .to_string(),
+            },
+            "event" => Request::Event {
+                seq: j
+                    .get("seq")
+                    .and_then(Json::as_usize)
+                    .context("event missing 'seq'")? as u64,
+                label: j
+                    .get("label")
+                    .and_then(Json::as_usize)
+                    .context("event missing 'label'")?,
+                x_bits: parse_bits(j.get("x").context("event missing 'x'")?)?,
+            },
+            "ping" => Request::Ping,
+            "bye" => Request::Bye,
+            "shutdown" => Request::Shutdown,
+            other => bail!("unknown request type '{other}'"),
+        })
+    }
+}
+
+/// A server → client message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Handshake accepted. `next_seq` is the applied watermark: the first
+    /// event sequence number the server has not yet applied — a
+    /// reconnecting client fast-forwards its buffered stream to it.
+    Welcome { client: String, restored: bool, next_seq: u64 },
+    /// Admission control: the connection cap is reached; come back after
+    /// `retry_after_ms` (structured, so clients back off instead of spin).
+    Busy { retry_after_ms: u64 },
+    /// The outcome for one event. `p1`/`p2` are the local prediction's
+    /// top-2 probabilities as f32 bits; `label` is the teacher's label
+    /// when the event trained.
+    Decision {
+        seq: u64,
+        action: DecisionAction,
+        class: usize,
+        p1_bits: u32,
+        p2_bits: u32,
+        label: Option<usize>,
+    },
+    /// Backpressure: `seq` is more than the pipelining window ahead of
+    /// the applied watermark — deterministically refused, retry later.
+    Shed { seq: u64, retry_after_ms: u64 },
+    /// Liveness reply.
+    Pong,
+    /// The server is draining: no further requests will be served.
+    Draining,
+    /// Malformed or out-of-protocol request (the request was NOT applied).
+    Error { reason: String },
+}
+
+impl Response {
+    /// One JSONL line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        match self {
+            Response::Welcome { client, restored, next_seq } => obj(vec![
+                ("type", Json::Str("welcome".into())),
+                ("client", Json::Str(client.clone())),
+                ("restored", Json::Bool(*restored)),
+                ("next_seq", Json::Num(*next_seq as f64)),
+            ]),
+            Response::Busy { retry_after_ms } => obj(vec![
+                ("type", Json::Str("busy".into())),
+                ("retry_after_ms", Json::Num(*retry_after_ms as f64)),
+            ]),
+            Response::Decision { seq, action, class, p1_bits, p2_bits, label } => {
+                let mut pairs = vec![
+                    ("type", Json::Str("decision".into())),
+                    ("seq", Json::Num(*seq as f64)),
+                    ("action", Json::Str(action.as_str().into())),
+                    ("class", Json::Num(*class as f64)),
+                    ("p1", Json::Num(*p1_bits as f64)),
+                    ("p2", Json::Num(*p2_bits as f64)),
+                ];
+                if let Some(l) = label {
+                    pairs.push(("label", Json::Num(*l as f64)));
+                }
+                obj(pairs)
+            }
+            Response::Shed { seq, retry_after_ms } => obj(vec![
+                ("type", Json::Str("shed".into())),
+                ("seq", Json::Num(*seq as f64)),
+                ("retry_after_ms", Json::Num(*retry_after_ms as f64)),
+            ]),
+            Response::Pong => obj(vec![("type", Json::Str("pong".into()))]),
+            Response::Draining => obj(vec![("type", Json::Str("draining".into()))]),
+            Response::Error { reason } => obj(vec![
+                ("type", Json::Str("error".into())),
+                ("reason", Json::Str(reason.clone())),
+            ]),
+        }
+        .to_string()
+    }
+
+    /// Parse one response line.
+    pub fn parse(line: &str) -> Result<Response> {
+        let j = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response JSON: {e}"))?;
+        let ty = j
+            .get("type")
+            .and_then(Json::as_str)
+            .context("response missing 'type'")?;
+        Ok(match ty {
+            "welcome" => Response::Welcome {
+                client: j
+                    .get("client")
+                    .and_then(Json::as_str)
+                    .context("welcome missing 'client'")?
+                    .to_string(),
+                restored: matches!(j.get("restored"), Some(Json::Bool(true))),
+                next_seq: j
+                    .get("next_seq")
+                    .and_then(Json::as_usize)
+                    .context("welcome missing 'next_seq'")? as u64,
+            },
+            "busy" => Response::Busy {
+                retry_after_ms: j
+                    .get("retry_after_ms")
+                    .and_then(Json::as_usize)
+                    .context("busy missing 'retry_after_ms'")? as u64,
+            },
+            "decision" => Response::Decision {
+                seq: j
+                    .get("seq")
+                    .and_then(Json::as_usize)
+                    .context("decision missing 'seq'")? as u64,
+                action: DecisionAction::parse(
+                    j.get("action")
+                        .and_then(Json::as_str)
+                        .context("decision missing 'action'")?,
+                )?,
+                class: j
+                    .get("class")
+                    .and_then(Json::as_usize)
+                    .context("decision missing 'class'")?,
+                p1_bits: j
+                    .get("p1")
+                    .and_then(Json::as_usize)
+                    .context("decision missing 'p1'")? as u32,
+                p2_bits: j
+                    .get("p2")
+                    .and_then(Json::as_usize)
+                    .context("decision missing 'p2'")? as u32,
+                label: j.get("label").and_then(Json::as_usize),
+            },
+            "shed" => Response::Shed {
+                seq: j
+                    .get("seq")
+                    .and_then(Json::as_usize)
+                    .context("shed missing 'seq'")? as u64,
+                retry_after_ms: j
+                    .get("retry_after_ms")
+                    .and_then(Json::as_usize)
+                    .context("shed missing 'retry_after_ms'")? as u64,
+            },
+            "pong" => Response::Pong,
+            "draining" => Response::Draining,
+            "error" => Response::Error {
+                reason: j
+                    .get("reason")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unspecified")
+                    .to_string(),
+            },
+            other => bail!("unknown response type '{other}'"),
+        })
+    }
+}
+
+fn parse_bits(j: &Json) -> Result<Vec<u32>> {
+    let arr = j.as_arr().context("'x' must be an array of f32 bit patterns")?;
+    arr.iter()
+        .map(|v| {
+            let n = v.as_usize().context("'x' entries must be u32 bit patterns")?;
+            anyhow::ensure!(n <= u32::MAX as usize, "'x' entry {n} exceeds u32");
+            Ok(n as u32)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feature_bits_roundtrip_exactly() {
+        let xs = vec![0.0f32, -0.0, 1.5, f32::MIN_POSITIVE, -3.25e-12, 1.0e30];
+        let back = floats_of(&bits_of(&xs));
+        for (a, b) in xs.iter().zip(back.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} lost bits on the wire");
+        }
+    }
+
+    #[test]
+    fn requests_roundtrip_through_lines() {
+        let reqs = vec![
+            Request::Hello { client: "edge-3".into() },
+            Request::Event {
+                seq: 41,
+                label: 2,
+                x_bits: bits_of(&[0.25, -1.75, 3.0e-7]),
+            },
+            Request::Ping,
+            Request::Bye,
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            let line = r.to_line();
+            assert!(!line.contains('\n'), "lines must be newline-free: {line}");
+            assert_eq!(Request::parse(&line).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn responses_roundtrip_through_lines() {
+        let resps = vec![
+            Response::Welcome { client: "edge-0".into(), restored: true, next_seq: 17 },
+            Response::Busy { retry_after_ms: 50 },
+            Response::Decision {
+                seq: 17,
+                action: DecisionAction::Trained,
+                class: 4,
+                p1_bits: 0.75f32.to_bits(),
+                p2_bits: 0.125f32.to_bits(),
+                label: Some(3),
+            },
+            Response::Decision {
+                seq: 18,
+                action: DecisionAction::Skipped,
+                class: 1,
+                p1_bits: 0.9f32.to_bits(),
+                p2_bits: 0.05f32.to_bits(),
+                label: None,
+            },
+            Response::Decision {
+                seq: 2,
+                action: DecisionAction::Duplicate,
+                class: 0,
+                p1_bits: 0,
+                p2_bits: 0,
+                label: None,
+            },
+            Response::Shed { seq: 99, retry_after_ms: 10 },
+            Response::Pong,
+            Response::Draining,
+            Response::Error { reason: "bad request JSON".into() },
+        ];
+        for r in resps {
+            let line = r.to_line();
+            assert!(!line.contains('\n'));
+            assert_eq!(Response::parse(&line).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn garbled_lines_are_rejected_not_misparsed() {
+        // a garble fault corrupts bytes; the peer must get a clean error,
+        // never a silently wrong message
+        assert!(Request::parse("{\"type\":\"event\",\"seq\":").is_err());
+        assert!(Request::parse("not json at all").is_err());
+        assert!(Request::parse("{\"type\":\"warp\"}").is_err());
+        assert!(Response::parse("{\"type\":\"decision\",\"seq\":1}").is_err());
+        assert!(Response::parse("").is_err());
+        // event with a non-integer bit pattern is refused
+        assert!(Request::parse("{\"type\":\"event\",\"seq\":1,\"label\":0,\"x\":[1.5]}").is_err());
+    }
+
+    #[test]
+    fn duplicate_ack_has_no_label() {
+        let line = Response::Decision {
+            seq: 5,
+            action: DecisionAction::Duplicate,
+            class: 0,
+            p1_bits: 0,
+            p2_bits: 0,
+            label: None,
+        }
+        .to_line();
+        assert!(!line.contains("label"));
+        assert!(line.contains("duplicate"));
+    }
+}

@@ -1,0 +1,1500 @@
+//! `odl-har serve` — the coordinator as a long-running teacher/label
+//! service, plus `odl-har loadgen`, its deterministic chaos-tested edge
+//! client.
+//!
+//! The server speaks the [`super::proto`] JSONL protocol over plain TCP
+//! (std::net + std::thread — tokio is not in the offline vendor set).
+//! Edge clients register with `hello`, stream feature vectors as
+//! sequence-numbered `event`s, and get back the decision the coordinator
+//! made against that client's own OS-ELM core: pruning-gate verdict,
+//! predicted class, and (when the gate queried) the teacher's label after
+//! a sequential train step.
+//!
+//! Robustness is the point, end to end:
+//!
+//! - **Admission control** — at most `max_clients` concurrent
+//!   connections; over cap, the accept loop answers with a structured
+//!   `busy` carrying `retry_after_ms` and closes, so clients back off
+//!   instead of spinning.
+//! - **Backpressure** — per-connection input is a bounded byte queue
+//!   (`queue_depth` KiB); events ahead of the client's applied watermark
+//!   are deterministically refused with `shed`, never buffered or
+//!   reordered.
+//! - **Deadlines** — every socket carries read/write timeouts
+//!   (`read_timeout_ms`) and an idle deadline (`idle_timeout_ms`); a hung
+//!   or stalled client is disconnected, it can never pin a worker thread.
+//! - **Graceful drain** — a `shutdown` request stops the accept loop,
+//!   lets in-flight handlers finish, then publishes every client's full
+//!   state (OS-ELM β/P/steps, auto-θ ladder position, teacher RNG
+//!   stream, applied watermark) through the crash-consistent temp file +
+//!   fsync + rename path shared with the sweep engine. A restarted
+//!   server restores the snapshot byte-identically and `welcome` tells
+//!   each client exactly where to resume.
+//! - **Exactly-once application** — events are applied in sequence
+//!   order: replays of already-applied events are acknowledged as
+//!   `duplicate` without touching the model, gaps are shed. Any
+//!   interleaving of drops, delays, garbles, disconnects, and client
+//!   crashes therefore converges to the same final state as an
+//!   undisturbed run — the chaos suite asserts snapshot byte-equality.
+//!
+//! Fault injection rides [`crate::util::faults::FaultPlan`]'s network
+//! kinds (`drop`/`delay`/`close`/`garble`, plus `kill` as a client-side
+//! process abort). `#1` sites fire on the server's socket end, `#2` on
+//! the client's; the serve entry points bind their end themselves, so
+//! callers pass the parsed plan straight through.
+
+use crate::coordinator::proto::{bits_of, DecisionAction, Request, Response};
+use crate::coordinator::sweep::{sync_parent_dir, sync_writer};
+use crate::coordinator::teacher::Teacher;
+use crate::data::synth::{SynthConfig, SynthHar};
+use crate::data::Dataset;
+use crate::odl::{AlphaKind, OsElm, OsElmConfig};
+use crate::pruning::{
+    warmup_for, AutoTheta, AutoThetaState, Decision, Metric, Pruner, ThetaPolicy,
+};
+use crate::util::faults::{self, FaultKind, FaultPlan, NET_CLIENT, NET_SERVER};
+use crate::util::json::{obj, Json};
+use crate::util::rng::{hash_fold, mix64, stream_seed, Rng64};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Snapshot document schema tag.
+pub const SNAPSHOT_SCHEMA: &str = "odl-har-serve-snapshot/v1";
+
+// Per-client RNG stream domains (see `util::rng::stream_seed`).
+const DOMAIN_TEACHER: u64 = 0x5E21;
+const DOMAIN_EVENTS: u64 = 0x5E22;
+const DOMAIN_JITTER: u64 = 0x5E23;
+
+/// How long a `delay` network fault stalls one message [ms] — well below
+/// the loadgen reply timeout, so a delayed message is late, not lost.
+const DELAY_FAULT_MS: u64 = 25;
+
+fn ms(v: u64) -> Duration {
+    Duration::from_millis(v)
+}
+
+/// Stable 64-bit identity of a client name — keys every per-client RNG
+/// stream, so state depends on the name alone, not on arrival order.
+fn client_key(name: &str) -> u64 {
+    name.bytes().fold(0x5EED_C11E_4775_0001, |acc, b| hash_fold(acc, b as u64))
+}
+
+/// Server configuration (the `[serve]` TOML section + scenario base).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listen address; port 0 picks an ephemeral port.
+    pub bind: String,
+    /// Admission cap: concurrent connections beyond this get `busy`.
+    pub max_clients: usize,
+    /// Per-connection input-queue bound in KiB; a connection that
+    /// buffers more unconsumed bytes than this is dropped.
+    pub queue_depth: usize,
+    /// Socket read/write timeout [ms] — the deadline granularity.
+    pub read_timeout_ms: u64,
+    /// Disconnect a connection with no complete request for this long.
+    pub idle_timeout_ms: u64,
+    /// Suggested client back-off carried by `busy` and `shed`.
+    pub retry_after_ms: u64,
+    /// Pruning warmup override (None = `warmup_for(n_hidden)`).
+    pub warmup: Option<usize>,
+    /// Snapshot path: restored at startup if present, written on drain.
+    pub snapshot: Option<PathBuf>,
+    /// Master seed for every per-client stream.
+    pub seed: u64,
+    /// Provisioning-pool seed (None = derived as `seed ^ 0xDA7A`).
+    pub data_seed: Option<u64>,
+    /// Oracle teacher label-error rate.
+    pub teacher_error: f64,
+    /// Fixed pruning θ (None = the paper's auto-θ ladder).
+    pub fixed_theta: Option<f32>,
+    /// Hidden width of each client's OS-ELM core.
+    pub n_hidden: usize,
+    /// Synthetic-HAR generator config (provisioning pool + loadgen).
+    pub synth: SynthConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            max_clients: 8,
+            queue_depth: 64,
+            read_timeout_ms: 250,
+            idle_timeout_ms: 30_000,
+            retry_after_ms: 50,
+            warmup: None,
+            snapshot: None,
+            seed: 1,
+            data_seed: None,
+            teacher_error: 0.0,
+            fixed_theta: None,
+            n_hidden: 32,
+            synth: SynthConfig::default(),
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn data_seed(&self) -> u64 {
+        self.data_seed.unwrap_or(self.seed ^ 0xDA7A)
+    }
+
+    fn warmup_resolved(&self) -> usize {
+        self.warmup.unwrap_or_else(|| warmup_for(self.n_hidden))
+    }
+}
+
+/// One registered edge client's server-side state.
+struct ClientState {
+    model: OsElm,
+    pruner: Pruner,
+    teacher: Teacher,
+    /// Applied watermark: the next event sequence number to accept.
+    next_seq: u64,
+    events: u64,
+    trained: u64,
+    skipped: u64,
+}
+
+/// Drain-time totals (everything in the snapshot plus the volatile
+/// transport counters that are *deliberately* not snapshotted — they
+/// vary with the fault schedule; model state must not).
+#[derive(Clone, Debug, Default)]
+pub struct ServeSummary {
+    pub clients: usize,
+    pub events: u64,
+    pub trained: u64,
+    pub skipped: u64,
+    pub teacher_queries: u64,
+    pub duplicates: u64,
+    pub shed: u64,
+    pub busy_rejections: u64,
+    pub connections: u64,
+    pub restored: bool,
+}
+
+impl ServeSummary {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("schema", Json::Str("odl-har-serve-summary/v1".into())),
+            ("clients", Json::Num(self.clients as f64)),
+            ("events", Json::Num(self.events as f64)),
+            ("trained", Json::Num(self.trained as f64)),
+            ("skipped", Json::Num(self.skipped as f64)),
+            ("teacher_queries", Json::Num(self.teacher_queries as f64)),
+            ("duplicates", Json::Num(self.duplicates as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("busy_rejections", Json::Num(self.busy_rejections as f64)),
+            ("connections", Json::Num(self.connections as f64)),
+            ("restored", Json::Bool(self.restored)),
+        ])
+    }
+}
+
+/// Build the provisioning pool the server batch-initializes every
+/// client's core on (the paper's step 1: initial training happens before
+/// deployment). Derived from `data_seed` alone, so every server
+/// incarnation provisions identically.
+fn provision_pool(cfg: &ServeConfig) -> Result<Dataset> {
+    let mut rng = Rng64::new(cfg.data_seed());
+    let pool = SynthHar::new(cfg.synth.clone(), &mut rng).generate(&mut rng);
+    ensure!(
+        pool.len() >= cfg.n_hidden,
+        "provisioning pool has {} samples but OS-ELM init needs ≥ n_hidden = {} \
+         (raise data.samples_per_cell or lower fleet.n_hidden)",
+        pool.len(),
+        cfg.n_hidden
+    );
+    Ok(pool)
+}
+
+/// The bare (un-provisioned) core for a named client — α comes from the
+/// name hash, so restore can rebuild it without replaying `init_batch`.
+fn client_shell(cfg: &ServeConfig, pool: &Dataset, name: &str) -> OsElm {
+    let key = client_key(name);
+    let model_cfg = OsElmConfig {
+        n_in: pool.n_features(),
+        n_hidden: cfg.n_hidden,
+        n_out: pool.n_classes,
+        alpha: AlphaKind::Hash,
+        ..Default::default()
+    };
+    // ODLHash α ignores the RNG; the throwaway stream keeps the signature
+    let mut rng = Rng64::new(stream_seed(cfg.seed, DOMAIN_TEACHER ^ 1, key));
+    OsElm::new(model_cfg, &mut rng, (mix64(key) & 0xFFFF) as u16)
+}
+
+fn new_client(cfg: &ServeConfig, pool: &Dataset, name: &str) -> Result<ClientState> {
+    let mut model = client_shell(cfg, pool, name);
+    model
+        .init_batch(&pool.xs, &pool.labels)
+        .with_context(|| format!("provisioning client '{name}'"))?;
+    let policy = match cfg.fixed_theta {
+        Some(t) => ThetaPolicy::Fixed(t),
+        None => ThetaPolicy::auto(),
+    };
+    let key = client_key(name);
+    Ok(ClientState {
+        model,
+        pruner: Pruner::new(policy, Metric::P1P2, cfg.warmup_resolved()),
+        teacher: Teacher::oracle(cfg.teacher_error, stream_seed(cfg.seed, DOMAIN_TEACHER, key)),
+        next_seq: 0,
+        events: 0,
+        trained: 0,
+        skipped: 0,
+    })
+}
+
+/// Apply one in-order event to a client: predict → pruning gate →
+/// (teacher label + sequential train | skip). Exactly the edge FSM's
+/// training-mode step, run server-side against the client's own core.
+fn apply_event(st: &mut ClientState, seq: u64, x: &[f32], true_label: usize, n_classes: usize) -> Response {
+    let pred = st.model.predict(x);
+    let decision =
+        st.pruner
+            .decide_with_logits(&pred, st.model.last_logits(), st.trained as usize, false);
+    st.events += 1;
+    st.next_seq = seq + 1;
+    match decision {
+        Decision::Skip => {
+            st.pruner.observe(Decision::Skip, None);
+            st.skipped += 1;
+            Response::Decision {
+                seq,
+                action: DecisionAction::Skipped,
+                class: pred.class,
+                p1_bits: pred.p1.to_bits(),
+                p2_bits: pred.p2.to_bits(),
+                label: None,
+            }
+        }
+        Decision::Query => {
+            let label = st.teacher.respond(x, true_label, n_classes);
+            st.pruner.observe(Decision::Query, Some(pred.class == label));
+            st.model.train_step(x, label);
+            st.trained += 1;
+            Response::Decision {
+                seq,
+                action: DecisionAction::Trained,
+                class: pred.class,
+                p1_bits: pred.p1.to_bits(),
+                p2_bits: pred.p2.to_bits(),
+                label: Some(label),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Snapshot: the whole service state as one canonical JSON document.
+// ---------------------------------------------------------------------
+
+/// u64 values (RNG states, seeds) don't fit `f64` exactly — they travel
+/// as decimal strings in snapshot documents.
+fn u64_str(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn parse_u64_str(j: Option<&Json>, what: &str) -> Result<u64> {
+    match j {
+        Some(Json::Str(s)) => s.parse::<u64>().with_context(|| format!("bad {what} '{s}'")),
+        _ => bail!("snapshot missing string field '{what}'"),
+    }
+}
+
+fn bits_arr(data: &[f32]) -> Json {
+    Json::Arr(data.iter().map(|v| Json::Num(v.to_bits() as f64)).collect())
+}
+
+fn parse_bits_into(j: Option<&Json>, what: &str, out: &mut [f32]) -> Result<()> {
+    let arr = match j {
+        Some(Json::Arr(items)) => items,
+        _ => bail!("snapshot missing array field '{what}'"),
+    };
+    ensure!(
+        arr.len() == out.len(),
+        "snapshot field '{what}' has {} entries, expected {}",
+        arr.len(),
+        out.len()
+    );
+    for (slot, v) in out.iter_mut().zip(arr.iter()) {
+        let bits = v
+            .as_usize()
+            .with_context(|| format!("snapshot field '{what}' has a non-integer entry"))?;
+        ensure!(bits <= u32::MAX as usize, "'{what}' entry {bits} exceeds u32");
+        *slot = f32::from_bits(bits as u32);
+    }
+    Ok(())
+}
+
+fn num_field(j: &Json, key: &str) -> Result<u64> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .map(|v| v as u64)
+        .with_context(|| format!("snapshot missing numeric field '{key}'"))
+}
+
+fn client_to_json(st: &ClientState) -> Json {
+    let pruner = match &st.pruner.policy {
+        ThetaPolicy::Fixed(t) => obj(vec![("fixed", Json::Num(t.to_bits() as f64))]),
+        ThetaPolicy::Auto(a) => {
+            let s = a.snapshot();
+            obj(vec![(
+                "auto",
+                obj(vec![
+                    ("idx", Json::Num(s.idx as f64)),
+                    ("streak", Json::Num(s.streak as f64)),
+                    ("x_required", Json::Num(s.x_required as f64)),
+                    ("mismatch_hysteresis", Json::Num(s.mismatch_hysteresis as f64)),
+                    ("mismatch_streak", Json::Num(s.mismatch_streak as f64)),
+                    ("decreases", Json::Num(s.decreases as f64)),
+                    ("increases", Json::Num(s.increases as f64)),
+                ]),
+            )])
+        }
+    };
+    obj(vec![
+        ("next_seq", Json::Num(st.next_seq as f64)),
+        ("events", Json::Num(st.events as f64)),
+        ("trained", Json::Num(st.trained as f64)),
+        ("skipped", Json::Num(st.skipped as f64)),
+        ("steps", Json::Num(st.model.steps as f64)),
+        ("beta", bits_arr(&st.model.beta.data)),
+        ("p", bits_arr(&st.model.p.data)),
+        ("pruner", pruner),
+        (
+            "teacher",
+            obj(vec![
+                ("rng_state", u64_str(st.teacher.rng_state())),
+                ("queries", Json::Num(st.teacher.queries_served as f64)),
+            ]),
+        ),
+    ])
+}
+
+fn snapshot_to_string(cfg: &ServeConfig, pool: &Dataset, clients: &BTreeMap<String, ClientState>) -> String {
+    let mut map = BTreeMap::new();
+    for (name, st) in clients {
+        map.insert(name.clone(), client_to_json(st));
+    }
+    let doc = obj(vec![
+        ("schema", Json::Str(SNAPSHOT_SCHEMA.into())),
+        (
+            "config",
+            obj(vec![
+                ("n_in", Json::Num(pool.n_features() as f64)),
+                ("n_hidden", Json::Num(cfg.n_hidden as f64)),
+                ("n_out", Json::Num(pool.n_classes as f64)),
+                ("seed", u64_str(cfg.seed)),
+                ("data_seed", u64_str(cfg.data_seed())),
+                ("teacher_error_bits", u64_str(cfg.teacher_error.to_bits())),
+            ]),
+        ),
+        ("clients", Json::Obj(map)),
+    ]);
+    let mut text = doc.to_string();
+    text.push('\n');
+    text
+}
+
+/// Parse a snapshot document back into live client state, validating it
+/// against the current config — restoring under a different scenario
+/// would silently diverge, so shape/seed mismatches are hard errors.
+fn parse_snapshot(text: &str, cfg: &ServeConfig, pool: &Dataset) -> Result<BTreeMap<String, ClientState>> {
+    let doc = Json::parse(text).map_err(|e| anyhow::anyhow!("snapshot parse: {e}"))?;
+    let schema = doc.get("schema").and_then(Json::as_str).unwrap_or("");
+    ensure!(schema == SNAPSHOT_SCHEMA, "snapshot schema '{schema}' != '{SNAPSHOT_SCHEMA}'");
+    let sc = doc.get("config").context("snapshot missing 'config'")?;
+    for (key, want) in [
+        ("n_in", pool.n_features() as u64),
+        ("n_hidden", cfg.n_hidden as u64),
+        ("n_out", pool.n_classes as u64),
+    ] {
+        let got = num_field(sc, key)?;
+        ensure!(got == want, "snapshot config {key} = {got} but server is configured with {want}");
+    }
+    for (key, want) in [
+        ("seed", cfg.seed),
+        ("data_seed", cfg.data_seed()),
+        ("teacher_error_bits", cfg.teacher_error.to_bits()),
+    ] {
+        let got = parse_u64_str(sc.get(key), key)?;
+        ensure!(got == want, "snapshot config {key} = {got} but server is configured with {want}");
+    }
+
+    let clients_json = match doc.get("clients") {
+        Some(Json::Obj(m)) => m,
+        _ => bail!("snapshot missing 'clients' object"),
+    };
+    let mut clients = BTreeMap::new();
+    for (name, cj) in clients_json {
+        let mut model = client_shell(cfg, pool, name);
+        parse_bits_into(cj.get("beta"), "beta", &mut model.beta.data)
+            .with_context(|| format!("client '{name}'"))?;
+        parse_bits_into(cj.get("p"), "p", &mut model.p.data)
+            .with_context(|| format!("client '{name}'"))?;
+        model.steps = num_field(cj, "steps")?;
+
+        let pj = cj.get("pruner").with_context(|| format!("client '{name}' missing pruner"))?;
+        let policy = match (pj.get("fixed"), pj.get("auto")) {
+            (Some(t), None) => {
+                let bits = t.as_usize().context("pruner.fixed must be f32 bits")?;
+                let theta = f32::from_bits(bits as u32);
+                ensure!(
+                    cfg.fixed_theta.map(f32::to_bits) == Some(theta.to_bits()),
+                    "snapshot has fixed θ = {theta} but server pruning config disagrees"
+                );
+                ThetaPolicy::Fixed(theta)
+            }
+            (None, Some(aj)) => {
+                ensure!(
+                    cfg.fixed_theta.is_none(),
+                    "snapshot has auto-θ state but server is configured with a fixed θ"
+                );
+                ThetaPolicy::Auto(AutoTheta::restore(AutoThetaState {
+                    idx: num_field(aj, "idx")? as usize,
+                    streak: num_field(aj, "streak")? as u32,
+                    x_required: num_field(aj, "x_required")? as u32,
+                    mismatch_hysteresis: num_field(aj, "mismatch_hysteresis")? as u32,
+                    mismatch_streak: num_field(aj, "mismatch_streak")? as u32,
+                    decreases: num_field(aj, "decreases")? as u32,
+                    increases: num_field(aj, "increases")? as u32,
+                }))
+            }
+            _ => bail!("client '{name}' pruner must be exactly one of fixed/auto"),
+        };
+
+        let tj = cj.get("teacher").with_context(|| format!("client '{name}' missing teacher"))?;
+        let teacher = Teacher::oracle_from_state(
+            cfg.teacher_error,
+            parse_u64_str(tj.get("rng_state"), "teacher.rng_state")?,
+            num_field(tj, "queries")?,
+        );
+
+        clients.insert(
+            name.clone(),
+            ClientState {
+                model,
+                pruner: Pruner::new(policy, Metric::P1P2, cfg.warmup_resolved()),
+                teacher,
+                next_seq: num_field(cj, "next_seq")?,
+                events: num_field(cj, "events")?,
+                trained: num_field(cj, "trained")?,
+                skipped: num_field(cj, "skipped")?,
+            },
+        );
+    }
+    Ok(clients)
+}
+
+/// Publish the snapshot crash-consistently: temp file in the same
+/// directory, fsync, atomic rename, parent-dir fsync — the same recipe
+/// as the sweep engine's results publish.
+fn write_snapshot(path: &Path, text: &str) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    let file = std::fs::File::create(&tmp)
+        .with_context(|| format!("creating snapshot temp {}", tmp.display()))?;
+    let mut out = std::io::BufWriter::new(file);
+    out.write_all(text.as_bytes())
+        .with_context(|| format!("writing snapshot temp {}", tmp.display()))?;
+    sync_writer(out, &tmp)?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publishing snapshot {}", path.display()))?;
+    sync_parent_dir(path)
+}
+
+// ---------------------------------------------------------------------
+// Transport: bounded line reading and fault-injected line writing.
+// ---------------------------------------------------------------------
+
+enum ReadOutcome {
+    Line(String),
+    TimedOut,
+    Eof,
+}
+
+/// Line assembly over a timeout-carrying socket. `std`'s `read_line`
+/// documents buffer contents as unspecified after an error, which a
+/// read-timeout deadline hits constantly — so accumulation is explicit
+/// here, and bounded: a peer that streams bytes without ever finishing a
+/// line (or past the queue bound) is an error, not an allocation.
+struct LineReader {
+    acc: Vec<u8>,
+    max_bytes: usize,
+}
+
+impl LineReader {
+    fn new(max_bytes: usize) -> LineReader {
+        LineReader { acc: Vec::new(), max_bytes }
+    }
+
+    fn read_line(&mut self, stream: &mut TcpStream) -> std::io::Result<ReadOutcome> {
+        loop {
+            if let Some(pos) = self.acc.iter().position(|&b| b == b'\n') {
+                let raw: Vec<u8> = self.acc.drain(..=pos).collect();
+                let line = String::from_utf8_lossy(&raw).trim().to_string();
+                return Ok(ReadOutcome::Line(line));
+            }
+            if self.acc.len() > self.max_bytes {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("request queue over {} bytes without a newline", self.max_bytes),
+                ));
+            }
+            let mut chunk = [0u8; 4096];
+            match stream.read(&mut chunk) {
+                Ok(0) => return Ok(ReadOutcome::Eof),
+                Ok(n) => self.acc.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Ok(ReadOutcome::TimedOut)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+/// Overwrite the line's head with bytes that cannot parse as JSON — the
+/// deterministic stand-in for on-the-wire corruption. The newline
+/// survives so framing holds and the peer sees exactly one bad message.
+fn garble(line: &mut [u8]) {
+    let n = line.len().saturating_sub(1).min(8);
+    for b in &mut line[..n] {
+        *b = b'#';
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SendOutcome {
+    Sent,
+    /// A `drop` fault swallowed the message (the peer times out).
+    Dropped,
+    /// A `close` fault tore the connection down instead of writing.
+    Closed,
+}
+
+/// Write one protocol line, applying this end's network fault schedule.
+/// `idx` is the sender's monotone message counter — explicit `KIND@idx`
+/// sites key on it. `kill` aborts the process (client-side crash).
+fn send_line(
+    stream: &mut TcpStream,
+    line: &str,
+    plan: &FaultPlan,
+    idx: &mut usize,
+) -> std::io::Result<SendOutcome> {
+    let my_idx = *idx;
+    *idx += 1;
+    let mut bytes = line.as_bytes().to_vec();
+    bytes.push(b'\n');
+    if !plan.is_noop() {
+        match plan.net_fault(my_idx) {
+            Some(FaultKind::Kill) => faults::die("net kill site"),
+            Some(FaultKind::Drop) => return Ok(SendOutcome::Dropped),
+            Some(FaultKind::Delay) => std::thread::sleep(ms(DELAY_FAULT_MS)),
+            Some(FaultKind::Close) => {
+                let _ = stream.shutdown(Shutdown::Both);
+                return Ok(SendOutcome::Closed);
+            }
+            Some(FaultKind::Garble) => garble(&mut bytes),
+            _ => {}
+        }
+    }
+    stream.write_all(&bytes)?;
+    Ok(SendOutcome::Sent)
+}
+
+// ---------------------------------------------------------------------
+// The server.
+// ---------------------------------------------------------------------
+
+struct Shared {
+    clients: Mutex<BTreeMap<String, ClientState>>,
+    active: AtomicUsize,
+    draining: AtomicBool,
+    busy_rejections: AtomicU64,
+    duplicates: AtomicU64,
+    shed: AtomicU64,
+    connections: AtomicU64,
+    /// Global response counter: network fault sites on the server end key
+    /// on it, so a schedule keeps advancing across reconnects instead of
+    /// re-firing the same site on every fresh connection.
+    resp_idx: AtomicUsize,
+}
+
+/// Run the service until a `shutdown` request drains it. `on_ready` fires
+/// with the bound address before the first accept — the hook the binary
+/// prints the port with and tests/benches grab it from.
+pub fn serve_with<F: FnOnce(SocketAddr)>(
+    cfg: &ServeConfig,
+    faults: &FaultPlan,
+    on_ready: F,
+) -> Result<ServeSummary> {
+    let plan = faults.for_shard(NET_SERVER);
+    let pool = provision_pool(cfg)?;
+
+    let mut restored = false;
+    let initial = match &cfg.snapshot {
+        Some(path) if path.exists() => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading snapshot {}", path.display()))?;
+            restored = true;
+            parse_snapshot(&text, cfg, &pool)
+                .with_context(|| format!("restoring snapshot {}", path.display()))?
+        }
+        _ => BTreeMap::new(),
+    };
+
+    let listener = TcpListener::bind(&cfg.bind)
+        .with_context(|| format!("binding serve listener on {}", cfg.bind))?;
+    listener.set_nonblocking(true).context("non-blocking accept loop")?;
+    let addr = listener.local_addr()?;
+    on_ready(addr);
+
+    let shared = Shared {
+        clients: Mutex::new(initial),
+        active: AtomicUsize::new(0),
+        draining: AtomicBool::new(false),
+        busy_rejections: AtomicU64::new(0),
+        duplicates: AtomicU64::new(0),
+        shed: AtomicU64::new(0),
+        connections: AtomicU64::new(0),
+        resp_idx: AtomicUsize::new(0),
+    };
+
+    let accept_res: Result<()> = std::thread::scope(|scope| {
+        loop {
+            if shared.draining.load(Ordering::SeqCst) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if shared.active.load(Ordering::SeqCst) >= cfg.max_clients.max(1) {
+                        shared.busy_rejections.fetch_add(1, Ordering::Relaxed);
+                        reject_busy(stream, cfg, &shared, &plan);
+                        continue;
+                    }
+                    shared.active.fetch_add(1, Ordering::SeqCst);
+                    shared.connections.fetch_add(1, Ordering::Relaxed);
+                    let (sh, cf, pl, fp) = (&shared, cfg, &pool, &plan);
+                    scope.spawn(move || {
+                        let _ = handle_conn(sh, cf, pl, fp, stream);
+                        sh.active.fetch_sub(1, Ordering::SeqCst);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ms(5));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    // release in-flight handlers before reporting: they
+                    // poll the drain flag, not the listener
+                    shared.draining.store(true, Ordering::SeqCst);
+                    return Err(e).context("accepting connection");
+                }
+            }
+        }
+        Ok(())
+        // scope exit = the drain barrier: every in-flight handler sees the
+        // draining flag within one read-timeout tick and finishes
+    });
+    accept_res?;
+
+    let clients = shared.clients.into_inner().expect("no handler may hold the lock here");
+    if let Some(path) = &cfg.snapshot {
+        write_snapshot(path, &snapshot_to_string(cfg, &pool, &clients))?;
+    }
+
+    let mut summary = ServeSummary {
+        clients: clients.len(),
+        duplicates: shared.duplicates.load(Ordering::Relaxed),
+        shed: shared.shed.load(Ordering::Relaxed),
+        busy_rejections: shared.busy_rejections.load(Ordering::Relaxed),
+        connections: shared.connections.load(Ordering::Relaxed),
+        restored,
+        ..ServeSummary::default()
+    };
+    for st in clients.values() {
+        summary.events += st.events;
+        summary.trained += st.trained;
+        summary.skipped += st.skipped;
+        summary.teacher_queries += st.teacher.queries_served;
+    }
+    Ok(summary)
+}
+
+/// [`serve_with`] without the readiness hook.
+pub fn serve(cfg: &ServeConfig, faults: &FaultPlan) -> Result<ServeSummary> {
+    serve_with(cfg, faults, |_| {})
+}
+
+/// Over-cap connection: structured rejection, best effort, then drop.
+fn reject_busy(mut stream: TcpStream, cfg: &ServeConfig, shared: &Shared, plan: &FaultPlan) {
+    let _ = stream.set_write_timeout(Some(ms(cfg.read_timeout_ms.max(50))));
+    let mut idx = shared.resp_idx.fetch_add(1, Ordering::Relaxed);
+    let line = Response::Busy { retry_after_ms: cfg.retry_after_ms }.to_line();
+    let _ = send_line(&mut stream, &line, plan, &mut idx);
+}
+
+fn handle_conn(
+    shared: &Shared,
+    cfg: &ServeConfig,
+    pool: &Dataset,
+    plan: &FaultPlan,
+    mut stream: TcpStream,
+) -> Result<()> {
+    stream.set_read_timeout(Some(ms(cfg.read_timeout_ms.max(1))))?;
+    stream.set_write_timeout(Some(ms(cfg.read_timeout_ms.max(50))))?;
+    let _ = stream.set_nodelay(true);
+    let mut reader = LineReader::new(cfg.queue_depth.max(1) * 1024);
+    let mut hello: Option<String> = None;
+    let mut idle = Instant::now();
+    loop {
+        if shared.draining.load(Ordering::SeqCst) {
+            let mut idx = shared.resp_idx.fetch_add(1, Ordering::Relaxed);
+            let _ = send_line(&mut stream, &Response::Draining.to_line(), plan, &mut idx);
+            return Ok(());
+        }
+        match reader.read_line(&mut stream)? {
+            ReadOutcome::Eof => return Ok(()),
+            ReadOutcome::TimedOut => {
+                // the idle deadline: a stalled client cannot pin this thread
+                if idle.elapsed() >= ms(cfg.idle_timeout_ms.max(1)) {
+                    return Ok(());
+                }
+            }
+            ReadOutcome::Line(line) => {
+                if line.is_empty() {
+                    continue;
+                }
+                idle = Instant::now();
+                let resp = match Request::parse(&line) {
+                    Err(e) => Some(Response::Error { reason: format!("{e:#}") }),
+                    Ok(req) => handle_request(shared, cfg, pool, req, &mut hello),
+                };
+                let Some(resp) = resp else {
+                    return Ok(()); // bye
+                };
+                let last = matches!(resp, Response::Draining);
+                let mut idx = shared.resp_idx.fetch_add(1, Ordering::Relaxed);
+                send_line(&mut stream, &resp.to_line(), plan, &mut idx)?;
+                if last {
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch one parsed request; `None` means close the connection.
+fn handle_request(
+    shared: &Shared,
+    cfg: &ServeConfig,
+    pool: &Dataset,
+    req: Request,
+    hello: &mut Option<String>,
+) -> Option<Response> {
+    match req {
+        Request::Hello { client } => {
+            let mut map = shared.clients.lock().expect("clients lock");
+            let known = map.contains_key(&client);
+            if !known {
+                match new_client(cfg, pool, &client) {
+                    Ok(st) => {
+                        map.insert(client.clone(), st);
+                    }
+                    Err(e) => return Some(Response::Error { reason: format!("{e:#}") }),
+                }
+            }
+            let next_seq = map[&client].next_seq;
+            *hello = Some(client.clone());
+            Some(Response::Welcome { client, restored: known, next_seq })
+        }
+        Request::Event { seq, label, x_bits } => {
+            let Some(name) = hello.as_ref() else {
+                return Some(Response::Error { reason: "event before hello".into() });
+            };
+            if label >= pool.n_classes {
+                return Some(Response::Error {
+                    reason: format!("label {label} out of range (n_classes {})", pool.n_classes),
+                });
+            }
+            if x_bits.len() != pool.n_features() {
+                return Some(Response::Error {
+                    reason: format!(
+                        "feature vector has {} entries, expected {}",
+                        x_bits.len(),
+                        pool.n_features()
+                    ),
+                });
+            }
+            let mut map = shared.clients.lock().expect("clients lock");
+            let st = map.get_mut(name).expect("hello registered this client");
+            if seq < st.next_seq {
+                // already applied: acknowledge, never re-train
+                shared.duplicates.fetch_add(1, Ordering::Relaxed);
+                Some(Response::Decision {
+                    seq,
+                    action: DecisionAction::Duplicate,
+                    class: 0,
+                    p1_bits: 0,
+                    p2_bits: 0,
+                    label: None,
+                })
+            } else if seq > st.next_seq {
+                // a gap: applying out of order would fork the trajectory —
+                // deterministically shed instead
+                shared.shed.fetch_add(1, Ordering::Relaxed);
+                Some(Response::Shed { seq, retry_after_ms: cfg.retry_after_ms })
+            } else {
+                let x: Vec<f32> = x_bits.iter().map(|&b| f32::from_bits(b)).collect();
+                Some(apply_event(st, seq, &x, label, pool.n_classes))
+            }
+        }
+        Request::Ping => Some(Response::Pong),
+        Request::Bye => None,
+        Request::Shutdown => {
+            shared.draining.store(true, Ordering::SeqCst);
+            Some(Response::Draining)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The loadgen edge client.
+// ---------------------------------------------------------------------
+
+/// Loadgen configuration (CLI flags over the shared scenario config).
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `127.0.0.1:4710`.
+    pub addr: String,
+    /// Client name — the identity every per-client stream keys on.
+    pub client: String,
+    /// Events to deliver. The event stream is a deterministic function of
+    /// `(seed, data_seed, synth, client)`; `events` only truncates it, so
+    /// a rerun replays the same prefix.
+    pub events: usize,
+    pub seed: u64,
+    pub data_seed: u64,
+    pub synth: SynthConfig,
+    /// Reconnect attempts per outage before giving up (offline).
+    pub retry_budget: u32,
+    /// Reconnect back-off base/cap [ms] — doubles per attempt, capped,
+    /// plus seeded jitter; mirrors the sweep supervisor's retire curve.
+    pub backoff_base_ms: u64,
+    pub backoff_cap_ms: u64,
+    /// How long to wait for each response before resending.
+    pub reply_timeout_ms: u64,
+    /// Send `shutdown` (drain the server) after the last ack.
+    pub send_shutdown: bool,
+    /// Network fault schedule; bound to the client socket end here.
+    pub faults: FaultPlan,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: String::new(),
+            client: "edge-0".into(),
+            events: 64,
+            seed: 1,
+            data_seed: 1 ^ 0xDA7A,
+            synth: SynthConfig::default(),
+            retry_budget: 5,
+            backoff_base_ms: 10,
+            backoff_cap_ms: 400,
+            reply_timeout_ms: 500,
+            send_shutdown: false,
+            faults: FaultPlan::default(),
+        }
+    }
+}
+
+/// What one loadgen run did (all transport-level; the authoritative
+/// model state lives server-side).
+#[derive(Clone, Debug, Default)]
+pub struct LoadgenSummary {
+    pub client: String,
+    pub events: usize,
+    /// Final applied watermark — `events` on success.
+    pub delivered: usize,
+    pub acked: u64,
+    pub trained: u64,
+    pub skipped: u64,
+    pub duplicates: u64,
+    pub reconnects: u64,
+    pub busy_waits: u64,
+    pub shed_retries: u64,
+    pub resends: u64,
+    /// Outages survived (connect retries that eventually succeeded).
+    pub offline_spells: u64,
+    /// Events sitting in the local buffer when an outage began —
+    /// pruning-only degraded mode; they replay on reconnect.
+    pub max_buffered: usize,
+}
+
+impl LoadgenSummary {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("schema", Json::Str("odl-har-loadgen/v1".into())),
+            ("client", Json::Str(self.client.clone())),
+            ("events", Json::Num(self.events as f64)),
+            ("delivered", Json::Num(self.delivered as f64)),
+            ("acked", Json::Num(self.acked as f64)),
+            ("trained", Json::Num(self.trained as f64)),
+            ("skipped", Json::Num(self.skipped as f64)),
+            ("duplicates", Json::Num(self.duplicates as f64)),
+            ("reconnects", Json::Num(self.reconnects as f64)),
+            ("busy_waits", Json::Num(self.busy_waits as f64)),
+            ("shed_retries", Json::Num(self.shed_retries as f64)),
+            ("resends", Json::Num(self.resends as f64)),
+            ("offline_spells", Json::Num(self.offline_spells as f64)),
+            ("max_buffered", Json::Num(self.max_buffered as f64)),
+        ])
+    }
+}
+
+/// The deterministic event stream for one client: class/subject draws and
+/// synth samples from RNG streams keyed on the client name. The same
+/// `(seed, data_seed, synth, client)` always yields the same stream, and
+/// `n` only truncates it — the replay-after-crash contract.
+pub fn gen_events(
+    synth: &SynthConfig,
+    data_seed: u64,
+    seed: u64,
+    client: &str,
+    n: usize,
+) -> Vec<(Vec<f32>, usize)> {
+    let mut drng = Rng64::new(data_seed);
+    let gen = SynthHar::new(synth.clone(), &mut drng);
+    let mut rng = Rng64::new(stream_seed(seed, DOMAIN_EVENTS, client_key(client)));
+    (0..n)
+        .map(|_| {
+            let class = rng.below(synth.n_classes);
+            let subject = 1 + rng.below(synth.n_subjects);
+            let x = gen.sample(class, subject, &mut rng);
+            (x, class)
+        })
+        .collect()
+}
+
+/// Bounded exponential back-off with seeded jitter — the supervisor's
+/// retire curve (`base << (attempt-1)`, capped) plus up to one base-unit
+/// of deterministic jitter so synchronized clients don't stampede.
+fn backoff_sleep(attempt: u32, base_ms: u64, cap_ms: u64, jrng: &mut Rng64) {
+    let shift = (attempt.saturating_sub(1)).min(20);
+    let backoff = base_ms.saturating_mul(1u64 << shift).min(cap_ms);
+    let jitter = if base_ms > 0 { jrng.below(base_ms as usize + 1) as u64 } else { 0 };
+    std::thread::sleep(ms(backoff + jitter));
+}
+
+enum ConnectOutcome {
+    Ready(TcpStream, LineReader, u64),
+    Busy(u64),
+    Failed,
+}
+
+fn try_connect_hello(cfg: &LoadgenConfig, plan: &FaultPlan, req_idx: &mut usize) -> ConnectOutcome {
+    let Ok(mut stream) = TcpStream::connect(&cfg.addr) else {
+        return ConnectOutcome::Failed;
+    };
+    let _ = stream.set_nodelay(true);
+    let poll = cfg.reply_timeout_ms.clamp(1, 100);
+    if stream.set_read_timeout(Some(ms(poll))).is_err() {
+        return ConnectOutcome::Failed;
+    }
+    let _ = stream.set_write_timeout(Some(ms(cfg.reply_timeout_ms.max(50))));
+    let mut reader = LineReader::new(1 << 20);
+    let line = Request::Hello { client: cfg.client.clone() }.to_line();
+    match send_line(&mut stream, &line, plan, req_idx) {
+        Ok(SendOutcome::Sent) | Ok(SendOutcome::Dropped) => {}
+        _ => return ConnectOutcome::Failed,
+    }
+    match read_response(&mut reader, &mut stream, cfg.reply_timeout_ms) {
+        Ok(Some(Response::Welcome { next_seq, .. })) => {
+            ConnectOutcome::Ready(stream, reader, next_seq)
+        }
+        Ok(Some(Response::Busy { retry_after_ms })) => ConnectOutcome::Busy(retry_after_ms),
+        _ => ConnectOutcome::Failed,
+    }
+}
+
+/// Wait up to `timeout_ms` for one well-formed response. `Ok(None)` is a
+/// deadline or a garbled line — either way the caller resends.
+fn read_response(
+    reader: &mut LineReader,
+    stream: &mut TcpStream,
+    timeout_ms: u64,
+) -> std::io::Result<Option<Response>> {
+    let deadline = Instant::now() + ms(timeout_ms.max(1));
+    loop {
+        match reader.read_line(stream)? {
+            ReadOutcome::Line(line) => {
+                if line.is_empty() {
+                    continue;
+                }
+                return Ok(Response::parse(&line).ok());
+            }
+            ReadOutcome::TimedOut => {
+                if Instant::now() >= deadline {
+                    return Ok(None);
+                }
+            }
+            ReadOutcome::Eof => {
+                return Err(std::io::ErrorKind::UnexpectedEof.into());
+            }
+        }
+    }
+}
+
+/// Run the edge client: connect (with back-off), replay the event stream
+/// from the server's watermark, resend on every transport fault, survive
+/// disconnects by reconnecting, and optionally drain the server at the
+/// end. Errors only when an outage outlives the retry budget (the
+/// buffered events stay deliverable by a rerun — same stream, fresh
+/// budget) or the server sheds without progress.
+pub fn loadgen(cfg: &LoadgenConfig) -> Result<LoadgenSummary> {
+    let plan = cfg.faults.for_shard(NET_CLIENT);
+    let events = gen_events(&cfg.synth, cfg.data_seed, cfg.seed, &cfg.client, cfg.events);
+    let mut jrng = Rng64::new(stream_seed(cfg.seed, DOMAIN_JITTER, client_key(&cfg.client)));
+    let mut sum = LoadgenSummary {
+        client: cfg.client.clone(),
+        events: events.len(),
+        ..LoadgenSummary::default()
+    };
+    let mut next: usize = 0;
+    let mut req_idx: usize = 0;
+    let mut connected_before = false;
+    let mut conn: Option<(TcpStream, LineReader)> = None;
+
+    'outer: loop {
+        // connect + handshake, backing off per attempt up to the budget
+        let mut attempt = 0u32;
+        let mut busy_spins = 0u64;
+        let (mut stream, mut reader) = loop {
+            match try_connect_hello(cfg, &plan, &mut req_idx) {
+                ConnectOutcome::Ready(stream, reader, next_seq) => {
+                    if connected_before {
+                        sum.reconnects += 1;
+                    }
+                    if attempt > 0 {
+                        sum.offline_spells += 1;
+                    }
+                    connected_before = true;
+                    // fast-forward past events the server already applied
+                    // (our resends from before the disconnect landed)
+                    next = next.max((next_seq as usize).min(events.len()));
+                    break (stream, reader);
+                }
+                ConnectOutcome::Busy(retry_after_ms) => {
+                    // admission pushback is not an outage (no budget
+                    // charge), but a permanently full server must not
+                    // spin forever either
+                    sum.busy_waits += 1;
+                    busy_spins += 1;
+                    if busy_spins > (cfg.retry_budget as u64 + 1) * 64 {
+                        bail!("server stayed at its admission cap for {busy_spins} retries");
+                    }
+                    std::thread::sleep(ms(retry_after_ms.max(1)));
+                }
+                ConnectOutcome::Failed => {
+                    attempt += 1;
+                    sum.max_buffered = sum.max_buffered.max(events.len() - next);
+                    if attempt > cfg.retry_budget {
+                        bail!(
+                            "teacher service unreachable after {attempt} attempts — degraded to \
+                             pruning-only with {} events buffered (rerun replays them)",
+                            events.len() - next
+                        );
+                    }
+                    backoff_sleep(attempt, cfg.backoff_base_ms, cfg.backoff_cap_ms, &mut jrng);
+                }
+            }
+        };
+
+        let mut shed_streak = 0u32;
+        while next < events.len() {
+            let (x, label) = &events[next];
+            let req = Request::Event { seq: next as u64, label: *label, x_bits: bits_of(x) };
+            match send_line(&mut stream, &req.to_line(), &plan, &mut req_idx) {
+                Ok(SendOutcome::Sent) => {}
+                Ok(SendOutcome::Dropped) => {} // the await below times out → resend
+                Ok(SendOutcome::Closed) | Err(_) => continue 'outer,
+            }
+            // await the matching ack; stale acks (from resends) are read
+            // through, everything else resends the same event
+            loop {
+                match read_response(&mut reader, &mut stream, cfg.reply_timeout_ms) {
+                    Err(_) => continue 'outer, // disconnected mid-await
+                    Ok(None) => {
+                        sum.resends += 1; // deadline or garbled reply
+                        break;
+                    }
+                    Ok(Some(Response::Decision { seq, action, .. })) => {
+                        if seq == next as u64 {
+                            match action {
+                                DecisionAction::Trained => sum.trained += 1,
+                                DecisionAction::Skipped => sum.skipped += 1,
+                                DecisionAction::Duplicate => sum.duplicates += 1,
+                            }
+                            sum.acked += 1;
+                            next += 1;
+                            shed_streak = 0;
+                            break;
+                        }
+                        // stale ack for an earlier seq: keep reading
+                    }
+                    Ok(Some(Response::Shed { retry_after_ms, .. })) => {
+                        // a shed of our watermark event means the server's
+                        // watermark is *behind* ours — it lost state we
+                        // already had acknowledged (restarted without its
+                        // snapshot). Retrying cannot converge; say so.
+                        sum.shed_retries += 1;
+                        shed_streak += 1;
+                        if shed_streak > 16 {
+                            bail!(
+                                "server keeps shedding seq {next} — its watermark is behind \
+                                 this client's (restarted without the snapshot?)"
+                            );
+                        }
+                        std::thread::sleep(ms(retry_after_ms.max(1)));
+                        break;
+                    }
+                    Ok(Some(Response::Error { .. })) => {
+                        sum.resends += 1; // e.g. our garbled request
+                        break;
+                    }
+                    Ok(Some(Response::Draining)) => continue 'outer,
+                    Ok(Some(_)) => {} // pong/welcome replays: read through
+                }
+            }
+        }
+        conn = Some((stream, reader));
+        break;
+    }
+    sum.delivered = next;
+
+    if cfg.send_shutdown {
+        // drain the server: reuse the live connection, or dial a fresh one
+        let (mut stream, mut reader) = match conn {
+            Some(c) => c,
+            None => match try_connect_hello(cfg, &plan, &mut req_idx) {
+                ConnectOutcome::Ready(stream, reader, _) => (stream, reader),
+                _ => bail!("could not reach the server to request shutdown"),
+            },
+        };
+        for _ in 0..=cfg.retry_budget {
+            match send_line(&mut stream, &Request::Shutdown.to_line(), &plan, &mut req_idx) {
+                Ok(SendOutcome::Sent) | Ok(SendOutcome::Dropped) => {}
+                _ => break,
+            }
+            match read_response(&mut reader, &mut stream, cfg.reply_timeout_ms) {
+                Ok(Some(Response::Draining)) => break,
+                Ok(Some(_)) | Ok(None) => continue,
+                Err(_) => break, // connection died: the drain flag is set server-side
+            }
+        }
+    }
+    Ok(sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    /// Small scenario: 72-row pool over 12 features, 3 classes — enough
+    /// for n_hidden = 16 provisioning and fast event streams.
+    fn tiny_cfg() -> ServeConfig {
+        ServeConfig {
+            n_hidden: 16,
+            warmup: Some(4),
+            seed: 11,
+            read_timeout_ms: 20,
+            idle_timeout_ms: 2_000,
+            retry_after_ms: 5,
+            synth: SynthConfig {
+                n_features: 12,
+                n_classes: 3,
+                n_subjects: 2,
+                samples_per_cell: 12,
+                ..SynthConfig::default()
+            },
+            ..ServeConfig::default()
+        }
+    }
+
+    fn lg_cfg(addr: SocketAddr, cfg: &ServeConfig, client: &str, events: usize) -> LoadgenConfig {
+        LoadgenConfig {
+            addr: addr.to_string(),
+            client: client.into(),
+            events,
+            seed: cfg.seed,
+            data_seed: cfg.data_seed(),
+            synth: cfg.synth.clone(),
+            retry_budget: 3,
+            backoff_base_ms: 2,
+            backoff_cap_ms: 20,
+            reply_timeout_ms: 400,
+            ..LoadgenConfig::default()
+        }
+    }
+
+    /// Run the server in a scoped thread, hand its address to the
+    /// closure, and return (server summary, closure result).
+    fn with_server<T>(
+        cfg: &ServeConfig,
+        faults: &FaultPlan,
+        f: impl FnOnce(SocketAddr) -> T,
+    ) -> (ServeSummary, T) {
+        std::thread::scope(|scope| {
+            let (tx, rx) = mpsc::channel();
+            let server = scope.spawn(|| serve_with(cfg, faults, move |a| tx.send(a).unwrap()));
+            let addr = rx.recv().expect("server ready");
+            let out = f(addr);
+            (server.join().expect("server thread").expect("serve ok"), out)
+        })
+    }
+
+    fn raw_connect(addr: SocketAddr) -> (TcpStream, LineReader) {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(ms(50))).unwrap();
+        (stream, LineReader::new(1 << 20))
+    }
+
+    fn roundtrip(stream: &mut TcpStream, reader: &mut LineReader, req: &Request) -> Response {
+        let mut line = req.to_line();
+        line.push('\n');
+        stream.write_all(line.as_bytes()).unwrap();
+        read_response(reader, stream, 2_000).unwrap().expect("response")
+    }
+
+    #[test]
+    fn loadgen_against_server_delivers_everything() {
+        let cfg = tiny_cfg();
+        let (summary, lg) = with_server(&cfg, &FaultPlan::default(), |addr| {
+            let mut lc = lg_cfg(addr, &cfg, "edge-a", 30);
+            lc.send_shutdown = true;
+            loadgen(&lc).expect("loadgen ok")
+        });
+        assert_eq!(lg.delivered, 30);
+        assert_eq!(lg.acked, 30);
+        assert_eq!(summary.events, 30);
+        assert_eq!(summary.clients, 1);
+        assert_eq!(summary.trained + summary.skipped, 30);
+        assert_eq!(lg.trained, summary.trained);
+        // warmup 4 guarantees at least the first events trained
+        assert!(summary.trained >= 4, "trained {}", summary.trained);
+        assert!(!summary.restored);
+    }
+
+    #[test]
+    fn duplicates_ack_and_gaps_shed_without_touching_state() {
+        let cfg = tiny_cfg();
+        let events = gen_events(&cfg.synth, cfg.data_seed(), cfg.seed, "edge-b", 2);
+        let (summary, ()) = with_server(&cfg, &FaultPlan::default(), |addr| {
+            let (mut s, mut r) = raw_connect(addr);
+            let welcome = roundtrip(&mut s, &mut r, &Request::Hello { client: "edge-b".into() });
+            assert!(matches!(welcome, Response::Welcome { next_seq: 0, restored: false, .. }));
+
+            // a gap ahead of the watermark is shed, not applied
+            let ev =
+                |i: usize| Request::Event { seq: i as u64, label: events[i % 2].1, x_bits: bits_of(&events[i % 2].0) };
+            assert!(matches!(
+                roundtrip(&mut s, &mut r, &ev(1)),
+                Response::Shed { seq: 1, .. }
+            ));
+
+            // in-order applies; replay of the same seq is a duplicate ack
+            let first = roundtrip(&mut s, &mut r, &ev(0));
+            assert!(
+                matches!(first, Response::Decision { seq: 0, action, .. } if action != DecisionAction::Duplicate)
+            );
+            let replay = roundtrip(&mut s, &mut r, &ev(0));
+            assert!(matches!(
+                replay,
+                Response::Decision { seq: 0, action: DecisionAction::Duplicate, .. }
+            ));
+
+            // events before hello on a fresh connection are refused
+            let (mut s2, mut r2) = raw_connect(addr);
+            assert!(matches!(
+                roundtrip(&mut s2, &mut r2, &ev(0)),
+                Response::Error { .. }
+            ));
+
+            assert!(matches!(roundtrip(&mut s, &mut r, &Request::Ping), Response::Pong));
+            assert!(matches!(
+                roundtrip(&mut s, &mut r, &Request::Shutdown),
+                Response::Draining
+            ));
+        });
+        assert_eq!(summary.events, 1, "only the in-order event applied");
+        assert_eq!(summary.duplicates, 1);
+        assert_eq!(summary.shed, 1);
+    }
+
+    #[test]
+    fn admission_cap_answers_busy_with_retry_hint() {
+        let mut cfg = tiny_cfg();
+        cfg.max_clients = 1;
+        let (summary, ()) = with_server(&cfg, &FaultPlan::default(), |addr| {
+            let (mut s, mut r) = raw_connect(addr);
+            let _ = roundtrip(&mut s, &mut r, &Request::Hello { client: "holder".into() });
+            // the cap is reached: the next connection gets a structured busy
+            let (mut s2, mut r2) = raw_connect(addr);
+            let resp = read_response(&mut r2, &mut s2, 2_000).unwrap().expect("busy line");
+            assert!(
+                matches!(resp, Response::Busy { retry_after_ms } if retry_after_ms == cfg.retry_after_ms)
+            );
+            let _ = roundtrip(&mut s, &mut r, &Request::Shutdown);
+        });
+        assert_eq!(summary.busy_rejections, 1);
+    }
+
+    #[test]
+    fn stalled_client_hits_idle_deadline_and_is_disconnected() {
+        let mut cfg = tiny_cfg();
+        cfg.idle_timeout_ms = 80;
+        cfg.max_clients = 1;
+        let (_summary, ()) = with_server(&cfg, &FaultPlan::default(), |addr| {
+            // connect, say hello, then stall — never send another byte
+            let (mut s, mut r) = raw_connect(addr);
+            let _ = roundtrip(&mut s, &mut r, &Request::Hello { client: "staller".into() });
+            // the server must disconnect us (EOF), freeing the only slot...
+            let deadline = Instant::now() + ms(5_000);
+            loop {
+                match r.read_line(&mut s).unwrap() {
+                    ReadOutcome::Eof => break,
+                    _ => assert!(Instant::now() < deadline, "idle deadline never fired"),
+                }
+            }
+            // ...so a new client is admitted and served
+            let (mut s2, mut r2) = raw_connect(addr);
+            let resp = roundtrip(&mut s2, &mut r2, &Request::Hello { client: "next".into() });
+            assert!(matches!(resp, Response::Welcome { .. }));
+            let _ = roundtrip(&mut s2, &mut r2, &Request::Shutdown);
+        });
+    }
+
+    #[test]
+    fn snapshot_roundtrips_byte_identically() {
+        let cfg = tiny_cfg();
+        let pool = provision_pool(&cfg).unwrap();
+        let mut clients = BTreeMap::new();
+        for name in ["edge-a", "edge-b"] {
+            let mut st = new_client(&cfg, &pool, name).unwrap();
+            let events = gen_events(&cfg.synth, cfg.data_seed(), cfg.seed, name, 25);
+            for (i, (x, label)) in events.iter().enumerate() {
+                apply_event(&mut st, i as u64, x, *label, cfg.synth.n_classes);
+            }
+            clients.insert(name.to_string(), st);
+        }
+        let text = snapshot_to_string(&cfg, &pool, &clients);
+        let restored = parse_snapshot(&text, &cfg, &pool).unwrap();
+        assert_eq!(snapshot_to_string(&cfg, &pool, &restored), text);
+
+        // the restored state continues the trajectory bit-exactly
+        let mut live = clients.remove("edge-a").unwrap();
+        let mut back = restored.into_iter().find(|(n, _)| n == "edge-a").unwrap().1;
+        let more = gen_events(&cfg.synth, cfg.data_seed(), cfg.seed, "edge-a", 40);
+        for (i, (x, label)) in more.iter().enumerate().skip(25) {
+            let a = apply_event(&mut live, i as u64, x, *label, cfg.synth.n_classes);
+            let b = apply_event(&mut back, i as u64, x, *label, cfg.synth.n_classes);
+            assert_eq!(a, b, "restored client diverged at event {i}");
+        }
+    }
+
+    #[test]
+    fn snapshot_rejects_mismatched_scenario() {
+        let cfg = tiny_cfg();
+        let pool = provision_pool(&cfg).unwrap();
+        let mut clients = BTreeMap::new();
+        clients.insert("edge-a".to_string(), new_client(&cfg, &pool, "edge-a").unwrap());
+        let text = snapshot_to_string(&cfg, &pool, &clients);
+
+        let mut other = cfg.clone();
+        other.seed = cfg.seed + 1;
+        let err = parse_snapshot(&text, &other, &pool).unwrap_err().to_string();
+        assert!(err.contains("seed"), "{err}");
+
+        let mut wider = cfg.clone();
+        wider.n_hidden = 24;
+        assert!(parse_snapshot(&text, &wider, &pool).is_err());
+
+        let mut fixed = cfg.clone();
+        fixed.fixed_theta = Some(0.16);
+        let err = parse_snapshot(&text, &fixed, &pool).unwrap_err().to_string();
+        assert!(err.contains("auto"), "{err}");
+    }
+
+    #[test]
+    fn event_stream_is_deterministic_and_prefix_stable() {
+        let cfg = tiny_cfg();
+        let a = gen_events(&cfg.synth, cfg.data_seed(), cfg.seed, "edge-a", 30);
+        let b = gen_events(&cfg.synth, cfg.data_seed(), cfg.seed, "edge-a", 30);
+        assert_eq!(a, b);
+        // truncation yields the same prefix — the crash-rerun contract
+        let short = gen_events(&cfg.synth, cfg.data_seed(), cfg.seed, "edge-a", 12);
+        assert_eq!(&a[..12], &short[..]);
+        // a different client name is a different stream
+        let c = gen_events(&cfg.synth, cfg.data_seed(), cfg.seed, "edge-b", 30);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn chaos_on_the_wire_converges_to_the_undisturbed_state() {
+        // the tentpole property in miniature: drops, delays, garbles and
+        // closes on both socket ends change transport effort only — the
+        // final snapshot text is byte-identical to the undisturbed run's
+        let run = |faults: &str| -> (String, LoadgenSummary) {
+            let mut cfg = tiny_cfg();
+            let dir = std::env::temp_dir().join(format!(
+                "odl-serve-unit-{}-{}",
+                std::process::id(),
+                faults.len()
+            ));
+            std::fs::create_dir_all(&dir).unwrap();
+            let snap = dir.join("snap.json");
+            let _ = std::fs::remove_file(&snap);
+            cfg.snapshot = Some(snap.clone());
+            let plan = if faults.is_empty() {
+                FaultPlan::default()
+            } else {
+                FaultPlan::parse(faults).unwrap()
+            };
+            let (_summary, lg) = with_server(&cfg, &plan, |addr| {
+                let mut lc = lg_cfg(addr, &cfg, "edge-a", 24);
+                lc.send_shutdown = true;
+                lc.faults = plan.clone();
+                lc.reply_timeout_ms = 150;
+                loadgen(&lc).expect("loadgen survives the schedule")
+            });
+            let text = std::fs::read_to_string(&snap).unwrap();
+            let _ = std::fs::remove_file(&snap);
+            (text, lg)
+        };
+        let (clean, _) = run("");
+        // explicit sites on both ends: server drops+garbles, client closes
+        let (chaotic, lg) =
+            run("5:drop@2#1,garble@5#1,delay@7#1,close@9#2,garble@12#2,drop@15#2");
+        assert_eq!(chaotic, clean, "fault schedule must not change final state");
+        assert!(
+            lg.resends + lg.reconnects + lg.duplicates > 0,
+            "schedule was supposed to disturb transport: {lg:?}"
+        );
+    }
+}

@@ -471,6 +471,13 @@ pub fn supervise<L: Launcher>(
                         attempt,
                         "child exited cleanly but its results stream is incomplete".to_string(),
                     ),
+                    // a crash *after* the stream finished (e.g. SIGKILL
+                    // between the trailer write and process exit) leaves a
+                    // complete, durable file — that is success, not a
+                    // failed attempt; retiring here would burn the retry
+                    // budget (or quarantine outright at budget 0) over
+                    // work that is already on disk
+                    Ok(Some(false)) if shard_stream_complete(plan, shard, path) => ShardState::Done,
                     Ok(Some(false)) => retire(
                         &mut reports[s],
                         cfg,
@@ -489,15 +496,25 @@ pub fn supervise<L: Launcher>(
                         }
                         if last_progress.elapsed() >= timeout {
                             child.kill();
-                            retire(
-                                &mut reports[s],
-                                cfg,
-                                attempt,
-                                format!(
-                                    "no heartbeat (results file static) for {:.1}s — killed",
-                                    cfg.heartbeat_timeout_s
-                                ),
-                            )
+                            // a static file is only a hang if the stream is
+                            // still incomplete — a child that wrote its
+                            // trailer and then stalled (or a relaunch onto
+                            // an already-complete file that outlives the
+                            // heartbeat while revalidating) must not be
+                            // retired as a false hang
+                            if shard_stream_complete(plan, shard, path) {
+                                ShardState::Done
+                            } else {
+                                retire(
+                                    &mut reports[s],
+                                    cfg,
+                                    attempt,
+                                    format!(
+                                        "no heartbeat (results file static) for {:.1}s — killed",
+                                        cfg.heartbeat_timeout_s
+                                    ),
+                                )
+                            }
                         } else {
                             ShardState::Running {
                                 child,

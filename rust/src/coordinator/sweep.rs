@@ -1334,7 +1334,7 @@ pub fn merge_shard_files(
 /// Flush a buffered results writer and fsync its file — the durability
 /// half of every replace-by-rename publish (the rename itself is only
 /// atomic against crashes once the temp file's bytes are on disk).
-fn sync_writer(out: std::io::BufWriter<std::fs::File>, path: &Path) -> Result<()> {
+pub(crate) fn sync_writer(out: std::io::BufWriter<std::fs::File>, path: &Path) -> Result<()> {
     let file = out
         .into_inner()
         .map_err(|e| anyhow::anyhow!("flushing {}: {}", path.display(), e.error()))?;
@@ -1346,7 +1346,7 @@ fn sync_writer(out: std::io::BufWriter<std::fs::File>, path: &Path) -> Result<()
 /// Fsync the directory containing `path`, so a rename into it survives a
 /// power loss (on POSIX the directory entry itself must be synced; on
 /// other platforms this is a no-op).
-fn sync_parent_dir(path: &Path) -> Result<()> {
+pub(crate) fn sync_parent_dir(path: &Path) -> Result<()> {
     #[cfg(unix)]
     {
         let dir = match path.parent() {

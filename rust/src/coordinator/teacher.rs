@@ -72,13 +72,35 @@ impl Teacher {
         })
     }
 
+    /// The oracle's raw RNG position — persisted by serve snapshots so a
+    /// restored teacher continues the exact same error stream.
+    pub fn rng_state(&self) -> u64 {
+        self.rng.state()
+    }
+
+    /// Rebuild an oracle teacher mid-stream from snapshotted state
+    /// ([`Self::rng_state`] + [`Self::queries_served`]); the continuation
+    /// draws exactly what the original teacher would have drawn.
+    pub fn oracle_from_state(error_rate: f64, rng_state: u64, queries_served: u64) -> Teacher {
+        Teacher {
+            kind: TeacherKind::Oracle { error_rate },
+            rng: Rng64::from_state(rng_state),
+            service_time_s: 0.002,
+            queries_served,
+        }
+    }
+
     /// Answer a label query. `true_label` feeds the oracle (and metrics);
     /// an ensemble teacher ignores it and runs its models.
     pub fn respond(&mut self, x: &[f32], true_label: usize, n_classes: usize) -> usize {
         self.queries_served += 1;
         match &mut self.kind {
             TeacherKind::Oracle { error_rate } => {
-                if *error_rate > 0.0 && self.rng.bernoulli(*error_rate) {
+                // with a single class there is no wrong label to return —
+                // skip the error draw entirely (below(0) would be a
+                // remainder-by-zero) but keep the bernoulli draw so the
+                // stream position matches the multi-class trajectory
+                if *error_rate > 0.0 && self.rng.bernoulli(*error_rate) && n_classes > 1 {
                     let mut l = self.rng.below(n_classes - 1);
                     if l >= true_label {
                         l += 1;
@@ -128,6 +150,63 @@ mod tests {
         for _ in 0..200 {
             let l = t.respond(&[], 5, 6);
             assert!(l < 6 && l != 5);
+        }
+    }
+
+    #[test]
+    fn zero_error_rate_never_draws() {
+        // error_rate 0.0 short-circuits before any RNG draw: the stream
+        // position is untouched, so repeated runs are trivially identical
+        let mut t = Teacher::oracle(0.0, 9);
+        let state0 = t.rng_state();
+        for c in 0..100 {
+            assert_eq!(t.respond(&[], c % 4, 4), c % 4);
+        }
+        assert_eq!(t.rng_state(), state0, "oracle at rate 0 must not draw");
+    }
+
+    #[test]
+    fn full_error_rate_is_deterministic_across_streams() {
+        // error_rate 1.0: always wrong, and two teachers with the same
+        // seed produce byte-identical label sequences
+        let run = || -> Vec<usize> {
+            let mut t = Teacher::oracle(1.0, 41);
+            (0..200).map(|i| t.respond(&[], i % 6, 6)).collect()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed must replay the same stream");
+        for (i, &l) in a.iter().enumerate() {
+            assert!(l < 6 && l != i % 6, "rate 1.0 must always mislabel in range");
+        }
+    }
+
+    #[test]
+    fn single_class_oracle_cannot_mislabel() {
+        // n_classes == 1: the only label is the true one — even at
+        // error_rate 1.0 there is no wrong label to draw (this used to
+        // panic with a remainder-by-zero in below(0))
+        let mut t = Teacher::oracle(1.0, 5);
+        for _ in 0..50 {
+            assert_eq!(t.respond(&[], 0, 1), 0);
+        }
+        assert_eq!(t.queries_served, 50);
+    }
+
+    #[test]
+    fn oracle_state_roundtrip_continues_stream() {
+        let mut t1 = Teacher::oracle(0.35, 77);
+        for i in 0..60 {
+            t1.respond(&[], i % 5, 5);
+        }
+        let mut t2 = Teacher::oracle_from_state(0.35, t1.rng_state(), t1.queries_served);
+        assert_eq!(t2.queries_served, 60);
+        for i in 0..60 {
+            assert_eq!(
+                t1.respond(&[], i % 5, 5),
+                t2.respond(&[], i % 5, 5),
+                "restored teacher diverged at continuation step {i}"
+            );
         }
     }
 

@@ -17,8 +17,19 @@
 //!                [--shard I/N | --shard auto[:N]] [--retry-budget K]
 //!                [--heartbeat-timeout SECS] [--inject-faults SPEC] [--fault-attempts K]
 //! odl-har merge  --config FILE [--out FILE] SHARD_FILE...
+//! odl-har serve  --config FILE [--bind ADDR] [--snapshot FILE] [--max-clients N]
+//!                [--inject-faults SPEC]
+//! odl-har loadgen --connect ADDR --config FILE [--client NAME] [--events N]
+//!                [--retry-budget K] [--backoff-base-ms MS] [--backoff-cap-ms MS]
+//!                [--reply-timeout-ms MS] [--shutdown] [--summary-out FILE]
+//!                [--inject-faults SPEC]
 //! odl-har artifacts-check            # verify PJRT artifacts load + run
 //! ```
+//!
+//! Contract for misuse (pinned by `tests/cli_contract.rs`): an unknown
+//! subcommand or a missing required argument prints the usage block to
+//! **stderr** and exits non-zero; stdout stays clean so pipelines never
+//! parse half a banner.
 //!
 //! Every `--workers` flag (and TOML `workers` key) treats `0` as "auto":
 //! it resolves to `std::thread::available_parallelism()` once at startup.
@@ -82,10 +93,30 @@ impl Args {
         Ok(())
     }
 
+    /// Like [`Self::opt`] but parsed as `u64` (the serve/loadgen
+    /// millisecond knobs).
+    fn opt_u64_opt(&mut self, name: &str) -> Result<Option<u64>> {
+        self.opt(name)?
+            .map(|v| v.parse().with_context(|| format!("bad {name} value")))
+            .transpose()
+    }
+
     /// Consume whatever remains after the flags/options as positional
     /// arguments (the `merge` subcommand's shard files).
     fn positional(self) -> Vec<String> {
         self.rest
+    }
+}
+
+/// A required option was missing: usage to stderr (the CLI misuse
+/// contract), then a non-zero exit via the error return.
+fn require(opt: Option<String>, what: &str) -> Result<String> {
+    match opt {
+        Some(v) => Ok(v),
+        None => {
+            eprintln!("{USAGE}");
+            bail!("{what}");
+        }
     }
 }
 
@@ -183,9 +214,7 @@ fn main() -> Result<()> {
             }
         }
         "run" => {
-            let cfg_path = args
-                .opt("--config")?
-                .context("run requires --config FILE")?;
+            let cfg_path = require(args.opt("--config")?, "run requires --config FILE")?;
             args.finish()?;
             let cfg = config::ExperimentConfig::from_file(&PathBuf::from(cfg_path))?.protocol;
             let agg = protocol::run(&cfg)?;
@@ -252,9 +281,7 @@ fn main() -> Result<()> {
             }
         }
         "sweep" => {
-            let cfg_path = args
-                .opt("--config")?
-                .context("sweep requires --config FILE")?;
+            let cfg_path = require(args.opt("--config")?, "sweep requires --config FILE")?;
             let dry_run = args.flag("--dry-run");
             let resume = args.flag("--resume");
             let workers_cli = args.opt_usize_opt("--workers")?;
@@ -411,9 +438,10 @@ fn main() -> Result<()> {
             println!("results: {}", out.display());
         }
         "merge" => {
-            let cfg_path = args
-                .opt("--config")?
-                .context("merge requires --config FILE (the sweep's config)")?;
+            let cfg_path = require(
+                args.opt("--config")?,
+                "merge requires --config FILE (the sweep's config)",
+            )?;
             let out = args
                 .opt("--out")?
                 .map(PathBuf::from)
@@ -425,10 +453,10 @@ fn main() -> Result<()> {
                 bail!("unrecognized argument '{flag}' (merge takes --config, --out, and shard files)");
             }
             let inputs: Vec<PathBuf> = positional.into_iter().map(PathBuf::from).collect();
-            anyhow::ensure!(
-                !inputs.is_empty(),
-                "merge requires the shard files as positional arguments"
-            );
+            if inputs.is_empty() {
+                eprintln!("{USAGE}");
+                bail!("merge requires the shard files as positional arguments");
+            }
             let spec = config::sweep_from_file(&PathBuf::from(cfg_path))?;
             let plan = spec.plan();
             let outcome =
@@ -438,6 +466,92 @@ fn main() -> Result<()> {
                 outcome.shards, outcome.cells
             );
             println!("results: {}", out.display());
+        }
+        "serve" => {
+            let cfg_path = require(args.opt("--config")?, "serve requires --config FILE")?;
+            let bind = args.opt("--bind")?;
+            let snapshot = args.opt("--snapshot")?;
+            let max_clients = args.opt_usize_opt("--max-clients")?;
+            let fault_spec = args.opt("--inject-faults")?;
+            args.finish()?;
+            let mut cfg = config::serve_from_file(&PathBuf::from(cfg_path))?;
+            if let Some(b) = bind {
+                cfg.bind = b;
+            }
+            if let Some(s) = snapshot {
+                cfg.snapshot = Some(PathBuf::from(s));
+            }
+            if let Some(m) = max_clients {
+                anyhow::ensure!(m >= 1, "--max-clients must be >= 1");
+                cfg.max_clients = m;
+            }
+            // serve_with binds the server end (#1) itself; pass the raw plan
+            let faults = fault_spec
+                .map(|s| odl_har::util::faults::FaultPlan::parse(&s))
+                .transpose()?
+                .unwrap_or_default();
+            let summary = odl_har::coordinator::serve::serve_with(&cfg, &faults, |addr| {
+                // the ready line is the port-handoff contract: tests and
+                // scripts block on it, so it must be flushed immediately
+                println!("serve: listening on {addr}");
+                use std::io::Write as _;
+                let _ = std::io::stdout().flush();
+            })?;
+            println!("{}", summary.to_json().to_string());
+        }
+        "loadgen" => {
+            let addr = require(args.opt("--connect")?, "loadgen requires --connect ADDR")?;
+            let cfg_path =
+                require(args.opt("--config")?, "loadgen requires --config FILE")?;
+            let client = args.opt("--client")?.unwrap_or_else(|| "edge-0".into());
+            let events = args.opt_usize("--events", 64)?;
+            let retry_budget = args.opt_usize_opt("--retry-budget")?;
+            let backoff_base = args.opt_u64_opt("--backoff-base-ms")?;
+            let backoff_cap = args.opt_u64_opt("--backoff-cap-ms")?;
+            let reply_timeout = args.opt_u64_opt("--reply-timeout-ms")?;
+            let send_shutdown = args.flag("--shutdown");
+            let summary_out = args.opt("--summary-out")?;
+            let fault_spec = args.opt("--inject-faults")?;
+            args.finish()?;
+            // the client must derive its event stream from the *same*
+            // scenario the server provisioned from — one config file,
+            // read on both ends
+            let scfg = config::serve_from_file(&PathBuf::from(cfg_path))?;
+            let mut lcfg = odl_har::coordinator::serve::LoadgenConfig {
+                addr,
+                client,
+                events,
+                seed: scfg.seed,
+                data_seed: scfg.data_seed(),
+                synth: scfg.synth.clone(),
+                send_shutdown,
+                ..Default::default()
+            };
+            if let Some(rb) = retry_budget {
+                lcfg.retry_budget = u32::try_from(rb).context("bad --retry-budget value")?;
+            }
+            if let Some(b) = backoff_base {
+                anyhow::ensure!(b >= 1, "--backoff-base-ms must be >= 1");
+                lcfg.backoff_base_ms = b;
+            }
+            if let Some(c) = backoff_cap {
+                lcfg.backoff_cap_ms = c;
+            }
+            if let Some(t) = reply_timeout {
+                anyhow::ensure!(t >= 1, "--reply-timeout-ms must be >= 1");
+                lcfg.reply_timeout_ms = t;
+            }
+            if let Some(spec) = fault_spec {
+                // loadgen() rebinds to the client end (#2) internally
+                lcfg.faults = odl_har::util::faults::FaultPlan::parse(&spec)?;
+            }
+            let summary = odl_har::coordinator::serve::loadgen(&lcfg)?;
+            let line = summary.to_json().to_string();
+            if let Some(p) = summary_out {
+                std::fs::write(&p, format!("{line}\n"))
+                    .with_context(|| format!("writing {p}"))?;
+            }
+            println!("{line}");
         }
         "artifacts-check" => {
             args.finish()?;
@@ -453,7 +567,8 @@ fn main() -> Result<()> {
         }
         "--help" | "-h" | "help" => print_help(),
         other => {
-            print_help();
+            // usage goes to stderr on misuse — stdout stays parseable
+            eprintln!("{USAGE}");
             bail!("unknown subcommand '{other}'");
         }
     }
@@ -712,8 +827,10 @@ fn print_sweep_plan(plan: &odl_har::coordinator::SweepPlan, range: std::ops::Ran
     }
 }
 
-fn print_help() {
-    println!(
+/// One usage block, two exits: `help` prints it to stdout; misuse
+/// (unknown subcommand, missing required argument) prints it to stderr
+/// so stdout stays machine-parseable. `tests/cli_contract.rs` pins this.
+const USAGE: &str =
         "odl-har — tiny supervised ODL core with auto data pruning (paper reproduction)\n\
          \n\
          subcommands:\n\
@@ -755,6 +872,26 @@ fn print_help() {
                                           file byte-identical to a single-process sweep (headers\n\
                                           validated against the config's grid, rows re-interleaved\n\
                                           in cell order, stats trailer recomputed from the plan)\n\
-           artifacts-check                compile every PJRT artifact"
-    );
+           serve  --config FILE [--bind ADDR] [--snapshot FILE] [--max-clients N]\n\
+                  [--inject-faults SPEC]\n\
+                                          fault-tolerant teacher/label service over TCP (JSONL\n\
+                                          protocol): per-client OS-ELM + auto-pruning state,\n\
+                                          admission cap with structured busy, bounded queues,\n\
+                                          read/idle deadlines, exactly-once in-order events,\n\
+                                          graceful drain to a crash-consistent snapshot that a\n\
+                                          restart restores byte-identically ([serve] TOML section\n\
+                                          sets the knobs; see rust/RELIABILITY.md)\n\
+           loadgen --connect ADDR --config FILE [--client NAME] [--events N]\n\
+                  [--retry-budget K] [--backoff-base-ms MS] [--backoff-cap-ms MS]\n\
+                  [--reply-timeout-ms MS] [--shutdown] [--summary-out FILE]\n\
+                  [--inject-faults SPEC]\n\
+                                          deterministic edge client: replays a seeded event\n\
+                                          stream against serve, survives outages with capped\n\
+                                          exponential backoff + seeded jitter, buffers offline\n\
+                                          and replays on reconnect; --shutdown drains the server\n\
+                                          after the last ack\n\
+           artifacts-check                compile every PJRT artifact";
+
+fn print_help() {
+    println!("{USAGE}");
 }

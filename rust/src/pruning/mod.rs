@@ -132,6 +132,21 @@ pub struct AutoTheta {
 /// Default mismatch hysteresis (see [`AutoTheta`] docs).
 pub const DEFAULT_HYSTERESIS: u32 = 2;
 
+/// A plain-data snapshot of [`AutoTheta`]'s internal state — what the
+/// serve coordinator persists per client across drain/restart (the ladder
+/// must resume mid-streak for the restored trajectory to match an
+/// uninterrupted one bit for bit).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AutoThetaState {
+    pub idx: usize,
+    pub streak: u32,
+    pub x_required: u32,
+    pub mismatch_hysteresis: u32,
+    pub mismatch_streak: u32,
+    pub decreases: u32,
+    pub increases: u32,
+}
+
 impl AutoTheta {
     pub fn new(x_required: u32) -> Self {
         assert!(x_required > 0);
@@ -173,6 +188,36 @@ impl AutoTheta {
                 self.idx += 1;
                 self.decreases += 1;
             }
+        }
+    }
+
+    /// The complete ladder state, for crash-consistent serve snapshots.
+    /// Round-trips exactly through [`Self::restore`].
+    pub fn snapshot(&self) -> AutoThetaState {
+        AutoThetaState {
+            idx: self.idx,
+            streak: self.streak,
+            x_required: self.x_required,
+            mismatch_hysteresis: self.mismatch_hysteresis,
+            mismatch_streak: self.mismatch_streak,
+            decreases: self.decreases,
+            increases: self.increases,
+        }
+    }
+
+    /// Rebuild a ladder mid-run from a [`Self::snapshot`]; the restored
+    /// policy continues exactly where the original left off.
+    pub fn restore(s: AutoThetaState) -> Self {
+        assert!(s.idx < THETA_LADDER.len(), "snapshot ladder index {} out of range", s.idx);
+        assert!(s.x_required > 0 && s.mismatch_hysteresis > 0);
+        Self {
+            idx: s.idx,
+            streak: s.streak,
+            x_required: s.x_required,
+            mismatch_hysteresis: s.mismatch_hysteresis,
+            mismatch_streak: s.mismatch_streak,
+            decreases: s.decreases,
+            increases: s.increases,
         }
     }
 
@@ -378,6 +423,31 @@ mod tests {
         let p = Pruner::new(ThetaPolicy::Fixed(0.3), Metric::P1P2, 0);
         assert_eq!(p.decide(&pred(0.8, 0.1), 500, false), Decision::Skip);
         assert_eq!(p.decide(&pred(0.5, 0.4), 500, false), Decision::Query);
+    }
+
+    #[test]
+    fn auto_theta_snapshot_roundtrips_mid_streak() {
+        let mut a = AutoTheta::new(3).with_hysteresis(2);
+        // land mid-streak and mid-mismatch-streak
+        a.on_success();
+        a.on_success();
+        a.on_success(); // idx 1
+        a.on_success();
+        a.on_mismatch();
+        let mut b = AutoTheta::restore(a.snapshot());
+        assert_eq!(a.snapshot(), b.snapshot());
+        // the two ladders must stay in lockstep through every rule
+        for i in 0..32 {
+            if i % 5 == 0 {
+                a.on_mismatch();
+                b.on_mismatch();
+            } else {
+                a.on_success();
+                b.on_success();
+            }
+            assert_eq!(a.snapshot(), b.snapshot(), "diverged at step {i}");
+            assert_eq!(a.theta(), b.theta());
+        }
     }
 
     #[test]

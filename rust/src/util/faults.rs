@@ -24,6 +24,18 @@
 //!   (0 = header, k = the slice's k-th row); panic faults index the
 //!   **global cell**. `#SHARD` restricts a site to one shard of a
 //!   supervised run.
+//!
+//!   The serve stack (`odl-har serve` / `odl-har loadgen`) adds four
+//!   **network** kinds consulted per *message* instead of per write slot:
+//!   `drop` (swallow the message — the peer sees silence and must retry),
+//!   `delay` (hold the message briefly before sending), `close` (shut the
+//!   socket instead of sending — the peer reconnects), and `garble`
+//!   (corrupt the message bytes — the peer sees unparseable JSON). `kill`
+//!   doubles as a network site on the loadgen side (the client process
+//!   aborts at that message). For network sites, `#SHARD` selects the
+//!   socket *end*: the server consults its plan bound via
+//!   `for_shard(NET_SERVER)` (= `#1`), the client via
+//!   `for_shard(NET_CLIENT)` (= `#2`), so one spec can fault either end.
 //! * **Seeded chaos** — a bare `SEED` derives a pseudo-random schedule
 //!   from [`stream_seed`]`(seed, FAULT_DOMAIN, site)`: roughly one row
 //!   write in eight draws a kill/tear/ioerr, and roughly one cell in
@@ -44,6 +56,14 @@ use anyhow::{bail, ensure, Context, Result};
 /// [`stream_seed`] consumer (provisioning, shuffles, channel noise).
 pub const FAULT_DOMAIN: u64 = 0xFA17;
 
+/// The shard index the serve coordinator binds its network fault plan to
+/// (`FaultPlan::for_shard`): `#1` sites fire on the server's socket end.
+pub const NET_SERVER: usize = 1;
+
+/// The shard index `odl-har loadgen` binds its network fault plan to:
+/// `#2` sites fire on the client's socket end.
+pub const NET_CLIENT: usize = 2;
+
 /// One injectable failure kind. See the module docs for semantics.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FaultKind {
@@ -59,6 +79,14 @@ pub enum FaultKind {
     Panic,
     /// Panic the indexed cell's first two attempts (becomes an error row).
     Panic2,
+    /// Network: swallow the indexed message (the peer must retry).
+    Drop,
+    /// Network: delay the indexed message before sending it.
+    Delay,
+    /// Network: close the socket instead of sending (the peer reconnects).
+    Close,
+    /// Network: corrupt the indexed message's bytes on the wire.
+    Garble,
 }
 
 impl FaultKind {
@@ -70,7 +98,14 @@ impl FaultKind {
             "hang" => FaultKind::Hang,
             "panic" => FaultKind::Panic,
             "panic2" => FaultKind::Panic2,
-            _ => bail!("unknown fault kind '{s}' (kill|tear|ioerr|hang|panic|panic2)"),
+            "drop" => FaultKind::Drop,
+            "delay" => FaultKind::Delay,
+            "close" => FaultKind::Close,
+            "garble" => FaultKind::Garble,
+            _ => bail!(
+                "unknown fault kind '{s}' \
+                 (kill|tear|ioerr|hang|panic|panic2|drop|delay|close|garble)"
+            ),
         })
     }
 
@@ -78,6 +113,20 @@ impl FaultKind {
         matches!(
             self,
             FaultKind::Kill | FaultKind::Tear | FaultKind::IoErr | FaultKind::Hang
+        )
+    }
+
+    fn is_net_fault(self) -> bool {
+        matches!(
+            self,
+            FaultKind::Drop
+                | FaultKind::Delay
+                | FaultKind::Close
+                | FaultKind::Garble
+                // `kill` doubles as a network site: the loadgen client
+                // aborts at that message (serve ignores it — a server
+                // cannot meaningfully self-SIGKILL per message)
+                | FaultKind::Kill
         )
     }
 }
@@ -211,6 +260,32 @@ impl FaultPlan {
         None
     }
 
+    /// The network fault (if any) for message `index` on the bound socket
+    /// end (see [`NET_SERVER`]/[`NET_CLIENT`]) — consulted by the serve
+    /// coordinator per response and by loadgen per request. Seeded mode
+    /// draws drop/delay/garble/close with probability ~1/6 per message —
+    /// every seeded network fault is recoverable (the protocol dedups by
+    /// sequence number and both ends retry), so seeded chaos still
+    /// converges on the undisturbed final state; `kill` fires only as an
+    /// explicit site.
+    pub fn net_fault(&self, index: usize) -> Option<FaultKind> {
+        for site in &self.sites {
+            if site.index == index && site.kind.is_net_fault() && self.site_matches(site) {
+                return Some(site.kind);
+            }
+        }
+        if self.seeded {
+            return match self.draw(2, index) % 24 {
+                0 => Some(FaultKind::Drop),
+                1 => Some(FaultKind::Delay),
+                2 => Some(FaultKind::Garble),
+                3 => Some(FaultKind::Close),
+                _ => None,
+            };
+        }
+        None
+    }
+
     /// Whether global cell `cell` panics on `attempt` (0-based). Seeded
     /// mode panics ~1 cell in 8, first attempt only, so an unsupervised
     /// seeded run still self-heals through the in-pool retry.
@@ -281,6 +356,63 @@ mod tests {
         // panic sites are not write faults and vice versa
         assert_eq!(plan.write_fault(4), None);
         assert!(!plan.cell_panics(2, 0));
+    }
+
+    #[test]
+    fn network_sites_parse_and_bind_to_socket_ends() {
+        let plan = FaultPlan::parse("3:drop@2#1,garble@4#2,close@5,delay@6#2,kill@7#2").unwrap();
+        // #1 = server end, #2 = client end
+        let server = plan.for_shard(NET_SERVER);
+        let client = plan.for_shard(NET_CLIENT);
+        assert_eq!(server.net_fault(2), Some(FaultKind::Drop));
+        assert_eq!(client.net_fault(2), None);
+        assert_eq!(client.net_fault(4), Some(FaultKind::Garble));
+        assert_eq!(server.net_fault(4), None);
+        // unscoped sites fire on either end
+        assert_eq!(server.net_fault(5), Some(FaultKind::Close));
+        assert_eq!(client.net_fault(5), Some(FaultKind::Close));
+        assert_eq!(client.net_fault(6), Some(FaultKind::Delay));
+        // kill doubles as a client-side network site
+        assert_eq!(client.net_fault(7), Some(FaultKind::Kill));
+        assert_eq!(server.net_fault(7), None);
+        // network kinds never leak into the write-fault path and
+        // write kinds (other than kill) never leak into the net path
+        assert_eq!(server.write_fault(2), None);
+        let wp = FaultPlan::parse("3:tear@1,ioerr@2,hang@3").unwrap();
+        for i in 1..=3 {
+            assert_eq!(wp.net_fault(i), None);
+        }
+    }
+
+    #[test]
+    fn seeded_net_schedule_is_replayable_end_keyed_and_recoverable() {
+        let plan = FaultPlan::parse("1701").unwrap();
+        let server: Vec<_> = (0..96)
+            .map(|i| plan.for_shard(NET_SERVER).net_fault(i))
+            .collect();
+        // pure function of (seed, end, index)
+        assert_eq!(
+            server,
+            (0..96)
+                .map(|i| FaultPlan::parse("1701").unwrap().for_shard(NET_SERVER).net_fault(i))
+                .collect::<Vec<_>>()
+        );
+        // chaos fires somewhere, and the two ends draw different streams
+        assert!(server.iter().any(|f| f.is_some()));
+        let client: Vec<_> = (0..96)
+            .map(|i| plan.for_shard(NET_CLIENT).net_fault(i))
+            .collect();
+        assert_ne!(server, client);
+        // seeded mode only draws recoverable kinds — never kill
+        for f in server.iter().chain(client.iter()).flatten() {
+            assert!(
+                matches!(
+                    f,
+                    FaultKind::Drop | FaultKind::Delay | FaultKind::Garble | FaultKind::Close
+                ),
+                "seeded net fault drew unrecoverable {f:?}"
+            );
+        }
     }
 
     #[test]

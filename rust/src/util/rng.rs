@@ -203,6 +203,24 @@ impl Rng64 {
         Self { state }
     }
 
+    /// The raw generator state — for crash-consistent snapshots that must
+    /// resume a stream mid-sequence (e.g. the serve coordinator's
+    /// per-client teacher). Round-trips exactly through
+    /// [`Self::from_state`].
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Rebuild a generator from a previously captured [`Self::state`].
+    /// Unlike [`Self::new`] this is NOT a seeding function: the value is
+    /// installed verbatim (zero, which a healthy stream can never reach,
+    /// is remapped the same way `new` remaps it).
+    pub fn from_state(state: u64) -> Self {
+        Self {
+            state: if state == 0 { 0x9E37_79B9_7F4A_7C15 } else { state },
+        }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         // xorshift64*

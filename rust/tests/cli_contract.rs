@@ -1,0 +1,137 @@
+//! CLI misuse contract, pinned against the real binary: an unknown
+//! subcommand or a missing required argument exits **non-zero** with the
+//! usage block on **stderr**, while stdout stays clean (a script piping
+//! `odl-har` output must never parse half a banner). `help` is the one
+//! place usage goes to stdout — and it must list every subcommand,
+//! including `serve`/`loadgen`.
+
+use std::process::{Command, Output};
+
+fn run(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_odl-har"))
+        .args(args)
+        .output()
+        .expect("spawning the odl-har CLI")
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+/// The usage banner's first line — present exactly where usage belongs.
+const BANNER: &str = "odl-har — tiny supervised ODL core";
+
+#[test]
+fn unknown_subcommand_fails_with_usage_on_stderr() {
+    let out = run(&["frobnicate"]);
+    assert!(!out.status.success(), "unknown subcommand must exit non-zero");
+    let err = stderr(&out);
+    assert!(err.contains(BANNER), "usage must go to stderr, got: {err}");
+    assert!(
+        err.contains("unknown subcommand 'frobnicate'"),
+        "the offending word must be named: {err}"
+    );
+    assert!(
+        stdout(&out).is_empty(),
+        "stdout must stay clean on misuse, got: {}",
+        stdout(&out)
+    );
+}
+
+#[test]
+fn missing_required_args_fail_with_usage_on_stderr() {
+    // every subcommand with a required option, driven without it
+    let cases: &[(&[&str], &str)] = &[
+        (&["run"], "run requires --config"),
+        (&["sweep"], "sweep requires --config"),
+        (&["merge"], "merge requires --config"),
+        (&["serve"], "serve requires --config"),
+        (&["loadgen"], "loadgen requires --connect"),
+        (&["loadgen", "--connect", "127.0.0.1:1"], "loadgen requires --config"),
+    ];
+    for (args, want) in cases {
+        let out = run(args);
+        assert!(!out.status.success(), "{args:?} must exit non-zero");
+        let err = stderr(&out);
+        assert!(err.contains(BANNER), "{args:?}: usage must go to stderr: {err}");
+        assert!(err.contains(want), "{args:?}: expected '{want}' in: {err}");
+        assert!(
+            stdout(&out).is_empty(),
+            "{args:?}: stdout must stay clean on misuse"
+        );
+    }
+}
+
+#[test]
+fn option_missing_its_value_fails() {
+    let out = run(&["table2", "--trials"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("--trials requires a value"));
+}
+
+#[test]
+fn unrecognized_flag_fails() {
+    let out = run(&["table1", "--frobnicate"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("unrecognized arguments"));
+}
+
+#[test]
+fn help_lists_every_subcommand_on_stdout() {
+    for invocation in [&["help"][..], &["--help"][..], &["-h"][..]] {
+        let out = run(invocation);
+        assert!(out.status.success(), "{invocation:?} is not an error");
+        let text = stdout(&out);
+        assert!(text.contains(BANNER));
+        for sub in [
+            "table1", "table2", "table3", "table4", "fig1", "fig3", "fig4", "run",
+            "fleet", "sweep", "merge", "serve", "loadgen", "artifacts-check",
+        ] {
+            assert!(
+                text.contains(sub),
+                "{invocation:?}: help must list '{sub}'"
+            );
+        }
+        assert!(stderr(&out).is_empty(), "help writes nothing to stderr");
+    }
+}
+
+#[test]
+fn loadgen_against_a_dead_address_degrades_with_a_diagnostic() {
+    // port 1 on localhost refuses immediately; a zero retry budget makes
+    // this fast. The client must exit non-zero and explain the degraded
+    // offline mode rather than hang or panic.
+    let dir = std::env::temp_dir().join("odl_har_cli_contract_loadgen");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("serve.toml");
+    std::fs::write(
+        &cfg,
+        "[fleet]\nn_hidden = 16\nseed = 7\n\n[data]\nn_features = 12\nn_classes = 3\nn_subjects = 2\nsamples_per_cell = 12\n",
+    )
+    .unwrap();
+    let out = run(&[
+        "loadgen",
+        "--connect",
+        "127.0.0.1:1",
+        "--config",
+        cfg.to_str().unwrap(),
+        "--events",
+        "4",
+        "--retry-budget",
+        "0",
+        "--backoff-base-ms",
+        "1",
+    ]);
+    assert!(!out.status.success(), "an unreachable server is an error");
+    let err = stderr(&out);
+    assert!(
+        err.contains("unreachable") && err.contains("buffered"),
+        "the degraded-mode diagnostic must name the buffered events: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

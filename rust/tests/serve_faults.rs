@@ -1,0 +1,295 @@
+//! Chaos suite for `odl-har serve` + `odl-har loadgen`, driven through
+//! the real binaries: seeded drop/delay/close/garble schedules on either
+//! socket end (`--inject-faults`, see `util::faults`), client-process
+//! kills mid-stream, and drain/restart splits — all asserting the
+//! server's drained snapshot is **byte-identical** to an undisturbed
+//! run's. The wire protocol dedups by sequence number and both ends
+//! retry, so every recoverable transport fault must converge on the
+//! exact same per-client OS-ELM/pruner/teacher state.
+
+use std::io::{BufRead, BufReader, Read as _};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+
+/// Tiny scenario (72-row provisioning pool over 12 features) so a full
+/// chaos matrix stays in CI time. `warmup = 4` makes the pruner actually
+/// skip events inside short streams.
+const CONFIG: &str = r#"
+[fleet]
+n_hidden = 16
+seed = 11
+data_seed = 77
+
+[teacher]
+error_rate = 0.1
+
+[data]
+n_features = 12
+n_classes = 3
+n_subjects = 2
+samples_per_cell = 12
+
+[serve]
+max_clients = 8
+queue_depth = 16
+read_timeout_ms = 20
+idle_timeout_ms = 5000
+retry_after_ms = 5
+warmup = 4
+"#;
+
+fn exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_odl-har"))
+}
+
+struct Setup {
+    dir: PathBuf,
+    cfg: PathBuf,
+}
+
+fn setup(name: &str) -> Setup {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("serve.toml");
+    std::fs::write(&cfg, CONFIG).unwrap();
+    Setup { dir, cfg }
+}
+
+/// A running `odl-har serve` child and the ephemeral address it bound.
+struct Server {
+    child: Child,
+    addr: String,
+}
+
+fn start_server(cfg: &Path, snapshot: &Path, faults: Option<&str>) -> Server {
+    let mut cmd = Command::new(exe());
+    cmd.arg("serve")
+        .arg("--config")
+        .arg(cfg)
+        .arg("--bind")
+        .arg("127.0.0.1:0")
+        .arg("--snapshot")
+        .arg(snapshot)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit());
+    if let Some(spec) = faults {
+        cmd.arg("--inject-faults").arg(spec);
+    }
+    let mut child = cmd.spawn().expect("spawning serve");
+    // the flushed ready line is the port-handoff contract
+    let mut reader = BufReader::new(child.stdout.take().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("reading the ready line");
+    let addr = line
+        .trim()
+        .strip_prefix("serve: listening on ")
+        .unwrap_or_else(|| panic!("unexpected ready line: {line:?}"))
+        .to_string();
+    // keep draining stdout so the child never blocks on a full pipe
+    std::thread::spawn(move || {
+        let mut rest = String::new();
+        let _ = reader.read_to_string(&mut rest);
+    });
+    Server { child, addr }
+}
+
+fn loadgen_cmd(addr: &str, cfg: &Path, client: &str, events: usize) -> Command {
+    let mut cmd = Command::new(exe());
+    cmd.arg("loadgen")
+        .arg("--connect")
+        .arg(addr)
+        .arg("--config")
+        .arg(cfg)
+        .arg("--client")
+        .arg(client)
+        .arg("--events")
+        .arg(events.to_string())
+        .arg("--retry-budget")
+        .arg("5")
+        .arg("--backoff-base-ms")
+        .arg("2")
+        .arg("--backoff-cap-ms")
+        .arg("20")
+        .arg("--reply-timeout-ms")
+        .arg("150")
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped());
+    cmd
+}
+
+/// Run `n` loadgen clients concurrently (edge-0 .. edge-{n-1}), assert
+/// each delivered every event, and return their summary JSON lines.
+fn run_clients(addr: &str, cfg: &Path, n: usize, events: usize, faults: Option<&str>) -> Vec<String> {
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let client = format!("edge-{i}");
+                let addr = addr.to_string();
+                scope.spawn(move || {
+                    let mut cmd = loadgen_cmd(&addr, cfg, &client, events);
+                    if let Some(spec) = faults {
+                        cmd.arg("--inject-faults").arg(spec);
+                    }
+                    let out = cmd.output().expect("spawning loadgen");
+                    assert!(
+                        out.status.success(),
+                        "loadgen {client} failed: {}",
+                        String::from_utf8_lossy(&out.stderr)
+                    );
+                    let text = String::from_utf8_lossy(&out.stdout).into_owned();
+                    assert!(
+                        text.contains(&format!("\"delivered\":{events}")),
+                        "loadgen {client} must deliver all {events} events: {text}"
+                    );
+                    text
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Drain the server (a zero-event loadgen run with `--shutdown`), wait
+/// for it to exit cleanly, and return the published snapshot bytes.
+fn drain_and_snapshot(mut server: Server, cfg: &Path, snapshot: &Path) -> Vec<u8> {
+    let out = loadgen_cmd(&server.addr, cfg, "edge-0", 0)
+        .arg("--shutdown")
+        .output()
+        .expect("spawning the drain client");
+    assert!(
+        out.status.success(),
+        "drain client failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let status = server.child.wait().expect("waiting for serve");
+    assert!(status.success(), "serve must drain to a clean exit");
+    std::fs::read(snapshot).expect("the drained snapshot must exist")
+}
+
+/// One full scenario: fresh server, `n` concurrent clients, drain.
+fn run_scenario(
+    s: &Setup,
+    tag: &str,
+    n: usize,
+    events: usize,
+    server_faults: Option<&str>,
+    client_faults: Option<&str>,
+) -> Vec<u8> {
+    let snap = s.dir.join(format!("snap_{tag}.json"));
+    let server = start_server(&s.cfg, &snap, server_faults);
+    run_clients(&server.addr, &s.cfg, n, events, client_faults);
+    drain_and_snapshot(server, &s.cfg, &snap)
+}
+
+/// drop/delay/close/garble on both socket ends, at 1, 2, and 8 clients:
+/// the drained per-client state must match an undisturbed run's, byte
+/// for byte. Explicit sites pin each fault kind; the server indices
+/// count globally across every connection, the client indices per
+/// loadgen process.
+#[test]
+fn explicit_fault_schedules_converge_to_the_undisturbed_snapshot() {
+    let s = setup("odl_har_serve_chaos_explicit");
+    let spec = "5:drop@3#1,garble@7#1,delay@11#1,close@13#1,drop@4#2,garble@9#2,delay@6#2,close@14#2";
+    for n in [1usize, 2, 8] {
+        let clean = run_scenario(&s, &format!("clean_{n}"), n, 24, None, None);
+        assert!(
+            clean.windows(8).any(|w| w == b"\"edge-0\""),
+            "the snapshot must carry per-client state"
+        );
+        let chaos = run_scenario(&s, &format!("chaos_{n}"), n, 24, Some(spec), Some(spec));
+        assert_eq!(
+            chaos, clean,
+            "{n} client(s): the disturbed run must converge on the clean state"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&s.dir);
+}
+
+/// A bare seed draws recoverable net faults (~1/6 of messages, both ends,
+/// different streams) — full-random chaos must still converge.
+#[test]
+fn seeded_chaos_converges_to_the_undisturbed_snapshot() {
+    let s = setup("odl_har_serve_chaos_seeded");
+    let clean = run_scenario(&s, "clean", 2, 24, None, None);
+    let chaos = run_scenario(&s, "chaos", 2, 24, Some("1701"), Some("1701"));
+    assert_eq!(chaos, clean, "seeded chaos must converge on the clean state");
+    let _ = std::fs::remove_dir_all(&s.dir);
+}
+
+/// A client process killed mid-stream (injected abort at its 5th send)
+/// loses nothing durable: a rerun replays the same deterministic event
+/// stream, the server's watermark dedups the prefix, and the drained
+/// state matches a run that never crashed.
+#[test]
+fn killed_client_rerun_replays_to_the_clean_state() {
+    let s = setup("odl_har_serve_chaos_kill");
+    let clean = run_scenario(&s, "clean", 2, 24, None, None);
+
+    let snap = s.dir.join("snap_kill.json");
+    let server = start_server(&s.cfg, &snap, None);
+    // edge-1 runs undisturbed; edge-0 aborts mid-stream
+    let out = loadgen_cmd(&server.addr, &s.cfg, "edge-1", 24)
+        .output()
+        .expect("spawning loadgen edge-1");
+    assert!(out.status.success());
+    let killed = loadgen_cmd(&server.addr, &s.cfg, "edge-0", 24)
+        .arg("--inject-faults")
+        .arg("5:kill@5#2")
+        .output()
+        .expect("spawning the doomed loadgen");
+    assert!(
+        !killed.status.success(),
+        "the kill site must abort the client process"
+    );
+    // rerun without faults: welcome fast-forwards past the applied prefix
+    let rerun = loadgen_cmd(&server.addr, &s.cfg, "edge-0", 24)
+        .output()
+        .expect("spawning the rerun loadgen");
+    assert!(
+        rerun.status.success(),
+        "rerun failed: {}",
+        String::from_utf8_lossy(&rerun.stderr)
+    );
+    let text = String::from_utf8_lossy(&rerun.stdout);
+    assert!(
+        text.contains("\"delivered\":24"),
+        "the rerun must finish the stream: {text}"
+    );
+    let bytes = drain_and_snapshot(server, &s.cfg, &snap);
+    assert_eq!(bytes, clean, "crash + rerun must converge on the clean state");
+    let _ = std::fs::remove_dir_all(&s.dir);
+}
+
+/// Graceful drain is a real checkpoint: 20 events, drain, restart from
+/// the snapshot, finish to 40 — byte-identical to one uninterrupted
+/// 40-event run. The event stream is prefix-stable and the welcome
+/// watermark fast-forwards the client, so nothing replays twice.
+#[test]
+fn drain_and_restart_resumes_byte_identically() {
+    let s = setup("odl_har_serve_chaos_restart");
+    let full = run_scenario(&s, "full", 2, 40, None, None);
+
+    let snap = s.dir.join("snap_split.json");
+    let server = start_server(&s.cfg, &snap, None);
+    run_clients(&server.addr, &s.cfg, 2, 20, None);
+    let first = drain_and_snapshot(server, &s.cfg, &snap);
+    assert_ne!(first, full, "the 20-event checkpoint is not the final state");
+
+    let server = start_server(&s.cfg, &snap, None);
+    // the restarted server restores both clients; each rerun asks for the
+    // full 40 and is fast-forwarded past its applied 20 by the welcome
+    let summaries = run_clients(&server.addr, &s.cfg, 2, 40, None);
+    for text in &summaries {
+        assert!(
+            text.contains("\"acked\":20"),
+            "only the unapplied suffix may be re-sent: {text}"
+        );
+    }
+    let second = drain_and_snapshot(server, &s.cfg, &snap);
+    assert_eq!(
+        second, full,
+        "drain + restart must be byte-identical to the uninterrupted run"
+    );
+    let _ = std::fs::remove_dir_all(&s.dir);
+}

@@ -175,6 +175,50 @@ fn hung_child_process_is_sigkilled_and_recovered() {
     let _ = std::fs::remove_dir_all(&s.dir);
 }
 
+/// A fault that lands *after* a shard's stream is durably complete must
+/// not burn the retry budget. Slot 3 on shard 2 (2 cells + trailer) is
+/// "kill/hang between the trailer flush and process exit": with
+/// `retry_budget = 0` a supervisor that retires the corpse instead of
+/// reading the finished file quarantines the shard and exits degraded —
+/// the false-hang/false-kill audit this test pins.
+#[test]
+fn faults_after_a_complete_stream_are_success_not_failures() {
+    let s = setup("odl_har_chaos_postcomplete_test");
+    for (i, sched) in ["15:kill@3#2", "15:hang@3#2"].iter().enumerate() {
+        let merged = s.dir.join(format!("merged_{i}.jsonl"));
+        let paths = shard_out_paths(&merged, 2);
+        let mut scfg = config::supervise_from_str(CONFIG).unwrap();
+        scfg.workers_per_shard = 1;
+        // zero budget: a single false retire quarantines the shard
+        scfg.retry_budget = 0;
+        scfg.fault_spec = Some(sched.to_string());
+        scfg.heartbeat_timeout_s = 1.0;
+        scfg.poll_ms = 50;
+        let launcher = ProcessLauncher {
+            exe: exe(),
+            config_path: s.cfg_path.clone(),
+        };
+        let out = supervise(&s.plan, &scfg, &launcher, &paths, Some(&merged)).unwrap();
+        assert_eq!(
+            out.status,
+            SuperviseStatus::Complete,
+            "schedule {sched}: a fault after the trailer flush must read as \
+             success, not burn the (zero) retry budget: {:?}",
+            out.shards
+        );
+        assert_eq!(
+            out.shards[1].attempts, 1,
+            "schedule {sched}: the complete file must be recognized without a relaunch"
+        );
+        assert_eq!(
+            std::fs::read(&merged).unwrap(),
+            s.clean,
+            "schedule {sched}: merged bytes diverged"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&s.dir);
+}
+
 #[test]
 fn cli_exit_codes_distinguish_complete_degraded_failed() {
     let s = setup("odl_har_chaos_exitcode_test");

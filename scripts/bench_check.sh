@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Perf regression gate: re-runs the self-measuring benches and compares
-# BENCH_hotpath.json / BENCH_fleet.json / BENCH_sweep.json against the
-# previous accepted run
+# BENCH_hotpath.json / BENCH_fleet.json / BENCH_sweep.json /
+# BENCH_serve.json against the previous accepted run
 # (kept next to them as BENCH_<name>.prev.json). Fails on a >10 %
 # regression of any tracked metric; on success rotates the fresh numbers
 # in as the new baseline.
@@ -25,6 +25,8 @@
 #            provision_ms @ 256 edges         (lower is better)
 #   sweep:   memo_speedup                     (higher is better)
 #            edge_memo_speedup                (higher is better)
+#   serve:   throughput_eps                   (higher is better)
+#            p99_ms                           (lower is better)
 #
 # Absolute gates (not baseline-relative):
 #   sweep:   resume_overhead_frac <= 0.20 — resuming an already complete
@@ -49,6 +51,7 @@ if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
   ODL_BENCH_FAST=1 cargo bench --bench bench_hotpath
   ODL_BENCH_FAST=1 cargo bench --bench bench_fleet_scale
   ODL_BENCH_FAST=1 cargo bench --bench bench_sweep
+  ODL_BENCH_FAST=1 cargo bench --bench bench_serve
 fi
 
 # When the benches just ran (not SKIP_BENCH), a missing/empty fresh JSON
@@ -141,6 +144,10 @@ sweep = check("sweep", "BENCH_sweep.json", "BENCH_sweep.prev.json", [
     ("memo_speedup", lambda d: d.get("memo_speedup"), True),
     ("edge_memo_speedup", lambda d: d.get("edge_memo_speedup"), True),
 ])
+check("serve", "BENCH_serve.json", "BENCH_serve.prev.json", [
+    ("throughput_eps", lambda d: d.get("throughput_eps"), True),
+    ("p99_ms", lambda d: d.get("p99_ms"), False),
+])
 
 # absolute gates on the sweep engine: the resumed-complete run skips
 # every cell (so it must be ~free), the edge-state memo must engage
@@ -180,7 +187,7 @@ if [[ "${SKIP_BENCH:-0}" == "1" ]]; then
   echo "bench_check: SKIP_BENCH=1 — compare only, baselines NOT rotated"
   exit 0
 fi
-for f in BENCH_hotpath.json BENCH_fleet.json BENCH_sweep.json; do
+for f in BENCH_hotpath.json BENCH_fleet.json BENCH_sweep.json BENCH_serve.json; do
   # never rotate a missing, empty, or unparseable file in as a baseline —
   # a damaged baseline would demote its metric family to "first run" on
   # every later invocation and hide regressions for good

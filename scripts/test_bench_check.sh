@@ -8,8 +8,9 @@
 # Covers the graceful-degradation paths (missing, empty, and corrupt
 # bench/baseline files must warn and skip — a fresh tree seeds baselines,
 # it never fails) and each gate (baseline-relative memo_speedup /
-# edge_memo_speedup, absolute resume_overhead_frac / edge_hit_rate /
-# edge_memo_speedup / supervise_overhead_frac floors and ceilings).
+# edge_memo_speedup and the serve throughput_eps / p99_ms pair, absolute
+# resume_overhead_frac / edge_hit_rate / edge_memo_speedup /
+# supervise_overhead_frac floors and ceilings).
 
 set -euo pipefail
 here="$(cd "$(dirname "$0")" && pwd)"
@@ -45,6 +46,12 @@ sweep_json() {
   # sweep_json MEMO_SPEEDUP RESUME_FRAC EDGE_HIT_RATE EDGE_MEMO_SPEEDUP SUPERVISE_FRAC
   printf '{"schema":"bench_sweep/v4","memo_speedup":%s,"resume_overhead_frac":%s,"edge_hit_rate":%s,"edge_memo_speedup":%s,"supervise_overhead_frac":%s}' \
     "$1" "$2" "$3" "$4" "$5"
+}
+
+serve_json() {
+  # serve_json THROUGHPUT_EPS P99_MS
+  printf '{"schema":"bench_serve/v1","throughput_eps":%s,"p50_ms":0.05,"p99_ms":%s}' \
+    "$1" "$2"
 }
 
 # 1. fresh tree: nothing measured at all — degrade, never fail
@@ -112,6 +119,20 @@ printf '{"schema":"bench_sweep/v3","memo_speedup":2.0,"resume_overhead_frac":0.0
   > "$tmp/BENCH_sweep.json"
 run_case "pre-v4 bench JSON skips supervise gate" 0 "supervise_overhead_frac not measured"
 
+# 12d. serve gates: healthy vs baseline passes; a throughput drop or a
+# p99 increase beyond the tolerance fails (p99 is lower-is-better — the
+# direction must be inverted, which these two cases pin)
+serve_json 20000 0.20 > "$tmp/BENCH_serve.json"
+serve_json 20000 0.20 > "$tmp/BENCH_serve.prev.json"
+run_case "healthy serve vs baseline" 0 "bench_check: PASS"
+serve_json 10000 0.20 > "$tmp/BENCH_serve.json"
+run_case "serve throughput regression fails" 1 "serve:throughput_eps.*REGRESSION"
+serve_json 20000 0.40 > "$tmp/BENCH_serve.json"
+run_case "serve p99 regression fails" 1 "serve:p99_ms.*REGRESSION"
+serve_json 22000 0.19 > "$tmp/BENCH_serve.json"
+run_case "serve improvement passes" 0 "bench_check: PASS"
+rm -f "$tmp/BENCH_serve.json" "$tmp/BENCH_serve.prev.json"
+
 # 13. a bench-run invocation (REQUIRE_FRESH=1) must FAIL on a missing
 # fresh measurement — write failures cannot hide regressions
 rm -f "$tmp"/BENCH_*.json "$tmp"/BENCH_*.prev.json
@@ -125,8 +146,10 @@ else
   fail=$((fail + 1))
 fi
 
-# 14. and passes again once the fresh measurements exist
+# 14. and passes again once the fresh measurements exist (every bench
+# family, BENCH_serve.json included, must be present under REQUIRE_FRESH)
 sweep_json 2.0 0.05 0.8 3.0 0.05 > "$tmp/BENCH_sweep.json"
+serve_json 20000 0.20 > "$tmp/BENCH_serve.json"
 printf '{"schema":"bench_hotpath/v1","speedup_vs_baseline":{}}' > "$tmp/BENCH_hotpath.json"
 printf '{"schema":"bench_fleet/v1","results":[]}' > "$tmp/BENCH_fleet.json"
 out=$(SKIP_BENCH=1 REQUIRE_FRESH=1 BENCH_DIR="$tmp" bash "$check" 2>&1) && rc=0 || rc=$?
@@ -138,7 +161,7 @@ else
   echo "$out" | sed 's/^/    /'
   fail=$((fail + 1))
 fi
-rm -f "$tmp"/BENCH_hotpath.json "$tmp"/BENCH_fleet.json
+rm -f "$tmp"/BENCH_hotpath.json "$tmp"/BENCH_fleet.json "$tmp"/BENCH_serve.json
 
 # 15. compare-only mode never rotates baselines
 sweep_json 2.0 0.05 0.8 3.0 0.05 > "$tmp/BENCH_sweep.json"

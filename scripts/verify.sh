@@ -6,9 +6,10 @@
 # The benches write rust/BENCH_hotpath.json (per-op ns, samples/s, and the
 # kernel-vs-scalar-baseline speedups measured on this machine),
 # rust/BENCH_fleet.json (sequential vs sharded event-loop wall time plus
-# the sequential-vs-sharded provisioning split), and rust/BENCH_sweep.json
-# (naive vs memoized scenario grid); see rust/PERF.md for how to read
-# them. Use scripts/bench_check.sh to gate a change on >10 % perf
+# the sequential-vs-sharded provisioning split), rust/BENCH_sweep.json
+# (naive vs memoized scenario grid), and rust/BENCH_serve.json (serve
+# round-trip latency/throughput over loopback TCP); see rust/PERF.md for
+# how to read them. Use scripts/bench_check.sh to gate a change on >10 % perf
 # regressions against the previous accepted run.
 
 set -euo pipefail
@@ -23,6 +24,7 @@ cargo test -q --test fleet_determinism
 ODL_BENCH_FAST=1 cargo bench --bench bench_hotpath
 ODL_BENCH_FAST=1 cargo bench --bench bench_fleet_scale
 ODL_BENCH_FAST=1 cargo bench --bench bench_sweep
+ODL_BENCH_FAST=1 cargo bench --bench bench_serve
 # sweep smoke: a TOML-declared grid (incl. the n_hidden/loss/teacher-error
 # axes) end to end through the CLI; the results file must contain
 # header + 16 cells + stats trailer
@@ -88,6 +90,76 @@ if [[ "$rc" -ne 2 ]]; then
 fi
 if [[ -f /tmp/odl_sweep_chaos_deg.jsonl ]]; then
   echo "chaos smoke: a degraded run must not publish a merged file" >&2
+  exit 1
+fi
+# serve smoke: the fault-tolerant teacher service end to end through the
+# CLI — ephemeral port, a client killed mid-stream by an injected abort,
+# a chaos-schedule rerun that must still deliver everything (the server
+# watermark dedups the replayed prefix), then a graceful drain that
+# publishes the snapshot
+rm -f /tmp/odl_serve_smoke.snap /tmp/odl_serve_smoke.log
+./target/release/odl-har serve --config configs/serve_smoke.toml \
+  --bind 127.0.0.1:0 --snapshot /tmp/odl_serve_smoke.snap \
+  > /tmp/odl_serve_smoke.log &
+serve_pid=$!
+addr=""
+for _ in $(seq 1 100); do
+  addr=$(sed -n 's/^serve: listening on //p' /tmp/odl_serve_smoke.log)
+  [[ -n "$addr" ]] && break
+  sleep 0.05
+done
+if [[ -z "$addr" ]]; then
+  echo "serve smoke: server never printed its ready line" >&2
+  exit 1
+fi
+rc=0
+./target/release/odl-har loadgen --connect "$addr" --config configs/serve_smoke.toml \
+  --client edge-0 --events 24 --inject-faults 5:kill@5#2 >/dev/null 2>&1 || rc=$?
+if [[ "$rc" -eq 0 ]]; then
+  echo "serve smoke: the kill schedule must abort the client" >&2
+  exit 1
+fi
+lg_out=$(./target/release/odl-har loadgen --connect "$addr" --config configs/serve_smoke.toml \
+  --client edge-0 --events 24 --inject-faults 5:drop@4#2,garble@9#2)
+grep -q '"delivered":24' <<< "$lg_out"
+./target/release/odl-har loadgen --connect "$addr" --config configs/serve_smoke.toml \
+  --client edge-0 --events 0 --shutdown >/dev/null
+wait "$serve_pid"
+if [[ ! -s /tmp/odl_serve_smoke.snap ]]; then
+  echo "serve smoke: the drained server must publish its snapshot" >&2
+  exit 1
+fi
+# restore round-trip: a restarted server loads the snapshot and a second
+# drain must re-publish it byte-identically (nothing new was applied)
+cp /tmp/odl_serve_smoke.snap /tmp/odl_serve_smoke.snap.orig
+rm -f /tmp/odl_serve_smoke.log
+./target/release/odl-har serve --config configs/serve_smoke.toml \
+  --bind 127.0.0.1:0 --snapshot /tmp/odl_serve_smoke.snap \
+  > /tmp/odl_serve_smoke.log &
+serve_pid=$!
+addr=""
+for _ in $(seq 1 100); do
+  addr=$(sed -n 's/^serve: listening on //p' /tmp/odl_serve_smoke.log)
+  [[ -n "$addr" ]] && break
+  sleep 0.05
+done
+[[ -n "$addr" ]]
+./target/release/odl-har loadgen --connect "$addr" --config configs/serve_smoke.toml \
+  --client edge-0 --events 0 --shutdown >/dev/null
+wait "$serve_pid"
+cmp /tmp/odl_serve_smoke.snap /tmp/odl_serve_smoke.snap.orig
+# CLI misuse contract: unknown subcommand and missing required args must
+# exit non-zero with usage on stderr (stdout stays parseable)
+rc=0
+./target/release/odl-har frobnicate >/dev/null 2>/tmp/odl_cli_err.log || rc=$?
+if [[ "$rc" -eq 0 ]] || ! grep -q "subcommands:" /tmp/odl_cli_err.log; then
+  echo "cli smoke: unknown subcommand must fail with usage on stderr" >&2
+  exit 1
+fi
+rc=0
+./target/release/odl-har serve >/dev/null 2>/tmp/odl_cli_err.log || rc=$?
+if [[ "$rc" -eq 0 ]] || ! grep -q "serve requires --config" /tmp/odl_cli_err.log; then
+  echo "cli smoke: serve without --config must fail with usage on stderr" >&2
   exit 1
 fi
 # the bench_check gate's own fixture suite (no toolchain needed)
