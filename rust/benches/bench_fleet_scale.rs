@@ -14,13 +14,22 @@
 //! win of sharded per-edge `init_batch` (the PR-3 acceptance bar is ≥ 3×
 //! at 256 edges on a ≥ 4-core host).
 //!
+//! A fourth point exercises the **million-edge engine path**: a
+//! 100 000-edge fleet in `fleet.metrics = "aggregate"` mode (time-wheel
+//! event loop, O(1) sketched report). Before timing it, a small fleet
+//! asserts aggregate totals bitwise-match the full-mode report's sums, so
+//! the cheap mode can never drift from the accounted one. The tracked
+//! metric is `events_per_sec` at 100k edges (plus best-effort peak RSS).
+//!
 //! Results go to `BENCH_fleet.json` (`ODL_BENCH_FLEET_JSON` overrides);
 //! `scripts/bench_check.sh` diffs them against the previous accepted run.
 
 use odl_har::coordinator::fleet::{Fleet, FleetConfig, Scenario};
+use odl_har::coordinator::MetricsMode;
 use odl_har::data::SynthConfig;
-use odl_har::util::bench::{bench, fast_mode};
+use odl_har::util::bench::{bench, fast_mode, fmt_time, peak_rss_bytes};
 use odl_har::util::json::{obj, Json};
+use std::time::Instant;
 
 /// Worker count for the provisioning-speedup rows (fixed, not
 /// autodetected, so the tracked metric means the same thing on every
@@ -48,6 +57,69 @@ fn scenario(n_edges: usize) -> Scenario {
         },
         ..Default::default()
     }
+}
+
+/// The 100k-edge scenario: every per-edge cost pared down (tiny feature
+/// dim, tiny hidden layer, small pool, no eval windows) so the bench
+/// measures the *engine* — bucket walk, dispatch, sketch folds — not the
+/// linear algebra.
+fn scale_scenario(n_edges: usize) -> Scenario {
+    Scenario {
+        n_edges,
+        n_hidden: 8,
+        event_period_s: 1.0,
+        horizon_s: if fast_mode() { 10.0 } else { 30.0 },
+        drift_at_s: 1.0e9, // never: throughput point measures steady state
+        train_target: 20,
+        metrics: MetricsMode::Aggregate,
+        synth: SynthConfig {
+            n_features: 16,
+            n_classes: 4,
+            n_subjects: 30,
+            samples_per_cell: 4,
+            proto_sigma: 1.1,
+            confuse_frac: 0.04,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Consistency gate for the aggregate point: at a small size, the
+/// aggregate report's counters and energy must bitwise-match the sums of
+/// the full-mode per-edge rows (trajectories are identical by contract —
+/// `metrics` is a memory knob, not a numerics knob).
+fn assert_aggregate_matches_full(workers: usize) {
+    let mut sc = scale_scenario(512);
+    sc.metrics = MetricsMode::Full;
+    let full = Fleet::new_parallel(
+        FleetConfig {
+            scenario: sc.clone(),
+            seed: 7,
+        },
+        workers,
+    )
+    .unwrap()
+    .run_parallel(workers);
+    sc.metrics = MetricsMode::Aggregate;
+    let agg_report = Fleet::new_parallel(FleetConfig { scenario: sc, seed: 7 }, workers)
+        .unwrap()
+        .run_parallel(workers);
+    let agg = agg_report
+        .aggregate
+        .as_ref()
+        .expect("aggregate mode must produce a FleetAggregate");
+    assert_eq!(agg.n_edges as usize, full.per_edge.len());
+    assert_eq!(agg.events, full.per_edge.iter().map(|m| m.events).sum::<u64>());
+    assert_eq!(agg.trained, full.per_edge.iter().map(|m| m.trained).sum::<u64>());
+    assert_eq!(agg.total_queries, full.total_queries());
+    assert_eq!(agg_report.teacher_queries, full.teacher_queries);
+    assert_eq!(agg_report.channel_attempts, full.channel_attempts);
+    assert_eq!(
+        agg.total_energy_mj.to_bits(),
+        full.total_energy_mj().to_bits(),
+        "aggregate energy diverged from full-mode sum"
+    );
 }
 
 fn main() {
@@ -179,6 +251,67 @@ fn main() {
             ("provision_speedup", Json::Num(provision_speedup)),
         ]));
     }
+
+    // --- 100k-edge aggregate point (time wheel + O(1) sketched report) ---
+    // gate first: the cheap mode must match the accounted one bit for bit
+    assert_aggregate_matches_full(workers);
+    const SCALE_EDGES: usize = 100_000;
+    let sc = scale_scenario(SCALE_EDGES);
+    // one build + best-of-N runs, timed with Instant instead of bench():
+    // run_parallel consumes the fleet, and at this size a rebuild per
+    // iteration would dominate the wall clock
+    let runs = if fast_mode() { 1 } else { 2 };
+    let mut build_s = 0.0f64;
+    let mut best_run_s = f64::INFINITY;
+    let mut events = 0u64;
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        let fleet = Fleet::new_parallel(
+            FleetConfig {
+                scenario: sc.clone(),
+                seed: 7,
+            },
+            workers,
+        )
+        .unwrap();
+        build_s = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let report = fleet.run_parallel(workers);
+        let run_s = t1.elapsed().as_secs_f64();
+        let agg = report.aggregate.as_ref().expect("aggregate report");
+        events = agg.events;
+        assert!(
+            report.per_edge.is_empty(),
+            "aggregate mode must not materialize per-edge rows"
+        );
+        best_run_s = best_run_s.min(run_s);
+    }
+    let events_per_sec = events as f64 / best_run_s.max(1e-9);
+    let peak_rss = peak_rss_bytes();
+    println!(
+        "  -> {SCALE_EDGES} edges (aggregate): {events} events in {} — {:.0} events/s, build {}, peak RSS {}",
+        fmt_time(best_run_s),
+        events_per_sec,
+        fmt_time(build_s),
+        match peak_rss {
+            Some(b) => format!("{:.0} MiB", b as f64 / (1024.0 * 1024.0)),
+            None => "n/a".into(),
+        }
+    );
+    let mut scale_row = vec![
+        ("edges", Json::Num(SCALE_EDGES as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("metrics", Json::Str("aggregate".into())),
+        ("events", Json::Num(events as f64)),
+        ("build_s", Json::Num(build_s)),
+        ("run_s", Json::Num(best_run_s)),
+        ("events_per_sec", Json::Num(events_per_sec)),
+    ];
+    if let Some(b) = peak_rss {
+        // best-effort (absent without procfs); informational, not gated
+        scale_row.push(("peak_rss_bytes", Json::Num(b as f64)));
+    }
+    rows.push(obj(scale_row));
 
     let out = obj(vec![
         ("schema", Json::Str("bench_fleet/v1".into())),

@@ -11,7 +11,7 @@ use crate::coordinator::fleet::{DetectorKind, Scenario};
 use crate::coordinator::serve::ServeConfig;
 use crate::coordinator::supervise::SuperviseConfig;
 use crate::coordinator::sweep::SweepSpec;
-use crate::coordinator::ChannelConfig;
+use crate::coordinator::{ChannelConfig, MetricsMode};
 use crate::data::SynthConfig;
 use crate::exp::protocol::{ProtocolConfig, PruningSpec, Variant};
 use crate::odl::AlphaKind;
@@ -154,6 +154,18 @@ fn scenario_from_doc(doc: &TomlDoc) -> Result<(Scenario, u64, usize)> {
     }
     if let Some(v) = doc.get_int("fleet", "data_seed") {
         sc.data_seed = Some(v as u64);
+    }
+    // like the [sweep] keys, a present-but-malformed value is a rejected
+    // typo, not a silently ignored one (get_str would drop `metrics = 1`)
+    match doc.get("fleet", "metrics") {
+        None => {}
+        Some(TomlValue::Str(v)) => {
+            sc.metrics =
+                MetricsMode::parse(v).map_err(|e| anyhow::anyhow!("fleet.metrics: {e}"))?;
+        }
+        Some(other) => bail!(
+            "fleet.metrics must be a string (\"full\" or \"aggregate\"), got {other:?}"
+        ),
     }
     if let Some(v) = doc.get_float("pruning", "theta") {
         sc.fixed_theta = Some(v as f32);
@@ -618,6 +630,28 @@ loss_prob = 0.1
         let (sc, _, workers) = fleet_from_str("[fleet]\nn_edges = 2\n").unwrap();
         assert_eq!(workers, 1);
         assert_eq!(sc.data_seed, None);
+        assert_eq!(sc.metrics, MetricsMode::Full, "full is the default");
+    }
+
+    #[test]
+    fn fleet_metrics_mode_parses_and_rejects() {
+        let (sc, _, _) = fleet_from_str("[fleet]\nmetrics = \"aggregate\"\n").unwrap();
+        assert_eq!(sc.metrics, MetricsMode::Aggregate);
+        let (sc, _, _) = fleet_from_str("[fleet]\nmetrics = \"full\"\n").unwrap();
+        assert_eq!(sc.metrics, MetricsMode::Full);
+        // unknown value: rejected, naming the offender
+        let err = fleet_from_str("[fleet]\nmetrics = \"sketchy\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("sketchy"), "{err}");
+        // present-but-wrong-typed: rejected, not silently ignored
+        let err = fleet_from_str("[fleet]\nmetrics = 1\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fleet.metrics"), "{err}");
+        // the sweep parser shares the scenario base, so it rejects too
+        assert!(sweep_from_str("[fleet]\nmetrics = \"sketchy\"\n").is_err());
+        assert!(sweep_from_str("[fleet]\nmetrics = \"aggregate\"\n").is_ok());
     }
 
     #[test]

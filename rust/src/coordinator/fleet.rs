@@ -14,11 +14,10 @@
 //!
 //! The simulator is decomposed into per-edge [`EdgeSim`] shards. Each
 //! shard owns *everything* its edge touches — the FSM + ODL core, the
-//! metrics ledger, its discrete-event queue, and four private
-//! [`CounterRng`] streams (sense draws, eval probes, channel loss,
-//! teacher noise) keyed by `(seed, domain, edge)` via
-//! [`crate::util::rng::stream_seed`]. Shared resources are resolved
-//! without cross-shard communication:
+//! metrics ledger, and four private [`CounterRng`] streams (sense draws,
+//! eval probes, channel loss, teacher noise) keyed by `(seed, domain,
+//! edge)` via [`crate::util::rng::stream_seed`]. Shared resources are
+//! resolved without cross-shard communication:
 //!
 //! * the **drift moment** is a pure function of virtual time, applied in
 //!   exactly the order the old global event gave it (before the first
@@ -30,12 +29,39 @@
 //!
 //! Because no f32/f64 operation ever depends on cross-edge interleaving,
 //! [`Fleet::run_parallel`] (contiguous shard chunks over
-//! [`crate::util::parallel::for_each_shard_mut`]) produces a
+//! [`crate::util::parallel::map_shard_chunks`]) produces a
 //! [`FleetReport`] **bitwise identical** to the sequential
 //! [`Fleet::run`] for the same seed — asserted by
 //! `tests/fleet_determinism.rs` and re-checked by `bench_fleet_scale`
 //! before it times anything. `run_threaded()` remains the live-system
 //! flavour over std mpsc channels (event counts instead of virtual time).
+//!
+//! # The time wheel
+//!
+//! Events are dispatched by one [`WheelEngine`] per shard, not by
+//! per-edge `BinaryHeap`s: the wheel is a calendar queue of
+//! `Vec<Vec<u32>>` buckets (one bucket per `event_period_s` of virtual
+//! time) holding *edge indices*, and each edge keeps its tiny pending
+//! event list sorted so the earliest `(at, seq)` entry pops from the
+//! back. The hot loop is a cache-friendly bucket walk — take a bucket,
+//! drain each resident edge's due events in `(at, seq)` order, move the
+//! edge to the bucket of its next event — instead of `n_edges`
+//! independent heap pops. Per-edge pop order is exactly the retired
+//! heap's min-`(at, seq)` order (pinned by the `wheel_*` tests below),
+//! and cross-edge interleaving was never observable, so the wheel is
+//! bitwise invisible to every recorded trajectory.
+//!
+//! # Aggregate metrics
+//!
+//! [`Scenario::metrics`] picks the reporting mode. `full` (default)
+//! keeps the historical per-edge rows. `aggregate` keeps
+//! [`FleetReport::per_edge`] empty and carries one O(1)
+//! [`FleetAggregate`]: exact fleet-wide counters, P² quantile sketches
+//! over the per-edge accuracy/power/query distributions (fed on the
+//! single-threaded close-of-books walk in edge-id order), and
+//! HyperLogLog sketches of distinct visited (subject, class) cells and
+//! (edge, mode) states (fed per shard during the run; register-max
+//! merge is partition-invariant, so worker counts cannot move a bit).
 //!
 //! # Sharded provisioning
 //!
@@ -65,7 +91,7 @@
 
 use super::channel::{Channel, ChannelConfig};
 use super::edge::{EdgeDevice, Mode, StepAction};
-use super::metrics::{EdgeMetrics, FleetReport};
+use super::metrics::{EdgeMetrics, FleetAggregate, FleetReport, MetricsMode};
 use super::teacher::Teacher;
 use crate::data::pca::Pca;
 use crate::data::synth::{SynthConfig, SynthHar};
@@ -77,9 +103,9 @@ use crate::odl::{AlphaKind, OsElm, OsElmConfig};
 use crate::pruning::{Metric, Pruner, ThetaPolicy};
 use crate::util::parallel;
 use crate::util::rng::{hash_fold, stream_seed, CounterRng, Rng64, RngStream};
+use crate::util::sketch::Hll;
 use anyhow::{ensure, Result};
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 use std::sync::Arc;
 
 /// Domain tags separating each shard's RNG streams (see
@@ -167,6 +193,13 @@ pub struct Scenario {
     /// so cells that differ only in simulation seed share one
     /// [`ProvisionArtifacts`] build.
     pub data_seed: Option<u64>,
+    /// Reporting mode: `Full` (default) keeps one [`EdgeMetrics`] row per
+    /// edge; `Aggregate` keeps `per_edge` empty and carries one O(1)
+    /// [`FleetAggregate`] of counters + sketches — the mode ≥100k-edge
+    /// fleets run in. A wall-memory knob only for the rollup getters
+    /// (`total_queries` etc. agree between modes bit for bit); the
+    /// simulated trajectories are identical in both modes.
+    pub metrics: MetricsMode,
 }
 
 impl Default for Scenario {
@@ -187,6 +220,7 @@ impl Default for Scenario {
             eval_samples: 64,
             eval_costs_power: false,
             data_seed: None,
+            metrics: MetricsMode::Full,
         }
     }
 }
@@ -381,10 +415,12 @@ struct SimContext<'a> {
 }
 
 /// Everything one edge needs to advance through virtual time on its own:
-/// FSM + model, metrics, a private event queue, and counter-based RNG
-/// streams for every source of randomness it consumes. No state is shared
-/// across `EdgeSim`s — the invariant behind `run_parallel`'s bitwise
-/// determinism.
+/// FSM + model, metrics, and counter-based RNG streams for every source
+/// of randomness it consumes. Scheduling state (pending events, event
+/// sequence numbers, the drift flag) lives in the shard's [`WheelEngine`]
+/// as struct-of-arrays and is lent to the handlers one event at a time as
+/// a [`Lane`]. No state is shared across `EdgeSim`s — the invariant
+/// behind `run_parallel`'s bitwise determinism.
 struct EdgeSim {
     edge: EdgeDevice,
     metrics: EdgeMetrics,
@@ -394,10 +430,6 @@ struct EdgeSim {
     eval_rng: CounterRng,
     channel: Channel,
     teacher: Teacher,
-    queue: BinaryHeap<Scheduled>,
-    seq: u64,
-    now: f64,
-    drifted: bool,
 }
 
 /// Draw one standardized sample for an edge from its current subject
@@ -424,74 +456,226 @@ fn draw_sample<R: RngStream>(
     (x, class)
 }
 
-impl EdgeSim {
+/// The wheel-owned scheduling state of one edge, lent to the edge's
+/// event handlers for the duration of one event: the virtual clock and
+/// drift flag (copies — only the engine advances them) plus mutable
+/// access to the edge's sequence counter and sorted pending-event list.
+struct Lane<'a> {
+    now: f64,
+    drifted: bool,
+    seq: &'a mut u64,
+    pending: &'a mut Vec<Scheduled>,
+}
+
+impl Lane<'_> {
+    /// Schedule an event for this lane's edge. `pending` is kept sorted
+    /// ascending under [`Scheduled`]'s reversed order — i.e. descending
+    /// `(at, seq)` — so the earliest event is always at the back and
+    /// `pending.pop()` yields exactly the `(at, seq)` order the retired
+    /// per-edge `BinaryHeap` popped (pinned by
+    /// `wheel_pops_in_heap_order`). The list holds ≤ 3 events in practice
+    /// (next Sense, next Eval, at most one in-flight Reply/QueryFailed),
+    /// so the sorted insert is a byte-move of a few entries.
     fn schedule(&mut self, at: f64, event: Event) {
-        self.seq += 1;
-        self.queue.push(Scheduled {
+        *self.seq += 1;
+        let item = Scheduled {
             at,
-            seq: self.seq,
+            seq: *self.seq,
             event,
-        });
+        };
+        let idx = self.pending.partition_point(|e| e < &item);
+        self.pending.insert(idx, item);
+    }
+}
+
+/// Per-shard sketch state fed while an aggregate-mode wheel runs. HLL
+/// merging is register-wise max — partition- and order-invariant — so
+/// per-chunk sketches merged in chunk order equal one sketch fed by the
+/// sequential walk, for every worker count.
+#[derive(Default)]
+struct ShardSketches {
+    visited_cells: Hll,
+    edge_states: Hll,
+}
+
+/// One fleet-wide calendar queue per shard: `buckets[b]` holds the local
+/// indices of every edge whose next event falls in virtual-time slice
+/// `[b·width, (b+1)·width)`, and the per-edge scheduling state lives in
+/// parallel struct-of-arrays (`seq`/`drifted`/`pending`), indexed the
+/// same way as the `EdgeSim` slice the engine runs over. The hot loop
+/// walks buckets in order; within a bucket each resident edge drains its
+/// due events in `(at, seq)` order, then hops to the bucket of its next
+/// event. Events past the wheel's end clamp into the last bucket — they
+/// are at or beyond the horizon and only ever halt their edge.
+struct WheelEngine {
+    width: f64,
+    buckets: Vec<Vec<u32>>,
+    seq: Vec<u64>,
+    drifted: Vec<bool>,
+    pending: Vec<Vec<Scheduled>>,
+}
+
+impl WheelEngine {
+    /// Bucket granularity: the sense period (every edge has a Sense due
+    /// each period, so finer buckets buy nothing), with a guard for
+    /// degenerate periods.
+    fn bucket_width(sc: &Scenario) -> f64 {
+        if sc.event_period_s > 0.0 && sc.event_period_s.is_finite() {
+            sc.event_period_s
+        } else {
+            1.0
+        }
     }
 
-    /// Advance this shard's event queue to the horizon. The scripted
-    /// drift is applied before the first event at or after `drift_at_s`.
-    /// Nothing an edge does between events can observe the flag earlier,
-    /// so this matches the old global Drift event in every case but one
-    /// corner: a *first-cycle* Sense whose stagger phase equals
-    /// `drift_at_s` exactly used to pop before Drift (it was scheduled
-    /// first and ties break by lower seq) and sensed pre-drift; here the
-    /// flag flips first. Trajectories were re-baselined by the per-edge
-    /// streams anyway — the binding contract is run ≡ run_parallel, and
-    /// both sides of it use this rule.
-    fn run_to_horizon(&mut self, ctx: &SimContext) {
+    /// Build the wheel over a shard and boot every edge: Sense at its
+    /// stagger phase, then Eval at the eval period — the same `(at, seq)`
+    /// boot order `build_edge_sim` used to push into the heap.
+    fn new(ctx: &SimContext, sims: &[EdgeSim]) -> WheelEngine {
+        let sc = ctx.scenario;
+        let width = WheelEngine::bucket_width(sc);
+        // enough buckets to cover the horizon plus the halting slice;
+        // capped so a pathological horizon/period ratio degrades to
+        // coarser final buckets instead of an allocation blow-up
+        let n_buckets = ((sc.horizon_s / width) as usize)
+            .saturating_add(2)
+            .clamp(1, 1 << 16);
+        let n = sims.len();
+        let mut engine = WheelEngine {
+            width,
+            buckets: vec![Vec::new(); n_buckets],
+            seq: vec![0; n],
+            drifted: vec![false; n],
+            pending: (0..n).map(|_| Vec::with_capacity(4)).collect(),
+        };
+        for (i, sim) in sims.iter().enumerate() {
+            let id = sim.edge.id;
+            let mut lane = Lane {
+                now: 0.0,
+                drifted: false,
+                seq: &mut engine.seq[i],
+                pending: &mut engine.pending[i],
+            };
+            // stagger edges across the period; seed the eval cadence
+            let phase = sc.event_period_s * (id as f64 / sc.n_edges.max(1) as f64);
+            lane.schedule(phase, Event::Sense);
+            if sc.eval_period_s > 0.0 {
+                lane.schedule(sc.eval_period_s, Event::Eval);
+            }
+            let first_at = engine.pending[i].last().expect("boot event").at;
+            let b = engine.bucket(first_at);
+            engine.buckets[b].push(i as u32);
+        }
+        engine
+    }
+
+    fn bucket(&self, at: f64) -> usize {
+        ((at / self.width) as usize).min(self.buckets.len() - 1)
+    }
+
+    /// Walk the wheel to the horizon. Per edge this reproduces the
+    /// retired heap loop exactly: events pop in `(at, seq)` order; a
+    /// popped event past the horizon halts the edge (event consumed,
+    /// edge leaves the wheel — every later event is provably later
+    /// still); the scripted drift is applied before the first in-horizon
+    /// event at or after `drift_at_s`. Nothing an edge does between
+    /// events can observe another edge, so the bucket interleaving
+    /// across edges is free.
+    fn run(
+        &mut self,
+        sims: &mut [EdgeSim],
+        ctx: &SimContext,
+        sketches: &mut Option<ShardSketches>,
+    ) {
         let horizon = ctx.scenario.horizon_s;
         let drift_at = ctx.scenario.drift_at_s;
-        while let Some(Scheduled { at, event, .. }) = self.queue.pop() {
-            if at > horizon {
-                break;
-            }
-            if !self.drifted && at >= drift_at {
-                self.drifted = true;
-                if ctx.scenario.detector == DetectorKind::Oracle {
-                    self.edge.force_training();
-                }
-            }
-            self.now = at;
-            match event {
-                Event::Sense => {
-                    self.handle_sense(ctx);
-                    let next = self.now + ctx.scenario.event_period_s;
-                    self.schedule(next, Event::Sense);
-                }
-                Event::Reply { label } => {
-                    self.edge.on_label(label);
-                    self.metrics.trained = self.edge.total_trained;
-                    self.metrics.record_state(
-                        PowerState::Train,
-                        ctx.cycles.train_time_s(),
-                        ctx.power.power_mw(PowerState::Train),
-                    );
-                }
-                Event::QueryFailed => {
-                    self.edge.on_query_failed();
-                    self.metrics.query_failures += 1;
-                }
-                Event::Eval => {
-                    self.run_eval_window(ctx);
-                    let next = self.now + ctx.scenario.eval_period_s;
-                    self.schedule(next, Event::Eval);
+        for b in 0..self.buckets.len() {
+            let batch = std::mem::take(&mut self.buckets[b]);
+            for &slot in &batch {
+                let i = slot as usize;
+                loop {
+                    let next_at = match self.pending[i].last() {
+                        Some(next) => next.at,
+                        None => break,
+                    };
+                    let nb = self.bucket(next_at);
+                    if nb > b {
+                        self.buckets[nb].push(slot);
+                        break;
+                    }
+                    let Scheduled { at, event, .. } =
+                        self.pending[i].pop().expect("peeked event");
+                    if at > horizon {
+                        break;
+                    }
+                    if !self.drifted[i] && at >= drift_at {
+                        self.drifted[i] = true;
+                        if ctx.scenario.detector == DetectorKind::Oracle {
+                            sims[i].edge.force_training();
+                        }
+                    }
+                    let mut lane = Lane {
+                        now: at,
+                        drifted: self.drifted[i],
+                        seq: &mut self.seq[i],
+                        pending: &mut self.pending[i],
+                    };
+                    sims[i].handle_event(event, &mut lane, ctx, sketches);
                 }
             }
         }
     }
+}
 
-    fn handle_sense(&mut self, ctx: &SimContext) {
+impl EdgeSim {
+    /// Dispatch one event. Self-rescheduling events (Sense, Eval) land at
+    /// `lane.now + period ≥ now`, so a handler can only ever schedule
+    /// into the current or a later bucket — the wheel walk never misses
+    /// an event.
+    fn handle_event(
+        &mut self,
+        event: Event,
+        lane: &mut Lane,
+        ctx: &SimContext,
+        sketches: &mut Option<ShardSketches>,
+    ) {
+        match event {
+            Event::Sense => {
+                self.handle_sense(lane, ctx, sketches);
+                let next = lane.now + ctx.scenario.event_period_s;
+                lane.schedule(next, Event::Sense);
+            }
+            Event::Reply { label } => {
+                self.edge.on_label(label);
+                self.metrics.trained = self.edge.total_trained;
+                self.metrics.record_state(
+                    PowerState::Train,
+                    ctx.cycles.train_time_s(),
+                    ctx.power.power_mw(PowerState::Train),
+                );
+            }
+            Event::QueryFailed => {
+                self.edge.on_query_failed();
+                self.metrics.query_failures += 1;
+            }
+            Event::Eval => {
+                self.run_eval_window(lane, ctx);
+                let next = lane.now + ctx.scenario.eval_period_s;
+                lane.schedule(next, Event::Eval);
+            }
+        }
+    }
+
+    fn handle_sense(
+        &mut self,
+        lane: &mut Lane,
+        ctx: &SimContext,
+        sketches: &mut Option<ShardSketches>,
+    ) {
         let (x, true_label) = draw_sample(
             ctx.generator,
             ctx.standardizer,
             self.subjects,
-            self.drifted,
+            lane.drifted,
             ctx.scenario.synth.n_classes,
             &mut self.rng,
         );
@@ -502,7 +686,24 @@ impl EdgeSim {
             ctx.power.power_mw(PowerState::Predict),
         );
         let (pred, action) = self.edge.on_sense(&x);
-        self.metrics.record_prediction(self.now, pred.class == true_label);
+        self.metrics.record_prediction(lane.now, pred.class == true_label);
+        if let Some(sk) = sketches {
+            // distinct (subject, class) cells the fleet has sensed, and
+            // distinct (edge, FSM mode) states occupied at sense events —
+            // keys packed so equal observations encode equally
+            let subject = if lane.drifted {
+                self.subjects.1
+            } else {
+                self.subjects.0
+            };
+            sk.visited_cells
+                .insert(((subject as u64) << 32) | true_label as u64);
+            let mode_tag = match self.edge.mode {
+                Mode::Predicting => 0u64,
+                Mode::Training => 1,
+            };
+            sk.edge_states.insert(((self.edge.id as u64) << 2) | mode_tag);
+        }
         if action == StepAction::QueryTeacher {
             let delivery = self.channel.transmit();
             self.metrics.radio_energy_mj += delivery.energy_mj;
@@ -510,11 +711,11 @@ impl EdgeSim {
                 let label =
                     self.teacher
                         .respond(&x, true_label, ctx.scenario.synth.n_classes);
-                let at = self.now + delivery.elapsed_s + self.teacher.service_time_s;
-                self.schedule(at, Event::Reply { label });
+                let at = lane.now + delivery.elapsed_s + self.teacher.service_time_s;
+                lane.schedule(at, Event::Reply { label });
             } else {
-                let at = self.now + delivery.elapsed_s;
-                self.schedule(at, Event::QueryFailed);
+                let at = lane.now + delivery.elapsed_s;
+                lane.schedule(at, Event::QueryFailed);
             }
         }
     }
@@ -526,7 +727,7 @@ impl EdgeSim {
     /// touch the edge FSM, the pruner, or the sense stream; they touch
     /// the power ledger only when `Scenario::eval_costs_power` asks for
     /// honest on-device probe energy.
-    fn run_eval_window(&mut self, ctx: &SimContext) {
+    fn run_eval_window(&mut self, lane: &Lane, ctx: &SimContext) {
         let ns = ctx.scenario.eval_samples;
         if ns == 0 {
             return;
@@ -540,7 +741,7 @@ impl EdgeSim {
                 ctx.generator,
                 ctx.standardizer,
                 self.subjects,
-                self.drifted,
+                lane.drifted,
                 n_classes,
                 &mut self.eval_rng,
             );
@@ -552,7 +753,7 @@ impl EdgeSim {
         } else {
             self.edge.model.accuracy(&xs, &labels)
         };
-        self.metrics.eval_trace.push((self.now, acc));
+        self.metrics.eval_trace.push((lane.now, acc));
         if ctx.scenario.eval_costs_power {
             // a real deployment runs the probes on-device: book ns
             // inferences of predict-state time through the same ledger as
@@ -653,7 +854,9 @@ fn build_edge_sim(
     let pre = in_subjects[id % in_subjects.len()];
     let post = HELD_OUT_SUBJECTS[id % HELD_OUT_SUBJECTS.len()];
     let eid = id as u64;
-    let mut sim = EdgeSim {
+    // boot events (staggered Sense, the eval cadence) are scheduled by
+    // the shard's WheelEngine from `edge.id` when the run starts
+    EdgeSim {
         edge,
         metrics: EdgeMetrics::default(),
         subjects: (pre, post),
@@ -661,18 +864,7 @@ fn build_edge_sim(
         eval_rng: CounterRng::new(seed, domain::EVAL, eid),
         channel: Channel::new(sc.channel.clone(), stream_seed(seed, domain::CHANNEL, eid)),
         teacher: Teacher::oracle(sc.teacher_error, stream_seed(seed, domain::TEACHER, eid)),
-        queue: BinaryHeap::new(),
-        seq: 0,
-        now: 0.0,
-        drifted: false,
-    };
-    // stagger edges across the period; seed the eval cadence
-    let phase = sc.event_period_s * (id as f64 / sc.n_edges.max(1) as f64);
-    sim.schedule(phase, Event::Sense);
-    if sc.eval_period_s > 0.0 {
-        sim.schedule(sc.eval_period_s, Event::Eval);
     }
-    sim
 }
 
 /// The simulator. Holds only what the event loop needs from the
@@ -870,19 +1062,32 @@ impl Fleet {
             cycles,
             eval_workers: if workers > 1 { 1 } else { n_workers.max(1) },
         };
-        // contiguous ⌈n/w⌉ shards over the shared executor — the same
-        // chunk layout the bespoke scope used, now one audited code path
-        parallel::for_each_shard_mut(workers, &mut sims, |sim| sim.run_to_horizon(&ctx));
+        // one time wheel per shard over contiguous ⌈n/w⌉ chunks — the
+        // same chunk layout the heap-era executor used; aggregate mode
+        // hands back each shard's O(1) HLL state for the chunk-ordered
+        // merge below
+        let aggregate = cfg.scenario.metrics == MetricsMode::Aggregate;
+        let shard_sketches = parallel::map_shard_chunks(workers, &mut sims, |_, chunk| {
+            let mut sketches = aggregate.then(ShardSketches::default);
+            let mut wheel = WheelEngine::new(&ctx, chunk);
+            wheel.run(chunk, &ctx, &mut sketches);
+            sketches
+        });
 
-        // close the books: remaining time is sleep; merge in edge order
+        // close the books: remaining time is sleep; merge in edge order.
+        // Aggregate mode folds each edge's would-be row into the O(1)
+        // aggregate (same id-order walk, same f64 association as the
+        // full-mode getters) and drops it.
         let horizon = cfg.scenario.horizon_s;
         let mut report = FleetReport {
             horizon_s: horizon,
-            per_edge: Vec::with_capacity(n_edges),
+            per_edge: Vec::with_capacity(if aggregate { 0 } else { n_edges }),
             teacher_queries: 0,
             channel_attempts: 0,
             channel_failures: 0,
+            aggregate: None,
         };
+        let mut agg = aggregate.then(FleetAggregate::default);
         for sim in sims {
             let EdgeSim {
                 edge,
@@ -904,7 +1109,31 @@ impl Fleet {
             report.teacher_queries += teacher.queries_served;
             report.channel_attempts += channel.total_attempts;
             report.channel_failures += channel.total_failures;
-            report.per_edge.push(metrics);
+            match agg.as_mut() {
+                None => report.per_edge.push(metrics),
+                Some(agg) => {
+                    agg.n_edges += 1;
+                    agg.events += metrics.events;
+                    agg.trained += metrics.trained;
+                    agg.skips += metrics.skips;
+                    agg.query_failures += metrics.query_failures;
+                    agg.mode_switches += metrics.mode_switches;
+                    agg.total_queries += metrics.queries;
+                    agg.total_energy_mj += metrics.core_energy_mj + metrics.radio_energy_mj;
+                    if let Some(&(_, acc)) = metrics.accuracy_trace.last() {
+                        agg.accuracy.insert(acc);
+                    }
+                    agg.power_mw.insert(metrics.mean_power_mw(horizon));
+                    agg.queries.insert(metrics.queries as f64);
+                }
+            }
+        }
+        if let Some(mut agg) = agg {
+            for sk in shard_sketches.into_iter().flatten() {
+                agg.visited_cells.merge(&sk.visited_cells);
+                agg.edge_states.merge(&sk.edge_states);
+            }
+            report.aggregate = Some(agg);
         }
         report
     }
@@ -1017,6 +1246,284 @@ mod tests {
                 ..Default::default()
             },
             ..Default::default()
+        }
+    }
+
+    /// The retired per-edge `BinaryHeap` event loop, reconstructed on top
+    /// of the shared handlers — the executable spec of the tie-break
+    /// contract the wheel must honour.
+    fn run_heap_reference(fleet: Fleet) -> FleetReport {
+        use std::collections::BinaryHeap;
+        let Fleet {
+            cfg,
+            mut sims,
+            generator,
+            standardizer,
+            power,
+            cycles,
+            ..
+        } = fleet;
+        let sc = cfg.scenario;
+        let ctx = SimContext {
+            scenario: &sc,
+            generator: &generator,
+            standardizer: &standardizer,
+            power,
+            cycles,
+            eval_workers: 1,
+        };
+        for sim in sims.iter_mut() {
+            let mut heap: BinaryHeap<Scheduled> = BinaryHeap::new();
+            let mut seq = 0u64;
+            seq += 1;
+            let phase = sc.event_period_s * (sim.edge.id as f64 / sc.n_edges.max(1) as f64);
+            heap.push(Scheduled {
+                at: phase,
+                seq,
+                event: Event::Sense,
+            });
+            if sc.eval_period_s > 0.0 {
+                seq += 1;
+                heap.push(Scheduled {
+                    at: sc.eval_period_s,
+                    seq,
+                    event: Event::Eval,
+                });
+            }
+            let mut drifted = false;
+            while let Some(Scheduled { at, event, .. }) = heap.pop() {
+                if at > sc.horizon_s {
+                    break;
+                }
+                if !drifted && at >= sc.drift_at_s {
+                    drifted = true;
+                    if sc.detector == DetectorKind::Oracle {
+                        sim.edge.force_training();
+                    }
+                }
+                let mut staged = Vec::new();
+                let mut lane = Lane {
+                    now: at,
+                    drifted,
+                    seq: &mut seq,
+                    pending: &mut staged,
+                };
+                sim.handle_event(event, &mut lane, &ctx, &mut None);
+                for s in staged {
+                    heap.push(s);
+                }
+            }
+        }
+        let horizon = sc.horizon_s;
+        let mut report = FleetReport {
+            horizon_s: horizon,
+            per_edge: Vec::with_capacity(sims.len()),
+            teacher_queries: 0,
+            channel_attempts: 0,
+            channel_failures: 0,
+            aggregate: None,
+        };
+        for sim in sims {
+            let EdgeSim {
+                edge,
+                mut metrics,
+                channel,
+                teacher,
+                ..
+            } = sim;
+            let active: f64 = metrics.state_time_s.values().sum();
+            metrics.record_state(
+                PowerState::Sleep,
+                (horizon - active).max(0.0),
+                power.power_mw(PowerState::Sleep),
+            );
+            metrics.queries = edge.total_queries;
+            metrics.skips = edge.total_skips;
+            metrics.trained = edge.total_trained;
+            metrics.mode_switches = edge.mode_switches;
+            report.teacher_queries += teacher.queries_served;
+            report.channel_attempts += channel.total_attempts;
+            report.channel_failures += channel.total_failures;
+            report.per_edge.push(metrics);
+        }
+        report
+    }
+
+    #[test]
+    fn wheel_pops_in_heap_order() {
+        use std::collections::BinaryHeap;
+        // the lane's sorted pending list must pop exactly the (at, seq)
+        // sequence a BinaryHeap pops, under random interleavings of
+        // schedules and pops with heavy exact-time ties (coarse at grid;
+        // ties break by lower seq in both structures)
+        let mut rng = Rng64::new(0x11EE1);
+        for case in 0..50 {
+            let mut heap: BinaryHeap<Scheduled> = BinaryHeap::new();
+            let mut pending: Vec<Scheduled> = Vec::new();
+            let mut seq = 0u64;
+            for _op in 0..200 {
+                if pending.is_empty() || rng.below(3) < 2 {
+                    let at = rng.below(16) as f64 * 0.25;
+                    let mut lane = Lane {
+                        now: 0.0,
+                        drifted: false,
+                        seq: &mut seq,
+                        pending: &mut pending,
+                    };
+                    lane.schedule(at, Event::Sense);
+                    heap.push(Scheduled {
+                        at,
+                        seq,
+                        event: Event::Sense,
+                    });
+                } else {
+                    let a = pending.pop().unwrap();
+                    let b = heap.pop().unwrap();
+                    assert_eq!(a.at.to_bits(), b.at.to_bits(), "case {case}");
+                    assert_eq!(a.seq, b.seq, "case {case}");
+                }
+            }
+            loop {
+                match (pending.pop(), heap.pop()) {
+                    (Some(a), Some(b)) => {
+                        assert_eq!(a.at.to_bits(), b.at.to_bits(), "case {case}");
+                        assert_eq!(a.seq, b.seq, "case {case}");
+                    }
+                    (None, None) => break,
+                    _ => panic!("pending and heap drained unevenly in case {case}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wheel_matches_heap_reference_bitwise() {
+        // the binding tie-break contract: the wheel must dispatch per-edge
+        // events in exactly the retired heap's order — asserted by
+        // replaying the heap loop over the shared handlers and requiring
+        // bitwise-identical reports, under channel delays (Reply /
+        // QueryFailed landing between sense ticks), eval ticks colliding
+        // with sense ticks at t = 50k, and the drift boundary
+        let mut sc = small_scenario();
+        sc.eval_period_s = 50.0;
+        sc.eval_samples = 16;
+        sc.channel = ChannelConfig {
+            loss_prob: 0.2,
+            max_retries: 1,
+            ..Default::default()
+        };
+        sc.teacher_error = 0.1;
+        for seed in [5u64, 9] {
+            let wheel = Fleet::new(FleetConfig {
+                scenario: sc.clone(),
+                seed,
+            })
+            .unwrap()
+            .run();
+            let heap = run_heap_reference(
+                Fleet::new(FleetConfig {
+                    scenario: sc.clone(),
+                    seed,
+                })
+                .unwrap(),
+            );
+            assert!(wheel.bitwise_eq(&heap), "wheel diverged at seed {seed}");
+        }
+        // centroid flavour exercises the no-oracle drift path
+        let mut c = sc.clone();
+        c.detector = DetectorKind::Centroid;
+        let wheel = Fleet::new(FleetConfig {
+            scenario: c.clone(),
+            seed: 4,
+        })
+        .unwrap()
+        .run();
+        let heap = run_heap_reference(
+            Fleet::new(FleetConfig {
+                scenario: c,
+                seed: 4,
+            })
+            .unwrap(),
+        );
+        assert!(wheel.bitwise_eq(&heap), "wheel diverged on centroid scenario");
+    }
+
+    #[test]
+    fn aggregate_mode_matches_full_totals_and_is_worker_invariant() {
+        let mut sc = small_scenario();
+        sc.eval_period_s = 50.0;
+        sc.eval_samples = 8;
+        sc.channel = ChannelConfig {
+            loss_prob: 0.2,
+            max_retries: 1,
+            ..Default::default()
+        };
+        sc.teacher_error = 0.1;
+        let full = Fleet::new(FleetConfig {
+            scenario: sc.clone(),
+            seed: 5,
+        })
+        .unwrap()
+        .run();
+        assert!(full.aggregate.is_none(), "full mode must not carry sketches");
+        let mut agg_sc = sc.clone();
+        agg_sc.metrics = MetricsMode::Aggregate;
+        let run_agg = |workers: usize| {
+            Fleet::new(FleetConfig {
+                scenario: agg_sc.clone(),
+                seed: 5,
+            })
+            .unwrap()
+            .run_parallel(workers)
+        };
+        let r = run_agg(1);
+        // O(1) report: no per-edge rows, one aggregate
+        assert!(r.per_edge.is_empty());
+        let a = r.aggregate.as_ref().unwrap();
+        // exact counters must equal the full-mode fold bit for bit (the
+        // simulated trajectories are identical; only reporting differs)
+        assert_eq!(a.n_edges, 3);
+        assert_eq!(
+            a.events,
+            full.per_edge.iter().map(|m| m.events).sum::<u64>()
+        );
+        assert_eq!(
+            a.trained,
+            full.per_edge.iter().map(|m| m.trained).sum::<u64>()
+        );
+        assert_eq!(a.skips, full.per_edge.iter().map(|m| m.skips).sum::<u64>());
+        assert_eq!(
+            a.query_failures,
+            full.per_edge.iter().map(|m| m.query_failures).sum::<u64>()
+        );
+        assert_eq!(a.total_queries, full.total_queries());
+        assert_eq!(a.total_energy_mj.to_bits(), full.total_energy_mj().to_bits());
+        // the rollup getters agree across modes, bitwise
+        assert_eq!(r.total_queries(), full.total_queries());
+        assert_eq!(r.total_energy_mj().to_bits(), full.total_energy_mj().to_bits());
+        assert_eq!(
+            r.mean_edge_power_mw().to_bits(),
+            full.mean_edge_power_mw().to_bits()
+        );
+        assert_eq!(r.teacher_queries, full.teacher_queries);
+        assert_eq!(r.channel_attempts, full.channel_attempts);
+        assert_eq!(r.channel_failures, full.channel_failures);
+        // sketch plausibility: every edge contributes one sample to each
+        // quantile sketch; HLL estimates sit in the exact small-range
+        // windows (3 edges × ≤2 modes; ≤ 2 subjects × 4 classes per edge)
+        assert_eq!(a.queries.count(), 3);
+        assert_eq!(a.power_mw.count(), 3);
+        assert_eq!(a.accuracy.count(), 3);
+        let states = a.edge_states.estimate();
+        assert!((2.5..=7.0).contains(&states), "edge states {states}");
+        let cells = a.visited_cells.estimate();
+        assert!((3.5..=30.0).contains(&cells), "visited cells {cells}");
+        // bitwise worker invariance, sketch registers included
+        for workers in [2usize, 3, 8] {
+            assert!(
+                r.bitwise_eq(&run_agg(workers)),
+                "aggregate diverged at {workers} workers"
+            );
         }
     }
 

@@ -1,7 +1,110 @@
 //! Per-edge and fleet-level accounting: queries, energy, accuracy traces.
+//!
+//! Two reporting modes ([`MetricsMode`]): `full` keeps one [`EdgeMetrics`]
+//! row per edge (the historical report, memory O(n_edges)); `aggregate`
+//! folds the fleet into a single fixed-size [`FleetAggregate`] of exact
+//! counters plus streaming sketches (`util::sketch`), so report memory is
+//! O(1) in fleet size — the mode the ≥100k-edge scale points run in.
 
 use crate::hw::PowerState;
-use std::collections::BTreeMap;
+use crate::util::sketch::{Hll, QuantileSketch};
+
+/// How the fleet reports: per-edge rows or O(1)-memory sketches.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MetricsMode {
+    /// One `EdgeMetrics` row per edge (the default, and the only mode the
+    /// bitwise per-edge determinism pins apply to).
+    #[default]
+    Full,
+    /// Fixed-size `FleetAggregate` only; `FleetReport::per_edge` stays
+    /// empty no matter the fleet size.
+    Aggregate,
+}
+
+impl MetricsMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            MetricsMode::Full => "full",
+            MetricsMode::Aggregate => "aggregate",
+        }
+    }
+
+    /// Parse a config/CLI value. Errors name the offending value — the
+    /// caller prefixes the key (`fleet.metrics` / `--metrics`).
+    pub fn parse(s: &str) -> Result<MetricsMode, String> {
+        match s {
+            "full" => Ok(MetricsMode::Full),
+            "aggregate" => Ok(MetricsMode::Aggregate),
+            other => Err(format!(
+                "unknown metrics mode `{other}` (expected `full` or `aggregate`)"
+            )),
+        }
+    }
+}
+
+/// Number of power states tracked per edge.
+pub const N_STATES: usize = 4;
+
+/// JSON/report key per state slot — alphabetical, matching the iteration
+/// order of the `BTreeMap<&'static str, f64>` this array replaced, so
+/// every fold and report key sequence is byte-identical to the old ledger.
+pub const STATE_NAMES: [&str; N_STATES] = ["idle", "predict", "sleep", "train"];
+
+const fn state_slot(state: PowerState) -> usize {
+    match state {
+        PowerState::Idle => 0,
+        PowerState::Predict => 1,
+        PowerState::Sleep => 2,
+        PowerState::Train => 3,
+    }
+}
+
+/// Fixed enum-indexed per-state time ledger [s]. Replaces the old
+/// per-edge `BTreeMap<&'static str, f64>`: no allocation, no string-key
+/// comparisons on the hot path, same deterministic (alphabetical)
+/// iteration order. Slots a run never touches stay exactly `0.0`, which
+/// is bitwise-invisible to every nonnegative `values().sum()` fold
+/// (IEEE `x + 0.0 == x` bitwise for `x >= 0.0`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StateTimes([f64; N_STATES]);
+
+impl StateTimes {
+    pub fn add(&mut self, state: PowerState, secs: f64) {
+        self.0[state_slot(state)] += secs;
+    }
+
+    pub fn get(&self, state: PowerState) -> f64 {
+        self.0[state_slot(state)]
+    }
+
+    /// Values in slot (= alphabetical key) order.
+    pub fn values(&self) -> std::slice::Iter<'_, f64> {
+        self.0.iter()
+    }
+
+    /// `(key, seconds)` pairs in alphabetical key order.
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        STATE_NAMES.iter().zip(self.0.iter()).map(|(k, v)| (*k, *v))
+    }
+
+    pub fn bitwise_eq(&self, o: &StateTimes) -> bool {
+        self.0
+            .iter()
+            .zip(&o.0)
+            .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+}
+
+impl std::ops::Index<&str> for StateTimes {
+    type Output = f64;
+
+    fn index(&self, key: &str) -> &f64 {
+        match STATE_NAMES.iter().position(|n| *n == key) {
+            Some(i) => &self.0[i],
+            None => panic!("unknown power state key `{key}`"),
+        }
+    }
+}
 
 /// Energy/activity ledger for one edge device.
 #[derive(Clone, Debug, Default)]
@@ -16,10 +119,8 @@ pub struct EdgeMetrics {
     pub core_energy_mj: f64,
     /// Radio energy [mJ].
     pub radio_energy_mj: f64,
-    /// Time spent per state [s]. A `BTreeMap` so iteration (and therefore
-    /// every `values().sum()` fold over it) has one fixed order — part of
-    /// the bitwise-reproducibility contract of the fleet reports.
-    pub state_time_s: BTreeMap<&'static str, f64>,
+    /// Time spent per state [s], enum-indexed (see [`StateTimes`]).
+    pub state_time_s: StateTimes,
     /// (virtual time, rolling accuracy) checkpoints.
     pub accuracy_trace: Vec<(f64, f64)>,
     /// (virtual time, probe accuracy) from the fleet's periodic
@@ -32,13 +133,7 @@ pub struct EdgeMetrics {
 
 impl EdgeMetrics {
     pub fn record_state(&mut self, state: PowerState, secs: f64, power_mw: f64) {
-        let name = match state {
-            PowerState::Sleep => "sleep",
-            PowerState::Idle => "idle",
-            PowerState::Predict => "predict",
-            PowerState::Train => "train",
-        };
-        *self.state_time_s.entry(name).or_insert(0.0) += secs;
+        self.state_time_s.add(state, secs);
         self.core_energy_mj += power_mw * secs;
     }
 
@@ -91,14 +186,54 @@ impl EdgeMetrics {
             && self.mode_switches == o.mode_switches
             && feq(self.core_energy_mj, o.core_energy_mj)
             && feq(self.radio_energy_mj, o.radio_energy_mj)
-            && self.state_time_s.len() == o.state_time_s.len()
-            && self
-                .state_time_s
-                .iter()
-                .zip(&o.state_time_s)
-                .all(|((ka, va), (kb, vb))| ka == kb && feq(*va, *vb))
+            && self.state_time_s.bitwise_eq(&o.state_time_s)
             && trace_eq(&self.accuracy_trace, &o.accuracy_trace)
             && trace_eq(&self.eval_trace, &o.eval_trace)
+    }
+}
+
+/// O(1)-memory fleet rollup: exact fleet-wide counters plus streaming
+/// sketches over the per-edge distributions. The sketches are fed in a
+/// canonical order (HLLs per-chunk + order-invariant merge, quantile
+/// sketches on the single-threaded close-of-books walk in edge-id
+/// order), so the whole struct is bitwise worker-count-invariant.
+#[derive(Clone, Debug, Default)]
+pub struct FleetAggregate {
+    pub n_edges: u64,
+    pub events: u64,
+    pub trained: u64,
+    pub skips: u64,
+    pub query_failures: u64,
+    pub mode_switches: u64,
+    pub total_queries: u64,
+    pub total_energy_mj: f64,
+    /// Final rolling accuracy per edge (edges with no checkpoint skipped).
+    pub accuracy: QuantileSketch,
+    /// Mean power per edge over the horizon [mW].
+    pub power_mw: QuantileSketch,
+    /// Teacher queries per edge.
+    pub queries: QuantileSketch,
+    /// Distinct (drift-phase subject, class) cells sensed fleet-wide.
+    pub visited_cells: Hll,
+    /// Distinct (edge, FSM mode) states occupied at any point.
+    pub edge_states: Hll,
+}
+
+impl FleetAggregate {
+    pub fn bitwise_eq(&self, o: &FleetAggregate) -> bool {
+        self.n_edges == o.n_edges
+            && self.events == o.events
+            && self.trained == o.trained
+            && self.skips == o.skips
+            && self.query_failures == o.query_failures
+            && self.mode_switches == o.mode_switches
+            && self.total_queries == o.total_queries
+            && self.total_energy_mj.to_bits() == o.total_energy_mj.to_bits()
+            && self.accuracy.bitwise_eq(&o.accuracy)
+            && self.power_mw.bitwise_eq(&o.power_mw)
+            && self.queries.bitwise_eq(&o.queries)
+            && self.visited_cells.bitwise_eq(&o.visited_cells)
+            && self.edge_states.bitwise_eq(&o.edge_states)
     }
 }
 
@@ -106,18 +241,31 @@ impl EdgeMetrics {
 #[derive(Clone, Debug, Default)]
 pub struct FleetReport {
     pub horizon_s: f64,
+    /// Per-edge rows; empty in [`MetricsMode::Aggregate`].
     pub per_edge: Vec<EdgeMetrics>,
     pub teacher_queries: u64,
     pub channel_attempts: u64,
     pub channel_failures: u64,
+    /// Present in [`MetricsMode::Aggregate`] (and only then).
+    pub aggregate: Option<FleetAggregate>,
 }
 
 impl FleetReport {
     pub fn total_queries(&self) -> u64 {
+        if self.per_edge.is_empty() {
+            if let Some(agg) = &self.aggregate {
+                return agg.total_queries;
+            }
+        }
         self.per_edge.iter().map(|m| m.queries).sum()
     }
 
     pub fn total_energy_mj(&self) -> f64 {
+        if self.per_edge.is_empty() {
+            if let Some(agg) = &self.aggregate {
+                return agg.total_energy_mj;
+            }
+        }
         self.per_edge
             .iter()
             .map(|m| m.core_energy_mj + m.radio_energy_mj)
@@ -125,19 +273,33 @@ impl FleetReport {
     }
 
     pub fn mean_edge_power_mw(&self) -> f64 {
-        if self.per_edge.is_empty() || self.horizon_s <= 0.0 {
+        if self.horizon_s <= 0.0 {
             return 0.0;
         }
-        self.total_energy_mj() / self.horizon_s / self.per_edge.len() as f64
+        let n = if self.per_edge.is_empty() {
+            match &self.aggregate {
+                Some(agg) if agg.n_edges > 0 => agg.n_edges as usize,
+                _ => return 0.0,
+            }
+        } else {
+            self.per_edge.len()
+        };
+        self.total_energy_mj() / self.horizon_s / n as f64
     }
 
     /// Bitwise equality of the whole report — `run_parallel(k)` must
     /// satisfy `report.bitwise_eq(&sequential_report)` for every `k`.
     pub fn bitwise_eq(&self, o: &FleetReport) -> bool {
+        let agg_eq = match (&self.aggregate, &o.aggregate) {
+            (None, None) => true,
+            (Some(a), Some(b)) => a.bitwise_eq(b),
+            _ => false,
+        };
         self.horizon_s.to_bits() == o.horizon_s.to_bits()
             && self.teacher_queries == o.teacher_queries
             && self.channel_attempts == o.channel_attempts
             && self.channel_failures == o.channel_failures
+            && agg_eq
             && self.per_edge.len() == o.per_edge.len()
             && self
                 .per_edge
@@ -158,6 +320,45 @@ mod tests {
         m.record_state(PowerState::Predict, 0.036, 3.39);
         assert!((m.core_energy_mj - (2.0 * 1.33 + 0.036 * 3.39)).abs() < 1e-9);
         assert_eq!(m.state_time_s["sleep"], 2.0);
+    }
+
+    #[test]
+    fn state_times_match_old_btreemap_contract() {
+        // alphabetical (key, value) iteration, zero for untouched slots,
+        // and a sum fold bitwise-unperturbed by those zeros
+        let mut t = StateTimes::default();
+        t.add(PowerState::Train, 0.25);
+        t.add(PowerState::Predict, 0.125);
+        let pairs: Vec<(&str, f64)> = t.iter().collect();
+        assert_eq!(
+            pairs,
+            vec![("idle", 0.0), ("predict", 0.125), ("sleep", 0.0), ("train", 0.25)]
+        );
+        let sum: f64 = t.values().sum();
+        assert_eq!(sum.to_bits(), (0.125f64 + 0.25).to_bits());
+        assert_eq!(t["train"], 0.25);
+        assert_eq!(t["idle"], 0.0);
+        assert_eq!(t.get(PowerState::Predict), 0.125);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown power state key")]
+    fn state_times_rejects_unknown_key() {
+        let t = StateTimes::default();
+        let _ = t["awake"];
+    }
+
+    #[test]
+    fn metrics_mode_parses_and_rejects() {
+        assert_eq!(MetricsMode::parse("full").unwrap(), MetricsMode::Full);
+        assert_eq!(
+            MetricsMode::parse("aggregate").unwrap(),
+            MetricsMode::Aggregate
+        );
+        assert_eq!(MetricsMode::default(), MetricsMode::Full);
+        assert_eq!(MetricsMode::Aggregate.name(), "aggregate");
+        let err = MetricsMode::parse("sketchy").unwrap_err();
+        assert!(err.contains("sketchy"), "{err}");
     }
 
     #[test]
@@ -202,5 +403,28 @@ mod tests {
         assert_eq!(r.total_queries(), 7);
         assert!((r.total_energy_mj() - 40.0).abs() < 1e-12);
         assert!((r.mean_edge_power_mw() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregate_backs_the_rollup_getters_when_per_edge_is_empty() {
+        let r = FleetReport {
+            horizon_s: 10.0,
+            aggregate: Some(FleetAggregate {
+                n_edges: 4,
+                total_queries: 12,
+                total_energy_mj: 80.0,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        assert!(r.per_edge.is_empty());
+        assert_eq!(r.total_queries(), 12);
+        assert!((r.total_energy_mj() - 80.0).abs() < 1e-12);
+        assert!((r.mean_edge_power_mw() - 2.0).abs() < 1e-12);
+        // bitwise_eq covers the aggregate payload
+        let mut other = r.clone();
+        assert!(r.bitwise_eq(&other));
+        other.aggregate.as_mut().unwrap().total_queries = 13;
+        assert!(!r.bitwise_eq(&other));
     }
 }

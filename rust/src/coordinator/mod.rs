@@ -53,7 +53,7 @@ pub mod teacher;
 pub use channel::{Channel, ChannelConfig};
 pub use edge::{EdgeConfig, EdgeDevice, Mode, StepAction};
 pub use fleet::{Fleet, FleetConfig, ProvisionArtifacts, Scenario};
-pub use metrics::{EdgeMetrics, FleetReport};
+pub use metrics::{EdgeMetrics, FleetAggregate, FleetReport, MetricsMode, StateTimes};
 pub use proto::{DecisionAction, Request, Response};
 pub use serve::{
     loadgen, serve, serve_with, LoadgenConfig, LoadgenSummary, ServeConfig, ServeSummary,

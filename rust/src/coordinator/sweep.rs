@@ -110,7 +110,7 @@ use super::channel::ChannelConfig;
 use super::fleet::{
     provisioned_edge_model, DetectorKind, Fleet, FleetConfig, ProvisionArtifacts, Scenario,
 };
-use super::metrics::FleetReport;
+use super::metrics::{FleetReport, MetricsMode};
 use crate::data::Dataset;
 use crate::odl::OsElm;
 use crate::util::faults::{self, FaultKind, FaultPlan};
@@ -421,6 +421,7 @@ fn scenario_fingerprint(sc: &Scenario, seed: u64) -> u64 {
         eval_samples,
         eval_costs_power,
         data_seed,
+        metrics,
     } = sc;
     let ChannelConfig {
         latency_s,
@@ -455,6 +456,13 @@ fn scenario_fingerprint(sc: &Scenario, seed: u64) -> u64 {
         ProvisionArtifacts::data_key(sc, seed),
     ] {
         k = hash_fold(k, v);
+    }
+    // metrics is a reporting-memory knob, not a trajectory knob: full-mode
+    // cells keep their pre-aggregate fingerprints (resume compatibility
+    // with existing result files), aggregate cells fold a distinct tag so
+    // the two row shapes never collide in one file.
+    if *metrics == MetricsMode::Aggregate {
+        k = hash_fold(k, 0xA66);
     }
     k
 }
@@ -836,24 +844,43 @@ impl<W: Write> OrderedSink<W> {
 }
 
 /// The per-cell results row: grid coordinates + a `FleetReport` rollup.
+/// Aggregate-mode cells (`fleet.metrics = "aggregate"`) have no per-edge
+/// rows; their rollup comes from the report's [`FleetAggregate`] and the
+/// row additionally carries `metrics`/`sketches` keys. Full-mode rows are
+/// byte-identical to the pre-aggregate schema (keys are only *added*, and
+/// only in aggregate mode).
 pub fn cell_row(cell: &SweepCell, report: &FleetReport, artifacts: &ProvisionArtifacts) -> Json {
+    let agg = report.aggregate.as_ref();
     let edges = report.per_edge.len().max(1) as f64;
     // Mean of the last rolling-accuracy checkpoint over the edges that
     // have one (traces checkpoint every 50 predictions, so short horizons
     // may leave some — or all — edges without a reading; averaging those
     // in as 0.0 would skew the rollup). Null when no edge has reported.
+    // Aggregate mode keeps the same reading per edge, but as a streaming
+    // quantile sketch — the row reports its p50 instead of the mean.
     let acc_readings: Vec<f64> = report
         .per_edge
         .iter()
         .filter_map(|m| m.accuracy_trace.last().map(|&(_, a)| a))
         .collect();
-    let final_acc = if acc_readings.is_empty() {
-        Json::Null
-    } else {
-        Json::Num(acc_readings.iter().sum::<f64>() / acc_readings.len() as f64)
+    let final_acc = match agg {
+        Some(a) if a.accuracy.count() > 0 => Json::Num(a.accuracy.p50()),
+        Some(_) => Json::Null,
+        None if acc_readings.is_empty() => Json::Null,
+        None => Json::Num(acc_readings.iter().sum::<f64>() / acc_readings.len() as f64),
     };
-    let comm: f64 = report.per_edge.iter().map(|m| m.comm_fraction()).sum::<f64>() / edges;
-    let trained: u64 = report.per_edge.iter().map(|m| m.trained).sum();
+    // comm_fraction needs per-edge radio/active splits the aggregate does
+    // not carry — Null, not a fake 0.0, in aggregate mode
+    let comm = match agg {
+        Some(_) => Json::Null,
+        None => Json::Num(
+            report.per_edge.iter().map(|m| m.comm_fraction()).sum::<f64>() / edges,
+        ),
+    };
+    let trained: u64 = match agg {
+        Some(a) => a.trained,
+        None => report.per_edge.iter().map(|m| m.trained).sum(),
+    };
     let mut pairs = vec![
         ("cell", Json::Num(cell.index as f64)),
         ("seed", Json::Num(cell.seed as f64)),
@@ -875,11 +902,36 @@ pub fn cell_row(cell: &SweepCell, report: &FleetReport, artifacts: &ProvisionArt
         ("teacher_queries", Json::Num(report.teacher_queries as f64)),
         ("channel_attempts", Json::Num(report.channel_attempts as f64)),
         ("channel_failures", Json::Num(report.channel_failures as f64)),
-        ("comm_fraction", Json::Num(comm)),
+        ("comm_fraction", comm),
         ("final_accuracy", final_acc),
         ("mean_edge_power_mw", Json::Num(report.mean_edge_power_mw())),
         ("total_energy_mj", Json::Num(report.total_energy_mj())),
     ];
+    if let Some(a) = agg {
+        // NaN quantiles (empty sketch) serialize as Null, not "NaN"
+        let num = |v: f64| if v.is_nan() { Json::Null } else { Json::Num(v) };
+        pairs.push(("metrics", Json::Str("aggregate".into())));
+        pairs.push((
+            "sketches",
+            obj(vec![
+                ("accuracy_p50", num(a.accuracy.p50())),
+                ("accuracy_p90", num(a.accuracy.p90())),
+                ("accuracy_p99", num(a.accuracy.p99())),
+                ("power_mw_p50", num(a.power_mw.p50())),
+                ("power_mw_p90", num(a.power_mw.p90())),
+                ("power_mw_p99", num(a.power_mw.p99())),
+                ("queries_p50", num(a.queries.p50())),
+                ("queries_p90", num(a.queries.p90())),
+                ("queries_p99", num(a.queries.p99())),
+                ("distinct_edge_states", Json::Num(a.edge_states.estimate())),
+                ("distinct_visited_cells", Json::Num(a.visited_cells.estimate())),
+                ("events", Json::Num(a.events as f64)),
+                ("mode_switches", Json::Num(a.mode_switches as f64)),
+                ("query_failures", Json::Num(a.query_failures as f64)),
+                ("skips", Json::Num(a.skips as f64)),
+            ]),
+        ));
+    }
     if let Some(pca) = &artifacts.pca {
         pairs.push((
             "pca_eigenvalues",
@@ -899,6 +951,16 @@ fn header_json(plan: &SweepPlan, shard: ShardSpec) -> Json {
         ("cells", Json::Num(plan.cells.len() as f64)),
         ("grid_hash", Json::Str(format!("{:016x}", plan.grid_hash))),
     ];
+    // schema note: aggregate-mode rows drop per-edge-derived fields
+    // (comm_fraction is null) and carry `metrics` + `sketches` keys.
+    // Full-mode headers are byte-identical to pre-aggregate streams.
+    if plan
+        .cells
+        .first()
+        .map_or(false, |(_, sc)| sc.metrics == MetricsMode::Aggregate)
+    {
+        pairs.push(("metrics", Json::Str("aggregate".into())));
+    }
     if !shard.is_whole() {
         // every caller validates the shard before writing a header
         let range = plan
@@ -2091,6 +2153,95 @@ mod tests {
             stats.get("edge_hits").unwrap().as_usize().unwrap(),
             outcome.stats.edge_hits
         );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn aggregate_mode_rows_carry_sketches_and_match_full_mode_totals() {
+        // `fleet.metrics = "aggregate"` is a reporting knob: trajectories
+        // (and thus every shared row field) match full mode exactly; the
+        // rows gain `metrics` + `sketches`, drop per-edge-only fields to
+        // null, and the header carries the schema note
+        let base = {
+            let mut b = small_base();
+            b.data_seed = Some(0x5EED);
+            b
+        };
+        let mut spec = SweepSpec {
+            seeds: vec![1, 2],
+            thetas: vec![base.fixed_theta],
+            edge_counts: vec![base.n_edges],
+            detectors: vec![base.detector],
+            n_hiddens: vec![base.n_hidden],
+            loss_probs: vec![base.channel.loss_prob],
+            teacher_errors: vec![base.teacher_error],
+            workers: 1,
+            record_pca: false,
+            memo_edge_state: true,
+            base,
+        };
+        let dir = std::env::temp_dir().join("odl_har_sweep_aggregate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let full_path = dir.join("full.jsonl");
+        run_sweep_to_file(&spec, &full_path).unwrap();
+        let full_plan_hash = spec.plan().grid_hash;
+        spec.base.metrics = MetricsMode::Aggregate;
+        let agg_path = dir.join("agg.jsonl");
+        run_sweep_to_file(&spec, &agg_path).unwrap();
+        // distinct row shapes must never collide in one results file
+        assert_ne!(spec.plan().grid_hash, full_plan_hash);
+
+        let full_text = std::fs::read_to_string(&full_path).unwrap();
+        let agg_text = std::fs::read_to_string(&agg_path).unwrap();
+        let full_lines: Vec<&str> = full_text.lines().collect();
+        let agg_lines: Vec<&str> = agg_text.lines().collect();
+        assert_eq!(full_lines.len(), agg_lines.len());
+
+        let full_header = Json::parse(full_lines[0]).unwrap();
+        let agg_header = Json::parse(agg_lines[0]).unwrap();
+        assert!(full_header.get("metrics").is_none());
+        assert_eq!(
+            agg_header.get("metrics").unwrap().as_str().unwrap(),
+            "aggregate"
+        );
+
+        for (f, a) in full_lines[1..full_lines.len() - 1]
+            .iter()
+            .zip(&agg_lines[1..agg_lines.len() - 1])
+        {
+            let f = Json::parse(f).unwrap();
+            let a = Json::parse(a).unwrap();
+            // shared rollups come out of the same trajectories
+            for key in [
+                "cell",
+                "seed",
+                "queries",
+                "trained",
+                "teacher_queries",
+                "channel_attempts",
+                "channel_failures",
+                "total_energy_mj",
+                "mean_edge_power_mw",
+            ] {
+                assert_eq!(
+                    f.get(key).unwrap().as_f64().unwrap(),
+                    a.get(key).unwrap().as_f64().unwrap(),
+                    "aggregate mode moved shared field {key}"
+                );
+            }
+            // full rows keep the pre-aggregate shape
+            assert!(f.get("metrics").is_none());
+            assert!(f.get("sketches").is_none());
+            assert!(f.get("comm_fraction").unwrap().as_f64().is_some());
+            // aggregate rows: no per-edge comm split, sketches instead
+            assert_eq!(a.get("metrics").unwrap().as_str().unwrap(), "aggregate");
+            assert!(matches!(a.get("comm_fraction"), Some(Json::Null)));
+            let sk = a.get("sketches").unwrap();
+            assert!(sk.get("power_mw_p50").unwrap().as_f64().unwrap() > 0.0);
+            assert!(sk.get("events").unwrap().as_f64().unwrap() > 0.0);
+            assert!(sk.get("distinct_edge_states").unwrap().as_f64().is_some());
+            assert!(sk.get("distinct_visited_cells").unwrap().as_f64().is_some());
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -12,7 +12,7 @@
 //! odl-har fig3   [--trials N] [--metric p1p2|el2n] [--out DIR]
 //! odl-har fig4   [--trials N] [--out DIR]
 //! odl-har run    --config FILE       # custom protocol experiment
-//! odl-har fleet  [--config FILE] [--workers N] [--threaded]
+//! odl-har fleet  [--config FILE] [--workers N] [--metrics full|aggregate] [--threaded]
 //! odl-har sweep  --config FILE [--workers N] [--out FILE] [--resume] [--dry-run]
 //!                [--shard I/N | --shard auto[:N]] [--retry-budget K]
 //!                [--heartbeat-timeout SECS] [--inject-faults SPEC] [--fault-attempts K]
@@ -233,11 +233,17 @@ fn main() -> Result<()> {
             let threaded = args.flag("--threaded");
             let workers_cli = args.opt_usize_opt("--workers")?;
             let cfg_path = args.opt("--config")?;
+            let metrics_cli = args.opt("--metrics")?;
             args.finish()?;
-            let (scenario, seed, workers_toml) = match cfg_path {
+            let (mut scenario, seed, workers_toml) = match cfg_path {
                 Some(p) => config::fleet_from_file(&PathBuf::from(p))?,
                 None => (odl_har::coordinator::Scenario::default(), 1, 1),
             };
+            // CLI beats TOML, same as --workers
+            if let Some(m) = metrics_cli {
+                scenario.metrics = odl_har::coordinator::MetricsMode::parse(&m)
+                    .map_err(|e| anyhow::anyhow!("--metrics: {e}"))?;
+            }
             // CLI beats TOML; 0 means auto (available_parallelism),
             // resolved once at startup
             let workers = odl_har::util::auto_workers(workers_cli.unwrap_or(workers_toml));
@@ -256,27 +262,60 @@ fn main() -> Result<()> {
                     workers,
                 )?;
                 let report = fleet.run_parallel(workers);
+                let n_edges = report
+                    .aggregate
+                    .as_ref()
+                    .map(|a| a.n_edges as usize)
+                    .unwrap_or(report.per_edge.len());
                 println!(
                     "fleet: {} edges, horizon {:.0}s, {} worker(s), teacher queries {}, channel fail {}/{}",
-                    report.per_edge.len(),
+                    n_edges,
                     report.horizon_s,
                     workers.max(1),
                     report.teacher_queries,
                     report.channel_failures,
                     report.channel_attempts
                 );
-                for (id, m) in report.per_edge.iter().enumerate() {
+                if let Some(agg) = &report.aggregate {
+                    // aggregate mode: O(1) report — sketches instead of
+                    // per-edge rows
                     println!(
-                        "edge {id}: events {} queries {} skips {} trained {} comm {:.1}% power {:.2} mW (core {:.2} + radio {:.2})",
-                        m.events,
-                        m.queries,
-                        m.skips,
-                        m.trained,
-                        m.comm_fraction() * 100.0,
-                        m.mean_power_mw(report.horizon_s),
-                        m.core_energy_mj / report.horizon_s,
-                        m.radio_energy_mj / report.horizon_s,
+                        "aggregate: events {} queries {} skips {} trained {} query failures {} mode switches {}",
+                        agg.events,
+                        agg.total_queries,
+                        agg.skips,
+                        agg.trained,
+                        agg.query_failures,
+                        agg.mode_switches,
                     );
+                    println!(
+                        "aggregate: energy {:.1} mJ, power mW p50 {:.3} p90 {:.3} p99 {:.3}, accuracy p50 {:.3} p90 {:.3}",
+                        agg.total_energy_mj,
+                        agg.power_mw.p50(),
+                        agg.power_mw.p90(),
+                        agg.power_mw.p99(),
+                        agg.accuracy.p50(),
+                        agg.accuracy.p90(),
+                    );
+                    println!(
+                        "aggregate: distinct visited cells ~{:.0}, distinct edge states ~{:.0}",
+                        agg.visited_cells.estimate(),
+                        agg.edge_states.estimate(),
+                    );
+                } else {
+                    for (id, m) in report.per_edge.iter().enumerate() {
+                        println!(
+                            "edge {id}: events {} queries {} skips {} trained {} comm {:.1}% power {:.2} mW (core {:.2} + radio {:.2})",
+                            m.events,
+                            m.queries,
+                            m.skips,
+                            m.trained,
+                            m.comm_fraction() * 100.0,
+                            m.mean_power_mw(report.horizon_s),
+                            m.core_energy_mj / report.horizon_s,
+                            m.radio_energy_mj / report.horizon_s,
+                        );
+                    }
                 }
             }
         }
@@ -842,9 +881,12 @@ const USAGE: &str =
            fig3   [--trials N] [--metric p1p2|el2n] [--out DIR]   pruning sweep (Figure 3)\n\
            fig4   [--trials N] [--out DIR]      training-mode power (Figure 4)\n\
            run    --config FILE           custom experiment from TOML\n\
-           fleet  [--config FILE] [--workers N] [--threaded]  multi-edge fleet simulation\n\
+           fleet  [--config FILE] [--workers N] [--metrics full|aggregate] [--threaded]\n\
+                                          multi-edge fleet simulation\n\
                                           (--workers shards provisioning + event loop; 0 = auto;\n\
-                                           same report bit for bit for any count)\n\
+                                           same report bit for bit for any count; --metrics\n\
+                                           aggregate keeps O(1) sketched totals instead of\n\
+                                           per-edge rows — same trajectories, less memory)\n\
            sweep  --config FILE [--workers N] [--out FILE] [--resume] [--dry-run] [--shard I/N]\n\
                   [--shard auto[:N] [--retry-budget K] [--heartbeat-timeout SECS]\n\
                    [--fault-attempts K]] [--inject-faults SPEC]\n\

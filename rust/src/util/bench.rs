@@ -79,6 +79,21 @@ impl std::fmt::Display for BenchResult {
     }
 }
 
+/// Peak resident set size of this process in bytes, from Linux's
+/// `/proc/self/status` `VmHWM` (high-water mark) line. `None` on
+/// platforms or sandboxes without procfs — callers should report the
+/// reading as best-effort, never gate on it being present.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
 /// Human time formatting.
 pub fn fmt_time(s: f64) -> String {
     if s >= 1.0 {
@@ -107,6 +122,17 @@ mod tests {
         });
         assert!(r.mean_s > 0.0);
         assert!(r.min_s <= r.mean_s);
+    }
+
+    #[test]
+    fn peak_rss_reads_plausibly_on_linux() {
+        // on Linux procfs must yield a nonzero reading at least as large
+        // as one page; elsewhere None is the contract
+        if let Some(bytes) = peak_rss_bytes() {
+            assert!(bytes >= 4096, "implausible VmHWM reading: {bytes}");
+        } else {
+            assert!(!cfg!(target_os = "linux"));
+        }
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub mod logging;
 pub mod parallel;
 pub mod prop;
 pub mod rng;
+pub mod sketch;
 pub mod stats;
 pub mod table;
 

@@ -189,6 +189,45 @@ where
     });
 }
 
+/// [`for_each_shard_mut`] with a per-chunk return value: split `items`
+/// into the same contiguous `⌈n/workers⌉` chunks, run `f(chunk_index,
+/// &mut chunk)` on one scoped thread per chunk, and return the results in
+/// chunk order. This is the fleet engine's wheel-per-shard layout — each
+/// worker runs one time wheel over its whole chunk and hands back that
+/// shard's O(1) sketch state, merged on the caller's thread in chunk
+/// order. A panicking chunk re-raises on the caller (join in spawn
+/// order + `resume_unwind`), matching [`for_each_shard_mut`].
+pub fn map_shard_chunks<T, R, F>(workers: usize, items: &mut [T], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut [T]) -> R + Sync,
+{
+    let n = items.len();
+    let workers = clamp_workers(workers, n);
+    if workers <= 1 {
+        return vec![f(0, items)];
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = items
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(idx, shard)| {
+                let f = &f;
+                scope.spawn(move || f(idx, shard))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(payload) => std::panic::resume_unwind(payload),
+            })
+            .collect()
+    })
+}
+
 /// Assert `f` produces an identical output vector under every
 /// [`WORKER_SWEEP`] worker count. (The fleet/sweep determinism suites
 /// compare whole `FleetReport`s via `bitwise_eq` and share only
@@ -264,6 +303,44 @@ mod tests {
                 for_each_shard_mut(w, &mut items, |x| *x += 1);
                 assert!(items.iter().all(|&x| x == 1), "n={n} w={w}");
             }
+        }
+    }
+
+    #[test]
+    fn shard_chunk_map_visits_every_item_and_orders_results() {
+        for n in [0usize, 1, 5, 8, 9, 17] {
+            for w in [1usize, 2, 3, 8, 32] {
+                let mut items = vec![1u64; n];
+                let sums = map_shard_chunks(w, &mut items, |idx, chunk| {
+                    for x in chunk.iter_mut() {
+                        *x += 1;
+                    }
+                    (idx, chunk.iter().sum::<u64>())
+                });
+                assert!(items.iter().all(|&x| x == 2), "n={n} w={w}");
+                // chunk results come back in chunk order and cover n
+                let total: u64 = sums.iter().map(|(_, s)| s).sum();
+                assert_eq!(total, 2 * n as u64, "n={n} w={w}");
+                for (slot, (idx, _)) in sums.iter().enumerate() {
+                    assert_eq!(slot, *idx, "n={n} w={w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_chunk_map_propagates_panics() {
+        for w in [1usize, 4] {
+            let caught = std::panic::catch_unwind(|| {
+                let mut items = vec![0u32; 8];
+                map_shard_chunks(w, &mut items, |idx, _| {
+                    if idx == 0 {
+                        panic!("chunk panic");
+                    }
+                    idx
+                })
+            });
+            assert!(caught.is_err(), "panic must propagate at {w} workers");
         }
     }
 

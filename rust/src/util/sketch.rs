@@ -1,0 +1,545 @@
+//! Streaming sketches for O(1)-memory fleet aggregates.
+//!
+//! The million-edge fleet engine cannot afford an [`EdgeMetrics`] row per
+//! edge, so `fleet.metrics = aggregate` folds the fleet into two kinds of
+//! fixed-size summaries:
+//!
+//! * [`Hll`] — a HyperLogLog distinct counter (p = 12, 4096 one-byte
+//!   registers) for "how many distinct (class, subject) cells did the
+//!   fleet visit" / "how many distinct (edge, mode) states occurred".
+//!   Items are hashed with [`mix64`] — the repo's canonical avalanche
+//!   mix, no `RandomState`/`HashMap` involvement — so the register file
+//!   is a pure function of the inserted set. Merging is register-wise
+//!   max, which makes the sketch **partition-invariant**: feeding a set
+//!   through any number of per-shard sketches and merging gives bitwise
+//!   the registers of one sketch fed everything, the property that lets
+//!   the parallel fleet engine feed one `Hll` per worker chunk.
+//! * [`QuantileSketch`] — five-marker P² estimators (Jain & Chlamtac
+//!   1985) for the p50/p90/p99 of a stream, plus exact count/min/max/sum.
+//!   Five `f64` markers per tracked quantile, no sample buffer; below
+//!   [`SMALL_N`] observations the sketch still holds every value and
+//!   answers exactly. P² is *not* mergeable — the fleet feeds it only on
+//!   the single-threaded close-of-books walk (edge-id order), which is
+//!   already the bitwise-determinism convention for every f64 fold in the
+//!   report.
+//!
+//! Both sketches use only IEEE-754 `+ - * /` (plus one `ln` in the HLL
+//! estimator), so the golden pins below are reproducible from the Python
+//! reference implementation used to derive them.
+//!
+//! [`EdgeMetrics`]: crate::coordinator::metrics::EdgeMetrics
+
+use crate::util::rng::{hash_fold, mix64};
+
+/// HyperLogLog precision: 2^12 = 4096 registers, ~1.6 % standard error.
+pub const HLL_P: u32 = 12;
+/// Register count.
+pub const HLL_M: usize = 1 << HLL_P;
+
+/// Seed of [`Hll::fingerprint`]'s register fold.
+const HLL_FP_SEED: u64 = 0x5E7C;
+
+/// Deterministic HyperLogLog distinct counter. See the module docs for
+/// the determinism/merge contract.
+#[derive(Clone)]
+pub struct Hll {
+    regs: Box<[u8; HLL_M]>,
+}
+
+impl Default for Hll {
+    fn default() -> Self {
+        Hll::new()
+    }
+}
+
+impl std::fmt::Debug for Hll {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Hll")
+            .field("estimate", &self.estimate())
+            .finish()
+    }
+}
+
+impl Hll {
+    pub fn new() -> Hll {
+        Hll {
+            regs: Box::new([0u8; HLL_M]),
+        }
+    }
+
+    /// Insert one item (callers encode their key into a `u64`; equal
+    /// items must encode equally).
+    pub fn insert(&mut self, item: u64) {
+        let h = mix64(item);
+        let idx = (h >> (64 - HLL_P)) as usize;
+        // rank = leading zeros of the remaining 52 bits, plus one
+        let rest = h << HLL_P;
+        let rank = (rest.leading_zeros().min(64 - HLL_P) + 1) as u8;
+        if rank > self.regs[idx] {
+            self.regs[idx] = rank;
+        }
+    }
+
+    /// Register-wise max merge. Exactly the registers a single sketch fed
+    /// the union would hold — partition- and order-invariant.
+    pub fn merge(&mut self, other: &Hll) {
+        for (a, &b) in self.regs.iter_mut().zip(other.regs.iter()) {
+            if b > *a {
+                *a = b;
+            }
+        }
+    }
+
+    /// Distinct-count estimate: the harmonic-mean HLL estimator with the
+    /// standard linear-counting correction for the small range. The sum
+    /// walks registers in index order and every `2^-r` term is an exact
+    /// power of two, so the estimate is deterministic for a given
+    /// register file (the one `ln` call is the only libm dependence).
+    pub fn estimate(&self) -> f64 {
+        let m = HLL_M as f64;
+        let mut sum = 0.0;
+        let mut zeros = 0u32;
+        for &r in self.regs.iter() {
+            // exact 2^-r via exponent-field construction (r <= 53)
+            sum += f64::from_bits((1023 - r as u64) << 52);
+            if r == 0 {
+                zeros += 1;
+            }
+        }
+        let alpha = 0.7213 / (1.0 + 1.079 / m);
+        let raw = alpha * m * m / sum;
+        if raw <= 2.5 * m && zeros > 0 {
+            m * (m / zeros as f64).ln()
+        } else {
+            raw
+        }
+    }
+
+    /// Content hash of the register file ([`hash_fold`] in index order) —
+    /// the golden-pin handle: ln-free, so it is bit-exact across libms.
+    pub fn fingerprint(&self) -> u64 {
+        self.regs
+            .iter()
+            .fold(HLL_FP_SEED, |acc, &r| hash_fold(acc, r as u64))
+    }
+
+    pub fn bitwise_eq(&self, o: &Hll) -> bool {
+        self.regs[..] == o.regs[..]
+    }
+}
+
+/// The quantiles every [`QuantileSketch`] tracks, in marker order.
+pub const QUANTILE_TARGETS: [f64; 3] = [0.5, 0.9, 0.99];
+
+/// Below this many observations the sketch holds the values themselves
+/// and answers exactly (P² needs five samples to seed its markers).
+pub const SMALL_N: usize = 5;
+
+/// One five-marker P² estimator for a single target quantile.
+#[derive(Clone, Copy, Debug)]
+struct P2 {
+    q: f64,
+    /// Marker heights; `heights[2]` is the running quantile estimate.
+    heights: [f64; 5],
+    /// Marker positions (integral, kept as f64 like the paper).
+    pos: [f64; 5],
+    /// Desired marker positions.
+    desired: [f64; 5],
+}
+
+impl P2 {
+    /// Seed the markers from the first five observations.
+    fn new(q: f64, first5: &[f64; 5]) -> P2 {
+        let mut heights = *first5;
+        heights.sort_by(|a, b| a.partial_cmp(b).expect("finite sketch sample"));
+        P2 {
+            q,
+            heights,
+            pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+            desired: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+        }
+    }
+
+    fn insert(&mut self, x: f64) {
+        let (h, pos) = (&mut self.heights, &mut self.pos);
+        // locate the cell k with h[k] <= x < h[k+1], extending the ends
+        let k = if x < h[0] {
+            h[0] = x;
+            0
+        } else if x >= h[4] {
+            if x > h[4] {
+                h[4] = x;
+            }
+            3
+        } else {
+            let mut k = 0;
+            for i in 0..4 {
+                if x >= h[i] {
+                    k = i;
+                }
+            }
+            k
+        };
+        for p in pos.iter_mut().skip(k + 1) {
+            *p += 1.0;
+        }
+        let inc = [0.0, self.q / 2.0, self.q, (1.0 + self.q) / 2.0, 1.0];
+        for (dst, step) in self.desired.iter_mut().zip(inc) {
+            *dst += step;
+        }
+        // nudge the three interior markers toward their desired positions
+        for i in 1..4 {
+            let d = self.desired[i] - pos[i];
+            if (d >= 1.0 && pos[i + 1] - pos[i] > 1.0)
+                || (d <= -1.0 && pos[i - 1] - pos[i] < -1.0)
+            {
+                let d = if d > 0.0 { 1.0 } else { -1.0 };
+                // piecewise-parabolic prediction, linear fallback when it
+                // would leave the bracketing heights
+                let qp = h[i]
+                    + d / (pos[i + 1] - pos[i - 1])
+                        * ((pos[i] - pos[i - 1] + d) * (h[i + 1] - h[i])
+                            / (pos[i + 1] - pos[i])
+                            + (pos[i + 1] - pos[i] - d) * (h[i] - h[i - 1])
+                                / (pos[i] - pos[i - 1]));
+                h[i] = if h[i - 1] < qp && qp < h[i + 1] {
+                    qp
+                } else {
+                    let j = if d > 0.0 { i + 1 } else { i - 1 };
+                    h[i] + d * (h[j] - h[i]) / (pos[j] - pos[i])
+                };
+                pos[i] += d;
+            }
+        }
+    }
+}
+
+/// Fixed-size quantile sketch: exact count/min/max/sum plus one [`P2`]
+/// estimator per [`QUANTILE_TARGETS`] entry. Feed order matters (P² is a
+/// streaming recurrence), so callers that need determinism must feed in
+/// a canonical order — the fleet feeds it on the single-threaded
+/// close-of-books walk in edge-id order.
+#[derive(Clone, Debug)]
+pub struct QuantileSketch {
+    count: u64,
+    min: f64,
+    max: f64,
+    sum: f64,
+    /// The first [`SMALL_N`] observations in arrival order (marker seed
+    /// for P², exact answers below SMALL_N).
+    first: [f64; SMALL_N],
+    cells: Option<[P2; 3]>,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        QuantileSketch::new()
+    }
+}
+
+impl QuantileSketch {
+    pub fn new() -> QuantileSketch {
+        QuantileSketch {
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sum: 0.0,
+            first: [0.0; SMALL_N],
+            cells: None,
+        }
+    }
+
+    pub fn insert(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+        if self.count as usize <= SMALL_N {
+            self.first[self.count as usize - 1] = x;
+            if self.count as usize == SMALL_N {
+                self.cells = Some([
+                    P2::new(QUANTILE_TARGETS[0], &self.first),
+                    P2::new(QUANTILE_TARGETS[1], &self.first),
+                    P2::new(QUANTILE_TARGETS[2], &self.first),
+                ]);
+            }
+            return;
+        }
+        for cell in self.cells.as_mut().expect("cells seeded at SMALL_N").iter_mut() {
+            cell.insert(x);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// NaN while empty.
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    /// NaN while empty.
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// NaN while empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    fn target(&self, j: usize) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let n = self.count as usize;
+        if n < SMALL_N {
+            // exact nearest-rank answer from the retained prefix
+            let mut vals = self.first;
+            let vals = &mut vals[..n];
+            vals.sort_by(|a, b| a.partial_cmp(b).expect("finite sketch sample"));
+            let idx = (QUANTILE_TARGETS[j] * (n as f64 - 1.0)).round() as usize;
+            return vals[idx.min(n - 1)];
+        }
+        self.cells.as_ref().expect("cells seeded at SMALL_N")[j].heights[2]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.target(0)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.target(1)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.target(2)
+    }
+
+    /// Bitwise equality of the full sketch state (floats by bit pattern).
+    pub fn bitwise_eq(&self, o: &QuantileSketch) -> bool {
+        fn feq(a: f64, b: f64) -> bool {
+            a.to_bits() == b.to_bits()
+        }
+        let cells_eq = match (&self.cells, &o.cells) {
+            (None, None) => true,
+            (Some(a), Some(b)) => a.iter().zip(b).all(|(x, y)| {
+                feq(x.q, y.q)
+                    && x.heights.iter().zip(&y.heights).all(|(p, q)| feq(*p, *q))
+                    && x.pos.iter().zip(&y.pos).all(|(p, q)| feq(*p, *q))
+                    && x.desired.iter().zip(&y.desired).all(|(p, q)| feq(*p, *q))
+            }),
+            _ => false,
+        };
+        self.count == o.count
+            && feq(self.min, o.min)
+            && feq(self.max, o.max)
+            && feq(self.sum, o.sum)
+            && self.first.iter().zip(&o.first).all(|(a, b)| feq(*a, *b))
+            && cells_eq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The deterministic test stream shared with the Python reference:
+    /// `x_i = (mix64(i) >> 11) / 2^53`, uniform in [0, 1).
+    fn stream(i: u64) -> f64 {
+        (mix64(i) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[test]
+    fn hll_estimates_distinct_counts() {
+        for n in [100u64, 1000, 10_000] {
+            let mut h = Hll::new();
+            for i in 0..n {
+                h.insert(i);
+            }
+            // duplicates must not move anything
+            let fp = h.fingerprint();
+            for i in 0..n {
+                h.insert(i);
+            }
+            assert_eq!(h.fingerprint(), fp, "duplicates moved registers at n={n}");
+            let est = h.estimate();
+            let err = (est - n as f64).abs() / n as f64;
+            assert!(err < 0.05, "n={n} estimate={est} err={err}");
+        }
+    }
+
+    #[test]
+    fn hll_merge_is_union_and_partition_invariant() {
+        let mut whole = Hll::new();
+        for i in 0..3000u64 {
+            whole.insert(i);
+        }
+        // any partition of the items, merged in any order, must reproduce
+        // the single sketch's registers exactly
+        for parts in [2usize, 3, 7] {
+            let mut shards: Vec<Hll> = (0..parts).map(|_| Hll::new()).collect();
+            for i in 0..3000u64 {
+                shards[(i as usize) % parts].insert(i);
+            }
+            let mut merged = Hll::new();
+            for s in shards.iter().rev() {
+                merged.merge(s);
+            }
+            assert!(merged.bitwise_eq(&whole), "partition into {parts} diverged");
+            assert_eq!(merged.fingerprint(), whole.fingerprint());
+        }
+        // overlapping shards are a union, not a sum
+        let mut a = Hll::new();
+        let mut b = Hll::new();
+        for i in 0..2000u64 {
+            a.insert(i);
+        }
+        for i in 1000..3000u64 {
+            b.insert(i);
+        }
+        a.merge(&b);
+        assert!(a.bitwise_eq(&whole));
+    }
+
+    #[test]
+    fn hll_golden_pins() {
+        // pinned against the Python reference implementation (same mix64,
+        // same register fold); the fingerprint is ln-free and must match
+        // bit for bit, the estimate's single ln() gets an epsilon
+        let mut h = Hll::new();
+        for i in 0..1000u64 {
+            h.insert(i);
+        }
+        assert_eq!(h.fingerprint(), 0x1C13_527E_E6A2_0A45);
+        let est = h.estimate();
+        assert!(
+            (est - 1011.1388792075297).abs() < 1e-6,
+            "estimate moved: {est}"
+        );
+        // the small range rides the linear-counting branch
+        let mut small = Hll::new();
+        for i in 0..100u64 {
+            small.insert(i);
+        }
+        let est = small.estimate();
+        assert!(
+            (est - 101.24094239088463).abs() < 1e-6,
+            "linear-counting estimate moved: {est}"
+        );
+        // empty sketch: every register zero → linear counting of zero
+        assert_eq!(Hll::new().estimate(), 0.0);
+    }
+
+    #[test]
+    fn quantile_sketch_tracks_exact_quantiles() {
+        let n = 2000u64;
+        let mut s = QuantileSketch::new();
+        let mut vals: Vec<f64> = Vec::new();
+        for i in 0..n {
+            let x = stream(i);
+            s.insert(x);
+            vals.push(x);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(s.count(), n);
+        assert_eq!(s.min(), vals[0]);
+        assert_eq!(s.max(), vals[n as usize - 1]);
+        for (j, q) in QUANTILE_TARGETS.iter().enumerate() {
+            let exact = vals[(q * (n as f64 - 1.0)).round() as usize];
+            let est = s.target(j);
+            assert!(
+                (est - exact).abs() < 0.02,
+                "q={q} exact={exact} est={est}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantile_sketch_golden_pins() {
+        // pinned against the Python reference on the shared test stream;
+        // P² is pure +-*/ so the tolerance only covers association noise
+        let mut s = QuantileSketch::new();
+        for i in 0..2000u64 {
+            s.insert(stream(i));
+        }
+        let pins = [
+            (s.sum(), 990.8406017020923),
+            (s.min(), 0.0),
+            (s.max(), 0.9991968036544369),
+            (s.p50(), 0.49376951274810826),
+            (s.p90(), 0.8953870747218335),
+            (s.p99(), 0.9909333826236507),
+        ];
+        for (i, (got, want)) in pins.iter().enumerate() {
+            assert!(
+                (got - want).abs() < 1e-9,
+                "pin {i}: got {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantile_sketch_is_exact_below_small_n() {
+        let mut s = QuantileSketch::new();
+        assert!(s.p50().is_nan());
+        assert!(s.min().is_nan());
+        for x in [3.0, 1.0, 2.0] {
+            s.insert(x);
+        }
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+        assert_eq!(s.sum(), 6.0);
+        assert_eq!(s.p50(), 2.0);
+        assert_eq!(s.p99(), 3.0);
+        assert_eq!(s.mean(), 2.0);
+    }
+
+    #[test]
+    fn quantile_sketch_bitwise_eq_detects_divergence() {
+        let mut a = QuantileSketch::new();
+        let mut b = QuantileSketch::new();
+        for i in 0..100u64 {
+            a.insert(stream(i));
+            b.insert(stream(i));
+        }
+        assert!(a.bitwise_eq(&b));
+        b.insert(0.5);
+        assert!(!a.bitwise_eq(&b));
+    }
+
+    #[test]
+    fn hll_rank_handles_extremes() {
+        // items whose hash has a long run of leading zeros after the
+        // index bits must clamp at 53 and never overflow the register
+        let mut h = Hll::new();
+        for i in 0..200_000u64 {
+            h.insert(i);
+        }
+        let est = h.estimate();
+        let err = (est - 200_000.0).abs() / 200_000.0;
+        assert!(err < 0.05, "estimate={est} err={err}");
+    }
+}

@@ -23,6 +23,8 @@
 #            seq_loop_s   @ 256 edges         (lower is better)
 #            provision_speedup @ 256 edges    (higher is better)
 #            provision_ms @ 256 edges         (lower is better)
+#            events_per_sec @ 100k edges      (higher is better; the
+#            aggregate-mode time-wheel throughput point)
 #   sweep:   memo_speedup                     (higher is better)
 #            edge_memo_speedup                (higher is better)
 #   serve:   throughput_eps                   (higher is better)
@@ -139,6 +141,7 @@ check("fleet", "BENCH_fleet.json", "BENCH_fleet.prev.json", [
     ("seq_loop_s@256edges", fleet_metric(256, "seq_loop_s"), False),
     ("provision_speedup@256edges", fleet_metric(256, "provision_speedup"), True),
     ("provision_ms@256edges", fleet_metric(256, "provision_ms"), False),
+    ("events_per_sec@100kedges", fleet_metric(100000, "events_per_sec"), True),
 ])
 sweep = check("sweep", "BENCH_sweep.json", "BENCH_sweep.prev.json", [
     ("memo_speedup", lambda d: d.get("memo_speedup"), True),

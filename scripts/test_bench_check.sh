@@ -8,7 +8,8 @@
 # Covers the graceful-degradation paths (missing, empty, and corrupt
 # bench/baseline files must warn and skip — a fresh tree seeds baselines,
 # it never fails) and each gate (baseline-relative memo_speedup /
-# edge_memo_speedup and the serve throughput_eps / p99_ms pair, absolute
+# edge_memo_speedup, the serve throughput_eps / p99_ms pair, the fleet
+# events_per_sec @ 100k aggregate throughput point, absolute
 # resume_overhead_frac / edge_hit_rate / edge_memo_speedup /
 # supervise_overhead_frac floors and ceilings).
 
@@ -52,6 +53,13 @@ serve_json() {
   # serve_json THROUGHPUT_EPS P99_MS
   printf '{"schema":"bench_serve/v1","throughput_eps":%s,"p50_ms":0.05,"p99_ms":%s}' \
     "$1" "$2"
+}
+
+fleet_json() {
+  # fleet_json EVENTS_PER_SEC_AT_100K — the 8/64/256 rows carry healthy
+  # constants; only the 100k aggregate throughput point varies
+  printf '{"schema":"bench_fleet/v1","results":[{"edges":256,"speedup_loop":3.0,"seq_loop_s":1.0,"provision_speedup":4.0,"provision_ms":50.0},{"edges":100000,"metrics":"aggregate","events_per_sec":%s}]}' \
+    "$1"
 }
 
 # 1. fresh tree: nothing measured at all — degrade, never fail
@@ -132,6 +140,20 @@ run_case "serve p99 regression fails" 1 "serve:p99_ms.*REGRESSION"
 serve_json 22000 0.19 > "$tmp/BENCH_serve.json"
 run_case "serve improvement passes" 0 "bench_check: PASS"
 rm -f "$tmp/BENCH_serve.json" "$tmp/BENCH_serve.prev.json"
+
+# 12e. fleet gates: the 100k-edge aggregate throughput point is tracked
+# baseline-relative like the rest of the fleet family — healthy passes,
+# a >10% events_per_sec drop fails, and an old bench JSON without the
+# 100k row skips the gate instead of failing
+fleet_json 3000000 > "$tmp/BENCH_fleet.json"
+fleet_json 3000000 > "$tmp/BENCH_fleet.prev.json"
+run_case "healthy fleet 100k point vs baseline" 0 "bench_check: PASS"
+fleet_json 2000000 > "$tmp/BENCH_fleet.json"
+run_case "fleet events_per_sec@100k regression fails" 1 "fleet:events_per_sec@100kedges.*REGRESSION"
+printf '{"schema":"bench_fleet/v1","results":[{"edges":256,"speedup_loop":3.0,"seq_loop_s":1.0,"provision_speedup":4.0,"provision_ms":50.0}]}' \
+  > "$tmp/BENCH_fleet.json"
+run_case "pre-100k fleet JSON skips the gate" 0 "fleet:events_per_sec@100kedges not comparable"
+rm -f "$tmp/BENCH_fleet.json" "$tmp/BENCH_fleet.prev.json"
 
 # 13. a bench-run invocation (REQUIRE_FRESH=1) must FAIL on a missing
 # fresh measurement — write failures cannot hide regressions

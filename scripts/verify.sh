@@ -25,6 +25,12 @@ ODL_BENCH_FAST=1 cargo bench --bench bench_hotpath
 ODL_BENCH_FAST=1 cargo bench --bench bench_fleet_scale
 ODL_BENCH_FAST=1 cargo bench --bench bench_sweep
 ODL_BENCH_FAST=1 cargo bench --bench bench_serve
+# million-edge engine smoke: a 100k-edge aggregate-mode fleet end to end
+# through the CLI — the time-wheel event loop at scale, with the O(1)
+# sketched report (sketch summaries, no per-edge rows) on stdout
+fleet_out=$(./target/release/odl-har fleet --config configs/fleet_100k.toml --workers 0)
+grep -q "fleet: 100000 edges" <<< "$fleet_out"
+grep -q "aggregate: events" <<< "$fleet_out"
 # sweep smoke: a TOML-declared grid (incl. the n_hidden/loss/teacher-error
 # axes) end to end through the CLI; the results file must contain
 # header + 16 cells + stats trailer
