@@ -9,15 +9,28 @@
 //! identical to the single-threaded event loop, so `--workers` (or the
 //! auto default) is purely a wall-clock knob.
 //!
-//! Run: `cargo run --release --example fleet_power_study [-- --workers N]`
+//! `--metrics aggregate` switches the rollup to the O(1)-memory
+//! `FleetAggregate` (the `fleet.metrics = "aggregate"` mode of the CLI):
+//! no per-edge rows are kept, communication volume comes from the exact
+//! fleet-wide query/skip counters, and final accuracy is the sketch
+//! median instead of a per-edge mean. Pair it with `--edges N` to push
+//! the study to fleet sizes where per-edge rows would not fit.
+//!
+//! Run: `cargo run --release --example fleet_power_study
+//!       [-- --workers N --metrics full|aggregate --edges N]`
 
 use odl_har::coordinator::fleet::{DetectorKind, Fleet, FleetConfig, Scenario};
-use odl_har::coordinator::ChannelConfig;
+use odl_har::coordinator::{ChannelConfig, MetricsMode};
 use odl_har::data::SynthConfig;
 
-fn scenario(fixed_theta: Option<f32>, detector: DetectorKind) -> Scenario {
+fn scenario(
+    n_edges: usize,
+    metrics: MetricsMode,
+    fixed_theta: Option<f32>,
+    detector: DetectorKind,
+) -> Scenario {
     Scenario {
-        n_edges: 8,
+        n_edges,
         n_hidden: 128,
         event_period_s: 1.0,
         horizon_s: 900.0,
@@ -32,6 +45,7 @@ fn scenario(fixed_theta: Option<f32>, detector: DetectorKind) -> Scenario {
         },
         synth: SynthConfig::default(),
         train_target: 450,
+        metrics,
         ..Default::default()
     }
 }
@@ -42,19 +56,37 @@ fn report(tag: &str, sc: Scenario, workers: usize) -> anyhow::Result<(f64, f64)>
         seed: 42,
     })?;
     let r = fleet.run_parallel(workers);
-    let comm: f64 = r
-        .per_edge
-        .iter()
-        .map(|m| m.comm_fraction() * 100.0)
-        .sum::<f64>()
-        / r.per_edge.len() as f64;
+    let (comm, acc) = match &r.aggregate {
+        // aggregate mode: exact fleet-wide counters (no per-edge rows
+        // exist), final accuracy as the sketch median across edges
+        Some(agg) => {
+            let considered = agg.total_queries + agg.skips;
+            let comm = if considered == 0 {
+                0.0
+            } else {
+                100.0 * agg.total_queries as f64 / considered as f64
+            };
+            (comm, agg.accuracy.p50())
+        }
+        // full mode: unweighted per-edge means, as the study always
+        // reported them
+        None => {
+            let comm: f64 = r
+                .per_edge
+                .iter()
+                .map(|m| m.comm_fraction() * 100.0)
+                .sum::<f64>()
+                / r.per_edge.len() as f64;
+            let acc: f64 = r
+                .per_edge
+                .iter()
+                .filter_map(|m| m.accuracy_trace.last().map(|&(_, a)| a))
+                .sum::<f64>()
+                / r.per_edge.len() as f64;
+            (comm, acc)
+        }
+    };
     let power = r.mean_edge_power_mw();
-    let acc: f64 = r
-        .per_edge
-        .iter()
-        .filter_map(|m| m.accuracy_trace.last().map(|&(_, a)| a))
-        .sum::<f64>()
-        / r.per_edge.len() as f64;
     println!(
         "{tag:<34} comm {comm:>5.1} %   mean power {power:>6.3} mW   final acc {:>5.1} %   (teacher served {}, channel failures {})",
         acc * 100.0,
@@ -66,30 +98,46 @@ fn report(tag: &str, sc: Scenario, workers: usize) -> anyhow::Result<(f64, f64)>
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    let flag_val = |name: &str| -> Option<&String> {
+        args.iter().position(|a| a == name).map(|i| args.get(i + 1)).unwrap_or(None)
+    };
     // 0 (or omitting the flag) means auto, per the repo-wide convention
     let workers = odl_har::util::auto_workers(match args.iter().position(|a| a == "--workers") {
-        Some(i) => args
-            .get(i + 1)
+        Some(_) => flag_val("--workers")
             .and_then(|v| v.parse().ok())
             .ok_or_else(|| anyhow::anyhow!("--workers requires a number"))?,
         None => 0,
     });
+    let n_edges: usize = match args.iter().position(|a| a == "--edges") {
+        Some(_) => flag_val("--edges")
+            .and_then(|v| v.parse().ok())
+            .filter(|&n| n > 0)
+            .ok_or_else(|| anyhow::anyhow!("--edges requires a positive number"))?,
+        None => 8,
+    };
+    let metrics = match flag_val("--metrics").map(String::as_str) {
+        None | Some("full") => MetricsMode::Full,
+        Some("aggregate") => MetricsMode::Aggregate,
+        Some(other) => anyhow::bail!("--metrics must be full or aggregate, got {other}"),
+    };
     println!(
-        "fleet: 8 edges, 1 teacher, BLE loss 5 %, drift at t=200 s, horizon 900 s ({workers} workers)\n"
+        "fleet: {n_edges} edges, 1 teacher, BLE loss 5 %, drift at t=200 s, horizon 900 s \
+         ({workers} workers, {} metrics)\n",
+        metrics.name()
     );
     let (comm_off, p_off) = report(
         "no pruning (theta = 1)",
-        scenario(Some(1.0), DetectorKind::Oracle),
+        scenario(n_edges, metrics, Some(1.0), DetectorKind::Oracle),
         workers,
     )?;
     let (comm_auto, p_auto) = report(
         "auto-theta pruning",
-        scenario(None, DetectorKind::Oracle),
+        scenario(n_edges, metrics, None, DetectorKind::Oracle),
         workers,
     )?;
     report(
         "auto-theta + organic detection",
-        scenario(None, DetectorKind::Centroid),
+        scenario(n_edges, metrics, None, DetectorKind::Centroid),
         workers,
     )?;
     println!(

@@ -1,20 +1,33 @@
 //! Serve-path benchmark: an in-process `coordinator::serve` server on an
-//! ephemeral port, one client streaming the deterministic loadgen event
-//! stream over real TCP, measuring end-to-end request→decision latency
-//! (p50/p99) and sustained throughput (events/s).
+//! ephemeral port, driven over real loopback TCP at three operating
+//! points:
+//!
+//! 1. **1 client, unbatched** — the v1 point: end-to-end request→decision
+//!    latency (p50/p99) and sustained throughput (events/s), with the
+//!    same top-level JSON keys as `bench_serve/v1` baselines.
+//! 2. **64 clients** — connection scaling on the shard worker pool, both
+//!    unbatched and with `events` frames of 16 (`--batch 16` wire shape).
+//! 3. **64 clients, thread-per-connection** — the pre-pool execution
+//!    model (`thread_per_conn`), measured in-bench as the baseline the
+//!    batched pool must beat: `batch_speedup_64c` is the ratio and is
+//!    gated at ≥ 2× by `scripts/bench_check.sh`.
 //!
 //! Before timing it asserts the service contracts: every event is
 //! applied exactly once (`summary.events == n`, and every applied event
-//! either trained or was pruned), and the drained server exits cleanly.
+//! either trained or was pruned), the drained server exits cleanly, and
+//! the pool points keep the server's thread count ≤ workers + 2
+//! (measured via /proc/self/status, Linux only).
 //!
 //! Results go to `BENCH_serve.json` (`ODL_BENCH_SERVE_JSON` overrides);
 //! `scripts/bench_check.sh` gates `throughput_eps` (higher is better)
-//! and `p99_ms` (lower is better) against the rotated baseline.
+//! and `p99_ms` (lower is better) for the 1-client and 64-client points,
+//! plus the absolute `batch_speedup_64c` floor. Peak RSS rides along via
+//! `util::bench::peak_rss_bytes`.
 
-use odl_har::coordinator::proto::{bits_of, Request, Response};
+use odl_har::coordinator::proto::{bits_of, EventItem, Request, Response};
 use odl_har::coordinator::serve::{gen_events, serve_with, ServeConfig};
 use odl_har::data::SynthConfig;
-use odl_har::util::bench::fast_mode;
+use odl_har::util::bench::{fast_mode, peak_rss_bytes};
 use odl_har::util::faults::FaultPlan;
 use odl_har::util::json::{obj, Json};
 use std::io::{BufRead, BufReader, Write};
@@ -41,6 +54,176 @@ fn percentile_ms(sorted: &[f64], p: f64) -> f64 {
     sorted[idx] * 1e3
 }
 
+/// Live thread count of this process (0 when /proc is unavailable).
+fn current_threads() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("Threads:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(0)
+}
+
+struct Point {
+    clients: usize,
+    batch: usize,
+    events: usize,
+    total_s: f64,
+    throughput_eps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+impl Point {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("clients", Json::Num(self.clients as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("events", Json::Num(self.events as f64)),
+            ("total_s", Json::Num(self.total_s)),
+            ("throughput_eps", Json::Num(self.throughput_eps)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+        ])
+    }
+}
+
+/// One bench client: hello, stream `events` in frames of `batch`
+/// (plain `event` requests when batch == 1), bye. Returns the per-frame
+/// round-trip latencies.
+fn drive_client(addr: std::net::SocketAddr, cfg: &ServeConfig, name: &str, n: usize, batch: usize) -> Vec<f64> {
+    let events = gen_events(&cfg.synth, cfg.data_seed(), cfg.seed, name, n);
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).expect("nodelay");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    send(&mut stream, &Request::Hello { client: name.into() });
+    match recv(&mut reader) {
+        Response::Welcome { restored, .. } => assert!(!restored, "fresh server"),
+        other => panic!("expected welcome, got {other:?}"),
+    }
+    let mut latencies = Vec::with_capacity(n / batch.max(1) + 1);
+    let mut next = 0usize;
+    while next < events.len() {
+        let k = batch.max(1).min(events.len() - next);
+        let t = Instant::now();
+        if k == 1 {
+            let (x, label) = &events[next];
+            send(
+                &mut stream,
+                &Request::Event { seq: next as u64, label: *label, x_bits: bits_of(x) },
+            );
+            match recv(&mut reader) {
+                Response::Decision { seq, .. } => {
+                    assert_eq!(seq, next as u64, "acks must come back in order")
+                }
+                other => panic!("expected a decision for seq {next}, got {other:?}"),
+            }
+        } else {
+            let items = (next..next + k)
+                .map(|i| EventItem {
+                    seq: i as u64,
+                    label: events[i].1,
+                    x_bits: bits_of(&events[i].0),
+                })
+                .collect();
+            send(&mut stream, &Request::Events { items });
+            match recv(&mut reader) {
+                Response::Decisions { items } => {
+                    assert_eq!(items.len(), k, "one outcome per frame element")
+                }
+                other => panic!("expected decisions for seqs {next}.., got {other:?}"),
+            }
+        }
+        latencies.push(t.elapsed().as_secs_f64());
+        next += k;
+    }
+    send(&mut stream, &Request::Bye);
+    latencies
+}
+
+/// Run one operating point against a fresh server and tear it down.
+fn run_point(
+    base: &ServeConfig,
+    n_clients: usize,
+    batch: usize,
+    thread_per_conn: bool,
+    events_per_client: usize,
+) -> Point {
+    let mut cfg = base.clone();
+    cfg.max_clients = (n_clients * 2).max(8);
+    cfg.thread_per_conn = thread_per_conn;
+    let n_total = n_clients * events_per_client;
+
+    let threads_before = current_threads();
+    let (tx, rx) = mpsc::channel();
+    let server_cfg = cfg.clone();
+    let server = std::thread::spawn(move || {
+        serve_with(&server_cfg, &FaultPlan::default(), move |addr| {
+            tx.send(addr).expect("address handoff");
+        })
+        .expect("serve failed")
+    });
+    let addr = rx.recv().expect("server never became ready");
+    // let the shard pool finish spawning before the thread census
+    std::thread::sleep(std::time::Duration::from_millis(50));
+
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n_clients)
+            .map(|i| {
+                let cfg = &cfg;
+                scope.spawn(move || {
+                    drive_client(addr, cfg, &format!("bench-edge-{i}"), events_per_client, batch)
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("bench client")).collect()
+    });
+    let total_s = t0.elapsed().as_secs_f64();
+
+    // the pool's thread count is fixed at startup: with the bench's own
+    // client threads joined, the census is the server contribution alone
+    let threads_after = current_threads();
+    if !thread_per_conn && threads_before > 0 && threads_after > 0 {
+        let workers = odl_har::util::auto_workers(cfg.workers).max(1);
+        let delta = threads_after.saturating_sub(threads_before);
+        assert!(
+            delta <= workers + 2,
+            "pool point grew {delta} threads; the cap is workers ({workers}) + 2"
+        );
+    }
+
+    let mut drain = TcpStream::connect(addr).expect("drain connect");
+    let mut drain_reader = BufReader::new(drain.try_clone().expect("clone drain"));
+    send(&mut drain, &Request::Shutdown);
+    match recv(&mut drain_reader) {
+        Response::Draining => {}
+        other => panic!("expected draining, got {other:?}"),
+    }
+    drop(drain);
+    let summary = server.join().expect("server thread");
+    assert_eq!(summary.events, n_total as u64, "every event applied exactly once");
+    assert_eq!(
+        summary.trained + summary.skipped,
+        summary.events,
+        "every applied event either trained or was pruned"
+    );
+
+    latencies.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    Point {
+        clients: n_clients,
+        batch,
+        events: n_total,
+        total_s,
+        throughput_eps: n_total as f64 / total_s.max(1e-9),
+        p50_ms: percentile_ms(&latencies, 0.50),
+        p99_ms: percentile_ms(&latencies, 0.99),
+    }
+}
+
 fn main() {
     let cfg = ServeConfig {
         n_hidden: 16,
@@ -55,84 +238,65 @@ fn main() {
         },
         ..ServeConfig::default()
     };
-    let n = if fast_mode() { 500 } else { 2000 };
-    let events = gen_events(&cfg.synth, cfg.data_seed(), cfg.seed, "bench-edge", n);
-    println!("serve bench: {n} events over loopback TCP, n_hidden {}", cfg.n_hidden);
+    let n1 = if fast_mode() { 500 } else { 2000 };
+    let per_client = if fast_mode() { 32 } else { 160 };
+    println!(
+        "serve bench: 1x{n1} + 3x(64x{per_client}) events over loopback TCP, n_hidden {}",
+        cfg.n_hidden
+    );
 
-    let (tx, rx) = mpsc::channel();
-    let server_cfg = cfg.clone();
-    let server = std::thread::spawn(move || {
-        serve_with(&server_cfg, &FaultPlan::default(), move |addr| {
-            tx.send(addr).expect("address handoff");
-        })
-        .expect("serve failed")
-    });
-    let addr = rx.recv().expect("server never became ready");
+    let single = run_point(&cfg, 1, 1, false, n1);
+    println!(
+        "  1 client          -> {:.0} events/s, p50 {:.3} ms, p99 {:.3} ms",
+        single.throughput_eps, single.p50_ms, single.p99_ms
+    );
+    let c64 = run_point(&cfg, 64, 1, false, per_client);
+    println!(
+        "  64 clients (pool) -> {:.0} events/s, p99 {:.3} ms",
+        c64.throughput_eps, c64.p99_ms
+    );
+    let c64_b16 = run_point(&cfg, 64, 16, false, per_client);
+    println!(
+        "  64 clients, batch 16 -> {:.0} events/s, p99 {:.3} ms",
+        c64_b16.throughput_eps, c64_b16.p99_ms
+    );
+    let c64_legacy = run_point(&cfg, 64, 1, true, per_client);
+    println!(
+        "  64 clients (thread-per-conn baseline) -> {:.0} events/s, p99 {:.3} ms",
+        c64_legacy.throughput_eps, c64_legacy.p99_ms
+    );
 
-    let mut stream = TcpStream::connect(addr).expect("connect");
-    stream.set_nodelay(true).expect("nodelay");
-    let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
-    send(&mut stream, &Request::Hello { client: "bench-edge".into() });
-    match recv(&mut reader) {
-        Response::Welcome { restored, .. } => assert!(!restored, "fresh server"),
-        other => panic!("expected welcome, got {other:?}"),
-    }
-
-    let mut latencies = Vec::with_capacity(events.len());
-    let t0 = Instant::now();
-    for (seq, (x, label)) in events.iter().enumerate() {
-        let req = Request::Event {
-            seq: seq as u64,
-            label: *label,
-            x_bits: bits_of(x),
-        };
-        let t = Instant::now();
-        send(&mut stream, &req);
-        match recv(&mut reader) {
-            Response::Decision { seq: got, .. } => {
-                assert_eq!(got, seq as u64, "acks must come back in order")
-            }
-            other => panic!("expected a decision for seq {seq}, got {other:?}"),
+    let batch_speedup_64c = c64_b16.throughput_eps / c64_legacy.throughput_eps.max(1e-9);
+    let rss = peak_rss_bytes();
+    println!(
+        "  -> batch 16 pool vs unbatched thread-per-conn at 64 clients: {batch_speedup_64c:.2}x \
+         (gate: >= 2.0), peak RSS {}",
+        match rss {
+            Some(b) => format!("{:.1} MiB", b as f64 / (1024.0 * 1024.0)),
+            None => "n/a".into(),
         }
-        latencies.push(t.elapsed().as_secs_f64());
-    }
-    let total_s = t0.elapsed().as_secs_f64();
-
-    send(&mut stream, &Request::Shutdown);
-    match recv(&mut reader) {
-        Response::Draining => {}
-        other => panic!("expected draining, got {other:?}"),
-    }
-    drop(stream);
-    let summary = server.join().expect("server thread");
-    assert_eq!(summary.events, n as u64, "every event applied exactly once");
-    assert_eq!(
-        summary.trained + summary.skipped,
-        summary.events,
-        "every applied event either trained or was pruned"
-    );
-    println!(
-        "  contracts hold: {} events = {} trained + {} skipped, clean drain",
-        summary.events, summary.trained, summary.skipped
     );
 
-    latencies.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-    let throughput_eps = n as f64 / total_s.max(1e-9);
-    let p50_ms = percentile_ms(&latencies, 0.50);
-    let p99_ms = percentile_ms(&latencies, 0.99);
-    println!(
-        "  -> {throughput_eps:.0} events/s, p50 {p50_ms:.3} ms, p99 {p99_ms:.3} ms over {total_s:.3} s"
-    );
-
-    let out = obj(vec![
-        ("schema", Json::Str("bench_serve/v1".into())),
+    let mut fields = vec![
+        ("schema", Json::Str("bench_serve/v2".into())),
         ("fast_mode", Json::Bool(fast_mode())),
-        ("events", Json::Num(n as f64)),
-        ("total_s", Json::Num(total_s)),
-        ("throughput_eps", Json::Num(throughput_eps)),
-        ("p50_ms", Json::Num(p50_ms)),
-        ("p99_ms", Json::Num(p99_ms)),
-    ]);
+        // the 1-client point keeps the v1 top-level keys, so rotated v1
+        // baselines stay comparable across the schema bump
+        ("events", Json::Num(single.events as f64)),
+        ("total_s", Json::Num(single.total_s)),
+        ("throughput_eps", Json::Num(single.throughput_eps)),
+        ("p50_ms", Json::Num(single.p50_ms)),
+        ("p99_ms", Json::Num(single.p99_ms)),
+        ("c64", c64.to_json()),
+        ("c64_b16", c64_b16.to_json()),
+        ("c64_legacy", c64_legacy.to_json()),
+        ("batch_speedup_64c", Json::Num(batch_speedup_64c)),
+    ];
+    if let Some(b) = rss {
+        // best-effort (absent without procfs); informational, not gated
+        fields.push(("peak_rss_bytes", Json::Num(b as f64)));
+    }
+    let out = obj(fields);
     let path =
         std::env::var("ODL_BENCH_SERVE_JSON").unwrap_or_else(|_| "BENCH_serve.json".into());
     match std::fs::write(&path, out.to_string()) {

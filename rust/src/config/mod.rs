@@ -464,6 +464,8 @@ const SERVE_KEYS: &[&str] = &[
     "read_timeout_ms",
     "idle_timeout_ms",
     "retry_after_ms",
+    "workers",
+    "max_batch",
     "warmup",
     "snapshot",
 ];
@@ -479,6 +481,8 @@ const SERVE_KEYS: &[&str] = &[
 /// read_timeout_ms = 250      # socket deadline granularity
 /// idle_timeout_ms = 30000    # disconnect stalled clients
 /// retry_after_ms = 50        # back-off hint in busy/shed responses
+/// workers = 0                # shard worker threads (0 = one per core)
+/// max_batch = 16             # largest `events` frame accepted
 /// warmup = 128               # pruning warmup (default: warmup_for(n_hidden))
 /// snapshot = "serve.snap.json"
 /// ```
@@ -528,6 +532,14 @@ pub fn serve_from_str(text: &str) -> Result<ServeConfig> {
     }
     if let Some(v) = uint("retry_after_ms")? {
         cfg.retry_after_ms = v;
+    }
+    if let Some(v) = uint("workers")? {
+        // 0 = one shard worker per available core
+        cfg.workers = v as usize;
+    }
+    if let Some(v) = uint("max_batch")? {
+        ensure!(v >= 1, "serve.max_batch must be ≥ 1");
+        cfg.max_batch = v as usize;
     }
     if let Some(v) = uint("warmup")? {
         cfg.warmup = Some(v as usize);
@@ -857,12 +869,16 @@ record_pca = true
         assert_eq!(cfg.synth.n_classes, 4);
         assert_eq!(cfg.bind, "127.0.0.1:0");
         assert_eq!(cfg.max_clients, 8);
+        assert_eq!(cfg.workers, 0, "default: one shard worker per core");
+        assert_eq!(cfg.max_batch, 16);
+        assert!(!cfg.thread_per_conn, "the legacy engine is bench-only, never config-on");
         assert!(cfg.warmup.is_none());
         assert!(cfg.snapshot.is_none());
 
         let cfg = serve_from_str(
             "[serve]\nbind = \"0.0.0.0:4710\"\nmax_clients = 3\nqueue_depth = 16\n\
              read_timeout_ms = 100\nidle_timeout_ms = 5000\nretry_after_ms = 25\n\
+             workers = 2\nmax_batch = 8\n\
              warmup = 12\nsnapshot = \"out/serve.snap.json\"\n",
         )
         .unwrap();
@@ -872,6 +888,8 @@ record_pca = true
         assert_eq!(cfg.read_timeout_ms, 100);
         assert_eq!(cfg.idle_timeout_ms, 5000);
         assert_eq!(cfg.retry_after_ms, 25);
+        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.max_batch, 8);
         assert_eq!(cfg.warmup, Some(12));
         assert_eq!(
             cfg.snapshot.as_deref(),
@@ -892,6 +910,12 @@ record_pca = true
         assert!(serve_from_str("[serve]\nbind = 4710\n").is_err());
         assert!(serve_from_str("[serve]\nsnapshot = true\n").is_err());
         assert!(serve_from_str("[serve]\nwarmup = 1.5\n").is_err());
+        assert!(serve_from_str("[serve]\nworkers = \"auto\"\n").is_err());
+        assert!(serve_from_str("[serve]\nworkers = -1\n").is_err());
+        assert!(serve_from_str("[serve]\nmax_batch = 0\n").is_err());
+        assert!(serve_from_str("[serve]\nmax_batch = 1.5\n").is_err());
+        // workers = 0 is valid (auto), unlike max_clients = 0
+        assert_eq!(serve_from_str("[serve]\nworkers = 0\n").unwrap().workers, 0);
     }
 
     #[test]

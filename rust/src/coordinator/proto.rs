@@ -26,14 +26,24 @@
 //!                                          "p1":bits,"p2":bits[,"label":L]}
 //!                                         {"type":"shed","seq":N,
 //!                                          "retry_after_ms":MS}
+//! {"type":"events","events":[             {"type":"decisions","decisions":
+//!  {"seq":N,"label":L,"x":[bits,…]},…]}    [{decision|shed},…]}
 //! {"type":"ping"}                         {"type":"pong"}
 //! {"type":"bye"}                          (close)
 //! {"type":"shutdown"}                     {"type":"draining"}
 //!                                         {"type":"error","reason":STR}
 //! ```
+//!
+//! The batched frame (`events` → `decisions`) amortizes one round-trip
+//! (and one fault site) over up to K in-order events for one client. The
+//! server runs the *same* per-element watermark rules as the single-event
+//! path — duplicates are acknowledged, gaps shed — and answers with one
+//! `decisions` array carrying a `decision`/`shed` element per event, in
+//! frame order. A frame larger than the server's `max_batch` is refused
+//! with `error` and nothing in it is applied.
 
 use crate::util::json::{obj, Json};
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 /// Protocol / snapshot schema tag.
 pub const PROTO_VERSION: &str = "odl-har-serve/v1";
@@ -78,6 +88,15 @@ impl DecisionAction {
     }
 }
 
+/// One element of a batched `events` frame — the same fields as a
+/// single `event` request, without the `type` tag.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EventItem {
+    pub seq: u64,
+    pub label: usize,
+    pub x_bits: Vec<u32>,
+}
+
 /// A client → server message.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
@@ -86,6 +105,9 @@ pub enum Request {
     /// One sensed sample: client-assigned sequence number, ground-truth
     /// label (feeds the oracle teacher), f32-bit feature vector.
     Event { seq: u64, label: usize, x_bits: Vec<u32> },
+    /// Up to `max_batch` in-order events in one frame, each applied under
+    /// the single-event watermark rules; answered by one `decisions`.
+    Events { items: Vec<EventItem> },
     /// Liveness probe.
     Ping,
     /// Orderly goodbye — the server keeps the client's state in memory.
@@ -111,6 +133,32 @@ impl Request {
                     Json::Arr(x_bits.iter().map(|&b| Json::Num(b as f64)).collect()),
                 ),
             ]),
+            Request::Events { items } => obj(vec![
+                ("type", Json::Str("events".into())),
+                (
+                    "events",
+                    Json::Arr(
+                        items
+                            .iter()
+                            .map(|it| {
+                                obj(vec![
+                                    ("seq", Json::Num(it.seq as f64)),
+                                    ("label", Json::Num(it.label as f64)),
+                                    (
+                                        "x",
+                                        Json::Arr(
+                                            it.x_bits
+                                                .iter()
+                                                .map(|&b| Json::Num(b as f64))
+                                                .collect(),
+                                        ),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
             Request::Ping => obj(vec![("type", Json::Str("ping".into()))]),
             Request::Bye => obj(vec![("type", Json::Str("bye".into()))]),
             Request::Shutdown => obj(vec![("type", Json::Str("shutdown".into()))]),
@@ -133,17 +181,20 @@ impl Request {
                     .context("hello missing 'client'")?
                     .to_string(),
             },
-            "event" => Request::Event {
-                seq: j
-                    .get("seq")
-                    .and_then(Json::as_usize)
-                    .context("event missing 'seq'")? as u64,
-                label: j
-                    .get("label")
-                    .and_then(Json::as_usize)
-                    .context("event missing 'label'")?,
-                x_bits: parse_bits(j.get("x").context("event missing 'x'")?)?,
-            },
+            "event" => {
+                let it = parse_event_item(&j)?;
+                Request::Event { seq: it.seq, label: it.label, x_bits: it.x_bits }
+            }
+            "events" => {
+                let arr = match j.get("events") {
+                    Some(Json::Arr(items)) => items,
+                    _ => bail!("events frame missing 'events' array"),
+                };
+                ensure!(!arr.is_empty(), "events frame must carry at least one event");
+                Request::Events {
+                    items: arr.iter().map(parse_event_item).collect::<Result<Vec<_>>>()?,
+                }
+            }
             "ping" => Request::Ping,
             "bye" => Request::Bye,
             "shutdown" => Request::Shutdown,
@@ -176,6 +227,10 @@ pub enum Response {
     /// Backpressure: `seq` is more than the pipelining window ahead of
     /// the applied watermark — deterministically refused, retry later.
     Shed { seq: u64, retry_after_ms: u64 },
+    /// The per-element outcomes of one batched `events` frame, in frame
+    /// order. Elements are restricted to `Decision` / `Shed` — the same
+    /// two outcomes the single-event path can produce.
+    Decisions { items: Vec<Response> },
     /// Liveness reply.
     Pong,
     /// The server is draining: no further requests will be served.
@@ -187,6 +242,10 @@ pub enum Response {
 impl Response {
     /// One JSONL line (no trailing newline).
     pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    fn to_json(&self) -> Json {
         match self {
             Response::Welcome { client, restored, next_seq } => obj(vec![
                 ("type", Json::Str("welcome".into())),
@@ -217,6 +276,13 @@ impl Response {
                 ("seq", Json::Num(*seq as f64)),
                 ("retry_after_ms", Json::Num(*retry_after_ms as f64)),
             ]),
+            Response::Decisions { items } => obj(vec![
+                ("type", Json::Str("decisions".into())),
+                (
+                    "decisions",
+                    Json::Arr(items.iter().map(|r| r.to_json()).collect()),
+                ),
+            ]),
             Response::Pong => obj(vec![("type", Json::Str("pong".into()))]),
             Response::Draining => obj(vec![("type", Json::Str("draining".into()))]),
             Response::Error { reason } => obj(vec![
@@ -224,12 +290,15 @@ impl Response {
                 ("reason", Json::Str(reason.clone())),
             ]),
         }
-        .to_string()
     }
 
     /// Parse one response line.
     pub fn parse(line: &str) -> Result<Response> {
         let j = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response JSON: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    fn from_json(j: &Json) -> Result<Response> {
         let ty = j
             .get("type")
             .and_then(Json::as_str)
@@ -287,6 +356,24 @@ impl Response {
                     .and_then(Json::as_usize)
                     .context("shed missing 'retry_after_ms'")? as u64,
             },
+            "decisions" => {
+                let arr = match j.get("decisions") {
+                    Some(Json::Arr(items)) => items,
+                    _ => bail!("decisions frame missing 'decisions' array"),
+                };
+                let items = arr
+                    .iter()
+                    .map(|e| {
+                        let r = Response::from_json(e)?;
+                        ensure!(
+                            matches!(r, Response::Decision { .. } | Response::Shed { .. }),
+                            "decisions elements must be decision or shed"
+                        );
+                        Ok(r)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Response::Decisions { items }
+            }
             "pong" => Response::Pong,
             "draining" => Response::Draining,
             "error" => Response::Error {
@@ -299,6 +386,20 @@ impl Response {
             other => bail!("unknown response type '{other}'"),
         })
     }
+}
+
+fn parse_event_item(j: &Json) -> Result<EventItem> {
+    Ok(EventItem {
+        seq: j
+            .get("seq")
+            .and_then(Json::as_usize)
+            .context("event missing 'seq'")? as u64,
+        label: j
+            .get("label")
+            .and_then(Json::as_usize)
+            .context("event missing 'label'")?,
+        x_bits: parse_bits(j.get("x").context("event missing 'x'")?)?,
+    })
 }
 
 fn parse_bits(j: &Json) -> Result<Vec<u32>> {
@@ -397,6 +498,67 @@ mod tests {
         assert!(Response::parse("").is_err());
         // event with a non-integer bit pattern is refused
         assert!(Request::parse("{\"type\":\"event\",\"seq\":1,\"label\":0,\"x\":[1.5]}").is_err());
+    }
+
+    #[test]
+    fn batched_frames_roundtrip_through_lines() {
+        let req = Request::Events {
+            items: vec![
+                EventItem { seq: 7, label: 1, x_bits: bits_of(&[0.5, -2.0]) },
+                EventItem { seq: 8, label: 0, x_bits: bits_of(&[1.0e-3, 4.0]) },
+            ],
+        };
+        let line = req.to_line();
+        assert!(!line.contains('\n'));
+        assert_eq!(Request::parse(&line).unwrap(), req);
+
+        let resp = Response::Decisions {
+            items: vec![
+                Response::Decision {
+                    seq: 7,
+                    action: DecisionAction::Trained,
+                    class: 2,
+                    p1_bits: 0.625f32.to_bits(),
+                    p2_bits: 0.25f32.to_bits(),
+                    label: Some(1),
+                },
+                Response::Decision {
+                    seq: 3,
+                    action: DecisionAction::Duplicate,
+                    class: 0,
+                    p1_bits: 0,
+                    p2_bits: 0,
+                    label: None,
+                },
+                Response::Shed { seq: 8, retry_after_ms: 5 },
+            ],
+        };
+        let line = resp.to_line();
+        assert!(!line.contains('\n'));
+        assert_eq!(Response::parse(&line).unwrap(), resp);
+    }
+
+    #[test]
+    fn malformed_batched_frames_are_rejected() {
+        // empty batch
+        assert!(Request::parse("{\"type\":\"events\",\"events\":[]}").is_err());
+        // missing / non-array events field
+        assert!(Request::parse("{\"type\":\"events\"}").is_err());
+        assert!(Request::parse("{\"type\":\"events\",\"events\":3}").is_err());
+        // one bad element poisons the whole frame
+        assert!(Request::parse(
+            "{\"type\":\"events\",\"events\":[{\"seq\":1,\"label\":0,\"x\":[12]},{\"seq\":2}]}"
+        )
+        .is_err());
+        // decisions arrays may only carry decision/shed elements
+        assert!(Response::parse("{\"type\":\"decisions\",\"decisions\":[{\"type\":\"pong\"}]}")
+            .is_err());
+        assert!(Response::parse("{\"type\":\"decisions\",\"decisions\":7}").is_err());
+        // nested decisions inside decisions is out of protocol too
+        assert!(Response::parse(
+            "{\"type\":\"decisions\",\"decisions\":[{\"type\":\"decisions\",\"decisions\":[]}]}"
+        )
+        .is_err());
     }
 
     #[test]

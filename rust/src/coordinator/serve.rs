@@ -43,7 +43,7 @@
 //! the client's; the serve entry points bind their end themselves, so
 //! callers pass the parsed plan straight through.
 
-use crate::coordinator::proto::{bits_of, DecisionAction, Request, Response};
+use crate::coordinator::proto::{bits_of, DecisionAction, EventItem, Request, Response};
 use crate::coordinator::sweep::{sync_parent_dir, sync_writer};
 use crate::coordinator::teacher::Teacher;
 use crate::data::synth::{SynthConfig, SynthHar};
@@ -102,6 +102,18 @@ pub struct ServeConfig {
     pub idle_timeout_ms: u64,
     /// Suggested client back-off carried by `busy` and `shed`.
     pub retry_after_ms: u64,
+    /// Shard worker threads driving the admitted connections (0 = one
+    /// per available core). Connections are assigned round-robin; each
+    /// worker runs a readiness loop over its own set, so 64 clients cost
+    /// `workers` threads, not 64.
+    pub workers: usize,
+    /// Largest `events` frame the server accepts (elements per batched
+    /// request); bigger frames are refused whole with `error`.
+    pub max_batch: usize,
+    /// Bench-only escape hatch: the pre-pool execution model, one OS
+    /// thread per admitted connection. Not exposed via TOML or CLI —
+    /// `bench_serve` uses it as the in-bench scaling baseline.
+    pub thread_per_conn: bool,
     /// Pruning warmup override (None = `warmup_for(n_hidden)`).
     pub warmup: Option<usize>,
     /// Snapshot path: restored at startup if present, written on drain.
@@ -129,6 +141,9 @@ impl Default for ServeConfig {
             read_timeout_ms: 250,
             idle_timeout_ms: 30_000,
             retry_after_ms: 50,
+            workers: 0,
+            max_batch: 16,
+            thread_per_conn: false,
             warmup: None,
             snapshot: None,
             seed: 1,
@@ -178,6 +193,8 @@ pub struct ServeSummary {
     pub busy_rejections: u64,
     pub connections: u64,
     pub restored: bool,
+    /// Shard workers the pool ran with (0 = legacy thread-per-connection).
+    pub workers: usize,
 }
 
 impl ServeSummary {
@@ -194,6 +211,7 @@ impl ServeSummary {
             ("busy_rejections", Json::Num(self.busy_rejections as f64)),
             ("connections", Json::Num(self.connections as f64)),
             ("restored", Json::Bool(self.restored)),
+            ("workers", Json::Num(self.workers as f64)),
         ])
     }
 }
@@ -674,7 +692,19 @@ pub fn serve_with<F: FnOnce(SocketAddr)>(
         resp_idx: AtomicUsize::new(0),
     };
 
+    let n_workers =
+        if cfg.thread_per_conn { 0 } else { crate::util::auto_workers(cfg.workers).max(1) };
     let accept_res: Result<()> = std::thread::scope(|scope| {
+        // the shard pool: each worker owns a disjoint set of connections
+        // as nonblocking streams and drives them in a readiness loop
+        let mut senders: Vec<std::sync::mpsc::Sender<TcpStream>> = Vec::new();
+        for _ in 0..n_workers {
+            let (tx, rx) = std::sync::mpsc::channel::<TcpStream>();
+            senders.push(tx);
+            let (sh, cf, pl, fp) = (&shared, cfg, &pool, &plan);
+            scope.spawn(move || worker_loop(sh, cf, pl, fp, &rx));
+        }
+        let mut rr = 0usize;
         loop {
             if shared.draining.load(Ordering::SeqCst) {
                 break;
@@ -688,18 +718,28 @@ pub fn serve_with<F: FnOnce(SocketAddr)>(
                     }
                     shared.active.fetch_add(1, Ordering::SeqCst);
                     shared.connections.fetch_add(1, Ordering::Relaxed);
-                    let (sh, cf, pl, fp) = (&shared, cfg, &pool, &plan);
-                    scope.spawn(move || {
-                        let _ = handle_conn(sh, cf, pl, fp, stream);
-                        sh.active.fetch_sub(1, Ordering::SeqCst);
-                    });
+                    if senders.is_empty() {
+                        // bench-only legacy model: one thread per connection
+                        let (sh, cf, pl, fp) = (&shared, cfg, &pool, &plan);
+                        scope.spawn(move || {
+                            let _ = handle_conn(sh, cf, pl, fp, stream);
+                            sh.active.fetch_sub(1, Ordering::SeqCst);
+                        });
+                    } else {
+                        // round-robin shard assignment; a send can only
+                        // fail if the worker died, which aborts the run
+                        senders[rr % senders.len()]
+                            .send(stream)
+                            .expect("shard worker alive");
+                        rr += 1;
+                    }
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(ms(5));
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
                 Err(e) => {
-                    // release in-flight handlers before reporting: they
+                    // release in-flight workers before reporting: they
                     // poll the drain flag, not the listener
                     shared.draining.store(true, Ordering::SeqCst);
                     return Err(e).context("accepting connection");
@@ -707,8 +747,10 @@ pub fn serve_with<F: FnOnce(SocketAddr)>(
             }
         }
         Ok(())
-        // scope exit = the drain barrier: every in-flight handler sees the
-        // draining flag within one read-timeout tick and finishes
+        // dropping the senders (closure exit) tells every worker no more
+        // connections are coming; scope exit = the drain barrier: workers
+        // and legacy handlers see the draining flag within one readiness
+        // tick, flush their goodbyes, and finish
     });
     accept_res?;
 
@@ -724,6 +766,7 @@ pub fn serve_with<F: FnOnce(SocketAddr)>(
         busy_rejections: shared.busy_rejections.load(Ordering::Relaxed),
         connections: shared.connections.load(Ordering::Relaxed),
         restored,
+        workers: n_workers,
         ..ServeSummary::default()
     };
     for st in clients.values() {
@@ -746,6 +789,218 @@ fn reject_busy(mut stream: TcpStream, cfg: &ServeConfig, shared: &Shared, plan: 
     let mut idx = shared.resp_idx.fetch_add(1, Ordering::Relaxed);
     let line = Response::Busy { retry_after_ms: cfg.retry_after_ms }.to_line();
     let _ = send_line(&mut stream, &line, plan, &mut idx);
+}
+
+// ---------------------------------------------------------------------
+// The shard worker pool: each worker drives its own set of nonblocking
+// connections through per-connection protocol state machines, so N
+// workers serve any number of admitted clients.
+// ---------------------------------------------------------------------
+
+/// Cap on protocol lines processed per connection per readiness pass —
+/// a firehosing client makes progress but cannot starve its shardmates.
+const LINES_PER_PASS: usize = 32;
+
+/// One admitted connection's state machine inside a shard worker.
+struct Conn {
+    stream: TcpStream,
+    reader: LineReader,
+    /// Bytes enqueued for the peer but not yet accepted by the socket.
+    out: Vec<u8>,
+    /// The client name once `hello` registered it.
+    hello: Option<String>,
+    /// Last time a complete request arrived — the idle deadline's anchor.
+    idle: Instant,
+    /// Goodbye state: flush `out`, then close (entered on bye/draining).
+    closing: Option<Instant>,
+}
+
+fn adopt_conn(cfg: &ServeConfig, stream: TcpStream) -> Option<Conn> {
+    stream.set_nonblocking(true).ok()?;
+    let _ = stream.set_nodelay(true);
+    Some(Conn {
+        stream,
+        reader: LineReader::new(cfg.queue_depth.max(1) * 1024),
+        out: Vec::new(),
+        hello: None,
+        idle: Instant::now(),
+        closing: None,
+    })
+}
+
+/// Serialize one response into the connection's output queue, applying
+/// the server end's fault schedule exactly as the per-connection engine's
+/// `send_line` did: one response = one global fault-site index. Returns
+/// `false` when the connection must be torn down (a `close` fault).
+fn enqueue_response(shared: &Shared, plan: &FaultPlan, conn: &mut Conn, resp: &Response) -> bool {
+    let idx = shared.resp_idx.fetch_add(1, Ordering::Relaxed);
+    let mut bytes = resp.to_line().into_bytes();
+    bytes.push(b'\n');
+    if !plan.is_noop() {
+        match plan.net_fault(idx) {
+            Some(FaultKind::Kill) => faults::die("net kill site"),
+            Some(FaultKind::Drop) => return true,
+            Some(FaultKind::Delay) => std::thread::sleep(ms(DELAY_FAULT_MS)),
+            Some(FaultKind::Close) => {
+                let _ = conn.stream.shutdown(Shutdown::Both);
+                return false;
+            }
+            Some(FaultKind::Garble) => garble(&mut bytes),
+            _ => {}
+        }
+    }
+    conn.out.extend_from_slice(&bytes);
+    true
+}
+
+/// Push queued bytes into the socket without blocking. `Ok(true)` when
+/// any byte moved; `Err` when the connection is dead.
+fn flush_out(conn: &mut Conn) -> std::io::Result<bool> {
+    let mut moved = false;
+    while !conn.out.is_empty() {
+        match conn.stream.write(&conn.out) {
+            Ok(0) => return Err(std::io::ErrorKind::WriteZero.into()),
+            Ok(n) => {
+                conn.out.drain(..n);
+                moved = true;
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                break;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(moved)
+}
+
+fn begin_close(cfg: &ServeConfig, conn: &mut Conn) {
+    // grace period to flush the goodbye — the legacy engine's write timeout
+    conn.closing = Some(Instant::now() + ms(cfg.read_timeout_ms.max(50)));
+}
+
+/// One readiness pass over one connection. Returns `true` when the
+/// connection is finished (peer gone, deadline hit, or goodbye flushed);
+/// sets `progressed` when any byte moved in either direction.
+fn service_conn(
+    shared: &Shared,
+    cfg: &ServeConfig,
+    pool: &Dataset,
+    plan: &FaultPlan,
+    conn: &mut Conn,
+    progressed: &mut bool,
+) -> bool {
+    if shared.draining.load(Ordering::SeqCst) && conn.closing.is_none() {
+        if !enqueue_response(shared, plan, conn, &Response::Draining) {
+            return true;
+        }
+        begin_close(cfg, conn);
+    }
+    match flush_out(conn) {
+        Ok(moved) => *progressed |= moved,
+        Err(_) => return true,
+    }
+    if let Some(deadline) = conn.closing {
+        return conn.out.is_empty() || Instant::now() >= deadline;
+    }
+    for _ in 0..LINES_PER_PASS {
+        match conn.reader.read_line(&mut conn.stream) {
+            Err(_) | Ok(ReadOutcome::Eof) => return true,
+            Ok(ReadOutcome::TimedOut) => {
+                // no complete line ready: the idle deadline is the only
+                // way a silent client leaves the shard
+                if conn.idle.elapsed() >= ms(cfg.idle_timeout_ms.max(1)) {
+                    return true;
+                }
+                break;
+            }
+            Ok(ReadOutcome::Line(line)) => {
+                if line.is_empty() {
+                    continue;
+                }
+                *progressed = true;
+                conn.idle = Instant::now();
+                let resp = match Request::parse(&line) {
+                    Err(e) => Some(Response::Error { reason: format!("{e:#}") }),
+                    Ok(req) => handle_request(shared, cfg, pool, req, &mut conn.hello),
+                };
+                let Some(resp) = resp else {
+                    begin_close(cfg, conn); // bye: flush what's queued, close
+                    break;
+                };
+                let last = matches!(resp, Response::Draining);
+                if !enqueue_response(shared, plan, conn, &resp) {
+                    return true;
+                }
+                if last {
+                    begin_close(cfg, conn);
+                    break;
+                }
+            }
+        }
+    }
+    match flush_out(conn) {
+        Ok(moved) => *progressed |= moved,
+        Err(_) => return true,
+    }
+    if let Some(deadline) = conn.closing {
+        return conn.out.is_empty() || Instant::now() >= deadline;
+    }
+    false
+}
+
+/// One shard worker: adopt connections round-robined to this shard, run
+/// a readiness pass over each, sleep a tick when nothing moved. Exits
+/// when the acceptor is done (channel disconnected) and the shard is
+/// empty — with the draining flag set, every pass drives connections to
+/// their goodbye.
+fn worker_loop(
+    shared: &Shared,
+    cfg: &ServeConfig,
+    pool: &Dataset,
+    plan: &FaultPlan,
+    rx: &std::sync::mpsc::Receiver<TcpStream>,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut acceptor_done = false;
+    loop {
+        loop {
+            match rx.try_recv() {
+                Ok(stream) => match adopt_conn(cfg, stream) {
+                    Some(conn) => conns.push(conn),
+                    None => {
+                        shared.active.fetch_sub(1, Ordering::SeqCst);
+                    }
+                },
+                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    acceptor_done = true;
+                    break;
+                }
+            }
+        }
+        let mut progressed = false;
+        let mut i = 0;
+        while i < conns.len() {
+            if service_conn(shared, cfg, pool, plan, &mut conns[i], &mut progressed) {
+                conns.swap_remove(i);
+                shared.active.fetch_sub(1, Ordering::SeqCst);
+            } else {
+                i += 1;
+            }
+        }
+        if acceptor_done && conns.is_empty() {
+            return;
+        }
+        if !progressed {
+            std::thread::sleep(ms(1));
+        }
+    }
 }
 
 fn handle_conn(
@@ -798,6 +1053,56 @@ fn handle_conn(
     }
 }
 
+/// Shape checks an event must pass before it can touch client state.
+fn validate_item(pool: &Dataset, item: &EventItem) -> std::result::Result<(), String> {
+    if item.label >= pool.n_classes {
+        return Err(format!(
+            "label {} out of range (n_classes {})",
+            item.label, pool.n_classes
+        ));
+    }
+    if item.x_bits.len() != pool.n_features() {
+        return Err(format!(
+            "feature vector has {} entries, expected {}",
+            item.x_bits.len(),
+            pool.n_features()
+        ));
+    }
+    Ok(())
+}
+
+/// The watermark rules for one validated event — shared verbatim by the
+/// single-event and batched paths, so a batched element decides exactly
+/// as its unbatched twin would.
+fn decide_one(
+    shared: &Shared,
+    cfg: &ServeConfig,
+    pool: &Dataset,
+    st: &mut ClientState,
+    item: &EventItem,
+) -> Response {
+    if item.seq < st.next_seq {
+        // already applied: acknowledge, never re-train
+        shared.duplicates.fetch_add(1, Ordering::Relaxed);
+        Response::Decision {
+            seq: item.seq,
+            action: DecisionAction::Duplicate,
+            class: 0,
+            p1_bits: 0,
+            p2_bits: 0,
+            label: None,
+        }
+    } else if item.seq > st.next_seq {
+        // a gap: applying out of order would fork the trajectory —
+        // deterministically shed instead
+        shared.shed.fetch_add(1, Ordering::Relaxed);
+        Response::Shed { seq: item.seq, retry_after_ms: cfg.retry_after_ms }
+    } else {
+        let x: Vec<f32> = item.x_bits.iter().map(|&b| f32::from_bits(b)).collect();
+        apply_event(st, item.seq, &x, item.label, pool.n_classes)
+    }
+}
+
 /// Dispatch one parsed request; `None` means close the connection.
 fn handle_request(
     shared: &Shared,
@@ -826,42 +1131,38 @@ fn handle_request(
             let Some(name) = hello.as_ref() else {
                 return Some(Response::Error { reason: "event before hello".into() });
             };
-            if label >= pool.n_classes {
-                return Some(Response::Error {
-                    reason: format!("label {label} out of range (n_classes {})", pool.n_classes),
-                });
-            }
-            if x_bits.len() != pool.n_features() {
-                return Some(Response::Error {
-                    reason: format!(
-                        "feature vector has {} entries, expected {}",
-                        x_bits.len(),
-                        pool.n_features()
-                    ),
-                });
+            let item = EventItem { seq, label, x_bits };
+            if let Err(reason) = validate_item(pool, &item) {
+                return Some(Response::Error { reason });
             }
             let mut map = shared.clients.lock().expect("clients lock");
             let st = map.get_mut(name).expect("hello registered this client");
-            if seq < st.next_seq {
-                // already applied: acknowledge, never re-train
-                shared.duplicates.fetch_add(1, Ordering::Relaxed);
-                Some(Response::Decision {
-                    seq,
-                    action: DecisionAction::Duplicate,
-                    class: 0,
-                    p1_bits: 0,
-                    p2_bits: 0,
-                    label: None,
-                })
-            } else if seq > st.next_seq {
-                // a gap: applying out of order would fork the trajectory —
-                // deterministically shed instead
-                shared.shed.fetch_add(1, Ordering::Relaxed);
-                Some(Response::Shed { seq, retry_after_ms: cfg.retry_after_ms })
-            } else {
-                let x: Vec<f32> = x_bits.iter().map(|&b| f32::from_bits(b)).collect();
-                Some(apply_event(st, seq, &x, label, pool.n_classes))
+            Some(decide_one(shared, cfg, pool, st, &item))
+        }
+        Request::Events { items } => {
+            let Some(name) = hello.as_ref() else {
+                return Some(Response::Error { reason: "events before hello".into() });
+            };
+            let cap = cfg.max_batch.max(1);
+            if items.len() > cap {
+                return Some(Response::Error {
+                    reason: format!("batch of {} exceeds max_batch {cap}", items.len()),
+                });
             }
+            // validate the whole frame before applying any element: a
+            // malformed frame is refused whole, nothing in it is applied
+            for item in &items {
+                if let Err(reason) = validate_item(pool, item) {
+                    return Some(Response::Error { reason });
+                }
+            }
+            let mut map = shared.clients.lock().expect("clients lock");
+            let st = map.get_mut(name).expect("hello registered this client");
+            // each element runs the single-event watermark rules in frame
+            // order — in-order elements advance the watermark, so a whole
+            // in-order frame applies; duplicates ack, gaps shed
+            let out = items.iter().map(|item| decide_one(shared, cfg, pool, st, item)).collect();
+            Some(Response::Decisions { items: out })
         }
         Request::Ping => Some(Response::Pong),
         Request::Bye => None,
@@ -896,6 +1197,10 @@ pub struct LoadgenConfig {
     /// plus seeded jitter; mirrors the sweep supervisor's retire curve.
     pub backoff_base_ms: u64,
     pub backoff_cap_ms: u64,
+    /// Events per wire frame: 1 sends plain `event` requests; >1 fills
+    /// batched `events` frames from the stream. Must not exceed the
+    /// server's `max_batch` (the CLI clamps it against the shared config).
+    pub batch: usize,
     /// How long to wait for each response before resending.
     pub reply_timeout_ms: u64,
     /// Send `shutdown` (drain the server) after the last ack.
@@ -916,6 +1221,7 @@ impl Default for LoadgenConfig {
             retry_budget: 5,
             backoff_base_ms: 10,
             backoff_cap_ms: 400,
+            batch: 1,
             reply_timeout_ms: 500,
             send_shutdown: false,
             faults: FaultPlan::default(),
@@ -939,6 +1245,10 @@ pub struct LoadgenSummary {
     pub busy_waits: u64,
     pub shed_retries: u64,
     pub resends: u64,
+    /// Events per frame this run used (1 = unbatched).
+    pub batch: usize,
+    /// Batched `events` frames sent (0 when unbatched).
+    pub frames: u64,
     /// Outages survived (connect retries that eventually succeeded).
     pub offline_spells: u64,
     /// Events sitting in the local buffer when an outage began —
@@ -961,6 +1271,8 @@ impl LoadgenSummary {
             ("busy_waits", Json::Num(self.busy_waits as f64)),
             ("shed_retries", Json::Num(self.shed_retries as f64)),
             ("resends", Json::Num(self.resends as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("frames", Json::Num(self.frames as f64)),
             ("offline_spells", Json::Num(self.offline_spells as f64)),
             ("max_buffered", Json::Num(self.max_buffered as f64)),
         ])
@@ -1070,9 +1382,11 @@ pub fn loadgen(cfg: &LoadgenConfig) -> Result<LoadgenSummary> {
     let plan = cfg.faults.for_shard(NET_CLIENT);
     let events = gen_events(&cfg.synth, cfg.data_seed, cfg.seed, &cfg.client, cfg.events);
     let mut jrng = Rng64::new(stream_seed(cfg.seed, DOMAIN_JITTER, client_key(&cfg.client)));
+    let batch = cfg.batch.max(1);
     let mut sum = LoadgenSummary {
         client: cfg.client.clone(),
         events: events.len(),
+        batch,
         ..LoadgenSummary::default()
     };
     let mut next: usize = 0;
@@ -1127,6 +1441,89 @@ pub fn loadgen(cfg: &LoadgenConfig) -> Result<LoadgenSummary> {
 
         let mut shed_streak = 0u32;
         while next < events.len() {
+            if batch > 1 {
+                // fill one frame from the watermark; the last frame of the
+                // stream may be short
+                let k = batch.min(events.len() - next);
+                let items = (next..next + k)
+                    .map(|i| EventItem {
+                        seq: i as u64,
+                        label: events[i].1,
+                        x_bits: bits_of(&events[i].0),
+                    })
+                    .collect();
+                sum.frames += 1;
+                match send_line(&mut stream, &Request::Events { items }.to_line(), &plan, &mut req_idx)
+                {
+                    Ok(SendOutcome::Sent) | Ok(SendOutcome::Dropped) => {}
+                    Ok(SendOutcome::Closed) | Err(_) => continue 'outer,
+                }
+                // await the frame's decisions: elements at the watermark
+                // advance it in order (resent frames ack as duplicates, so
+                // a lost response still converges); anything else resends
+                // the frame from wherever the watermark now stands
+                loop {
+                    match read_response(&mut reader, &mut stream, cfg.reply_timeout_ms) {
+                        Err(_) => continue 'outer, // disconnected mid-await
+                        Ok(None) => {
+                            sum.resends += 1; // deadline or garbled reply
+                            break;
+                        }
+                        Ok(Some(Response::Decisions { items })) => {
+                            let mut progressed = false;
+                            let mut shed_wait: Option<u64> = None;
+                            for r in &items {
+                                match r {
+                                    Response::Decision { seq, action, .. }
+                                        if *seq == next as u64 =>
+                                    {
+                                        match action {
+                                            DecisionAction::Trained => sum.trained += 1,
+                                            DecisionAction::Skipped => sum.skipped += 1,
+                                            DecisionAction::Duplicate => sum.duplicates += 1,
+                                        }
+                                        sum.acked += 1;
+                                        next += 1;
+                                        progressed = true;
+                                    }
+                                    Response::Shed { seq, retry_after_ms }
+                                        if *seq == next as u64 =>
+                                    {
+                                        sum.shed_retries += 1;
+                                        shed_wait = Some(*retry_after_ms);
+                                    }
+                                    _ => {} // stale elements of a resent frame
+                                }
+                            }
+                            if progressed {
+                                shed_streak = 0;
+                            } else if let Some(wait) = shed_wait {
+                                // same non-convergence tripwire as the
+                                // single-event path: our watermark event
+                                // shed means the server is behind us
+                                shed_streak += 1;
+                                if shed_streak > 16 {
+                                    bail!(
+                                        "server keeps shedding seq {next} — its watermark is \
+                                         behind this client's (restarted without the snapshot?)"
+                                    );
+                                }
+                                std::thread::sleep(ms(wait.max(1)));
+                            } else {
+                                sum.resends += 1; // the whole frame was stale
+                            }
+                            break;
+                        }
+                        Ok(Some(Response::Error { .. })) => {
+                            sum.resends += 1; // e.g. our garbled frame
+                            break;
+                        }
+                        Ok(Some(Response::Draining)) => continue 'outer,
+                        Ok(Some(_)) => {} // pong/welcome replays: read through
+                    }
+                }
+                continue;
+            }
             let (x, label) = &events[next];
             let req = Request::Event { seq: next as u64, label: *label, x_bits: bits_of(x) };
             match send_line(&mut stream, &req.to_line(), &plan, &mut req_idx) {
@@ -1345,6 +1742,141 @@ mod tests {
         assert_eq!(summary.events, 1, "only the in-order event applied");
         assert_eq!(summary.duplicates, 1);
         assert_eq!(summary.shed, 1);
+    }
+
+    #[test]
+    fn batched_loadgen_matches_unbatched_state_exactly() {
+        // decisions depend only on applied event order, so a batched clean
+        // run must snapshot byte-identically to an unbatched clean run
+        let run = |batch: usize| -> (String, ServeSummary, LoadgenSummary) {
+            let cfg = {
+                let mut c = tiny_cfg();
+                let dir = std::env::temp_dir()
+                    .join(format!("odl-serve-batch-{}-{batch}", std::process::id()));
+                std::fs::create_dir_all(&dir).unwrap();
+                c.snapshot = Some(dir.join("snap.json"));
+                let _ = std::fs::remove_file(c.snapshot.as_ref().unwrap());
+                c
+            };
+            let (summary, lg) = with_server(&cfg, &FaultPlan::default(), |addr| {
+                let mut lc = lg_cfg(addr, &cfg, "edge-a", 30);
+                lc.batch = batch;
+                lc.send_shutdown = true;
+                loadgen(&lc).expect("loadgen ok")
+            });
+            let snap = cfg.snapshot.unwrap();
+            let text = std::fs::read_to_string(&snap).unwrap();
+            let _ = std::fs::remove_file(&snap);
+            (text, summary, lg)
+        };
+        let (plain, _, lg1) = run(1);
+        let (batched, summary, lg6) = run(6);
+        assert_eq!(batched, plain, "batching must not change final state");
+        assert_eq!(lg1.acked, 30);
+        assert_eq!(lg1.frames, 0);
+        assert_eq!(lg6.acked, 30);
+        assert_eq!(lg6.frames, 5, "30 events at batch 6");
+        assert!(summary.workers >= 1, "the pool engine served this run");
+    }
+
+    #[test]
+    fn oversized_batches_are_refused_whole() {
+        let mut cfg = tiny_cfg();
+        cfg.max_batch = 2;
+        let events = gen_events(&cfg.synth, cfg.data_seed(), cfg.seed, "edge-c", 3);
+        let (summary, ()) = with_server(&cfg, &FaultPlan::default(), |addr| {
+            let item = |i: usize| EventItem {
+                seq: i as u64,
+                label: events[i].1,
+                x_bits: bits_of(&events[i].0),
+            };
+            // a batch before hello is refused like a bare event is
+            let (mut s0, mut r0) = raw_connect(addr);
+            assert!(matches!(
+                roundtrip(&mut s0, &mut r0, &Request::Events { items: vec![item(0)] }),
+                Response::Error { .. }
+            ));
+
+            let (mut s, mut r) = raw_connect(addr);
+            let _ = roundtrip(&mut s, &mut r, &Request::Hello { client: "edge-c".into() });
+            let all: Vec<EventItem> = (0..3).map(item).collect();
+            let resp = roundtrip(&mut s, &mut r, &Request::Events { items: all.clone() });
+            assert!(matches!(resp, Response::Error { .. }), "3 > max_batch 2: {resp:?}");
+            // under the cap the same elements apply, one outcome each
+            let resp = roundtrip(&mut s, &mut r, &Request::Events { items: all[..2].to_vec() });
+            match resp {
+                Response::Decisions { items } => {
+                    assert_eq!(items.len(), 2);
+                    assert!(items.iter().all(|d| matches!(
+                        d,
+                        Response::Decision { action, .. } if *action != DecisionAction::Duplicate
+                    )));
+                }
+                other => panic!("expected decisions, got {other:?}"),
+            }
+            let _ = roundtrip(&mut s, &mut r, &Request::Shutdown);
+        });
+        assert_eq!(summary.events, 2, "the oversized frame applied nothing");
+    }
+
+    #[test]
+    fn batched_frames_run_watermark_rules_per_element() {
+        let cfg = tiny_cfg();
+        let events = gen_events(&cfg.synth, cfg.data_seed(), cfg.seed, "edge-d", 4);
+        let (summary, ()) = with_server(&cfg, &FaultPlan::default(), |addr| {
+            let item = |i: usize| EventItem {
+                seq: i as u64,
+                label: events[i].1,
+                x_bits: bits_of(&events[i].0),
+            };
+            let (mut s, mut r) = raw_connect(addr);
+            let _ = roundtrip(&mut s, &mut r, &Request::Hello { client: "edge-d".into() });
+            let first =
+                roundtrip(&mut s, &mut r, &Request::Events { items: vec![item(0), item(1)] });
+            assert!(matches!(first, Response::Decisions { ref items } if items.len() == 2));
+            // one frame: a replay (duplicate), the watermark event
+            // (applies), and a far-future seq (gap → shed)
+            let mut far = item(3);
+            far.seq = 5;
+            let resp = roundtrip(
+                &mut s,
+                &mut r,
+                &Request::Events { items: vec![item(1), item(2), far] },
+            );
+            match resp {
+                Response::Decisions { items } => {
+                    assert!(matches!(
+                        items[0],
+                        Response::Decision { seq: 1, action: DecisionAction::Duplicate, .. }
+                    ));
+                    assert!(matches!(
+                        items[1],
+                        Response::Decision { seq: 2, action, .. }
+                            if action != DecisionAction::Duplicate
+                    ));
+                    assert!(matches!(items[2], Response::Shed { seq: 5, .. }));
+                }
+                other => panic!("expected decisions, got {other:?}"),
+            }
+            let _ = roundtrip(&mut s, &mut r, &Request::Shutdown);
+        });
+        assert_eq!(summary.events, 3, "seqs 0..3 applied exactly once");
+        assert_eq!(summary.duplicates, 1);
+        assert_eq!(summary.shed, 1);
+    }
+
+    #[test]
+    fn legacy_thread_per_conn_engine_still_serves() {
+        let mut cfg = tiny_cfg();
+        cfg.thread_per_conn = true;
+        let (summary, lg) = with_server(&cfg, &FaultPlan::default(), |addr| {
+            let mut lc = lg_cfg(addr, &cfg, "edge-a", 12);
+            lc.send_shutdown = true;
+            loadgen(&lc).expect("loadgen ok")
+        });
+        assert_eq!(lg.delivered, 12);
+        assert_eq!(summary.events, 12);
+        assert_eq!(summary.workers, 0, "legacy mode runs no shard workers");
     }
 
     #[test]

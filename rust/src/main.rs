@@ -18,11 +18,11 @@
 //!                [--heartbeat-timeout SECS] [--inject-faults SPEC] [--fault-attempts K]
 //! odl-har merge  --config FILE [--out FILE] SHARD_FILE...
 //! odl-har serve  --config FILE [--bind ADDR] [--snapshot FILE] [--max-clients N]
-//!                [--inject-faults SPEC]
+//!                [--workers N] [--inject-faults SPEC]
 //! odl-har loadgen --connect ADDR --config FILE [--client NAME] [--events N]
-//!                [--retry-budget K] [--backoff-base-ms MS] [--backoff-cap-ms MS]
-//!                [--reply-timeout-ms MS] [--shutdown] [--summary-out FILE]
-//!                [--inject-faults SPEC]
+//!                [--batch K] [--retry-budget K] [--backoff-base-ms MS]
+//!                [--backoff-cap-ms MS] [--reply-timeout-ms MS] [--shutdown]
+//!                [--summary-out FILE] [--inject-faults SPEC]
 //! odl-har artifacts-check            # verify PJRT artifacts load + run
 //! ```
 //!
@@ -511,6 +511,7 @@ fn main() -> Result<()> {
             let bind = args.opt("--bind")?;
             let snapshot = args.opt("--snapshot")?;
             let max_clients = args.opt_usize_opt("--max-clients")?;
+            let workers = args.opt_usize_opt("--workers")?;
             let fault_spec = args.opt("--inject-faults")?;
             args.finish()?;
             let mut cfg = config::serve_from_file(&PathBuf::from(cfg_path))?;
@@ -523,6 +524,10 @@ fn main() -> Result<()> {
             if let Some(m) = max_clients {
                 anyhow::ensure!(m >= 1, "--max-clients must be >= 1");
                 cfg.max_clients = m;
+            }
+            if let Some(w) = workers {
+                // 0 = one shard worker per available core
+                cfg.workers = w;
             }
             // serve_with binds the server end (#1) itself; pass the raw plan
             let faults = fault_spec
@@ -548,6 +553,7 @@ fn main() -> Result<()> {
             let backoff_base = args.opt_u64_opt("--backoff-base-ms")?;
             let backoff_cap = args.opt_u64_opt("--backoff-cap-ms")?;
             let reply_timeout = args.opt_u64_opt("--reply-timeout-ms")?;
+            let batch = args.opt_usize_opt("--batch")?;
             let send_shutdown = args.flag("--shutdown");
             let summary_out = args.opt("--summary-out")?;
             let fault_spec = args.opt("--inject-faults")?;
@@ -579,6 +585,13 @@ fn main() -> Result<()> {
             if let Some(t) = reply_timeout {
                 anyhow::ensure!(t >= 1, "--reply-timeout-ms must be >= 1");
                 lcfg.reply_timeout_ms = t;
+            }
+            if let Some(k) = batch {
+                anyhow::ensure!(k >= 1, "--batch must be >= 1");
+                // both ends read the same config file, so the server's
+                // frame cap is known here — clamp instead of looping on
+                // 'batch exceeds max_batch' errors
+                lcfg.batch = k.min(scfg.max_batch.max(1));
             }
             if let Some(spec) = fault_spec {
                 // loadgen() rebinds to the client end (#2) internally
@@ -915,23 +928,27 @@ const USAGE: &str =
                                           validated against the config's grid, rows re-interleaved\n\
                                           in cell order, stats trailer recomputed from the plan)\n\
            serve  --config FILE [--bind ADDR] [--snapshot FILE] [--max-clients N]\n\
-                  [--inject-faults SPEC]\n\
+                  [--workers N] [--inject-faults SPEC]\n\
                                           fault-tolerant teacher/label service over TCP (JSONL\n\
                                           protocol): per-client OS-ELM + auto-pruning state,\n\
-                                          admission cap with structured busy, bounded queues,\n\
-                                          read/idle deadlines, exactly-once in-order events,\n\
-                                          graceful drain to a crash-consistent snapshot that a\n\
-                                          restart restores byte-identically ([serve] TOML section\n\
-                                          sets the knobs; see rust/RELIABILITY.md)\n\
+                                          a fixed shard worker pool driving all admitted\n\
+                                          connections (--workers threads; 0 = auto), admission\n\
+                                          cap with structured busy, bounded queues, read/idle\n\
+                                          deadlines, exactly-once in-order events (single or\n\
+                                          batched frames), graceful drain to a crash-consistent\n\
+                                          snapshot that a restart restores byte-identically\n\
+                                          ([serve] TOML section sets the knobs; see\n\
+                                          rust/RELIABILITY.md)\n\
            loadgen --connect ADDR --config FILE [--client NAME] [--events N]\n\
-                  [--retry-budget K] [--backoff-base-ms MS] [--backoff-cap-ms MS]\n\
-                  [--reply-timeout-ms MS] [--shutdown] [--summary-out FILE]\n\
-                  [--inject-faults SPEC]\n\
+                  [--batch K] [--retry-budget K] [--backoff-base-ms MS]\n\
+                  [--backoff-cap-ms MS] [--reply-timeout-ms MS] [--shutdown]\n\
+                  [--summary-out FILE] [--inject-faults SPEC]\n\
                                           deterministic edge client: replays a seeded event\n\
                                           stream against serve, survives outages with capped\n\
                                           exponential backoff + seeded jitter, buffers offline\n\
-                                          and replays on reconnect; --shutdown drains the server\n\
-                                          after the last ack\n\
+                                          and replays on reconnect; --batch K packs K events\n\
+                                          per wire frame (clamped to the server's max_batch);\n\
+                                          --shutdown drains the server after the last ack\n\
            artifacts-check                compile every PJRT artifact";
 
 fn print_help() {

@@ -6,6 +6,10 @@
 //! run's. The wire protocol dedups by sequence number and both ends
 //! retry, so every recoverable transport fault must converge on the
 //! exact same per-client OS-ELM/pruner/teacher state.
+//!
+//! The `[serve]` section here pins `workers = 2`, so every scenario runs
+//! against the shard worker-pool engine, and the batched tests exercise
+//! `--batch` framing (`events`/`decisions`) under the same fault kinds.
 
 use std::io::{BufRead, BufReader, Read as _};
 use std::path::{Path, PathBuf};
@@ -35,6 +39,8 @@ queue_depth = 16
 read_timeout_ms = 20
 idle_timeout_ms = 5000
 retry_after_ms = 5
+workers = 2
+max_batch = 8
 warmup = 4
 "#;
 
@@ -94,7 +100,7 @@ fn start_server(cfg: &Path, snapshot: &Path, faults: Option<&str>) -> Server {
     Server { child, addr }
 }
 
-fn loadgen_cmd(addr: &str, cfg: &Path, client: &str, events: usize) -> Command {
+fn loadgen_cmd(addr: &str, cfg: &Path, client: &str, events: usize, batch: usize) -> Command {
     let mut cmd = Command::new(exe());
     cmd.arg("loadgen")
         .arg("--connect")
@@ -115,19 +121,29 @@ fn loadgen_cmd(addr: &str, cfg: &Path, client: &str, events: usize) -> Command {
         .arg("150")
         .stdout(Stdio::piped())
         .stderr(Stdio::piped());
+    if batch > 1 {
+        cmd.arg("--batch").arg(batch.to_string());
+    }
     cmd
 }
 
 /// Run `n` loadgen clients concurrently (edge-0 .. edge-{n-1}), assert
 /// each delivered every event, and return their summary JSON lines.
-fn run_clients(addr: &str, cfg: &Path, n: usize, events: usize, faults: Option<&str>) -> Vec<String> {
+fn run_clients(
+    addr: &str,
+    cfg: &Path,
+    n: usize,
+    events: usize,
+    faults: Option<&str>,
+    batch: usize,
+) -> Vec<String> {
     std::thread::scope(|scope| {
         let handles: Vec<_> = (0..n)
             .map(|i| {
                 let client = format!("edge-{i}");
                 let addr = addr.to_string();
                 scope.spawn(move || {
-                    let mut cmd = loadgen_cmd(&addr, cfg, &client, events);
+                    let mut cmd = loadgen_cmd(&addr, cfg, &client, events, batch);
                     if let Some(spec) = faults {
                         cmd.arg("--inject-faults").arg(spec);
                     }
@@ -153,7 +169,7 @@ fn run_clients(addr: &str, cfg: &Path, n: usize, events: usize, faults: Option<&
 /// Drain the server (a zero-event loadgen run with `--shutdown`), wait
 /// for it to exit cleanly, and return the published snapshot bytes.
 fn drain_and_snapshot(mut server: Server, cfg: &Path, snapshot: &Path) -> Vec<u8> {
-    let out = loadgen_cmd(&server.addr, cfg, "edge-0", 0)
+    let out = loadgen_cmd(&server.addr, cfg, "edge-0", 0, 1)
         .arg("--shutdown")
         .output()
         .expect("spawning the drain client");
@@ -175,10 +191,11 @@ fn run_scenario(
     events: usize,
     server_faults: Option<&str>,
     client_faults: Option<&str>,
+    batch: usize,
 ) -> Vec<u8> {
     let snap = s.dir.join(format!("snap_{tag}.json"));
     let server = start_server(&s.cfg, &snap, server_faults);
-    run_clients(&server.addr, &s.cfg, n, events, client_faults);
+    run_clients(&server.addr, &s.cfg, n, events, client_faults, batch);
     drain_and_snapshot(server, &s.cfg, &snap)
 }
 
@@ -192,12 +209,12 @@ fn explicit_fault_schedules_converge_to_the_undisturbed_snapshot() {
     let s = setup("odl_har_serve_chaos_explicit");
     let spec = "5:drop@3#1,garble@7#1,delay@11#1,close@13#1,drop@4#2,garble@9#2,delay@6#2,close@14#2";
     for n in [1usize, 2, 8] {
-        let clean = run_scenario(&s, &format!("clean_{n}"), n, 24, None, None);
+        let clean = run_scenario(&s, &format!("clean_{n}"), n, 24, None, None, 1);
         assert!(
             clean.windows(8).any(|w| w == b"\"edge-0\""),
             "the snapshot must carry per-client state"
         );
-        let chaos = run_scenario(&s, &format!("chaos_{n}"), n, 24, Some(spec), Some(spec));
+        let chaos = run_scenario(&s, &format!("chaos_{n}"), n, 24, Some(spec), Some(spec), 1);
         assert_eq!(
             chaos, clean,
             "{n} client(s): the disturbed run must converge on the clean state"
@@ -211,8 +228,8 @@ fn explicit_fault_schedules_converge_to_the_undisturbed_snapshot() {
 #[test]
 fn seeded_chaos_converges_to_the_undisturbed_snapshot() {
     let s = setup("odl_har_serve_chaos_seeded");
-    let clean = run_scenario(&s, "clean", 2, 24, None, None);
-    let chaos = run_scenario(&s, "chaos", 2, 24, Some("1701"), Some("1701"));
+    let clean = run_scenario(&s, "clean", 2, 24, None, None, 1);
+    let chaos = run_scenario(&s, "chaos", 2, 24, Some("1701"), Some("1701"), 1);
     assert_eq!(chaos, clean, "seeded chaos must converge on the clean state");
     let _ = std::fs::remove_dir_all(&s.dir);
 }
@@ -224,16 +241,16 @@ fn seeded_chaos_converges_to_the_undisturbed_snapshot() {
 #[test]
 fn killed_client_rerun_replays_to_the_clean_state() {
     let s = setup("odl_har_serve_chaos_kill");
-    let clean = run_scenario(&s, "clean", 2, 24, None, None);
+    let clean = run_scenario(&s, "clean", 2, 24, None, None, 1);
 
     let snap = s.dir.join("snap_kill.json");
     let server = start_server(&s.cfg, &snap, None);
     // edge-1 runs undisturbed; edge-0 aborts mid-stream
-    let out = loadgen_cmd(&server.addr, &s.cfg, "edge-1", 24)
+    let out = loadgen_cmd(&server.addr, &s.cfg, "edge-1", 24, 1)
         .output()
         .expect("spawning loadgen edge-1");
     assert!(out.status.success());
-    let killed = loadgen_cmd(&server.addr, &s.cfg, "edge-0", 24)
+    let killed = loadgen_cmd(&server.addr, &s.cfg, "edge-0", 24, 1)
         .arg("--inject-faults")
         .arg("5:kill@5#2")
         .output()
@@ -243,7 +260,7 @@ fn killed_client_rerun_replays_to_the_clean_state() {
         "the kill site must abort the client process"
     );
     // rerun without faults: welcome fast-forwards past the applied prefix
-    let rerun = loadgen_cmd(&server.addr, &s.cfg, "edge-0", 24)
+    let rerun = loadgen_cmd(&server.addr, &s.cfg, "edge-0", 24, 1)
         .output()
         .expect("spawning the rerun loadgen");
     assert!(
@@ -261,6 +278,74 @@ fn killed_client_rerun_replays_to_the_clean_state() {
     let _ = std::fs::remove_dir_all(&s.dir);
 }
 
+/// Batched frames at 2 and 8 clients, with garble/close schedules on
+/// both socket ends: every snapshot must be byte-identical to the clean
+/// *unbatched* run's — batching changes the wire shape only, and chaos
+/// on batched frames still converges. Client fault indices are small
+/// because a batched stream sends ~K× fewer messages (hello = 0, then
+/// one frame per 6 events).
+#[test]
+fn batched_frames_chaos_converges_to_the_unbatched_clean_snapshot() {
+    let s = setup("odl_har_serve_chaos_batched");
+    let spec = "5:garble@2#1,close@4#1,garble@2#2,close@4#2";
+    for n in [2usize, 8] {
+        let clean = run_scenario(&s, &format!("clean_{n}"), n, 24, None, None, 1);
+        let batched = run_scenario(&s, &format!("batched_{n}"), n, 24, None, None, 6);
+        assert_eq!(
+            batched, clean,
+            "{n} client(s): batch 6 must apply the same state as unbatched"
+        );
+        let chaos = run_scenario(&s, &format!("bchaos_{n}"), n, 24, Some(spec), Some(spec), 6);
+        assert_eq!(
+            chaos, clean,
+            "{n} client(s): chaos on batched frames must converge on the clean state"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&s.dir);
+}
+
+/// A batched client killed mid-stream (abort at its 4th send — hello
+/// plus three 6-event frames) replays on rerun: the watermark welcome
+/// fast-forwards past the applied prefix, resent frames ack as
+/// duplicates, and the drained state matches the clean unbatched run.
+#[test]
+fn killed_batched_client_rerun_replays_to_the_clean_state() {
+    let s = setup("odl_har_serve_chaos_batched_kill");
+    let clean = run_scenario(&s, "clean", 2, 24, None, None, 1);
+
+    let snap = s.dir.join("snap_bkill.json");
+    let server = start_server(&s.cfg, &snap, None);
+    let out = loadgen_cmd(&server.addr, &s.cfg, "edge-1", 24, 6)
+        .output()
+        .expect("spawning loadgen edge-1");
+    assert!(out.status.success());
+    let killed = loadgen_cmd(&server.addr, &s.cfg, "edge-0", 24, 6)
+        .arg("--inject-faults")
+        .arg("5:kill@3#2")
+        .output()
+        .expect("spawning the doomed batched loadgen");
+    assert!(
+        !killed.status.success(),
+        "the kill site must abort the client process"
+    );
+    let rerun = loadgen_cmd(&server.addr, &s.cfg, "edge-0", 24, 6)
+        .output()
+        .expect("spawning the rerun loadgen");
+    assert!(
+        rerun.status.success(),
+        "rerun failed: {}",
+        String::from_utf8_lossy(&rerun.stderr)
+    );
+    let text = String::from_utf8_lossy(&rerun.stdout);
+    assert!(
+        text.contains("\"delivered\":24"),
+        "the rerun must finish the stream: {text}"
+    );
+    let bytes = drain_and_snapshot(server, &s.cfg, &snap);
+    assert_eq!(bytes, clean, "crash + batched rerun must converge on the clean state");
+    let _ = std::fs::remove_dir_all(&s.dir);
+}
+
 /// Graceful drain is a real checkpoint: 20 events, drain, restart from
 /// the snapshot, finish to 40 — byte-identical to one uninterrupted
 /// 40-event run. The event stream is prefix-stable and the welcome
@@ -268,18 +353,18 @@ fn killed_client_rerun_replays_to_the_clean_state() {
 #[test]
 fn drain_and_restart_resumes_byte_identically() {
     let s = setup("odl_har_serve_chaos_restart");
-    let full = run_scenario(&s, "full", 2, 40, None, None);
+    let full = run_scenario(&s, "full", 2, 40, None, None, 1);
 
     let snap = s.dir.join("snap_split.json");
     let server = start_server(&s.cfg, &snap, None);
-    run_clients(&server.addr, &s.cfg, 2, 20, None);
+    run_clients(&server.addr, &s.cfg, 2, 20, None, 1);
     let first = drain_and_snapshot(server, &s.cfg, &snap);
     assert_ne!(first, full, "the 20-event checkpoint is not the final state");
 
     let server = start_server(&s.cfg, &snap, None);
     // the restarted server restores both clients; each rerun asks for the
     // full 40 and is fast-forwarded past its applied 20 by the welcome
-    let summaries = run_clients(&server.addr, &s.cfg, 2, 40, None);
+    let summaries = run_clients(&server.addr, &s.cfg, 2, 40, None, 1);
     for text in &summaries {
         assert!(
             text.contains("\"acked\":20"),

@@ -29,8 +29,16 @@
 #            edge_memo_speedup                (higher is better)
 #   serve:   throughput_eps                   (higher is better)
 #            p99_ms                           (lower is better)
+#            c64.throughput_eps               (higher is better; 64-client
+#            connection-scaling point on the shard worker pool)
+#            c64.p99_ms                       (lower is better)
+#            c64_b16.throughput_eps           (higher is better; 64 clients
+#            sending batched `events` frames of 16)
 #
 # Absolute gates (not baseline-relative):
+#   serve:   batch_speedup_64c >= 2.0 — at 64 clients, the batched pool
+#            engine must be at least 2x the unbatched thread-per-
+#            connection baseline measured in the same bench run
 #   sweep:   resume_overhead_frac <= 0.20 — resuming an already complete
 #            results file must be ~free (parse + verify, no cells run)
 #   sweep:   edge_hit_rate >= 0.5 — the edge-state memo must engage on
@@ -147,36 +155,51 @@ sweep = check("sweep", "BENCH_sweep.json", "BENCH_sweep.prev.json", [
     ("memo_speedup", lambda d: d.get("memo_speedup"), True),
     ("edge_memo_speedup", lambda d: d.get("edge_memo_speedup"), True),
 ])
-check("serve", "BENCH_serve.json", "BENCH_serve.prev.json", [
+def serve_point(point, key):
+    return lambda d: d.get(point, {}).get(key)
+
+serve = check("serve", "BENCH_serve.json", "BENCH_serve.prev.json", [
     ("throughput_eps", lambda d: d.get("throughput_eps"), True),
     ("p99_ms", lambda d: d.get("p99_ms"), False),
+    # v2 multi-client points; "not comparable" against v1 baselines,
+    # which lack the nested objects — the first v2 rotation arms them
+    ("c64.throughput_eps", serve_point("c64", "throughput_eps"), True),
+    ("c64.p99_ms", serve_point("c64", "p99_ms"), False),
+    ("c64_b16.throughput_eps", serve_point("c64_b16", "throughput_eps"), True),
 ])
 
-# absolute gates on the sweep engine: the resumed-complete run skips
-# every cell (so it must be ~free), the edge-state memo must engage
-# (plan-derived hit rate) and must be a real wall-clock win
-def absolute_gate(d, key, limit, higher_is_better):
+# absolute gates: thresholds a fresh run must clear on its own, no
+# baseline involved
+def absolute_gate(family, d, key, limit, higher_is_better):
     v = d.get(key)
     if v is None:
-        print(f"bench_check: sweep:{key} not measured (old bench?), skipping")
+        print(f"bench_check: {family}:{key} not measured (old bench?), skipping")
         return
     ok = v >= limit if higher_is_better else v <= limit
     bound = ">=" if higher_is_better else "<="
     if ok:
-        print(f"bench_check: sweep:{key} {v:.3f} [ok {bound} {limit}]")
+        print(f"bench_check: {family}:{key} {v:.3f} [ok {bound} {limit}]")
     else:
-        print(f"bench_check: sweep:{key} {v:.3f} [REGRESSION not {bound} {limit}]")
-        failures.append(f"sweep:{key}")
+        print(f"bench_check: {family}:{key} {v:.3f} [REGRESSION not {bound} {limit}]")
+        failures.append(f"{family}:{key}")
 
+# sweep engine: the resumed-complete run skips every cell (so it must be
+# ~free), the edge-state memo must engage (plan-derived hit rate) and
+# must be a real wall-clock win
 if sweep is not None:
-    absolute_gate(sweep, "resume_overhead_frac", 0.20, False)
-    absolute_gate(sweep, "edge_hit_rate", 0.5, True)
+    absolute_gate("sweep", sweep, "resume_overhead_frac", 0.20, False)
+    absolute_gate("sweep", sweep, "edge_hit_rate", 0.5, True)
     # wall-clock floor with the shared 10% noise tolerance (expected
     # value on the bench grid is several x; the relative gate catches
     # sustained drift)
-    absolute_gate(sweep, "edge_memo_speedup", 1.0 - TOL, True)
+    absolute_gate("sweep", sweep, "edge_memo_speedup", 1.0 - TOL, True)
     # self-healing supervision must be ~free when nothing fails
-    absolute_gate(sweep, "supervise_overhead_frac", 0.15, False)
+    absolute_gate("sweep", sweep, "supervise_overhead_frac", 0.15, False)
+
+# serve engine: batching at 64 clients must beat the unbatched
+# thread-per-connection baseline measured in the same bench run by >= 2x
+if serve is not None:
+    absolute_gate("serve", serve, "batch_speedup_64c", 2.0, True)
 
 if failures:
     print("bench_check: FAIL (regression): " + ", ".join(failures))

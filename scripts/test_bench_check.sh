@@ -8,9 +8,10 @@
 # Covers the graceful-degradation paths (missing, empty, and corrupt
 # bench/baseline files must warn and skip — a fresh tree seeds baselines,
 # it never fails) and each gate (baseline-relative memo_speedup /
-# edge_memo_speedup, the serve throughput_eps / p99_ms pair, the fleet
-# events_per_sec @ 100k aggregate throughput point, absolute
-# resume_overhead_frac / edge_hit_rate / edge_memo_speedup /
+# edge_memo_speedup, the serve throughput_eps / p99_ms pair plus the v2
+# 64-client and batch-16 points and the absolute batch_speedup_64c >= 2
+# floor, the fleet events_per_sec @ 100k aggregate throughput point,
+# absolute resume_overhead_frac / edge_hit_rate / edge_memo_speedup /
 # supervise_overhead_frac floors and ceilings).
 
 set -euo pipefail
@@ -53,6 +54,15 @@ serve_json() {
   # serve_json THROUGHPUT_EPS P99_MS
   printf '{"schema":"bench_serve/v1","throughput_eps":%s,"p50_ms":0.05,"p99_ms":%s}' \
     "$1" "$2"
+}
+
+serve_v2_json() {
+  # serve_v2_json THROUGHPUT_EPS P99_MS C64_TP C64_P99 C64B16_TP SPEEDUP
+  # (the legacy 64-client thread-per-conn point rides along as a healthy
+  # constant; batch_speedup_64c is supplied, not derived, so the absolute
+  # gate can be exercised independently)
+  printf '{"schema":"bench_serve/v2","throughput_eps":%s,"p50_ms":0.05,"p99_ms":%s,"c64":{"clients":64,"batch":1,"throughput_eps":%s,"p99_ms":%s},"c64_b16":{"clients":64,"batch":16,"throughput_eps":%s,"p99_ms":0.8},"c64_legacy":{"clients":64,"batch":1,"throughput_eps":30000,"p99_ms":4.0},"batch_speedup_64c":%s}' \
+    "$1" "$2" "$3" "$4" "$5" "$6"
 }
 
 fleet_json() {
@@ -139,6 +149,24 @@ serve_json 20000 0.40 > "$tmp/BENCH_serve.json"
 run_case "serve p99 regression fails" 1 "serve:p99_ms.*REGRESSION"
 serve_json 22000 0.19 > "$tmp/BENCH_serve.json"
 run_case "serve improvement passes" 0 "bench_check: PASS"
+rm -f "$tmp/BENCH_serve.json" "$tmp/BENCH_serve.prev.json"
+
+# 12d2. serve v2 gates: the 64-client and batch-16 points are tracked
+# baseline-relative; batch_speedup_64c carries an absolute >= 2.0 floor
+serve_v2_json 20000 0.20 60000 2.0 120000 4.0 > "$tmp/BENCH_serve.json"
+serve_v2_json 20000 0.20 60000 2.0 120000 4.0 > "$tmp/BENCH_serve.prev.json"
+run_case "healthy serve v2 vs baseline" 0 "serve:c64.throughput_eps.*ok"
+serve_v2_json 20000 0.20 40000 2.0 120000 4.0 > "$tmp/BENCH_serve.json"
+run_case "serve 64-client throughput regression fails" 1 "serve:c64.throughput_eps.*REGRESSION"
+serve_v2_json 20000 0.20 60000 2.0 80000 4.0 > "$tmp/BENCH_serve.json"
+run_case "serve batch-16 throughput regression fails" 1 "serve:c64_b16.throughput_eps.*REGRESSION"
+serve_v2_json 20000 0.20 60000 2.0 120000 1.5 > "$tmp/BENCH_serve.json"
+run_case "batch_speedup_64c floor fails" 1 "serve:batch_speedup_64c.*REGRESSION"
+# a v1-era fresh JSON against a v2 baseline skips the v2-only gates
+# instead of failing (and the absolute floor skips when unmeasured)
+serve_json 20000 0.20 > "$tmp/BENCH_serve.json"
+run_case "v1 serve JSON skips v2 gates" 0 "serve:c64.throughput_eps not comparable"
+run_case "v1 serve JSON skips speedup floor" 0 "serve:batch_speedup_64c not measured"
 rm -f "$tmp/BENCH_serve.json" "$tmp/BENCH_serve.prev.json"
 
 # 12e. fleet gates: the 100k-edge aggregate throughput point is tracked

@@ -128,6 +128,12 @@ fi
 lg_out=$(./target/release/odl-har loadgen --connect "$addr" --config configs/serve_smoke.toml \
   --client edge-0 --events 24 --inject-faults 5:drop@4#2,garble@9#2)
 grep -q '"delivered":24' <<< "$lg_out"
+# batched frames: a second edge streams its 24 events packed 6 per
+# `events` frame — 4 frames on the wire, every event still acked
+lg_out=$(./target/release/odl-har loadgen --connect "$addr" --config configs/serve_smoke.toml \
+  --client edge-1 --events 24 --batch 6)
+grep -q '"delivered":24' <<< "$lg_out"
+grep -q '"frames":4' <<< "$lg_out"
 ./target/release/odl-har loadgen --connect "$addr" --config configs/serve_smoke.toml \
   --client edge-0 --events 0 --shutdown >/dev/null
 wait "$serve_pid"
