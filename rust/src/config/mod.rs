@@ -15,6 +15,7 @@ use crate::coordinator::{ChannelConfig, MetricsMode};
 use crate::data::SynthConfig;
 use crate::exp::protocol::{ProtocolConfig, PruningSpec, Variant};
 use crate::odl::AlphaKind;
+use crate::storage::StorageConfig;
 use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
 use toml::{TomlDoc, Value as TomlValue};
@@ -380,6 +381,7 @@ const SUPERVISE_KEYS: &[&str] = &[
     "shards",
     "retry_budget",
     "heartbeat_timeout_s",
+    "grace_factor",
     "backoff_base_ms",
     "backoff_cap_ms",
     "poll_ms",
@@ -393,6 +395,7 @@ const SUPERVISE_KEYS: &[&str] = &[
 /// shards = 4                 # 0 = auto (one per core)
 /// retry_budget = 2           # relaunches per shard before quarantine
 /// heartbeat_timeout_s = 60.0 # kill a child whose file stops growing
+/// grace_factor = 3.0         # pre-first-byte allowance, × timeout (≥ 1)
 /// backoff_base_ms = 250      # first relaunch delay (doubles, capped)
 /// backoff_cap_ms = 5000
 /// poll_ms = 50
@@ -441,6 +444,14 @@ pub fn supervise_from_str(text: &str) -> Result<SuperviseConfig> {
             bail!("supervise.heartbeat_timeout_s must be a positive number, got {other:?}")
         }
     }
+    match doc.get("supervise", "grace_factor") {
+        None => {}
+        Some(TomlValue::Float(f)) if *f >= 1.0 => cfg.grace_factor = *f,
+        Some(TomlValue::Int(i)) if *i >= 1 => cfg.grace_factor = *i as f64,
+        Some(other) => {
+            bail!("supervise.grace_factor must be a number ≥ 1, got {other:?}")
+        }
+    }
     Ok(cfg)
 }
 
@@ -450,6 +461,76 @@ pub fn supervise_from_file(path: &Path) -> Result<SuperviseConfig> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading config {}", path.display()))?;
     supervise_from_str(&text)
+}
+
+/// The keys the optional `[storage]` section understands (the result
+/// storage backend for `sweep`/`merge`/`serve`; see
+/// `storage::StorageConfig`). Same contract as [`SWEEP_KEYS`]: a present
+/// key outside this list is a rejected typo. The `--storage` CLI flag
+/// overrides `uri`.
+const STORAGE_KEYS: &[&str] = &["uri", "retry_limit", "backoff_base_ms", "backoff_cap_ms"];
+
+/// Parse the optional `[storage]` section onto the default
+/// [`StorageConfig`] (no section, or no `uri`, means results stay on
+/// plain local paths):
+///
+/// ```toml
+/// [storage]
+/// uri = "results/store"   # directory, or "remote://root" with the
+///                         # `remote-storage` feature
+/// retry_limit = 4         # total attempts per op on transient errors
+/// backoff_base_ms = 25    # first retry delay (doubles, capped)
+/// backoff_cap_ms = 1000
+/// ```
+pub fn storage_from_str(text: &str) -> Result<StorageConfig> {
+    let doc = TomlDoc::parse(text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+    storage_from_doc(&doc)
+}
+
+fn storage_from_doc(doc: &TomlDoc) -> Result<StorageConfig> {
+    for key in doc.section_keys("storage") {
+        ensure!(
+            STORAGE_KEYS.contains(&key),
+            "unknown [storage] key '{key}' — valid keys: {}",
+            STORAGE_KEYS.join(", ")
+        );
+    }
+    let mut cfg = StorageConfig::default();
+    // present-but-wrong-typed values must error, not silently keep the
+    // default — same rule as the [sweep]/[supervise] sections
+    let uint = |key: &str| -> Result<Option<u64>> {
+        match doc.get("storage", key) {
+            None => Ok(None),
+            Some(TomlValue::Int(i)) if *i >= 0 => Ok(Some(*i as u64)),
+            Some(other) => {
+                bail!("storage.{key} must be a non-negative integer, got {other:?}")
+            }
+        }
+    };
+    if let Some(v) = uint("retry_limit")? {
+        ensure!(v >= 1, "storage.retry_limit must be ≥ 1 (total attempts)");
+        cfg.retry_limit = v as usize;
+    }
+    if let Some(v) = uint("backoff_base_ms")? {
+        cfg.backoff_base_ms = v;
+    }
+    if let Some(v) = uint("backoff_cap_ms")? {
+        cfg.backoff_cap_ms = v;
+    }
+    match doc.get("storage", "uri") {
+        None => {}
+        Some(TomlValue::Str(s)) => cfg.uri = Some(s.clone()),
+        Some(other) => bail!("storage.uri must be a string directory or URI, got {other:?}"),
+    }
+    Ok(cfg)
+}
+
+/// [`storage_from_str`] over a config file (the `[storage]` section is
+/// optional — a config without it yields the defaults: no backend).
+pub fn storage_from_file(path: &Path) -> Result<StorageConfig> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading config {}", path.display()))?;
+    storage_from_str(&text)
 }
 
 /// The keys the optional `[serve]` section understands (knobs for
@@ -554,6 +635,8 @@ pub fn serve_from_str(text: &str) -> Result<ServeConfig> {
         Some(TomlValue::Str(s)) => cfg.snapshot = Some(std::path::PathBuf::from(s)),
         Some(other) => bail!("serve.snapshot must be a string path, got {other:?}"),
     }
+    // snapshots publish/restore through the shared [storage] section
+    cfg.storage = storage_from_doc(&doc)?;
     Ok(cfg)
 }
 
@@ -848,6 +931,12 @@ record_pca = true
         // integer timeouts are accepted
         let cfg = supervise_from_str("[supervise]\nheartbeat_timeout_s = 2\n").unwrap();
         assert!((cfg.heartbeat_timeout_s - 2.0).abs() < 1e-12);
+        // grace_factor: default 3, floats and integers ≥ 1 accepted
+        assert!((cfg.grace_factor - 3.0).abs() < 1e-12);
+        let cfg = supervise_from_str("[supervise]\ngrace_factor = 1.5\n").unwrap();
+        assert!((cfg.grace_factor - 1.5).abs() < 1e-12);
+        let cfg = supervise_from_str("[supervise]\ngrace_factor = 1\n").unwrap();
+        assert!((cfg.grace_factor - 1.0).abs() < 1e-12);
     }
 
     #[test]
@@ -930,5 +1019,45 @@ record_pca = true
         assert!(supervise_from_str("[supervise]\nheartbeat_timeout_s = 0\n").is_err());
         assert!(supervise_from_str("[supervise]\nheartbeat_timeout_s = true\n").is_err());
         assert!(supervise_from_str("[supervise]\npoll_ms = 1.5\n").is_err());
+        // grace_factor scales the timeout — values below 1 would *shrink*
+        // the pre-first-byte allowance, which defeats its purpose
+        assert!(supervise_from_str("[supervise]\ngrace_factor = 0.5\n").is_err());
+        assert!(supervise_from_str("[supervise]\ngrace_factor = 0\n").is_err());
+        assert!(supervise_from_str("[supervise]\ngrace_factor = \"big\"\n").is_err());
+    }
+
+    #[test]
+    fn storage_section_parses_onto_defaults() {
+        // absent section = defaults: no backend, results on plain paths
+        let cfg = storage_from_str("[fleet]\nn_edges = 2\n").unwrap();
+        assert_eq!(cfg, StorageConfig::default());
+        assert!(cfg.uri.is_none());
+        assert_eq!(cfg.retry_limit, 4);
+        assert_eq!((cfg.backoff_base_ms, cfg.backoff_cap_ms), (25, 1000));
+
+        let cfg = storage_from_str(
+            "[storage]\nuri = \"results/store\"\nretry_limit = 2\n\
+             backoff_base_ms = 5\nbackoff_cap_ms = 50\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.uri.as_deref(), Some("results/store"));
+        assert_eq!(cfg.retry_limit, 2);
+        assert_eq!((cfg.backoff_base_ms, cfg.backoff_cap_ms), (5, 50));
+        // the serve config carries the same section
+        let serve = serve_from_str("[storage]\nuri = \"snapdir\"\n").unwrap();
+        assert_eq!(serve.storage.uri.as_deref(), Some("snapdir"));
+    }
+
+    #[test]
+    fn storage_rejects_unknown_keys_and_bad_types() {
+        let err = storage_from_str("[storage]\nretries = 3\n").unwrap_err().to_string();
+        assert!(err.contains("unknown [storage] key 'retries'"), "{err}");
+        assert!(err.contains("retry_limit"), "{err}");
+        // wrong types must error, not silently keep the default
+        assert!(storage_from_str("[storage]\nuri = 4\n").is_err());
+        assert!(storage_from_str("[storage]\nretry_limit = 0\n").is_err());
+        assert!(storage_from_str("[storage]\nretry_limit = \"lots\"\n").is_err());
+        assert!(storage_from_str("[storage]\nbackoff_base_ms = -1\n").is_err());
+        assert!(storage_from_str("[storage]\nbackoff_cap_ms = 1.5\n").is_err());
     }
 }

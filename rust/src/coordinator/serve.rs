@@ -44,7 +44,6 @@
 //! callers pass the parsed plan straight through.
 
 use crate::coordinator::proto::{bits_of, DecisionAction, EventItem, Request, Response};
-use crate::coordinator::sweep::{sync_parent_dir, sync_writer};
 use crate::coordinator::teacher::Teacher;
 use crate::data::synth::{SynthConfig, SynthHar};
 use crate::data::Dataset;
@@ -52,6 +51,7 @@ use crate::odl::{AlphaKind, OsElm, OsElmConfig};
 use crate::pruning::{
     warmup_for, AutoTheta, AutoThetaState, Decision, Metric, Pruner, ThetaPolicy,
 };
+use crate::storage::{validate_key, Storage, StorageConfig};
 use crate::util::faults::{self, FaultKind, FaultPlan, NET_CLIENT, NET_SERVER};
 use crate::util::json::{obj, Json};
 use crate::util::rng::{hash_fold, mix64, stream_seed, Rng64};
@@ -59,7 +59,7 @@ use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -118,6 +118,12 @@ pub struct ServeConfig {
     pub warmup: Option<usize>,
     /// Snapshot path: restored at startup if present, written on drain.
     pub snapshot: Option<PathBuf>,
+    /// Result-storage backend for the snapshot (`[storage]` TOML section,
+    /// `--storage` CLI): with a `uri` the snapshot path becomes an object
+    /// key inside that backend; without one it stays a plain local path
+    /// (routed through the local-dir backend so the atomic publish recipe
+    /// is shared, not duplicated).
+    pub storage: StorageConfig,
     /// Master seed for every per-client stream.
     pub seed: u64,
     /// Provisioning-pool seed (None = derived as `seed ^ 0xDA7A`).
@@ -146,6 +152,7 @@ impl Default for ServeConfig {
             thread_per_conn: false,
             warmup: None,
             snapshot: None,
+            storage: StorageConfig::default(),
             seed: 1,
             data_seed: None,
             teacher_error: 0.0,
@@ -512,20 +519,46 @@ fn parse_snapshot(text: &str, cfg: &ServeConfig, pool: &Dataset) -> Result<BTree
     Ok(clients)
 }
 
-/// Publish the snapshot crash-consistently: temp file in the same
-/// directory, fsync, atomic rename, parent-dir fsync — the same recipe
-/// as the sweep engine's results publish.
-fn write_snapshot(path: &Path, text: &str) -> Result<()> {
-    let tmp = path.with_extension("tmp");
-    let file = std::fs::File::create(&tmp)
-        .with_context(|| format!("creating snapshot temp {}", tmp.display()))?;
-    let mut out = std::io::BufWriter::new(file);
-    out.write_all(text.as_bytes())
-        .with_context(|| format!("writing snapshot temp {}", tmp.display()))?;
-    sync_writer(out, &tmp)?;
-    std::fs::rename(&tmp, path)
-        .with_context(|| format!("publishing snapshot {}", path.display()))?;
-    sync_parent_dir(path)
+/// Resolve where the snapshot lives: `(backend, key)`, or `None` when no
+/// snapshot is configured. Without a storage URI the snapshot's own
+/// directory becomes a local-dir backend with the file name as the key,
+/// so the crash-consistent publish recipe (temp sibling, fsync, atomic
+/// rename, parent-dir fsync) is exactly the pre-storage behavior. With a
+/// URI the snapshot path is reinterpreted as an object key inside that
+/// backend — which is why it must be relative.
+fn snapshot_storage(cfg: &ServeConfig) -> Result<Option<(Storage, String)>> {
+    let Some(path) = &cfg.snapshot else {
+        return Ok(None);
+    };
+    match &cfg.storage.uri {
+        Some(uri) => {
+            ensure!(
+                path.is_relative(),
+                "snapshot path {} must be relative when routed to storage '{uri}' \
+                 (it becomes an object key)",
+                path.display()
+            );
+            let key = path
+                .to_str()
+                .with_context(|| format!("snapshot key {} must be UTF-8", path.display()))?
+                .to_string();
+            validate_key(&key).map_err(|e| anyhow::anyhow!("snapshot key '{key}': {e}"))?;
+            let st = Storage::open_uri(uri, &cfg.storage, &FaultPlan::default())?;
+            Ok(Some((st, key)))
+        }
+        None => {
+            let parent = match path.parent() {
+                Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+                _ => PathBuf::from("."),
+            };
+            let key = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .with_context(|| format!("snapshot path {} has no file name", path.display()))?
+                .to_string();
+            Ok(Some((Storage::local_dir(&parent, &cfg.storage), key)))
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -664,15 +697,20 @@ pub fn serve_with<F: FnOnce(SocketAddr)>(
     let pool = provision_pool(cfg)?;
 
     let mut restored = false;
-    let initial = match &cfg.snapshot {
-        Some(path) if path.exists() => {
-            let text = std::fs::read_to_string(path)
-                .with_context(|| format!("reading snapshot {}", path.display()))?;
-            restored = true;
-            parse_snapshot(&text, cfg, &pool)
-                .with_context(|| format!("restoring snapshot {}", path.display()))?
-        }
-        _ => BTreeMap::new(),
+    let snap = snapshot_storage(cfg)?;
+    let initial = match &snap {
+        Some((st, key)) => match st.get_bytes(key)? {
+            Some(bytes) => {
+                let text = String::from_utf8(bytes)
+                    .map_err(|_| anyhow::anyhow!("snapshot object '{key}' is not UTF-8"))?;
+                restored = true;
+                parse_snapshot(&text, cfg, &pool).with_context(|| {
+                    format!("restoring snapshot '{key}' from {} storage", st.backend_name())
+                })?
+            }
+            None => BTreeMap::new(),
+        },
+        None => BTreeMap::new(),
     };
 
     let listener = TcpListener::bind(&cfg.bind)
@@ -755,8 +793,8 @@ pub fn serve_with<F: FnOnce(SocketAddr)>(
     accept_res?;
 
     let clients = shared.clients.into_inner().expect("no handler may hold the lock here");
-    if let Some(path) = &cfg.snapshot {
-        write_snapshot(path, &snapshot_to_string(cfg, &pool, &clients))?;
+    if let Some((st, key)) = &snap {
+        st.put_bytes(key, snapshot_to_string(cfg, &pool, &clients).as_bytes())?;
     }
 
     let mut summary = ServeSummary {
@@ -1971,6 +2009,54 @@ mod tests {
         fixed.fixed_theta = Some(0.16);
         let err = parse_snapshot(&text, &fixed, &pool).unwrap_err().to_string();
         assert!(err.contains("auto"), "{err}");
+    }
+
+    #[test]
+    fn snapshot_routed_through_storage_matches_local_and_restores() {
+        // identical trajectory, two snapshot routes — the drained
+        // snapshot must be byte-identical whether it goes to a plain
+        // local path or through a [storage] backend, and a restart must
+        // restore from the backend (resuming the drained state exactly)
+        let base = std::env::temp_dir().join(format!("odl-serve-storage-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        std::fs::create_dir_all(&base).unwrap();
+
+        let run = |cfg: &ServeConfig, n: usize| -> ServeSummary {
+            let (summary, _lg) = with_server(cfg, &FaultPlan::default(), |addr| {
+                let mut lc = lg_cfg(addr, cfg, "edge-a", n);
+                lc.send_shutdown = true;
+                loadgen(&lc).expect("loadgen ok")
+            });
+            summary
+        };
+
+        let mut plain = tiny_cfg();
+        plain.snapshot = Some(base.join("plain").join("snap.json"));
+        std::fs::create_dir_all(base.join("plain")).unwrap();
+        run(&plain, 24);
+        let want = std::fs::read(plain.snapshot.as_ref().unwrap()).unwrap();
+
+        let mut routed = tiny_cfg();
+        routed.snapshot = Some(PathBuf::from("snap.json"));
+        routed.storage.uri = Some(base.join("store").to_str().unwrap().to_string());
+        run(&routed, 24);
+        let obj = base.join("store").join("snap.json");
+        assert_eq!(std::fs::read(&obj).unwrap(), want, "storage-routed snapshot differs");
+
+        // restart: the server restores from the backend; the replayed
+        // seeded stream brings nothing new, so the re-drained snapshot
+        // is byte-identical to the first one
+        let summary = run(&routed, 24);
+        assert!(summary.restored, "restart did not restore from storage");
+        assert_eq!(std::fs::read(&obj).unwrap(), want);
+
+        // an absolute snapshot path cannot become an object key
+        let mut bad = tiny_cfg();
+        bad.snapshot = Some(base.join("abs.json"));
+        bad.storage.uri = routed.storage.uri.clone();
+        let err = snapshot_storage(&bad).unwrap_err().to_string();
+        assert!(err.contains("must be relative"), "{err}");
+        let _ = std::fs::remove_dir_all(&base);
     }
 
     #[test]

@@ -15,7 +15,16 @@
 //! - **Liveness**: the shard's streaming results rows double as its
 //!   heartbeat — any byte growth of the shard file counts as progress.
 //!   A child whose file stops growing for `heartbeat_timeout_s` is
-//!   presumed hung, killed, and relaunched.
+//!   presumed hung, killed, and relaunched. Two deliberate asymmetries
+//!   ([`Heartbeat`]): a *failed* length probe (transient stat error,
+//!   storage backend briefly unavailable) resets the static streak
+//!   instead of reading as "no growth" — only consecutive *successful*
+//!   static probes count toward the timeout, so an I/O hiccup can never
+//!   false-kill a healthy child; and before a child's **first observed
+//!   byte of growth** the allowance is `heartbeat_timeout_s ×
+//!   grace_factor` — artifact provisioning legitimately writes nothing
+//!   for a long stretch, and killing through it would relaunch into the
+//!   same stall until quarantine.
 //! - **Crashes**: a child that exits nonzero, dies on a signal, or exits
 //!   zero with an incomplete stream is relaunched. Every relaunch goes
 //!   through the existing `--resume` path, so it continues from the last
@@ -51,6 +60,7 @@ use super::sweep::{
     merge_shard_files, resume_shard_to_file_with_faults, shard_stream_complete, MergeOutcome,
     ShardSpec, SweepPlan, SweepSpec,
 };
+use crate::storage::{key_for_path, Storage};
 use crate::util::faults::FaultPlan;
 use anyhow::{ensure, Context, Result};
 use std::path::{Path, PathBuf};
@@ -73,6 +83,11 @@ pub struct SuperviseConfig {
     pub retry_budget: usize,
     /// Kill a child whose results file has not grown for this long.
     pub heartbeat_timeout_s: f64,
+    /// Pre-first-byte allowance multiplier: until an attempt's first
+    /// observed byte of growth, the heartbeat window is
+    /// `heartbeat_timeout_s × grace_factor` (≥ 1), covering long
+    /// artifact provisioning before the first row lands.
+    pub grace_factor: f64,
     /// First relaunch delay; doubles per relaunch.
     pub backoff_base_ms: u64,
     /// Ceiling on the relaunch delay.
@@ -94,6 +109,7 @@ impl Default for SuperviseConfig {
             workers_per_shard: 1,
             retry_budget: 2,
             heartbeat_timeout_s: 60.0,
+            grace_factor: 3.0,
             backoff_base_ms: 250,
             backoff_cap_ms: 5000,
             poll_ms: 50,
@@ -186,6 +202,9 @@ pub struct ProcessLauncher {
     /// `--config` forwarded to each child, so the child re-derives the
     /// exact same spec (and therefore grid hash) as the supervisor.
     pub config_path: PathBuf,
+    /// `--storage` forwarded to each child, so shard streams hydrate
+    /// from and publish to the shared backend.
+    pub storage_uri: Option<String>,
 }
 
 pub struct ProcessChild {
@@ -216,6 +235,9 @@ impl Launcher for ProcessLauncher {
             .stdin(std::process::Stdio::null())
             .stdout(std::process::Stdio::null())
             .stderr(std::process::Stdio::inherit());
+        if let Some(uri) = &self.storage_uri {
+            cmd.arg("--storage").arg(uri);
+        }
         if let Some(spec) = &cfg.fault_spec {
             if attempt < cfg.fault_attempts {
                 cmd.arg("--inject-faults").arg(spec);
@@ -354,13 +376,92 @@ pub fn shard_out_paths(out: &Path, of: usize) -> Vec<PathBuf> {
 
 enum ShardState<C> {
     Pending { attempt: usize, not_before: Instant },
-    Running { child: C, attempt: usize, last_len: u64, last_progress: Instant },
+    Running { child: C, attempt: usize, hb: Heartbeat },
     Done,
     Quarantined,
 }
 
-fn file_len(path: &Path) -> u64 {
-    std::fs::metadata(path).map(|m| m.len()).unwrap_or(0)
+/// Byte-growth liveness tracker for one running attempt. The two rules
+/// the bugfixes pinned down:
+///
+/// * only **consecutive successful** static probes count toward the
+///   timeout — a probe *error* (transient stat failure, storage backend
+///   briefly unavailable) means "liveness unknown" and resets the
+///   streak, where the old `unwrap_or(0)` read it as "file static" and
+///   could false-kill a healthy child;
+/// * until the attempt's first observed byte of growth the allowance is
+///   the *grace* window (`heartbeat_timeout_s × grace_factor`), so a
+///   child doing long artifact provisioning before its first row is not
+///   killed into the same stall over and over until quarantine.
+struct Heartbeat {
+    /// Last successfully observed length (absent file = 0).
+    last_len: u64,
+    /// Whether this attempt has ever been observed growing the file.
+    grew: bool,
+    /// Start of the current run of consecutive successful static
+    /// probes; `None` after growth, a probe error, or at launch.
+    static_since: Option<Instant>,
+}
+
+impl Heartbeat {
+    /// Tracker for a fresh launch; `initial` is the launch-time probe
+    /// (`None` for "file absent" *and* for a failed probe — either way
+    /// the first in-flight observation establishes the baseline).
+    fn start(initial: Option<u64>) -> Heartbeat {
+        Heartbeat {
+            last_len: initial.unwrap_or(0),
+            grew: false,
+            static_since: None,
+        }
+    }
+
+    /// Fold in one probe made at `now`.
+    fn observe(&mut self, probe: std::result::Result<Option<u64>, String>, now: Instant) {
+        match probe {
+            // liveness unknown — never count an error as "static"
+            Err(_) => self.static_since = None,
+            Ok(len) => {
+                let len = len.unwrap_or(0);
+                if len > self.last_len {
+                    self.last_len = len;
+                    self.grew = true;
+                    self.static_since = None;
+                } else {
+                    self.static_since.get_or_insert(now);
+                }
+            }
+        }
+    }
+
+    /// Whether the static streak has outlived its allowance: `timeout`
+    /// once the attempt has produced bytes, `grace` before that.
+    fn expired(&self, now: Instant, timeout: Duration, grace: Duration) -> bool {
+        let limit = if self.grew { timeout } else { grace };
+        self.static_since
+            .is_some_and(|t| now.saturating_duration_since(t) >= limit)
+    }
+}
+
+/// One heartbeat length probe — through the storage backend when the
+/// study runs on one (multi-host placement probes the shared object),
+/// directly via the filesystem otherwise. Errors come back as `Err`,
+/// never as a zero length: [`Heartbeat::observe`] must be able to tell
+/// "could not look" from "looked, no growth".
+fn probe_len(
+    storage: Option<&Storage>,
+    path: &Path,
+) -> std::result::Result<Option<u64>, String> {
+    match storage {
+        Some(st) => match key_for_path(path) {
+            Ok(key) => st.probe(&key),
+            Err(e) => Err(format!("{e:#}")),
+        },
+        None => match std::fs::metadata(path) {
+            Ok(m) => Ok(Some(m.len())),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e.to_string()),
+        },
+    }
 }
 
 /// Record a failed attempt and decide the shard's next state: backoff
@@ -393,13 +494,17 @@ fn retire<C>(
 /// `shard_paths[i]`. Shards whose file already passes
 /// [`shard_stream_complete`] are recognized without a launch, so a
 /// degraded study can be re-supervised to finish only its quarantined
-/// slices.
+/// slices. With `storage` set, heartbeat probes go through the backend
+/// (the callers pass one only for backends whose objects track the live
+/// spool — today the local-dir backend, where the spool *is* the
+/// object).
 pub fn supervise<L: Launcher>(
     plan: &SweepPlan,
     cfg: &SuperviseConfig,
     launcher: &L,
     shard_paths: &[PathBuf],
     merged_out: Option<&Path>,
+    storage: Option<&Storage>,
 ) -> Result<SuperviseOutcome> {
     let of = shard_paths.len();
     ensure!(of >= 1, "supervise needs at least one shard path");
@@ -407,7 +512,12 @@ pub fn supervise<L: Launcher>(
         cfg.heartbeat_timeout_s > 0.0,
         "heartbeat timeout must be positive"
     );
+    ensure!(
+        cfg.grace_factor >= 1.0,
+        "grace factor must be at least 1 (it scales the heartbeat timeout)"
+    );
     let timeout = Duration::from_secs_f64(cfg.heartbeat_timeout_s);
+    let grace = timeout.mul_f64(cfg.grace_factor);
 
     let mut reports: Vec<ShardReport> = (0..of)
         .map(|s| ShardReport {
@@ -449,8 +559,7 @@ pub fn supervise<L: Launcher>(
                             Ok(child) => ShardState::Running {
                                 child,
                                 attempt,
-                                last_len: file_len(path),
-                                last_progress: Instant::now(),
+                                hb: Heartbeat::start(probe_len(storage, path).ok().flatten()),
                             },
                             Err(e) => {
                                 retire(&mut reports[s], cfg, attempt, format!("launch: {e:#}"))
@@ -461,8 +570,7 @@ pub fn supervise<L: Launcher>(
                 ShardState::Running {
                     mut child,
                     attempt,
-                    mut last_len,
-                    mut last_progress,
+                    mut hb,
                 } => match child.poll_exit() {
                     Ok(Some(true)) if shard_stream_complete(plan, shard, path) => ShardState::Done,
                     Ok(Some(true)) => retire(
@@ -489,12 +597,8 @@ pub fn supervise<L: Launcher>(
                         retire(&mut reports[s], cfg, attempt, format!("poll: {e:#}"))
                     }
                     Ok(None) => {
-                        let len = file_len(path);
-                        if len > last_len {
-                            last_len = len;
-                            last_progress = Instant::now();
-                        }
-                        if last_progress.elapsed() >= timeout {
+                        hb.observe(probe_len(storage, path), Instant::now());
+                        if hb.expired(Instant::now(), timeout, grace) {
                             child.kill();
                             // a static file is only a hang if the stream is
                             // still incomplete — a child that wrote its
@@ -516,12 +620,7 @@ pub fn supervise<L: Launcher>(
                                 )
                             }
                         } else {
-                            ShardState::Running {
-                                child,
-                                attempt,
-                                last_len,
-                                last_progress,
-                            }
+                            ShardState::Running { child, attempt, hb }
                         }
                     }
                 },
@@ -632,7 +731,7 @@ mod tests {
         let paths = shard_out_paths(&merged, 2);
         let cfg = fast_cfg();
         let launcher = ThreadLauncher::new(Arc::new(spec));
-        let out = supervise(&plan, &cfg, &launcher, &paths, Some(&merged)).unwrap();
+        let out = supervise(&plan, &cfg, &launcher, &paths, Some(&merged), None).unwrap();
         assert_eq!(out.status, SuperviseStatus::Complete);
         assert_eq!(out.status.exit_code(), 0);
         assert!(out.merged.is_some());
@@ -643,7 +742,7 @@ mod tests {
         assert_eq!(std::fs::read(&merged).unwrap(), single);
         // re-supervising a finished study recognizes the durable shards
         // without a single launch and republishes the identical merge
-        let again = supervise(&plan, &cfg, &launcher, &paths, Some(&merged)).unwrap();
+        let again = supervise(&plan, &cfg, &launcher, &paths, Some(&merged), None).unwrap();
         assert_eq!(again.status, SuperviseStatus::Complete);
         assert!(again.shards.iter().all(|r| r.attempts == 0));
         assert_eq!(std::fs::read(&merged).unwrap(), single);
@@ -663,7 +762,7 @@ mod tests {
             ..fast_cfg()
         };
         let launcher = ThreadLauncher::new(Arc::new(spec));
-        let out = supervise(&plan, &cfg, &launcher, &paths, Some(&merged)).unwrap();
+        let out = supervise(&plan, &cfg, &launcher, &paths, Some(&merged), None).unwrap();
         assert_eq!(out.status, SuperviseStatus::Complete);
         for r in &out.shards {
             assert_eq!(r.attempts, 2, "shard {} should fail once then heal", r.index);
@@ -686,7 +785,7 @@ mod tests {
             ..fast_cfg()
         };
         let launcher = ThreadLauncher::new(Arc::new(spec));
-        let out = supervise(&plan, &cfg, &launcher, &paths, Some(&merged)).unwrap();
+        let out = supervise(&plan, &cfg, &launcher, &paths, Some(&merged), None).unwrap();
         assert_eq!(out.status, SuperviseStatus::Failed);
         assert_eq!(out.status.exit_code(), 3);
         assert!(out.merged.is_none());
@@ -711,7 +810,7 @@ mod tests {
             ..fast_cfg()
         };
         let launcher = ThreadLauncher::new(Arc::new(spec));
-        let out = supervise(&plan, &cfg, &launcher, &paths, Some(&merged)).unwrap();
+        let out = supervise(&plan, &cfg, &launcher, &paths, Some(&merged), None).unwrap();
         assert_eq!(out.status, SuperviseStatus::Degraded);
         assert_eq!(out.status.exit_code(), 2);
         assert!(out.merged.is_none() && !merged.exists());
@@ -805,7 +904,7 @@ mod tests {
             heartbeat_timeout_s: 0.05,
             ..fast_cfg()
         };
-        let out = supervise(&plan, &cfg, &launcher, &paths, Some(&merged)).unwrap();
+        let out = supervise(&plan, &cfg, &launcher, &paths, Some(&merged), None).unwrap();
         assert_eq!(out.status, SuperviseStatus::Complete);
         assert_eq!(kills.load(Ordering::SeqCst), 1, "the hung child is killed");
         assert_eq!(out.shards[0].attempts, 2);
@@ -815,6 +914,107 @@ mod tests {
             .unwrap()
             .contains("no heartbeat"));
         assert_eq!(out.shards[1].attempts, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn heartbeat_probe_errors_do_not_count_as_no_growth() {
+        // deterministic synthetic clock: t0 + n·10ms observations
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let timeout = Duration::from_millis(30);
+        let grace = Duration::from_millis(90);
+        let mut hb = Heartbeat::start(Some(10));
+        // growth, then a static streak that would expire at +40ms…
+        hb.observe(Ok(Some(20)), at(0));
+        hb.observe(Ok(Some(20)), at(10));
+        assert!(!hb.expired(at(39), timeout, grace));
+        // …but a probe error at +20ms resets the streak: liveness was
+        // unknown, so the static window restarts at the next success
+        hb.observe(Err("injected stat failure".into()), at(20));
+        assert!(!hb.expired(at(60), timeout, grace));
+        hb.observe(Ok(Some(20)), at(60));
+        assert!(!hb.expired(at(89), timeout, grace));
+        assert!(hb.expired(at(90), timeout, grace));
+        // under the old unwrap_or(0) semantics an *erroring* probe also
+        // looked like a shrink-to-zero "static" read; here even a
+        // permanent error stream never expires the heartbeat
+        let mut hb = Heartbeat::start(Some(10));
+        for n in 0..50 {
+            hb.observe(Err("backend unavailable".into()), at(n * 10));
+        }
+        assert!(!hb.expired(at(1000), timeout, grace));
+    }
+
+    #[test]
+    fn heartbeat_grants_grace_before_first_byte_and_timeout_after() {
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let timeout = Duration::from_millis(30);
+        let grace = Duration::from_millis(90);
+        // provisioning child: file absent, no bytes yet — static probes
+        // count against the grace window, not the plain timeout
+        let mut hb = Heartbeat::start(None);
+        hb.observe(Ok(None), at(0));
+        assert!(!hb.expired(at(89), timeout, grace), "inside grace");
+        assert!(hb.expired(at(90), timeout, grace), "grace exhausted");
+        // once the first byte lands, the allowance tightens to timeout
+        let mut hb = Heartbeat::start(None);
+        hb.observe(Ok(None), at(0));
+        hb.observe(Ok(Some(64)), at(50)); // first growth, inside grace
+        hb.observe(Ok(Some(64)), at(60));
+        assert!(!hb.expired(at(89), timeout, grace));
+        assert!(hb.expired(at(90), timeout, grace));
+        // a relaunch onto a resumed spool: initial length is nonzero but
+        // the *attempt* has produced nothing — still the grace window
+        let mut hb = Heartbeat::start(Some(4096));
+        hb.observe(Ok(Some(4096)), at(0));
+        assert!(!hb.expired(at(89), timeout, grace));
+        assert!(hb.expired(at(90), timeout, grace));
+    }
+
+    #[test]
+    fn supervise_rejects_a_sub_one_grace_factor() {
+        let (spec, plan, dir, _single) = setup("odl_har_supervise_grace_cfg_test");
+        let paths = shard_out_paths(&dir.join("merged.jsonl"), 2);
+        let cfg = SuperviseConfig {
+            grace_factor: 0.5,
+            ..fast_cfg()
+        };
+        let launcher = ThreadLauncher::new(Arc::new(spec));
+        let err = supervise(&plan, &cfg, &launcher, &paths, None, None).unwrap_err();
+        assert!(format!("{err:#}").contains("grace factor"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn supervised_run_probing_through_storage_merges_byte_identically() {
+        // the multi-host shape on one host: shard spools live inside a
+        // local-dir storage root (spool == object), the supervisor's
+        // heartbeat probes go through the backend, and the merge of the
+        // published set is byte-identical to the single-process run
+        use crate::storage::{Storage, StorageConfig};
+        let (spec, plan, dir, single) = setup("odl_har_supervise_storage_test");
+        let store = dir.join("store");
+        std::fs::create_dir_all(&store).unwrap();
+        let st = Storage::local_dir(&store, &StorageConfig::default());
+        let merged = store.join("merged.jsonl");
+        let paths = shard_out_paths(&merged, 2);
+        let cfg = SuperviseConfig {
+            // one shard tears a write on its first attempt; the retry
+            // resumes and the probe path sees every intermediate length
+            fault_spec: Some("0:tear@2#1".to_string()),
+            fault_attempts: 1,
+            ..fast_cfg()
+        };
+        let launcher = ThreadLauncher::new(Arc::new(spec));
+        let out = supervise(&plan, &cfg, &launcher, &paths, Some(&merged), Some(&st)).unwrap();
+        assert_eq!(out.status, SuperviseStatus::Complete);
+        assert_eq!(std::fs::read(&merged).unwrap(), single);
+        // the shard spools are storage objects — listable and pullable
+        let keys: Vec<String> = st.list("").unwrap().into_iter().map(|m| m.key).collect();
+        assert!(keys.contains(&"merged.shard1of2.jsonl".to_string()), "{keys:?}");
+        assert!(keys.contains(&"merged.jsonl".to_string()), "{keys:?}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -113,6 +113,7 @@ use super::fleet::{
 use super::metrics::{FleetReport, MetricsMode};
 use crate::data::Dataset;
 use crate::odl::OsElm;
+use crate::storage::{key_for_path, pull_to_file, push_from_file, Storage};
 use crate::util::faults::{self, FaultKind, FaultPlan};
 use crate::util::json::{obj, Json};
 use crate::util::parallel;
@@ -134,8 +135,13 @@ use std::sync::{Arc, Mutex};
 /// switched the shard partitioner to cost-weighted cuts — the stream
 /// layout is unchanged, but a shard header's `start`/`count` for a given
 /// grid can differ from v3's, so v3 shard files must not be resumed or
-/// merged under v4 semantics (the header byte-compare refuses them).
-const SCHEMA: &str = "odl-har-sweep/v4";
+/// merged under v4 semantics (the header byte-compare refuses them). v5
+/// switched the cost model's horizon weighting from whole seconds to
+/// integer milliseconds — the stream layout is again unchanged, but
+/// cost-weighted cuts (and so a shard header's `start`/`count`) can
+/// differ from v4's on fractional-horizon grids, so cross-version
+/// resumes/merges are refused the same way.
+const SCHEMA: &str = "odl-har-sweep/v5";
 
 /// A declared scenario grid. Every axis left at its one-element default
 /// degenerates to the base scenario's value, so a sweep with only
@@ -645,10 +651,14 @@ impl SweepPlan {
     /// horizon, the two knobs that dominate a cell's wall clock (every
     /// edge steps through every simulated second). Only the *ratios*
     /// matter to the partitioner, so the estimate being in arbitrary
-    /// units is fine; it must merely be deterministic.
+    /// units is fine; it must merely be deterministic. The horizon is
+    /// weighted in integer **milliseconds**: truncating to whole seconds
+    /// made 1.0s and 1.9s weigh identically and collapsed sub-second
+    /// grids to uniform cost, skewing [`Self::cost_shard_ranges`] cuts.
     pub fn cell_cost(&self, i: usize) -> u64 {
         let (cell, sc) = &self.cells[i];
-        (cell.n_edges as u64).max(1) * (sc.horizon_s.max(1.0) as u64)
+        let horizon_ms = (sc.horizon_s.max(0.0) * 1000.0).round() as u64;
+        (cell.n_edges as u64).max(1) * horizon_ms.max(1)
     }
 
     /// Partition the cell order into `of` disjoint, contiguous,
@@ -1393,35 +1403,94 @@ pub fn merge_shard_files(
     })
 }
 
-/// Flush a buffered results writer and fsync its file — the durability
-/// half of every replace-by-rename publish (the rename itself is only
-/// atomic against crashes once the temp file's bytes are on disk).
-pub(crate) fn sync_writer(out: std::io::BufWriter<std::fs::File>, path: &Path) -> Result<()> {
-    let file = out
-        .into_inner()
-        .map_err(|e| anyhow::anyhow!("flushing {}: {}", path.display(), e.error()))?;
-    file.sync_all()
-        .with_context(|| format!("fsyncing {}", path.display()))?;
-    Ok(())
+// The atomic-publish primitives (fsync'd temp-file + rename) moved to
+// `storage::local` — the local storage backend and the sweep engine
+// share the exact same recipe. Re-exported so in-crate callers
+// (serve's snapshot path) keep their import.
+pub(crate) use crate::storage::local::{sync_parent_dir, sync_writer, temp_sibling};
+
+/// [`resume_shard_to_file_with_faults`] routed through a
+/// [`Storage`] backend (when one is configured): an absent local spool
+/// is first hydrated from the shard's object — so a shard can move
+/// hosts mid-study and resume from its published rows — and the
+/// finished spool is published back under its file-name key. A local
+/// spool that exists is always preferred over the object (the spool can
+/// only be *ahead*: the object is a completed publish, the spool may
+/// hold rows written since). With `storage: None` this is exactly the
+/// plain local call.
+pub fn resume_shard_via_storage(
+    spec: &SweepSpec,
+    plan: &SweepPlan,
+    shard: ShardSpec,
+    path: &Path,
+    faults: &FaultPlan,
+    storage: Option<&Storage>,
+) -> Result<ResumeOutcome> {
+    if let Some(st) = storage {
+        if !path.exists() && pull_to_file(st, &key_for_path(path)?, path)? {
+            eprintln!(
+                "sweep: hydrated {} from {} storage",
+                path.display(),
+                st.backend_name()
+            );
+        }
+    }
+    let outcome = resume_shard_to_file_with_faults(spec, plan, shard, path, faults)?;
+    if let Some(st) = storage {
+        push_from_file(st, path, &key_for_path(path)?)?;
+    }
+    Ok(outcome)
 }
 
-/// Fsync the directory containing `path`, so a rename into it survives a
-/// power loss (on POSIX the directory entry itself must be synced; on
-/// other platforms this is a no-op).
-pub(crate) fn sync_parent_dir(path: &Path) -> Result<()> {
-    #[cfg(unix)]
-    {
-        let dir = match path.parent() {
-            Some(d) if !d.as_os_str().is_empty() => d,
-            _ => Path::new("."),
-        };
-        std::fs::File::open(dir)
-            .and_then(|d| d.sync_all())
-            .with_context(|| format!("fsyncing directory {}", dir.display()))?;
+/// [`run_shard_to_file_with_faults`] with the finished stream published
+/// to `storage` (when one is configured). See
+/// [`resume_shard_via_storage`].
+pub fn run_shard_via_storage(
+    spec: &SweepSpec,
+    plan: &SweepPlan,
+    shard: ShardSpec,
+    path: &Path,
+    faults: &FaultPlan,
+    storage: Option<&Storage>,
+) -> Result<SweepOutcome> {
+    let outcome = run_shard_to_file_with_faults(spec, plan, shard, path, faults)?;
+    if let Some(st) = storage {
+        push_from_file(st, path, &key_for_path(path)?)?;
     }
-    #[cfg(not(unix))]
-    let _ = path;
-    Ok(())
+    Ok(outcome)
+}
+
+/// [`merge_shard_files`] pulling from a [`Storage`] backend: any input
+/// path absent locally is hydrated from the object named by its file
+/// name (this is how `merge` on one host recombines shards published
+/// from others), the merged output is published back, and the merged
+/// bytes are — by `merge_shard_files`'s own contract — identical to a
+/// local single-process run. Inputs present locally are used as-is.
+pub fn merge_via_storage(
+    plan: &SweepPlan,
+    inputs: &[std::path::PathBuf],
+    out: &Path,
+    storage: Option<&Storage>,
+) -> Result<MergeOutcome> {
+    if let Some(st) = storage {
+        for path in inputs {
+            if !path.exists() {
+                let key = key_for_path(path)?;
+                ensure!(
+                    pull_to_file(st, &key, path)?,
+                    "shard file {} is absent locally and {} storage has no object '{}'",
+                    path.display(),
+                    st.backend_name(),
+                    key
+                );
+            }
+        }
+    }
+    let outcome = merge_shard_files(plan, inputs, out)?;
+    if let Some(st) = storage {
+        push_from_file(st, out, &key_for_path(out)?)?;
+    }
+    Ok(outcome)
 }
 
 /// Whether `path` holds a complete, valid results stream for `shard`
@@ -1525,16 +1594,6 @@ fn shard_frame(
         );
     }
     Ok((shard, range, lines.len()))
-}
-
-/// Sibling path for atomic replace-by-rename writes (resume's prefix
-/// rewrite, merge's output): same directory, `.tmp`-suffixed name, so
-/// the rename can never cross a filesystem boundary.
-fn temp_sibling(path: &Path) -> std::path::PathBuf {
-    path.with_file_name(match path.file_name() {
-        Some(name) => format!("{}.tmp", name.to_string_lossy()),
-        None => ".tmp".to_string(),
-    })
 }
 
 fn create_results_file(path: &Path) -> Result<std::io::BufWriter<std::fs::File>> {
@@ -2641,12 +2700,59 @@ mod tests {
         spec.edge_counts = vec![1, 2, 3, 18];
         let plan = spec.plan();
         assert_eq!(plan.cells.len(), 4);
-        let h = 80; // small_base horizon_s
+        let h = 80_000; // small_base horizon_s, in integer milliseconds
         assert_eq!(plan.cell_cost(0), h);
         assert_eq!(plan.cell_cost(3), 18 * h);
         assert_eq!(plan.shard_ranges(2), vec![0..3, 3..4]);
         // the public entry and the cost partitioner are the same split
         assert_eq!(plan.shard_ranges(2), plan.cost_shard_ranges(2));
+    }
+
+    #[test]
+    fn cell_cost_weighs_fractional_horizons_in_milliseconds() {
+        // 1.0s vs 1.9s must not weigh identically (the whole-second
+        // truncation bug), and sub-second horizons must not collapse to
+        // the 1-unit floor
+        let mut spec = k_cell_spec(3);
+        spec.edge_counts = vec![1];
+        let mut plan = spec.plan();
+        for (i, h) in [(0usize, 1.0f64), (1, 1.9), (2, 0.25)] {
+            plan.cells[i].1.horizon_s = h;
+        }
+        assert_eq!(plan.cell_cost(0), 1000);
+        assert_eq!(plan.cell_cost(1), 1900);
+        assert_eq!(plan.cell_cost(2), 250);
+        // degenerate horizons still cost at least one unit
+        plan.cells[0].1.horizon_s = 0.0;
+        assert_eq!(plan.cell_cost(0), 1);
+    }
+
+    #[test]
+    fn cost_cuts_balance_fractional_horizon_grids() {
+        // four 1-edge cells with horizons 0.4 / 0.4 / 0.4 / 1.9 — costs
+        // 400/400/400/1900 ms (total 3100, half 1550). Whole-second
+        // truncation clamped every horizon to 1, saw uniform cost, and
+        // cut 2|2 — loads 800 vs 2300; millisecond weighting cuts 3|1 —
+        // loads 1200 vs 1900, the best contiguous split. One pinned
+        // data seed keeps a single artifact group, so no boundary snap
+        // can mask the cost decision.
+        let mut spec = k_cell_spec(4);
+        spec.edge_counts = vec![1];
+        spec.base.data_seed = Some(0x5EED);
+        let mut plan = spec.plan();
+        for cell in plan.cells.iter_mut().take(3) {
+            cell.1.horizon_s = 0.4;
+        }
+        plan.cells[3].1.horizon_s = 1.9;
+        assert_eq!(plan.cost_shard_ranges(2), vec![0..3, 3..4]);
+        // sub-second grids keep real ratios too: horizons 0.2/0.2/0.8/0.8
+        // (costs 200/200/800/800, prefix 200/400/1200/2000) cut at the
+        // position nearest the half-cost point — 3, not the count split 2
+        let mut plan = spec.plan();
+        for (i, cell) in plan.cells.iter_mut().enumerate() {
+            cell.1.horizon_s = if i < 2 { 0.2 } else { 0.8 };
+        }
+        assert_eq!(plan.cost_shard_ranges(2), vec![0..3, 3..4]);
     }
 
     #[test]
@@ -2824,6 +2930,119 @@ mod tests {
                 );
             }
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn merge_pulling_shards_from_storage_is_byte_identical_to_local() {
+        // shards publish to a shared store from one "host" directory;
+        // merge on another host (no shard files present locally) pulls
+        // them by key — the merged bytes must equal the single-process
+        // run, and the published merged object must round-trip those
+        // same bytes. The storage backend runs under injected transient
+        // faults to prove the retry policy is byte-invisible.
+        use crate::storage::{Storage, StorageConfig};
+        let spec = small_spec();
+        let plan = spec.plan();
+        let of = 2usize;
+        let dir = std::env::temp_dir().join("odl_har_sweep_storage_merge_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let full_path = dir.join("full.jsonl");
+        run_planned_to_file(&spec, &plan, &full_path).unwrap();
+        let full = std::fs::read_to_string(&full_path).unwrap();
+        let store = dir.join("store");
+        let cfg = StorageConfig {
+            backoff_base_ms: 1,
+            backoff_cap_ms: 4,
+            ..StorageConfig::default()
+        };
+        // producer host: first two storage ops fault, retries converge
+        let chaos = FaultPlan::parse("5:sioerr@0,stear@1").unwrap();
+        let producer = Storage::open_uri(store.to_str().unwrap(), &cfg, &chaos).unwrap();
+        let host_a = dir.join("host_a");
+        for index in 1..=of {
+            let path = host_a.join(format!("sweep.shard{index}of{of}.jsonl"));
+            run_shard_via_storage(
+                &spec,
+                &plan,
+                ShardSpec { index, of },
+                &path,
+                &FaultPlan::default(),
+                Some(&producer),
+            )
+            .unwrap();
+        }
+        // consumer host: shard files named but absent — hydrated by key
+        let consumer = Storage::open_uri(
+            store.to_str().unwrap(),
+            &cfg,
+            &FaultPlan::default(),
+        )
+        .unwrap();
+        let host_b = dir.join("host_b");
+        std::fs::create_dir_all(&host_b).unwrap();
+        let inputs: Vec<std::path::PathBuf> = (1..=of)
+            .map(|i| host_b.join(format!("sweep.shard{i}of{of}.jsonl")))
+            .collect();
+        let merged = host_b.join("merged.jsonl");
+        let outcome = merge_via_storage(&plan, &inputs, &merged, Some(&consumer)).unwrap();
+        assert_eq!((outcome.shards, outcome.cells), (of, plan.cells.len()));
+        assert_eq!(
+            std::fs::read_to_string(&merged).unwrap(),
+            full,
+            "merge pulling from storage must reproduce the single-process file"
+        );
+        // the merged object published back to the store is those bytes too
+        assert_eq!(
+            consumer.get_bytes("merged.jsonl").unwrap().unwrap(),
+            full.as_bytes(),
+        );
+        // a missing object is a hard, named error — not an empty merge
+        let absent = vec![host_b.join("sweep.shard9of9.jsonl")];
+        let err = merge_via_storage(&plan, &absent, &merged, Some(&consumer)).unwrap_err();
+        assert!(format!("{err:#}").contains("sweep.shard9of9.jsonl"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_via_storage_hydrates_an_absent_spool() {
+        // a shard completes on host A and publishes its stream; host B
+        // then resumes the same shard with no local file — the spool
+        // hydrates from the object and resume reports already_complete
+        // without re-running a single cell (cross-host shard movement)
+        use crate::storage::{Storage, StorageConfig};
+        let spec = small_spec();
+        let plan = spec.plan();
+        let dir = std::env::temp_dir().join("odl_har_sweep_storage_resume_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let store = dir.join("store");
+        let st = Storage::open_uri(
+            store.to_str().unwrap(),
+            &StorageConfig::default(),
+            &FaultPlan::default(),
+        )
+        .unwrap();
+        let shard = ShardSpec { index: 1, of: 2 };
+        let a_path = dir.join("a").join("sweep.shard1of2.jsonl");
+        run_shard_via_storage(&spec, &plan, shard, &a_path, &FaultPlan::default(), Some(&st))
+            .unwrap();
+        let b_path = dir.join("b").join("sweep.shard1of2.jsonl");
+        let out = resume_shard_via_storage(
+            &spec,
+            &plan,
+            shard,
+            &b_path,
+            &FaultPlan::default(),
+            Some(&st),
+        )
+        .unwrap();
+        assert!(out.already_complete, "hydrated spool must resume as complete");
+        assert_eq!(
+            std::fs::read_to_string(&b_path).unwrap(),
+            std::fs::read_to_string(&a_path).unwrap(),
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -26,4 +26,5 @@ pub mod linalg;
 pub mod odl;
 pub mod pruning;
 pub mod runtime;
+pub mod storage;
 pub mod util;

@@ -335,6 +335,7 @@ fn main() -> Result<()> {
                 .transpose()?;
             let fault_spec = args.opt("--inject-faults")?;
             let fault_attempts = args.opt_usize_opt("--fault-attempts")?;
+            let storage_uri = args.opt("--storage")?;
             // `--shard auto[:N]` switches to the self-healing supervisor
             // (coordinator::supervise): spawn one child per shard, watch,
             // relaunch onto --resume, quarantine, auto-merge
@@ -363,6 +364,7 @@ fn main() -> Result<()> {
                     heartbeat,
                     fault_spec,
                     fault_attempts,
+                    storage_uri,
                     resume,
                     dry_run,
                     &out,
@@ -403,6 +405,13 @@ fn main() -> Result<()> {
             });
             args.finish()?;
             let mut spec = config::sweep_from_file(&PathBuf::from(cfg_path))?;
+            // --storage beats [storage] uri beats no backend; retries and
+            // backoff always come from the TOML section
+            let mut stcfg = config::storage_from_file(&PathBuf::from(cfg_path))?;
+            if storage_uri.is_some() {
+                stcfg.uri = storage_uri;
+            }
+            let storage = odl_har::storage::Storage::open(&stcfg, &faults)?;
             if let Some(w) = workers_cli {
                 spec.workers = w;
             }
@@ -442,8 +451,13 @@ fn main() -> Result<()> {
             // the banner plan above is the one the engine runs — planned
             // entry points avoid re-enumerating a large grid
             let stats = if resume {
-                let outcome = odl_har::coordinator::sweep::resume_shard_to_file_with_faults(
-                    &spec, &plan, shard, &out, &faults,
+                let outcome = odl_har::coordinator::sweep::resume_shard_via_storage(
+                    &spec,
+                    &plan,
+                    shard,
+                    &out,
+                    &faults,
+                    storage.as_ref(),
                 )?;
                 if outcome.already_complete {
                     println!(
@@ -459,8 +473,13 @@ fn main() -> Result<()> {
                 }
                 outcome.stats
             } else {
-                odl_har::coordinator::sweep::run_shard_to_file_with_faults(
-                    &spec, &plan, shard, &out, &faults,
+                odl_har::coordinator::sweep::run_shard_via_storage(
+                    &spec,
+                    &plan,
+                    shard,
+                    &out,
+                    &faults,
+                    storage.as_ref(),
                 )?
                 .stats
             };
@@ -485,11 +504,12 @@ fn main() -> Result<()> {
                 .opt("--out")?
                 .map(PathBuf::from)
                 .unwrap_or_else(|| PathBuf::from("results/sweep.jsonl"));
+            let storage_uri = args.opt("--storage")?;
             let positional = args.positional();
             // a stray flag must error like every other subcommand, not be
             // opened as a shard file
             if let Some(flag) = positional.iter().find(|a| a.starts_with("--")) {
-                bail!("unrecognized argument '{flag}' (merge takes --config, --out, and shard files)");
+                bail!("unrecognized argument '{flag}' (merge takes --config, --out, --storage, and shard files)");
             }
             let inputs: Vec<PathBuf> = positional.into_iter().map(PathBuf::from).collect();
             if inputs.is_empty() {
@@ -498,8 +518,22 @@ fn main() -> Result<()> {
             }
             let spec = config::sweep_from_file(&PathBuf::from(cfg_path))?;
             let plan = spec.plan();
-            let outcome =
-                odl_har::coordinator::sweep::merge_shard_files(&plan, &inputs, &out)?;
+            let mut stcfg = config::storage_from_file(&PathBuf::from(cfg_path))?;
+            if storage_uri.is_some() {
+                stcfg.uri = storage_uri;
+            }
+            let storage = odl_har::storage::Storage::open(
+                &stcfg,
+                &odl_har::util::faults::FaultPlan::default(),
+            )?;
+            // absent shard files are hydrated from storage before the
+            // merge; the merged stream is published back afterwards
+            let outcome = odl_har::coordinator::sweep::merge_via_storage(
+                &plan,
+                &inputs,
+                &out,
+                storage.as_ref(),
+            )?;
             println!(
                 "merge: {} shard file(s) -> {} cells, byte-identical to a single-process run",
                 outcome.shards, outcome.cells
@@ -513,6 +547,7 @@ fn main() -> Result<()> {
             let max_clients = args.opt_usize_opt("--max-clients")?;
             let workers = args.opt_usize_opt("--workers")?;
             let fault_spec = args.opt("--inject-faults")?;
+            let storage_uri = args.opt("--storage")?;
             args.finish()?;
             let mut cfg = config::serve_from_file(&PathBuf::from(cfg_path))?;
             if let Some(b) = bind {
@@ -520,6 +555,11 @@ fn main() -> Result<()> {
             }
             if let Some(s) = snapshot {
                 cfg.snapshot = Some(PathBuf::from(s));
+            }
+            if storage_uri.is_some() {
+                // --storage beats [storage] uri; snapshots publish/restore
+                // through the backend instead of the bare snapshot path
+                cfg.storage.uri = storage_uri;
             }
             if let Some(m) = max_clients {
                 anyhow::ensure!(m >= 1, "--max-clients must be >= 1");
@@ -642,6 +682,7 @@ fn run_supervised(
     heartbeat: Option<f64>,
     fault_spec: Option<String>,
     fault_attempts: Option<usize>,
+    storage_uri: Option<String>,
     _resume: bool, // supervision always resumes; the flag is harmless
     dry_run: bool,
     out: &PathBuf,
@@ -649,6 +690,7 @@ fn run_supervised(
     use odl_har::coordinator::supervise::{
         shard_out_paths, supervise, ProcessLauncher, SuperviseStatus,
     };
+    use odl_har::storage::{key_for_path, push_from_file, Storage};
 
     let mut spec = config::sweep_from_file(cfg_path)?;
     if let Some(w) = workers_cli {
@@ -686,6 +728,16 @@ fn run_supervised(
         scfg.fault_attempts = fa;
     }
 
+    // --storage beats [storage] uri beats no backend. The supervisor's
+    // own probes and the final merged publish run fault-free; children
+    // re-derive the fault plan (storage lanes included) from the
+    // forwarded spec.
+    let mut stcfg = config::storage_from_file(cfg_path)?;
+    if storage_uri.is_some() {
+        stcfg.uri = storage_uri;
+    }
+    let storage = Storage::open(&stcfg, &odl_har::util::faults::FaultPlan::default())?;
+
     let ranges = plan.shard_ranges(n);
     println!(
         "sweep: supervising {} shard(s) x {} worker(s) over {} cells (cost-weighted cuts)",
@@ -693,7 +745,24 @@ fn run_supervised(
         scfg.workers_per_shard,
         plan.cells.len()
     );
-    let paths = shard_out_paths(out, n);
+    // With a *local* backend the spool IS the object: re-root the shard
+    // spools into the storage root so children's publishes are no-op
+    // same-target skips and the supervisor's heartbeat probes go through
+    // the trait. Remote backends keep local spools (children upload
+    // copies) and the supervisor probes the filesystem directly.
+    let paths: Vec<PathBuf> = {
+        let base = shard_out_paths(out, n);
+        match storage.as_ref().filter(|s| s.is_local()) {
+            Some(st) => base
+                .iter()
+                .map(|p| {
+                    let key = key_for_path(p)?;
+                    Ok(st.local_object_path(&key).expect("local backend has a root"))
+                })
+                .collect::<Result<_>>()?,
+            None => base,
+        }
+    };
     for (r, p) in ranges.iter().zip(&paths) {
         let cost: u64 = (r.start..r.end).map(|i| plan.cell_cost(i)).sum();
         println!(
@@ -716,8 +785,18 @@ fn run_supervised(
     let launcher = ProcessLauncher {
         exe: std::env::current_exe().context("resolving the odl-har binary path")?,
         config_path: cfg_path.clone(),
+        storage_uri: stcfg.uri.clone(),
     };
-    let outcome = supervise(&plan, &scfg, &launcher, &paths, Some(out))?;
+    // storage-routed heartbeat probes only make sense where the object
+    // tracks the live spool — the local backend, where spool == object
+    let outcome = supervise(
+        &plan,
+        &scfg,
+        &launcher,
+        &paths,
+        Some(out),
+        storage.as_ref().filter(|s| s.is_local()),
+    )?;
     for r in &outcome.shards {
         let state = if r.quarantined {
             "QUARANTINED"
@@ -742,6 +821,14 @@ fn run_supervised(
                 "merge: {} shard file(s) -> {} cells, byte-identical to a single-process run",
                 m.shards, m.cells
             );
+            if let Some(st) = &storage {
+                // publish the merged stream too, so a remote consumer can
+                // `merge --storage` (or just `get`) without the host
+                let key = key_for_path(out)?;
+                if push_from_file(st, out, &key)? {
+                    println!("storage: published '{key}' to the {} backend", st.backend_name());
+                }
+            }
             println!("results: {}", out.display());
             Ok(())
         }
@@ -902,7 +989,7 @@ const USAGE: &str =
                                            per-edge rows — same trajectories, less memory)\n\
            sweep  --config FILE [--workers N] [--out FILE] [--resume] [--dry-run] [--shard I/N]\n\
                   [--shard auto[:N] [--retry-budget K] [--heartbeat-timeout SECS]\n\
-                   [--fault-attempts K]] [--inject-faults SPEC]\n\
+                   [--fault-attempts K]] [--inject-faults SPEC] [--storage DIR|URI]\n\
                                           memoized, resumable scenario-grid sweep (TOML-declared\n\
                                           seeds x thetas x edge counts x detectors x n_hiddens x\n\
                                           loss_probs x teacher_errors; artifacts fitted once per\n\
@@ -921,14 +1008,21 @@ const USAGE: &str =
                                           complete / 2 degraded / 3 failed; [supervise] TOML\n\
                                           section sets the defaults); --inject-faults SPEC\n\
                                           replays a deterministic fault schedule for chaos\n\
-                                          testing — see rust/RELIABILITY.md)\n\
-           merge  --config FILE [--out FILE] SHARD_FILE...\n\
+                                          testing — see rust/RELIABILITY.md; --storage publishes\n\
+                                          each completed shard (and the supervised merge) to a\n\
+                                          ResultStorage backend — a directory, or remote://DIR\n\
+                                          with the remote-storage feature — and --resume\n\
+                                          hydrates an absent spool from it; [storage] TOML\n\
+                                          section sets uri/retries)\n\
+           merge  --config FILE [--out FILE] [--storage DIR|URI] SHARD_FILE...\n\
                                           recombine a complete --shard file set into one results\n\
                                           file byte-identical to a single-process sweep (headers\n\
                                           validated against the config's grid, rows re-interleaved\n\
-                                          in cell order, stats trailer recomputed from the plan)\n\
+                                          in cell order, stats trailer recomputed from the plan;\n\
+                                          --storage pulls shard files absent locally from the\n\
+                                          backend and publishes the merged stream back)\n\
            serve  --config FILE [--bind ADDR] [--snapshot FILE] [--max-clients N]\n\
-                  [--workers N] [--inject-faults SPEC]\n\
+                  [--workers N] [--inject-faults SPEC] [--storage DIR|URI]\n\
                                           fault-tolerant teacher/label service over TCP (JSONL\n\
                                           protocol): per-client OS-ELM + auto-pruning state,\n\
                                           a fixed shard worker pool driving all admitted\n\
@@ -936,9 +1030,10 @@ const USAGE: &str =
                                           cap with structured busy, bounded queues, read/idle\n\
                                           deadlines, exactly-once in-order events (single or\n\
                                           batched frames), graceful drain to a crash-consistent\n\
-                                          snapshot that a restart restores byte-identically\n\
-                                          ([serve] TOML section sets the knobs; see\n\
-                                          rust/RELIABILITY.md)\n\
+                                          snapshot that a restart restores byte-identically;\n\
+                                          --storage routes the snapshot through a ResultStorage\n\
+                                          backend ([serve]/[storage] TOML sections set the\n\
+                                          knobs; see rust/RELIABILITY.md)\n\
            loadgen --connect ADDR --config FILE [--client NAME] [--events N]\n\
                   [--batch K] [--retry-budget K] [--backoff-base-ms MS]\n\
                   [--backoff-cap-ms MS] [--reply-timeout-ms MS] [--shutdown]\n\

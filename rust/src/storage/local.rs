@@ -1,0 +1,352 @@
+//! The local-directory backend — and the home of the coordinator's
+//! atomic-publish primitives.
+//!
+//! `sync_writer` / `sync_parent_dir` / `temp_sibling` moved here from
+//! `coordinator/sweep.rs` unchanged (sweep re-exports them), so every
+//! publish in the repo — sweep shard streams, merged outputs, serve
+//! snapshots, and now [`LocalDir::put_atomic`] — shares one recipe:
+//! write a `.tmp` sibling, fsync the file, rename over the
+//! destination, fsync the directory. Readers see the old object or the
+//! new one, whole, never a prefix.
+
+use super::{gate_op, validate_key, ObjectMeta, ResultStorage, SResult, StorageError, StorageWrite};
+use crate::util::faults::{FaultKind, FaultPlan};
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Flush a results writer and fsync the file so a subsequent rename
+/// publishes fully durable bytes.
+pub(crate) fn sync_writer(out: std::io::BufWriter<std::fs::File>, path: &Path) -> Result<()> {
+    let file = out
+        .into_inner()
+        .map_err(|e| anyhow::anyhow!("flushing {}: {}", path.display(), e.error()))?;
+    file.sync_all()
+        .with_context(|| format!("fsyncing {}", path.display()))?;
+    Ok(())
+}
+
+/// Fsync the directory containing `path` so a just-renamed file's
+/// directory entry survives a crash. No-op off unix.
+pub(crate) fn sync_parent_dir(path: &Path) -> Result<()> {
+    #[cfg(unix)]
+    {
+        let dir = match path.parent() {
+            Some(d) if !d.as_os_str().is_empty() => d,
+            _ => Path::new("."),
+        };
+        std::fs::File::open(dir)
+            .and_then(|d| d.sync_all())
+            .with_context(|| format!("fsyncing directory {}", dir.display()))?;
+    }
+    #[cfg(not(unix))]
+    let _ = path;
+    Ok(())
+}
+
+/// The staging sibling a publish writes before renaming onto `path`.
+pub(crate) fn temp_sibling(path: &Path) -> PathBuf {
+    path.with_file_name(match path.file_name() {
+        Some(name) => format!("{}.tmp", name.to_string_lossy()),
+        None => ".tmp".to_string(),
+    })
+}
+
+/// Write `bytes` to `dest` through the full atomic recipe: staged
+/// `.tmp` sibling, fsync, rename, directory fsync.
+pub(crate) fn write_file_atomic(dest: &Path, bytes: &[u8]) -> Result<()> {
+    if let Some(parent) = dest.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    let tmp = temp_sibling(dest);
+    let file =
+        std::fs::File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+    let mut out = std::io::BufWriter::new(file);
+    out.write_all(bytes)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    sync_writer(out, &tmp)?;
+    std::fs::rename(&tmp, dest)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), dest.display()))?;
+    sync_parent_dir(dest)?;
+    Ok(())
+}
+
+/// Whether two paths name the same file target, without requiring
+/// either to exist: lexical equality first, else compare canonicalized
+/// parents + file names (the file itself may not exist yet).
+pub(crate) fn same_target(a: &Path, b: &Path) -> bool {
+    if a == b {
+        return true;
+    }
+    let resolve = |p: &Path| -> Option<(PathBuf, std::ffi::OsString)> {
+        let name = p.file_name()?.to_os_string();
+        let parent = match p.parent() {
+            Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+            _ => PathBuf::from("."),
+        };
+        Some((std::fs::canonicalize(&parent).ok()?, name))
+    };
+    match (resolve(a), resolve(b)) {
+        (Some(ra), Some(rb)) => ra == rb,
+        _ => false,
+    }
+}
+
+/// Keys are relative paths under a root directory; `put_atomic` is the
+/// fsync'd temp-file + rename recipe. With a non-noop [`FaultPlan`],
+/// each backend operation consumes one fault-lane slot so chaos specs
+/// (`sioerr@N` / `stear@N` / `sdelay@N`) can target individual ops.
+pub struct LocalDir {
+    root: PathBuf,
+    faults: FaultPlan,
+    ops: AtomicUsize,
+}
+
+impl LocalDir {
+    pub fn new(root: &Path) -> LocalDir {
+        LocalDir::with_faults(root, FaultPlan::default())
+    }
+
+    pub fn with_faults(root: &Path, faults: FaultPlan) -> LocalDir {
+        LocalDir {
+            root: root.to_path_buf(),
+            faults,
+            ops: AtomicUsize::new(0),
+        }
+    }
+
+    fn next_op(&self) -> usize {
+        self.ops.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn object_path(&self, key: &str) -> SResult<PathBuf> {
+        validate_key(key)?;
+        Ok(self.root.join(key))
+    }
+}
+
+/// An in-flight [`LocalDir`] upload: bytes stream into the `.tmp`
+/// sibling; `commit` fsyncs and renames it over the destination.
+struct LocalWrite {
+    tmp: PathBuf,
+    dest: PathBuf,
+    out: Option<std::io::BufWriter<std::fs::File>>,
+    /// Fault drawn when the upload opened, applied at commit — a torn
+    /// publish tears the *staged* bytes, exactly like a crashed writer.
+    commit_fault: Option<FaultKind>,
+}
+
+impl Write for LocalWrite {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self.out.as_mut() {
+            Some(out) => out.write(buf),
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "upload already closed",
+            )),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self.out.as_mut() {
+            Some(out) => out.flush(),
+            None => Ok(()),
+        }
+    }
+}
+
+impl StorageWrite for LocalWrite {
+    fn commit(mut self: Box<Self>) -> SResult<()> {
+        let Some(out) = self.out.take() else {
+            return Err(StorageError::Permanent("upload already closed".into()));
+        };
+        match self.commit_fault {
+            None => {}
+            Some(FaultKind::StorageDelay) => {
+                std::thread::sleep(std::time::Duration::from_millis(super::STORAGE_DELAY_MS));
+            }
+            Some(FaultKind::StorageTear) => {
+                // tear the staged bytes in half and fail the commit: the
+                // torn `.tmp` stays on disk (crash realism) but the
+                // destination key is untouched
+                let file = out.into_inner().map_err(|e| {
+                    StorageError::Transient(format!("flushing {}: {}", self.tmp.display(), e.error()))
+                })?;
+                let torn = file
+                    .metadata()
+                    .map(|m| m.len() / 2)
+                    .map_err(|e| StorageError::Transient(format!("injected tear stat: {e}")))?;
+                file.set_len(torn)
+                    .map_err(|e| StorageError::Transient(format!("injected tear truncate: {e}")))?;
+                return Err(StorageError::Transient(format!(
+                    "injected StorageTear: staged upload for {} torn at {torn} bytes",
+                    self.dest.display()
+                )));
+            }
+            Some(kind) => {
+                let _ = std::fs::remove_file(&self.tmp);
+                return Err(StorageError::Transient(format!(
+                    "injected {kind:?} committing {}",
+                    self.dest.display()
+                )));
+            }
+        }
+        sync_writer(out, &self.tmp).map_err(|e| StorageError::Transient(format!("{e:#}")))?;
+        std::fs::rename(&self.tmp, &self.dest).map_err(|e| {
+            StorageError::Transient(format!(
+                "renaming {} -> {}: {e}",
+                self.tmp.display(),
+                self.dest.display()
+            ))
+        })?;
+        sync_parent_dir(&self.dest).map_err(|e| StorageError::Transient(format!("{e:#}")))?;
+        Ok(())
+    }
+
+    fn abort(mut self: Box<Self>) {
+        self.out.take();
+        let _ = std::fs::remove_file(&self.tmp);
+    }
+}
+
+impl Drop for LocalWrite {
+    fn drop(&mut self) {
+        // dropped without commit: discard the staging file
+        if self.out.take().is_some() {
+            let _ = std::fs::remove_file(&self.tmp);
+        }
+    }
+}
+
+impl ResultStorage for LocalDir {
+    fn backend(&self) -> &'static str {
+        "local-dir"
+    }
+
+    fn put_atomic(&self, key: &str) -> SResult<Box<dyn StorageWrite>> {
+        let dest = self.object_path(key)?;
+        let op = self.next_op();
+        let commit_fault = match self.faults.storage_fault(op) {
+            Some(FaultKind::StorageIoErr) => {
+                return Err(StorageError::Transient(format!(
+                    "injected StorageIoErr at storage op {op} (put '{key}')"
+                )))
+            }
+            other => other,
+        };
+        if let Some(parent) = dest.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(|e| {
+                    StorageError::Transient(format!("creating {}: {e}", parent.display()))
+                })?;
+            }
+        }
+        let tmp = temp_sibling(&dest);
+        let file = std::fs::File::create(&tmp)
+            .map_err(|e| StorageError::Transient(format!("creating {}: {e}", tmp.display())))?;
+        Ok(Box::new(LocalWrite {
+            tmp,
+            dest,
+            out: Some(std::io::BufWriter::new(file)),
+            commit_fault,
+        }))
+    }
+
+    fn get(&self, key: &str) -> SResult<Box<dyn Read + Send>> {
+        let path = self.object_path(key)?;
+        gate_op(&self.faults, self.next_op(), &format!("get '{key}'"))?;
+        match std::fs::File::open(&path) {
+            Ok(f) => Ok(Box::new(f)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                Err(StorageError::NotFound(key.to_string()))
+            }
+            Err(e) => Err(StorageError::Transient(format!(
+                "opening {}: {e}",
+                path.display()
+            ))),
+        }
+    }
+
+    fn list(&self, prefix: &str) -> SResult<Vec<ObjectMeta>> {
+        gate_op(&self.faults, self.next_op(), &format!("list '{prefix}'"))?;
+        let mut out = Vec::new();
+        let mut stack = vec![self.root.clone()];
+        while let Some(dir) = stack.pop() {
+            let entries = match std::fs::read_dir(&dir) {
+                Ok(e) => e,
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound && dir == self.root => {
+                    return Ok(out) // an absent root is just an empty store
+                }
+                Err(e) => {
+                    return Err(StorageError::Transient(format!(
+                        "listing {}: {e}",
+                        dir.display()
+                    )))
+                }
+            };
+            for entry in entries {
+                let entry = entry
+                    .map_err(|e| StorageError::Transient(format!("listing {}: {e}", dir.display())))?;
+                let path = entry.path();
+                let meta = entry.metadata().map_err(|e| {
+                    StorageError::Transient(format!("stat {}: {e}", path.display()))
+                })?;
+                if meta.is_dir() {
+                    stack.push(path);
+                    continue;
+                }
+                let Ok(rel) = path.strip_prefix(&self.root) else {
+                    continue;
+                };
+                let key: Vec<String> = rel
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                    .collect();
+                let key = key.join("/");
+                // staging files are not objects
+                if key.ends_with(".tmp") {
+                    continue;
+                }
+                if key.starts_with(prefix) {
+                    out.push(ObjectMeta { key, len: meta.len() });
+                }
+            }
+        }
+        out.sort_by(|a, b| a.key.cmp(&b.key));
+        Ok(out)
+    }
+
+    fn delete(&self, key: &str) -> SResult<()> {
+        let path = self.object_path(key)?;
+        gate_op(&self.faults, self.next_op(), &format!("delete '{key}'"))?;
+        match std::fs::remove_file(&path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                Err(StorageError::NotFound(key.to_string()))
+            }
+            Err(e) => Err(StorageError::Transient(format!(
+                "removing {}: {e}",
+                path.display()
+            ))),
+        }
+    }
+
+    fn stat(&self, key: &str) -> SResult<Option<u64>> {
+        let path = self.object_path(key)?;
+        gate_op(&self.faults, self.next_op(), &format!("stat '{key}'"))?;
+        match std::fs::metadata(&path) {
+            Ok(m) if m.is_dir() => Err(StorageError::Permanent(format!(
+                "storage key '{key}' names a directory"
+            ))),
+            Ok(m) => Ok(Some(m.len())),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(StorageError::Transient(format!(
+                "stat {}: {e}",
+                path.display()
+            ))),
+        }
+    }
+}

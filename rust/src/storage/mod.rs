@@ -1,0 +1,684 @@
+//! Pluggable result storage — the multi-host enabler.
+//!
+//! Every durable artifact of the coordinator stack (sweep shard streams,
+//! merged results, serve drain snapshots) was a process-local file path
+//! until this layer existed. [`ResultStorage`] abstracts "a place shards
+//! on different hosts can publish streams and `merge` can pull from":
+//! opaque `/`-separated keys, streaming readers and writers, and one
+//! hard invariant — **`put_atomic` makes all of an object's bytes
+//! visible, or none of them**. Readers can never observe a torn publish,
+//! which is what keeps the byte-identity contract (`tests/sweep_faults.rs`,
+//! `tests/serve_faults.rs`) intact when the filesystem between writer
+//! and reader becomes a network.
+//!
+//! Two backends:
+//!
+//! * [`LocalDir`] — keys map to paths under a root directory, and
+//!   `put_atomic` is exactly the coordinator's long-standing fsync'd
+//!   temp-file + rename recipe (`.tmp` sibling, fsync file, rename,
+//!   fsync directory). The recipe's primitives live in [`local`] and are
+//!   re-used verbatim by the sweep engine's own resume/merge publishes,
+//!   so routing through the trait changes no bytes and no syscalls.
+//! * `RemoteStub` (behind the `remote-storage` cargo feature) — an
+//!   S3-shaped object store simulated on the local filesystem: uploads
+//!   stage invisibly under a side directory and only a committed upload
+//!   is renamed into the object namespace, mirroring how real object
+//!   stores (and neon's `s3_bucket`/`wal_backup` pairing) expose only
+//!   whole objects. Per-operation latency and failures are injectable.
+//!
+//! [`Storage`] wraps a backend with the **bounded-retry + exponential
+//! backoff** policy (`[storage]` TOML / `--storage` CLI): transient
+//! backend errors — the only kind fault injection produces — are retried
+//! up to `retry_limit` attempts with doubling, capped backoff; permanent
+//! errors and exhausted budgets surface to the caller. Fault injection
+//! rides the same [`FaultPlan`] grammar as the rest of the chaos stack:
+//! `sioerr@N` / `stear@N` / `sdelay@N` fire at the N-th storage
+//! operation of a backend instance (see `util::faults`).
+
+pub mod local;
+#[cfg(feature = "remote-storage")]
+pub mod remote;
+
+use crate::util::faults::{FaultKind, FaultPlan};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::io::Read;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+pub use local::LocalDir;
+#[cfg(feature = "remote-storage")]
+pub use remote::RemoteStub;
+
+/// Simulated latency of one `sdelay`-faulted storage operation.
+pub const STORAGE_DELAY_MS: u64 = 15;
+
+/// Backend error, classified for the retry policy: only `Transient`
+/// errors are retried; `NotFound` and `Permanent` surface immediately.
+#[derive(Debug)]
+pub enum StorageError {
+    /// The key names no object.
+    NotFound(String),
+    /// The backend hiccuped (I/O error, torn upload, injected fault) —
+    /// retrying the whole operation may heal it.
+    Transient(String),
+    /// Retrying cannot help (invalid key, misconfiguration).
+    Permanent(String),
+}
+
+impl std::fmt::Display for StorageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StorageError::NotFound(key) => write!(f, "no such object '{key}'"),
+            StorageError::Transient(msg) => write!(f, "transient backend error: {msg}"),
+            StorageError::Permanent(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for StorageError {}
+
+/// Backend-level result.
+pub type SResult<T> = std::result::Result<T, StorageError>;
+
+/// One listed object: its key and byte length.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ObjectMeta {
+    pub key: String,
+    pub len: u64,
+}
+
+/// A streaming upload in progress. Bytes written here are staged
+/// invisibly; only [`StorageWrite::commit`] publishes them — atomically
+/// and durably — under the writer's key. Dropping without committing
+/// (or calling [`StorageWrite::abort`]) leaves the key untouched.
+pub trait StorageWrite: std::io::Write + Send {
+    /// Durably publish the staged bytes. All-or-nothing: a reader sees
+    /// the whole object or the key's previous state, never a prefix.
+    fn commit(self: Box<Self>) -> SResult<()>;
+    /// Discard the staged bytes; the key is untouched.
+    fn abort(self: Box<Self>);
+}
+
+/// The storage abstraction every coordinator publish/probe/pull goes
+/// through. Keys are opaque `/`-separated relative names (see
+/// [`validate_key`]); readers and writers stream. Implementations are
+/// `Sync` so one handle can serve a worker pool.
+pub trait ResultStorage: Send + Sync {
+    /// Short backend label for diagnostics ("local-dir", "remote-stub").
+    fn backend(&self) -> &'static str;
+    /// Open a streaming, atomic upload for `key`.
+    fn put_atomic(&self, key: &str) -> SResult<Box<dyn StorageWrite>>;
+    /// Open a streaming reader over the object at `key`.
+    fn get(&self, key: &str) -> SResult<Box<dyn Read + Send>>;
+    /// All objects whose key starts with `prefix` (empty = everything),
+    /// sorted by key. Staged/temporary uploads are never listed.
+    fn list(&self, prefix: &str) -> SResult<Vec<ObjectMeta>>;
+    /// Remove the object at `key` (`NotFound` if absent).
+    fn delete(&self, key: &str) -> SResult<()>;
+    /// Byte length of the object at `key`, `None` if absent. The default
+    /// derives it from [`ResultStorage::list`]; backends override with a
+    /// cheaper stat.
+    fn stat(&self, key: &str) -> SResult<Option<u64>> {
+        Ok(self
+            .list(key)?
+            .into_iter()
+            .find(|m| m.key == key)
+            .map(|m| m.len))
+    }
+}
+
+/// Reject keys that could escape a backend's namespace or collide with
+/// its staging convention: empty keys, absolute paths, `.`/`..`
+/// components, backslashes, and the `.tmp` suffix (reserved for the
+/// local backend's staging siblings) are all permanent errors.
+pub fn validate_key(key: &str) -> SResult<()> {
+    if key.is_empty() {
+        return Err(StorageError::Permanent("empty storage key".into()));
+    }
+    if key.starts_with('/') || key.contains('\\') {
+        return Err(StorageError::Permanent(format!(
+            "storage key '{key}' must be a relative '/'-separated name"
+        )));
+    }
+    for comp in key.split('/') {
+        if comp.is_empty() || comp == "." || comp == ".." {
+            return Err(StorageError::Permanent(format!(
+                "storage key '{key}' has an empty or dot component"
+            )));
+        }
+    }
+    if key.ends_with(".tmp") {
+        return Err(StorageError::Permanent(format!(
+            "storage key '{key}' ends in '.tmp' — reserved for staging"
+        )));
+    }
+    Ok(())
+}
+
+/// Apply the storage fault (if any) drawn for operation `op`: `sdelay`
+/// sleeps [`STORAGE_DELAY_MS`] and proceeds; `sioerr` and `stear` both
+/// surface as a transient backend error (on a download path a torn
+/// transfer IS an I/O error from the caller's side — only `put_atomic`
+/// commits give `stear` its distinct torn-staging semantics).
+pub(crate) fn gate_op(faults: &FaultPlan, op: usize, what: &str) -> SResult<()> {
+    match faults.storage_fault(op) {
+        None => Ok(()),
+        Some(FaultKind::StorageDelay) => {
+            std::thread::sleep(Duration::from_millis(STORAGE_DELAY_MS));
+            Ok(())
+        }
+        Some(kind) => Err(StorageError::Transient(format!(
+            "injected {kind:?} at storage op {op} ({what})"
+        ))),
+    }
+}
+
+/// The `[storage]` TOML section / `--storage` CLI knobs. `uri: None`
+/// means "no shared storage configured" — the coordinator then runs on
+/// plain local files exactly as before (whose atomic publishes already
+/// route through [`local`]'s primitives).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StorageConfig {
+    /// `DIR` (local-dir backend) or `remote://DIR` (the S3-shaped stub,
+    /// `remote-storage` feature).
+    pub uri: Option<String>,
+    /// Total attempts per operation (first try + retries) on transient
+    /// backend errors.
+    pub retry_limit: usize,
+    /// First retry delay; doubles per retry.
+    pub backoff_base_ms: u64,
+    /// Ceiling on the retry delay.
+    pub backoff_cap_ms: u64,
+}
+
+impl Default for StorageConfig {
+    fn default() -> Self {
+        StorageConfig {
+            uri: None,
+            retry_limit: 4,
+            backoff_base_ms: 25,
+            backoff_cap_ms: 1000,
+        }
+    }
+}
+
+/// A backend plus the bounded-retry policy — the handle the coordinator
+/// actually holds. All convenience operations retry transient errors
+/// with exponential backoff; [`Storage::probe`] is the deliberate
+/// exception (single attempt, never sleeps — it sits inside the
+/// supervisor's poll loop).
+pub struct Storage {
+    backend: Box<dyn ResultStorage>,
+    retry_limit: usize,
+    backoff_base_ms: u64,
+    backoff_cap_ms: u64,
+    /// The object root when the backend is the local filesystem — lets
+    /// callers recognize "this spool path IS the object" and skip
+    /// copy-onto-itself publishes.
+    local_root: Option<PathBuf>,
+}
+
+impl Storage {
+    /// `None` when no URI is configured; otherwise the opened backend.
+    pub fn open(cfg: &StorageConfig, faults: &FaultPlan) -> Result<Option<Storage>> {
+        match &cfg.uri {
+            None => Ok(None),
+            Some(uri) => Ok(Some(Storage::open_uri(uri, cfg, faults)?)),
+        }
+    }
+
+    /// Open `DIR` (local-dir) or `remote://DIR` (feature-gated stub).
+    pub fn open_uri(uri: &str, cfg: &StorageConfig, faults: &FaultPlan) -> Result<Storage> {
+        let uri = uri.trim();
+        ensure!(!uri.is_empty(), "storage URI is empty");
+        if let Some(rest) = uri.strip_prefix("remote://") {
+            #[cfg(feature = "remote-storage")]
+            {
+                ensure!(!rest.is_empty(), "remote storage URI '{uri}' names no directory");
+                return Ok(Storage::wrap(
+                    Box::new(remote::RemoteStub::with_faults(rest, faults.clone())),
+                    None,
+                    cfg,
+                ));
+            }
+            #[cfg(not(feature = "remote-storage"))]
+            {
+                let _ = rest;
+                bail!(
+                    "storage URI '{uri}' needs the `remote-storage` feature \
+                     (rebuild with `--features remote-storage`)"
+                );
+            }
+        }
+        let root = PathBuf::from(uri);
+        Ok(Storage::wrap(
+            Box::new(LocalDir::with_faults(&root, faults.clone())),
+            Some(root),
+            cfg,
+        ))
+    }
+
+    /// The default local backend over `root` — how callers without a
+    /// configured URI still route their publishes through the trait.
+    pub fn local_dir(root: &Path, cfg: &StorageConfig) -> Storage {
+        Storage::wrap(
+            Box::new(LocalDir::new(root)),
+            Some(root.to_path_buf()),
+            cfg,
+        )
+    }
+
+    fn wrap(backend: Box<dyn ResultStorage>, local_root: Option<PathBuf>, cfg: &StorageConfig) -> Storage {
+        Storage {
+            backend,
+            retry_limit: cfg.retry_limit.max(1),
+            backoff_base_ms: cfg.backoff_base_ms.max(1),
+            backoff_cap_ms: cfg.backoff_cap_ms.max(1),
+            local_root,
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.backend()
+    }
+
+    /// Whether the backend is the local filesystem (its objects have
+    /// direct paths).
+    pub fn is_local(&self) -> bool {
+        self.local_root.is_some()
+    }
+
+    /// The object's direct filesystem path, for local backends only.
+    pub fn local_object_path(&self, key: &str) -> Option<PathBuf> {
+        self.local_root.as_ref().map(|r| r.join(key))
+    }
+
+    fn retrying<T>(
+        &self,
+        what: &str,
+        key: &str,
+        mut op: impl FnMut() -> SResult<T>,
+    ) -> Result<T> {
+        let mut delay = self.backoff_base_ms;
+        for attempt in 1..=self.retry_limit {
+            match op() {
+                Ok(v) => return Ok(v),
+                Err(StorageError::Transient(msg)) if attempt < self.retry_limit => {
+                    eprintln!(
+                        "storage: {what} '{key}' on {}: {msg} \
+                         (attempt {attempt}/{}) — backing off {delay}ms",
+                        self.backend.backend(),
+                        self.retry_limit,
+                    );
+                    std::thread::sleep(Duration::from_millis(delay));
+                    delay = delay.saturating_mul(2).min(self.backoff_cap_ms);
+                }
+                Err(e) => {
+                    return Err(anyhow!(
+                        "storage: {what} '{key}' on {}: {e}",
+                        self.backend.backend()
+                    ))
+                }
+            }
+        }
+        unreachable!("the retry loop returns on its last attempt");
+    }
+
+    /// Atomically publish `bytes` under `key`, retrying the whole upload
+    /// (fresh staging) on transient errors.
+    pub fn put_bytes(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        self.retrying("put", key, || {
+            let mut w = self.backend.put_atomic(key)?;
+            if let Err(e) = w.write_all(bytes) {
+                w.abort();
+                return Err(StorageError::Transient(format!("staging write: {e}")));
+            }
+            w.commit()
+        })
+    }
+
+    /// The object's bytes, `None` if absent.
+    pub fn get_bytes(&self, key: &str) -> Result<Option<Vec<u8>>> {
+        self.retrying("get", key, || {
+            let mut r = match self.backend.get(key) {
+                Ok(r) => r,
+                Err(StorageError::NotFound(_)) => return Ok(None),
+                Err(e) => return Err(e),
+            };
+            let mut buf = Vec::new();
+            r.read_to_end(&mut buf)
+                .map_err(|e| StorageError::Transient(format!("reading object: {e}")))?;
+            Ok(Some(buf))
+        })
+    }
+
+    /// Byte length of the object at `key`, with retries.
+    pub fn stat(&self, key: &str) -> Result<Option<u64>> {
+        self.retrying("stat", key, || self.backend.stat(key))
+    }
+
+    /// One non-blocking liveness probe — **no retry, no backoff** (it
+    /// runs inside the supervisor's poll loop, which must never sleep).
+    /// A backend error comes back as `Err` for the caller to classify:
+    /// the heartbeat must treat it as "unknown", never as "no growth".
+    pub fn probe(&self, key: &str) -> std::result::Result<Option<u64>, String> {
+        self.backend.stat(key).map_err(|e| e.to_string())
+    }
+
+    /// Objects under `prefix`, sorted by key, with retries.
+    pub fn list(&self, prefix: &str) -> Result<Vec<ObjectMeta>> {
+        self.retrying("list", prefix, || self.backend.list(prefix))
+    }
+
+    /// Delete `key`; deleting an absent object is success (idempotent,
+    /// like an object store's delete).
+    pub fn delete(&self, key: &str) -> Result<()> {
+        self.retrying("delete", key, || match self.backend.delete(key) {
+            Err(StorageError::NotFound(_)) => Ok(()),
+            other => other,
+        })
+    }
+}
+
+/// Pull `key` into the local file `dest` using the same fsync'd
+/// temp-file + rename recipe every coordinator publish uses, so a crash
+/// mid-pull never leaves a torn spool. Returns `false` without touching
+/// `dest` when the object is absent — or when `dest` *is* the object
+/// (local backend, same path): the spool is already the published copy.
+pub fn pull_to_file(storage: &Storage, key: &str, dest: &Path) -> Result<bool> {
+    if storage
+        .local_object_path(key)
+        .is_some_and(|obj| local::same_target(&obj, dest))
+    {
+        return Ok(false);
+    }
+    let Some(bytes) = storage.get_bytes(key)? else {
+        return Ok(false);
+    };
+    local::write_file_atomic(dest, &bytes)
+        .with_context(|| format!("landing storage object '{key}' at {}", dest.display()))?;
+    Ok(true)
+}
+
+/// Publish the local file `src` under `key`. Returns `false` when `src`
+/// already *is* the object (local backend, same path) — the stream was
+/// written in place and another copy would be pure churn.
+pub fn push_from_file(storage: &Storage, src: &Path, key: &str) -> Result<bool> {
+    if storage
+        .local_object_path(key)
+        .is_some_and(|obj| local::same_target(&obj, src))
+    {
+        return Ok(false);
+    }
+    let bytes =
+        std::fs::read(src).with_context(|| format!("reading {} for publish", src.display()))?;
+    storage.put_bytes(key, &bytes)?;
+    Ok(true)
+}
+
+/// The storage key a results path publishes under: its file name. Shard
+/// spools, merged outputs, and snapshots all carry their identity in the
+/// name (`sweep.shard2of4.jsonl`), so the flat key space is collision-free
+/// per study directory.
+pub fn key_for_path(path: &Path) -> Result<String> {
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .with_context(|| format!("{} has no UTF-8 file name to key storage by", path.display()))?;
+    validate_key(name).map_err(|e| anyhow!("{e}"))?;
+    Ok(name.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn tmp_root(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn plain(root: &Path) -> Storage {
+        Storage::local_dir(root, &StorageConfig::default())
+    }
+
+    #[test]
+    fn keys_are_validated_as_safe_relative_names() {
+        for ok in ["a", "a.jsonl", "runs/2026/sweep.jsonl", "a-b_c.1"] {
+            assert!(validate_key(ok).is_ok(), "'{ok}' should be a valid key");
+        }
+        for bad in ["", "/abs", "a//b", "a/../b", ".", "..", "a\\b", "stage.tmp"] {
+            assert!(validate_key(bad).is_err(), "'{bad}' should be rejected");
+        }
+    }
+
+    #[test]
+    fn local_roundtrip_put_get_list_stat_delete() {
+        let root = tmp_root("odl_har_storage_roundtrip");
+        let st = plain(&root);
+        assert_eq!(st.get_bytes("a.jsonl").unwrap(), None);
+        assert_eq!(st.stat("a.jsonl").unwrap(), None);
+        st.put_bytes("a.jsonl", b"hello\n").unwrap();
+        st.put_bytes("runs/b.jsonl", b"nested\n").unwrap();
+        assert_eq!(st.get_bytes("a.jsonl").unwrap().unwrap(), b"hello\n");
+        assert_eq!(st.stat("a.jsonl").unwrap(), Some(6));
+        let listed = st.list("").unwrap();
+        assert_eq!(
+            listed,
+            vec![
+                ObjectMeta { key: "a.jsonl".into(), len: 6 },
+                ObjectMeta { key: "runs/b.jsonl".into(), len: 7 },
+            ]
+        );
+        assert_eq!(st.list("runs/").unwrap().len(), 1);
+        st.delete("a.jsonl").unwrap();
+        assert_eq!(st.get_bytes("a.jsonl").unwrap(), None);
+        // idempotent delete: an absent object is success
+        st.delete("a.jsonl").unwrap();
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn staged_uploads_are_invisible_until_commit() {
+        let root = tmp_root("odl_har_storage_staging");
+        let st = plain(&root);
+        st.put_bytes("seen.jsonl", b"old").unwrap();
+        let backend = LocalDir::new(&root);
+        let mut w = backend.put_atomic("seen.jsonl").unwrap();
+        use std::io::Write as _;
+        w.write_all(b"new bytes, much longer").unwrap();
+        w.flush().unwrap();
+        // mid-upload: readers still see the previous object whole
+        assert_eq!(st.get_bytes("seen.jsonl").unwrap().unwrap(), b"old");
+        assert_eq!(st.stat("seen.jsonl").unwrap(), Some(3));
+        assert_eq!(st.list("").unwrap().len(), 1, "staging must not be listed");
+        w.commit().unwrap();
+        assert_eq!(
+            st.get_bytes("seen.jsonl").unwrap().unwrap(),
+            b"new bytes, much longer"
+        );
+        // aborted uploads leave the object untouched
+        let mut w = backend.put_atomic("seen.jsonl").unwrap();
+        w.write_all(b"doomed").unwrap();
+        w.abort();
+        assert_eq!(
+            st.get_bytes("seen.jsonl").unwrap().unwrap(),
+            b"new bytes, much longer"
+        );
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn retried_publishes_converge_byte_identical_under_injected_faults() {
+        let root = tmp_root("odl_har_storage_chaos");
+        let clean_root = tmp_root("odl_har_storage_chaos_clean");
+        let payload: Vec<u8> = (0..4096u32).flat_map(|i| i.to_le_bytes()).collect();
+        // ops 0/1 fail (transient I/O error, torn upload), op 2 is only
+        // delayed — the third attempt lands the full object
+        let faults = FaultPlan::parse("5:sioerr@0,stear@1,sdelay@2").unwrap();
+        let cfg = StorageConfig {
+            backoff_base_ms: 1,
+            backoff_cap_ms: 4,
+            ..StorageConfig::default()
+        };
+        let st = Storage::open_uri(root.to_str().unwrap(), &cfg, &faults).unwrap();
+        st.put_bytes("sweep.jsonl", &payload).unwrap();
+        let clean = Storage::open_uri(clean_root.to_str().unwrap(), &cfg, &FaultPlan::default())
+            .unwrap();
+        clean.put_bytes("sweep.jsonl", &payload).unwrap();
+        assert_eq!(
+            st.get_bytes("sweep.jsonl").unwrap().unwrap(),
+            clean.get_bytes("sweep.jsonl").unwrap().unwrap(),
+            "a fault-retried publish must converge on the fault-free bytes"
+        );
+        // a torn upload must never become a visible half-object
+        let torn_faults = FaultPlan::parse("5:stear@0").unwrap();
+        let torn = Storage::open_uri(
+            tmp_root("odl_har_storage_chaos_torn").to_str().unwrap(),
+            &StorageConfig { retry_limit: 1, ..cfg.clone() },
+            &torn_faults,
+        )
+        .unwrap();
+        assert!(torn.put_bytes("t.jsonl", &payload).is_err());
+        assert_eq!(torn.get_bytes("t.jsonl").unwrap(), None);
+        assert!(torn.list("").unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&root);
+        let _ = std::fs::remove_dir_all(&clean_root);
+    }
+
+    #[test]
+    fn exhausted_retry_budget_surfaces_the_transient_error() {
+        let root = tmp_root("odl_har_storage_budget");
+        let faults = FaultPlan::parse("5:sioerr@0,sioerr@1").unwrap();
+        let cfg = StorageConfig {
+            retry_limit: 2,
+            backoff_base_ms: 1,
+            backoff_cap_ms: 2,
+            ..StorageConfig::default()
+        };
+        let st = Storage::open_uri(root.to_str().unwrap(), &cfg, &faults).unwrap();
+        let err = st.put_bytes("a.jsonl", b"x").unwrap_err();
+        assert!(
+            format!("{err:#}").contains("StorageIoErr"),
+            "the exhausted budget must name the injected fault: {err:#}"
+        );
+        // with one more attempt in the budget the same schedule heals
+        let st = Storage::open_uri(
+            root.to_str().unwrap(),
+            &StorageConfig { retry_limit: 3, ..cfg },
+            &faults,
+        )
+        .unwrap();
+        st.put_bytes("a.jsonl", b"x").unwrap();
+        assert_eq!(st.get_bytes("a.jsonl").unwrap().unwrap(), b"x");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn probe_is_single_attempt_and_reports_errors_distinctly() {
+        let root = tmp_root("odl_har_storage_probe");
+        let faults = FaultPlan::parse("5:sioerr@1").unwrap();
+        let st = Storage::open_uri(root.to_str().unwrap(), &StorageConfig::default(), &faults)
+            .unwrap();
+        st.put_bytes("a.jsonl", b"abc").unwrap(); // op 0
+        let err = st.probe("a.jsonl").unwrap_err(); // op 1: injected, NOT retried
+        assert!(err.contains("StorageIoErr"), "probe error must surface: {err}");
+        assert_eq!(st.probe("a.jsonl").unwrap(), Some(3)); // op 2: clean
+        assert_eq!(st.probe("missing").unwrap(), None);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn pull_and_push_skip_in_place_local_objects() {
+        let root = tmp_root("odl_har_storage_inplace");
+        std::fs::create_dir_all(&root).unwrap();
+        let st = plain(&root);
+        let spool = root.join("s.jsonl");
+        std::fs::write(&spool, b"spooled\n").unwrap();
+        // the spool IS the object: neither direction copies
+        assert!(!push_from_file(&st, &spool, "s.jsonl").unwrap());
+        assert!(!pull_to_file(&st, "s.jsonl", &spool).unwrap());
+        assert_eq!(st.get_bytes("s.jsonl").unwrap().unwrap(), b"spooled\n");
+        // a different destination really pulls
+        let other = tmp_root("odl_har_storage_inplace_other").join("pulled.jsonl");
+        assert!(pull_to_file(&st, "s.jsonl", &other).unwrap());
+        assert_eq!(std::fs::read(&other).unwrap(), b"spooled\n");
+        assert!(!pull_to_file(&st, "absent.jsonl", &other).unwrap());
+        let _ = std::fs::remove_dir_all(&root);
+        let _ = std::fs::remove_dir_all(other.parent().unwrap());
+    }
+
+    /// A scripted backend for exercising the retry wrapper without a
+    /// filesystem: fails the first `fail_n` put attempts.
+    struct Flaky {
+        fail_n: usize,
+        calls: AtomicUsize,
+    }
+
+    struct FlakySink;
+    impl std::io::Write for FlakySink {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+    impl StorageWrite for FlakySink {
+        fn commit(self: Box<Self>) -> SResult<()> {
+            Ok(())
+        }
+        fn abort(self: Box<Self>) {}
+    }
+
+    impl ResultStorage for Flaky {
+        fn backend(&self) -> &'static str {
+            "flaky"
+        }
+        fn put_atomic(&self, _key: &str) -> SResult<Box<dyn StorageWrite>> {
+            let n = self.calls.fetch_add(1, Ordering::SeqCst);
+            if n < self.fail_n {
+                Err(StorageError::Transient(format!("scripted failure {n}")))
+            } else {
+                Ok(Box::new(FlakySink))
+            }
+        }
+        fn get(&self, key: &str) -> SResult<Box<dyn Read + Send>> {
+            Err(StorageError::NotFound(key.into()))
+        }
+        fn list(&self, _prefix: &str) -> SResult<Vec<ObjectMeta>> {
+            Ok(Vec::new())
+        }
+        fn delete(&self, key: &str) -> SResult<()> {
+            Err(StorageError::NotFound(key.into()))
+        }
+    }
+
+    #[test]
+    fn retry_policy_is_bounded_and_counts_attempts() {
+        let cfg = StorageConfig {
+            retry_limit: 3,
+            backoff_base_ms: 1,
+            backoff_cap_ms: 2,
+            ..StorageConfig::default()
+        };
+        let ok = Storage {
+            backend: Box::new(Flaky { fail_n: 2, calls: AtomicUsize::new(0) }),
+            retry_limit: cfg.retry_limit,
+            backoff_base_ms: cfg.backoff_base_ms,
+            backoff_cap_ms: cfg.backoff_cap_ms,
+            local_root: None,
+        };
+        ok.put_bytes("k", b"x").unwrap(); // 2 failures + 1 success = budget 3
+        let exhausted = Storage {
+            backend: Box::new(Flaky { fail_n: 3, calls: AtomicUsize::new(0) }),
+            retry_limit: cfg.retry_limit,
+            backoff_base_ms: cfg.backoff_base_ms,
+            backoff_cap_ms: cfg.backoff_cap_ms,
+            local_root: None,
+        };
+        assert!(exhausted.put_bytes("k", b"x").is_err());
+    }
+}

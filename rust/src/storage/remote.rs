@@ -1,0 +1,396 @@
+//! `RemoteStub` — an S3-shaped object store simulated on the local
+//! filesystem (the offline vendor set has no HTTP stack), behind the
+//! `remote-storage` cargo feature.
+//!
+//! The shape mirrors how real object stores behave, and how neon's
+//! `s3_bucket`/`wal_backup` pairing consumes them:
+//!
+//! * **Uploads are invisible until complete.** Bytes stream into a
+//!   numbered part file under `uploads/`, a separate namespace from
+//!   `objects/`; only a committed upload is fsynced and renamed into
+//!   `objects/<key>`. `get`/`stat`/`list` never observe a part file, so
+//!   a torn or abandoned upload can never be read back as a half
+//!   object — the property the whole retry policy leans on.
+//! * **Every operation pays latency.** `latency_ms` (default
+//!   [`DEFAULT_LATENCY_MS`]) sleeps on each call, so anything that
+//!   chats with storage in a hot loop shows up in the chaos suites as
+//!   wall-clock, the way a real remote would make it show up.
+//! * **Failures are injected per operation.** The shared storage fault
+//!   lane (`sioerr@N` / `stear@N` / `sdelay@N`) drives this backend
+//!   exactly like [`super::LocalDir`], with `stear` tearing the staged
+//!   part file mid-upload.
+
+use super::{gate_op, validate_key, ObjectMeta, ResultStorage, SResult, StorageError, StorageWrite};
+use crate::util::faults::{FaultKind, FaultPlan};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Per-operation simulated round-trip latency.
+pub const DEFAULT_LATENCY_MS: u64 = 2;
+
+/// The filesystem-simulated remote object store.
+pub struct RemoteStub {
+    root: PathBuf,
+    faults: FaultPlan,
+    ops: AtomicUsize,
+    uploads: AtomicUsize,
+    latency_ms: u64,
+}
+
+impl RemoteStub {
+    pub fn new(dir: &str) -> RemoteStub {
+        RemoteStub::with_faults(dir, FaultPlan::default())
+    }
+
+    pub fn with_faults(dir: &str, faults: FaultPlan) -> RemoteStub {
+        RemoteStub {
+            root: PathBuf::from(dir),
+            faults,
+            ops: AtomicUsize::new(0),
+            uploads: AtomicUsize::new(0),
+            latency_ms: DEFAULT_LATENCY_MS,
+        }
+    }
+
+    /// Override the per-operation latency (tests use 0 to stay fast).
+    pub fn with_latency_ms(mut self, ms: u64) -> RemoteStub {
+        self.latency_ms = ms;
+        self
+    }
+
+    fn objects(&self) -> PathBuf {
+        self.root.join("objects")
+    }
+
+    fn object_path(&self, key: &str) -> SResult<PathBuf> {
+        validate_key(key)?;
+        Ok(self.objects().join(key))
+    }
+
+    fn round_trip(&self) {
+        if self.latency_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.latency_ms));
+        }
+    }
+
+    fn next_op(&self) -> usize {
+        self.ops.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+/// An in-flight multipart-style upload: bytes stream into a part file
+/// under `uploads/`; only `commit` moves them into the object namespace.
+struct RemoteWrite {
+    part: PathBuf,
+    dest: PathBuf,
+    out: Option<std::io::BufWriter<std::fs::File>>,
+    commit_fault: Option<FaultKind>,
+    latency_ms: u64,
+}
+
+impl Write for RemoteWrite {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self.out.as_mut() {
+            Some(out) => out.write(buf),
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "upload already closed",
+            )),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self.out.as_mut() {
+            Some(out) => out.flush(),
+            None => Ok(()),
+        }
+    }
+}
+
+impl StorageWrite for RemoteWrite {
+    fn commit(mut self: Box<Self>) -> SResult<()> {
+        let Some(out) = self.out.take() else {
+            return Err(StorageError::Permanent("upload already closed".into()));
+        };
+        if self.latency_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.latency_ms));
+        }
+        match self.commit_fault {
+            None => {}
+            Some(FaultKind::StorageDelay) => {
+                std::thread::sleep(Duration::from_millis(super::STORAGE_DELAY_MS));
+            }
+            Some(FaultKind::StorageTear) => {
+                // the "connection" died mid-upload: the part file is torn
+                // and abandoned, the object namespace untouched
+                let file = out.into_inner().map_err(|e| {
+                    StorageError::Transient(format!("flushing {}: {}", self.part.display(), e.error()))
+                })?;
+                let torn = file
+                    .metadata()
+                    .map(|m| m.len() / 2)
+                    .map_err(|e| StorageError::Transient(format!("injected tear stat: {e}")))?;
+                file.set_len(torn)
+                    .map_err(|e| StorageError::Transient(format!("injected tear truncate: {e}")))?;
+                return Err(StorageError::Transient(format!(
+                    "injected StorageTear: upload for {} torn at {torn} bytes",
+                    self.dest.display()
+                )));
+            }
+            Some(kind) => {
+                let _ = std::fs::remove_file(&self.part);
+                return Err(StorageError::Transient(format!(
+                    "injected {kind:?} committing {}",
+                    self.dest.display()
+                )));
+            }
+        }
+        super::local::sync_writer(out, &self.part)
+            .map_err(|e| StorageError::Transient(format!("{e:#}")))?;
+        if let Some(parent) = self.dest.parent() {
+            std::fs::create_dir_all(parent).map_err(|e| {
+                StorageError::Transient(format!("creating {}: {e}", parent.display()))
+            })?;
+        }
+        std::fs::rename(&self.part, &self.dest).map_err(|e| {
+            StorageError::Transient(format!(
+                "completing upload {} -> {}: {e}",
+                self.part.display(),
+                self.dest.display()
+            ))
+        })?;
+        super::local::sync_parent_dir(&self.dest)
+            .map_err(|e| StorageError::Transient(format!("{e:#}")))?;
+        Ok(())
+    }
+
+    fn abort(mut self: Box<Self>) {
+        self.out.take();
+        let _ = std::fs::remove_file(&self.part);
+    }
+}
+
+impl Drop for RemoteWrite {
+    fn drop(&mut self) {
+        if self.out.take().is_some() {
+            let _ = std::fs::remove_file(&self.part);
+        }
+    }
+}
+
+impl ResultStorage for RemoteStub {
+    fn backend(&self) -> &'static str {
+        "remote-stub"
+    }
+
+    fn put_atomic(&self, key: &str) -> SResult<Box<dyn StorageWrite>> {
+        let dest = self.object_path(key)?;
+        self.round_trip();
+        let op = self.next_op();
+        let commit_fault = match self.faults.storage_fault(op) {
+            Some(FaultKind::StorageIoErr) => {
+                return Err(StorageError::Transient(format!(
+                    "injected StorageIoErr at storage op {op} (put '{key}')"
+                )))
+            }
+            other => other,
+        };
+        let uploads = self.root.join("uploads");
+        std::fs::create_dir_all(&uploads).map_err(|e| {
+            StorageError::Transient(format!("creating {}: {e}", uploads.display()))
+        })?;
+        let part = uploads.join(format!(
+            "upload-{}.part",
+            self.uploads.fetch_add(1, Ordering::Relaxed)
+        ));
+        let file = std::fs::File::create(&part)
+            .map_err(|e| StorageError::Transient(format!("creating {}: {e}", part.display())))?;
+        Ok(Box::new(RemoteWrite {
+            part,
+            dest,
+            out: Some(std::io::BufWriter::new(file)),
+            commit_fault,
+            latency_ms: self.latency_ms,
+        }))
+    }
+
+    fn get(&self, key: &str) -> SResult<Box<dyn Read + Send>> {
+        let path = self.object_path(key)?;
+        self.round_trip();
+        gate_op(&self.faults, self.next_op(), &format!("get '{key}'"))?;
+        match std::fs::File::open(&path) {
+            Ok(f) => Ok(Box::new(f)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                Err(StorageError::NotFound(key.to_string()))
+            }
+            Err(e) => Err(StorageError::Transient(format!(
+                "opening {}: {e}",
+                path.display()
+            ))),
+        }
+    }
+
+    fn list(&self, prefix: &str) -> SResult<Vec<ObjectMeta>> {
+        self.round_trip();
+        gate_op(&self.faults, self.next_op(), &format!("list '{prefix}'"))?;
+        let objects = self.objects();
+        let mut out = Vec::new();
+        let mut stack = vec![objects.clone()];
+        while let Some(dir) = stack.pop() {
+            let entries = match std::fs::read_dir(&dir) {
+                Ok(e) => e,
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound && dir == objects => {
+                    return Ok(out)
+                }
+                Err(e) => {
+                    return Err(StorageError::Transient(format!(
+                        "listing {}: {e}",
+                        dir.display()
+                    )))
+                }
+            };
+            for entry in entries {
+                let entry = entry
+                    .map_err(|e| StorageError::Transient(format!("listing {}: {e}", dir.display())))?;
+                let path = entry.path();
+                let meta = entry.metadata().map_err(|e| {
+                    StorageError::Transient(format!("stat {}: {e}", path.display()))
+                })?;
+                if meta.is_dir() {
+                    stack.push(path);
+                    continue;
+                }
+                let Ok(rel) = path.strip_prefix(&objects) else {
+                    continue;
+                };
+                let key: Vec<String> = rel
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                    .collect();
+                let key = key.join("/");
+                if key.starts_with(prefix) {
+                    out.push(ObjectMeta { key, len: meta.len() });
+                }
+            }
+        }
+        out.sort_by(|a, b| a.key.cmp(&b.key));
+        Ok(out)
+    }
+
+    fn delete(&self, key: &str) -> SResult<()> {
+        let path = self.object_path(key)?;
+        self.round_trip();
+        gate_op(&self.faults, self.next_op(), &format!("delete '{key}'"))?;
+        match std::fs::remove_file(&path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                Err(StorageError::NotFound(key.to_string()))
+            }
+            Err(e) => Err(StorageError::Transient(format!(
+                "removing {}: {e}",
+                path.display()
+            ))),
+        }
+    }
+
+    fn stat(&self, key: &str) -> SResult<Option<u64>> {
+        let path = self.object_path(key)?;
+        self.round_trip();
+        gate_op(&self.faults, self.next_op(), &format!("stat '{key}'"))?;
+        match std::fs::metadata(&path) {
+            Ok(m) if m.is_dir() => Err(StorageError::Permanent(format!(
+                "storage key '{key}' names a directory"
+            ))),
+            Ok(m) => Ok(Some(m.len())),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(StorageError::Transient(format!(
+                "stat {}: {e}",
+                path.display()
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Storage, StorageConfig};
+    use super::*;
+
+    fn tmp_root(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn open(root: &Path, faults: &FaultPlan, cfg: &StorageConfig) -> Storage {
+        Storage::open_uri(&format!("remote://{}", root.display()), cfg, faults).unwrap()
+    }
+
+    #[test]
+    fn remote_uri_opens_the_stub_and_roundtrips() {
+        let root = tmp_root("odl_har_remote_roundtrip");
+        let st = open(&root, &FaultPlan::default(), &StorageConfig::default());
+        assert_eq!(st.backend_name(), "remote-stub");
+        assert!(!st.is_local(), "remote objects must not claim local paths");
+        assert_eq!(st.local_object_path("a.jsonl"), None);
+        st.put_bytes("a.jsonl", b"hello\n").unwrap();
+        assert_eq!(st.get_bytes("a.jsonl").unwrap().unwrap(), b"hello\n");
+        assert_eq!(st.stat("a.jsonl").unwrap(), Some(6));
+        assert_eq!(st.list("").unwrap().len(), 1);
+        st.delete("a.jsonl").unwrap();
+        assert_eq!(st.get_bytes("a.jsonl").unwrap(), None);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn torn_and_abandoned_uploads_never_surface_as_objects() {
+        let root = tmp_root("odl_har_remote_torn");
+        // one-attempt budget: the torn upload is a hard error
+        let cfg = StorageConfig {
+            retry_limit: 1,
+            backoff_base_ms: 1,
+            backoff_cap_ms: 2,
+            ..StorageConfig::default()
+        };
+        let faults = FaultPlan::parse("5:stear@0").unwrap();
+        let st = open(&root, &faults, &cfg);
+        assert!(st.put_bytes("t.jsonl", b"0123456789").is_err());
+        // the torn part file exists under uploads/ but is not an object
+        assert_eq!(st.get_bytes("t.jsonl").unwrap(), None);
+        assert_eq!(st.stat("t.jsonl").unwrap(), None);
+        assert!(st.list("").unwrap().is_empty());
+        // an abandoned (dropped) streaming upload is equally invisible
+        let stub = RemoteStub::new(root.to_str().unwrap()).with_latency_ms(0);
+        let mut w = stub.put_atomic("t.jsonl").unwrap();
+        use std::io::Write as _;
+        w.write_all(b"half-").unwrap();
+        drop(w);
+        assert!(st.list("").unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn faulted_remote_publishes_converge_byte_identical_to_clean() {
+        let chaos_root = tmp_root("odl_har_remote_chaos");
+        let clean_root = tmp_root("odl_har_remote_clean");
+        let payload: Vec<u8> = (0..2048u32).flat_map(|i| i.to_be_bytes()).collect();
+        let cfg = StorageConfig {
+            backoff_base_ms: 1,
+            backoff_cap_ms: 4,
+            ..StorageConfig::default()
+        };
+        let faults = FaultPlan::parse("9:stear@0,sioerr@1,sdelay@2").unwrap();
+        let chaos = open(&chaos_root, &faults, &cfg);
+        chaos.put_bytes("sweep.jsonl", &payload).unwrap();
+        let clean = open(&clean_root, &FaultPlan::default(), &cfg);
+        clean.put_bytes("sweep.jsonl", &payload).unwrap();
+        assert_eq!(
+            chaos.get_bytes("sweep.jsonl").unwrap().unwrap(),
+            clean.get_bytes("sweep.jsonl").unwrap().unwrap(),
+            "retried remote publish must converge on the fault-free bytes"
+        );
+        let _ = std::fs::remove_dir_all(&chaos_root);
+        let _ = std::fs::remove_dir_all(&clean_root);
+    }
+}

@@ -36,10 +36,24 @@
 //!   socket *end*: the server consults its plan bound via
 //!   `for_shard(NET_SERVER)` (= `#1`), the client via
 //!   `for_shard(NET_CLIENT)` (= `#2`), so one spec can fault either end.
+//!
+//!   The storage layer (`storage::{LocalDir, RemoteStub}`) adds three
+//!   **storage** kinds consulted per backend *operation* (each backend
+//!   instance numbers its puts/gets/stats/lists/deletes from 0):
+//!   `sioerr` (the operation fails with a transient backend error),
+//!   `stear` (an upload tears mid-transfer — the staged bytes are
+//!   truncated and the commit fails, but the object namespace is
+//!   untouched), and `sdelay` (the operation stalls briefly, then
+//!   succeeds). All three are transient from the caller's side, so the
+//!   bounded-retry wrapper (`storage::Storage`) heals them; `#SHARD`
+//!   scopes them exactly like write faults.
 //! * **Seeded chaos** — a bare `SEED` derives a pseudo-random schedule
 //!   from [`stream_seed`]`(seed, FAULT_DOMAIN, site)`: roughly one row
-//!   write in eight draws a kill/tear/ioerr, and roughly one cell in
-//!   eight panics on its first attempt. The schedule is a pure function
+//!   write in eight draws a kill/tear/ioerr, roughly one cell in
+//!   eight panics on its first attempt, and roughly one storage
+//!   operation in eight is `sdelay`ed (latency only — seeded chaos
+//!   never draws a destructive storage fault, so convergence holds
+//!   under any retry budget). The schedule is a pure function
 //!   of `(seed, shard, site)` — replaying the same seed replays the same
 //!   chaos, which is what makes a chaos-suite failure debuggable.
 //!
@@ -87,6 +101,13 @@ pub enum FaultKind {
     Close,
     /// Network: corrupt the indexed message's bytes on the wire.
     Garble,
+    /// Storage: fail the indexed backend operation with a transient error.
+    StorageIoErr,
+    /// Storage: tear the indexed upload mid-transfer (staged bytes
+    /// truncated, commit fails, object namespace untouched).
+    StorageTear,
+    /// Storage: stall the indexed backend operation briefly, then succeed.
+    StorageDelay,
 }
 
 impl FaultKind {
@@ -102,9 +123,13 @@ impl FaultKind {
             "delay" => FaultKind::Delay,
             "close" => FaultKind::Close,
             "garble" => FaultKind::Garble,
+            "sioerr" => FaultKind::StorageIoErr,
+            "stear" => FaultKind::StorageTear,
+            "sdelay" => FaultKind::StorageDelay,
             _ => bail!(
                 "unknown fault kind '{s}' \
-                 (kill|tear|ioerr|hang|panic|panic2|drop|delay|close|garble)"
+                 (kill|tear|ioerr|hang|panic|panic2|drop|delay|close|garble|\
+                  sioerr|stear|sdelay)"
             ),
         })
     }
@@ -127,6 +152,13 @@ impl FaultKind {
                 // aborts at that message (serve ignores it — a server
                 // cannot meaningfully self-SIGKILL per message)
                 | FaultKind::Kill
+        )
+    }
+
+    fn is_storage_fault(self) -> bool {
+        matches!(
+            self,
+            FaultKind::StorageIoErr | FaultKind::StorageTear | FaultKind::StorageDelay
         )
     }
 }
@@ -286,6 +318,26 @@ impl FaultPlan {
         None
     }
 
+    /// The storage fault (if any) for backend operation `op` — consulted
+    /// by the storage backends as each put/get/stat/list/delete begins
+    /// (each backend instance numbers its operations from 0). Seeded mode
+    /// draws only `sdelay` (~1 op in 8): latency never breaks
+    /// convergence, whereas a seeded `sioerr`/`stear` could exhaust a
+    /// small retry budget and flip the outcome of the existing pinned
+    /// chaos seeds — destructive storage faults fire only as explicit
+    /// sites.
+    pub fn storage_fault(&self, op: usize) -> Option<FaultKind> {
+        for site in &self.sites {
+            if site.index == op && site.kind.is_storage_fault() && self.site_matches(site) {
+                return Some(site.kind);
+            }
+        }
+        if self.seeded && self.draw(3, op) % 8 == 0 {
+            return Some(FaultKind::StorageDelay);
+        }
+        None
+    }
+
     /// Whether global cell `cell` panics on `attempt` (0-based). Seeded
     /// mode panics ~1 cell in 8, first attempt only, so an unsupervised
     /// seeded run still self-heals through the in-pool retry.
@@ -413,6 +465,51 @@ mod tests {
                 "seeded net fault drew unrecoverable {f:?}"
             );
         }
+    }
+
+    #[test]
+    fn storage_sites_parse_fire_and_stay_in_their_lane() {
+        let plan = FaultPlan::parse("11:sioerr@0,stear@2#2,sdelay@3").unwrap();
+        assert_eq!(plan.storage_fault(0), Some(FaultKind::StorageIoErr));
+        assert_eq!(plan.storage_fault(1), None);
+        assert_eq!(plan.storage_fault(3), Some(FaultKind::StorageDelay));
+        // #2-scoped tear fires only when the plan is bound to shard 2
+        assert_eq!(plan.storage_fault(2), None);
+        assert_eq!(plan.for_shard(1).storage_fault(2), None);
+        assert_eq!(plan.for_shard(2).storage_fault(2), Some(FaultKind::StorageTear));
+        // storage kinds never leak into the write/net/panic paths...
+        for i in 0..4 {
+            assert_eq!(plan.write_fault(i), None);
+            assert_eq!(plan.net_fault(i), None);
+            assert!(!plan.cell_panics(i, 0));
+        }
+        // ...and write/net kinds never leak into the storage path
+        let wp = FaultPlan::parse("11:kill@0,tear@1,ioerr@2,drop@3,garble@4").unwrap();
+        for i in 0..5 {
+            assert_eq!(wp.storage_fault(i), None);
+        }
+    }
+
+    #[test]
+    fn seeded_storage_schedule_is_replayable_delay_only_and_shard_keyed() {
+        let plan = FaultPlan::parse("1701").unwrap();
+        let schedule: Vec<_> = (0..96).map(|op| plan.storage_fault(op)).collect();
+        // pure function of (seed, shard, op)
+        assert_eq!(
+            schedule,
+            (0..96)
+                .map(|op| FaultPlan::parse("1701").unwrap().storage_fault(op))
+                .collect::<Vec<_>>()
+        );
+        // chaos fires somewhere, but only as latency — a seeded schedule
+        // must never break storage convergence under any retry budget
+        assert!(schedule.iter().any(|f| f.is_some()));
+        for f in schedule.iter().flatten() {
+            assert_eq!(*f, FaultKind::StorageDelay, "seeded storage fault must be delay-only");
+        }
+        // different shards draw different storage chaos
+        let other: Vec<_> = (0..96).map(|op| plan.for_shard(2).storage_fault(op)).collect();
+        assert_ne!(schedule, other);
     }
 
     #[test]

@@ -97,8 +97,9 @@ fn chaos_schedules_recover_to_byte_identical_merge() {
             let launcher = ProcessLauncher {
                 exe: exe(),
                 config_path: s.cfg_path.clone(),
+                storage_uri: None,
             };
-            let out = supervise(&s.plan, &scfg, &launcher, &paths, Some(&merged)).unwrap();
+            let out = supervise(&s.plan, &scfg, &launcher, &paths, Some(&merged), None).unwrap();
             assert_eq!(
                 out.status,
                 SuperviseStatus::Complete,
@@ -134,8 +135,9 @@ fn seeded_chaos_is_replayable_and_recovers() {
         let launcher = ProcessLauncher {
             exe: exe(),
             config_path: s.cfg_path.clone(),
+            storage_uri: None,
         };
-        let out = supervise(&s.plan, &scfg, &launcher, &paths, Some(&merged)).unwrap();
+        let out = supervise(&s.plan, &scfg, &launcher, &paths, Some(&merged), None).unwrap();
         assert_eq!(out.status, SuperviseStatus::Complete);
         assert_eq!(std::fs::read(&merged).unwrap(), s.clean);
         attempts_seen.push(out.shards.iter().map(|r| r.attempts).collect::<Vec<_>>());
@@ -162,8 +164,9 @@ fn hung_child_process_is_sigkilled_and_recovered() {
     let launcher = ProcessLauncher {
         exe: exe(),
         config_path: s.cfg_path.clone(),
+        storage_uri: None,
     };
-    let out = supervise(&s.plan, &scfg, &launcher, &paths, Some(&merged)).unwrap();
+    let out = supervise(&s.plan, &scfg, &launcher, &paths, Some(&merged), None).unwrap();
     assert_eq!(out.status, SuperviseStatus::Complete, "{:?}", out.shards);
     assert!(out.shards[1].attempts >= 2, "the hung shard must relaunch");
     assert!(out.shards[1]
@@ -197,8 +200,9 @@ fn faults_after_a_complete_stream_are_success_not_failures() {
         let launcher = ProcessLauncher {
             exe: exe(),
             config_path: s.cfg_path.clone(),
+            storage_uri: None,
         };
-        let out = supervise(&s.plan, &scfg, &launcher, &paths, Some(&merged)).unwrap();
+        let out = supervise(&s.plan, &scfg, &launcher, &paths, Some(&merged), None).unwrap();
         assert_eq!(
             out.status,
             SuperviseStatus::Complete,
@@ -285,5 +289,79 @@ fn cli_exit_codes_distinguish_complete_degraded_failed() {
     assert_eq!(code, 0);
     assert_eq!(std::fs::read(&merged).unwrap(), s.clean);
 
+    let _ = std::fs::remove_dir_all(&s.dir);
+}
+
+/// The multi-host shape end to end through the CLI: a supervised sweep
+/// with `--storage` survives a mid-stream child kill (resume + relaunch),
+/// publishes every shard and the merge into the backend, and a separate
+/// `merge --storage` run on a host with *no local shard files* hydrates
+/// them from the backend into the byte-identical results stream.
+#[test]
+fn storage_backed_sweep_survives_kills_and_remerges_from_the_backend() {
+    let s = setup("odl_har_chaos_storage_test");
+    let store = s.dir.join("store");
+    let merged = s.dir.join("merged.jsonl");
+    let status = std::process::Command::new(exe())
+        .arg("sweep")
+        .arg("--config")
+        .arg(&s.cfg_path)
+        .arg("--shard")
+        .arg("auto:2")
+        .arg("--retry-budget")
+        .arg("3")
+        .arg("--inject-faults")
+        .arg("18:kill@2#1")
+        .arg("--storage")
+        .arg(&store)
+        .arg("--out")
+        .arg(&merged)
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .status()
+        .expect("spawning the supervisor CLI");
+    assert_eq!(status.code(), Some(0), "storage-backed supervised sweep must self-heal");
+    assert_eq!(std::fs::read(&merged).unwrap(), s.clean);
+    // the backend holds the shard objects (spool == object for the
+    // local-dir backend) and the published merge
+    for name in [
+        "merged.shard1of2.jsonl",
+        "merged.shard2of2.jsonl",
+        "merged.jsonl",
+    ] {
+        assert_eq!(
+            std::fs::read(store.join(name)).unwrap_or_default().is_empty(),
+            false,
+            "backend is missing object '{name}'"
+        );
+    }
+    assert_eq!(std::fs::read(store.join("merged.jsonl")).unwrap(), s.clean);
+
+    // "another host": no local shard files — merge hydrates them from
+    // the backend by key and republishes the merged stream
+    let pull = s.dir.join("pull");
+    std::fs::create_dir_all(&pull).unwrap();
+    let remerged = pull.join("remerged.jsonl");
+    let status = std::process::Command::new(exe())
+        .arg("merge")
+        .arg("--config")
+        .arg(&s.cfg_path)
+        .arg("--storage")
+        .arg(&store)
+        .arg("--out")
+        .arg(&remerged)
+        .arg(pull.join("merged.shard1of2.jsonl"))
+        .arg(pull.join("merged.shard2of2.jsonl"))
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .status()
+        .expect("spawning the merge CLI");
+    assert_eq!(status.code(), Some(0), "merge-from-storage must succeed");
+    assert_eq!(
+        std::fs::read(&remerged).unwrap(),
+        s.clean,
+        "merge pulled from storage diverged from the single-process bytes"
+    );
+    assert_eq!(std::fs::read(store.join("remerged.jsonl")).unwrap(), s.clean);
     let _ = std::fs::remove_dir_all(&s.dir);
 }

@@ -98,6 +98,24 @@ if [[ -f /tmp/odl_sweep_chaos_deg.jsonl ]]; then
   echo "chaos smoke: a degraded run must not publish a merged file" >&2
   exit 1
 fi
+# storage smoke: a supervised sweep publishing through --storage (the
+# local-dir backend: spool == object, heartbeat probes routed through
+# the trait) with an injected child kill, then a merge on a "host" with
+# no local shard files that hydrates them from the backend — merged
+# bytes, backend object, and remerge all identical to the clean run
+rm -rf /tmp/odl_sweep_store /tmp/odl_sweep_store_pull
+rm -f /tmp/odl_sweep_storage.jsonl
+./target/release/odl-har sweep --config configs/sweep_smoke.toml --shard auto:2 \
+  --retry-budget 3 --inject-faults 7:kill@3 --storage /tmp/odl_sweep_store \
+  --out /tmp/odl_sweep_storage.jsonl
+cmp /tmp/odl_sweep_smoke.jsonl /tmp/odl_sweep_storage.jsonl
+cmp /tmp/odl_sweep_smoke.jsonl /tmp/odl_sweep_store/odl_sweep_storage.jsonl
+mkdir -p /tmp/odl_sweep_store_pull
+./target/release/odl-har merge --config configs/sweep_smoke.toml \
+  --storage /tmp/odl_sweep_store --out /tmp/odl_sweep_store_pull/remerged.jsonl \
+  /tmp/odl_sweep_store_pull/odl_sweep_storage.shard1of2.jsonl \
+  /tmp/odl_sweep_store_pull/odl_sweep_storage.shard2of2.jsonl
+cmp /tmp/odl_sweep_smoke.jsonl /tmp/odl_sweep_store_pull/remerged.jsonl
 # serve smoke: the fault-tolerant teacher service end to end through the
 # CLI — ephemeral port, a client killed mid-stream by an injected abort,
 # a chaos-schedule rerun that must still deliver everything (the server
